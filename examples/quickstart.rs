@@ -1,0 +1,60 @@
+//! Quickstart: train an OCSSVM with SMO, inspect it, classify points.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use slabsvm::data::synthetic::SlabConfig;
+use slabsvm::kernel::Kernel;
+use slabsvm::solver::smo::{train_full, SmoParams};
+
+fn main() -> slabsvm::Result<()> {
+    // 1. A one-class training set: 1000 points along a noisy 2-D band
+    //    (the documented stand-in for the paper's toy dataset).
+    let config = SlabConfig::default();
+    let train = config.generate(1000, 42);
+    println!("training points: {} (d = {})", train.len(), train.dim());
+
+    // 2. Train with the paper's constants: nu1 = 0.5, nu2 = 0.01, eps = 2/3.
+    let params = SmoParams { nu1: 0.5, nu2: 0.01, eps: 2.0 / 3.0, ..Default::default() };
+    let (model, outcome) = train_full(&train.x, Kernel::Linear, &params)?;
+    println!(
+        "trained in {} SMO iterations ({:.3}s): {} support vectors",
+        outcome.stats.iterations, outcome.stats.seconds, model.n_sv()
+    );
+    println!(
+        "slab: rho1 = {:.4}, rho2 = {:.4} (width {:.4})",
+        model.rho1,
+        model.rho2,
+        model.width()
+    );
+
+    // 3. Classify: +1 inside the slab (target class), -1 outside.
+    let eval = config.generate_eval(500, 500, 7);
+    let confusion = model.evaluate(&eval);
+    println!(
+        "eval on 500 positives + 500 anomalies: MCC = {:.3}, F1 = {:.3}, \
+         accuracy = {:.3}",
+        confusion.mcc(),
+        confusion.f1(),
+        confusion.accuracy()
+    );
+
+    // 4. Single-point queries.
+    let inside = eval.x.row(0); // a positive sample
+    println!(
+        "point ({:.2}, {:.2}): label {:+}, margin {:.4}",
+        inside[0],
+        inside[1],
+        model.classify(inside),
+        model.margin(inside)
+    );
+
+    // 5. Persist + reload.
+    model.save("/tmp/slabsvm_quickstart.json")?;
+    let reloaded =
+        slabsvm::solver::ocssvm::SlabModel::load("/tmp/slabsvm_quickstart.json")?;
+    assert_eq!(reloaded.classify(inside), model.classify(inside));
+    println!("model round-tripped through /tmp/slabsvm_quickstart.json");
+    Ok(())
+}

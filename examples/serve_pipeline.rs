@@ -1,0 +1,94 @@
+//! Serving pipeline: train via the job queue, score through the batcher.
+//!
+//! Demonstrates the full L3 coordinator with the PJRT engine when
+//! artifacts are present (falls back to native otherwise): async train
+//! job → model registry → dynamically batched scoring under a bursty
+//! synthetic workload → service stats.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_pipeline
+//! ```
+
+use std::time::Instant;
+
+use slabsvm::coordinator::{BatcherConfig, Coordinator, JobStatus, TrainRequest};
+use slabsvm::data::synthetic::SlabConfig;
+use slabsvm::kernel::Kernel;
+use slabsvm::runtime::Engine;
+use slabsvm::solver::smo::SmoParams;
+
+fn main() -> slabsvm::Result<()> {
+    // PJRT engine if artifacts exist, else native.
+    let engine = match Engine::pjrt("artifacts") {
+        Ok(e) => {
+            println!("engine: pjrt (AOT artifacts loaded)");
+            e
+        }
+        Err(e) => {
+            println!("engine: native (pjrt unavailable: {e})");
+            Engine::Native
+        }
+    };
+
+    let coordinator = Coordinator::start(
+        engine,
+        BatcherConfig { max_batch: 256, max_wait_us: 800, queue_cap: 16384 },
+        2,
+    );
+
+    // Train two model variants asynchronously (two tenants).
+    let mut jobs = Vec::new();
+    for (name, nu1) in [("tenant-a", 0.5), ("tenant-b", 0.2)] {
+        let ds = SlabConfig::default().generate(1000, 42);
+        jobs.push((
+            name,
+            coordinator.submit_train(TrainRequest {
+                name: name.into(),
+                dataset: ds,
+                kernel: Kernel::Linear,
+                params: SmoParams { nu1, ..Default::default() },
+            }),
+        ));
+    }
+    for (name, id) in jobs {
+        match coordinator.wait_job(id) {
+            Some(JobStatus::Done { iterations, seconds, n_sv, version }) => {
+                println!(
+                    "{name}: trained v{version} in {iterations} iters \
+                     ({seconds:.3}s), {n_sv} SVs"
+                );
+            }
+            other => panic!("{name} failed: {other:?}"),
+        }
+    }
+
+    // Bursty workload: rounds of concurrent requests against both models.
+    let eval = SlabConfig::default().generate_eval(2000, 2000, 99);
+    let t0 = Instant::now();
+    let mut total = 0usize;
+    for round in 0..8 {
+        let mut rxs = Vec::new();
+        for i in 0..500 {
+            let idx = (round * 500 + i) % eval.len();
+            let model = if i % 2 == 0 { "tenant-a" } else { "tenant-b" };
+            rxs.push(coordinator.score_async(model, vec![eval.x.row(idx).to_vec()]));
+        }
+        for rx in rxs {
+            rx.recv().expect("batcher alive")?;
+            total += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "\nserved {total} requests in {dt:.3}s ({:.0} req/s)",
+        total as f64 / dt
+    );
+    println!("service stats: {}", coordinator.stats().summary());
+    println!(
+        "batching efficiency: {:.1} queries per engine dispatch",
+        coordinator.stats().mean_batch_size()
+    );
+
+    coordinator.shutdown();
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E).
+//!
+//! Exercises every layer of the system on the paper's workload at every
+//! Table-1 size: synthetic data → SMO training → independent KKT
+//! certification → MCC evaluation → model persistence → serving through
+//! the coordinator (PJRT engine when artifacts are present) → engine
+//! equivalence check (native vs PJRT scores). Prints the Table-1 rows
+//! with the paper's reported values alongside.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_e2e
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use slabsvm::coordinator::{BatcherConfig, Coordinator};
+use slabsvm::data::synthetic::SlabConfig;
+use slabsvm::kernel::Kernel;
+use slabsvm::runtime::Engine;
+use slabsvm::solver::smo::{train_full, SmoParams};
+use slabsvm::solver::validate::certify;
+
+const PAPER: &[(usize, f64, f64)] = &[
+    (500, 0.35, 0.07),
+    (1000, 0.67, 0.13),
+    (2000, 2.1, 0.26),
+    (5000, 5.91, 0.33),
+];
+
+fn main() -> slabsvm::Result<()> {
+    let pjrt = Engine::pjrt("artifacts").ok();
+    println!(
+        "end-to-end driver | engines: native{}",
+        if pjrt.is_some() { " + pjrt" } else { " (pjrt unavailable)" }
+    );
+    let params = SmoParams::default(); // the paper's constants
+
+    println!(
+        "\n{:>6} {:>10} {:>8} {:>8} {:>10} {:>12} {:>12}",
+        "m", "time(s)", "MCC", "SVs", "iters", "paper t(s)", "paper MCC"
+    );
+
+    let coordinator =
+        Coordinator::start(Engine::Native, BatcherConfig::default(), 2);
+
+    for &(m, paper_t, paper_mcc) in PAPER {
+        let ds = SlabConfig::default().generate(m, 1000 + m as u64);
+
+        // train (L3 solver over the native Gram)
+        let (model, out) = train_full(&ds.x, Kernel::Linear, &params)?;
+
+        // certify against an independently computed Gram matrix
+        let k = Kernel::Linear.gram(&ds.x, 4);
+        certify(
+            &k,
+            &out.alpha,
+            &out.alpha_bar,
+            out.rho1,
+            out.rho2,
+            params.nu1,
+            params.nu2,
+            params.eps,
+            1e-2 * (1.0 + out.rho2.abs()),
+        )
+        .expect("solution must certify");
+
+        // evaluate
+        let eval = SlabConfig::default().generate_eval(m / 2, m / 2, 7 + m as u64);
+        let cm = model.evaluate(&eval);
+
+        // persist + reload
+        let path = format!("/tmp/slabsvm_e2e_{m}.json");
+        model.save(&path)?;
+        let reloaded = slabsvm::solver::ocssvm::SlabModel::load(&path)?;
+
+        // serve through the coordinator
+        let name = format!("e2e-{m}");
+        coordinator.register(&name, reloaded);
+        let queries: Vec<Vec<f64>> =
+            (0..eval.len().min(256)).map(|i| eval.x.row(i).to_vec()).collect();
+        let resp = coordinator.score(&name, queries.clone())?;
+        for (i, &label) in resp.labels.iter().enumerate() {
+            assert_eq!(label, model.classify(eval.x.row(i)), "serving mismatch");
+        }
+
+        // engine equivalence: PJRT scores must match native (f32 tol)
+        if let Some(pjrt) = &pjrt {
+            let arc = Arc::new(model.clone());
+            let sub = eval.select(&(0..128).collect::<Vec<_>>());
+            let t_pjrt = Instant::now();
+            let (ps, pl) = pjrt.predict(&arc, &sub.x)?;
+            let pjrt_dt = t_pjrt.elapsed().as_secs_f64();
+            let (ns, nl) = Engine::Native.predict(&arc, &sub.x)?;
+            let mut disagreements = 0;
+            for i in 0..ps.len() {
+                let scale = ns[i].abs().max(1.0);
+                assert!(
+                    (ps[i] - ns[i]).abs() < 1e-3 * scale,
+                    "score drift at {i}: pjrt {} vs native {}",
+                    ps[i],
+                    ns[i]
+                );
+                if pl[i] != nl[i] {
+                    disagreements += 1; // only possible within f32 tol of a plane
+                }
+            }
+            assert!(disagreements <= 2, "{disagreements} label disagreements");
+            println!(
+                "       [pjrt] scored 128 queries in {pjrt_dt:.4}s, \
+                 max |Δscore| within f32 tolerance, {disagreements} boundary flips"
+            );
+        }
+
+        println!(
+            "{m:>6} {:>10.3} {:>8.3} {:>8} {:>10} {paper_t:>12.2} {paper_mcc:>12.2}",
+            out.stats.seconds,
+            cm.mcc(),
+            model.n_sv(),
+            out.stats.iterations,
+        );
+    }
+
+    println!("\nall layers composed: train → certify → eval → persist → serve ✓");
+    coordinator.shutdown();
+    Ok(())
+}

@@ -1,0 +1,129 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO text artifacts for the rust runtime.
+
+Emits HLO *text*, not serialized HloModuleProto: jax >= 0.5 writes protos
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` 0.1.6 crate links) rejects (`proto.id() <= INT_MAX`). The
+text parser reassigns ids, so text round-trips cleanly — see
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Artifact set (DESIGN.md §2, Layer 2):
+
+  kmatrix_<fam>_m<M>_d<D>.hlo.txt       (x[M,D], p3)            -> (K,)
+  decision_<fam>_m<M>_d<D>_q<Q>.hlo.txt (x, gamma, p5, xq[Q,D]) -> (s, f)
+  kkt_m<M>.hlo.txt                      (K[M,M], gamma, p5)     -> (v, fbar)
+
+plus artifacts/manifest.json describing every artifact's entry shapes so
+the rust runtime can do shape-bucket selection without parsing HLO.
+
+Run via `make artifacts` (no-op when inputs are unchanged, courtesy of
+make's dependency tracking). Python never runs after this point.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+FAMILY_NAMES = {0: "linear", 1: "rbf", 2: "poly", 3: "sigmoid"}
+
+# Default shape buckets (padding handled by the rust runtime).
+M_BUCKETS = [256, 512, 1024, 2048]
+D_BUCKETS = [2, 8]
+Q_BUCKETS = [64, 256]
+DEFAULT_FAMILIES = [0, 1]  # linear (the paper's kernel) + rbf (examples)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_all(out_dir: pathlib.Path, families, m_buckets, d_buckets,
+              q_buckets, verbose=True):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": []}
+
+    def emit(name, lowered, entry):
+        t0 = time.time()
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        entry["file"] = path.name
+        entry["bytes"] = len(text)
+        manifest["artifacts"].append(entry)
+        if verbose:
+            print(f"  {path.name:44s} {len(text)/1024:8.1f} KiB "
+                  f"({time.time()-t0:.2f}s)")
+
+    for fam in families:
+        fname = FAMILY_NAMES[fam]
+        for m in m_buckets:
+            for d in d_buckets:
+                lowered = jax.jit(model.kmatrix_fn(fam)).lower(
+                    _spec(m, d), _spec(3))
+                emit(f"kmatrix_{fname}_m{m}_d{d}", lowered, {
+                    "kind": "kmatrix", "family": fname, "m": m, "d": d,
+                    "inputs": [[m, d], [3]], "outputs": [[m, m]],
+                })
+                for q in q_buckets:
+                    lowered = jax.jit(model.decision_fn(fam)).lower(
+                        _spec(m, d), _spec(m), _spec(5), _spec(q, d))
+                    emit(f"decision_{fname}_m{m}_d{d}_q{q}", lowered, {
+                        "kind": "decision", "family": fname,
+                        "m": m, "d": d, "q": q,
+                        "inputs": [[m, d], [m], [5], [q, d]],
+                        "outputs": [[q], [q]],
+                    })
+
+    for m in m_buckets:
+        lowered = jax.jit(model.kkt_fn()).lower(
+            _spec(m, m), _spec(m), _spec(5))
+        emit(f"kkt_m{m}", lowered, {
+            "kind": "kkt", "family": "any", "m": m,
+            "inputs": [[m, m], [m], [5]], "outputs": [[m], [m]],
+        })
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    if verbose:
+        print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory (default: ../artifacts)")
+    ap.add_argument("--full", action="store_true",
+                    help="emit all four kernel families (default: linear+rbf)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small bucket set for CI smoke runs")
+    args = ap.parse_args()
+
+    families = list(FAMILY_NAMES) if args.full else DEFAULT_FAMILIES
+    m_buckets = [256, 512] if args.quick else M_BUCKETS
+    q_buckets = [64] if args.quick else Q_BUCKETS
+    d_buckets = [2] if args.quick else D_BUCKETS
+
+    out = pathlib.Path(args.out)
+    t0 = time.time()
+    lower_all(out, families, m_buckets, d_buckets, q_buckets)
+    print(f"total {time.time()-t0:.1f}s -> {out.resolve()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""L1: Pallas kernels for the OCSSVM hot-spots + their pure-jnp oracle.
+
+Modules
+-------
+ref       pure-jnp reference implementations (the correctness oracle)
+kmatrix   tiled Gram / cross-kernel matrix kernels
+decision  batched slab decision function (serving hot path)
+kktsweep  vectorized KKT-violation + f_bar sweep (working-set scan)
+"""
+
+from . import decision, kktsweep, kmatrix, ref  # noqa: F401
+
+__all__ = ["ref", "kmatrix", "decision", "kktsweep"]

@@ -1,0 +1,102 @@
+"""Pallas kernel: batched OCSSVM decision function (paper eq. (19)).
+
+Serving hot path. For a query batch Xq[q, d] against a trained model
+(support matrix X[m, d], dual vector gamma[m], offsets rho1/rho2):
+
+    s_j   = sum_i gamma_i k(x_i, xq_j)
+    f_j   = sign((s_j - rho1) * (rho2 - s_j))     # +1 inside the slab
+
+The grid is 1-D over query tiles; each program contracts the FULL support
+set against its (BQ, d) query tile:
+
+    dots  = X @ xq_tile^T          # [m, BQ]  MXU contraction
+    kc    = transform(dots, ...)   # fused VPU epilogue
+    s     = gamma @ kc             # [BQ]     second MXU contraction
+    f     = slab sign test         # fused
+
+Keeping the reduction over m inside one program avoids a cross-program
+accumulation (Pallas interpret mode has no atomic revisiting here and the
+support set at paper scale — m <= 2048, d <= 32 — is ~256 KiB of VMEM, so
+the whole X tile fits comfortably; for larger m the AOT path shards over
+support-set buckets instead).
+
+rho1/rho2 ride in the same length-5 scalar vector as the kernel
+hyper-parameters: (g, c, degree, rho1, rho2). All stay runtime inputs so
+one artifact serves every trained model of a given shape bucket.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .kmatrix import _transform_block
+
+DEFAULT_QBLOCK = 64
+
+
+def _decision_kernel(x_ref, g_ref, sq_ref, xq_ref, sqq_ref, p_ref,
+                     s_ref, f_ref, *, kind):
+    """Score one (BQ,) tile of queries against the full support set."""
+    x = x_ref[...]        # [m, d]
+    gamma = g_ref[...]    # [m]
+    xq = xq_ref[...]      # [BQ, d]
+    p = p_ref[...]        # [5] = (g, c, degree, rho1, rho2)
+    rho1 = p[3]
+    rho2 = p[4]
+
+    dots = jnp.dot(x, xq.T, preferred_element_type=jnp.float32)  # [m, BQ]
+    kc = _transform_block(dots, sq_ref[...], sqq_ref[...], p[:3], kind)
+    s = jnp.dot(gamma, kc, preferred_element_type=jnp.float32)   # [BQ]
+    inside = (s - rho1) * (rho2 - s)
+    s_ref[...] = s
+    f_ref[...] = jnp.where(inside >= 0.0, 1.0, -1.0)
+
+
+def decision_scores(x, gamma, params5, xq, kind, qblock=DEFAULT_QBLOCK):
+    """Batched decision function via pallas_call.
+
+    Parameters
+    ----------
+    x      : [m, d] support matrix (zero rows for bucket padding).
+    gamma  : [m] dual vector (0 on padded rows -> padding is inert).
+    params5: [5] f32 — (g, c, degree, rho1, rho2).
+    xq     : [q, d] query batch; q must be a multiple of ``qblock``.
+    kind   : static int kernel family.
+
+    Returns (scores[q], labels[q]).
+    """
+    m, d = x.shape
+    q, dq = xq.shape
+    assert d == dq
+    bq = min(qblock, q)
+    assert q % bq == 0
+    sq = jnp.sum(x * x, axis=1)[:, None]       # [m, 1]
+    sqq = jnp.sum(xq * xq, axis=1)[None, :]    # [1, q]
+
+    grid = (q // bq,)
+    return pl.pallas_call(
+        functools.partial(_decision_kernel, kind=kind),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, d), lambda j: (0, 0)),   # full support set
+            pl.BlockSpec((m,), lambda j: (0,)),       # full gamma
+            pl.BlockSpec((m, 1), lambda j: (0, 0)),   # support sq-norms
+            pl.BlockSpec((bq, d), lambda j: (j, 0)),  # query tile
+            pl.BlockSpec((1, bq), lambda j: (0, j)),  # query sq-norms
+            pl.BlockSpec((5,), lambda j: (0,)),       # scalars
+        ],
+        out_specs=[
+            pl.BlockSpec((bq,), lambda j: (j,)),
+            pl.BlockSpec((bq,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q,), jnp.float32),
+            jax.ShapeDtypeStruct((q,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, gamma, sq, xq, sqq, params5)

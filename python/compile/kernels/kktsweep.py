@@ -1,0 +1,101 @@
+"""Pallas kernel: vectorized KKT sweep (paper eqs. (49)-(53) + (56)).
+
+The paper's working-set heuristic needs, every outer iteration, the KKT
+violation magnitude of every training point plus the selection score
+f_bar(x) = min(s - rho1, rho2 - s) (eq. 56). Done naively this is an
+O(m^2) scan per iteration; the rust solver keeps s = K gamma incrementally
+updated, but the *initial* sweep and periodic full re-validations are
+batch jobs — this kernel is that batch job, shipped to PJRT.
+
+Grid is 1-D over row tiles of the Gram matrix:
+
+    program i:
+        s_tile    = K[i*B:(i+1)*B, :] @ gamma          # MXU contraction
+        viol_tile = per-case KKT violation (fused select tree)
+        fbar_tile = min(s - rho1, rho2 - s)
+
+Scalars ride in a length-5 vector (rho1, rho2, lo, hi, tol) where
+lo = -eps/(nu2 m) and hi = 1/(nu1 m) are the gamma box bounds (31).
+
+The case analysis mirrors ref.kkt_sweep exactly; see that docstring for
+the margin-unit semantics of each branch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _kkt_kernel(k_ref, g_ref, gi_ref, p_ref, v_ref, f_ref):
+    """KKT violation + f_bar for one row tile."""
+    krows = k_ref[...]     # [B, m]
+    gamma = g_ref[...]     # [m]
+    gi = gi_ref[...]       # [B]   gamma restricted to this tile
+    p = p_ref[...]         # [5] = (rho1, rho2, lo, hi, tol)
+    rho1, rho2, lo, hi, tol = p[0], p[1], p[2], p[3], p[4]
+
+    s = jnp.dot(krows, gamma, preferred_element_type=jnp.float32)  # [B]
+
+    at_zero = jnp.abs(gi) <= tol
+    at_lo = (~at_zero) & (gi <= lo + tol)
+    at_hi = (~at_zero) & (gi >= hi - tol)
+    on_upper = (~at_zero) & (~at_lo) & (gi < 0.0)
+
+    v_lo = jnp.maximum(rho2 - s, 0.0)  # gamma at lo: need s >= rho2
+    v_hi = jnp.maximum(s - rho1, 0.0)  # gamma at hi: need s <= rho1
+    v_up = jnp.abs(s - rho2)
+    v_dn = jnp.abs(s - rho1)
+    v_in = jnp.maximum(rho1 - s, 0.0) + jnp.maximum(s - rho2, 0.0)
+
+    viol = jnp.where(
+        at_zero,
+        v_in,
+        jnp.where(
+            at_lo,
+            v_lo,
+            jnp.where(at_hi, v_hi, jnp.where(on_upper, v_up, v_dn)),
+        ),
+    )
+    v_ref[...] = viol
+    f_ref[...] = jnp.minimum(s - rho1, rho2 - s)
+
+
+def kkt_sweep(kmat, gamma, params5, block=DEFAULT_BLOCK):
+    """Full-dataset KKT sweep via pallas_call.
+
+    Parameters
+    ----------
+    kmat   : [m, m] Gram matrix (padded rows/cols carry gamma=0).
+    gamma  : [m] dual vector.
+    params5: [5] f32 — (rho1, rho2, lo, hi, tol).
+
+    Returns (viol[m], fbar[m]).
+    """
+    m = gamma.shape[0]
+    b = min(block, m)
+    assert m % b == 0
+
+    grid = (m // b,)
+    return pl.pallas_call(
+        _kkt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, m), lambda i: (i, 0)),  # row tile of K
+            pl.BlockSpec((m,), lambda i: (0,)),      # full gamma
+            pl.BlockSpec((b,), lambda i: (i,)),      # tile's own gamma
+            pl.BlockSpec((5,), lambda i: (0,)),      # scalars
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=True,
+    )(kmat, gamma, gamma, params5)

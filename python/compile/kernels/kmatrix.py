@@ -1,0 +1,144 @@
+"""Pallas kernel: tiled Gram-matrix computation.
+
+Computes K[i,j] = k(x_i, x_j) for the four kernel families used by the
+OCSSVM (linear / rbf / polynomial / sigmoid) as a 2-D grid of block
+programs. Each program owns one (BI, BJ) output tile:
+
+    grid = (m/BI, m/BJ)
+    program (i, j):
+        dots  = X[i*BI:(i+1)*BI, :] @ X[j*BJ:(j+1)*BJ, :]^T   # MXU matmul
+        K_ij  = transform(dots, ||x_i||^2, ||x_j||^2)          # fused VPU
+
+This is the TPU shape of the paper's compute hot-spot (kernel evaluation
+dominates SMO + serving): the (BI,d)x(d,BJ) contraction is MXU-shaped,
+and the elementwise kernel transform (exp/tanh/pow) is fused into the
+same program while the tile is VMEM-resident — the TPU analogue of the
+fused-epilogue GEMM that GPU SVM implementations use (DESIGN.md
+§Hardware-Adaptation).
+
+VMEM per program (f32): BI*d + BJ*d + BI*BJ + BI + BJ words. At the
+default BI=BJ=128 and d<=512 this is under 1 MiB, far inside the ~16 MiB
+VMEM budget, leaving room for double-buffering the X tiles.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact
+executes on the rust CPU client (see /opt/xla-example/README.md).
+
+Hyper-parameters (g, c, degree) arrive as a length-3 f32 vector so they
+stay runtime inputs of the lowered HLO — one artifact serves an entire
+hyper-parameter sweep. The kernel *family* is a static python int and
+selects the fused transform at trace time (one artifact per family).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile edge: MXU-native 128.
+DEFAULT_BLOCK = 128
+
+
+def _transform_block(dots, sq_i, sq_j, params, kind):
+    """Fused elementwise kernel transform on one VMEM-resident tile."""
+    g = params[0]
+    c = params[1]
+    degree = params[2]
+    if kind == ref.LINEAR:
+        return dots
+    if kind == ref.RBF:
+        d2 = jnp.maximum(sq_i + sq_j - 2.0 * dots, 0.0)
+        return jnp.exp(-g * d2)
+    if kind == ref.POLY:
+        return jnp.power(g * dots + c, degree)
+    if kind == ref.SIGMOID:
+        return jnp.tanh(g * dots + c)
+    raise ValueError(f"unknown kernel id {kind}")
+
+
+def _kmatrix_kernel(xi_ref, xj_ref, sqi_ref, sqj_ref, p_ref, o_ref, *, kind):
+    """One (BI, BJ) Gram tile: MXU contraction + fused transform."""
+    xi = xi_ref[...]  # [BI, d]
+    xj = xj_ref[...]  # [BJ, d]
+    dots = jnp.dot(xi, xj.T, preferred_element_type=jnp.float32)
+    o_ref[...] = _transform_block(
+        dots, sqi_ref[...], sqj_ref[...], p_ref[...], kind
+    )
+
+
+def kernel_matrix(x, params, kind, block=DEFAULT_BLOCK):
+    """Tiled Gram matrix via pallas_call.
+
+    Parameters
+    ----------
+    x : [m, d] f32. m must be a multiple of ``block`` (the AOT path pads
+        to a shape bucket; padded rows are zero and produce K entries that
+        downstream contractions ignore because their gamma is 0).
+    params : [3] f32 — (g, c, degree).
+    kind : static int kernel family.
+    """
+    m, d = x.shape
+    bi = bj = min(block, m)
+    assert m % bi == 0, f"m={m} not a multiple of block={bi}"
+    sq = jnp.sum(x * x, axis=1)
+    sq_col = sq[:, None]  # [m, 1]
+    sq_row = sq[None, :]  # [1, m]
+
+    grid = (m // bi, m // bj)
+    return pl.pallas_call(
+        functools.partial(_kmatrix_kernel, kind=kind),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, d), lambda i, j: (i, 0)),  # row tile of X
+            pl.BlockSpec((bj, d), lambda i, j: (j, 0)),  # col tile of X
+            pl.BlockSpec((bi, 1), lambda i, j: (i, 0)),  # row sq-norms
+            pl.BlockSpec((1, bj), lambda i, j: (0, j)),  # col sq-norms
+            pl.BlockSpec((3,), lambda i, j: (0,)),  # hyper-params
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=True,
+    )(x, x, sq_col, sq_row, params)
+
+
+def _kcross_kernel(xi_ref, xq_ref, sqi_ref, sqq_ref, p_ref, o_ref, *, kind):
+    """One (BI, BQ) cross-kernel tile K[i, q] = k(x_i, xq_q)."""
+    xi = xi_ref[...]
+    xq = xq_ref[...]
+    dots = jnp.dot(xi, xq.T, preferred_element_type=jnp.float32)
+    o_ref[...] = _transform_block(
+        dots, sqi_ref[...], sqq_ref[...], p_ref[...], kind
+    )
+
+
+def kernel_cross(x, xq, params, kind, block=DEFAULT_BLOCK):
+    """Tiled cross-kernel matrix K[m, q] via pallas_call."""
+    m, d = x.shape
+    q, dq = xq.shape
+    assert d == dq
+    bi = min(block, m)
+    bq = min(block, q)
+    assert m % bi == 0 and q % bq == 0
+    sq = jnp.sum(x * x, axis=1)[:, None]  # [m, 1]
+    sqq = jnp.sum(xq * xq, axis=1)[None, :]  # [1, q]
+
+    grid = (m // bi, q // bq)
+    return pl.pallas_call(
+        functools.partial(_kcross_kernel, kind=kind),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bi, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bq), lambda i, j: (0, j)),
+            pl.BlockSpec((3,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bi, bq), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, q), jnp.float32),
+        interpret=True,
+    )(x, xq, sq, sqq, params)

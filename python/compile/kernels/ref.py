@@ -1,0 +1,131 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with nothing but jax.numpy so it is trivially auditable. The
+pytest suite (python/tests/) asserts allclose(pallas, ref) across a
+hypothesis sweep of shapes, dtypes and kernel hyper-parameters — this is
+the core L1 correctness signal.
+
+Conventions
+-----------
+* ``x``:  [m, d] training/support matrix (rows are samples).
+* ``xq``: [q, d] query matrix.
+* ``gamma``: [m] dual coefficient vector (gamma_i = alpha_i - alpha_bar_i
+  in the paper's eq. (30) re-parameterization).
+* kernel hyper-parameters are passed as scalars so the lowered artifact
+  serves a whole hyper-parameter sweep (nothing is baked into the HLO).
+
+Kernel ids (must match kernels/kmatrix.py and rust/src/kernel/):
+    0 = linear      k(x,y) = <x,y>
+    1 = rbf         k(x,y) = exp(-g * ||x-y||^2)
+    2 = polynomial  k(x,y) = (g * <x,y> + c)^degree
+    3 = sigmoid     k(x,y) = tanh(g * <x,y> + c)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Kernel-id constants, shared with the Pallas implementations.
+LINEAR, RBF, POLY, SIGMOID = 0, 1, 2, 3
+
+
+def kernel_transform(dots, sq_i, sq_j, kind, g, c, degree):
+    """Apply the kernel function to a block of raw inner products.
+
+    Parameters
+    ----------
+    dots : [bi, bj] raw inner products <x_i, x_j>.
+    sq_i : [bi, 1] squared norms ||x_i||^2 (only used by RBF).
+    sq_j : [1, bj] squared norms ||x_j||^2 (only used by RBF).
+    kind : python int kernel id (static — selects the branch at trace time).
+    g, c, degree : scalar hyper-parameters (traced).
+    """
+    if kind == LINEAR:
+        return dots
+    if kind == RBF:
+        d2 = jnp.maximum(sq_i + sq_j - 2.0 * dots, 0.0)
+        return jnp.exp(-g * d2)
+    if kind == POLY:
+        return jnp.power(g * dots + c, degree)
+    if kind == SIGMOID:
+        return jnp.tanh(g * dots + c)
+    raise ValueError(f"unknown kernel id {kind}")
+
+
+def kernel_matrix(x, kind, g=1.0, c=0.0, degree=3.0):
+    """Full Gram matrix K[i,j] = k(x_i, x_j).  [m,d] -> [m,m]."""
+    dots = x @ x.T
+    sq = jnp.sum(x * x, axis=1)
+    return kernel_transform(dots, sq[:, None], sq[None, :], kind, g, c, degree)
+
+
+def kernel_cross(x, xq, kind, g=1.0, c=0.0, degree=3.0):
+    """Cross-kernel K[i,j] = k(x_i, xq_j).  ([m,d],[q,d]) -> [m,q]."""
+    dots = x @ xq.T
+    sq = jnp.sum(x * x, axis=1)
+    sqq = jnp.sum(xq * xq, axis=1)
+    return kernel_transform(dots, sq[:, None], sqq[None, :], kind, g, c, degree)
+
+
+def decision_scores(x, gamma, rho1, rho2, xq, kind, g=1.0, c=0.0, degree=3.0):
+    """Batch decision function of the OCSSVM (paper eq. (19)).
+
+    Returns
+    -------
+    scores : [q]   s_j   = sum_i gamma_i k(x_i, xq_j)
+    labels : [q]   f(xq) = sign((s - rho1) * (rho2 - s)); +1 inside the
+             slab, -1 outside (0 mapped to +1: on-plane points are inside).
+    """
+    kc = kernel_cross(x, xq, kind, g, c, degree)  # [m, q]
+    s = gamma @ kc  # [q]
+    inside = (s - rho1) * (rho2 - s)
+    labels = jnp.where(inside >= 0.0, 1.0, -1.0)
+    return s, labels
+
+
+def kkt_sweep(kmat, gamma, rho1, rho2, lo, hi, tol):
+    """Vectorized KKT scan over all training points (paper eqs. (49)-(53)).
+
+    Given the full Gram matrix, the dual vector and the current slab
+    offsets, compute for every i:
+
+      fbar[i]  = min(s_i - rho1, rho2 - s_i)          (paper eq. (56))
+      viol[i]  = KKT violation magnitude, in margin units (paper cases
+      (49)-(53) with the errata fixes of DESIGN.md §1.1; gamma maps to
+      the (alpha, alpha_bar) blocks under the exclusivity property):
+            gamma_i ~ lo (alpha_bar at cap) -> need s_i >= rho2 (upper
+                                               -plane margin violator)
+            gamma_i ~ hi (alpha at cap)     -> need s_i <= rho1 (lower
+                                               -plane margin violator)
+            lo < gamma_i < 0 (free ab-SV)   -> need s_i == rho2
+            0 < gamma_i < hi (free a-SV)    -> need s_i == rho1
+            gamma_i ~ 0  (interior)         -> need rho1 <= s_i <= rho2
+
+    where s = K gamma.  ``lo = -eps/(nu2 m)``, ``hi = 1/(nu1 m)``.
+    Returns (viol, fbar).
+    """
+    s = kmat @ gamma
+    at_zero = jnp.abs(gamma) <= tol
+    at_lo = (~at_zero) & (gamma <= lo + tol)
+    at_hi = (~at_zero) & (gamma >= hi - tol)
+    on_upper = (~at_zero) & (~at_lo) & (gamma < 0.0)
+
+    # Violation in each KKT case; clamped at 0 when satisfied.
+    v_lo = jnp.maximum(rho2 - s, 0.0)  # above-slab margin violator
+    v_hi = jnp.maximum(s - rho1, 0.0)  # below-slab margin violator
+    v_up = jnp.abs(s - rho2)  # free SV must sit ON the upper plane
+    v_dn = jnp.abs(s - rho1)  # free SV must sit ON the lower plane
+    v_in = jnp.maximum(rho1 - s, 0.0) + jnp.maximum(s - rho2, 0.0)
+
+    viol = jnp.where(
+        at_zero,
+        v_in,
+        jnp.where(
+            at_lo,
+            v_lo,
+            jnp.where(at_hi, v_hi, jnp.where(on_upper, v_up, v_dn)),
+        ),
+    )
+    fbar = jnp.minimum(s - rho1, rho2 - s)
+    return viol, fbar

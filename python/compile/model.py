@@ -1,0 +1,71 @@
+"""L2: JAX compute graphs for the OCSSVM, composed from the L1 kernels.
+
+Three jitted entry points, one per AOT artifact family (DESIGN.md §2):
+
+  kmatrix_fn   (X[m,d], params3)                        -> (K[m,m],)
+  decision_fn  (X[m,d], gamma[m], params5, Xq[q,d])     -> (scores[q], labels[q])
+  kkt_fn       (K[m,m], gamma[m], params5)              -> (viol[m], fbar[m])
+
+All hyper-parameters (kernel g/c/degree, rho1/rho2, KKT bounds/tol) are
+runtime inputs — nothing numeric is baked into the HLO except shapes and
+the kernel *family* (the elementwise transform branch), so one artifact
+per (family, shape-bucket) serves every trained model and every sweep
+point. Shape buckets are padded by the rust runtime; padded rows carry
+gamma = 0, which makes them inert in every contraction these graphs
+perform (the Gram rows of padding are garbage-free: zero rows give k=0
+for linear/poly/sigmoid-with-c=0 and a constant for RBF, but are never
+read with nonzero weight).
+
+Python here is build-time only: `aot.py` lowers these functions once to
+HLO text; the rust runtime loads and executes the artifacts via PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .kernels import decision, kktsweep, kmatrix
+
+
+def kmatrix_fn(kind: int):
+    """Gram-matrix graph for kernel family ``kind``.
+
+    Returned callable: (x[m,d], params3) -> (K[m,m],). Tuple-wrapped so
+    the HLO root is a tuple (the rust loader unwraps with to_tuple1).
+    """
+
+    @jax.jit
+    def fn(x, params3):
+        return (kmatrix.kernel_matrix(x, params3, kind),)
+
+    return fn
+
+
+def decision_fn(kind: int):
+    """Serving graph: batch slab decision function (paper eq. (19)).
+
+    Returned callable:
+        (x[m,d], gamma[m], params5, xq[q,d]) -> (scores[q], labels[q])
+    with params5 = (g, c, degree, rho1, rho2).
+    """
+
+    @jax.jit
+    def fn(x, gamma, params5, xq):
+        return decision.decision_scores(x, gamma, params5, xq, kind)
+
+    return fn
+
+
+def kkt_fn():
+    """KKT sweep graph (kernel-family independent — consumes K directly).
+
+    Returned callable:
+        (kmat[m,m], gamma[m], params5) -> (viol[m], fbar[m])
+    with params5 = (rho1, rho2, lo, hi, tol).
+    """
+
+    @jax.jit
+    def fn(kmat, gamma, params5):
+        return kktsweep.kkt_sweep(kmat, gamma, params5)
+
+    return fn

@@ -1,0 +1,25 @@
+"""Shared fixtures/strategies for the L1/L2 test suite."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(12345)
+
+
+def make_data(rng, m, d, scale=1.0):
+    """Well-conditioned random sample matrix."""
+    return (rng.normal(size=(m, d)) * scale).astype(np.float32)
+
+
+def make_gamma(rng, m, lo, hi, sum_to=None):
+    """Random dual vector inside the box [lo, hi], optionally on the
+    sum-constraint hyperplane (paper eq. (32))."""
+    g = rng.uniform(lo, hi, size=m)
+    if sum_to is not None:
+        # project onto the hyperplane, then re-clip (good enough for tests)
+        g = g + (sum_to - g.sum()) / m
+        g = np.clip(g, lo, hi)
+    return g.astype(np.float32)

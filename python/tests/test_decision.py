@@ -1,0 +1,105 @@
+"""L1 correctness: batched slab decision function vs oracle + semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decision, ref
+
+from .conftest import make_data
+
+FAMILIES = [ref.LINEAR, ref.RBF, ref.POLY, ref.SIGMOID]
+
+
+def p5(g, c, degree, rho1, rho2):
+    return jnp.asarray([g, c, degree, rho1, rho2], jnp.float32)
+
+
+@pytest.mark.parametrize("kind", FAMILIES)
+def test_matches_ref(rng, kind):
+    m, d, q = 128, 4, 64
+    x = jnp.asarray(make_data(rng, m, d))
+    xq = jnp.asarray(make_data(rng, q, d))
+    gamma = jnp.asarray(rng.normal(size=m).astype(np.float32) * 0.05)
+    s, f = decision.decision_scores(x, gamma, p5(0.5, 0.3, 2.0, -0.1, 0.4), xq, kind)
+    sr, fr = ref.decision_scores(x, gamma, -0.1, 0.4, xq, kind, 0.5, 0.3, 2.0)
+    np.testing.assert_allclose(s, sr, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(f, fr)
+
+
+def test_labels_are_sign_of_slab_test(rng):
+    """f = +1 iff rho1 <= s <= rho2 (slab membership, paper eq. (4)/(19))."""
+    m, d, q = 128, 2, 64
+    x = jnp.asarray(make_data(rng, m, d))
+    xq = jnp.asarray(make_data(rng, q, d))
+    gamma = jnp.asarray(rng.normal(size=m).astype(np.float32) * 0.05)
+    rho1, rho2 = -0.05, 0.25
+    s, f = decision.decision_scores(
+        x, gamma, p5(1.0, 0.0, 0.0, rho1, rho2), xq, ref.LINEAR)
+    s, f = np.asarray(s), np.asarray(f)
+    inside = (s >= rho1) & (s <= rho2)
+    np.testing.assert_array_equal(f > 0, inside)
+
+
+def test_padded_support_rows_are_inert(rng):
+    """gamma=0 on padded rows -> identical scores (runtime bucket contract)."""
+    m, d, q = 100, 3, 64
+    x = make_data(rng, m, d)
+    gamma = (rng.normal(size=m) * 0.05).astype(np.float32)
+    xq = make_data(rng, q, d)
+
+    xpad = np.zeros((128, d), np.float32)
+    xpad[:m] = x
+    gpad = np.zeros(128, np.float32)
+    gpad[:m] = gamma
+
+    s_ref, _ = ref.decision_scores(
+        jnp.asarray(x), jnp.asarray(gamma), -0.1, 0.4, jnp.asarray(xq),
+        ref.RBF, 0.5)
+    s_pad, _ = decision.decision_scores(
+        jnp.asarray(xpad), jnp.asarray(gpad),
+        p5(0.5, 0, 0, -0.1, 0.4), jnp.asarray(xq), ref.RBF)
+    np.testing.assert_allclose(s_pad, s_ref, rtol=3e-4, atol=3e-4)
+
+
+def test_on_plane_points_are_inside(rng):
+    """Score exactly at rho1 or rho2 classifies as +1 (inside)."""
+    # Engineer a 1-sample support set with k(x, xq) = <x, xq> giving exact
+    # scores rho1 and rho2.
+    x = jnp.asarray([[1.0, 0.0]], jnp.float32)
+    gamma = jnp.asarray([1.0], jnp.float32)
+    xq = jnp.asarray([[0.25, 0.0], [0.75, 0.0], [0.5, 0.0], [1.0, 0.0]],
+                     jnp.float32)
+    s, f = decision.decision_scores(
+        x, gamma, p5(0, 0, 0, 0.25, 0.75), xq, ref.LINEAR, qblock=4)
+    np.testing.assert_allclose(np.asarray(s), [0.25, 0.75, 0.5, 1.0], rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(f), [1.0, 1.0, 1.0, -1.0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    kind=st.sampled_from(FAMILIES),
+    m=st.sampled_from([64, 128, 256]),
+    q=st.sampled_from([64, 128]),
+    d=st.sampled_from([1, 2, 8]),
+    g=st.floats(0.05, 1.5),
+    rho1=st.floats(-0.5, 0.1),
+    width=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decision_sweep(kind, m, q, d, g, rho1, width, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    xq = jnp.asarray(rng.normal(size=(q, d)).astype(np.float32))
+    gamma = jnp.asarray((rng.normal(size=m) * 0.05).astype(np.float32))
+    rho2 = rho1 + width
+    s, f = decision.decision_scores(
+        x, gamma, p5(g, 0.2, 2.0, rho1, rho2), xq, kind)
+    sr, fr = ref.decision_scores(x, gamma, rho1, rho2, xq, kind, g, 0.2, 2.0)
+    np.testing.assert_allclose(s, sr, rtol=1e-3, atol=1e-3)
+    # labels may legitimately differ where s is within tol of a plane;
+    # assert equality elsewhere.
+    s = np.asarray(s)
+    safe = (np.abs(s - rho1) > 1e-3) & (np.abs(s - rho2) > 1e-3)
+    np.testing.assert_array_equal(np.asarray(f)[safe], np.asarray(fr)[safe])

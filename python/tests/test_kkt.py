@@ -1,0 +1,98 @@
+"""L1 correctness: KKT sweep kernel vs oracle + case semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kktsweep, ref
+
+from .conftest import make_data
+
+
+def p5(rho1, rho2, lo, hi, tol):
+    return jnp.asarray([rho1, rho2, lo, hi, tol], jnp.float32)
+
+
+def test_matches_ref(rng):
+    m = 256
+    x = make_data(rng, m, 4)
+    kmat = ref.kernel_matrix(jnp.asarray(x), ref.RBF, 0.5)
+    gamma = jnp.asarray((rng.normal(size=m) * 0.01).astype(np.float32))
+    args = (-0.08, 0.3, -0.02, 0.04, 1e-6)
+    v, fb = kktsweep.kkt_sweep(kmat, gamma, p5(*args))
+    vr, fbr = ref.kkt_sweep(kmat, gamma, *args)
+    np.testing.assert_allclose(v, vr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(fb, fbr, rtol=1e-5, atol=1e-5)
+
+
+def test_optimal_interior_point_has_zero_violation():
+    """A gamma=0 point whose score is inside the slab satisfies KKT (49)."""
+    # 2 points, identity kernel, gamma = (0, 0.5): s = (0, 0.5).
+    kmat = jnp.eye(2, dtype=jnp.float32)
+    gamma = jnp.asarray([0.0, 0.5], jnp.float32)
+    # slab [-1, 1]: point 0 has s=0 inside -> viol 0.
+    v, fb = kktsweep.kkt_sweep(kmat, gamma, p5(-1.0, 1.0, -0.3, 0.6, 1e-6),
+                               block=2)
+    assert float(v[0]) == 0.0
+    # fbar = min(s - rho1, rho2 - s) = min(1, 1) = 1 for point 0
+    np.testing.assert_allclose(float(fb[0]), 1.0, rtol=1e-6)
+
+
+def test_free_sv_off_plane_is_violating():
+    """A free 0<gamma<hi point must sit ON the lower plane (case (52))."""
+    kmat = jnp.eye(2, dtype=jnp.float32)
+    gamma = jnp.asarray([0.3, 0.0], jnp.float32)  # free in (0, hi=0.6)
+    # s_0 = 0.3 but rho1 = 0.1 -> |s - rho1| = 0.2 violation.
+    v, _ = kktsweep.kkt_sweep(kmat, gamma, p5(0.1, 1.0, -0.3, 0.6, 1e-6),
+                              block=2)
+    np.testing.assert_allclose(float(v[0]), 0.2, rtol=1e-5)
+
+
+def test_bound_point_below_lower_plane():
+    """gamma at upper bound hi is a lower-plane margin violator: its KKT
+    condition is s <= rho1 (paper case (53), errata-corrected)."""
+    kmat = jnp.eye(2, dtype=jnp.float32)
+    gamma = jnp.asarray([0.6, 0.0], jnp.float32)  # at hi = 0.6
+    # s_0 = 0.6 > rho1 = 0.1 -> violation 0.5
+    v, _ = kktsweep.kkt_sweep(kmat, gamma, p5(0.1, 1.0, -0.3, 0.6, 1e-6),
+                              block=2)
+    np.testing.assert_allclose(float(v[0]), 0.5, rtol=1e-5)
+    # and with rho1 above s the condition is satisfied
+    v2, _ = kktsweep.kkt_sweep(kmat, gamma, p5(0.7, 1.0, -0.3, 0.6, 1e-6),
+                               block=2)
+    assert float(v2[0]) == 0.0
+
+
+def test_bound_point_above_upper_plane():
+    """gamma at lower bound lo is an upper-plane margin violator: its KKT
+    condition is s >= rho2."""
+    kmat = jnp.eye(2, dtype=jnp.float32)
+    gamma = jnp.asarray([-0.3, 0.5], jnp.float32)  # at lo = -0.3
+    # s_0 = -0.3 < rho2 = 0.2 -> violation 0.5
+    v, _ = kktsweep.kkt_sweep(kmat, gamma, p5(-1.0, 0.2, -0.3, 0.6, 1e-6),
+                              block=2)
+    np.testing.assert_allclose(float(v[0]), 0.5, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([64, 128, 256]),
+    rho1=st.floats(-0.3, 0.1),
+    width=st.floats(0.05, 0.8),
+    nu1=st.floats(0.1, 0.9),
+    nu2=st.floats(0.01, 0.2),
+    eps=st.floats(0.1, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kkt_sweep_hypothesis(m, rho1, width, nu1, nu2, eps, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, 3)).astype(np.float32))
+    kmat = ref.kernel_matrix(x, ref.RBF, 0.7)
+    lo, hi = -eps / (nu2 * m), 1.0 / (nu1 * m)
+    gamma = jnp.asarray(rng.uniform(lo, hi, size=m).astype(np.float32))
+    rho2 = rho1 + width
+    v, fb = kktsweep.kkt_sweep(kmat, gamma, p5(rho1, rho2, lo, hi, 1e-6),
+                               block=64)
+    vr, fbr = ref.kkt_sweep(kmat, gamma, rho1, rho2, lo, hi, 1e-6)
+    np.testing.assert_allclose(v, vr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(fb, fbr, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,135 @@
+"""L1 correctness: Pallas Gram/cross kernels vs the pure-jnp oracle.
+
+The hypothesis sweep is the core signal: random shapes (within the tiling
+constraints), random hyper-parameters, all four kernel families, asserted
+allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kmatrix, ref
+
+from .conftest import make_data
+
+FAMILIES = [ref.LINEAR, ref.RBF, ref.POLY, ref.SIGMOID]
+
+
+def p3(g, c, degree):
+    return jnp.asarray([g, c, degree], jnp.float32)
+
+
+# ---------------------------------------------------------------- fixed cases
+
+
+@pytest.mark.parametrize("kind", FAMILIES)
+def test_gram_matches_ref_basic(rng, kind):
+    x = make_data(rng, 256, 8)
+    got = kmatrix.kernel_matrix(jnp.asarray(x), p3(0.7, 0.5, 2.0), kind)
+    want = ref.kernel_matrix(jnp.asarray(x), kind, 0.7, 0.5, 2.0)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("kind", FAMILIES)
+def test_cross_matches_ref_basic(rng, kind):
+    x = make_data(rng, 128, 4)
+    xq = make_data(rng, 64, 4)
+    got = kmatrix.kernel_cross(
+        jnp.asarray(x), jnp.asarray(xq), p3(0.3, 1.0, 3.0), kind)
+    want = ref.kernel_cross(jnp.asarray(x), jnp.asarray(xq), kind, 0.3, 1.0, 3.0)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_gram_is_symmetric(rng):
+    x = make_data(rng, 256, 8)
+    k = np.asarray(kmatrix.kernel_matrix(jnp.asarray(x), p3(0.7, 0, 0), ref.RBF))
+    np.testing.assert_allclose(k, k.T, rtol=1e-6, atol=1e-6)
+
+
+def test_rbf_diagonal_is_one(rng):
+    x = make_data(rng, 128, 8)
+    k = np.asarray(kmatrix.kernel_matrix(jnp.asarray(x), p3(0.9, 0, 0), ref.RBF))
+    np.testing.assert_allclose(np.diag(k), np.ones(128), rtol=1e-5)
+
+
+def test_rbf_range(rng):
+    x = make_data(rng, 128, 8, scale=3.0)
+    k = np.asarray(kmatrix.kernel_matrix(jnp.asarray(x), p3(0.2, 0, 0), ref.RBF))
+    assert k.min() >= 0.0 and k.max() <= 1.0 + 1e-6
+
+
+def test_linear_equals_xxt(rng):
+    x = make_data(rng, 256, 8)
+    k = np.asarray(kmatrix.kernel_matrix(jnp.asarray(x), p3(0, 0, 0), ref.LINEAR))
+    np.testing.assert_allclose(k, x @ x.T, rtol=3e-5, atol=3e-5)
+
+
+def test_block_size_invariance(rng):
+    """The tiling must not affect the numbers."""
+    x = jnp.asarray(make_data(rng, 256, 8))
+    k128 = kmatrix.kernel_matrix(x, p3(0.5, 0, 0), ref.RBF, block=128)
+    k64 = kmatrix.kernel_matrix(x, p3(0.5, 0, 0), ref.RBF, block=64)
+    k256 = kmatrix.kernel_matrix(x, p3(0.5, 0, 0), ref.RBF, block=256)
+    np.testing.assert_allclose(k128, k64, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(k128, k256, rtol=1e-6, atol=1e-6)
+
+
+def test_padding_rows_are_inert(rng):
+    """Zero-padded rows must not change the valid Gram block (bucket
+    padding contract used by the rust runtime)."""
+    x = make_data(rng, 100, 4)
+    xpad = np.zeros((128, 4), np.float32)
+    xpad[:100] = x
+    k_small = np.asarray(
+        ref.kernel_matrix(jnp.asarray(x), ref.RBF, 0.5))
+    k_pad = np.asarray(
+        kmatrix.kernel_matrix(jnp.asarray(xpad), p3(0.5, 0, 0), ref.RBF))
+    np.testing.assert_allclose(k_pad[:100, :100], k_small, rtol=3e-5, atol=3e-5)
+
+
+def test_non_multiple_block_asserts(rng):
+    x = jnp.asarray(make_data(rng, 100, 4))
+    with pytest.raises(AssertionError):
+        kmatrix.kernel_matrix(x, p3(0.5, 0, 0), ref.RBF, block=64)
+
+
+# ------------------------------------------------------------- hypothesis sweep
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    kind=st.sampled_from(FAMILIES),
+    mexp=st.integers(1, 4),          # m = 64 * 2^mexp in {128..1024}
+    d=st.sampled_from([1, 2, 3, 8, 17, 32]),
+    g=st.floats(0.05, 2.0),
+    c=st.floats(-1.0, 1.0),
+    degree=st.sampled_from([1.0, 2.0, 3.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_sweep(kind, mexp, d, g, c, degree, seed):
+    rng = np.random.default_rng(seed)
+    m = 64 * 2**mexp
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    got = kmatrix.kernel_matrix(x, p3(g, c, degree), kind, block=64)
+    want = ref.kernel_matrix(x, kind, g, c, degree)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    kind=st.sampled_from(FAMILIES),
+    m=st.sampled_from([64, 128, 256]),
+    q=st.sampled_from([64, 128]),
+    d=st.sampled_from([1, 2, 5, 8]),
+    g=st.floats(0.05, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cross_sweep(kind, m, q, d, g, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    xq = jnp.asarray(rng.normal(size=(q, d)).astype(np.float32))
+    got = kmatrix.kernel_cross(x, xq, p3(g, 0.5, 2.0), kind, block=64)
+    want = ref.kernel_cross(x, xq, kind, g, 0.5, 2.0)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)

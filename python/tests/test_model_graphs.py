@@ -1,0 +1,110 @@
+"""L2 graph-level tests: the composed jitted functions (model.py) against
+end-to-end references, including the bucket-padding contract the rust
+runtime relies on and hyper-parameter re-use of a single lowered graph.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+from .conftest import make_data
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+@pytest.mark.parametrize("kind", [ref.LINEAR, ref.RBF])
+def test_kmatrix_graph_matches_ref(rng, kind):
+    fn = model.kmatrix_fn(kind)
+    x = jnp.asarray(make_data(rng, 256, 8))
+    (k,) = fn(x, jnp.asarray([0.4, 0.0, 0.0], jnp.float32))
+    want = ref.kernel_matrix(x, kind, 0.4)
+    np.testing.assert_allclose(k, want, rtol=3e-5, atol=3e-5)
+
+
+def test_one_lowering_serves_many_hyperparams(rng):
+    """Hyper-parameters are runtime inputs: a single compiled executable
+    must produce correct results across a g sweep (no retrace)."""
+    fn = model.kmatrix_fn(ref.RBF)
+    compiled = jax.jit(fn).lower(spec(128, 2), spec(3)).compile()
+    x = jnp.asarray(make_data(rng, 128, 2))
+    for g in [0.05, 0.3, 1.0, 2.5]:
+        (k,) = compiled(x, jnp.asarray([g, 0.0, 0.0], jnp.float32))
+        want = ref.kernel_matrix(x, ref.RBF, g)
+        np.testing.assert_allclose(k, want, rtol=1e-4, atol=1e-4)
+
+
+def test_decision_graph_padding_contract(rng):
+    """The rust runtime pads supports with zero rows + gamma=0 and pads
+    query chunks with zero rows: scores of real queries must be identical
+    and padded-query outputs are simply ignored."""
+    m_real, m_bucket, q_real, q_bucket, d = 100, 128, 40, 64, 2
+    x = make_data(rng, m_real, d)
+    gamma = (rng.normal(size=m_real) * 0.05).astype(np.float32)
+    xq = make_data(rng, q_real, d)
+
+    xpad = np.zeros((m_bucket, d), np.float32)
+    xpad[:m_real] = x
+    gpad = np.zeros(m_bucket, np.float32)
+    gpad[:m_real] = gamma
+    qpad = np.zeros((q_bucket, d), np.float32)
+    qpad[:q_real] = xq
+
+    fn = model.decision_fn(ref.LINEAR)
+    p5 = jnp.asarray([0, 0, 0, -0.1, 0.4], jnp.float32)
+    s_pad, f_pad = fn(jnp.asarray(xpad), jnp.asarray(gpad), p5, jnp.asarray(qpad))
+    s_ref, f_ref = ref.decision_scores(
+        jnp.asarray(x), jnp.asarray(gamma), -0.1, 0.4, jnp.asarray(xq),
+        ref.LINEAR)
+    np.testing.assert_allclose(s_pad[:q_real], s_ref, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(f_pad[:q_real], f_ref)
+
+
+def test_kkt_graph_padding_contract(rng):
+    """Padded Gram rows/cols with gamma=0: viol/fbar of the real prefix
+    must match the unpadded reference."""
+    m_real, m_bucket = 100, 128
+    x = make_data(rng, m_real, 3)
+    kmat = np.asarray(ref.kernel_matrix(jnp.asarray(x), ref.RBF, 0.5))
+    gamma = rng.uniform(-0.02, 0.04, size=m_real).astype(np.float32)
+
+    kpad = np.zeros((m_bucket, m_bucket), np.float32)
+    kpad[:m_real, :m_real] = kmat
+    gpad = np.zeros(m_bucket, np.float32)
+    gpad[:m_real] = gamma
+
+    fn = model.kkt_fn()
+    p5 = jnp.asarray([-0.08, 0.3, -0.02, 0.04, 1e-6], jnp.float32)
+    v_pad, f_pad = fn(jnp.asarray(kpad), jnp.asarray(gpad), p5)
+    v_ref, f_ref = ref.kkt_sweep(
+        jnp.asarray(kmat), jnp.asarray(gamma), -0.08, 0.3, -0.02, 0.04, 1e-6)
+    np.testing.assert_allclose(v_pad[:m_real], v_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(f_pad[:m_real], f_ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    kind=st.sampled_from([ref.LINEAR, ref.RBF, ref.POLY, ref.SIGMOID]),
+    m=st.sampled_from([64, 128]),
+    q=st.sampled_from([64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decision_graph_sweep(kind, m, q, seed):
+    rng = np.random.default_rng(seed)
+    fn = model.decision_fn(kind)
+    x = jnp.asarray(rng.normal(size=(m, 2)).astype(np.float32))
+    gamma = jnp.asarray((rng.normal(size=m) * 0.05).astype(np.float32))
+    xq = jnp.asarray(rng.normal(size=(q, 2)).astype(np.float32))
+    p5 = jnp.asarray([0.5, 0.2, 2.0, -0.2, 0.6], jnp.float32)
+    s, f = fn(x, gamma, p5, xq)
+    sr, fr = ref.decision_scores(x, gamma, -0.2, 0.6, xq, kind, 0.5, 0.2, 2.0)
+    np.testing.assert_allclose(s, sr, rtol=1e-3, atol=1e-3)
+    s = np.asarray(s)
+    safe = (np.abs(s + 0.2) > 1e-3) & (np.abs(s - 0.6) > 1e-3)
+    np.testing.assert_array_equal(np.asarray(f)[safe], np.asarray(fr)[safe])

@@ -1,0 +1,54 @@
+//! Bench: **A2** — kernel-row cache policy ablation (paper ref [37]).
+//!
+//! The paper's related work motivates kernel-value caching (LFU, Li/
+//! Wen/He 2019) as a lever on SVM training time. This bench sweeps the
+//! row-cache policy (LRU vs LFU) and capacity against the full-Gram
+//! precompute, reporting train time and cache hit rate. Expected shape:
+//! precompute wins at paper scale (memory is cheap at m ≤ 5000), caches
+//! approach it as capacity grows, LFU ≥ LRU at small capacities because
+//! SMO's working set is heavy-tailed (hot violators are re-selected).
+//!
+//! Run: `cargo bench --bench ablation_cache`
+
+use slabsvm::bench::Bench;
+use slabsvm::cache::{CachedRows, Policy};
+use slabsvm::data::synthetic::SlabConfig;
+use slabsvm::kernel::Kernel;
+use slabsvm::solver::smo::{train_cached, train_full, SmoParams};
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let params = SmoParams::default();
+
+    for &m in &[1000usize, 2000] {
+        let ds = SlabConfig::default().generate(m, 5000 + m as u64);
+
+        bench.run(&format!("precomputed/m={m}"), || {
+            let (_, out) = train_full(&ds.x, Kernel::Linear, &params).expect("train");
+            vec![("iterations".into(), out.stats.iterations as f64)]
+        });
+
+        for policy in [Policy::Lru, Policy::Lfu] {
+            for frac in [0.05f64, 0.25, 1.0] {
+                let cap = ((m as f64 * frac) as usize).max(2);
+                let name = format!(
+                    "{}{:.0}%/m={m}",
+                    if policy == Policy::Lru { "lru-" } else { "lfu-" },
+                    frac * 100.0
+                );
+                bench.run(&name, || {
+                    let cache =
+                        CachedRows::with_policy(&ds.x, Kernel::Linear, cap, policy);
+                    let (_, out) = train_cached(&ds.x, Kernel::Linear, &params, cache)
+                        .expect("train");
+                    vec![
+                        ("hit_rate".into(), out.stats.cache.hit_rate()),
+                        ("evictions".into(), out.stats.cache.evictions as f64),
+                        ("iterations".into(), out.stats.iterations as f64),
+                    ]
+                });
+            }
+        }
+    }
+    bench.report("A2 — kernel cache policy x capacity (train seconds, hit rate)");
+}

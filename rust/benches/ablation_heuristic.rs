@@ -1,0 +1,66 @@
+//! Bench: **A1** — working-set selection heuristic ablation.
+//!
+//! The paper's §3.2 heuristic (first choice max |f̄| over violators,
+//! second choice max |f̄_b − f̄_a|) vs the classic max-violation rule vs
+//! uniformly random violator selection. All three must reach the same
+//! objective (asserted); the metric is iterations-to-converge and
+//! wall-clock. This quantifies how much the paper's heuristic actually
+//! buys — its §3.2 is the paper's only algorithmic novelty beyond the
+//! OCSVM SMO recipe.
+//!
+//! Run: `cargo bench --bench ablation_heuristic`
+
+use slabsvm::bench::Bench;
+use slabsvm::data::synthetic::SlabConfig;
+use slabsvm::kernel::Kernel;
+use slabsvm::solver::smo::{train_full, SmoParams};
+use slabsvm::solver::Heuristic;
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let heuristics = [
+        Heuristic::PaperMaxFbar,
+        Heuristic::MaxViolation,
+        Heuristic::RandomViolator,
+        Heuristic::SecondOrder,
+    ];
+
+    for &m in &[500usize, 2000] {
+        let ds = SlabConfig::default().generate(m, 4000 + m as u64);
+        let mut objectives = Vec::new();
+        for h in heuristics {
+            let params = SmoParams { heuristic: h, ..Default::default() };
+            bench.run(&format!("{}/m={m}", h.name()), || {
+                let (_, out) =
+                    train_full(&ds.x, Kernel::Linear, &params).expect("train");
+                objectives.push(out.stats.objective);
+                vec![
+                    ("iterations".into(), out.stats.iterations as f64),
+                    ("objective".into(), out.stats.objective),
+                ]
+            });
+        }
+        // shrinking ablation on the paper heuristic
+        let params = SmoParams {
+            shrinking: false,
+            ..Default::default()
+        };
+        bench.run(&format!("paper-no-shrink/m={m}"), || {
+            let (_, out) =
+                train_full(&ds.x, Kernel::Linear, &params).expect("train");
+            objectives.push(out.stats.objective);
+            vec![
+                ("iterations".into(), out.stats.iterations as f64),
+                ("objective".into(), out.stats.objective),
+            ]
+        });
+        // all heuristics must land on the same optimum
+        let lo = objectives.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = objectives.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(
+            hi - lo < 1e-3 * hi.abs().max(1e-9),
+            "objectives diverge at m={m}: [{lo}, {hi}]"
+        );
+    }
+    bench.report("A1 — working-set heuristic ablation (same optimum, different effort)");
+}

@@ -1,0 +1,72 @@
+//! Bench: **A3** — native vs PJRT engine on the batch compute paths.
+//!
+//! Measures the two engines on (a) full-Gram precompute and (b) batch
+//! decision-function scoring, across shape buckets. The PJRT path runs
+//! the AOT-lowered Pallas kernels through the XLA CPU client; interpret-
+//! mode Pallas lowers to a sequential grid loop, so native wins on CPU —
+//! the bench quantifies the gap and checks numerical agreement first.
+//! (On a real TPU the same artifacts lower to MXU matmuls; see DESIGN.md
+//! §Hardware-Adaptation / §Perf for the VMEM/MXU analysis.)
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench engine`
+
+use std::sync::Arc;
+
+use slabsvm::bench::Bench;
+use slabsvm::data::synthetic::SlabConfig;
+use slabsvm::kernel::Kernel;
+use slabsvm::runtime::Engine;
+use slabsvm::solver::smo::{train_full, SmoParams};
+
+fn main() {
+    let Ok(pjrt) = Engine::pjrt("artifacts") else {
+        eprintln!("artifacts missing — run `make artifacts` first; skipping");
+        return;
+    };
+    let native = Engine::Native;
+    let mut bench = Bench::from_env();
+
+    // ---- numerical agreement gate ------------------------------------
+    {
+        let ds = SlabConfig::default().generate(200, 61);
+        let kn = native.gram(&ds.x, Kernel::Rbf { g: 0.01 }).unwrap();
+        let kp = pjrt.gram(&ds.x, Kernel::Rbf { g: 0.01 }).unwrap();
+        let mut max_err = 0.0f64;
+        for i in 0..200 {
+            for j in 0..200 {
+                max_err = max_err.max((kn.get(i, j) - kp.get(i, j)).abs());
+            }
+        }
+        assert!(max_err < 1e-3, "engines disagree: {max_err}");
+        println!("engine agreement: max |Δgram| = {max_err:.2e} (f32 vs f64)");
+    }
+
+    // ---- (a) Gram precompute ------------------------------------------
+    for &m in &[256usize, 1024, 2048] {
+        let ds = SlabConfig::default().generate(m, 6000 + m as u64);
+        for (name, eng) in [("native", &native), ("pjrt", &pjrt)] {
+            bench.run(&format!("gram-{name}/m={m}"), || {
+                let k = eng.gram(&ds.x, Kernel::Linear).expect("gram");
+                vec![("checksum".into(), k.get(0, 0))]
+            });
+        }
+    }
+
+    // ---- (b) batch scoring ---------------------------------------------
+    let train = SlabConfig::default().generate(1000, 42);
+    let (model, _) =
+        train_full(&train.x, Kernel::Linear, &SmoParams::default()).unwrap();
+    let model = Arc::new(model);
+    for &q in &[64usize, 256, 1024] {
+        let queries = SlabConfig::default().generate_eval(q / 2, q / 2, 9);
+        for (name, eng) in [("native", &native), ("pjrt", &pjrt)] {
+            bench.run(&format!("score-{name}/q={q}"), || {
+                let (s, _) = eng.predict(&model, &queries.x).expect("predict");
+                vec![("throughput_qps".into(), 0.0), ("s0".into(), s[0])]
+            });
+        }
+    }
+    bench.report("A3 — native vs PJRT engine (Gram build + batch scoring)");
+    println!("\nnote: pjrt runs interpret-mode Pallas (sequential grid) on the CPU client;");
+    println!("the same artifacts target MXU matmuls on real TPUs (DESIGN.md §Perf).");
+}

@@ -1,0 +1,58 @@
+//! Bench: **Table 1** — SMO training time and MCC vs dataset size.
+//!
+//! Regenerates the paper's only table: training time and Matthews
+//! Correlation Coefficient for m ∈ {500, 1000, 2000, 5000} with the
+//! linear kernel and the paper's constants ν₁ = 0.5, ν₂ = 0.01, ε = 2/3.
+//! MCC is measured on a labeled eval set (m/2 positives + m/2 anomalies)
+//! — the paper never states its eval protocol, see DESIGN.md
+//! §Substitutions. Absolute seconds differ from the paper's 2020-era
+//! hardware; the claim under test is the growth *shape*.
+//!
+//! Run: `cargo bench --bench table1`  (SLABSVM_BENCH_FAST=1 for smoke)
+
+use slabsvm::bench::Bench;
+use slabsvm::data::synthetic::SlabConfig;
+use slabsvm::kernel::Kernel;
+use slabsvm::solver::smo::{train_full, SmoParams};
+
+const PAPER: &[(usize, f64, f64)] = &[
+    (500, 0.35, 0.07),
+    (1000, 0.67, 0.13),
+    (2000, 2.1, 0.26),
+    (5000, 5.91, 0.33),
+];
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let params = SmoParams::default();
+
+    for &(m, paper_t, paper_mcc) in PAPER {
+        let ds = SlabConfig::default().generate(m, 1000 + m as u64);
+        let eval = SlabConfig::default().generate_eval(m / 2, m / 2, 77 + m as u64);
+        bench.run(&format!("table1/m={m}"), || {
+            let (model, out) =
+                train_full(&ds.x, Kernel::Linear, &params).expect("train");
+            let mcc = model.evaluate(&eval).mcc();
+            vec![
+                ("mcc".into(), mcc),
+                ("iterations".into(), out.stats.iterations as f64),
+                ("n_sv".into(), model.n_sv() as f64),
+                ("paper_time_s".into(), paper_t),
+                ("paper_mcc".into(), paper_mcc),
+            ]
+        });
+    }
+    bench.report("Table 1 — SMO train time + MCC vs m (linear kernel, paper constants)");
+
+    // growth-shape summary: time ratios between consecutive sizes
+    let r = bench.results();
+    println!("\ngrowth shape (ours vs paper time ratios):");
+    for (i, w) in r.windows(2).enumerate() {
+        let ours = w[1].median() / w[0].median().max(1e-12);
+        let paper = PAPER[i + 1].1 / PAPER[i].1;
+        println!(
+            "  {} -> {}: ours x{:.2}, paper x{:.2}",
+            w[0].name, w[1].name, ours, paper
+        );
+    }
+}

@@ -1,0 +1,180 @@
+//! Timing harness: warmup, repeated samples, robust statistics.
+
+use std::time::Instant;
+
+use crate::linalg::{mean, median};
+use crate::util::json::Json;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    /// per-iteration wall-clock seconds, one entry per sample
+    pub seconds: Vec<f64>,
+    /// optional auxiliary metrics (e.g. mcc, iterations, hit-rate)
+    pub extra: Vec<(String, f64)>,
+}
+
+impl Sample {
+    pub fn median(&self) -> f64 {
+        median(&self.seconds)
+    }
+    pub fn mean(&self) -> f64 {
+        mean(&self.seconds)
+    }
+    pub fn min(&self) -> f64 {
+        self.seconds.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+    /// median absolute deviation (robust spread)
+    pub fn mad(&self) -> f64 {
+        let med = self.median();
+        let devs: Vec<f64> = self.seconds.iter().map(|s| (s - med).abs()).collect();
+        median(&devs)
+    }
+
+    /// Machine-readable JSON line.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::str(self.name.clone())),
+            ("median_s", Json::num(self.median())),
+            ("mean_s", Json::num(self.mean())),
+            ("min_s", Json::num(self.min())),
+            ("mad_s", Json::num(self.mad())),
+            ("samples", Json::num(self.seconds.len() as f64)),
+        ];
+        for (k, v) in &self.extra {
+            fields.push((k.as_str(), Json::num(*v)));
+        }
+        // keys must outlive: rebuild with owned keys
+        Json::Obj(
+            fields
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+
+    /// Human row: `name  median ± mad  (min)`.
+    pub fn row(&self) -> String {
+        let extras: Vec<String> = self
+            .extra
+            .iter()
+            .map(|(k, v)| format!("{k}={v:.4}"))
+            .collect();
+        format!(
+            "{:40} {:>10.4}s ±{:>8.4}s  min {:>10.4}s  {}",
+            self.name,
+            self.median(),
+            self.mad(),
+            self.min(),
+            extras.join(" ")
+        )
+    }
+}
+
+/// Bench runner configuration.
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+    /// cap total time per case (seconds); reduces samples for slow cases
+    pub max_seconds: f64,
+    results: Vec<Sample>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 1, samples: 5, max_seconds: 120.0, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, samples: usize, max_seconds: f64) -> Self {
+        Bench { warmup, samples, max_seconds, results: Vec::new() }
+    }
+
+    /// Honor `SLABSVM_BENCH_FAST=1` (CI smoke mode: 1 sample, no warmup).
+    pub fn from_env() -> Self {
+        if std::env::var("SLABSVM_BENCH_FAST").as_deref() == Ok("1") {
+            Bench::new(0, 1, 30.0)
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Run one case. `f` returns optional extra metrics recorded with
+    /// the last sample.
+    pub fn run<F>(&mut self, name: &str, mut f: F) -> &Sample
+    where
+        F: FnMut() -> Vec<(String, f64)>,
+    {
+        for _ in 0..self.warmup {
+            let _ = f();
+        }
+        let mut seconds = Vec::with_capacity(self.samples);
+        let mut extra = Vec::new();
+        let t_total = Instant::now();
+        for i in 0..self.samples {
+            let t0 = Instant::now();
+            extra = f();
+            seconds.push(t0.elapsed().as_secs_f64());
+            if t_total.elapsed().as_secs_f64() > self.max_seconds && i > 0 {
+                break;
+            }
+        }
+        self.results.push(Sample { name: name.to_string(), seconds, extra });
+        self.results.last().unwrap()
+    }
+
+    /// Print the human table + JSON lines for all cases so far.
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        for s in &self.results {
+            println!("{}", s.row());
+        }
+        for s in &self.results {
+            println!("BENCHJSON {}", s.to_json());
+        }
+    }
+
+    pub fn results(&self) -> &[Sample] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_stats() {
+        let mut b = Bench::new(0, 3, 10.0);
+        let s = b.run("sleepless", || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            vec![("metric".into(), 7.0)]
+        });
+        assert_eq!(s.seconds.len(), 3);
+        assert!(s.median() >= 0.002);
+        assert_eq!(s.extra[0].1, 7.0);
+        assert!(!s.row().is_empty());
+    }
+
+    #[test]
+    fn json_line_is_valid() {
+        let mut b = Bench::new(0, 1, 10.0);
+        b.run("case", Vec::new);
+        let j = b.results()[0].to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str(), Some("case"));
+        assert_eq!(parsed.get("samples").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn time_cap_reduces_samples() {
+        let mut b = Bench::new(0, 100, 0.02);
+        let s = b.run("slow", || {
+            std::thread::sleep(std::time::Duration::from_millis(15));
+            Vec::new()
+        });
+        assert!(s.seconds.len() < 100);
+    }
+}

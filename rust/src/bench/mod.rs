@@ -1,0 +1,10 @@
+//! Benchmark harness (criterion substitute for the offline crate set).
+//!
+//! [`harness::Bench`] runs a closure with warmup + repeated timed
+//! samples and reports median / mean / MAD / min; benches print both a
+//! human table and machine-readable JSON lines so EXPERIMENTS.md numbers
+//! are reproducible by re-running the bench binaries.
+
+pub mod harness;
+
+pub use harness::{Bench, Sample};

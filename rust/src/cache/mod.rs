@@ -1,0 +1,362 @@
+//! Kernel-row providers: full precompute vs bounded row caches.
+//!
+//! SMO touches two kernel rows per iteration; at paper scale (m <= 5000)
+//! the full Gram matrix fits in memory, but the cache abstraction is what
+//! makes the solver scale past that — and it reproduces the caching
+//! ablation the paper's related work motivates (LFU caching for SVM
+//! training, reference [37] Li/Wen/He). Three providers:
+//!
+//! * [`PrecomputedGram`] — O(m^2) memory, zero misses (the default for
+//!   Table-1 scale);
+//! * [`CachedRows`] with [`Policy::Lru`] — recency eviction;
+//! * [`CachedRows`] with [`Policy::Lfu`] — frequency eviction [37].
+//!
+//! `rust/benches/ablation_cache.rs` sweeps policy x capacity (experiment
+//! A2 in DESIGN.md).
+
+use std::collections::HashMap;
+
+use crate::kernel::Kernel;
+use crate::linalg::Matrix;
+
+/// Cache observability counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Source of kernel rows for the solvers.
+pub trait KernelProvider {
+    /// Number of training points.
+    fn m(&self) -> usize;
+    /// k(x_i, x_i).
+    fn diag(&self, i: usize) -> f64;
+    /// Run `f` with row i (k(x_i, x_j) for all j).
+    fn with_row<R>(&mut self, i: usize, f: &mut dyn FnMut(&[f64]) -> R) -> R;
+    /// Run `f` with rows a and b simultaneously.
+    fn with_two_rows<R>(
+        &mut self,
+        a: usize,
+        b: usize,
+        f: &mut dyn FnMut(&[f64], &[f64]) -> R,
+    ) -> R;
+    /// Cache counters (zero for precomputed).
+    fn stats(&self) -> CacheStats;
+}
+
+// ---------------------------------------------------------------- precomputed
+
+/// Fully materialized Gram matrix.
+pub struct PrecomputedGram {
+    k: Matrix,
+}
+
+impl PrecomputedGram {
+    /// Build with the native engine (parallel).
+    pub fn build(x: &Matrix, kernel: Kernel, threads: usize) -> Self {
+        PrecomputedGram { k: kernel.gram(x, threads) }
+    }
+
+    /// Wrap an externally computed Gram matrix (e.g. from the PJRT
+    /// engine) — must be square.
+    pub fn from_matrix(k: Matrix) -> Self {
+        assert_eq!(k.rows(), k.cols(), "Gram matrix must be square");
+        PrecomputedGram { k }
+    }
+
+    pub fn matrix(&self) -> &Matrix {
+        &self.k
+    }
+}
+
+impl KernelProvider for PrecomputedGram {
+    fn m(&self) -> usize {
+        self.k.rows()
+    }
+    fn diag(&self, i: usize) -> f64 {
+        self.k.get(i, i)
+    }
+    fn with_row<R>(&mut self, i: usize, f: &mut dyn FnMut(&[f64]) -> R) -> R {
+        f(self.k.row(i))
+    }
+    fn with_two_rows<R>(
+        &mut self,
+        a: usize,
+        b: usize,
+        f: &mut dyn FnMut(&[f64], &[f64]) -> R,
+    ) -> R {
+        f(self.k.row(a), self.k.row(b))
+    }
+    fn stats(&self) -> CacheStats {
+        CacheStats::default()
+    }
+}
+
+// --------------------------------------------------------------- cached rows
+
+/// Eviction policy for [`CachedRows`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// evict least-recently-used row
+    Lru,
+    /// evict least-frequently-used row (ties by recency) — ref [37]
+    Lfu,
+}
+
+struct Slot {
+    row: Vec<f64>,
+    key: usize,
+    /// last-touch tick (LRU) / tie-break (LFU)
+    touched: u64,
+    /// access count since admission (LFU)
+    freq: u64,
+}
+
+/// Bounded cache of kernel rows, computing misses on demand.
+pub struct CachedRows {
+    x: Matrix,
+    kernel: Kernel,
+    capacity: usize,
+    policy: Policy,
+    slots: Vec<Slot>,
+    /// key -> slot index
+    index: HashMap<usize, usize>,
+    diag: Vec<f64>,
+    tick: u64,
+    stats: CacheStats,
+}
+
+impl CachedRows {
+    /// `capacity` = max resident rows (>= 2 — SMO needs a pair).
+    pub fn new(x: &Matrix, kernel: Kernel, capacity: usize) -> Self {
+        Self::with_policy(x, kernel, capacity, Policy::Lru)
+    }
+
+    pub fn with_policy(
+        x: &Matrix,
+        kernel: Kernel,
+        capacity: usize,
+        policy: Policy,
+    ) -> Self {
+        assert!(capacity >= 2, "SMO needs at least two resident rows");
+        let diag = (0..x.rows()).map(|i| kernel.eval(x.row(i), x.row(i))).collect();
+        CachedRows {
+            x: x.clone(),
+            kernel,
+            capacity,
+            policy,
+            slots: Vec::new(),
+            index: HashMap::new(),
+            diag,
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    fn compute_row(&self, i: usize, out: &mut Vec<f64>) {
+        out.resize(self.x.rows(), 0.0);
+        self.kernel.row(&self.x, self.x.row(i), out);
+    }
+
+    /// Ensure row `key` is resident, optionally protecting one slot from
+    /// eviction (the other member of an SMO pair). Returns slot index.
+    fn ensure(&mut self, key: usize, protect: Option<usize>) -> usize {
+        self.tick += 1;
+        if let Some(&s) = self.index.get(&key) {
+            self.stats.hits += 1;
+            self.slots[s].touched = self.tick;
+            self.slots[s].freq += 1;
+            return s;
+        }
+        self.stats.misses += 1;
+        if self.slots.len() < self.capacity {
+            let mut row = Vec::new();
+            self.compute_row(key, &mut row);
+            self.slots.push(Slot { row, key, touched: self.tick, freq: 1 });
+            let s = self.slots.len() - 1;
+            self.index.insert(key, s);
+            return s;
+        }
+        // evict
+        let victim = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(s, _)| Some(*s) != protect)
+            .min_by_key(|(_, slot)| match self.policy {
+                Policy::Lru => (slot.touched, 0),
+                Policy::Lfu => (slot.freq, slot.touched),
+            })
+            .map(|(s, _)| s)
+            .expect("capacity >= 2 guarantees an evictable slot");
+        self.stats.evictions += 1;
+        let old_key = self.slots[victim].key;
+        self.index.remove(&old_key);
+        let mut row = std::mem::take(&mut self.slots[victim].row);
+        self.compute_row(key, &mut row);
+        self.slots[victim] =
+            Slot { row, key, touched: self.tick, freq: 1 };
+        self.index.insert(key, victim);
+        victim
+    }
+}
+
+impl KernelProvider for CachedRows {
+    fn m(&self) -> usize {
+        self.x.rows()
+    }
+    fn diag(&self, i: usize) -> f64 {
+        self.diag[i]
+    }
+    fn with_row<R>(&mut self, i: usize, f: &mut dyn FnMut(&[f64]) -> R) -> R {
+        let s = self.ensure(i, None);
+        f(&self.slots[s].row)
+    }
+    fn with_two_rows<R>(
+        &mut self,
+        a: usize,
+        b: usize,
+        f: &mut dyn FnMut(&[f64], &[f64]) -> R,
+    ) -> R {
+        let sa = self.ensure(a, None);
+        let sb = self.ensure(b, Some(sa));
+        debug_assert_ne!(sa, sb);
+        if sa < sb {
+            let (lo, hi) = self.slots.split_at(sb);
+            f(&lo[sa].row, &hi[0].row)
+        } else {
+            let (lo, hi) = self.slots.split_at(sa);
+            f(&hi[0].row, &lo[sb].row)
+        }
+    }
+    fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn data(n: usize) -> Matrix {
+        let mut rng = Rng::new(99);
+        Matrix::from_vec(n, 3, (0..n * 3).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn precomputed_matches_kernel() {
+        let x = data(20);
+        let k = Kernel::Rbf { g: 0.4 };
+        let mut p = PrecomputedGram::build(&x, k, 2);
+        assert_eq!(p.m(), 20);
+        p.with_row(3, &mut |row| {
+            for j in 0..20 {
+                assert!((row[j] - k.eval(x.row(3), x.row(j))).abs() < 1e-12);
+            }
+        });
+        assert!((p.diag(5) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_rows_match_precomputed() {
+        let x = data(30);
+        let k = Kernel::Linear;
+        let mut c = CachedRows::new(&x, k, 4);
+        let mut p = PrecomputedGram::build(&x, k, 1);
+        for i in [0, 5, 10, 5, 29, 0, 17] {
+            let want: Vec<f64> = p.with_row(i, &mut |r| r.to_vec());
+            c.with_row(i, &mut |got| {
+                assert_eq!(got, &want[..], "row {i}");
+            });
+        }
+    }
+
+    #[test]
+    fn two_rows_simultaneously() {
+        let x = data(10);
+        let k = Kernel::Rbf { g: 1.0 };
+        let mut c = CachedRows::new(&x, k, 2);
+        c.with_two_rows(2, 7, &mut |ra, rb| {
+            assert!((ra[7] - rb[2]).abs() < 1e-12); // symmetry
+            assert!((ra[2] - 1.0).abs() < 1e-12);
+            assert!((rb[7] - 1.0).abs() < 1e-12);
+        });
+        // same pair again: both should hit
+        let before = c.stats();
+        c.with_two_rows(2, 7, &mut |_, _| ());
+        let after = c.stats();
+        assert_eq!(after.hits - before.hits, 2);
+        assert_eq!(after.misses, before.misses);
+    }
+
+    #[test]
+    fn pair_protection_under_min_capacity() {
+        // capacity 2, alternating pairs: partner must never be evicted
+        // mid-call.
+        let x = data(6);
+        let mut c = CachedRows::new(&x, Kernel::Linear, 2);
+        for (a, b) in [(0, 1), (2, 3), (4, 5), (0, 3)] {
+            c.with_two_rows(a, b, &mut |ra, rb| {
+                assert_eq!(ra.len(), 6);
+                assert_eq!(rb.len(), 6);
+            });
+        }
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let x = data(8);
+        let mut c = CachedRows::with_policy(&x, Kernel::Linear, 2, Policy::Lru);
+        c.with_row(0, &mut |_| ());
+        c.with_row(1, &mut |_| ());
+        c.with_row(2, &mut |_| ()); // evicts 0
+        assert_eq!(c.stats().evictions, 1);
+        c.with_row(1, &mut |_| ()); // still resident -> hit
+        assert_eq!(c.stats().hits, 1);
+        c.with_row(0, &mut |_| ()); // miss again
+        assert_eq!(c.stats().misses, 4);
+    }
+
+    #[test]
+    fn lfu_keeps_hot_rows() {
+        let x = data(8);
+        let mut c = CachedRows::with_policy(&x, Kernel::Linear, 2, Policy::Lfu);
+        for _ in 0..5 {
+            c.with_row(0, &mut |_| ()); // freq(0) = 5
+        }
+        c.with_row(1, &mut |_| ()); // freq(1) = 1
+        c.with_row(2, &mut |_| ()); // evicts 1 (lower freq), keeps 0
+        c.with_row(0, &mut |_| ());
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        // the last access of 0 must be a hit (it was never evicted)
+        assert!(s.hits >= 5);
+    }
+
+    #[test]
+    fn hit_rate_math() {
+        let s = CacheStats { hits: 3, misses: 1, evictions: 0 };
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn capacity_one_rejected() {
+        CachedRows::new(&data(4), Kernel::Linear, 1);
+    }
+}

@@ -1,0 +1,234 @@
+//! Typed run configuration: TOML-subset file + CLI overrides.
+//!
+//! A [`RunConfig`] gathers everything a `slabsvm train` / `serve` /
+//! `bench` invocation needs. Files use a flat TOML subset —
+//! `key = value` lines, `#` comments, optional `[section]` headers that
+//! prefix keys with `section.` — which covers real config needs without
+//! a full TOML parser in the vendored crate set.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::kernel::Kernel;
+use crate::solver::smo::SmoParams;
+use crate::solver::Heuristic;
+
+/// Flat key-value config store with typed getters.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigMap {
+    vals: BTreeMap<String, String>,
+}
+
+impl ConfigMap {
+    /// Parse the TOML subset from text.
+    pub fn parse(text: &str) -> Result<ConfigMap> {
+        let mut vals = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or_else(|| {
+                    Error::config(format!("line {}: bad section", lineno + 1))
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let v = v.trim().trim_matches('"').to_string();
+            vals.insert(key, v);
+        }
+        Ok(ConfigMap { vals })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<ConfigMap> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Override/insert a key.
+    pub fn set(&mut self, key: &str, val: impl Into<String>) {
+        self.vals.insert(key.to_string(), val.into());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.vals.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("{key}: not a number: {v}"))),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("{key}: not an integer: {v}"))),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true" | "1" | "yes") => Ok(true),
+            Some("false" | "0" | "no") => Ok(false),
+            Some(v) => Err(Error::config(format!("{key}: not a bool: {v}"))),
+        }
+    }
+}
+
+/// Fully resolved run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub smo: SmoParams,
+    pub kernel: Kernel,
+    /// artifacts directory for the PJRT engine
+    pub artifacts_dir: String,
+    /// "native" | "pjrt"
+    pub engine: String,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            smo: SmoParams::default(),
+            kernel: Kernel::Linear,
+            artifacts_dir: "artifacts".into(),
+            engine: "native".into(),
+            seed: 42,
+            threads: crate::util::threadpool::default_threads(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from a config map (each key optional, defaults otherwise).
+    pub fn from_map(m: &ConfigMap) -> Result<RunConfig> {
+        let mut c = RunConfig::default();
+        c.smo.nu1 = m.get_f64("smo.nu1", c.smo.nu1)?;
+        c.smo.nu2 = m.get_f64("smo.nu2", c.smo.nu2)?;
+        c.smo.eps = m.get_f64("smo.eps", c.smo.eps)?;
+        c.smo.tol = m.get_f64("smo.tol", c.smo.tol)?;
+        c.smo.max_iter = m.get_usize("smo.max_iter", c.smo.max_iter)?;
+        c.smo.heuristic = parse_heuristic(
+            m.get("smo.heuristic").unwrap_or("paper-max-fbar"),
+        )?;
+        c.kernel = parse_kernel(
+            m.get("kernel.family").unwrap_or("linear"),
+            m.get_f64("kernel.g", 1.0)?,
+            m.get_f64("kernel.c", 0.0)?,
+            m.get_f64("kernel.degree", 3.0)?,
+        )?;
+        if let Some(dir) = m.get("runtime.artifacts") {
+            c.artifacts_dir = dir.to_string();
+        }
+        if let Some(engine) = m.get("runtime.engine") {
+            if !matches!(engine, "native" | "pjrt") {
+                return Err(Error::config(format!("unknown engine {engine}")));
+            }
+            c.engine = engine.to_string();
+        }
+        c.seed = m.get_usize("seed", c.seed as usize)? as u64;
+        c.threads = m.get_usize("threads", c.threads)?;
+        Ok(c)
+    }
+}
+
+/// Parse a heuristic name (CLI + config).
+pub fn parse_heuristic(s: &str) -> Result<Heuristic> {
+    match s {
+        "paper-max-fbar" | "paper" => Ok(Heuristic::PaperMaxFbar),
+        "max-violation" => Ok(Heuristic::MaxViolation),
+        "random-violator" | "random" => Ok(Heuristic::RandomViolator),
+        "second-order" | "wss2" => Ok(Heuristic::SecondOrder),
+        other => Err(Error::config(format!("unknown heuristic {other}"))),
+    }
+}
+
+/// Parse a kernel spec (CLI + config).
+pub fn parse_kernel(family: &str, g: f64, c: f64, degree: f64) -> Result<Kernel> {
+    match family {
+        "linear" => Ok(Kernel::Linear),
+        "rbf" => Ok(Kernel::Rbf { g }),
+        "poly" => Ok(Kernel::Poly { g, c, degree }),
+        "sigmoid" => Ok(Kernel::Sigmoid { g, c }),
+        other => Err(Error::config(format!("unknown kernel {other}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let m = ConfigMap::parse(
+            "# top comment\nseed = 7\n[smo]\nnu1 = 0.25 # inline\n\n[kernel]\nfamily = \"rbf\"\ng = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(m.get("seed"), Some("7"));
+        assert_eq!(m.get("smo.nu1"), Some("0.25"));
+        assert_eq!(m.get("kernel.family"), Some("rbf"));
+    }
+
+    #[test]
+    fn run_config_from_map() {
+        let m = ConfigMap::parse(
+            "[smo]\nnu1 = 0.2\nnu2 = 0.08\neps = 0.5\n[kernel]\nfamily = rbf\ng = 0.7\n[runtime]\nengine = pjrt\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_map(&m).unwrap();
+        assert_eq!(c.smo.nu1, 0.2);
+        assert_eq!(c.smo.eps, 0.5);
+        assert_eq!(c.kernel, Kernel::Rbf { g: 0.7 });
+        assert_eq!(c.engine, "pjrt");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = RunConfig::from_map(&ConfigMap::default()).unwrap();
+        assert_eq!(c.smo.nu1, 0.5);
+        assert_eq!(c.kernel, Kernel::Linear);
+        assert_eq!(c.engine, "native");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ConfigMap::parse("novalue\n").is_err());
+        assert!(ConfigMap::parse("[unclosed\n").is_err());
+        let m = ConfigMap::parse("[runtime]\nengine = gpu\n").unwrap();
+        assert!(RunConfig::from_map(&m).is_err());
+        let m = ConfigMap::parse("[smo]\nnu1 = abc\n").unwrap();
+        assert!(RunConfig::from_map(&m).is_err());
+    }
+
+    #[test]
+    fn heuristic_and_kernel_parsers() {
+        assert_eq!(parse_heuristic("paper").unwrap(), Heuristic::PaperMaxFbar);
+        assert_eq!(
+            parse_heuristic("max-violation").unwrap(),
+            Heuristic::MaxViolation
+        );
+        assert!(parse_heuristic("nope").is_err());
+        assert_eq!(parse_kernel("linear", 0.0, 0.0, 0.0).unwrap(), Kernel::Linear);
+        assert!(parse_kernel("quantum", 0.0, 0.0, 0.0).is_err());
+    }
+}

@@ -1,0 +1,452 @@
+//! Dynamic batcher: queue scoring requests, execute in grouped batches.
+//!
+//! The serving-policy core (vLLM-router shaped, scaled to this model
+//! class): a dispatcher thread drains the request queue, groups by model
+//! name, and flushes a group when it reaches `max_batch` queries or the
+//! oldest request has waited `max_wait_us`. Flushed batches go to a pool
+//! of scoring workers that stack the queries into one matrix and run a
+//! single [`Engine::predict`] — amortizing PJRT dispatch overhead across
+//! requests, which is exactly what the artifact's batched decision graph
+//! is shaped for.
+//!
+//! Backpressure: the submission queue is bounded (`queue_cap`); when
+//! full, `submit` sheds load by failing fast instead of queueing
+//! unboundedly (callers see `Error::Coordinator`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::registry::ModelRegistry;
+use super::stats::ServiceStats;
+use crate::error::Error;
+use crate::linalg::Matrix;
+use crate::runtime::Engine;
+use crate::Result;
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// flush a model group at this many queries
+    pub max_batch: usize,
+    /// flush when the oldest queued request is this old
+    pub max_wait_us: u64,
+    /// bounded submission queue (backpressure)
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 256, max_wait_us: 500, queue_cap: 8192 }
+    }
+}
+
+/// Scoring result for one request (in submission order of its queries).
+#[derive(Clone, Debug)]
+pub struct ScoreResponse {
+    pub scores: Vec<f64>,
+    pub labels: Vec<i8>,
+    /// how long the request waited + executed, end to end
+    pub latency: Duration,
+}
+
+struct Request {
+    model: String,
+    queries: Vec<Vec<f64>>,
+    respond: Sender<Result<ScoreResponse>>,
+    enqueued: Instant,
+}
+
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+/// Handle to the running batcher.
+pub struct DynamicBatcher {
+    tx: Sender<Msg>,
+    inflight: Arc<AtomicUsize>,
+    cfg: BatcherConfig,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DynamicBatcher {
+    /// Spawn dispatcher + `workers` scoring threads.
+    pub fn start(
+        engine: Engine,
+        registry: Arc<ModelRegistry>,
+        stats: Arc<ServiceStats>,
+        cfg: BatcherConfig,
+        workers: usize,
+    ) -> DynamicBatcher {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let inflight2 = Arc::clone(&inflight);
+        let dispatcher = std::thread::Builder::new()
+            .name("slabsvm-dispatch".into())
+            .spawn(move || {
+                dispatch_loop(rx, engine, registry, stats, cfg, workers, inflight2)
+            })
+            .expect("spawn dispatcher");
+        DynamicBatcher { tx, inflight, cfg, dispatcher: Some(dispatcher) }
+    }
+
+    /// Enqueue a scoring request (non-blocking; sheds load when full).
+    pub fn submit(
+        &self,
+        model: &str,
+        queries: Vec<Vec<f64>>,
+    ) -> Receiver<Result<ScoreResponse>> {
+        let (rtx, rrx) = mpsc::channel();
+        if self.inflight.load(Ordering::Relaxed) >= self.cfg.queue_cap {
+            let _ = rtx.send(Err(Error::Coordinator(
+                "scoring queue full (backpressure)".into(),
+            )));
+            return rrx;
+        }
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            model: model.to_string(),
+            queries,
+            respond: rtx,
+            enqueued: Instant::now(),
+        };
+        if self.tx.send(Msg::Req(req)).is_err() {
+            // dispatcher gone; receiver will see a disconnect
+            self.inflight.fetch_sub(1, Ordering::Relaxed);
+        }
+        rrx
+    }
+
+    /// Drain and stop all threads.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Dispatcher: accumulate per-model groups, flush on size/deadline.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_loop(
+    rx: Receiver<Msg>,
+    engine: Engine,
+    registry: Arc<ModelRegistry>,
+    stats: Arc<ServiceStats>,
+    cfg: BatcherConfig,
+    workers: usize,
+    inflight: Arc<AtomicUsize>,
+) {
+    // worker pool fed by a shared work channel
+    let (wtx, wrx) = mpsc::channel::<Vec<Request>>();
+    let wrx = Arc::new(Mutex::new(wrx));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for w in 0..workers.max(1) {
+        let wrx = Arc::clone(&wrx);
+        let engine = engine.clone();
+        let registry = Arc::clone(&registry);
+        let stats = Arc::clone(&stats);
+        let stop = Arc::clone(&stop);
+        let inflight = Arc::clone(&inflight);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("slabsvm-score-{w}"))
+                .spawn(move || loop {
+                    let batch = {
+                        let guard = wrx.lock().unwrap();
+                        match guard.recv_timeout(Duration::from_millis(50)) {
+                            Ok(b) => b,
+                            Err(_) => {
+                                if stop.load(Ordering::Relaxed) {
+                                    return;
+                                }
+                                continue;
+                            }
+                        }
+                    };
+                    let n = batch.len();
+                    execute_batch(&engine, &registry, &stats, batch);
+                    inflight.fetch_sub(n, Ordering::Relaxed);
+                })
+                .expect("spawn worker"),
+        );
+    }
+
+    // Per-model pending groups. The flush deadline runs from when the
+    // group was OPENED by the dispatcher, not from request submission —
+    // under a burst the submission timestamps are already stale by the
+    // time requests are dequeued, and measuring from them collapses every
+    // flush to a singleton (no batching at exactly the moment batching
+    // pays the most).
+    struct Group {
+        reqs: Vec<Request>,
+        size: usize,
+        opened: Instant,
+    }
+    let mut pending: HashMap<String, Group> = HashMap::new();
+    let mut pending_count = 0usize;
+    let mut shutting_down = false;
+
+    loop {
+        let wait = if pending_count == 0 {
+            Duration::from_millis(100)
+        } else {
+            Duration::from_micros(cfg.max_wait_us / 2 + 1)
+        };
+        // block for the first message, then DRAIN the backlog so a burst
+        // is coalesced into full batches instead of timing out piecemeal
+        let mut incoming = Vec::new();
+        match rx.recv_timeout(wait) {
+            Ok(msg) => incoming.push(msg),
+            Err(mpsc::RecvTimeoutError::Disconnected) => shutting_down = true,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+        }
+        while incoming.len() < 4 * cfg.max_batch {
+            match rx.try_recv() {
+                Ok(msg) => incoming.push(msg),
+                Err(_) => break,
+            }
+        }
+
+        for msg in incoming {
+            let req = match msg {
+                Msg::Req(req) => req,
+                Msg::Shutdown => {
+                    shutting_down = true;
+                    continue;
+                }
+            };
+            let key = req.model.clone();
+            let group = pending.entry(key.clone()).or_insert_with(|| Group {
+                reqs: Vec::new(),
+                size: 0,
+                opened: Instant::now(),
+            });
+            group.size += req.queries.len();
+            group.reqs.push(req);
+            pending_count += 1;
+            if group.size >= cfg.max_batch {
+                if let Some(g) = pending.remove(&key) {
+                    pending_count -= g.reqs.len();
+                    let _ = wtx.send(g.reqs);
+                }
+            }
+        }
+
+        // deadline-based flush
+        let now = Instant::now();
+        let keys: Vec<String> = pending
+            .iter()
+            .filter(|(_, g)| {
+                shutting_down
+                    || now.duration_since(g.opened).as_micros() as u64
+                        >= cfg.max_wait_us
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in keys {
+            if let Some(g) = pending.remove(&k) {
+                pending_count -= g.reqs.len();
+                let _ = wtx.send(g.reqs);
+            }
+        }
+
+        if shutting_down && pending_count == 0 {
+            break;
+        }
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    drop(wtx);
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+/// Run one model-grouped batch end-to-end and fan results back out.
+fn execute_batch(
+    engine: &Engine,
+    registry: &ModelRegistry,
+    stats: &ServiceStats,
+    batch: Vec<Request>,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    stats.requests.add(batch.len() as u64);
+    let name = batch[0].model.clone();
+    let Some(model) = registry.get(&name) else {
+        stats.errors.add(batch.len() as u64);
+        for req in batch {
+            let _ = req.respond.send(Err(Error::Coordinator(format!(
+                "unknown model '{name}'"
+            ))));
+        }
+        return;
+    };
+    // stack all queries into one matrix
+    let total: usize = batch.iter().map(|r| r.queries.len()).sum();
+    let d = model.x_sv.cols();
+    let mut stacked = Matrix::zeros(total, d);
+    let mut row = 0;
+    let mut bad_dim = false;
+    for req in &batch {
+        for q in &req.queries {
+            if q.len() != d {
+                bad_dim = true;
+                break;
+            }
+            stacked.row_mut(row).copy_from_slice(q);
+            row += 1;
+        }
+    }
+    if bad_dim {
+        stats.errors.add(batch.len() as u64);
+        for req in batch {
+            let _ = req.respond.send(Err(Error::Coordinator(format!(
+                "query dimension mismatch (model expects {d})"
+            ))));
+        }
+        return;
+    }
+
+    let t0 = Instant::now();
+    let result = engine.predict(&model, &stacked);
+    stats.batch_latency.record(t0.elapsed());
+    stats.batches.inc();
+
+    match result {
+        Ok((scores, labels)) => {
+            stats.scored.add(total as u64);
+            let mut off = 0;
+            for req in batch {
+                let n = req.queries.len();
+                let latency = req.enqueued.elapsed();
+                stats.request_latency.record(latency);
+                let _ = req.respond.send(Ok(ScoreResponse {
+                    scores: scores[off..off + n].to_vec(),
+                    labels: labels[off..off + n].to_vec(),
+                    latency,
+                }));
+                off += n;
+            }
+        }
+        Err(e) => {
+            stats.errors.add(batch.len() as u64);
+            let msg = e.to_string();
+            for req in batch {
+                let _ = req
+                    .respond
+                    .send(Err(Error::Coordinator(msg.clone())));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+    use crate::kernel::Kernel;
+    use crate::solver::smo::{train, SmoParams};
+
+    fn setup(cfg: BatcherConfig) -> (DynamicBatcher, Arc<ModelRegistry>, Arc<ServiceStats>) {
+        let registry = Arc::new(ModelRegistry::new());
+        let stats = Arc::new(ServiceStats::new());
+        let b = DynamicBatcher::start(
+            Engine::Native,
+            Arc::clone(&registry),
+            Arc::clone(&stats),
+            cfg,
+            2,
+        );
+        (b, registry, stats)
+    }
+
+    fn trained_model() -> crate::solver::ocssvm::SlabModel {
+        let ds = SlabConfig::default().generate(100, 91);
+        train(&ds.x, Kernel::Linear, &SmoParams::default()).unwrap()
+    }
+
+    #[test]
+    fn batches_multiple_requests_together() {
+        let (b, registry, stats) = setup(BatcherConfig {
+            max_batch: 64,
+            max_wait_us: 20_000, // long window so requests coalesce
+            queue_cap: 1024,
+        });
+        registry.insert("m", trained_model());
+        let eval = SlabConfig::default().generate_eval(32, 0, 92);
+        let rxs: Vec<_> = (0..32)
+            .map(|i| b.submit("m", vec![eval.x.row(i).to_vec()]))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        // 32 requests should have been served by far fewer batches
+        assert!(
+            stats.batches.get() <= 8,
+            "batches={} (batching not happening)",
+            stats.batches.get()
+        );
+        assert_eq!(stats.scored.get(), 32);
+        b.shutdown();
+    }
+
+    #[test]
+    fn deadline_flush_fires() {
+        let (b, registry, stats) = setup(BatcherConfig {
+            max_batch: 1_000_000, // size trigger unreachable
+            max_wait_us: 1_000,
+            queue_cap: 1024,
+        });
+        registry.insert("m", trained_model());
+        let rx = b.submit("m", vec![vec![20.0, 20.0]]);
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.labels.len(), 1);
+        assert_eq!(stats.batches.get(), 1);
+        b.shutdown();
+    }
+
+    #[test]
+    fn backpressure_sheds_load() {
+        let (b, registry, _stats) = setup(BatcherConfig {
+            max_batch: 1_000_000,
+            max_wait_us: 1_000_000, // never flush during the test
+            queue_cap: 4,
+        });
+        registry.insert("m", trained_model());
+        let mut rxs = Vec::new();
+        for _ in 0..20 {
+            rxs.push(b.submit("m", vec![vec![0.0, 0.0]]));
+        }
+        // beyond queue_cap submissions must fail fast
+        let failed = rxs
+            .iter()
+            .filter(|rx| {
+                matches!(rx.try_recv(), Ok(Err(Error::Coordinator(_))))
+            })
+            .count();
+        assert!(failed >= 16 - 4, "failed={failed}");
+        b.shutdown();
+    }
+
+    #[test]
+    fn multi_query_request_order_preserved() {
+        let (b, registry, _) = setup(BatcherConfig::default());
+        let model = trained_model();
+        registry.insert("m", model.clone());
+        let eval = SlabConfig::default().generate_eval(10, 10, 93);
+        let queries: Vec<Vec<f64>> =
+            (0..eval.len()).map(|i| eval.x.row(i).to_vec()).collect();
+        let resp = b.submit("m", queries).recv().unwrap().unwrap();
+        for i in 0..eval.len() {
+            assert_eq!(resp.labels[i], model.classify(eval.x.row(i)));
+        }
+        b.shutdown();
+    }
+}

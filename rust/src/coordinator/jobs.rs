@@ -1,0 +1,229 @@
+//! Asynchronous training-job queue.
+//!
+//! `submit` enqueues a [`TrainRequest`]; a dedicated trainer thread runs
+//! jobs FIFO (training is CPU-saturating, so one at a time keeps tail
+//! latency of the scoring path sane), registers the resulting model in
+//! the shared [`ModelRegistry`] and flips the job's [`JobStatus`].
+
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::registry::ModelRegistry;
+use super::stats::ServiceStats;
+use crate::data::Dataset;
+use crate::kernel::Kernel;
+use crate::solver::smo::{train_full, SmoParams};
+
+/// Opaque job handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+/// Lifecycle of a training job.
+#[derive(Clone, Debug)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done {
+        /// registry version the model was stored under
+        version: u64,
+        /// SMO iterations
+        iterations: usize,
+        /// training seconds
+        seconds: f64,
+        /// support vectors in the final model
+        n_sv: usize,
+    },
+    Failed {
+        error: String,
+    },
+}
+
+/// A training job.
+pub struct TrainRequest {
+    /// registry name for the resulting model
+    pub name: String,
+    pub dataset: Dataset,
+    pub kernel: Kernel,
+    pub params: SmoParams,
+}
+
+enum Msg {
+    Job(JobId, TrainRequest),
+    Shutdown,
+}
+
+/// Handle to the trainer thread.
+pub struct TrainQueue {
+    tx: Sender<Msg>,
+    state: Arc<(Mutex<HashMap<JobId, JobStatus>>, Condvar)>,
+    next_id: Mutex<u64>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TrainQueue {
+    pub fn start(registry: Arc<ModelRegistry>, stats: Arc<ServiceStats>) -> TrainQueue {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let state: Arc<(Mutex<HashMap<JobId, JobStatus>>, Condvar)> =
+            Arc::new((Mutex::new(HashMap::new()), Condvar::new()));
+        let state2 = Arc::clone(&state);
+        let worker = std::thread::Builder::new()
+            .name("slabsvm-trainer".into())
+            .spawn(move || {
+                while let Ok(msg) = rx.recv() {
+                    let (id, req) = match msg {
+                        Msg::Job(id, req) => (id, req),
+                        Msg::Shutdown => break,
+                    };
+                    set_status(&state2, id, JobStatus::Running);
+                    let result =
+                        train_full(&req.dataset.x, req.kernel, &req.params);
+                    let status = match result {
+                        Ok((model, out)) => {
+                            let n_sv = model.n_sv();
+                            let version = registry.insert(&req.name, model);
+                            stats.jobs_done.inc();
+                            JobStatus::Done {
+                                version,
+                                iterations: out.stats.iterations,
+                                seconds: out.stats.seconds,
+                                n_sv,
+                            }
+                        }
+                        Err(e) => {
+                            stats.jobs_failed.inc();
+                            JobStatus::Failed { error: e.to_string() }
+                        }
+                    };
+                    set_status(&state2, id, status);
+                }
+            })
+            .expect("spawn trainer");
+        TrainQueue { tx, state, next_id: Mutex::new(1), worker: Some(worker) }
+    }
+
+    /// Enqueue a job, returning its handle immediately.
+    pub fn submit(&self, req: TrainRequest) -> JobId {
+        let id = {
+            let mut n = self.next_id.lock().unwrap();
+            let id = JobId(*n);
+            *n += 1;
+            id
+        };
+        set_status(&self.state, id, JobStatus::Queued);
+        // if the worker is gone the status stays Queued; callers polling
+        // wait() would block, so record failure instead
+        if self.tx.send(Msg::Job(id, req)).is_err() {
+            set_status(
+                &self.state,
+                id,
+                JobStatus::Failed { error: "trainer stopped".into() },
+            );
+        }
+        id
+    }
+
+    /// Non-blocking status poll.
+    pub fn status(&self, id: JobId) -> Option<JobStatus> {
+        self.state.0.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Block until the job reaches a terminal state.
+    pub fn wait(&self, id: JobId) -> Option<JobStatus> {
+        let (lock, cvar) = &*self.state;
+        let mut map = lock.lock().unwrap();
+        loop {
+            match map.get(&id) {
+                None => return None,
+                Some(JobStatus::Done { .. }) | Some(JobStatus::Failed { .. }) => {
+                    return map.get(&id).cloned()
+                }
+                _ => {
+                    map = cvar.wait(map).unwrap();
+                }
+            }
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn set_status(
+    state: &Arc<(Mutex<HashMap<JobId, JobStatus>>, Condvar)>,
+    id: JobId,
+    status: JobStatus,
+) {
+    let (lock, cvar) = &**state;
+    lock.lock().unwrap().insert(id, status);
+    cvar.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+
+    fn queue() -> (TrainQueue, Arc<ModelRegistry>) {
+        let registry = Arc::new(ModelRegistry::new());
+        let stats = Arc::new(ServiceStats::new());
+        (TrainQueue::start(Arc::clone(&registry), stats), registry)
+    }
+
+    #[test]
+    fn job_lifecycle() {
+        let (q, registry) = queue();
+        let ds = SlabConfig::default().generate(80, 101);
+        let id = q.submit(TrainRequest {
+            name: "j1".into(),
+            dataset: ds,
+            kernel: Kernel::Linear,
+            params: SmoParams::default(),
+        });
+        let s = q.wait(id).unwrap();
+        match s {
+            JobStatus::Done { version, iterations, n_sv, .. } => {
+                assert_eq!(version, 1);
+                assert!(iterations > 0);
+                assert!(n_sv > 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(registry.get("j1").is_some());
+        q.shutdown();
+    }
+
+    #[test]
+    fn unknown_job_is_none() {
+        let (q, _) = queue();
+        assert!(q.status(JobId(999)).is_none());
+        assert!(q.wait(JobId(999)).is_none());
+        q.shutdown();
+    }
+
+    #[test]
+    fn jobs_run_fifo_and_version_bumps() {
+        let (q, registry) = queue();
+        let mut last = None;
+        for seed in 0..3 {
+            let ds = SlabConfig::default().generate(60, 200 + seed);
+            last = Some(q.submit(TrainRequest {
+                name: "same".into(),
+                dataset: ds,
+                kernel: Kernel::Linear,
+                params: SmoParams::default(),
+            }));
+        }
+        let s = q.wait(last.unwrap()).unwrap();
+        match s {
+            JobStatus::Done { version, .. } => assert_eq!(version, 3),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(registry.version("same"), Some(3));
+        q.shutdown();
+    }
+}

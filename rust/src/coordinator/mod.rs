@@ -1,0 +1,223 @@
+//! Serving + training coordinator (the L3 service around the solver).
+//!
+//! A [`Coordinator`] owns:
+//!
+//! * a [`registry::ModelRegistry`] of trained [`SlabModel`]s;
+//! * a [`batcher::DynamicBatcher`] — scoring requests are queued and
+//!   executed in model-grouped batches (size- or deadline-triggered),
+//!   amortizing PJRT dispatch over many queries, vLLM-router style;
+//! * a [`jobs::TrainQueue`] — asynchronous training jobs that register
+//!   their model on completion;
+//! * [`stats`] — latency histograms + counters for every stage.
+//!
+//! Everything is std-thread based (no async runtime in the vendored
+//! crate set); channels are `std::sync::mpsc`, shared state is behind
+//! `RwLock`/`Mutex`. The binary's `serve` subcommand drives this with a
+//! synthetic open-loop workload, and `rust/benches/serving.rs` measures
+//! batcher throughput/latency (experiment S1).
+//!
+//! [`SlabModel`]: crate::solver::ocssvm::SlabModel
+
+pub mod batcher;
+pub mod jobs;
+pub mod registry;
+pub mod stats;
+
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::error::Error;
+use crate::kernel::Kernel;
+use crate::runtime::Engine;
+use crate::solver::ocssvm::SlabModel;
+use crate::solver::smo::SmoParams;
+use crate::Result;
+
+pub use batcher::{BatcherConfig, DynamicBatcher, ScoreResponse};
+pub use jobs::{JobId, JobStatus, TrainQueue, TrainRequest};
+pub use registry::ModelRegistry;
+pub use stats::{Histogram, ServiceStats};
+
+/// The assembled service.
+pub struct Coordinator {
+    registry: Arc<ModelRegistry>,
+    batcher: DynamicBatcher,
+    jobs: TrainQueue,
+    stats: Arc<ServiceStats>,
+}
+
+impl Coordinator {
+    /// Start the service with `workers` scoring workers on `engine`.
+    pub fn start(engine: Engine, cfg: BatcherConfig, workers: usize) -> Coordinator {
+        let registry = Arc::new(ModelRegistry::new());
+        let stats = Arc::new(ServiceStats::new());
+        let batcher = DynamicBatcher::start(
+            engine.clone(),
+            Arc::clone(&registry),
+            Arc::clone(&stats),
+            cfg,
+            workers,
+        );
+        let jobs = TrainQueue::start(Arc::clone(&registry), Arc::clone(&stats));
+        Coordinator { registry, batcher, jobs, stats }
+    }
+
+    /// Register a pre-trained model under a name.
+    pub fn register(&self, name: &str, model: SlabModel) {
+        self.registry.insert(name, model);
+    }
+
+    /// Fetch a model by name.
+    pub fn model(&self, name: &str) -> Option<Arc<SlabModel>> {
+        self.registry.get(name)
+    }
+
+    /// Train synchronously and register.
+    pub fn train_blocking(
+        &self,
+        name: &str,
+        ds: &Dataset,
+        kernel: Kernel,
+        params: &SmoParams,
+    ) -> Result<Arc<SlabModel>> {
+        let model = crate::solver::smo::train(&ds.x, kernel, params)?;
+        self.registry.insert(name, model);
+        self.registry
+            .get(name)
+            .ok_or_else(|| Error::Coordinator("registration raced".into()))
+    }
+
+    /// Submit an asynchronous training job.
+    pub fn submit_train(&self, req: TrainRequest) -> JobId {
+        self.jobs.submit(req)
+    }
+
+    /// Poll a training job.
+    pub fn job_status(&self, id: JobId) -> Option<JobStatus> {
+        self.jobs.status(id)
+    }
+
+    /// Block until a job finishes (returns final status).
+    pub fn wait_job(&self, id: JobId) -> Option<JobStatus> {
+        self.jobs.wait(id)
+    }
+
+    /// Enqueue a scoring request; returns a receiver for the response.
+    pub fn score_async(
+        &self,
+        model: &str,
+        queries: Vec<Vec<f64>>,
+    ) -> std::sync::mpsc::Receiver<Result<ScoreResponse>> {
+        self.batcher.submit(model, queries)
+    }
+
+    /// Score synchronously (single request through the batcher).
+    pub fn score(&self, model: &str, queries: Vec<Vec<f64>>) -> Result<ScoreResponse> {
+        self.score_async(model, queries)
+            .recv()
+            .map_err(|_| Error::Coordinator("batcher shut down".into()))?
+    }
+
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    /// Graceful shutdown: drains queues, joins workers.
+    pub fn shutdown(self) {
+        self.batcher.shutdown();
+        self.jobs.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+
+    fn quick_coordinator() -> Coordinator {
+        Coordinator::start(
+            Engine::Native,
+            BatcherConfig { max_batch: 64, max_wait_us: 200, queue_cap: 1024 },
+            2,
+        )
+    }
+
+    #[test]
+    fn train_register_score_roundtrip() {
+        let c = quick_coordinator();
+        let ds = SlabConfig::default().generate(150, 81);
+        c.train_blocking("m1", &ds, Kernel::Linear, &SmoParams::default())
+            .unwrap();
+        let q = SlabConfig::default().generate_eval(10, 10, 82);
+        let queries: Vec<Vec<f64>> =
+            (0..q.len()).map(|i| q.x.row(i).to_vec()).collect();
+        let resp = c.score("m1", queries).unwrap();
+        assert_eq!(resp.labels.len(), 20);
+        assert_eq!(resp.scores.len(), 20);
+        // must match direct model predictions
+        let model = c.model("m1").unwrap();
+        let want = model.predict(&q.x);
+        assert_eq!(resp.labels, want);
+        c.shutdown();
+    }
+
+    #[test]
+    fn scoring_unknown_model_errors() {
+        let c = quick_coordinator();
+        let err = c.score("nope", vec![vec![0.0, 0.0]]);
+        assert!(err.is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn async_train_job_completes() {
+        let c = quick_coordinator();
+        let ds = SlabConfig::default().generate(100, 83);
+        let id = c.submit_train(TrainRequest {
+            name: "async1".into(),
+            dataset: ds,
+            kernel: Kernel::Linear,
+            params: SmoParams::default(),
+        });
+        let status = c.wait_job(id).unwrap();
+        assert!(matches!(status, JobStatus::Done { .. }), "{status:?}");
+        assert!(c.model("async1").is_some());
+        c.shutdown();
+    }
+
+    #[test]
+    fn failed_job_reports_error() {
+        let c = quick_coordinator();
+        let ds = SlabConfig::default().generate(50, 84);
+        let id = c.submit_train(TrainRequest {
+            name: "bad".into(),
+            dataset: ds,
+            kernel: Kernel::Linear,
+            params: SmoParams { nu1: -1.0, ..Default::default() },
+        });
+        let status = c.wait_job(id).unwrap();
+        assert!(matches!(status, JobStatus::Failed { .. }), "{status:?}");
+        assert!(c.model("bad").is_none());
+        c.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_scoring_requests() {
+        let c = quick_coordinator();
+        let ds = SlabConfig::default().generate(120, 85);
+        c.train_blocking("m", &ds, Kernel::Linear, &SmoParams::default())
+            .unwrap();
+        let eval = SlabConfig::default().generate_eval(100, 100, 86);
+        let receivers: Vec<_> = (0..eval.len())
+            .map(|i| c.score_async("m", vec![eval.x.row(i).to_vec()]))
+            .collect();
+        let model = c.model("m").unwrap();
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.labels.len(), 1);
+            assert_eq!(resp.labels[0], model.classify(eval.x.row(i)));
+        }
+        assert!(c.stats().scored.get() >= 200);
+        c.shutdown();
+    }
+}

@@ -1,0 +1,120 @@
+//! Model registry: named, versioned storage of trained models.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::solver::ocssvm::SlabModel;
+
+/// A registered model + metadata.
+#[derive(Clone)]
+pub struct Entry {
+    pub model: Arc<SlabModel>,
+    /// monotonically increasing per-name version
+    pub version: u64,
+}
+
+/// Thread-safe name → model map.
+#[derive(Default)]
+pub struct ModelRegistry {
+    inner: RwLock<HashMap<String, Entry>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert or replace; returns the new version.
+    pub fn insert(&self, name: &str, model: SlabModel) -> u64 {
+        let mut map = self.inner.write().unwrap();
+        let version = map.get(name).map_or(1, |e| e.version + 1);
+        map.insert(
+            name.to_string(),
+            Entry { model: Arc::new(model), version },
+        );
+        version
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<SlabModel>> {
+        self.inner.read().unwrap().get(name).map(|e| Arc::clone(&e.model))
+    }
+
+    pub fn version(&self, name: &str) -> Option<u64> {
+        self.inner.read().unwrap().get(name).map(|e| e.version)
+    }
+
+    pub fn remove(&self, name: &str) -> bool {
+        self.inner.write().unwrap().remove(name).is_some()
+    }
+
+    /// Sorted model names.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.inner.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Kernel;
+    use crate::linalg::Matrix;
+
+    fn dummy() -> SlabModel {
+        SlabModel {
+            x_sv: Matrix::from_rows(&[&[1.0]]),
+            gamma: vec![1.0],
+            rho1: 0.0,
+            rho2: 1.0,
+            kernel: Kernel::Linear,
+        }
+    }
+
+    #[test]
+    fn insert_get_versioning() {
+        let r = ModelRegistry::new();
+        assert!(r.get("a").is_none());
+        assert_eq!(r.insert("a", dummy()), 1);
+        assert_eq!(r.insert("a", dummy()), 2);
+        assert_eq!(r.version("a"), Some(2));
+        assert!(r.get("a").is_some());
+        assert_eq!(r.names(), vec!["a"]);
+    }
+
+    #[test]
+    fn remove_works() {
+        let r = ModelRegistry::new();
+        r.insert("x", dummy());
+        assert!(r.remove("x"));
+        assert!(!r.remove("x"));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn concurrent_access() {
+        let r = Arc::new(ModelRegistry::new());
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let r = Arc::clone(&r);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    r.insert(&format!("m{}", (t * 50 + i) % 10), dummy());
+                    let _ = r.get(&format!("m{}", i % 10));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.len(), 10);
+    }
+}

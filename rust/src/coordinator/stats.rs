@@ -1,0 +1,201 @@
+//! Service observability: counters + latency histograms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counter.
+#[derive(Default, Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed latency histogram (microseconds, powers of two up to
+/// ~67s). Lock-free recording; quantiles are approximate (bucket upper
+/// bounds), which is plenty for service dashboards and the S1 bench.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+const NBUCKETS: usize = 27; // 2^26 us ≈ 67 s
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record a latency in microseconds.
+    pub fn record_us(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(NBUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile: upper bound of the bucket containing it.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << NBUCKETS
+    }
+}
+
+/// All service-level metrics.
+pub struct ServiceStats {
+    /// scoring requests accepted
+    pub requests: Counter,
+    /// individual query points scored
+    pub scored: Counter,
+    /// batches executed
+    pub batches: Counter,
+    /// scoring errors (unknown model etc.)
+    pub errors: Counter,
+    /// training jobs finished successfully
+    pub jobs_done: Counter,
+    /// training jobs failed
+    pub jobs_failed: Counter,
+    /// end-to-end request latency
+    pub request_latency: Histogram,
+    /// per-batch execution latency
+    pub batch_latency: Histogram,
+}
+
+impl Default for ServiceStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServiceStats {
+    pub fn new() -> Self {
+        ServiceStats {
+            requests: Counter::default(),
+            scored: Counter::default(),
+            batches: Counter::default(),
+            errors: Counter::default(),
+            jobs_done: Counter::default(),
+            jobs_failed: Counter::default(),
+            request_latency: Histogram::new(),
+            batch_latency: Histogram::new(),
+        }
+    }
+
+    /// Average queries per executed batch (batching efficiency).
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.get();
+        if b == 0 {
+            0.0
+        } else {
+            self.scored.get() as f64 / b as f64
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} scored={} batches={} (mean batch {:.1}) errors={} \
+             p50={}us p99={}us mean={:.0}us",
+            self.requests.get(),
+            self.scored.get(),
+            self.batches.get(),
+            self.mean_batch_size(),
+            self.errors.get(),
+            self.request_latency.quantile_us(0.5),
+            self.request_latency.quantile_us(0.99),
+            self.request_latency.mean_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let h = Histogram::new();
+        for us in [10u64, 20, 40, 80, 10_000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 5);
+        // p50 falls in the bucket holding 40us -> upper bound 64
+        let p50 = h.quantile_us(0.5);
+        assert!(p50 >= 32 && p50 <= 128, "p50={p50}");
+        // p99 must land at the 10ms outlier's bucket
+        let p99 = h.quantile_us(0.99);
+        assert!(p99 >= 8192, "p99={p99}");
+        assert!((h.mean_us() - 2030.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn mean_batch_size() {
+        let s = ServiceStats::new();
+        s.scored.add(100);
+        s.batches.add(4);
+        assert!((s.mean_batch_size() - 25.0).abs() < 1e-12);
+        assert!(!s.summary().is_empty());
+    }
+}

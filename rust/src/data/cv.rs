@@ -1,0 +1,177 @@
+//! Model selection: k-fold cross-validation + grid search for the
+//! one-class setting.
+//!
+//! One-class CV differs from supervised CV: training folds contain only
+//! target-class data; the held-out fold provides the positive test half
+//! and the caller supplies negatives (synthetic anomalies or a labeled
+//! pool) for the metric. [`grid_search`] sweeps (ν₁, ν₂, ε) × kernel
+//! candidates and ranks by mean held-out MCC.
+
+use crate::data::Dataset;
+use crate::kernel::Kernel;
+use crate::metrics::Confusion;
+use crate::solver::smo::{train_full, SmoParams};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Deterministic k-fold index split.
+pub fn kfold_indices(n: usize, k: usize, seed: u64) -> Vec<Vec<usize>> {
+    assert!(k >= 2 && k <= n, "need 2 <= k <= n");
+    let mut idx: Vec<usize> = (0..n).collect();
+    Rng::new(seed).shuffle(&mut idx);
+    let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (i, &v) in idx.iter().enumerate() {
+        folds[i % k].push(v);
+    }
+    folds
+}
+
+/// Result of evaluating one parameter point.
+#[derive(Clone, Debug)]
+pub struct CvResult {
+    pub params: SmoParams,
+    pub kernel: Kernel,
+    /// per-fold MCC on held-out positives + provided negatives
+    pub fold_mcc: Vec<f64>,
+    pub mean_mcc: f64,
+    pub mean_train_seconds: f64,
+}
+
+/// k-fold CV of one (params, kernel) point. `negatives` supplies the
+/// anomaly side of every fold's evaluation.
+pub fn cross_validate(
+    train: &Dataset,
+    negatives: &Dataset,
+    kernel: Kernel,
+    params: &SmoParams,
+    k: usize,
+    seed: u64,
+) -> Result<CvResult> {
+    assert_eq!(train.dim(), negatives.dim());
+    let folds = kfold_indices(train.len(), k, seed);
+    let mut fold_mcc = Vec::with_capacity(k);
+    let mut secs = 0.0;
+    for held in 0..k {
+        let train_idx: Vec<usize> = folds
+            .iter()
+            .enumerate()
+            .filter(|(f, _)| *f != held)
+            .flat_map(|(_, v)| v.iter().copied())
+            .collect();
+        let tr = train.select(&train_idx);
+        let (model, out) = train_full(&tr.x, kernel, params)?;
+        secs += out.stats.seconds;
+
+        // eval set: held-out positives + all negatives
+        let held_pos = train.select(&folds[held]);
+        let mut truth = vec![1i8; held_pos.len()];
+        truth.extend(vec![-1i8; negatives.len()]);
+        let mut pred = model.predict(&held_pos.x);
+        pred.extend(model.predict(&negatives.x));
+        fold_mcc.push(Confusion::from_labels(&truth, &pred).mcc());
+    }
+    let mean_mcc = crate::linalg::mean(&fold_mcc);
+    Ok(CvResult {
+        params: *params,
+        kernel,
+        fold_mcc,
+        mean_mcc,
+        mean_train_seconds: secs / k as f64,
+    })
+}
+
+/// Grid search over parameter candidates; returns results sorted by
+/// mean MCC, best first.
+pub fn grid_search(
+    train: &Dataset,
+    negatives: &Dataset,
+    kernels: &[Kernel],
+    nu1s: &[f64],
+    nu2s: &[f64],
+    epss: &[f64],
+    k: usize,
+    seed: u64,
+) -> Result<Vec<CvResult>> {
+    let mut results = Vec::new();
+    for &kernel in kernels {
+        for &nu1 in nu1s {
+            for &nu2 in nu2s {
+                for &eps in epss {
+                    let params = SmoParams { nu1, nu2, eps, ..Default::default() };
+                    // skip infeasible combos instead of erroring the sweep
+                    if crate::solver::check_params(
+                        train.len() * (k - 1) / k,
+                        nu1,
+                        nu2,
+                        eps,
+                    )
+                    .is_err()
+                    {
+                        continue;
+                    }
+                    results.push(cross_validate(
+                        train, negatives, kernel, &params, k, seed,
+                    )?);
+                }
+            }
+        }
+    }
+    results.sort_by(|a, b| b.mean_mcc.partial_cmp(&a.mean_mcc).unwrap());
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+
+    #[test]
+    fn kfold_partitions_everything_once() {
+        let folds = kfold_indices(103, 5, 3);
+        assert_eq!(folds.len(), 5);
+        let mut all: Vec<usize> = folds.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        // balanced within 1
+        let sizes: Vec<usize> = folds.iter().map(|f| f.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn kfold_deterministic() {
+        assert_eq!(kfold_indices(50, 4, 9), kfold_indices(50, 4, 9));
+        assert_ne!(kfold_indices(50, 4, 9), kfold_indices(50, 4, 10));
+    }
+
+    #[test]
+    fn cv_produces_sane_mcc() {
+        let cfg = SlabConfig { contamination: 0.0, ..Default::default() };
+        let train = cfg.generate(300, 21);
+        let eval = cfg.generate_eval(0, 100, 22); // negatives only
+        let params = SmoParams { nu1: 0.1, nu2: 0.05, eps: 0.5, ..Default::default() };
+        let r = cross_validate(&train, &eval, Kernel::Linear, &params, 3, 5)
+            .unwrap();
+        assert_eq!(r.fold_mcc.len(), 3);
+        assert!(r.mean_mcc > 0.3, "cv MCC {:.3}", r.mean_mcc);
+    }
+
+    #[test]
+    fn grid_search_ranks_and_skips_infeasible() {
+        let cfg = SlabConfig { contamination: 0.0, ..Default::default() };
+        let train = cfg.generate(150, 31);
+        let eval = cfg.generate_eval(0, 60, 32);
+        let results = grid_search(
+            &train,
+            &eval,
+            &[Kernel::Linear],
+            &[0.1, 0.5],
+            &[0.05],
+            &[0.5],
+            3,
+            7,
+        )
+        .unwrap();
+        assert_eq!(results.len(), 2);
+        assert!(results[0].mean_mcc >= results[1].mean_mcc);
+    }
+}

@@ -1,0 +1,254 @@
+//! File loaders: CSV and libsvm/svmlight formats, plus CSV export.
+//!
+//! CSV: one sample per line, comma-separated features; an optional final
+//! `label` column (+1/-1) is detected via [`CsvOptions::labeled`].
+//! libsvm: `label idx:val idx:val ...` with 1-based sparse indices.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use super::Dataset;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+
+/// CSV parsing options.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CsvOptions {
+    /// first line is a header to skip
+    pub header: bool,
+    /// last column is the +1/-1 label
+    pub labeled: bool,
+}
+
+/// Load a dense CSV file.
+pub fn load_csv(path: impl AsRef<Path>, opts: CsvOptions) -> Result<Dataset> {
+    let f = std::fs::File::open(path.as_ref())?;
+    let reader = BufReader::new(f);
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut labels: Vec<i8> = Vec::new();
+    let mut width = None;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if lineno == 0 && opts.header {
+            continue;
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut vals: Vec<f64> = Vec::new();
+        for tok in t.split(',') {
+            let v: f64 = tok.trim().parse().map_err(|_| {
+                Error::data(format!("line {}: bad number {tok:?}", lineno + 1))
+            })?;
+            vals.push(v);
+        }
+        if opts.labeled {
+            let l = vals.pop().ok_or_else(|| {
+                Error::data(format!("line {}: empty row", lineno + 1))
+            })?;
+            labels.push(if l > 0.0 { 1 } else { -1 });
+        }
+        match width {
+            None => width = Some(vals.len()),
+            Some(w) if w != vals.len() => {
+                return Err(Error::data(format!(
+                    "line {}: expected {w} features, got {}",
+                    lineno + 1,
+                    vals.len()
+                )))
+            }
+            _ => {}
+        }
+        rows.push(vals);
+    }
+
+    let d = width.unwrap_or(0);
+    let n = rows.len();
+    if n == 0 {
+        return Err(Error::data("empty CSV file".to_string()));
+    }
+    let mut data = Vec::with_capacity(n * d);
+    for r in rows {
+        data.extend(r);
+    }
+    let x = Matrix::from_vec(n, d, data);
+    Ok(if opts.labeled {
+        Dataset::new(x, labels)
+    } else {
+        Dataset::unlabeled(x)
+    })
+}
+
+/// Write a dataset to CSV (features then label).
+pub fn save_csv(ds: &Dataset, path: impl AsRef<Path>, labeled: bool) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())?;
+    for i in 0..ds.len() {
+        let feats: Vec<String> =
+            ds.x.row(i).iter().map(|v| format!("{v}")).collect();
+        if labeled {
+            writeln!(f, "{},{}", feats.join(","), ds.y[i])?;
+        } else {
+            writeln!(f, "{}", feats.join(","))?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a libsvm/svmlight sparse file into a dense matrix.
+/// `dim` pads/validates the feature count; pass 0 to infer from data.
+pub fn load_libsvm(path: impl AsRef<Path>, dim: usize) -> Result<Dataset> {
+    let f = std::fs::File::open(path.as_ref())?;
+    let reader = BufReader::new(f);
+    let mut entries: Vec<(i8, Vec<(usize, f64)>)> = Vec::new();
+    let mut max_idx = 0usize;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut parts = t.split_whitespace();
+        let label_tok = parts.next().unwrap();
+        let label: f64 = label_tok.parse().map_err(|_| {
+            Error::data(format!("line {}: bad label {label_tok:?}", lineno + 1))
+        })?;
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (i, v) = tok.split_once(':').ok_or_else(|| {
+                Error::data(format!("line {}: bad pair {tok:?}", lineno + 1))
+            })?;
+            let i: usize = i.parse().map_err(|_| {
+                Error::data(format!("line {}: bad index {i:?}", lineno + 1))
+            })?;
+            if i == 0 {
+                return Err(Error::data(format!(
+                    "line {}: libsvm indices are 1-based",
+                    lineno + 1
+                )));
+            }
+            let v: f64 = v.parse().map_err(|_| {
+                Error::data(format!("line {}: bad value {v:?}", lineno + 1))
+            })?;
+            max_idx = max_idx.max(i);
+            feats.push((i - 1, v));
+        }
+        entries.push((if label > 0.0 { 1 } else { -1 }, feats));
+    }
+
+    if entries.is_empty() {
+        return Err(Error::data("empty libsvm file".to_string()));
+    }
+    let d = if dim > 0 {
+        if max_idx > dim {
+            return Err(Error::data(format!(
+                "feature index {max_idx} exceeds declared dim {dim}"
+            )));
+        }
+        dim
+    } else {
+        max_idx
+    };
+    let n = entries.len();
+    let mut x = Matrix::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for (r, (label, feats)) in entries.into_iter().enumerate() {
+        y.push(label);
+        for (c, v) in feats {
+            x.set(r, c, v);
+        }
+    }
+    Ok(Dataset::new(x, y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn tmpfile(content: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "slabsvm_test_{}_{}.txt",
+            std::process::id(),
+            content.len()
+        ));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = tmpfile("1.0,2.0,1\n3.0,4.0,-1\n");
+        let ds =
+            load_csv(&p, CsvOptions { header: false, labeled: true }).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.dim(), 2);
+        assert_eq!(ds.y, vec![1, -1]);
+        assert_eq!(ds.x.row(1), &[3.0, 4.0]);
+
+        let p2 = p.with_extension("out.csv");
+        save_csv(&ds, &p2, true).unwrap();
+        let ds2 =
+            load_csv(&p2, CsvOptions { header: false, labeled: true }).unwrap();
+        assert_eq!(ds2.x.data(), ds.x.data());
+        assert_eq!(ds2.y, ds.y);
+        std::fs::remove_file(p).ok();
+        std::fs::remove_file(p2).ok();
+    }
+
+    #[test]
+    fn csv_header_and_comments() {
+        let p = tmpfile("a,b\n# comment\n1.5,2.5\n");
+        let ds =
+            load_csv(&p, CsvOptions { header: true, labeled: false }).unwrap();
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds.x.row(0), &[1.5, 2.5]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn csv_ragged_rejected() {
+        let p = tmpfile("1,2\n3\n");
+        assert!(load_csv(&p, CsvOptions::default()).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn csv_bad_number_rejected() {
+        let p = tmpfile("1,abc\n");
+        assert!(load_csv(&p, CsvOptions::default()).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn libsvm_parses_sparse() {
+        let p = tmpfile("+1 1:0.5 3:1.5\n-1 2:2.0\n");
+        let ds = load_libsvm(&p, 0).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.dim(), 3);
+        assert_eq!(ds.x.row(0), &[0.5, 0.0, 1.5]);
+        assert_eq!(ds.x.row(1), &[0.0, 2.0, 0.0]);
+        assert_eq!(ds.y, vec![1, -1]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn libsvm_zero_index_rejected() {
+        let p = tmpfile("+1 0:0.5\n");
+        assert!(load_libsvm(&p, 0).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn libsvm_dim_validation() {
+        let p = tmpfile("+1 5:1.0\n");
+        assert!(load_libsvm(&p, 3).is_err());
+        let ds = load_libsvm(&p, 8).unwrap();
+        assert_eq!(ds.dim(), 8);
+        std::fs::remove_file(p).ok();
+    }
+}

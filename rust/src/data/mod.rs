@@ -1,0 +1,131 @@
+//! Datasets: synthetic generators + file loaders + splits.
+//!
+//! The paper evaluates on an undisclosed 2-D "toy dataset"; DESIGN.md
+//! §Substitutions defines the documented equivalent ([`synthetic::SlabConfig`],
+//! a noisy linear band) plus additional generators for the example
+//! applications (gaussian blobs, annulus, open-set multi-class). Loaders
+//! read CSV and libsvm-format files so real data can be plugged in.
+
+pub mod cv;
+pub mod loaders;
+pub mod preprocess;
+pub mod synthetic;
+
+use crate::linalg::Matrix;
+
+/// A (possibly labeled) dataset. One-class *training* sets have all-(+1)
+/// labels; *evaluation* sets carry +1 (target class) / -1 (anomaly).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// samples, row-major [n, d]
+    pub x: Matrix,
+    /// +1 target / -1 anomaly
+    pub y: Vec<i8>,
+}
+
+impl Dataset {
+    pub fn new(x: Matrix, y: Vec<i8>) -> Self {
+        assert_eq!(x.rows(), y.len(), "label/sample count mismatch");
+        Dataset { x, y }
+    }
+
+    /// All-positive dataset (one-class training).
+    pub fn unlabeled(x: Matrix) -> Self {
+        let n = x.rows();
+        Dataset { x, y: vec![1; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.rows()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Count of positive labels.
+    pub fn positives(&self) -> usize {
+        self.y.iter().filter(|&&l| l > 0).count()
+    }
+
+    /// Subset by row indices.
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.select_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+
+    /// Keep only positive samples (turn an eval set into a train set).
+    pub fn positives_only(&self) -> Dataset {
+        let idx: Vec<usize> = (0..self.len()).filter(|&i| self.y[i] > 0).collect();
+        self.select(&idx)
+    }
+
+    /// Deterministic shuffled train/test split: `train_frac` of rows into
+    /// the first returned set.
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        assert!((0.0..=1.0).contains(&train_frac));
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        let mut rng = crate::util::rng::Rng::new(seed);
+        rng.shuffle(&mut idx);
+        let k = (self.len() as f64 * train_frac).round() as usize;
+        (self.select(&idx[..k]), self.select(&idx[k..]))
+    }
+
+    /// Merge two datasets (used to assemble eval sets).
+    pub fn concat(&self, other: &Dataset) -> Dataset {
+        assert_eq!(self.dim(), other.dim());
+        let mut y = self.y.clone();
+        y.extend_from_slice(&other.y);
+        Dataset { x: self.x.vstack(&other.x), y }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let x = Matrix::from_rows(&[
+            &[0.0, 0.0],
+            &[1.0, 1.0],
+            &[2.0, 2.0],
+            &[3.0, 3.0],
+        ]);
+        Dataset::new(x, vec![1, -1, 1, -1])
+    }
+
+    #[test]
+    fn select_and_positives() {
+        let d = toy();
+        assert_eq!(d.positives(), 2);
+        let p = d.positives_only();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.x.row(1), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = toy();
+        let (a, b) = d.split(0.5, 7);
+        assert_eq!(a.len() + b.len(), d.len());
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn concat_stacks() {
+        let d = toy();
+        let c = d.concat(&d);
+        assert_eq!(c.len(), 8);
+        assert_eq!(c.y.len(), 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_labels_panic() {
+        Dataset::new(Matrix::zeros(3, 2), vec![1, -1]);
+    }
+}

@@ -1,0 +1,270 @@
+//! Feature preprocessing: fit/transform scalers with persistence.
+//!
+//! Kernel methods are scale-sensitive (RBF bandwidths, polynomial
+//! coefficients); production pipelines standardize features before
+//! training and must apply the *same* affine map at serving time. Both
+//! scalers here serialize into the model-adjacent JSON so the
+//! coordinator can replay them.
+
+use crate::error::Error;
+use crate::linalg::Matrix;
+use crate::util::json::Json;
+use crate::Result;
+
+/// z-score standardizer: x' = (x − mean) / sd (per feature).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Standardizer {
+    pub mean: Vec<f64>,
+    pub sd: Vec<f64>,
+}
+
+impl Standardizer {
+    /// Fit on a data matrix. Constant features get sd = 1 (no-op scale).
+    pub fn fit(x: &Matrix) -> Standardizer {
+        let (n, d) = (x.rows(), x.cols());
+        let mut mean = vec![0.0; d];
+        for i in 0..n {
+            for (j, v) in x.row(i).iter().enumerate() {
+                mean[j] += v;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n.max(1) as f64;
+        }
+        let mut var = vec![0.0; d];
+        for i in 0..n {
+            for (j, v) in x.row(i).iter().enumerate() {
+                let c = v - mean[j];
+                var[j] += c * c;
+            }
+        }
+        let sd = var
+            .into_iter()
+            .map(|v| {
+                let s = (v / n.max(1) as f64).sqrt();
+                if s > 1e-12 {
+                    s
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        Standardizer { mean, sd }
+    }
+
+    /// Transform a matrix (allocates).
+    pub fn transform(&self, x: &Matrix) -> Matrix {
+        let mut out = x.clone();
+        self.transform_inplace(&mut out);
+        out
+    }
+
+    pub fn transform_inplace(&self, x: &mut Matrix) {
+        let d = x.cols();
+        assert_eq!(d, self.mean.len(), "dimension mismatch");
+        for i in 0..x.rows() {
+            let row = x.row_mut(i);
+            for j in 0..d {
+                row[j] = (row[j] - self.mean[j]) / self.sd[j];
+            }
+        }
+    }
+
+    /// Transform a single point.
+    pub fn transform_point(&self, p: &[f64]) -> Vec<f64> {
+        p.iter()
+            .zip(self.mean.iter().zip(&self.sd))
+            .map(|(v, (m, s))| (v - m) / s)
+            .collect()
+    }
+
+    /// Invert the transform (for reporting in original units).
+    pub fn inverse_point(&self, p: &[f64]) -> Vec<f64> {
+        p.iter()
+            .zip(self.mean.iter().zip(&self.sd))
+            .map(|(v, (m, s))| v * s + m)
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("standardizer")),
+            ("mean", Json::arr(self.mean.iter().map(|&v| Json::num(v)).collect())),
+            ("sd", Json::arr(self.sd.iter().map(|&v| Json::num(v)).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Standardizer> {
+        if j.get("kind").and_then(Json::as_str) != Some("standardizer") {
+            return Err(Error::data("not a standardizer"));
+        }
+        let vecf = |k: &str| -> Result<Vec<f64>> {
+            Ok(j.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::data(format!("missing {k}")))?
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect())
+        };
+        let mean = vecf("mean")?;
+        let sd = vecf("sd")?;
+        if mean.len() != sd.len() || mean.is_empty() {
+            return Err(Error::data("standardizer shape mismatch"));
+        }
+        Ok(Standardizer { mean, sd })
+    }
+}
+
+/// Min-max scaler to [0, 1] (per feature).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MinMaxScaler {
+    pub min: Vec<f64>,
+    pub range: Vec<f64>,
+}
+
+impl MinMaxScaler {
+    pub fn fit(x: &Matrix) -> MinMaxScaler {
+        let d = x.cols();
+        let mut min = vec![f64::INFINITY; d];
+        let mut max = vec![f64::NEG_INFINITY; d];
+        for i in 0..x.rows() {
+            for (j, v) in x.row(i).iter().enumerate() {
+                min[j] = min[j].min(*v);
+                max[j] = max[j].max(*v);
+            }
+        }
+        let range = min
+            .iter()
+            .zip(&max)
+            .map(|(lo, hi)| {
+                let r = hi - lo;
+                if r > 1e-12 {
+                    r
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        MinMaxScaler { min, range }
+    }
+
+    pub fn transform(&self, x: &Matrix) -> Matrix {
+        let mut out = x.clone();
+        let d = out.cols();
+        assert_eq!(d, self.min.len());
+        for i in 0..out.rows() {
+            let row = out.row_mut(i);
+            for j in 0..d {
+                row[j] = (row[j] - self.min[j]) / self.range[j];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn data() -> Matrix {
+        let mut rng = Rng::new(7);
+        Matrix::from_vec(
+            200,
+            3,
+            (0..600)
+                .map(|i| rng.normal_ms((i % 3) as f64 * 10.0, 2.0 + (i % 3) as f64))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn standardizer_zero_mean_unit_sd() {
+        let x = data();
+        let s = Standardizer::fit(&x);
+        let t = s.transform(&x);
+        for j in 0..3 {
+            let col: Vec<f64> = (0..t.rows()).map(|i| t.get(i, j)).collect();
+            assert!(crate::linalg::mean(&col).abs() < 1e-10);
+            assert!((crate::linalg::std_dev(&col) - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn transform_point_matches_matrix() {
+        let x = data();
+        let s = Standardizer::fit(&x);
+        let t = s.transform(&x);
+        let p = s.transform_point(x.row(5));
+        assert_eq!(&p[..], t.row(5));
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let x = data();
+        let s = Standardizer::fit(&x);
+        let p = x.row(3);
+        let back = s.inverse_point(&s.transform_point(p));
+        for (a, b) in p.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn constant_feature_is_noop() {
+        let x = Matrix::from_rows(&[&[5.0, 1.0], &[5.0, 2.0], &[5.0, 3.0]]);
+        let s = Standardizer::fit(&x);
+        let t = s.transform(&x);
+        for i in 0..3 {
+            assert_eq!(t.get(i, 0), 0.0); // centered, unscaled
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = Standardizer::fit(&data());
+        let j = s.to_json().to_string();
+        let s2 = Standardizer::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        let j = Json::parse(r#"{"kind":"minmax"}"#).unwrap();
+        assert!(Standardizer::from_json(&j).is_err());
+        let j = Json::parse(r#"{"kind":"standardizer","mean":[1],"sd":[1,2]}"#).unwrap();
+        assert!(Standardizer::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn minmax_maps_to_unit_box() {
+        let x = data();
+        let s = MinMaxScaler::fit(&x);
+        let t = s.transform(&x);
+        for i in 0..t.rows() {
+            for j in 0..3 {
+                let v = t.get(i, j);
+                assert!((-1e-12..=1.0 + 1e-12).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn training_on_standardized_data_works() {
+        // end-to-end sanity: standardizing the slab band moves it to the
+        // origin, so the LINEAR kernel degenerates (the R_min/R_max > eps
+        // condition breaks) — but RBF still works. This pins the
+        // interaction between preprocessing and the kernel choice.
+        use crate::data::synthetic::SlabConfig;
+        use crate::kernel::Kernel;
+        use crate::solver::smo::{train_full, SmoParams};
+        let ds = SlabConfig::default().generate(200, 9);
+        let sc = Standardizer::fit(&ds.x);
+        let xs = sc.transform(&ds.x);
+        let p = SmoParams { nu1: 0.3, nu2: 0.05, eps: 0.5, ..Default::default() };
+        let (model, _) = train_full(&xs, Kernel::Rbf { g: 0.5 }, &p).unwrap();
+        assert!(model.n_sv() > 0);
+        // a wildly out-of-band point (in standardized space) is rejected
+        assert_eq!(model.classify(&[8.0, -8.0]), -1);
+    }
+}

@@ -1,0 +1,63 @@
+//! Error taxonomy for the whole stack.
+//!
+//! One [`Error`] enum spanning data loading, solver, runtime (PJRT) and
+//! coordinator failures, so every public API returns [`Result<T>`] with a
+//! single error type that callers can match on.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// All failure modes of the slabsvm stack.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Invalid hyper-parameters or config values (e.g. nu outside (0,1]).
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// Dataset parsing / shape problems.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// Solver failed to converge within its iteration budget.
+    #[error("solver did not converge: {0}")]
+    NoConvergence(String),
+
+    /// A solution failed feasibility / KKT certification.
+    #[error("solution certification failed: {0}")]
+    Certification(String),
+
+    /// Problems locating / parsing AOT artifacts (manifest, HLO files).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT client / compile / execute failures from the `xla` crate.
+    #[error("pjrt runtime error: {0}")]
+    Pjrt(String),
+
+    /// Coordinator-level failures (queue shutdown, deadline exceeded...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Pjrt(e.to_string())
+    }
+}
+
+impl Error {
+    /// Helper for config validation sites.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    /// Helper for data errors.
+    pub fn data(msg: impl Into<String>) -> Self {
+        Error::Data(msg.into())
+    }
+}

@@ -1,0 +1,218 @@
+//! Figure regeneration: the paper's Fig. 1 and Fig. 2 as CSV + SVG.
+//!
+//! Each figure is a 2-D scatter of the training points plus the two
+//! slab hyperplanes (lower red, upper green — the paper's color coding)
+//! drawn as lines in input space. Only meaningful for 2-D data and
+//! kernels whose decision surface is a line (linear); for non-linear
+//! kernels the plane is rendered as an iso-contour sampled on a grid.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::data::Dataset;
+use crate::solver::ocssvm::SlabModel;
+use crate::Result;
+
+/// Everything needed to draw one figure.
+pub struct Figure {
+    pub points: Vec<(f64, f64, i8)>,
+    /// polyline per plane: (x, y) samples where s(x) = rho
+    pub lower_plane: Vec<(f64, f64)>,
+    pub upper_plane: Vec<(f64, f64)>,
+    pub title: String,
+}
+
+/// Sample the two plane contours of a trained 2-D model over the data's
+/// bounding box (marching over a grid, linear interpolation on sign
+/// changes of s − ρ along grid columns).
+pub fn build_figure(model: &SlabModel, ds: &Dataset, title: &str) -> Figure {
+    assert_eq!(ds.dim(), 2, "figures are 2-D only");
+    let n = ds.len();
+    let mut points = Vec::with_capacity(n);
+    let (mut xmin, mut xmax) = (f64::MAX, f64::MIN);
+    let (mut ymin, mut ymax) = (f64::MAX, f64::MIN);
+    for i in 0..n {
+        let p = ds.x.row(i);
+        points.push((p[0], p[1], model.classify(p)));
+        xmin = xmin.min(p[0]);
+        xmax = xmax.max(p[0]);
+        ymin = ymin.min(p[1]);
+        ymax = ymax.max(p[1]);
+    }
+    let pad_x = 0.05 * (xmax - xmin).max(1e-9);
+    let pad_y = 0.25 * (ymax - ymin).max(1e-9);
+    xmin -= pad_x;
+    xmax += pad_x;
+    ymin -= pad_y;
+    ymax += pad_y;
+
+    let contour = |rho: f64| -> Vec<(f64, f64)> {
+        // for each of 200 columns, scan rows for a sign change of s − rho
+        let (nx, ny) = (200usize, 400usize);
+        let mut line = Vec::new();
+        for ix in 0..nx {
+            let x = xmin + (xmax - xmin) * ix as f64 / (nx - 1) as f64;
+            let mut prev: Option<(f64, f64)> = None; // (y, s - rho)
+            for iy in 0..ny {
+                let y = ymin + (ymax - ymin) * iy as f64 / (ny - 1) as f64;
+                let v = model.score(&[x, y]) - rho;
+                if let Some((py, pv)) = prev {
+                    if pv == 0.0 || (pv < 0.0) != (v < 0.0) {
+                        let t = pv / (pv - v);
+                        line.push((x, py + t * (y - py)));
+                        break; // first crossing per column is enough
+                    }
+                }
+                prev = Some((y, v));
+            }
+        }
+        line
+    };
+
+    Figure {
+        points,
+        lower_plane: contour(model.rho1),
+        upper_plane: contour(model.rho2),
+        title: title.to_string(),
+    }
+}
+
+/// Write the figure as CSV: one `point,x,y,label` row per sample and
+/// one `lower|upper,x,y,` row per contour vertex.
+pub fn write_csv(fig: &Figure, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "kind,x,y,label")?;
+    for &(x, y, l) in &fig.points {
+        writeln!(f, "point,{x},{y},{l}")?;
+    }
+    for &(x, y) in &fig.lower_plane {
+        writeln!(f, "lower,{x},{y},")?;
+    }
+    for &(x, y) in &fig.upper_plane {
+        writeln!(f, "upper,{x},{y},")?;
+    }
+    Ok(())
+}
+
+/// Render a standalone SVG (blue points, red lower plane, green upper —
+/// the paper's color coding).
+pub fn write_svg(fig: &Figure, path: impl AsRef<Path>) -> Result<()> {
+    const W: f64 = 900.0;
+    const H: f64 = 600.0;
+    const M: f64 = 40.0;
+
+    let all_x = fig
+        .points
+        .iter()
+        .map(|p| p.0)
+        .chain(fig.lower_plane.iter().map(|p| p.0))
+        .chain(fig.upper_plane.iter().map(|p| p.0));
+    let all_y = fig
+        .points
+        .iter()
+        .map(|p| p.1)
+        .chain(fig.lower_plane.iter().map(|p| p.1))
+        .chain(fig.upper_plane.iter().map(|p| p.1));
+    let (mut xmin, mut xmax) = (f64::MAX, f64::MIN);
+    for v in all_x {
+        xmin = xmin.min(v);
+        xmax = xmax.max(v);
+    }
+    let (mut ymin, mut ymax) = (f64::MAX, f64::MIN);
+    for v in all_y {
+        ymin = ymin.min(v);
+        ymax = ymax.max(v);
+    }
+    let sx = |x: f64| M + (x - xmin) / (xmax - xmin).max(1e-12) * (W - 2.0 * M);
+    let sy = |y: f64| H - M - (y - ymin) / (ymax - ymin).max(1e-12) * (H - 2.0 * M);
+
+    let mut s = String::new();
+    s.push_str(&format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{W}\" height=\"{H}\" \
+         viewBox=\"0 0 {W} {H}\">\n<rect width=\"{W}\" height=\"{H}\" fill=\"white\"/>\n\
+         <text x=\"{}\" y=\"24\" font-family=\"sans-serif\" font-size=\"16\" \
+         text-anchor=\"middle\">{}</text>\n",
+        W / 2.0,
+        fig.title
+    ));
+    for &(x, y, label) in &fig.points {
+        let color = if label > 0 { "#3366cc" } else { "#99bbee" };
+        s.push_str(&format!(
+            "<circle cx=\"{:.2}\" cy=\"{:.2}\" r=\"2.2\" fill=\"{color}\"/>\n",
+            sx(x),
+            sy(y)
+        ));
+    }
+    for (line, color) in
+        [(&fig.lower_plane, "#cc2222"), (&fig.upper_plane, "#22aa22")]
+    {
+        if line.is_empty() {
+            continue;
+        }
+        let pts: Vec<String> = line
+            .iter()
+            .map(|&(x, y)| format!("{:.2},{:.2}", sx(x), sy(y)))
+            .collect();
+        s.push_str(&format!(
+            "<polyline points=\"{}\" fill=\"none\" stroke=\"{color}\" stroke-width=\"2\"/>\n",
+            pts.join(" ")
+        ));
+    }
+    s.push_str("</svg>\n");
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+    use crate::kernel::Kernel;
+    use crate::solver::smo::{train, SmoParams};
+
+    fn fig() -> Figure {
+        let cfg = SlabConfig { contamination: 0.0, ..Default::default() };
+        let ds = cfg.generate(200, 121);
+        let model = train(&ds.x, Kernel::Linear, &SmoParams::default()).unwrap();
+        build_figure(&model, &ds, "test figure")
+    }
+
+    #[test]
+    fn figure_has_points_and_planes() {
+        let f = fig();
+        assert_eq!(f.points.len(), 200);
+        // contours must be traced across most of the x range
+        assert!(f.lower_plane.len() > 150, "lower {} pts", f.lower_plane.len());
+        assert!(f.upper_plane.len() > 150, "upper {} pts", f.upper_plane.len());
+    }
+
+    #[test]
+    fn planes_are_ordered_vertically() {
+        // for the linear kernel on the tilted band, the upper plane's
+        // contour sits above the lower plane's at matching x
+        let f = fig();
+        let avg = |l: &[(f64, f64)]| {
+            l.iter().map(|p| p.1).sum::<f64>() / l.len() as f64
+        };
+        assert!(avg(&f.upper_plane) > avg(&f.lower_plane));
+    }
+
+    #[test]
+    fn csv_and_svg_written() {
+        let f = fig();
+        let dir = std::env::temp_dir();
+        let csv = dir.join(format!("slabsvm_fig_{}.csv", std::process::id()));
+        let svg = dir.join(format!("slabsvm_fig_{}.svg", std::process::id()));
+        write_csv(&f, &csv).unwrap();
+        write_svg(&f, &svg).unwrap();
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.starts_with("kind,x,y,label"));
+        assert!(csv_text.contains("point,"));
+        assert!(csv_text.contains("lower,"));
+        let svg_text = std::fs::read_to_string(&svg).unwrap();
+        assert!(svg_text.starts_with("<svg"));
+        assert!(svg_text.contains("polyline"));
+        std::fs::remove_file(csv).ok();
+        std::fs::remove_file(svg).ok();
+    }
+}

@@ -1,0 +1,214 @@
+//! Kernel functions + Gram helpers (the native compute path).
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly — the kernel-id
+//! mapping and hyper-parameter semantics must match so the native and
+//! PJRT engines are interchangeable (engine-equivalence is asserted in
+//! `rust/tests/runtime_roundtrip.rs`).
+
+use crate::linalg::{dot, Matrix};
+use crate::util::threadpool;
+
+/// Kernel family + hyper-parameters.
+///
+/// Ids used on the wire (artifact names / params vectors):
+/// 0 linear, 1 rbf, 2 poly, 3 sigmoid.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// k(x,y) = <x,y>  (the paper's experiments use this)
+    Linear,
+    /// k(x,y) = exp(-g ||x-y||^2)
+    Rbf { g: f64 },
+    /// k(x,y) = (g <x,y> + c)^degree
+    Poly { g: f64, c: f64, degree: f64 },
+    /// k(x,y) = tanh(g <x,y> + c)
+    Sigmoid { g: f64, c: f64 },
+}
+
+impl Kernel {
+    /// Artifact family name (matches aot.py FAMILY_NAMES).
+    pub fn family(&self) -> &'static str {
+        match self {
+            Kernel::Linear => "linear",
+            Kernel::Rbf { .. } => "rbf",
+            Kernel::Poly { .. } => "poly",
+            Kernel::Sigmoid { .. } => "sigmoid",
+        }
+    }
+
+    /// (g, c, degree) params vector fed to the PJRT artifacts.
+    pub fn params3(&self) -> [f32; 3] {
+        match *self {
+            Kernel::Linear => [0.0, 0.0, 0.0],
+            Kernel::Rbf { g } => [g as f32, 0.0, 0.0],
+            Kernel::Poly { g, c, degree } => [g as f32, c as f32, degree as f32],
+            Kernel::Sigmoid { g, c } => [g as f32, c as f32, 0.0],
+        }
+    }
+
+    /// Evaluate k(a, b).
+    #[inline]
+    pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        match *self {
+            Kernel::Linear => dot(a, b),
+            Kernel::Rbf { g } => (-g * crate::linalg::sq_dist(a, b)).exp(),
+            Kernel::Poly { g, c, degree } => (g * dot(a, b) + c).powf(degree),
+            Kernel::Sigmoid { g, c } => (g * dot(a, b) + c).tanh(),
+        }
+    }
+
+    /// Fill `out[j] = k(x_row, x[j])` for all rows j of `x`.
+    pub fn row(&self, x: &Matrix, row: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), x.rows());
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.eval(row, x.row(j));
+        }
+    }
+
+    /// Full Gram matrix, parallel over row blocks, exploiting symmetry.
+    pub fn gram(&self, x: &Matrix, threads: usize) -> Matrix {
+        let n = x.rows();
+        let mut k = Matrix::zeros(n, n);
+        // Parallel over rows; each worker fills the upper triangle of its
+        // rows (j >= i) — the mirror pass below completes the matrix.
+        threadpool::parallel_rows(k.data_mut(), n, threads, |start, rows| {
+            for (r, out) in rows.chunks_mut(n).enumerate() {
+                let i = start + r;
+                let xi = x.row(i);
+                for j in i..n {
+                    out[j] = self.eval(xi, x.row(j));
+                }
+            }
+        });
+        // mirror upper -> lower
+        for i in 0..n {
+            for j in 0..i {
+                let v = k.get(j, i);
+                k.set(i, j, v);
+            }
+        }
+        k
+    }
+
+    /// Cross-kernel matrix K[i][j] = k(x_i, q_j).
+    pub fn cross(&self, x: &Matrix, q: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(x.cols(), q.cols());
+        let (n, m) = (x.rows(), q.rows());
+        let mut k = Matrix::zeros(n, m);
+        threadpool::parallel_rows(k.data_mut(), m, threads, |start, rows| {
+            for (r, out) in rows.chunks_mut(m).enumerate() {
+                let xi = x.row(start + r);
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = self.eval(xi, q.row(j));
+                }
+            }
+        });
+        k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let data = (0..n * d).map(|_| rng.normal()).collect();
+        Matrix::from_vec(n, d, data)
+    }
+
+    #[test]
+    fn linear_is_dot() {
+        let k = Kernel::Linear;
+        assert_eq!(k.eval(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn rbf_properties() {
+        let k = Kernel::Rbf { g: 0.5 };
+        let a = [1.0, -2.0];
+        assert!((k.eval(&a, &a) - 1.0).abs() < 1e-12);
+        let b = [100.0, 100.0];
+        assert!(k.eval(&a, &b) < 1e-10);
+        assert!(k.eval(&a, &b) >= 0.0);
+    }
+
+    #[test]
+    fn poly_matches_formula() {
+        let k = Kernel::Poly { g: 2.0, c: 1.0, degree: 3.0 };
+        // (2*11 + 1)^3 = 23^3
+        assert!((k.eval(&[1.0, 2.0], &[3.0, 4.0]) - 23f64.powi(3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sigmoid_matches_formula() {
+        let k = Kernel::Sigmoid { g: 0.1, c: -0.5 };
+        let want = (0.1 * 11.0 - 0.5f64).tanh();
+        assert!((k.eval(&[1.0, 2.0], &[3.0, 4.0]) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_symmetric_and_correct() {
+        let x = rand_matrix(50, 3, 1);
+        for k in [
+            Kernel::Linear,
+            Kernel::Rbf { g: 0.7 },
+            Kernel::Poly { g: 0.5, c: 1.0, degree: 2.0 },
+            Kernel::Sigmoid { g: 0.2, c: 0.1 },
+        ] {
+            let g = k.gram(&x, 4);
+            for i in 0..50 {
+                for j in 0..50 {
+                    assert!(
+                        (g.get(i, j) - k.eval(x.row(i), x.row(j))).abs() < 1e-12,
+                        "mismatch at ({i},{j}) for {k:?}"
+                    );
+                    assert_eq!(g.get(i, j), g.get(j, i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gram_thread_invariance() {
+        let x = rand_matrix(64, 4, 2);
+        let k = Kernel::Rbf { g: 0.3 };
+        let g1 = k.gram(&x, 1);
+        let g8 = k.gram(&x, 8);
+        assert_eq!(g1.data(), g8.data());
+    }
+
+    #[test]
+    fn cross_matches_eval() {
+        let x = rand_matrix(20, 3, 3);
+        let q = rand_matrix(7, 3, 4);
+        let k = Kernel::Rbf { g: 1.1 };
+        let c = k.cross(&x, &q, 3);
+        for i in 0..20 {
+            for j in 0..7 {
+                assert!((c.get(i, j) - k.eval(x.row(i), q.row(j))).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn row_matches_gram() {
+        let x = rand_matrix(30, 2, 5);
+        let k = Kernel::Linear;
+        let g = k.gram(&x, 2);
+        let mut row = vec![0.0; 30];
+        k.row(&x, x.row(17), &mut row);
+        for j in 0..30 {
+            assert_eq!(row[j], g.get(17, j));
+        }
+    }
+
+    #[test]
+    fn params3_layout() {
+        assert_eq!(Kernel::Rbf { g: 0.5 }.params3(), [0.5, 0.0, 0.0]);
+        assert_eq!(
+            Kernel::Poly { g: 1.0, c: 2.0, degree: 3.0 }.params3(),
+            [1.0, 2.0, 3.0]
+        );
+    }
+}

@@ -1,0 +1,53 @@
+//! # slabsvm — SMO for One-Class Slab Support Vector Machines
+//!
+//! Production-shaped reproduction of *"Sequential Minimal Optimization for
+//! One-Class Slab Support Vector Machine"* (Kumar et al., IIIT Allahabad;
+//! a.k.a. "A fast learning algorithm for One-Class Slab SVMs"), built as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build-time Python)** — Pallas kernels for the Gram
+//!   matrix, batched slab decision function and KKT sweeps, composed into
+//!   JAX graphs and AOT-lowered to HLO text artifacts (`python/compile/`).
+//! * **Layer 3 (this crate)** — the paper's contribution: the OCSSVM
+//!   **SMO solver** ([`solver::smo`]), its working-set heuristic, the
+//!   baselines it is compared against ([`solver::qp_pg`],
+//!   [`solver::qp_ipm`], [`solver::ocsvm_smo`]), and a serving
+//!   coordinator ([`coordinator`]) that batches scoring requests onto the
+//!   PJRT-compiled artifacts ([`runtime`]).
+//!
+//! Python never runs at request time: once `make artifacts` has produced
+//! `artifacts/*.hlo.txt`, the `slabsvm` binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use slabsvm::data::synthetic::SlabConfig;
+//! use slabsvm::kernel::Kernel;
+//! use slabsvm::solver::smo::{SmoParams, train};
+//!
+//! let ds = SlabConfig::default().generate(1000, 42);
+//! let params = SmoParams { nu1: 0.5, nu2: 0.01, eps: 2.0 / 3.0, ..Default::default() };
+//! let model = train(&ds.x, Kernel::Linear, &params).unwrap();
+//! let label = model.classify(&ds.x.row(0)); // +1 inside the slab
+//! # let _ = label;
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every table/figure of the paper to a bench target.
+
+pub mod bench;
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod figures;
+pub mod kernel;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod solver;
+pub mod testing;
+pub mod util;
+
+pub use error::{Error, Result};

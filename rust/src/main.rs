@@ -1,0 +1,647 @@
+//! `slabsvm` — CLI for the OCSSVM-SMO stack.
+//!
+//! Subcommands:
+//!   train     train a model on a CSV/libsvm/synthetic dataset, save JSON
+//!   predict   score a CSV of query points with a saved model
+//!   eval      evaluate a saved model on a labeled dataset (MCC etc.)
+//!   figures   regenerate the paper's Fig. 1 / Fig. 2 (CSV + SVG)
+//!   bench     print paper tables: table1 | qp | heuristics
+//!   serve     run the coordinator on a synthetic open-loop workload
+//!   info      artifact manifest + engine diagnostics
+//!
+//! Run `slabsvm <cmd> --help` for per-command options.
+
+use std::process::ExitCode;
+
+use slabsvm::config::{parse_heuristic, parse_kernel};
+use slabsvm::coordinator::{BatcherConfig, Coordinator, TrainRequest};
+use slabsvm::data::loaders::{load_csv, load_libsvm, CsvOptions};
+use slabsvm::data::synthetic::SlabConfig;
+use slabsvm::data::Dataset;
+use slabsvm::error::Error;
+use slabsvm::kernel::Kernel;
+use slabsvm::metrics::roc_auc;
+use slabsvm::runtime::Engine;
+use slabsvm::solver::ocssvm::SlabModel;
+use slabsvm::solver::smo::{train_full, SmoParams};
+use slabsvm::util::cli::{parse_args, render_help, ArgSpec, Parsed};
+use slabsvm::util::logging;
+use slabsvm::Result;
+
+fn main() -> ExitCode {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprintln!("{}", usage());
+        return ExitCode::FAILURE;
+    };
+    let result = match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "predict" => cmd_predict(rest),
+        "eval" => cmd_eval(rest),
+        "figures" => cmd_figures(rest),
+        "bench" => cmd_bench(rest),
+        "serve" => cmd_serve(rest),
+        "sweep" => cmd_sweep(rest),
+        "info" => cmd_info(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(Error::config(format!("unknown subcommand {other}"))),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() -> String {
+    "slabsvm — SMO for One-Class Slab SVMs (paper reproduction)\n\n\
+     subcommands:\n\
+     \ttrain    train a model and save it as JSON\n\
+     \tpredict  score query points with a saved model\n\
+     \teval     evaluate a saved model on labeled data (MCC, F1, AUC)\n\
+     \tfigures  regenerate paper Fig. 1 / Fig. 2 (CSV + SVG)\n\
+     \tbench    print paper tables: --which table1|qp|heuristics\n\
+     \tserve    run the serving coordinator on a synthetic workload\n\
+     \tsweep    k-fold cross-validated hyper-parameter grid search\n\
+     \tinfo     artifact manifest + engine diagnostics\n"
+        .to_string()
+}
+
+// ------------------------------------------------------------------ common
+
+fn kernel_args() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("kernel", "linear", "kernel family: linear|rbf|poly|sigmoid"),
+        ArgSpec::opt("gamma", "1.0", "kernel g parameter"),
+        ArgSpec::opt("coef0", "0.0", "kernel c parameter"),
+        ArgSpec::opt("degree", "3.0", "poly degree"),
+    ]
+}
+
+fn smo_args() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("nu1", "0.5", "nu1 (lower-plane outlier bound)"),
+        ArgSpec::opt("nu2", "0.01", "nu2 (upper-plane violator bound)"),
+        ArgSpec::opt("eps", "0.6666666666666666", "eps (upper-plane mass)"),
+        ArgSpec::opt("tol", "1e-5", "KKT tolerance"),
+        ArgSpec::opt("max-iter", "500000", "iteration budget"),
+        ArgSpec::opt(
+            "heuristic",
+            "paper-max-fbar",
+            "working-set rule: paper-max-fbar|max-violation|random-violator",
+        ),
+    ]
+}
+
+fn data_args() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("data", "synthetic:slab", "CSV/libsvm path or synthetic:slab"),
+        ArgSpec::opt("size", "1000", "synthetic dataset size"),
+        ArgSpec::opt("seed", "42", "synthetic dataset seed"),
+        ArgSpec::flag("labeled", "CSV has a trailing +1/-1 label column"),
+        ArgSpec::flag("header", "CSV has a header row"),
+    ]
+}
+
+fn parse_kernel_from(p: &Parsed) -> Result<Kernel> {
+    parse_kernel(
+        p.get_str("kernel")?,
+        p.get_f64("gamma")?,
+        p.get_f64("coef0")?,
+        p.get_f64("degree")?,
+    )
+}
+
+fn parse_smo_from(p: &Parsed) -> Result<SmoParams> {
+    Ok(SmoParams {
+        nu1: p.get_f64("nu1")?,
+        nu2: p.get_f64("nu2")?,
+        eps: p.get_f64("eps")?,
+        tol: p.get_f64("tol")?,
+        max_iter: p.get_usize("max-iter")?,
+        heuristic: parse_heuristic(p.get_str("heuristic")?)?,
+        ..Default::default()
+    })
+}
+
+fn load_dataset(p: &Parsed) -> Result<Dataset> {
+    let spec = p.get_str("data")?;
+    if let Some(kind) = spec.strip_prefix("synthetic:") {
+        let size = p.get_usize("size")?;
+        let seed = p.get_usize("seed")? as u64;
+        return match kind {
+            "slab" => Ok(SlabConfig::default().generate(size, seed)),
+            "slab-eval" => {
+                Ok(SlabConfig::default().generate_eval(size / 2, size / 2, seed))
+            }
+            other => Err(Error::config(format!("unknown synthetic kind {other}"))),
+        };
+    }
+    if spec.ends_with(".libsvm") || spec.ends_with(".svm") {
+        load_libsvm(spec, 0)
+    } else {
+        load_csv(
+            spec,
+            CsvOptions { header: p.flag("header"), labeled: p.flag("labeled") },
+        )
+    }
+}
+
+// ------------------------------------------------------------------- train
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let mut spec = vec![ArgSpec::opt("out", "model.json", "output model path")];
+    spec.extend(data_args());
+    spec.extend(kernel_args());
+    spec.extend(smo_args());
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", render_help("train", "train an OCSSVM with SMO", &spec));
+        return Ok(());
+    }
+    let p = parse_args(&spec, args)?;
+    let ds = load_dataset(&p)?.positives_only();
+    let kernel = parse_kernel_from(&p)?;
+    let params = parse_smo_from(&p)?;
+    println!(
+        "training on {} points (d={}) kernel={} nu1={} nu2={} eps={:.4}",
+        ds.len(),
+        ds.dim(),
+        kernel.family(),
+        params.nu1,
+        params.nu2,
+        params.eps
+    );
+    let (model, out) = train_full(&ds.x, kernel, &params)?;
+    println!(
+        "done: {} iterations in {:.3}s, {} SVs, rho1={:.6} rho2={:.6} (width {:.6})",
+        out.stats.iterations,
+        out.stats.seconds,
+        model.n_sv(),
+        model.rho1,
+        model.rho2,
+        model.width()
+    );
+    let out_path = p.get_str("out")?;
+    model.save(out_path)?;
+    println!("model saved to {out_path}");
+    Ok(())
+}
+
+// ----------------------------------------------------------------- predict
+
+fn cmd_predict(args: &[String]) -> Result<()> {
+    let spec = vec![
+        ArgSpec::req("model", "path to a saved model JSON"),
+        ArgSpec::req("queries", "CSV of query points (no labels)"),
+        ArgSpec::opt("engine", "native", "compute engine: native|pjrt"),
+        ArgSpec::opt("artifacts", "artifacts", "artifacts dir for --engine pjrt"),
+        ArgSpec::flag("header", "CSV has a header row"),
+        ArgSpec::flag("scores", "print raw scores instead of labels"),
+    ];
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", render_help("predict", "score query points", &spec));
+        return Ok(());
+    }
+    let p = parse_args(&spec, args)?;
+    let model = std::sync::Arc::new(SlabModel::load(p.get_str("model")?)?);
+    let q = load_csv(
+        p.get_str("queries")?,
+        CsvOptions { header: p.flag("header"), labeled: false },
+    )?;
+    let engine = make_engine(&p)?;
+    let (scores, labels) = engine.predict(&model, &q.x)?;
+    for i in 0..labels.len() {
+        if p.flag("scores") {
+            println!("{}\t{}", scores[i], labels[i]);
+        } else {
+            println!("{}", labels[i]);
+        }
+    }
+    Ok(())
+}
+
+fn make_engine(p: &Parsed) -> Result<Engine> {
+    match p.get("engine").unwrap_or("native") {
+        "native" => Ok(Engine::Native),
+        "pjrt" => Engine::pjrt(p.get("artifacts").unwrap_or("artifacts")),
+        other => Err(Error::config(format!("unknown engine {other}"))),
+    }
+}
+
+// -------------------------------------------------------------------- eval
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let mut spec = vec![ArgSpec::req("model", "path to a saved model JSON")];
+    spec.extend(data_args());
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", render_help("eval", "evaluate on labeled data", &spec));
+        return Ok(());
+    }
+    let p = parse_args(&spec, args)?;
+    let model = SlabModel::load(p.get_str("model")?)?;
+    let mut ds = load_dataset(&p)?;
+    if p.get_str("data")? == "synthetic:slab" {
+        // default eval set: half positives, half negatives
+        let size = p.get_usize("size")?;
+        let seed = p.get_usize("seed")? as u64;
+        ds = SlabConfig::default().generate_eval(size / 2, size / 2, seed);
+    }
+    let c = model.evaluate(&ds);
+    let margins: Vec<f64> =
+        (0..ds.len()).map(|i| model.margin(ds.x.row(i))).collect();
+    println!(
+        "n={} tp={} tn={} fp={} fn={}",
+        ds.len(),
+        c.tp,
+        c.tn,
+        c.fp,
+        c.fn_
+    );
+    println!(
+        "accuracy={:.4} precision={:.4} recall={:.4} f1={:.4} mcc={:.4} auc={:.4}",
+        c.accuracy(),
+        c.precision(),
+        c.recall(),
+        c.f1(),
+        c.mcc(),
+        roc_auc(&ds.y, &margins)
+    );
+    Ok(())
+}
+
+// ----------------------------------------------------------------- figures
+
+fn cmd_figures(args: &[String]) -> Result<()> {
+    let spec = vec![
+        ArgSpec::opt("fig", "1", "which figure: 1 or 2"),
+        ArgSpec::opt("out-dir", "out", "output directory"),
+        ArgSpec::opt("seed", "42", "dataset seed"),
+    ];
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", render_help("figures", "regenerate Fig. 1 / Fig. 2", &spec));
+        return Ok(());
+    }
+    let p = parse_args(&spec, args)?;
+    let fig_no = p.get_usize("fig")?;
+    let seed = p.get_usize("seed")? as u64;
+    // paper captions: Fig1 m=1000 nu1=.5 nu2=.01 eps=2/3;
+    //                 Fig2 m=2000 nu1=.2 nu2=.08 eps=1/2
+    let (m, params) = match fig_no {
+        1 => (
+            1000,
+            SmoParams { nu1: 0.5, nu2: 0.01, eps: 2.0 / 3.0, ..Default::default() },
+        ),
+        2 => (
+            2000,
+            SmoParams { nu1: 0.2, nu2: 0.08, eps: 0.5, ..Default::default() },
+        ),
+        other => {
+            return Err(Error::config(format!("no figure {other} in the paper")))
+        }
+    };
+    let ds = SlabConfig::default().generate(m, seed);
+    let (model, out) = train_full(&ds.x, Kernel::Linear, &params)?;
+    println!(
+        "fig {fig_no}: m={m} iterations={} rho1={:.4} rho2={:.4} width={:.4}",
+        out.stats.iterations,
+        model.rho1,
+        model.rho2,
+        model.width()
+    );
+    let title = format!(
+        "Fig. {fig_no}: OCSSVM slab, m={m}, nu1={}, nu2={}, eps={:.3}",
+        params.nu1, params.nu2, params.eps
+    );
+    let fig = slabsvm::figures::build_figure(&model, &ds, &title);
+    let dir = std::path::PathBuf::from(p.get_str("out-dir")?);
+    std::fs::create_dir_all(&dir)?;
+    let csv = dir.join(format!("fig{fig_no}.csv"));
+    let svg = dir.join(format!("fig{fig_no}.svg"));
+    slabsvm::figures::write_csv(&fig, &csv)?;
+    slabsvm::figures::write_svg(&fig, &svg)?;
+    println!("wrote {} and {}", csv.display(), svg.display());
+    Ok(())
+}
+
+// ------------------------------------------------------------------- bench
+
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let spec = vec![
+        ArgSpec::opt("which", "table1", "table1 | qp | heuristics"),
+        ArgSpec::opt("seeds", "3", "seeds per configuration"),
+    ];
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", render_help("bench", "print paper tables", &spec));
+        return Ok(());
+    }
+    let p = parse_args(&spec, args)?;
+    let seeds = p.get_usize("seeds")?;
+    match p.get_str("which")? {
+        "table1" => bench_table1(seeds),
+        "qp" => bench_qp(seeds),
+        "heuristics" => bench_heuristics(seeds),
+        other => Err(Error::config(format!("unknown bench {other}"))),
+    }
+}
+
+/// Table 1: training time + MCC vs m (linear kernel, paper constants).
+fn bench_table1(seeds: usize) -> Result<()> {
+    let params = SmoParams::default(); // nu1=.5 nu2=.01 eps=2/3 as in the paper
+    println!("Table 1 — SMO training time and MCC vs m (linear kernel)");
+    println!(
+        "{:>6} {:>12} {:>10} {:>8} {:>12}",
+        "m", "time(s)", "MCC", "SVs", "iterations"
+    );
+    for &m in &[500usize, 1000, 2000, 5000] {
+        let mut times = Vec::new();
+        let mut mccs = Vec::new();
+        let mut svs = 0;
+        let mut iters = 0;
+        for seed in 0..seeds as u64 {
+            let ds = SlabConfig::default().generate(m, 1000 + seed);
+            let (model, out) = train_full(&ds.x, Kernel::Linear, &params)?;
+            let eval =
+                SlabConfig::default().generate_eval(m / 2, m / 2, 2000 + seed);
+            let c = model.evaluate(&eval);
+            times.push(out.stats.seconds);
+            mccs.push(c.mcc());
+            svs = model.n_sv();
+            iters = out.stats.iterations;
+        }
+        println!(
+            "{m:>6} {:>12.3} {:>10.3} {svs:>8} {iters:>12}",
+            slabsvm::linalg::median(&times),
+            slabsvm::linalg::mean(&mccs),
+        );
+    }
+    println!(
+        "paper reports: 500->0.35s/0.07  1000->0.67s/0.13  2000->2.1s/0.26  5000->5.91s/0.33"
+    );
+    Ok(())
+}
+
+/// SMO vs generic QP solvers (the paper's scaling claim).
+fn bench_qp(seeds: usize) -> Result<()> {
+    use slabsvm::solver::{qp_ipm, qp_pg};
+    println!("SMO vs generic QP solvers — median training seconds");
+    println!("{:>6} {:>12} {:>12} {:>12}", "m", "smo", "proj-grad", "ipm");
+    for &m in &[250usize, 500, 1000, 2000] {
+        let mut t_smo = Vec::new();
+        let mut t_pg = Vec::new();
+        let mut t_ipm = Vec::new();
+        for seed in 0..seeds as u64 {
+            let ds = SlabConfig::default().generate(m, 3000 + seed);
+            let (_, out) =
+                train_full(&ds.x, Kernel::Linear, &SmoParams::default())?;
+            t_smo.push(out.stats.seconds);
+            let (_, st) =
+                qp_pg::train(&ds.x, Kernel::Linear, &qp_pg::PgParams::default())?;
+            t_pg.push(st.seconds);
+            if m <= 1000 {
+                let (_, st) = qp_ipm::train(
+                    &ds.x,
+                    Kernel::Linear,
+                    &qp_ipm::IpmParams::default(),
+                )?;
+                t_ipm.push(st.seconds);
+            }
+        }
+        let ipm_s = if t_ipm.is_empty() {
+            "   (skipped)".to_string()
+        } else {
+            format!("{:>12.3}", slabsvm::linalg::median(&t_ipm))
+        };
+        println!(
+            "{m:>6} {:>12.3} {:>12.3} {ipm_s}",
+            slabsvm::linalg::median(&t_smo),
+            slabsvm::linalg::median(&t_pg),
+        );
+    }
+    Ok(())
+}
+
+/// Working-set heuristic ablation (A1).
+fn bench_heuristics(seeds: usize) -> Result<()> {
+    use slabsvm::solver::Heuristic;
+    println!("Working-set heuristics — median iterations / seconds (m=2000)");
+    println!("{:>18} {:>12} {:>12}", "heuristic", "iterations", "time(s)");
+    for h in [
+        Heuristic::PaperMaxFbar,
+        Heuristic::MaxViolation,
+        Heuristic::RandomViolator,
+    ] {
+        let mut iters = Vec::new();
+        let mut times = Vec::new();
+        for seed in 0..seeds as u64 {
+            let ds = SlabConfig::default().generate(2000, 4000 + seed);
+            let params = SmoParams { heuristic: h, ..Default::default() };
+            let (_, out) = train_full(&ds.x, Kernel::Linear, &params)?;
+            iters.push(out.stats.iterations as f64);
+            times.push(out.stats.seconds);
+        }
+        println!(
+            "{:>18} {:>12.0} {:>12.3}",
+            h.name(),
+            slabsvm::linalg::median(&iters),
+            slabsvm::linalg::median(&times)
+        );
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- serve
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let spec = vec![
+        ArgSpec::opt("engine", "native", "compute engine: native|pjrt"),
+        ArgSpec::opt("artifacts", "artifacts", "artifacts dir for pjrt"),
+        ArgSpec::opt("requests", "2000", "synthetic requests to serve"),
+        ArgSpec::opt("batch", "256", "batcher max batch"),
+        ArgSpec::opt("wait-us", "500", "batcher max wait (us)"),
+        ArgSpec::opt("workers", "2", "scoring worker threads"),
+        ArgSpec::opt("train-size", "1000", "training points for the demo model"),
+    ];
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", render_help("serve", "serve a synthetic workload", &spec));
+        return Ok(());
+    }
+    let p = parse_args(&spec, args)?;
+    let engine = make_engine(&p)?;
+    let n_req = p.get_usize("requests")?;
+    let cfg = BatcherConfig {
+        max_batch: p.get_usize("batch")?,
+        max_wait_us: p.get_usize("wait-us")? as u64,
+        queue_cap: 16384,
+    };
+    println!("starting coordinator (engine={}, {:?})", engine.name(), cfg);
+    let c = Coordinator::start(engine, cfg, p.get_usize("workers")?);
+
+    // train the demo model through the async job queue
+    let ds = SlabConfig::default().generate(p.get_usize("train-size")?, 42);
+    let job = c.submit_train(TrainRequest {
+        name: "demo".into(),
+        dataset: ds,
+        kernel: Kernel::Linear,
+        params: SmoParams::default(),
+    });
+    match c.wait_job(job) {
+        Some(slabsvm::coordinator::JobStatus::Done {
+            iterations,
+            seconds,
+            n_sv,
+            ..
+        }) => {
+            println!("model trained: {iterations} iters, {seconds:.3}s, {n_sv} SVs");
+        }
+        other => {
+            return Err(Error::Coordinator(format!("training failed: {other:?}")))
+        }
+    }
+
+    // open-loop synthetic workload
+    let eval = SlabConfig::default().generate_eval(n_req, n_req, 77);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_req)
+        .map(|i| c.score_async("demo", vec![eval.x.row(i).to_vec()]))
+        .collect();
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv().map_or(false, |r| r.is_ok()) {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "served {ok}/{n_req} requests in {dt:.3}s ({:.0} req/s)",
+        ok as f64 / dt
+    );
+    println!("stats: {}", c.stats().summary());
+    c.shutdown();
+    Ok(())
+}
+
+// ------------------------------------------------------------------- sweep
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let mut spec = vec![
+        ArgSpec::opt("folds", "3", "cross-validation folds"),
+        ArgSpec::opt("nu1", "0.05,0.1,0.2,0.5", "comma-separated nu1 grid"),
+        ArgSpec::opt("nu2", "0.01,0.05,0.1", "comma-separated nu2 grid"),
+        ArgSpec::opt("eps-grid", "0.3,0.5,0.667", "comma-separated eps grid"),
+        ArgSpec::opt("top", "10", "rows to print"),
+        ArgSpec::flag("json", "emit one JSON line per grid point"),
+    ];
+    spec.extend(data_args());
+    spec.extend(kernel_args());
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", render_help("sweep", "CV grid search", &spec));
+        return Ok(());
+    }
+    let p = parse_args(&spec, args)?;
+    let train = load_dataset(&p)?.positives_only();
+    // negatives for the CV metric: synthetic off-band anomalies
+    let negatives = SlabConfig::default()
+        .generate_eval(0, (train.len() / 2).max(50), p.get_usize("seed")? as u64 ^ 0xabc)
+        .select(&(0..(train.len() / 2).max(50)).collect::<Vec<_>>());
+    let kernel = parse_kernel_from(&p)?;
+
+    let parse_grid = |key: &str| -> Result<Vec<f64>> {
+        p.get_str(key)?
+            .split(',')
+            .map(|t| {
+                t.trim().parse::<f64>().map_err(|_| {
+                    Error::config(format!("--{key}: bad number {t:?}"))
+                })
+            })
+            .collect()
+    };
+    let nu1s = parse_grid("nu1")?;
+    let nu2s = parse_grid("nu2")?;
+    let epss = parse_grid("eps-grid")?;
+    let folds = p.get_usize("folds")?;
+    println!(
+        "sweeping {} grid points, {folds}-fold CV, {} training points",
+        nu1s.len() * nu2s.len() * epss.len(),
+        train.len()
+    );
+    let results = slabsvm::data::cv::grid_search(
+        &train, &negatives, &[kernel], &nu1s, &nu2s, &epss, folds,
+        p.get_usize("seed")? as u64,
+    )?;
+    println!(
+        "{:>6} {:>6} {:>6} | {:>8} {:>12}",
+        "nu1", "nu2", "eps", "mean MCC", "train s/fold"
+    );
+    for r in results.iter().take(p.get_usize("top")?) {
+        println!(
+            "{:>6} {:>6} {:>6.3} | {:>8.3} {:>12.3}",
+            r.params.nu1, r.params.nu2, r.params.eps, r.mean_mcc,
+            r.mean_train_seconds
+        );
+        if p.flag("json") {
+            use slabsvm::util::json::Json;
+            println!(
+                "SWEEPJSON {}",
+                Json::obj(vec![
+                    ("nu1", Json::num(r.params.nu1)),
+                    ("nu2", Json::num(r.params.nu2)),
+                    ("eps", Json::num(r.params.eps)),
+                    ("mean_mcc", Json::num(r.mean_mcc)),
+                    (
+                        "fold_mcc",
+                        Json::arr(
+                            r.fold_mcc.iter().map(|&v| Json::num(v)).collect()
+                        )
+                    ),
+                ])
+            );
+        }
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------------------- info
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let spec = vec![ArgSpec::opt("artifacts", "artifacts", "artifacts directory")];
+    if args.iter().any(|a| a == "--help") {
+        println!("{}", render_help("info", "manifest + engine diagnostics", &spec));
+        return Ok(());
+    }
+    let p = parse_args(&spec, args)?;
+    let dir = p.get_str("artifacts")?;
+    match slabsvm::runtime::Manifest::load(dir) {
+        Ok(m) => {
+            println!(
+                "manifest: {} artifacts | m buckets {:?} | d buckets {:?} | q buckets {:?}",
+                m.artifacts.len(),
+                m.m_buckets,
+                m.d_buckets,
+                m.q_buckets
+            );
+            for a in &m.artifacts {
+                println!(
+                    "  {:10} family={:8} m={:5} d={:2} q={:3}  {}",
+                    format!("{:?}", a.kind).to_lowercase(),
+                    a.family,
+                    a.m,
+                    a.d,
+                    a.q,
+                    a.path.file_name().unwrap_or_default().to_string_lossy()
+                );
+            }
+        }
+        Err(e) => println!("no artifacts: {e}"),
+    }
+    println!(
+        "threads available: {}",
+        slabsvm::util::threadpool::default_threads()
+    );
+    Ok(())
+}

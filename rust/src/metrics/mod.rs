@@ -1,0 +1,318 @@
+//! Classification metrics: confusion matrix, MCC (the paper's Table-1
+//! metric), precision/recall/F1 and ROC-AUC.
+//!
+//! MCC (Matthews Correlation Coefficient, Powers 2011 — the paper's
+//! reference [27]) is the quality metric Table 1 reports; it remains
+//! informative under the heavy class imbalance open-set evaluation sets
+//! have, which is why the paper picks it.
+
+/// Binary confusion counts (positive class = +1 "inside the slab").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: u64,
+    pub tn: u64,
+    pub fp: u64,
+    pub fn_: u64,
+}
+
+impl Confusion {
+    /// Tally from parallel label slices (+1/-1 each).
+    pub fn from_labels(truth: &[i8], pred: &[i8]) -> Confusion {
+        assert_eq!(truth.len(), pred.len());
+        let mut c = Confusion::default();
+        for (&t, &p) in truth.iter().zip(pred) {
+            match (t > 0, p > 0) {
+                (true, true) => c.tp += 1,
+                (false, false) => c.tn += 1,
+                (false, true) => c.fp += 1,
+                (true, false) => c.fn_ += 1,
+            }
+        }
+        c
+    }
+
+    pub fn total(&self) -> u64 {
+        self.tp + self.tn + self.fp + self.fn_
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.total() == 0 {
+            return 0.0;
+        }
+        (self.tp + self.tn) as f64 / self.total() as f64
+    }
+
+    pub fn precision(&self) -> f64 {
+        let d = self.tp + self.fp;
+        if d == 0 {
+            0.0
+        } else {
+            self.tp as f64 / d as f64
+        }
+    }
+
+    pub fn recall(&self) -> f64 {
+        let d = self.tp + self.fn_;
+        if d == 0 {
+            0.0
+        } else {
+            self.tp as f64 / d as f64
+        }
+    }
+
+    pub fn f1(&self) -> f64 {
+        let p = self.precision();
+        let r = self.recall();
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+
+    /// Matthews Correlation Coefficient in [-1, 1]; 0 when any marginal
+    /// is empty (the usual convention).
+    pub fn mcc(&self) -> f64 {
+        let (tp, tn, fp, fn_) =
+            (self.tp as f64, self.tn as f64, self.fp as f64, self.fn_ as f64);
+        let denom =
+            ((tp + fp) * (tp + fn_) * (tn + fp) * (tn + fn_)).sqrt();
+        if denom == 0.0 {
+            0.0
+        } else {
+            (tp * tn - fp * fn_) / denom
+        }
+    }
+}
+
+/// Convenience: MCC straight from label slices.
+pub fn mcc(truth: &[i8], pred: &[i8]) -> f64 {
+    Confusion::from_labels(truth, pred).mcc()
+}
+
+/// ROC-AUC from real-valued scores (higher = more positive). Handles
+/// ties by averaging ranks (equivalent to the Mann-Whitney U statistic).
+pub fn roc_auc(truth: &[i8], scores: &[f64]) -> f64 {
+    assert_eq!(truth.len(), scores.len());
+    let n_pos = truth.iter().filter(|&&t| t > 0).count();
+    let n_neg = truth.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    // rank with tie-averaging
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let mut ranks = vec![0.0f64; scores.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    let sum_pos: f64 = truth
+        .iter()
+        .zip(&ranks)
+        .filter(|(&t, _)| t > 0)
+        .map(|(_, &r)| r)
+        .sum();
+    let u = sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0;
+    u / (n_pos * n_neg) as f64
+}
+
+/// Balanced accuracy = (TPR + TNR) / 2 — robust to class imbalance.
+pub fn balanced_accuracy(c: &Confusion) -> f64 {
+    let tpr = if c.tp + c.fn_ == 0 {
+        0.0
+    } else {
+        c.tp as f64 / (c.tp + c.fn_) as f64
+    };
+    let tnr = if c.tn + c.fp == 0 {
+        0.0
+    } else {
+        c.tn as f64 / (c.tn + c.fp) as f64
+    };
+    0.5 * (tpr + tnr)
+}
+
+/// Area under the precision-recall curve (average precision, step
+/// interpolation). Scores ranked descending; ties broken by index.
+pub fn pr_auc(truth: &[i8], scores: &[f64]) -> f64 {
+    assert_eq!(truth.len(), scores.len());
+    let n_pos = truth.iter().filter(|&&t| t > 0).count();
+    if n_pos == 0 {
+        return 0.0;
+    }
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut tp = 0usize;
+    let mut ap = 0.0;
+    for (rank, &i) in idx.iter().enumerate() {
+        if truth[i] > 0 {
+            tp += 1;
+            ap += tp as f64 / (rank + 1) as f64;
+        }
+    }
+    ap / n_pos as f64
+}
+
+/// Precision/recall at a sweep of score thresholds (for PR curves in
+/// reports). Returns (threshold, precision, recall) triples, descending
+/// threshold.
+pub fn pr_curve(truth: &[i8], scores: &[f64], points: usize) -> Vec<(f64, f64, f64)> {
+    assert_eq!(truth.len(), scores.len());
+    let mut sorted: Vec<f64> = scores.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut out = Vec::with_capacity(points);
+    for p in 0..points {
+        let k = ((p as f64 / (points - 1).max(1) as f64)
+            * (sorted.len() - 1) as f64) as usize;
+        let thr = sorted[k];
+        let pred: Vec<i8> = scores
+            .iter()
+            .map(|&s| if s >= thr { 1 } else { -1 })
+            .collect();
+        let c = Confusion::from_labels(truth, &pred);
+        out.push((thr, c.precision(), c.recall()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn confusion_tally() {
+        let truth = [1, 1, -1, -1, 1];
+        let pred = [1, -1, -1, 1, 1];
+        let c = Confusion::from_labels(&truth, &pred);
+        assert_eq!(c, Confusion { tp: 2, tn: 1, fp: 1, fn_: 1 });
+        assert!((c.accuracy() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_mcc_is_one() {
+        let y = [1, -1, 1, -1];
+        assert!((mcc(&y, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverted_mcc_is_minus_one() {
+        let y = [1, -1, 1, -1];
+        let inv: Vec<i8> = y.iter().map(|&v| -v).collect();
+        assert!((mcc(&y, &inv) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_mcc_near_zero() {
+        // predictions independent of truth -> MCC ~ 0
+        let mut rng = crate::util::rng::Rng::new(77);
+        let truth: Vec<i8> =
+            (0..5000).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+        let pred: Vec<i8> = (0..5000)
+            .map(|_| if rng.uniform() < 0.5 { 1 } else { -1 })
+            .collect();
+        assert!(mcc(&truth, &pred).abs() < 0.05);
+    }
+
+    #[test]
+    fn degenerate_marginals_give_zero() {
+        assert_eq!(mcc(&[1, 1, 1], &[1, 1, 1]), 0.0); // no negatives
+        assert_eq!(mcc(&[1, -1], &[1, 1]), 0.0); // pred all-positive
+    }
+
+    #[test]
+    fn known_mcc_value() {
+        // tp=90 tn=80 fp=20 fn=10
+        let c = Confusion { tp: 90, tn: 80, fp: 20, fn_: 10 };
+        let want = (90.0 * 80.0 - 20.0 * 10.0)
+            / ((110.0f64) * 100.0 * 100.0 * 90.0).sqrt();
+        assert!((c.mcc() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_precision_recall() {
+        let c = Confusion { tp: 8, tn: 5, fp: 2, fn_: 4 };
+        assert!((c.precision() - 0.8).abs() < 1e-12);
+        assert!((c.recall() - 8.0 / 12.0).abs() < 1e-12);
+        let f1 = 2.0 * 0.8 * (8.0 / 12.0) / (0.8 + 8.0 / 12.0);
+        assert!((c.f1() - f1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_perfect_and_inverted() {
+        let truth = [1, 1, -1, -1];
+        assert!((roc_auc(&truth, &[0.9, 0.8, 0.2, 0.1]) - 1.0).abs() < 1e-12);
+        assert!((roc_auc(&truth, &[0.1, 0.2, 0.8, 0.9]) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_with_ties_is_half() {
+        let truth = [1, -1, 1, -1];
+        assert!((roc_auc(&truth, &[0.5, 0.5, 0.5, 0.5]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_known_value() {
+        // scores: pos {0.8, 0.4}, neg {0.6, 0.2}
+        // pairs won: (0.8>0.6)+(0.8>0.2)+(0.4<0.6 loses)+(0.4>0.2) = 3/4
+        let truth = [1, 1, -1, -1];
+        assert!((roc_auc(&truth, &[0.8, 0.4, 0.6, 0.2]) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_returns_half() {
+        assert_eq!(roc_auc(&[1, 1], &[0.1, 0.9]), 0.5);
+    }
+
+    #[test]
+    fn balanced_accuracy_values() {
+        // perfect
+        let c = Confusion { tp: 10, tn: 90, fp: 0, fn_: 0 };
+        assert!((balanced_accuracy(&c) - 1.0).abs() < 1e-12);
+        // all-positive predictor on imbalanced data: TPR=1, TNR=0 -> 0.5
+        let c = Confusion { tp: 10, tn: 0, fp: 90, fn_: 0 };
+        assert!((balanced_accuracy(&c) - 0.5).abs() < 1e-12);
+        // degenerate empty marginals
+        let c = Confusion { tp: 0, tn: 0, fp: 0, fn_: 0 };
+        assert_eq!(balanced_accuracy(&c), 0.0);
+    }
+
+    #[test]
+    fn pr_auc_perfect_ranking_is_one() {
+        let truth = [1, 1, -1, -1];
+        assert!((pr_auc(&truth, &[0.9, 0.8, 0.2, 0.1]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pr_auc_known_value() {
+        // ranking: pos, neg, pos, neg -> AP = (1/1 + 2/3)/2 = 5/6
+        let truth = [1, -1, 1, -1];
+        let got = pr_auc(&truth, &[0.9, 0.8, 0.7, 0.6]);
+        assert!((got - 5.0 / 6.0).abs() < 1e-12, "{got}");
+    }
+
+    #[test]
+    fn pr_auc_no_positives_is_zero() {
+        assert_eq!(pr_auc(&[-1, -1], &[0.1, 0.9]), 0.0);
+    }
+
+    #[test]
+    fn pr_curve_monotone_recall() {
+        let truth = [1, 1, 1, -1, -1, 1, -1, -1];
+        let scores = [0.9, 0.85, 0.7, 0.65, 0.5, 0.45, 0.3, 0.1];
+        let curve = pr_curve(&truth, &scores, 8);
+        // recall is non-decreasing as the threshold drops
+        for w in curve.windows(2) {
+            assert!(w[1].2 >= w[0].2 - 1e-12, "recall decreased: {curve:?}");
+        }
+        // the loosest threshold has recall 1
+        assert!((curve.last().unwrap().2 - 1.0).abs() < 1e-12);
+    }
+}

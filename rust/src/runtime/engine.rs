@@ -1,0 +1,143 @@
+//! `Engine`: one interface over the native and PJRT compute paths.
+//!
+//! The solvers and the serving coordinator are written against this
+//! enum; `--engine native|pjrt` on the CLI switches the whole stack.
+//! The PJRT variant talks to the dedicated executor thread through
+//! [`PjrtProxy`] (the `xla` client is not `Send`), so `Engine` itself is
+//! `Send + Clone` and fans out across batcher workers. PJRT calls that
+//! fall outside the artifact buckets degrade gracefully to the native
+//! path (recorded in [`EngineStats::fallbacks`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::proxy::PjrtProxy;
+use crate::kernel::Kernel;
+use crate::linalg::Matrix;
+use crate::solver::ocssvm::SlabModel;
+use crate::util::threadpool;
+use crate::Result;
+
+/// Fallback counters.
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    /// PJRT requests served natively because no bucket fit
+    pub fallbacks: AtomicU64,
+}
+
+/// Compute engine selection.
+#[derive(Clone)]
+pub enum Engine {
+    /// pure-rust kernels (parallel, f64)
+    Native,
+    /// AOT artifacts on the PJRT CPU client (f32), via the executor proxy
+    Pjrt(PjrtProxy, Arc<EngineStats>),
+}
+
+impl Engine {
+    /// Build the PJRT variant from an artifacts directory.
+    pub fn pjrt(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        Ok(Engine::Pjrt(
+            PjrtProxy::start(artifacts_dir)?,
+            Arc::new(EngineStats::default()),
+        ))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Native => "native",
+            Engine::Pjrt(..) => "pjrt",
+        }
+    }
+
+    fn native_predict(model: &SlabModel, xq: &Matrix) -> (Vec<f64>, Vec<i8>) {
+        let scores = model.scores(xq);
+        let labels = scores
+            .iter()
+            .map(|&s| {
+                if (s - model.rho1) * (model.rho2 - s) >= 0.0 {
+                    1i8
+                } else {
+                    -1i8
+                }
+            })
+            .collect();
+        (scores, labels)
+    }
+
+    /// Full Gram matrix.
+    pub fn gram(&self, x: &Matrix, kernel: Kernel) -> Result<Matrix> {
+        match self {
+            Engine::Native => Ok(kernel.gram(x, threadpool::default_threads())),
+            Engine::Pjrt(proxy, stats) => match proxy.gram(x, kernel)? {
+                Some(k) => Ok(k),
+                None => {
+                    stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+                    Ok(kernel.gram(x, threadpool::default_threads()))
+                }
+            },
+        }
+    }
+
+    /// Batched model scoring: (scores, labels) for a query matrix.
+    pub fn predict(
+        &self,
+        model: &Arc<SlabModel>,
+        xq: &Matrix,
+    ) -> Result<(Vec<f64>, Vec<i8>)> {
+        match self {
+            Engine::Native => Ok(Self::native_predict(model, xq)),
+            Engine::Pjrt(proxy, stats) => match proxy.predict(model, xq)? {
+                Some(r) => Ok(r),
+                None => {
+                    stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+                    Ok(Self::native_predict(model, xq))
+                }
+            },
+        }
+    }
+
+    /// Number of PJRT fallbacks so far (0 for native).
+    pub fn fallbacks(&self) -> u64 {
+        match self {
+            Engine::Native => 0,
+            Engine::Pjrt(_, stats) => stats.fallbacks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+    use crate::solver::smo::{train_full, SmoParams};
+
+    #[test]
+    fn native_gram_works() {
+        let ds = SlabConfig::default().generate(50, 71);
+        let k = Engine::Native.gram(&ds.x, Kernel::Rbf { g: 0.1 }).unwrap();
+        assert_eq!(k.rows(), 50);
+        assert!((k.get(7, 7) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn native_predict_matches_model() {
+        let ds = SlabConfig::default().generate(120, 72);
+        let (model, _) =
+            train_full(&ds.x, Kernel::Linear, &SmoParams::default()).unwrap();
+        let model = Arc::new(model);
+        let q = SlabConfig::default().generate_eval(30, 30, 73);
+        let (scores, labels) = Engine::Native.predict(&model, &q.x).unwrap();
+        let want = model.predict(&q.x);
+        assert_eq!(labels, want);
+        for (i, &s) in scores.iter().enumerate() {
+            assert!((s - model.score(q.x.row(i))).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn engine_is_send_and_clone() {
+        fn assert_send<T: Send + Clone>() {}
+        assert_send::<Engine>();
+    }
+}

@@ -1,0 +1,237 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+//!
+//! `artifacts/manifest.json` lists every lowered HLO module with its
+//! entry shapes so the runtime can select shape buckets without parsing
+//! HLO text. Padding contract: the runtime may execute a problem of size
+//! n on any bucket with m ≥ n by zero-padding (γ = 0 on padded rows).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Kind of computation an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ArtifactKind {
+    /// (x[m,d], p3) -> (K[m,m],)
+    Kmatrix,
+    /// (x[m,d], gamma[m], p5, xq[q,d]) -> (scores[q], labels[q])
+    Decision,
+    /// (K[m,m], gamma[m], p5) -> (viol[m], fbar[m])
+    Kkt,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "kmatrix" => Ok(ArtifactKind::Kmatrix),
+            "decision" => Ok(ArtifactKind::Decision),
+            "kkt" => Ok(ArtifactKind::Kkt),
+            other => Err(Error::Artifact(format!("unknown artifact kind {other}"))),
+        }
+    }
+}
+
+/// One lowered HLO module.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub kind: ArtifactKind,
+    /// kernel family name ("linear", "rbf", ... or "any" for kkt)
+    pub family: String,
+    /// support-set bucket size
+    pub m: usize,
+    /// feature-dim bucket (0 when not applicable)
+    pub d: usize,
+    /// query bucket (0 when not applicable)
+    pub q: usize,
+    /// path to the HLO text file
+    pub path: PathBuf,
+}
+
+/// Parsed manifest with bucket lookup.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactInfo>,
+    /// distinct m buckets, ascending
+    pub m_buckets: Vec<usize>,
+    /// distinct (kind-specific) d buckets, ascending
+    pub d_buckets: Vec<usize>,
+    /// distinct q buckets, ascending
+    pub q_buckets: Vec<usize>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(
+            |e| {
+                Error::Artifact(format!(
+                    "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                    dir.display()
+                ))
+            },
+        )?;
+        let j = Json::parse(&text)?;
+        if j.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            return Err(Error::Artifact("manifest format must be hlo-text".into()));
+        }
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Artifact("manifest missing artifacts".into()))?;
+
+        let mut out = Manifest::default();
+        let mut mb: BTreeMap<usize, ()> = BTreeMap::new();
+        let mut db: BTreeMap<usize, ()> = BTreeMap::new();
+        let mut qb: BTreeMap<usize, ()> = BTreeMap::new();
+        for a in arts {
+            let get_s = |k: &str| a.get(k).and_then(Json::as_str);
+            let get_n = |k: &str| a.get(k).and_then(Json::as_usize).unwrap_or(0);
+            let kind = ArtifactKind::parse(
+                get_s("kind").ok_or_else(|| Error::Artifact("missing kind".into()))?,
+            )?;
+            let file = get_s("file")
+                .ok_or_else(|| Error::Artifact("missing file".into()))?;
+            let info = ArtifactInfo {
+                kind,
+                family: get_s("family").unwrap_or("any").to_string(),
+                m: get_n("m"),
+                d: get_n("d"),
+                q: get_n("q"),
+                path: dir.join(file),
+            };
+            if !info.path.exists() {
+                return Err(Error::Artifact(format!(
+                    "manifest lists missing file {}",
+                    info.path.display()
+                )));
+            }
+            mb.insert(info.m, ());
+            if info.d > 0 {
+                db.insert(info.d, ());
+            }
+            if info.q > 0 {
+                qb.insert(info.q, ());
+            }
+            out.artifacts.push(info);
+        }
+        out.m_buckets = mb.into_keys().collect();
+        out.d_buckets = db.into_keys().collect();
+        out.q_buckets = qb.into_keys().collect();
+        Ok(out)
+    }
+
+    /// Smallest bucket ≥ n from a sorted bucket list.
+    pub fn bucket_for(buckets: &[usize], n: usize) -> Option<usize> {
+        buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Locate the artifact for (kind, family, exact buckets).
+    pub fn find(
+        &self,
+        kind: ArtifactKind,
+        family: &str,
+        m: usize,
+        d: usize,
+        q: usize,
+    ) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| {
+            a.kind == kind
+                && a.m == m
+                && a.d == d
+                && a.q == q
+                && (a.family == family || a.family == "any")
+        })
+    }
+
+    /// Pick buckets and locate an artifact for a problem of size
+    /// (n, dim[, nq]). Returns None if any dimension exceeds the largest
+    /// bucket (callers fall back to the native engine or chunk).
+    pub fn select(
+        &self,
+        kind: ArtifactKind,
+        family: &str,
+        n: usize,
+        dim: usize,
+        nq: usize,
+    ) -> Option<&ArtifactInfo> {
+        let m = Self::bucket_for(&self.m_buckets, n)?;
+        let d = if kind == ArtifactKind::Kkt {
+            0
+        } else {
+            Self::bucket_for(&self.d_buckets, dim)?
+        };
+        let q = if kind == ArtifactKind::Decision {
+            Self::bucket_for(&self.q_buckets, nq.min(self.max_q()?))?
+        } else {
+            0
+        };
+        self.find(kind, family, m, d, q)
+    }
+
+    /// Largest query bucket (decision requests are chunked to this).
+    pub fn max_q(&self) -> Option<usize> {
+        self.q_buckets.last().copied()
+    }
+
+    /// Largest m bucket.
+    pub fn max_m(&self) -> Option<usize> {
+        self.m_buckets.last().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 20);
+        assert!(m.m_buckets.contains(&256));
+        assert!(m.m_buckets.contains(&2048));
+        assert!(m.q_buckets.contains(&64));
+    }
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(Manifest::bucket_for(&[256, 512, 1024], 100), Some(256));
+        assert_eq!(Manifest::bucket_for(&[256, 512, 1024], 256), Some(256));
+        assert_eq!(Manifest::bucket_for(&[256, 512, 1024], 257), Some(512));
+        assert_eq!(Manifest::bucket_for(&[256, 512, 1024], 5000), None);
+    }
+
+    #[test]
+    fn select_finds_linear_kmatrix() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.select(ArtifactKind::Kmatrix, "linear", 300, 2, 0).unwrap();
+        assert_eq!(a.m, 512);
+        assert_eq!(a.d, 2);
+        // kkt artifacts are family-agnostic
+        let k = m.select(ArtifactKind::Kkt, "rbf", 1000, 0, 0).unwrap();
+        assert_eq!(k.m, 1024);
+        // oversize returns None
+        assert!(m.select(ArtifactKind::Kmatrix, "linear", 100_000, 2, 0).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_artifact_error() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)));
+    }
+}

@@ -1,0 +1,25 @@
+//! PJRT runtime: load + execute the AOT artifacts from `make artifacts`.
+//!
+//! This is the request-path bridge to the Python-authored compute: the
+//! JAX/Pallas graphs are lowered once to HLO text (`python/compile/aot.py`),
+//! and this module loads them with the `xla` crate
+//! (`PjRtClient::cpu() → HloModuleProto::from_text_file → compile →
+//! execute`) — Python never runs after build time.
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json`, shape-bucket lookup.
+//! * [`pjrt`] — executable cache + typed wrappers per artifact kind
+//!   (Gram matrix, batched decision function, KKT sweep) with padding to
+//!   shape buckets (padded support rows carry γ = 0, making them inert).
+//! * [`engine`] — `Engine`: one enum over the native (pure-rust) and
+//!   PJRT paths exposing identical semantics; equivalence across the two
+//!   is asserted in `rust/tests/runtime_roundtrip.rs` (experiment A3).
+
+pub mod engine;
+pub mod manifest;
+pub mod pjrt;
+pub mod proxy;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactInfo, ArtifactKind, Manifest};
+pub use pjrt::PjrtEngine;
+pub use proxy::PjrtProxy;

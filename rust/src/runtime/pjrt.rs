@@ -1,0 +1,306 @@
+//! PJRT executor: compile-once, execute-many wrappers per artifact.
+//!
+//! One [`PjrtEngine`] owns the CPU PJRT client and a cache of compiled
+//! executables keyed by artifact path — an artifact is parsed + compiled
+//! at most once per process, then every call is a pure execute (this is
+//! the property that makes the serving hot path Python-free and
+//! compile-free).
+//!
+//! Padding contract (see python/compile/model.py): problems are padded
+//! up to the artifact's shape bucket with zero rows and γ = 0; padded
+//! entries are inert in every contraction, and outputs are sliced back
+//! to the logical size.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{ArtifactInfo, ArtifactKind, Manifest};
+use crate::error::{Error, Result};
+use crate::kernel::Kernel;
+use crate::linalg::Matrix;
+
+/// Per-engine execution counters (exposed via coordinator stats).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PjrtStats {
+    pub compiles: u64,
+    pub executions: u64,
+    /// cumulative seconds inside PJRT execute calls
+    pub exec_seconds: f64,
+}
+
+/// PJRT-backed compute engine over the AOT artifact set.
+pub struct PjrtEngine {
+    client: PjRtClient,
+    manifest: Manifest,
+    /// compiled executable cache, keyed by artifact file path
+    cache: Mutex<HashMap<String, PjRtLoadedExecutable>>,
+    stats: Mutex<PjrtStats>,
+}
+
+impl PjrtEngine {
+    /// Create from an artifacts directory (must contain manifest.json).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(PjrtStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> PjrtStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Compile (or fetch) the executable for an artifact.
+    fn executable(&self, info: &ArtifactInfo) -> Result<()> {
+        let key = info.path.to_string_lossy().to_string();
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(&key) {
+            return Ok(());
+        }
+        let proto = HloModuleProto::from_text_file(
+            info.path
+                .to_str()
+                .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.stats.lock().unwrap().compiles += 1;
+        cache.insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on literals, returning the tuple elements.
+    fn run(&self, info: &ArtifactInfo, args: &[Literal]) -> Result<Vec<Literal>> {
+        self.executable(info)?;
+        let key = info.path.to_string_lossy().to_string();
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(&key).expect("just compiled");
+        let t0 = Instant::now();
+        let result = exe.execute::<Literal>(args)?[0][0].to_literal_sync()?;
+        let mut st = self.stats.lock().unwrap();
+        st.executions += 1;
+        st.exec_seconds += t0.elapsed().as_secs_f64();
+        drop(st);
+        Ok(result.to_tuple()?)
+    }
+
+    /// Pad an [n, d] matrix into an [m_bucket, d_bucket] f32 literal.
+    fn pad_matrix(x: &Matrix, mb: usize, db: usize) -> Result<Literal> {
+        let (n, d) = (x.rows(), x.cols());
+        let mut flat = vec![0f32; mb * db];
+        for i in 0..n {
+            for j in 0..d {
+                flat[i * db + j] = x.get(i, j) as f32;
+            }
+        }
+        Ok(Literal::vec1(&flat).reshape(&[mb as i64, db as i64])?)
+    }
+
+    /// Pad a length-n vector into a length-m f32 literal.
+    fn pad_vec(v: &[f64], mb: usize) -> Literal {
+        let mut flat = vec![0f32; mb];
+        for (i, &x) in v.iter().enumerate() {
+            flat[i] = x as f32;
+        }
+        Literal::vec1(&flat)
+    }
+
+    /// Gram matrix via the `kmatrix_*` artifact. Returns None (caller
+    /// falls back to native) when n exceeds the largest bucket or the
+    /// kernel family was not exported.
+    pub fn kmatrix(&self, x: &Matrix, kernel: Kernel) -> Result<Option<Matrix>> {
+        let (n, d) = (x.rows(), x.cols());
+        let Some(info) = self.manifest.select(
+            ArtifactKind::Kmatrix,
+            kernel.family(),
+            n,
+            d,
+            0,
+        ) else {
+            return Ok(None);
+        };
+        let (mb, db) = (info.m, info.d);
+        let xl = Self::pad_matrix(x, mb, db)?;
+        let p3 = Literal::vec1(&kernel.params3());
+        let out = self.run(info, &[xl, p3])?;
+        let kflat = out[0].to_vec::<f32>()?;
+        // slice the [mb, mb] result back to [n, n]
+        let mut k = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                k.set(i, j, kflat[i * mb + j] as f64);
+            }
+        }
+        Ok(Some(k))
+    }
+
+    /// Batched decision function via the `decision_*` artifact: scores +
+    /// labels for `xq` against a trained model. Queries are chunked to
+    /// the largest query bucket. Returns None on bucket overflow.
+    pub fn decision(
+        &self,
+        x_sv: &Matrix,
+        gamma: &[f64],
+        rho1: f64,
+        rho2: f64,
+        kernel: Kernel,
+        xq: &Matrix,
+    ) -> Result<Option<(Vec<f64>, Vec<i8>)>> {
+        let (n, d) = (x_sv.rows(), x_sv.cols());
+        let nq = xq.rows();
+        let Some(qmax) = self.manifest.max_q() else {
+            return Ok(None);
+        };
+        let Some(info) = self.manifest.select(
+            ArtifactKind::Decision,
+            kernel.family(),
+            n,
+            d,
+            nq.min(qmax),
+        ) else {
+            return Ok(None);
+        };
+        let (mb, db, qb) = (info.m, info.d, info.q);
+
+        let xl = Self::pad_matrix(x_sv, mb, db)?;
+        let gl = Self::pad_vec(gamma, mb);
+        let p = kernel.params3();
+        let p5 = Literal::vec1(&[p[0], p[1], p[2], rho1 as f32, rho2 as f32]);
+
+        let mut scores = Vec::with_capacity(nq);
+        let mut labels = Vec::with_capacity(nq);
+        let mut start = 0;
+        while start < nq {
+            let take = (nq - start).min(qb);
+            // pad query chunk to qb
+            let mut chunk = Matrix::zeros(qb, d);
+            for i in 0..take {
+                chunk.row_mut(i).copy_from_slice(xq.row(start + i));
+            }
+            let ql = Self::pad_matrix(&chunk, qb, db)?;
+            let out = self.run(
+                info,
+                &[xl.clone(), gl.clone(), p5.clone(), ql],
+            )?;
+            let s = out[0].to_vec::<f32>()?;
+            let f = out[1].to_vec::<f32>()?;
+            for i in 0..take {
+                scores.push(s[i] as f64);
+                labels.push(if f[i] > 0.0 { 1i8 } else { -1i8 });
+            }
+            start += take;
+        }
+        Ok(Some((scores, labels)))
+    }
+
+    /// KKT sweep via the `kkt_*` artifact. `kmat` must be the unpadded
+    /// [n, n] Gram matrix. Returns None on bucket overflow.
+    #[allow(clippy::too_many_arguments)]
+    pub fn kkt_sweep(
+        &self,
+        kmat: &Matrix,
+        gamma: &[f64],
+        rho1: f64,
+        rho2: f64,
+        lo: f64,
+        hi: f64,
+        tol: f64,
+    ) -> Result<Option<(Vec<f64>, Vec<f64>)>> {
+        let n = kmat.rows();
+        let Some(info) =
+            self.manifest.select(ArtifactKind::Kkt, "any", n, 0, 0)
+        else {
+            return Ok(None);
+        };
+        let mb = info.m;
+        // pad Gram to [mb, mb]
+        let mut kflat = vec![0f32; mb * mb];
+        for i in 0..n {
+            for j in 0..n {
+                kflat[i * mb + j] = kmat.get(i, j) as f32;
+            }
+        }
+        let kl = Literal::vec1(&kflat).reshape(&[mb as i64, mb as i64])?;
+        let gl = Self::pad_vec(gamma, mb);
+        let p5 = Literal::vec1(&[
+            rho1 as f32,
+            rho2 as f32,
+            lo as f32,
+            hi as f32,
+            tol as f32,
+        ]);
+        let out = self.run(info, &[kl, gl, p5])?;
+        let viol = out[0].to_vec::<f32>()?;
+        let fbar = out[1].to_vec::<f32>()?;
+        Ok(Some((
+            viol[..n].iter().map(|&v| v as f64).collect(),
+            fbar[..n].iter().map(|&v| v as f64).collect(),
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+
+    fn engine() -> Option<PjrtEngine> {
+        let dir =
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(PjrtEngine::new(dir).unwrap())
+    }
+
+    #[test]
+    fn kmatrix_matches_native() {
+        let Some(eng) = engine() else { return };
+        let ds = SlabConfig::default().generate(100, 61);
+        for kernel in [Kernel::Linear, Kernel::Rbf { g: 0.01 }] {
+            let got = eng.kmatrix(&ds.x, kernel).unwrap().expect("bucket fits");
+            let want = kernel.gram(&ds.x, 2);
+            for i in 0..100 {
+                for j in 0..100 {
+                    let (a, b) = (got.get(i, j), want.get(i, j));
+                    assert!(
+                        (a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                        "({i},{j}): {a} vs {b} for {kernel:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn executable_cache_reuses_compilations() {
+        let Some(eng) = engine() else { return };
+        let ds = SlabConfig::default().generate(50, 62);
+        eng.kmatrix(&ds.x, Kernel::Linear).unwrap();
+        let c1 = eng.stats().compiles;
+        eng.kmatrix(&ds.x, Kernel::Linear).unwrap();
+        let c2 = eng.stats().compiles;
+        assert_eq!(c1, c2, "second call must not recompile");
+        assert!(eng.stats().executions >= 2);
+    }
+
+    #[test]
+    fn oversize_falls_back_to_none() {
+        let Some(eng) = engine() else { return };
+        let ds = SlabConfig::default().generate(3000, 63); // > 2048 bucket
+        assert!(eng.kmatrix(&ds.x, Kernel::Linear).unwrap().is_none());
+    }
+}

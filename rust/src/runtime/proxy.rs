@@ -1,0 +1,242 @@
+//! PJRT executor thread + `Send` proxy handle.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and must stay on one
+//! thread. [`PjrtProxy`] gives the multi-threaded coordinator a
+//! `Send + Clone` handle: one dedicated executor thread owns the
+//! [`PjrtEngine`] and serves operations over a channel (the PJRT CPU
+//! client parallelizes internally, so a single dispatch thread is not
+//! the bottleneck; the batcher amortizes the channel hop across whole
+//! batches).
+//!
+//! The executor thread exits when every proxy clone has been dropped.
+
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+
+use super::pjrt::{PjrtEngine, PjrtStats};
+use crate::error::Error;
+use crate::kernel::Kernel;
+use crate::linalg::Matrix;
+use crate::solver::ocssvm::SlabModel;
+use crate::Result;
+
+#[allow(clippy::type_complexity)]
+enum Op {
+    Gram {
+        x: Matrix,
+        kernel: Kernel,
+        reply: Sender<Result<Option<Matrix>>>,
+    },
+    Predict {
+        model: Arc<SlabModel>,
+        xq: Matrix,
+        reply: Sender<Result<Option<(Vec<f64>, Vec<i8>)>>>,
+    },
+    Kkt {
+        kmat: Matrix,
+        gamma: Vec<f64>,
+        rho1: f64,
+        rho2: f64,
+        lo: f64,
+        hi: f64,
+        tol: f64,
+        reply: Sender<Result<Option<(Vec<f64>, Vec<f64>)>>>,
+    },
+    Stats {
+        reply: Sender<PjrtStats>,
+    },
+}
+
+/// Cloneable, thread-safe handle to the PJRT executor thread.
+#[derive(Clone)]
+pub struct PjrtProxy {
+    tx: Sender<Op>,
+}
+
+impl PjrtProxy {
+    /// Spawn the executor thread over an artifacts directory. Fails fast
+    /// if the manifest cannot be loaded (checked on the caller's thread
+    /// before the engine is constructed on the executor thread).
+    pub fn start(artifacts_dir: impl AsRef<std::path::Path>) -> Result<PjrtProxy> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        // validate the manifest here so startup errors are synchronous
+        super::manifest::Manifest::load(&dir)?;
+        let (tx, rx) = mpsc::channel::<Op>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("slabsvm-pjrt".into())
+            .spawn(move || {
+                let engine = match PjrtEngine::new(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(op) = rx.recv() {
+                    match op {
+                        Op::Gram { x, kernel, reply } => {
+                            let _ = reply.send(engine.kmatrix(&x, kernel));
+                        }
+                        Op::Predict { model, xq, reply } => {
+                            let _ = reply.send(engine.decision(
+                                &model.x_sv,
+                                &model.gamma,
+                                model.rho1,
+                                model.rho2,
+                                model.kernel,
+                                &xq,
+                            ));
+                        }
+                        Op::Kkt {
+                            kmat,
+                            gamma,
+                            rho1,
+                            rho2,
+                            lo,
+                            hi,
+                            tol,
+                            reply,
+                        } => {
+                            let _ = reply.send(engine.kkt_sweep(
+                                &kmat, &gamma, rho1, rho2, lo, hi, tol,
+                            ));
+                        }
+                        Op::Stats { reply } => {
+                            let _ = reply.send(engine.stats());
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::Pjrt(format!("cannot spawn pjrt thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Pjrt("pjrt thread died during init".into()))??;
+        Ok(PjrtProxy { tx })
+    }
+
+    fn call<T>(&self, op: Op, rx: mpsc::Receiver<Result<T>>) -> Result<T> {
+        self.tx
+            .send(op)
+            .map_err(|_| Error::Pjrt("pjrt executor thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Pjrt("pjrt executor dropped request".into()))?
+    }
+
+    /// Gram matrix (None = no bucket fits; caller falls back to native).
+    pub fn gram(&self, x: &Matrix, kernel: Kernel) -> Result<Option<Matrix>> {
+        let (reply, rx) = mpsc::channel();
+        self.call(Op::Gram { x: x.clone(), kernel, reply }, rx)
+    }
+
+    /// Batched decision function (None = no bucket fits).
+    pub fn predict(
+        &self,
+        model: &Arc<SlabModel>,
+        xq: &Matrix,
+    ) -> Result<Option<(Vec<f64>, Vec<i8>)>> {
+        let (reply, rx) = mpsc::channel();
+        self.call(
+            Op::Predict { model: Arc::clone(model), xq: xq.clone(), reply },
+            rx,
+        )
+    }
+
+    /// KKT sweep (None = no bucket fits).
+    #[allow(clippy::too_many_arguments)]
+    pub fn kkt_sweep(
+        &self,
+        kmat: &Matrix,
+        gamma: &[f64],
+        rho1: f64,
+        rho2: f64,
+        lo: f64,
+        hi: f64,
+        tol: f64,
+    ) -> Result<Option<(Vec<f64>, Vec<f64>)>> {
+        let (reply, rx) = mpsc::channel();
+        self.call(
+            Op::Kkt {
+                kmat: kmat.clone(),
+                gamma: gamma.to_vec(),
+                rho1,
+                rho2,
+                lo,
+                hi,
+                tol,
+                reply,
+            },
+            rx,
+        )
+    }
+
+    /// Executor-side counters.
+    pub fn stats(&self) -> Result<PjrtStats> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Op::Stats { reply })
+            .map_err(|_| Error::Pjrt("pjrt executor thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Pjrt("pjrt executor dropped request".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+
+    fn proxy() -> Option<PjrtProxy> {
+        let dir =
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(PjrtProxy::start(dir).unwrap())
+    }
+
+    #[test]
+    fn proxy_gram_matches_native() {
+        let Some(p) = proxy() else { return };
+        let ds = SlabConfig::default().generate(64, 111);
+        let got = p.gram(&ds.x, Kernel::Rbf { g: 0.01 }).unwrap().unwrap();
+        let want = Kernel::Rbf { g: 0.01 }.gram(&ds.x, 2);
+        for i in 0..64 {
+            for j in 0..64 {
+                assert!((got.get(i, j) - want.get(i, j)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn proxy_usable_from_many_threads() {
+        let Some(p) = proxy() else { return };
+        let ds = SlabConfig::default().generate(32, 112);
+        let x = Arc::new(ds.x);
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = p.clone();
+            let x = Arc::clone(&x);
+            handles.push(std::thread::spawn(move || {
+                p.gram(&x, Kernel::Linear).unwrap().unwrap()
+            }));
+        }
+        let first = handles
+            .pop()
+            .unwrap()
+            .join()
+            .unwrap();
+        for h in handles {
+            let k = h.join().unwrap();
+            assert_eq!(k.data(), first.data());
+        }
+    }
+
+    #[test]
+    fn bad_dir_fails_fast() {
+        assert!(PjrtProxy::start("/nonexistent").is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! Solvers for the OCSSVM dual + baselines.
+//!
+//! The dual problem, in the paper's γ = α − ᾱ re-parameterization
+//! (eqs. (30)–(32)):
+//!
+//! ```text
+//!   min_γ   ½ γᵀ K γ
+//!   s.t.    lo ≤ γᵢ ≤ hi        lo = −ε/(ν₂ m),  hi = 1/(ν₁ m)
+//!           Σᵢ γᵢ = 1 − ε
+//! ```
+//!
+//! Solvers (all produce a [`ocssvm::SlabModel`] and a [`SolveStats`]):
+//!
+//! * [`smo`] — **the paper's contribution**: sequential minimal
+//!   optimization with the max-|f̄| working-set heuristic;
+//! * [`qp_pg`] — projected-gradient baseline (generic first-order QP);
+//! * [`qp_ipm`] — primal-dual interior-point baseline (the "other QP
+//!   solvers" of the paper's scaling claim);
+//! * [`ocsvm_smo`] — Schölkopf one-class SVM via SMO (reference [2]),
+//!   the non-slab baseline.
+//!
+//! [`validate`] certifies any returned solution: box + sum feasibility
+//! and ε-KKT. Every solver's output is certified in the test suite; the
+//! SMO/PG/IPM objective agreement test is the strongest correctness
+//! signal (three independent algorithms, one optimum).
+
+pub mod cascade;
+pub mod ocssvm;
+pub mod ocsvm_smo;
+pub mod qp_ipm;
+pub mod qp_pg;
+pub mod smo;
+pub mod validate;
+pub mod warmstart;
+
+use crate::cache::CacheStats;
+
+/// KKT case analysis of the OCSSVM dual (paper eqs. (49)–(53), errata
+/// applied — DESIGN.md §1.1). Given margin s_i = Σ_j γ_j k(x_i, x_j):
+///
+/// | γᵢ                | condition      |
+/// |-------------------|----------------|
+/// | γ = 0             | ρ1 ≤ s ≤ ρ2    |
+/// | 0 < γ < hi        | s = ρ1         |
+/// | γ = hi            | s ≤ ρ1         |
+/// | lo < γ < 0        | s = ρ2         |
+/// | γ = lo            | s ≥ ρ2         |
+///
+/// Returns the violation magnitude in margin units (0 when satisfied).
+#[inline]
+pub fn kkt_violation(
+    gamma: f64,
+    s: f64,
+    rho1: f64,
+    rho2: f64,
+    lo: f64,
+    hi: f64,
+    tol: f64,
+) -> f64 {
+    if gamma.abs() <= tol {
+        (rho1 - s).max(0.0) + (s - rho2).max(0.0)
+    } else if gamma >= hi - tol {
+        (s - rho1).max(0.0)
+    } else if gamma <= lo + tol {
+        (rho2 - s).max(0.0)
+    } else if gamma > 0.0 {
+        (s - rho1).abs()
+    } else {
+        (s - rho2).abs()
+    }
+}
+
+/// The paper's selection score f̄(x) = min(s − ρ1, ρ2 − s) (eq. (56)).
+#[inline]
+pub fn fbar(s: f64, rho1: f64, rho2: f64) -> f64 {
+    (s - rho1).min(rho2 - s)
+}
+
+/// Working-set selection strategy (ablation A1 in DESIGN.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Heuristic {
+    /// The paper's: b = argmax |f̄(x_b)| over KKT violators, then
+    /// a = argmax |f̄(x_b) − f̄(x_a)| (Schölkopf second choice).
+    PaperMaxFbar,
+    /// b = argmax KKT violation, a = argmax |f̄(x_b) − f̄(x_a)|.
+    MaxViolation,
+    /// b = uniformly random violator, a = random other index.
+    RandomViolator,
+    /// WSS2-style second-order rule (Fan/Chen/Lin; the "better working
+    /// set selection" the paper's future work asks for): b = argmax
+    /// violation, a maximizes the guaranteed decrease (s_a − s_b)²/(2κ).
+    SecondOrder,
+}
+
+impl Heuristic {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Heuristic::PaperMaxFbar => "paper-max-fbar",
+            Heuristic::MaxViolation => "max-violation",
+            Heuristic::RandomViolator => "random-violator",
+            Heuristic::SecondOrder => "second-order",
+        }
+    }
+}
+
+/// Convergence + effort accounting, shared by all solvers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolveStats {
+    /// outer iterations (SMO pair updates / PG steps / IPM iterations)
+    pub iterations: usize,
+    /// final dual objective ½ γᵀKγ
+    pub objective: f64,
+    /// max KKT violation at exit
+    pub max_violation: f64,
+    /// wall-clock seconds
+    pub seconds: f64,
+    /// kernel cache counters (zero when precomputed)
+    pub cache: CacheStats,
+    /// number of kernel evaluations if counted (0 = not tracked)
+    pub kernel_evals: u64,
+}
+
+/// Shared hyper-parameter validation for the slab dual.
+///
+/// Requires ν₁ ∈ (0, 1], ν₂ ∈ (0, 1], ε ∈ (0, 1), and feasibility of the
+/// sum constraint within the box: m·lo ≤ 1 − ε ≤ m·hi. Returns (lo, hi).
+pub fn check_params(m: usize, nu1: f64, nu2: f64, eps: f64) -> crate::Result<(f64, f64)> {
+    use crate::error::Error;
+    if m == 0 {
+        return Err(Error::config("empty training set"));
+    }
+    if !(0.0 < nu1 && nu1 <= 1.0) {
+        return Err(Error::config(format!("nu1 must be in (0,1], got {nu1}")));
+    }
+    if !(0.0 < nu2 && nu2 <= 1.0) {
+        return Err(Error::config(format!("nu2 must be in (0,1], got {nu2}")));
+    }
+    if !(0.0 < eps && eps < 1.0) {
+        return Err(Error::config(format!("eps must be in (0,1), got {eps}")));
+    }
+    let lo = -eps / (nu2 * m as f64);
+    let hi = 1.0 / (nu1 * m as f64);
+    let target = 1.0 - eps;
+    if target > m as f64 * hi + 1e-12 || target < m as f64 * lo - 1e-12 {
+        return Err(Error::config(format!(
+            "sum constraint 1-eps={target} infeasible within box [{lo},{hi}] x {m}"
+        )));
+    }
+    Ok((lo, hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TOL: f64 = 1e-9;
+
+    #[test]
+    fn kkt_interior_zero_gamma() {
+        // inside slab, gamma=0 -> satisfied
+        assert_eq!(kkt_violation(0.0, 0.5, 0.0, 1.0, -0.1, 0.2, TOL), 0.0);
+        // below rho1 -> violation rho1 - s
+        assert!((kkt_violation(0.0, -0.3, 0.0, 1.0, -0.1, 0.2, TOL) - 0.3).abs() < 1e-12);
+        // above rho2
+        assert!((kkt_violation(0.0, 1.4, 0.0, 1.0, -0.1, 0.2, TOL) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kkt_free_lower_sv_on_plane() {
+        // 0 < gamma < hi must sit on rho1
+        assert_eq!(kkt_violation(0.1, 0.0, 0.0, 1.0, -0.1, 0.2, TOL), 0.0);
+        assert!((kkt_violation(0.1, 0.25, 0.0, 1.0, -0.1, 0.2, TOL) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kkt_free_upper_sv_on_plane() {
+        // lo < gamma < 0 must sit on rho2
+        assert_eq!(kkt_violation(-0.05, 1.0, 0.0, 1.0, -0.1, 0.2, TOL), 0.0);
+        assert!((kkt_violation(-0.05, 0.8, 0.0, 1.0, -0.1, 0.2, TOL) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kkt_bound_hi_needs_s_below_rho1() {
+        // gamma = hi: margin violator of the LOWER plane -> s <= rho1
+        assert_eq!(kkt_violation(0.2, -0.5, 0.0, 1.0, -0.1, 0.2, TOL), 0.0);
+        assert!((kkt_violation(0.2, 0.3, 0.0, 1.0, -0.1, 0.2, TOL) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kkt_bound_lo_needs_s_above_rho2() {
+        // gamma = lo: margin violator of the UPPER plane -> s >= rho2
+        assert_eq!(kkt_violation(-0.1, 1.5, 0.0, 1.0, -0.1, 0.2, TOL), 0.0);
+        assert!((kkt_violation(-0.1, 0.7, 0.0, 1.0, -0.1, 0.2, TOL) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fbar_is_min_distance() {
+        assert_eq!(fbar(0.5, 0.0, 1.0), 0.5);
+        assert!((fbar(0.9, 0.0, 1.0) - 0.1).abs() < 1e-12);
+        assert!((fbar(-0.2, 0.0, 1.0) + 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn params_validation() {
+        assert!(check_params(100, 0.5, 0.01, 2.0 / 3.0).is_ok());
+        assert!(check_params(0, 0.5, 0.01, 0.5).is_err());
+        assert!(check_params(100, 0.0, 0.01, 0.5).is_err());
+        assert!(check_params(100, 1.5, 0.01, 0.5).is_err());
+        assert!(check_params(100, 0.5, 0.0, 0.5).is_err());
+        assert!(check_params(100, 0.5, 0.01, 1.0).is_err());
+        assert!(check_params(100, 0.5, 0.01, 0.0).is_err());
+    }
+
+    #[test]
+    fn params_box_bounds() {
+        let (lo, hi) = check_params(1000, 0.5, 0.01, 2.0 / 3.0).unwrap();
+        assert!((hi - 1.0 / (0.5 * 1000.0)).abs() < 1e-15);
+        assert!((lo + (2.0 / 3.0) / (0.01 * 1000.0)).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,314 @@
+//! Trained OCSSVM model: dual vector + slab offsets + decision function.
+//!
+//! A [`SlabModel`] is what every solver returns and what the serving
+//! coordinator registers. The decision function is the paper's eq. (19):
+//!
+//! ```text
+//!   f(x) = sgn( (Σᵢ γᵢ k(xᵢ, x) − ρ1) · (ρ2 − Σᵢ γᵢ k(xᵢ, x)) )
+//! ```
+//!
+//! +1 ⇔ the margin s(x) lands inside the slab [ρ1, ρ2]. Points exactly
+//! on a plane (product 0) count as inside.
+
+use crate::data::Dataset;
+use crate::kernel::Kernel;
+use crate::linalg::Matrix;
+use crate::metrics::Confusion;
+use crate::util::json::Json;
+
+/// A trained one-class slab SVM.
+#[derive(Clone, Debug)]
+pub struct SlabModel {
+    /// support samples (rows with γ ≠ 0 — non-SVs are dropped at build)
+    pub x_sv: Matrix,
+    /// dual coefficients of the support samples (γ = α − ᾱ)
+    pub gamma: Vec<f64>,
+    /// lower slab offset
+    pub rho1: f64,
+    /// upper slab offset
+    pub rho2: f64,
+    /// kernel the model was trained with
+    pub kernel: Kernel,
+}
+
+impl SlabModel {
+    /// Assemble from a full dual vector, dropping non-support rows.
+    /// `sv_tol` decides which |γ| count as support vectors.
+    pub fn from_dual(
+        x: &Matrix,
+        gamma_full: &[f64],
+        rho1: f64,
+        rho2: f64,
+        kernel: Kernel,
+        sv_tol: f64,
+    ) -> Self {
+        assert_eq!(x.rows(), gamma_full.len());
+        let idx: Vec<usize> = (0..x.rows())
+            .filter(|&i| gamma_full[i].abs() > sv_tol)
+            .collect();
+        let x_sv = x.select_rows(&idx);
+        let gamma = idx.iter().map(|&i| gamma_full[i]).collect();
+        SlabModel { x_sv, gamma, rho1, rho2, kernel }
+    }
+
+    /// Number of support vectors.
+    pub fn n_sv(&self) -> usize {
+        self.gamma.len()
+    }
+
+    /// Slab width ρ2 − ρ1 (> 0 for any meaningful model).
+    pub fn width(&self) -> f64 {
+        self.rho2 - self.rho1
+    }
+
+    /// Margin s(x) = Σ γᵢ k(xᵢ, x).
+    pub fn score(&self, x: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for (i, &g) in self.gamma.iter().enumerate() {
+            s += g * self.kernel.eval(self.x_sv.row(i), x);
+        }
+        s
+    }
+
+    /// Decision f(x): +1 inside the slab, −1 outside (paper eq. (19)).
+    pub fn classify(&self, x: &[f64]) -> i8 {
+        let s = self.score(x);
+        if (s - self.rho1) * (self.rho2 - s) >= 0.0 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Batch scores for a query matrix (native engine).
+    pub fn scores(&self, q: &Matrix) -> Vec<f64> {
+        (0..q.rows()).map(|i| self.score(q.row(i))).collect()
+    }
+
+    /// Batch labels for a query matrix (native engine).
+    pub fn predict(&self, q: &Matrix) -> Vec<i8> {
+        self.scores(q)
+            .into_iter()
+            .map(|s| if (s - self.rho1) * (self.rho2 - s) >= 0.0 { 1 } else { -1 })
+            .collect()
+    }
+
+    /// Evaluate on a labeled dataset.
+    pub fn evaluate(&self, ds: &Dataset) -> Confusion {
+        let pred = self.predict(&ds.x);
+        Confusion::from_labels(&ds.y, &pred)
+    }
+
+    /// Slab-margin score usable for ROC analysis: positive inside,
+    /// magnitude = distance to the nearest plane (the paper's f̄).
+    pub fn margin(&self, x: &[f64]) -> f64 {
+        let s = self.score(x);
+        super::fbar(s, self.rho1, self.rho2)
+    }
+
+    // ------------------------------------------------------------ persistence
+
+    /// Serialize to JSON (gamma, rho's, kernel, support matrix).
+    pub fn to_json(&self) -> Json {
+        let k = match self.kernel {
+            Kernel::Linear => Json::obj(vec![("family", Json::str("linear"))]),
+            Kernel::Rbf { g } => Json::obj(vec![
+                ("family", Json::str("rbf")),
+                ("g", Json::num(g)),
+            ]),
+            Kernel::Poly { g, c, degree } => Json::obj(vec![
+                ("family", Json::str("poly")),
+                ("g", Json::num(g)),
+                ("c", Json::num(c)),
+                ("degree", Json::num(degree)),
+            ]),
+            Kernel::Sigmoid { g, c } => Json::obj(vec![
+                ("family", Json::str("sigmoid")),
+                ("g", Json::num(g)),
+                ("c", Json::num(c)),
+            ]),
+        };
+        Json::obj(vec![
+            ("rho1", Json::num(self.rho1)),
+            ("rho2", Json::num(self.rho2)),
+            ("kernel", k),
+            ("d", Json::num(self.x_sv.cols() as f64)),
+            (
+                "gamma",
+                Json::arr(self.gamma.iter().map(|&g| Json::num(g)).collect()),
+            ),
+            (
+                "x_sv",
+                Json::arr(
+                    self.x_sv.data().iter().map(|&v| Json::num(v)).collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Deserialize from [`SlabModel::to_json`] output.
+    pub fn from_json(j: &Json) -> crate::Result<SlabModel> {
+        use crate::error::Error;
+        let num = |k: &str| -> crate::Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::data(format!("model json: missing {k}")))
+        };
+        let rho1 = num("rho1")?;
+        let rho2 = num("rho2")?;
+        let d = num("d")? as usize;
+        let gamma: Vec<f64> = j
+            .get("gamma")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::data("model json: missing gamma"))?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        let flat: Vec<f64> = j
+            .get("x_sv")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::data("model json: missing x_sv"))?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        if d == 0 || flat.len() != gamma.len() * d {
+            return Err(Error::data("model json: x_sv shape mismatch"));
+        }
+        let kj = j.get("kernel").ok_or_else(|| Error::data("missing kernel"))?;
+        let fam = kj
+            .get("family")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::data("missing kernel family"))?;
+        let gk = |k: &str| kj.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let kernel = match fam {
+            "linear" => Kernel::Linear,
+            "rbf" => Kernel::Rbf { g: gk("g") },
+            "poly" => Kernel::Poly { g: gk("g"), c: gk("c"), degree: gk("degree") },
+            "sigmoid" => Kernel::Sigmoid { g: gk("g"), c: gk("c") },
+            other => return Err(Error::data(format!("unknown kernel {other}"))),
+        };
+        Ok(SlabModel {
+            x_sv: Matrix::from_vec(gamma.len(), d, flat),
+            gamma,
+            rho1,
+            rho2,
+            kernel,
+        })
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> crate::Result<SlabModel> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model() -> SlabModel {
+        // single support vector at (1, 0), gamma 1, linear kernel:
+        // s(x) = x[0]; slab [0.2, 0.8]
+        SlabModel {
+            x_sv: Matrix::from_rows(&[&[1.0, 0.0]]),
+            gamma: vec![1.0],
+            rho1: 0.2,
+            rho2: 0.8,
+            kernel: Kernel::Linear,
+        }
+    }
+
+    #[test]
+    fn score_and_classify() {
+        let m = tiny_model();
+        assert!((m.score(&[0.5, 3.0]) - 0.5).abs() < 1e-12);
+        assert_eq!(m.classify(&[0.5, 0.0]), 1); // inside
+        assert_eq!(m.classify(&[0.0, 0.0]), -1); // below rho1
+        assert_eq!(m.classify(&[1.0, 0.0]), -1); // above rho2
+        assert_eq!(m.classify(&[0.2, 0.0]), 1); // exactly on plane
+        assert_eq!(m.classify(&[0.8, 0.0]), 1); // exactly on plane
+    }
+
+    #[test]
+    fn margin_is_fbar() {
+        let m = tiny_model();
+        assert!((m.margin(&[0.5, 0.0]) - 0.3).abs() < 1e-12);
+        assert!((m.margin(&[0.9, 0.0]) + 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_dual_drops_non_svs() {
+        let x = Matrix::from_rows(&[&[1.0], &[2.0], &[3.0]]);
+        let gamma = [0.5, 0.0, -0.25];
+        let m = SlabModel::from_dual(&x, &gamma, 0.0, 1.0, Kernel::Linear, 1e-12);
+        assert_eq!(m.n_sv(), 2);
+        assert_eq!(m.gamma, vec![0.5, -0.25]);
+        assert_eq!(m.x_sv.row(1), &[3.0]);
+        // score must equal the full-dual score
+        let s_full: f64 = 0.5 * 1.0 * 4.0 + 0.0 + (-0.25) * 3.0 * 4.0;
+        assert!((m.score(&[4.0]) - s_full).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predict_matches_classify() {
+        let m = tiny_model();
+        let q = Matrix::from_rows(&[&[0.5, 0.0], &[0.0, 0.0], &[1.0, 0.0]]);
+        assert_eq!(m.predict(&q), vec![1, -1, -1]);
+    }
+
+    #[test]
+    fn evaluate_confusion() {
+        let m = tiny_model();
+        let q = Matrix::from_rows(&[&[0.5, 0.0], &[0.0, 0.0], &[0.9, 0.0]]);
+        let ds = Dataset::new(q, vec![1, -1, 1]);
+        let c = m.evaluate(&ds);
+        assert_eq!((c.tp, c.tn, c.fp, c.fn_), (1, 1, 0, 1));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = SlabModel {
+            x_sv: Matrix::from_rows(&[&[1.0, -2.0], &[0.5, 0.25]]),
+            gamma: vec![0.7, -0.3],
+            rho1: -0.1,
+            rho2: 0.35,
+            kernel: Kernel::Rbf { g: 0.8 },
+        };
+        let j = m.to_json();
+        let m2 = SlabModel::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(m2.gamma, m.gamma);
+        assert_eq!(m2.rho1, m.rho1);
+        assert_eq!(m2.kernel, m.kernel);
+        assert_eq!(m2.x_sv.data(), m.x_sv.data());
+        // identical predictions
+        let p = [0.3, 0.4];
+        assert!((m.score(&p) - m2.score(&p)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn save_load_file() {
+        let m = tiny_model();
+        let p = std::env::temp_dir().join(format!(
+            "slabsvm_model_{}.json",
+            std::process::id()
+        ));
+        m.save(&p).unwrap();
+        let m2 = SlabModel::load(&p).unwrap();
+        assert_eq!(m2.rho2, 0.8);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn from_json_rejects_bad_shapes() {
+        let j = Json::parse(r#"{"rho1":0,"rho2":1,"d":2,"gamma":[1],"x_sv":[1],
+                               "kernel":{"family":"linear"}}"#).unwrap();
+        assert!(SlabModel::from_json(&j).is_err());
+    }
+}

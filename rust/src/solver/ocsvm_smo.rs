@@ -1,0 +1,312 @@
+//! Baseline: Schölkopf ν-one-class SVM trained by SMO (paper ref [2]).
+//!
+//! The non-slab ancestor the OCSSVM extends. Dual:
+//!
+//! ```text
+//!   min ½ αᵀKα    s.t.  0 ≤ αᵢ ≤ 1/(νm),   Σαᵢ = 1
+//! ```
+//!
+//! with decision f(x) = sgn(Σαᵢ k(xᵢ,x) − ρ). Implemented with the same
+//! machinery as the slab SMO (incremental margins, max-violating-pair
+//! selection) so timing comparisons are apples-to-apples — the per-
+//! iteration cost is identical, only the KKT case table differs:
+//!
+//! | αᵢ              | condition |
+//! |-----------------|-----------|
+//! | α = 0           | s ≥ ρ     |
+//! | 0 < α < 1/(νm)  | s = ρ     |
+//! | α = 1/(νm)      | s ≤ ρ     |
+
+use std::time::Instant;
+
+use super::SolveStats;
+use crate::data::Dataset;
+use crate::error::Error;
+use crate::kernel::Kernel;
+use crate::linalg::Matrix;
+use crate::metrics::Confusion;
+use crate::Result;
+
+/// ν-OCSVM hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct OcsvmParams {
+    /// ν — upper bound on the outlier fraction, lower bound on SV fraction
+    pub nu: f64,
+    pub tol: f64,
+    pub max_iter: usize,
+    pub sv_tol: f64,
+}
+
+impl Default for OcsvmParams {
+    fn default() -> Self {
+        OcsvmParams { nu: 0.5, tol: 1e-5, max_iter: 200_000, sv_tol: 1e-10 }
+    }
+}
+
+/// Trained one-class SVM (single hyperplane).
+#[derive(Clone, Debug)]
+pub struct OcsvmModel {
+    pub x_sv: Matrix,
+    pub alpha: Vec<f64>,
+    pub rho: f64,
+    pub kernel: Kernel,
+}
+
+impl OcsvmModel {
+    pub fn score(&self, x: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for (i, &a) in self.alpha.iter().enumerate() {
+            s += a * self.kernel.eval(self.x_sv.row(i), x);
+        }
+        s
+    }
+
+    /// +1 on/above the hyperplane (target side), −1 below.
+    pub fn classify(&self, x: &[f64]) -> i8 {
+        if self.score(x) - self.rho >= 0.0 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    pub fn predict(&self, q: &Matrix) -> Vec<i8> {
+        (0..q.rows()).map(|i| self.classify(q.row(i))).collect()
+    }
+
+    pub fn evaluate(&self, ds: &Dataset) -> Confusion {
+        Confusion::from_labels(&ds.y, &self.predict(&ds.x))
+    }
+
+    pub fn n_sv(&self) -> usize {
+        self.alpha.len()
+    }
+}
+
+#[inline]
+fn kkt_violation_ocsvm(alpha: f64, s: f64, rho: f64, hi: f64, tol: f64) -> f64 {
+    if alpha <= tol {
+        (rho - s).max(0.0)
+    } else if alpha >= hi - tol {
+        (s - rho).max(0.0)
+    } else {
+        (s - rho).abs()
+    }
+}
+
+/// Train with SMO on a precomputed Gram matrix.
+pub fn solve(k: &Matrix, p: &OcsvmParams) -> Result<(Vec<f64>, f64, SolveStats)> {
+    let m = k.rows();
+    if m == 0 {
+        return Err(Error::config("empty training set"));
+    }
+    if !(0.0 < p.nu && p.nu <= 1.0) {
+        return Err(Error::config(format!("nu must be in (0,1], got {}", p.nu)));
+    }
+    let hi = 1.0 / (p.nu * m as f64);
+    let t0 = Instant::now();
+
+    // Schölkopf's feasible start: α = 1/m (inside [0, hi] since ν ≤ 1)
+    let mut alpha = vec![1.0 / m as f64; m];
+    let mut s = vec![0.0; m];
+    for i in 0..m {
+        s[i] = k.row(i).iter().sum::<f64>() / m as f64;
+    }
+
+    let mut rho = 0.0;
+    let mut iterations = 0;
+    let mut max_viol = f64::INFINITY;
+
+    while iterations < p.max_iter {
+        // rho = mean margin of free SVs; fallback midpoint
+        let (mut sum_f, mut n_f) = (0.0, 0usize);
+        let (mut lo_b, mut hi_b) = (f64::NEG_INFINITY, f64::INFINITY);
+        for i in 0..m {
+            if alpha[i] > p.tol && alpha[i] < hi - p.tol {
+                sum_f += s[i];
+                n_f += 1;
+            } else if alpha[i] >= hi - p.tol {
+                lo_b = lo_b.max(s[i]); // s ≤ ρ at upper bound → ρ ≥ s
+            } else {
+                hi_b = hi_b.min(s[i]); // s ≥ ρ at zero → ρ ≤ s
+            }
+        }
+        rho = if n_f > 0 {
+            sum_f / n_f as f64
+        } else if lo_b.is_finite() && hi_b.is_finite() {
+            0.5 * (lo_b + hi_b)
+        } else if lo_b.is_finite() {
+            lo_b
+        } else if hi_b.is_finite() {
+            hi_b
+        } else {
+            crate::linalg::median(&s)
+        };
+
+        // max-violating pair selection
+        let mut b = usize::MAX;
+        let mut best = p.tol;
+        max_viol = 0.0;
+        let mut violators = 0;
+        for i in 0..m {
+            let v = kkt_violation_ocsvm(alpha[i], s[i], rho, hi, p.tol);
+            max_viol = max_viol.max(v);
+            if v > p.tol {
+                violators += 1;
+            }
+            if v > best {
+                best = v;
+                b = i;
+            }
+        }
+        if violators <= 1 || b == usize::MAX {
+            break;
+        }
+        // second choice: max |s_b − s_a| among partners that admit a
+        // strict-descent transfer (see smo.rs — direction-blind pairing
+        // stalls on degenerate [L, H] windows).
+        let mut a = usize::MAX;
+        let mut best_gap = -1.0;
+        for i in 0..m {
+            if i == b {
+                continue;
+            }
+            let d = s[i] - s[b];
+            let ok = (d > 0.0 && alpha[b] < hi - 1e-14 && alpha[i] > 1e-14)
+                || (d < 0.0 && alpha[b] > 1e-14 && alpha[i] < hi - 1e-14);
+            if !ok {
+                continue;
+            }
+            let gap = d.abs();
+            if gap > best_gap {
+                best_gap = gap;
+                a = i;
+            }
+        }
+        if a == usize::MAX {
+            break; // no descent transfer exists anywhere for b
+        }
+
+        let t_star = alpha[a] + alpha[b];
+        let l = (t_star - hi).max(0.0);
+        let h = hi.min(t_star);
+        if h - l <= f64::EPSILON {
+            iterations += 1;
+            continue;
+        }
+        let kappa = k.get(a, a) + k.get(b, b) - 2.0 * k.get(a, b);
+        let new_b = if kappa > 1e-12 {
+            (alpha[b] + (s[a] - s[b]) / kappa).clamp(l, h)
+        } else if s[b] > s[a] {
+            l
+        } else {
+            h
+        };
+        let delta = new_b - alpha[b];
+        if delta.abs() > 1e-16 {
+            alpha[b] = new_b;
+            alpha[a] = t_star - new_b;
+            let (ra, rb) = (k.row(a), k.row(b));
+            for j in 0..m {
+                s[j] += delta * (rb[j] - ra[j]);
+            }
+        }
+        iterations += 1;
+    }
+
+    if iterations >= p.max_iter && max_viol > p.tol * 10.0 {
+        return Err(Error::NoConvergence(format!(
+            "OCSVM-SMO hit max_iter={} with violation {max_viol:.3e}",
+            p.max_iter
+        )));
+    }
+
+    let objective = 0.5 * alpha.iter().zip(&s).map(|(a, si)| a * si).sum::<f64>();
+    Ok((
+        alpha,
+        rho,
+        SolveStats {
+            iterations,
+            objective,
+            max_violation: max_viol,
+            seconds: t0.elapsed().as_secs_f64(),
+            cache: Default::default(),
+            kernel_evals: 0,
+        },
+    ))
+}
+
+/// Train an [`OcsvmModel`] end-to-end.
+pub fn train(x: &Matrix, kernel: Kernel, p: &OcsvmParams) -> Result<(OcsvmModel, SolveStats)> {
+    let threads = crate::util::threadpool::default_threads();
+    let k = kernel.gram(x, threads);
+    let (alpha, rho, stats) = solve(&k, p)?;
+    let idx: Vec<usize> =
+        (0..x.rows()).filter(|&i| alpha[i].abs() > p.sv_tol).collect();
+    Ok((
+        OcsvmModel {
+            x_sv: x.select_rows(&idx),
+            alpha: idx.iter().map(|&i| alpha[i]).collect(),
+            rho,
+            kernel,
+        },
+        stats,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+
+    #[test]
+    fn trains_and_constraints_hold() {
+        let ds = SlabConfig::default().generate(150, 51);
+        let p = OcsvmParams::default();
+        let k = Kernel::Rbf { g: 0.5 }.gram(&ds.x, 2);
+        let (alpha, rho, stats) = solve(&k, &p).unwrap();
+        let m = alpha.len() as f64;
+        let hi = 1.0 / (p.nu * m);
+        for &a in &alpha {
+            assert!(a >= -1e-12 && a <= hi + 1e-12);
+        }
+        let sum: f64 = alpha.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-8, "sum={sum}");
+        assert!(stats.iterations > 0);
+        assert!(rho.is_finite());
+    }
+
+    #[test]
+    fn nu_property_outlier_fraction() {
+        // Schölkopf Prop. 4: fraction of outliers ≤ ν ≤ fraction of SVs
+        // (asymptotically; allow slack on a finite sample)
+        let ds = SlabConfig { contamination: 0.0, ..Default::default() }
+            .generate(400, 52);
+        let p = OcsvmParams { nu: 0.3, ..Default::default() };
+        let (model, _) = train(&ds.x, Kernel::Rbf { g: 1.0 }, &p).unwrap();
+        let outliers = (0..ds.len())
+            .filter(|&i| model.classify(ds.x.row(i)) < 0)
+            .count() as f64
+            / ds.len() as f64;
+        assert!(outliers <= 0.3 + 0.05, "outlier fraction {outliers}");
+        let sv_frac = model.n_sv() as f64 / ds.len() as f64;
+        assert!(sv_frac >= 0.3 - 0.05, "SV fraction {sv_frac}");
+    }
+
+    #[test]
+    fn separates_blob_from_far_points() {
+        let ds = SlabConfig { contamination: 0.0, ..Default::default() }
+            .generate(200, 53);
+        let (model, _) =
+            train(&ds.x, Kernel::Rbf { g: 1.0 }, &OcsvmParams::default()).unwrap();
+        // a far-away point must be classified -1
+        assert_eq!(model.classify(&[100.0, -100.0]), -1);
+    }
+
+    #[test]
+    fn rejects_bad_nu() {
+        let ds = SlabConfig::default().generate(30, 54);
+        let p = OcsvmParams { nu: 0.0, ..Default::default() };
+        assert!(train(&ds.x, Kernel::Linear, &p).is_err());
+    }
+}

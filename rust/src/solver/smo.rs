@@ -1,0 +1,1023 @@
+//! **The paper's contribution**: SMO for the One-Class Slab SVM dual.
+//!
+//! Implements Algorithm 1 with the derivations of §3, plus the two
+//! errata fixes that make it actually converge to the OCSSVM optimum
+//! (DESIGN.md §1.1 / §Findings):
+//!
+//! * **Block-wise pairs.** The paper re-parameterizes the dual in
+//!   γ = α − ᾱ and keeps only Σγ = 1 − ε (eq. 32). That is a strict
+//!   *relaxation*: the true dual (16)–(18) constrains Σα = 1 and
+//!   Σᾱ = ε separately, and dropping that lets the optimizer move
+//!   unbounded overlap mass (Σγ⁻ ≫ ε) and collapse the slab. The
+//!   faithful SMO therefore works on (α, ᾱ) directly, with working
+//!   pairs chosen inside one block at a time — an (α_a, α_b) pair
+//!   conserves Σα, an (ᾱ_a, ᾱ_b) pair conserves Σᾱ. The relaxed
+//!   γ-form as printed is kept as [`solve_gamma_relaxed`] for the
+//!   errata ablation.
+//! * **Analytic update (35)–(37)**: within a block the subproblem is
+//!   identical to the paper's: `δ* = ±(s_a − s_b)/η⁻¹` with
+//!   `η = 1/(k_aa + k_bb − 2 k_ab)`, clipped to the box window
+//!   (38)–(39); the margin vector s = Kγ is updated incrementally in
+//!   O(m) via the two kernel rows.
+//! * **Selection**: first choice b = argmax |f̄(x)| over **KKT
+//!   violators** (eq. (56); restricting to violators is errata #4),
+//!   second choice a = argmax |f̄(x_b) − f̄(x_a)| among partners in the
+//!   same block that admit a strict-descent transfer.
+//! * **ρ recovery (20)–(21)**: ρ₁ = mean margin of free-α SVs,
+//!   ρ₂ = mean margin of free-ᾱ SVs, with interval-midpoint fallbacks.
+//!
+//! Per-iteration cost: O(m) selection + O(m) rank-2 margin update —
+//! the paper's scaling claim against O(m²)-per-step QP solvers.
+
+use std::time::Instant;
+
+use super::ocssvm::SlabModel;
+use super::{check_params, fbar, Heuristic, SolveStats};
+use crate::cache::{CachedRows, KernelProvider, PrecomputedGram};
+use crate::error::Error;
+use crate::kernel::Kernel;
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Hyper-parameters of the SMO trainer.
+#[derive(Clone, Copy, Debug)]
+pub struct SmoParams {
+    /// ν₁ — bounds the fraction of lower-plane outliers (α cap = 1/(ν₁m))
+    pub nu1: f64,
+    /// ν₂ — bounds the upper-plane violator fraction (ᾱ cap = ε/(ν₂m))
+    pub nu2: f64,
+    /// ε — total mass assigned to the upper plane (Σᾱ = ε)
+    pub eps: f64,
+    /// KKT tolerance (margin units)
+    pub tol: f64,
+    /// iteration budget; [`Error::NoConvergence`] beyond it
+    pub max_iter: usize,
+    /// working-set selection strategy
+    pub heuristic: Heuristic,
+    /// seed for [`Heuristic::RandomViolator`]
+    pub seed: u64,
+    /// |γ| above which a row is kept as a support vector
+    pub sv_tol: f64,
+    /// Active-set shrinking: variables that sit at a bound with
+    /// satisfied KKT for many consecutive selection sweeps are frozen
+    /// out of the scan (libsvm-style). A full reactivation + rescan runs
+    /// before convergence is declared, so the result is identical — only
+    /// the selection cost drops.
+    pub shrinking: bool,
+}
+
+impl Default for SmoParams {
+    fn default() -> Self {
+        SmoParams {
+            nu1: 0.5,
+            nu2: 0.01,
+            eps: 2.0 / 3.0,
+            tol: 1e-5,
+            max_iter: 500_000,
+            heuristic: Heuristic::PaperMaxFbar,
+            seed: 0,
+            sv_tol: 1e-10,
+            shrinking: true,
+        }
+    }
+}
+
+/// Consecutive satisfied-at-bound sweeps before a variable is frozen.
+const SHRINK_PATIENCE: u16 = 24;
+
+/// Raw solver outcome: the dual point, margins and effort stats.
+pub struct SmoOutcome {
+    /// lower-plane multipliers α (Σα = 1, 0 ≤ α ≤ 1/(ν₁m))
+    pub alpha: Vec<f64>,
+    /// upper-plane multipliers ᾱ (Σᾱ = ε, 0 ≤ ᾱ ≤ ε/(ν₂m))
+    pub alpha_bar: Vec<f64>,
+    /// γ = α − ᾱ (what the model stores)
+    pub gamma: Vec<f64>,
+    /// margins s = Kγ at exit
+    pub s: Vec<f64>,
+    pub rho1: f64,
+    pub rho2: f64,
+    pub stats: SolveStats,
+}
+
+/// Which block a working pair lives in.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Block {
+    /// lower-plane multipliers α
+    Alpha,
+    /// upper-plane multipliers ᾱ
+    AlphaBar,
+}
+
+/// Train on `x` with a precomputed Gram matrix (native engine, parallel
+/// build). The standard entry point at paper scale.
+pub fn train(x: &Matrix, kernel: Kernel, p: &SmoParams) -> Result<SlabModel> {
+    train_full(x, kernel, p).map(|(m, _)| m)
+}
+
+/// Train returning the raw dual outcome too (benches/tests need stats).
+pub fn train_full(
+    x: &Matrix,
+    kernel: Kernel,
+    p: &SmoParams,
+) -> Result<(SlabModel, SmoOutcome)> {
+    let threads = crate::util::threadpool::default_threads();
+    let mut provider = PrecomputedGram::build(x, kernel, threads);
+    let out = solve(&mut provider, p)?;
+    let model =
+        SlabModel::from_dual(x, &out.gamma, out.rho1, out.rho2, kernel, p.sv_tol);
+    Ok((model, out))
+}
+
+/// Train with a bounded kernel-row cache instead of the full Gram
+/// (memory O(capacity · m); the A2 ablation path).
+pub fn train_cached(
+    x: &Matrix,
+    kernel: Kernel,
+    p: &SmoParams,
+    cache: CachedRows,
+) -> Result<(SlabModel, SmoOutcome)> {
+    let mut provider = cache;
+    let out = solve(&mut provider, p)?;
+    let model =
+        SlabModel::from_dual(x, &out.gamma, out.rho1, out.rho2, kernel, p.sv_tol);
+    Ok((model, out))
+}
+
+/// Per-variable KKT violation in the faithful (α, ᾱ) dual.
+///
+/// α block (multiplier ρ₁ for Σα = 1):
+///   α = 0 → s ≥ ρ₁;  0 < α < cap → s = ρ₁;  α = cap → s ≤ ρ₁.
+/// ᾱ block (multiplier ρ₂ for Σᾱ = ε):
+///   ᾱ = 0 → s ≤ ρ₂;  0 < ᾱ < cap → s = ρ₂;  ᾱ = cap → s ≥ ρ₂.
+#[inline]
+fn viol_alpha(a: f64, s: f64, rho1: f64, cap: f64, tol: f64) -> f64 {
+    if a <= tol {
+        (rho1 - s).max(0.0)
+    } else if a >= cap - tol {
+        (s - rho1).max(0.0)
+    } else {
+        (s - rho1).abs()
+    }
+}
+
+#[inline]
+fn viol_alpha_bar(ab: f64, s: f64, rho2: f64, cap: f64, tol: f64) -> f64 {
+    if ab <= tol {
+        (s - rho2).max(0.0)
+    } else if ab >= cap - tol {
+        (rho2 - s).max(0.0)
+    } else {
+        (s - rho2).abs()
+    }
+}
+
+/// A dual-feasible starting state (used by warm-start strategies).
+/// `s` must equal K(α − ᾱ) exactly — the solver trusts it.
+pub struct WarmState {
+    pub alpha: Vec<f64>,
+    pub alpha_bar: Vec<f64>,
+    pub s: Vec<f64>,
+}
+
+/// Core SMO loop over any [`KernelProvider`].
+pub fn solve<P: KernelProvider>(provider: &mut P, p: &SmoParams) -> Result<SmoOutcome> {
+    solve_from(provider, p, None)
+}
+
+/// SMO starting from an explicit dual-feasible state (see
+/// [`crate::solver::warmstart`]). `None` = the uniform feasible start.
+pub fn solve_from<P: KernelProvider>(
+    provider: &mut P,
+    p: &SmoParams,
+    warm: Option<WarmState>,
+) -> Result<SmoOutcome> {
+    let m = provider.m();
+    check_params(m, p.nu1, p.nu2, p.eps)?;
+    let cap_a = 1.0 / (p.nu1 * m as f64);
+    let cap_b = p.eps / (p.nu2 * m as f64);
+    let t0 = Instant::now();
+    let mut rng = Rng::new(p.seed);
+
+    // Feasible start: α = 1/m (≤ cap_a since ν₁ ≤ 1), ᾱ = ε/m (≤ cap_b
+    // since ν₂ ≤ 1); both sums exact. A warm start overrides all three.
+    let (mut alpha, mut alpha_bar, mut s) = match warm {
+        Some(w) => {
+            assert_eq!(w.alpha.len(), m);
+            assert_eq!(w.s.len(), m);
+            (w.alpha, w.alpha_bar, w.s)
+        }
+        None => {
+            let alpha = vec![1.0 / m as f64; m];
+            let alpha_bar = vec![p.eps / m as f64; m];
+            // s = Kγ with γ = α − ᾱ = (1−ε)/m uniformly.
+            let init = (1.0 - p.eps) / m as f64;
+            let mut s = vec![0.0; m];
+            for i in 0..m {
+                s[i] = provider.with_row(i, &mut |row| row.iter().sum::<f64>())
+                    * init;
+            }
+            (alpha, alpha_bar, s)
+        }
+    };
+
+    // Tolerances. KKT violations live in margin units, which scale with
+    // the kernel/data magnitude (s is O(100) on the offset slab band),
+    // so the convergence tolerance is relative to the margin scale.
+    // Alpha-vs-bound classification is a separate, box-relative epsilon.
+    let margin_scale =
+        1.0 + s.iter().map(|v| v.abs()).sum::<f64>() / m as f64;
+    let tol_eff = p.tol * margin_scale;
+    let cls = cap_a.min(cap_b) * 1e-9;
+
+    let (mut rho1, mut rho2) = (0.0, 0.0);
+    let mut iterations = 0;
+    let mut max_viol = f64::INFINITY;
+    let mut stalled_rounds = 0usize;
+
+    // Active-set shrinking state: frozen variables are skipped by the
+    // selection scan; margins stay exact for everyone (the rank-2 update
+    // always touches all of s), so reactivation needs no reconstruction.
+    let mut active = vec![true; m];
+    let mut sat_streak = vec![0u16; m];
+    let mut n_active = m;
+
+    let mut rho_stale = 0u32;
+    while iterations < p.max_iter {
+        // ρ re-estimation is an O(m) pass; the estimates drift slowly
+        // (free-SV means), so refreshing every 8 iterations keeps the
+        // selection signal fresh at 1/8th the cost. The authoritative
+        // full sweep below always refreshes first.
+        if rho_stale == 0 {
+            recover_rhos_blocks(
+                &alpha, &alpha_bar, &s, cap_a, cap_b, cls, &mut rho1, &mut rho2,
+            );
+            rho_stale = 8;
+        }
+        rho_stale -= 1;
+
+        // ---- first choice: worst scoring violator over both blocks -----
+        let mut best_b = usize::MAX;
+        let mut best_block = Block::Alpha;
+        let mut best_key = -1.0;
+        max_viol = 0.0;
+        for i in 0..m {
+            if !active[i] {
+                continue;
+            }
+            let va = viol_alpha(alpha[i], s[i], rho1, cap_a, cls);
+            let vb = viol_alpha_bar(alpha_bar[i], s[i], rho2, cap_b, cls);
+            max_viol = max_viol.max(va).max(vb);
+            let (v, block) = if va >= vb { (va, Block::Alpha) } else { (vb, Block::AlphaBar) };
+            if v <= tol_eff {
+                // shrink candidates: satisfied AND at a bound in both
+                // blocks (free SVs keep participating in rho recovery)
+                if p.shrinking {
+                    let bound_a = alpha[i] <= cls || alpha[i] >= cap_a - cls;
+                    let bound_b =
+                        alpha_bar[i] <= cls || alpha_bar[i] >= cap_b - cls;
+                    if bound_a && bound_b {
+                        sat_streak[i] = sat_streak[i].saturating_add(1);
+                        if sat_streak[i] >= SHRINK_PATIENCE && n_active > 8 {
+                            active[i] = false;
+                            n_active -= 1;
+                        }
+                    } else {
+                        sat_streak[i] = 0;
+                    }
+                }
+                continue;
+            }
+            sat_streak[i] = 0;
+            let key = match p.heuristic {
+                // paper §3.2: maximize |f̄(x_b)| among violators
+                Heuristic::PaperMaxFbar => fbar(s[i], rho1, rho2).abs(),
+                Heuristic::MaxViolation | Heuristic::SecondOrder => v,
+                Heuristic::RandomViolator => rng.uniform(),
+            };
+            if key > best_key {
+                best_key = key;
+                best_b = i;
+                best_block = block;
+            }
+        }
+        // Stopping: every variable satisfies its KKT case within tol.
+        // (The paper's literal "at most one violator" rule under-
+        // converges: a lone violator can still be fixed by pairing with
+        // a NON-violating partner — errata #7, DESIGN.md §1.1.)
+        if best_b == usize::MAX {
+            if rho_stale != 7 {
+                // the scan ran on stale ρ estimates; refresh and re-scan
+                // before trusting the no-violator verdict
+                rho_stale = 0;
+                continue;
+            }
+            if n_active < m {
+                // the active set converged; reactivate everything and do
+                // one authoritative full sweep before declaring victory
+                active.iter_mut().for_each(|a| *a = true);
+                sat_streak.iter_mut().for_each(|s| *s = 0);
+                n_active = m;
+                continue;
+            }
+            break;
+        }
+        let b = best_b;
+        let block = best_block;
+
+        // ---- second choice within the block -----------------------------
+        // Moving δ of block-mass from a to b changes the objective at rate
+        // ±δ(s_b − s_a); require a strict-descent direction with box room.
+        let fb = fbar(s[b], rho1, rho2);
+        let a = if p.heuristic == Heuristic::SecondOrder {
+            select_partner_second_order(
+                provider, block, b, &alpha, &alpha_bar, &s, cap_a, cap_b,
+            )
+        } else {
+            select_partner(
+                block, b, fb, &alpha, &alpha_bar, &s, rho1, rho2, cap_a, cap_b,
+                p.heuristic, &mut rng,
+            )
+        };
+        let Some(a) = a else {
+            // b is geometrically blocked this round; let ρ re-estimation
+            // run and count a stall (bounded, so we cannot spin forever).
+            stalled_rounds += 1;
+            iterations += 1;
+            if stalled_rounds > 64 {
+                break;
+            }
+            continue;
+        };
+        stalled_rounds = 0;
+
+        // ---- analytic update (35)-(39), block-signed ---------------------
+        let progressed = provider.with_two_rows(a, b, &mut |row_a, row_b| {
+            let kaa = row_a[a];
+            let kbb = row_b[b];
+            let kab = row_a[b];
+            let kappa = kaa + kbb - 2.0 * kab;
+            match block {
+                Block::Alpha => {
+                    let t_star = alpha[a] + alpha[b];
+                    let l = (t_star - cap_a).max(0.0);
+                    let h = cap_a.min(t_star);
+                    if h - l <= f64::EPSILON {
+                        return false;
+                    }
+                    let new_b = if kappa > 1e-12 {
+                        (alpha[b] + (s[a] - s[b]) / kappa).clamp(l, h)
+                    } else if s[a] > s[b] {
+                        h
+                    } else if s[a] < s[b] {
+                        l
+                    } else {
+                        return false;
+                    };
+                    let delta = new_b - alpha[b];
+                    if delta.abs() < 1e-16 {
+                        return false;
+                    }
+                    alpha[b] = new_b;
+                    alpha[a] = t_star - new_b;
+                    // γ_b += δ, γ_a −= δ
+                    for j in 0..m {
+                        s[j] += delta * (row_b[j] - row_a[j]);
+                    }
+                    true
+                }
+                Block::AlphaBar => {
+                    let t_star = alpha_bar[a] + alpha_bar[b];
+                    let l = (t_star - cap_b).max(0.0);
+                    let h = cap_b.min(t_star);
+                    if h - l <= f64::EPSILON {
+                        return false;
+                    }
+                    // γ = α − ᾱ: increasing ᾱ_b decreases γ_b, so the
+                    // 1-D optimum flips sign: δ* = (s_b − s_a)/κ.
+                    let new_b = if kappa > 1e-12 {
+                        (alpha_bar[b] + (s[b] - s[a]) / kappa).clamp(l, h)
+                    } else if s[b] > s[a] {
+                        h
+                    } else if s[b] < s[a] {
+                        l
+                    } else {
+                        return false;
+                    };
+                    let delta = new_b - alpha_bar[b];
+                    if delta.abs() < 1e-16 {
+                        return false;
+                    }
+                    alpha_bar[b] = new_b;
+                    alpha_bar[a] = t_star - new_b;
+                    // γ_b −= δ, γ_a += δ
+                    for j in 0..m {
+                        s[j] += delta * (row_a[j] - row_b[j]);
+                    }
+                    true
+                }
+            }
+        });
+
+        iterations += 1;
+        if !progressed {
+            stalled_rounds += 1;
+            if stalled_rounds > 64 {
+                break;
+            }
+        } else {
+            stalled_rounds = 0;
+        }
+    }
+
+    if iterations >= p.max_iter && max_viol > tol_eff * 10.0 {
+        return Err(Error::NoConvergence(format!(
+            "SMO hit max_iter={} with max KKT violation {max_viol:.3e}",
+            p.max_iter
+        )));
+    }
+
+    recover_rhos_blocks(
+        &alpha, &alpha_bar, &s, cap_a, cap_b, cls, &mut rho1, &mut rho2,
+    );
+    let gamma: Vec<f64> =
+        alpha.iter().zip(&alpha_bar).map(|(a, ab)| a - ab).collect();
+    let objective = 0.5 * gamma.iter().zip(&s).map(|(g, si)| g * si).sum::<f64>();
+    let stats = SolveStats {
+        iterations,
+        objective,
+        max_violation: max_viol,
+        seconds: t0.elapsed().as_secs_f64(),
+        cache: provider.stats(),
+        kernel_evals: 0,
+    };
+    Ok(SmoOutcome { alpha, alpha_bar, gamma, s, rho1, rho2, stats })
+}
+
+/// WSS2-style second choice: the partner maximizing the guaranteed
+/// objective decrease (s_a − s_b)²/(2κ) with κ = k_aa + k_bb − 2k_ab,
+/// restricted to strict-descent-feasible partners. Needs kernel row b
+/// (one provider access per iteration — same cost class as the update
+/// itself, which also fetches row b).
+#[allow(clippy::too_many_arguments)]
+fn select_partner_second_order<P: KernelProvider>(
+    provider: &mut P,
+    block: Block,
+    b: usize,
+    alpha: &[f64],
+    alpha_bar: &[f64],
+    s: &[f64],
+    cap_a: f64,
+    cap_b: f64,
+) -> Option<usize> {
+    let m = s.len();
+    let kbb = provider.diag(b);
+    let diag: Vec<f64> = (0..m).map(|i| provider.diag(i)).collect();
+    provider.with_row(b, &mut |row_b| {
+        let mut best = None;
+        let mut best_gain = 0.0;
+        for i in 0..m {
+            if i == b {
+                continue;
+            }
+            let feasible = match block {
+                Block::Alpha => {
+                    let d = s[i] - s[b];
+                    (d > 0.0 && alpha[b] < cap_a - 1e-15 && alpha[i] > 1e-15)
+                        || (d < 0.0
+                            && alpha[b] > 1e-15
+                            && alpha[i] < cap_a - 1e-15)
+                }
+                Block::AlphaBar => {
+                    let d = s[b] - s[i];
+                    (d > 0.0 && alpha_bar[b] < cap_b - 1e-15 && alpha_bar[i] > 1e-15)
+                        || (d < 0.0
+                            && alpha_bar[b] > 1e-15
+                            && alpha_bar[i] < cap_b - 1e-15)
+                }
+            };
+            if !feasible {
+                continue;
+            }
+            let kappa = (diag[i] + kbb - 2.0 * row_b[i]).max(1e-12);
+            let d = s[i] - s[b];
+            let gain = d * d / (2.0 * kappa);
+            if gain > best_gain {
+                best_gain = gain;
+                best = Some(i);
+            }
+        }
+        best
+    })
+}
+
+/// Second-choice scan: best |f̄(x_b) − f̄(x_a)| partner in `block` that
+/// admits a strict-descent transfer with b.
+#[allow(clippy::too_many_arguments)]
+fn select_partner(
+    block: Block,
+    b: usize,
+    fb: f64,
+    alpha: &[f64],
+    alpha_bar: &[f64],
+    s: &[f64],
+    rho1: f64,
+    rho2: f64,
+    cap_a: f64,
+    cap_b: f64,
+    heuristic: Heuristic,
+    rng: &mut Rng,
+) -> Option<usize> {
+    let m = s.len();
+    let can_pair = |a: usize| -> bool {
+        if a == b {
+            return false;
+        }
+        match block {
+            // objective rate for δ mass a→b is δ(s_b − s_a):
+            // descent if (s_a > s_b, δ>0, need α_b<cap, α_a>0) or mirror.
+            Block::Alpha => {
+                let d = s[a] - s[b];
+                (d > 0.0 && alpha[b] < cap_a - 1e-15 && alpha[a] > 1e-15)
+                    || (d < 0.0 && alpha[b] > 1e-15 && alpha[a] < cap_a - 1e-15)
+            }
+            // ᾱ contributes −ᾱ to γ: rate is δ(s_a − s_b) for ᾱ mass a→b.
+            Block::AlphaBar => {
+                let d = s[b] - s[a];
+                (d > 0.0 && alpha_bar[b] < cap_b - 1e-15 && alpha_bar[a] > 1e-15)
+                    || (d < 0.0 && alpha_bar[b] > 1e-15 && alpha_bar[a] < cap_b - 1e-15)
+            }
+        }
+    };
+    match heuristic {
+        Heuristic::RandomViolator => {
+            for _ in 0..32 {
+                let mut c = rng.below(m - 1);
+                if c >= b {
+                    c += 1;
+                }
+                if can_pair(c) {
+                    return Some(c);
+                }
+            }
+            (0..m).find(|&i| can_pair(i))
+        }
+        _ => {
+            let mut best = None;
+            let mut best_gap = -1.0;
+            for i in 0..m {
+                if !can_pair(i) {
+                    continue;
+                }
+                let gap = (fb - fbar(s[i], rho1, rho2)).abs();
+                if gap > best_gap {
+                    best_gap = gap;
+                    best = Some(i);
+                }
+            }
+            best
+        }
+    }
+}
+
+/// Recover ρ₁/ρ₂ (paper eqs. (20)–(21)) from the block structure:
+/// ρ₁ = mean margin of free-α SVs, ρ₂ = mean margin of free-ᾱ SVs;
+/// fallback = midpoint of the interval the bound cases imply.
+#[allow(clippy::too_many_arguments)]
+pub fn recover_rhos_blocks(
+    alpha: &[f64],
+    alpha_bar: &[f64],
+    s: &[f64],
+    cap_a: f64,
+    cap_b: f64,
+    tol: f64,
+    rho1: &mut f64,
+    rho2: &mut f64,
+) {
+    let m = alpha.len();
+    let (mut sum1, mut n1) = (0.0, 0usize);
+    let (mut sum2, mut n2) = (0.0, 0usize);
+    // interval bounds: ρ₁ ∈ [max_{α=cap} s, min_{α=0} s],
+    //                  ρ₂ ∈ [max_{ᾱ=0} s, min_{ᾱ=cap} s]
+    let mut lo1 = f64::NEG_INFINITY;
+    let mut hi1 = f64::INFINITY;
+    let mut lo2 = f64::NEG_INFINITY;
+    let mut hi2 = f64::INFINITY;
+    for i in 0..m {
+        if alpha[i] > tol && alpha[i] < cap_a - tol {
+            sum1 += s[i];
+            n1 += 1;
+        } else if alpha[i] >= cap_a - tol {
+            lo1 = lo1.max(s[i]);
+        } else {
+            hi1 = hi1.min(s[i]);
+        }
+        if alpha_bar[i] > tol && alpha_bar[i] < cap_b - tol {
+            sum2 += s[i];
+            n2 += 1;
+        } else if alpha_bar[i] >= cap_b - tol {
+            hi2 = hi2.min(s[i]);
+        } else {
+            lo2 = lo2.max(s[i]);
+        }
+    }
+    *rho1 = if n1 > 0 { sum1 / n1 as f64 } else { midpoint(lo1, hi1, s) };
+    *rho2 = if n2 > 0 { sum2 / n2 as f64 } else { midpoint(lo2, hi2, s) };
+}
+
+fn midpoint(lo: f64, hi: f64, s: &[f64]) -> f64 {
+    match (lo.is_finite(), hi.is_finite()) {
+        (true, true) => 0.5 * (lo + hi),
+        (true, false) => lo,
+        (false, true) => hi,
+        (false, false) => crate::linalg::median(s),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The paper's γ-form as printed (eqs. 30–32): kept for the errata ablation.
+// ---------------------------------------------------------------------------
+
+/// Solve the *relaxed* γ-form dual exactly as the paper prints it
+/// (single sum constraint Σγ = 1 − ε). This is NOT the OCSSVM dual —
+/// the missing per-block sum constraints let overlap mass grow and the
+/// slab collapse (see `rust/tests/errata.rs` and DESIGN.md §Findings).
+/// Returns (γ, ρ₁, ρ₂, stats).
+pub fn solve_gamma_relaxed(
+    k: &Matrix,
+    p: &SmoParams,
+) -> Result<(Vec<f64>, f64, f64, SolveStats)> {
+    let m = k.rows();
+    let (lo, hi) = check_params(m, p.nu1, p.nu2, p.eps)?;
+    let t0 = Instant::now();
+    let c = 1.0 - p.eps;
+
+    let mut gamma = vec![c / m as f64; m];
+    let mut s = vec![0.0; m];
+    for i in 0..m {
+        s[i] = k.row(i).iter().sum::<f64>() * (c / m as f64);
+    }
+    let (mut rho1, mut rho2) = (0.0, 0.0);
+    let mut iterations = 0;
+    let mut max_viol = f64::INFINITY;
+
+    while iterations < p.max_iter {
+        // γ-form ρ recovery: free γ>0 ↔ ρ₁, free γ<0 ↔ ρ₂
+        recover_rhos_gamma(&gamma, &s, lo, hi, p.tol, &mut rho1, &mut rho2);
+        let mut best_b = usize::MAX;
+        let mut best_v = p.tol;
+        max_viol = 0.0;
+        let mut violators = 0;
+        for i in 0..m {
+            let v = super::kkt_violation(gamma[i], s[i], rho1, rho2, lo, hi, p.tol);
+            max_viol = max_viol.max(v);
+            if v > p.tol {
+                violators += 1;
+            }
+            if v > best_v {
+                best_v = v;
+                best_b = i;
+            }
+        }
+        if violators <= 1 || best_b == usize::MAX {
+            break;
+        }
+        let b = best_b;
+        let mut a_sel = usize::MAX;
+        let mut best_gap = -1.0;
+        for i in 0..m {
+            if i == b {
+                continue;
+            }
+            let d = s[i] - s[b];
+            let ok = (d > 0.0 && gamma[b] < hi - 1e-15 && gamma[i] > lo + 1e-15)
+                || (d < 0.0 && gamma[b] > lo + 1e-15 && gamma[i] < hi - 1e-15);
+            if !ok {
+                continue;
+            }
+            if d.abs() > best_gap {
+                best_gap = d.abs();
+                a_sel = i;
+            }
+        }
+        if a_sel == usize::MAX {
+            break;
+        }
+        let a = a_sel;
+        let t_star = gamma[a] + gamma[b];
+        let l = (t_star - hi).max(lo);
+        let h = hi.min(t_star - lo);
+        let kappa = k.get(a, a) + k.get(b, b) - 2.0 * k.get(a, b);
+        let new_b = if kappa > 1e-12 {
+            (gamma[b] + (s[a] - s[b]) / kappa).clamp(l, h)
+        } else if s[a] > s[b] {
+            h
+        } else {
+            l
+        };
+        let delta = new_b - gamma[b];
+        if delta.abs() > 1e-16 {
+            gamma[b] = new_b;
+            gamma[a] = t_star - new_b;
+            let (ra, rb) = (k.row(a), k.row(b));
+            for j in 0..m {
+                s[j] += delta * (rb[j] - ra[j]);
+            }
+        }
+        iterations += 1;
+    }
+
+    recover_rhos_gamma(&gamma, &s, lo, hi, p.tol, &mut rho1, &mut rho2);
+    let objective = 0.5 * gamma.iter().zip(&s).map(|(g, si)| g * si).sum::<f64>();
+    Ok((
+        gamma,
+        rho1,
+        rho2,
+        SolveStats {
+            iterations,
+            objective,
+            max_violation: max_viol,
+            seconds: t0.elapsed().as_secs_f64(),
+            cache: Default::default(),
+            kernel_evals: 0,
+        },
+    ))
+}
+
+/// γ-form ρ recovery used by the relaxed ablation solver.
+fn recover_rhos_gamma(
+    gamma: &[f64],
+    s: &[f64],
+    lo: f64,
+    hi: f64,
+    tol: f64,
+    rho1: &mut f64,
+    rho2: &mut f64,
+) {
+    let (mut sum1, mut n1, mut sum2, mut n2) = (0.0, 0usize, 0.0, 0usize);
+    let (mut lo1, mut hi1) = (f64::NEG_INFINITY, f64::INFINITY);
+    let (mut lo2, mut hi2) = (f64::NEG_INFINITY, f64::INFINITY);
+    for i in 0..gamma.len() {
+        let g = gamma[i];
+        if g.abs() <= tol {
+            hi1 = hi1.min(s[i]);
+            lo2 = lo2.max(s[i]);
+        } else if g >= hi - tol {
+            lo1 = lo1.max(s[i]);
+        } else if g <= lo + tol {
+            hi2 = hi2.min(s[i]);
+        } else if g > 0.0 {
+            sum1 += s[i];
+            n1 += 1;
+        } else {
+            sum2 += s[i];
+            n2 += 1;
+        }
+    }
+    *rho1 = if n1 > 0 { sum1 / n1 as f64 } else { midpoint(lo1, hi1, s) };
+    *rho2 = if n2 > 0 { sum2 / n2 as f64 } else { midpoint(lo2, hi2, s) };
+    if *rho1 > *rho2 {
+        let mid = 0.5 * (*rho1 + *rho2);
+        *rho1 = mid;
+        *rho2 = mid;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+    use crate::solver::validate::certify;
+
+    fn paper_params() -> SmoParams {
+        SmoParams { nu1: 0.5, nu2: 0.01, eps: 2.0 / 3.0, ..Default::default() }
+    }
+
+    #[test]
+    fn trains_on_slab_data() {
+        let ds = SlabConfig::default().generate(300, 1);
+        let (model, out) = train_full(&ds.x, Kernel::Linear, &paper_params()).unwrap();
+        assert!(out.stats.iterations > 0);
+        assert!(model.width() > 0.0, "slab must have positive width");
+        assert!(model.n_sv() > 0);
+    }
+
+    #[test]
+    fn solution_certifies() {
+        let ds = SlabConfig::default().generate(200, 2);
+        let p = paper_params();
+        let (_, out) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
+        let k = Kernel::Linear.gram(&ds.x, 2);
+        certify(
+            &k, &out.alpha, &out.alpha_bar, out.rho1, out.rho2,
+            p.nu1, p.nu2, p.eps, 1e-3,
+        )
+        .expect("SMO solution must satisfy feasibility + KKT");
+    }
+
+    #[test]
+    fn both_sum_constraints_conserved() {
+        let ds = SlabConfig::default().generate(150, 3);
+        let p = paper_params();
+        let (_, out) = train_full(&ds.x, Kernel::Rbf { g: 0.05 }, &p).unwrap();
+        let sa: f64 = out.alpha.iter().sum();
+        let sb: f64 = out.alpha_bar.iter().sum();
+        assert!((sa - 1.0).abs() < 1e-9, "sum(alpha)={sa}");
+        assert!((sb - p.eps).abs() < 1e-9, "sum(alpha_bar)={sb}");
+        let sg: f64 = out.gamma.iter().sum();
+        assert!((sg - (1.0 - p.eps)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn box_constraints_respected() {
+        let ds = SlabConfig::default().generate(150, 4);
+        let p = paper_params();
+        let (_, out) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
+        let m = out.alpha.len() as f64;
+        let cap_a = 1.0 / (p.nu1 * m);
+        let cap_b = p.eps / (p.nu2 * m);
+        for i in 0..out.alpha.len() {
+            assert!(out.alpha[i] >= -1e-12 && out.alpha[i] <= cap_a + 1e-12);
+            assert!(out.alpha_bar[i] >= -1e-12 && out.alpha_bar[i] <= cap_b + 1e-12);
+        }
+    }
+
+    #[test]
+    fn margins_match_gamma() {
+        // the incrementally maintained s must equal K·gamma at exit
+        let ds = SlabConfig::default().generate(120, 5);
+        let p = paper_params();
+        let (_, out) = train_full(&ds.x, Kernel::Rbf { g: 0.05 }, &p).unwrap();
+        let k = Kernel::Rbf { g: 0.05 }.gram(&ds.x, 2);
+        for i in 0..out.gamma.len() {
+            let si: f64 = (0..out.gamma.len())
+                .map(|j| out.gamma[j] * k.get(i, j))
+                .sum();
+            assert!(
+                (si - out.s[i]).abs() < 1e-8,
+                "drift at {i}: {si} vs {}",
+                out.s[i]
+            );
+        }
+    }
+
+    #[test]
+    fn slab_is_ordered_and_meaningful() {
+        let cfg = SlabConfig { contamination: 0.0, ..Default::default() };
+        let ds = cfg.generate(400, 6);
+        let (model, out) =
+            train_full(&ds.x, Kernel::Linear, &paper_params()).unwrap();
+        assert!(out.rho1 < out.rho2, "rho1={} rho2={}", out.rho1, out.rho2);
+        // nu-property: with ν₁ = 0.5, about half the training points are
+        // below the lower plane; the inside fraction is ≈ 1 − ν₁ − ν₂.
+        let inside = (0..ds.len())
+            .filter(|&i| model.classify(ds.x.row(i)) > 0)
+            .count() as f64
+            / ds.len() as f64;
+        assert!(
+            (inside - 0.5).abs() < 0.15,
+            "inside fraction {inside}, want ≈ 1 − ν₁ = 0.5"
+        );
+    }
+
+    #[test]
+    fn nu_properties_hold() {
+        // Schölkopf-style ν-properties, slab version:
+        // fraction below ρ1 ≤ ν₁ (+slack), fraction above ρ2 ≤ ν₂ (+slack)
+        let cfg = SlabConfig { contamination: 0.0, ..Default::default() };
+        let ds = cfg.generate(500, 13);
+        for (nu1, nu2, eps) in [(0.5, 0.01, 2.0 / 3.0), (0.2, 0.08, 0.5)] {
+            let p = SmoParams { nu1, nu2, eps, ..Default::default() };
+            let (_, out) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
+            let below = out.s.iter().filter(|&&si| si < out.rho1 - 1e-9).count()
+                as f64
+                / 500.0;
+            let above = out.s.iter().filter(|&&si| si > out.rho2 + 1e-9).count()
+                as f64
+                / 500.0;
+            assert!(below <= nu1 + 0.05, "below={below} > nu1={nu1}");
+            assert!(above <= nu2 + 0.05, "above={above} > nu2={nu2}");
+        }
+    }
+
+    #[test]
+    fn heuristics_reach_same_objective() {
+        let ds = SlabConfig::default().generate(150, 7);
+        let mut objs = Vec::new();
+        for h in [
+            Heuristic::PaperMaxFbar,
+            Heuristic::MaxViolation,
+            Heuristic::RandomViolator,
+        ] {
+            let p = SmoParams { heuristic: h, ..paper_params() };
+            let (_, out) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
+            objs.push(out.stats.objective);
+        }
+        let spread = objs.iter().cloned().fold(f64::MIN, f64::max)
+            - objs.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(
+            spread < 1e-3 * objs[0].abs().max(1e-3),
+            "objectives diverge: {objs:?}"
+        );
+    }
+
+    #[test]
+    fn cached_provider_matches_precomputed() {
+        let ds = SlabConfig::default().generate(100, 8);
+        let p = paper_params();
+        let (_, out_pre) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
+        let cache = CachedRows::new(&ds.x, Kernel::Linear, 100); // full capacity
+        let (_, out_cache) =
+            train_cached(&ds.x, Kernel::Linear, &p, cache).unwrap();
+        assert!(
+            (out_pre.stats.objective - out_cache.stats.objective).abs() < 1e-9,
+            "{} vs {}",
+            out_pre.stats.objective,
+            out_cache.stats.objective
+        );
+    }
+
+    #[test]
+    fn small_cache_still_converges() {
+        let ds = SlabConfig::default().generate(100, 9);
+        let p = paper_params();
+        let cache = CachedRows::new(&ds.x, Kernel::Linear, 8);
+        let (model, out) = train_cached(&ds.x, Kernel::Linear, &p, cache).unwrap();
+        assert!(model.width() >= 0.0);
+        assert!(out.stats.cache.misses > 0);
+        let k = Kernel::Linear.gram(&ds.x, 2);
+        certify(
+            &k, &out.alpha, &out.alpha_bar, out.rho1, out.rho2,
+            p.nu1, p.nu2, p.eps, 1e-3,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let ds = SlabConfig::default().generate(50, 10);
+        let p = SmoParams { nu1: 0.0, ..paper_params() };
+        assert!(train(&ds.x, Kernel::Linear, &p).is_err());
+    }
+
+    #[test]
+    fn fig2_constants_also_work() {
+        // Fig. 2 caption: nu1=0.2, nu2=0.08, eps=1/2
+        let ds = SlabConfig::default().generate(200, 11);
+        let p = SmoParams { nu1: 0.2, nu2: 0.08, eps: 0.5, ..Default::default() };
+        let (model, out) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
+        assert!(model.width() > 0.0);
+        let k = Kernel::Linear.gram(&ds.x, 2);
+        certify(
+            &k, &out.alpha, &out.alpha_bar, out.rho1, out.rho2,
+            0.2, 0.08, 0.5, 1e-3,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn gamma_relaxed_collapses_where_faithful_does_not() {
+        // The errata finding: the γ-form as printed can move unbounded
+        // overlap mass (Σγ⁻ ≫ ε) and drives the objective to ~0 (w → 0)
+        // even on data where the faithful dual has a well-defined slab.
+        let ds = SlabConfig::default().generate(200, 12); // offset band
+        let k = Kernel::Linear.gram(&ds.x, 2);
+        let (gamma, _, _, stats) = solve_gamma_relaxed(&k, &paper_params()).unwrap();
+        let (_, out) = train_full(&ds.x, Kernel::Linear, &paper_params()).unwrap();
+        assert!(
+            out.stats.objective > 1.0,
+            "faithful objective should be macroscopic, got {}",
+            out.stats.objective
+        );
+        // the relaxation strictly enlarges the feasible set, so its
+        // optimum is materially below the faithful one (its solution is
+        // dual-INFEASIBLE for the true OCSSVM)
+        assert!(
+            stats.objective < 0.8 * out.stats.objective,
+            "relaxed {} vs faithful {}",
+            stats.objective,
+            out.stats.objective
+        );
+        // and the mechanism: the relaxed solution's negative mass exceeds ε
+        let neg_mass: f64 = gamma.iter().filter(|g| **g < 0.0).map(|g| -*g).sum();
+        assert!(
+            neg_mass > paper_params().eps + 0.1,
+            "negative mass {neg_mass} should exceed eps"
+        );
+    }
+
+    #[test]
+    fn rho_block_recovery_fallbacks() {
+        // no free SVs: alpha at {0, cap}, alpha_bar at {0, cap}
+        let alpha = [0.5, 0.5, 0.0, 0.0];
+        let alpha_bar = [0.0, 0.0, 0.25, 0.25];
+        let s = [0.1, 0.2, 0.9, 1.0];
+        let (mut r1, mut r2) = (0.0, 0.0);
+        recover_rhos_blocks(&alpha, &alpha_bar, &s, 0.5, 0.25, 1e-9, &mut r1, &mut r2);
+        // ρ1 ∈ [max s over α=cap, min s over α=0] = [0.2, 0.9] -> 0.55
+        assert!((r1 - 0.55).abs() < 1e-12, "r1={r1}");
+        // ρ2 ∈ [max s over ᾱ=0, min s over ᾱ=cap] = [0.2, 0.9] -> 0.55
+        assert!((r2 - 0.55).abs() < 1e-12, "r2={r2}");
+    }
+}

@@ -1,0 +1,202 @@
+//! Solution certification: feasibility + ε-KKT for the OCSSVM dual.
+//!
+//! Independent of any solver — takes a Gram matrix and a dual point
+//! (α, ᾱ) and checks, from first principles:
+//!
+//! 1. box constraints (17)–(18): 0 ≤ αᵢ ≤ 1/(ν₁m), 0 ≤ ᾱᵢ ≤ ε/(ν₂m);
+//! 2. both sum constraints: Σα = 1 and Σᾱ = ε (the constraint the
+//!    paper's γ-form drops — see DESIGN.md §Findings);
+//! 3. per-block KKT with the given ρ₁/ρ₂, all within `tol`:
+//!    α: 0→s≥ρ₁, free→s=ρ₁, cap→s≤ρ₁; ᾱ: 0→s≤ρ₂, free→s=ρ₂, cap→s≥ρ₂.
+//!
+//! Every solver's output is certified in tests; the benches certify once
+//! per configuration before timing (a fast wrong solver is worthless).
+
+use crate::error::Error;
+use crate::linalg::Matrix;
+use crate::Result;
+
+/// Detailed certification report.
+#[derive(Clone, Debug, Default)]
+pub struct Certificate {
+    pub max_box_violation: f64,
+    /// |Σα − 1|
+    pub sum_alpha_violation: f64,
+    /// |Σᾱ − ε|
+    pub sum_alpha_bar_violation: f64,
+    pub max_kkt_violation: f64,
+    /// index of the worst KKT violator
+    pub worst_index: usize,
+    pub objective: f64,
+}
+
+/// Compute the report without pass/fail judgement. `cls_tol` is the
+/// bound-classification tolerance (how close to a bound counts as *at*
+/// the bound).
+#[allow(clippy::too_many_arguments)]
+pub fn report(
+    k: &Matrix,
+    alpha: &[f64],
+    alpha_bar: &[f64],
+    rho1: f64,
+    rho2: f64,
+    nu1: f64,
+    nu2: f64,
+    eps: f64,
+    cls_tol: f64,
+) -> Certificate {
+    let m = alpha.len();
+    assert_eq!(k.rows(), m);
+    assert_eq!(alpha_bar.len(), m);
+    let cap_a = 1.0 / (nu1 * m as f64);
+    let cap_b = eps / (nu2 * m as f64);
+
+    let mut cert = Certificate::default();
+    for i in 0..m {
+        let bv = (-alpha[i])
+            .max(alpha[i] - cap_a)
+            .max(-alpha_bar[i])
+            .max(alpha_bar[i] - cap_b)
+            .max(0.0);
+        cert.max_box_violation = cert.max_box_violation.max(bv);
+    }
+    cert.sum_alpha_violation = (alpha.iter().sum::<f64>() - 1.0).abs();
+    cert.sum_alpha_bar_violation = (alpha_bar.iter().sum::<f64>() - eps).abs();
+
+    // margins s = K (α − ᾱ)
+    let gamma: Vec<f64> = alpha.iter().zip(alpha_bar).map(|(a, b)| a - b).collect();
+    let mut s = vec![0.0; m];
+    crate::linalg::matvec(k, &gamma, &mut s);
+    for i in 0..m {
+        let va = if alpha[i] <= cls_tol {
+            (rho1 - s[i]).max(0.0)
+        } else if alpha[i] >= cap_a - cls_tol {
+            (s[i] - rho1).max(0.0)
+        } else {
+            (s[i] - rho1).abs()
+        };
+        let vb = if alpha_bar[i] <= cls_tol {
+            (s[i] - rho2).max(0.0)
+        } else if alpha_bar[i] >= cap_b - cls_tol {
+            (rho2 - s[i]).max(0.0)
+        } else {
+            (s[i] - rho2).abs()
+        };
+        let v = va.max(vb);
+        if v > cert.max_kkt_violation {
+            cert.max_kkt_violation = v;
+            cert.worst_index = i;
+        }
+    }
+    cert.objective = 0.5 * gamma.iter().zip(&s).map(|(g, si)| g * si).sum::<f64>();
+    cert
+}
+
+/// Pass/fail certification with tolerance `tol` (margin units).
+#[allow(clippy::too_many_arguments)]
+pub fn certify(
+    k: &Matrix,
+    alpha: &[f64],
+    alpha_bar: &[f64],
+    rho1: f64,
+    rho2: f64,
+    nu1: f64,
+    nu2: f64,
+    eps: f64,
+    tol: f64,
+) -> Result<Certificate> {
+    let m = alpha.len();
+    let cap_a = 1.0 / (nu1 * m as f64);
+    let cap_b = eps / (nu2 * m as f64);
+    // Bound-classification tolerance: strictly box-relative. It must
+    // never approach the cap itself (a margin-scaled `tol` can exceed
+    // the box at large m), otherwise capped variables get misclassified
+    // as zero/free and phantom violations appear.
+    let cls_tol = cap_a.min(cap_b) * 1e-6;
+    let cert = report(k, alpha, alpha_bar, rho1, rho2, nu1, nu2, eps, cls_tol);
+
+    if cert.max_box_violation > tol {
+        return Err(Error::Certification(format!(
+            "box violation {:.3e} > {tol:.1e}",
+            cert.max_box_violation
+        )));
+    }
+    if cert.sum_alpha_violation > tol * m as f64 {
+        return Err(Error::Certification(format!(
+            "sum(alpha) violation {:.3e}",
+            cert.sum_alpha_violation
+        )));
+    }
+    if cert.sum_alpha_bar_violation > tol * m as f64 {
+        return Err(Error::Certification(format!(
+            "sum(alpha_bar) violation {:.3e}",
+            cert.sum_alpha_bar_violation
+        )));
+    }
+    if cert.max_kkt_violation > tol {
+        return Err(Error::Certification(format!(
+            "KKT violation {:.3e} at index {} > {tol:.1e} (rho1={rho1:.4}, rho2={rho2:.4}, alpha={:.3e}, alpha_bar={:.3e})",
+            cert.max_kkt_violation,
+            cert.worst_index,
+            alpha[cert.worst_index],
+            alpha_bar[cert.worst_index],
+        )));
+    }
+    Ok(cert)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built 2-point problem with a known optimum. K = I,
+    /// ν₁ = ν₂ = 0.5, ε = 0.5 → cap_a = 1, cap_b = 0.5.
+    /// min ½‖α−ᾱ‖² s.t. Σα=1, Σᾱ=0.5 → symmetric αᵢ=0.5, ᾱᵢ=0.25,
+    /// γᵢ = 0.25, s = γ (K=I). Free SVs in both blocks: ρ₁=ρ₂=0.25.
+    #[test]
+    fn accepts_true_optimum() {
+        let k = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 1.0]]);
+        let alpha = [0.5, 0.5];
+        let alpha_bar = [0.25, 0.25];
+        certify(&k, &alpha, &alpha_bar, 0.25, 0.25, 0.5, 0.5, 0.5, 1e-9).unwrap();
+    }
+
+    #[test]
+    fn rejects_box_violation() {
+        let k = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 1.0]]);
+        let alpha = [1.5, -0.5]; // outside [0, 1]
+        let alpha_bar = [0.25, 0.25];
+        assert!(certify(&k, &alpha, &alpha_bar, 0.0, 0.0, 0.5, 0.5, 0.5, 1e-6)
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_dropped_sum_constraint() {
+        // the paper's γ-relaxation failure mode: Σᾱ ≠ ε
+        let k = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 1.0]]);
+        let alpha = [0.5, 0.5];
+        let alpha_bar = [0.5, 0.5]; // sums to 1.0, not ε=0.5
+        assert!(certify(&k, &alpha, &alpha_bar, 0.0, 0.0, 0.5, 0.5, 0.5, 1e-6)
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_kkt_violation() {
+        let k = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 1.0]]);
+        // feasible but with absurd rho's: free SVs must sit on the planes
+        let alpha = [0.5, 0.5];
+        let alpha_bar = [0.25, 0.25];
+        assert!(certify(&k, &alpha, &alpha_bar, -9.0, 9.0, 0.5, 0.5, 0.5, 1e-6)
+            .is_err());
+    }
+
+    #[test]
+    fn report_objective() {
+        let k = Matrix::from_rows(&[&[2.0, 0.0], &[0.0, 2.0]]);
+        let alpha = [0.5, 0.5];
+        let alpha_bar = [0.25, 0.25];
+        let c = report(&k, &alpha, &alpha_bar, 0.5, 0.5, 0.5, 0.5, 0.5, 1e-9);
+        // γ = 0.25 each; ½ γᵀKγ = ½ (0.25²·2 + 0.25²·2) = 0.125
+        assert!((c.objective - 0.125).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,142 @@
+//! Property-testing harness (proptest substitute).
+//!
+//! [`forall`] runs a property over `n` pseudo-random cases drawn from a
+//! [`Gen`] and, on failure, re-runs a simple halving **shrink** loop on
+//! the failing case's size parameters before panicking with the minimal
+//! reproduction seed. Deterministic: case i of a named property always
+//! sees the same RNG stream, so failures reproduce across runs.
+
+use crate::util::rng::Rng;
+
+/// Case generator context handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// scale knob in (0, 1]: properties use it to size their inputs so
+    /// the shrink loop can reduce failing cases
+    pub scale: f64,
+}
+
+impl Gen {
+    /// Random dataset size in [lo, hi] scaled by the shrink knob.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_scaled = lo + ((hi - lo) as f64 * self.scale) as usize;
+        lo + self.rng.below(hi_scaled - lo + 1)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Outcome of a property: Ok(()) or a failure description.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` generated cases. Panics (with seed + shrink
+/// info) on the first failure that survives shrinking.
+pub fn forall(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> PropResult) {
+    let base_seed = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen { rng: Rng::new(seed), scale: 1.0 };
+        if let Err(msg) = prop(&mut g) {
+            // shrink: halve the scale until the property passes, keep the
+            // smallest failing scale
+            let mut failing_scale = 1.0;
+            let mut failing_msg = msg;
+            let mut scale = 0.5;
+            while scale > 0.01 {
+                let mut g = Gen { rng: Rng::new(seed), scale };
+                match prop(&mut g) {
+                    Err(m) => {
+                        failing_scale = scale;
+                        failing_msg = m;
+                        scale *= 0.5;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, \
+                 minimal scale {failing_scale}): {failing_msg}"
+            );
+        }
+    }
+}
+
+/// FNV-1a for deterministic per-name seeds.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("always-true", 25, |g| {
+            let n = g.size(1, 100);
+            if n >= 1 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_context() {
+        forall("always-false", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_streams() {
+        use std::sync::Mutex;
+        let first: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        forall("det", 5, |g| {
+            first.lock().unwrap().push(g.size(1, 1000));
+            Ok(())
+        });
+        let second: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        forall("det", 5, |g| {
+            second.lock().unwrap().push(g.size(1, 1000));
+            Ok(())
+        });
+        assert_eq!(*first.lock().unwrap(), *second.lock().unwrap());
+    }
+
+    #[test]
+    fn shrink_reduces_scale() {
+        // property failing only for large sizes: shrink should find that
+        // small scales pass (we only check it doesn't hang / panics with
+        // the right name)
+        let result = std::panic::catch_unwind(|| {
+            forall("fails-large", 3, |g| {
+                let n = g.size(10, 1000);
+                if n > 500 {
+                    Err(format!("n={n} too big"))
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        // may or may not fail depending on draws; both fine — the point
+        // is the call returns (no infinite shrink loop)
+        let _ = result;
+    }
+}

@@ -1,0 +1,188 @@
+//! Tiny declarative CLI argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and per-subcommand help text. The `slabsvm` binary defines one
+//! [`ArgSpec`] per subcommand and parses with [`parse_args`].
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Declares one accepted option.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    /// long name without the leading `--`
+    pub name: &'static str,
+    /// help text
+    pub help: &'static str,
+    /// if false, the option is a boolean flag (no value)
+    pub takes_value: bool,
+    /// default value (None = absent unless provided)
+    pub default: Option<&'static str>,
+}
+
+impl ArgSpec {
+    pub fn opt(name: &'static str, default: &'static str, help: &'static str) -> Self {
+        ArgSpec { name, help, takes_value: true, default: Some(default) }
+    }
+    pub fn req(name: &'static str, help: &'static str) -> Self {
+        ArgSpec { name, help, takes_value: true, default: None }
+    }
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        ArgSpec { name, help, takes_value: false, default: None }
+    }
+}
+
+/// Parsed arguments: options by name + positional extras.
+#[derive(Debug, Default)]
+pub struct Parsed {
+    vals: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.vals.get(name).map(|s| s.as_str())
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| Error::config(format!("missing --{name}")))?;
+        v.parse()
+            .map_err(|_| Error::config(format!("--{name}: not a number: {v}")))
+    }
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| Error::config(format!("missing --{name}")))?;
+        v.parse()
+            .map_err(|_| Error::config(format!("--{name}: not an integer: {v}")))
+    }
+    pub fn get_str(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| Error::config(format!("missing --{name}")))
+    }
+}
+
+/// Parse `args` (without argv[0]/subcommand) against `spec`.
+pub fn parse_args(spec: &[ArgSpec], args: &[String]) -> Result<Parsed> {
+    let mut out = Parsed::default();
+    // seed defaults
+    for s in spec {
+        if let Some(d) = s.default {
+            out.vals.insert(s.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(body) = a.strip_prefix("--") {
+            let (name, inline_val) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let s = spec
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| Error::config(format!("unknown option --{name}")))?;
+            if s.takes_value {
+                let v = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        args.get(i)
+                            .cloned()
+                            .ok_or_else(|| {
+                                Error::config(format!("--{name} needs a value"))
+                            })?
+                    }
+                };
+                out.vals.insert(name.to_string(), v);
+            } else {
+                if inline_val.is_some() {
+                    return Err(Error::config(format!("--{name} takes no value")));
+                }
+                out.flags.push(name.to_string());
+            }
+        } else {
+            out.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+/// Render help text for a subcommand.
+pub fn render_help(cmd: &str, about: &str, spec: &[ArgSpec]) -> String {
+    let mut s = format!("slabsvm {cmd} — {about}\n\noptions:\n");
+    for a in spec {
+        let meta = if a.takes_value { " <v>" } else { "" };
+        let def = match a.default {
+            Some(d) => format!(" [default: {d}]"),
+            None => String::new(),
+        };
+        s.push_str(&format!("  --{}{meta}\t{}{def}\n", a.name, a.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<ArgSpec> {
+        vec![
+            ArgSpec::opt("size", "1000", "dataset size"),
+            ArgSpec::req("out", "output path"),
+            ArgSpec::flag("verbose", "chatty"),
+        ]
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = parse_args(&spec(), &s(&["--out", "x.csv"])).unwrap();
+        assert_eq!(p.get_usize("size").unwrap(), 1000);
+        assert_eq!(p.get("out"), Some("x.csv"));
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let p = parse_args(&spec(), &s(&["--size=42", "--out=o"])).unwrap();
+        assert_eq!(p.get_usize("size").unwrap(), 42);
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let p =
+            parse_args(&spec(), &s(&["--verbose", "pos1", "--out", "o", "pos2"]))
+                .unwrap();
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse_args(&spec(), &s(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse_args(&spec(), &s(&["--size"])).is_err());
+    }
+
+    #[test]
+    fn typed_errors() {
+        let p = parse_args(&spec(), &s(&["--size", "abc", "--out", "o"])).unwrap();
+        assert!(p.get_f64("size").is_err());
+        assert!(p.get_usize("size").is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! In-tree substrates replacing ecosystem crates (offline build).
+//!
+//! The build environment vendors only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates are replaced by small,
+//! well-tested local implementations:
+//!
+//! | would-be crate | local module |
+//! |---|---|
+//! | `rand` / `rand_distr` | [`rng`] — xoshiro256++, normal/laplace/uniform |
+//! | `serde_json` | [`json`] — minimal JSON value parser/emitter |
+//! | `clap` | [`cli`] — declarative-ish argument parser |
+//! | `log` + `env_logger` | [`logging`] — leveled stderr logger |
+//! | `rayon` (scoped pools) | [`threadpool`] — scoped fork-join helper |
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,127 @@
+//! Scoped fork-join parallelism helper (rayon-lite).
+//!
+//! [`parallel_chunks`] splits an index range into contiguous chunks and
+//! runs one scoped thread per chunk — used by the parallel Gram builder
+//! and the bench workload generators. std::thread::scope keeps borrows
+//! safe without 'static bounds.
+
+/// Number of worker threads to use by default (cores, capped).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Run `f(chunk_start, chunk_end)` over `[0, n)` split into `threads`
+/// contiguous chunks, in parallel. `f` must be Sync (it is shared across
+/// workers); interior mutability of outputs is the caller's business
+/// (e.g. disjoint &mut slices via split_at_mut, or atomics).
+pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n == 0 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Map `f` over disjoint mutable row-chunks of `out` (len n*stride),
+/// in parallel: each worker gets rows [start, end) as one &mut slice.
+pub fn parallel_rows<F>(out: &mut [f64], stride: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    let n = if stride == 0 { 0 } else { out.len() / stride };
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n == 0 {
+        f(0, out);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut row = 0;
+        for _ in 0..threads {
+            let take = chunk.min(rest.len() / stride).min(n - row);
+            if take == 0 {
+                break;
+            }
+            let (head, tail) = rest.split_at_mut(take * stride);
+            rest = tail;
+            let f = &f;
+            let start_row = row;
+            s.spawn(move || f(start_row, head));
+            row += take;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_all_indices_once() {
+        let n = 1003;
+        let counts: Vec<AtomicUsize> =
+            (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_chunks(n, 7, |s, e| {
+            for i in s..e {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let mut hit = false;
+        parallel_chunks(10, 1, |s, e| {
+            assert_eq!((s, e), (0, 10));
+            // closure is Fn so no captures mutation; use a raw check
+            let _ = &hit;
+        });
+        hit = true;
+        assert!(hit);
+    }
+
+    #[test]
+    fn parallel_rows_disjoint() {
+        let stride = 8;
+        let n = 37;
+        let mut out = vec![0.0; n * stride];
+        parallel_rows(&mut out, stride, 5, |start_row, rows| {
+            for (r, row) in rows.chunks_mut(stride).enumerate() {
+                for v in row.iter_mut() {
+                    *v = (start_row + r) as f64;
+                }
+            }
+        });
+        for r in 0..n {
+            for c in 0..stride {
+                assert_eq!(out[r * stride + c], r as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_n_is_fine() {
+        parallel_chunks(0, 4, |s, e| assert_eq!(s, e));
+    }
+}

@@ -1,0 +1,153 @@
+//! End-to-end CLI tests: drive the real `slabsvm` binary the way a user
+//! does — train → save → predict → eval → figures → sweep — and check
+//! the outputs and exit codes.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_slabsvm"))
+}
+
+fn tmpdir() -> PathBuf {
+    let d = std::env::temp_dir().join(format!("slabsvm_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn help_and_unknown_subcommand() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("train"));
+    assert!(text.contains("figures"));
+
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn train_predict_eval_roundtrip() {
+    let dir = tmpdir();
+    let model = dir.join("m.json");
+
+    // train on synthetic data
+    let out = bin()
+        .args([
+            "train", "--data", "synthetic:slab", "--size", "300", "--out",
+        ])
+        .arg(&model)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "train failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("model saved"));
+    assert!(model.exists());
+
+    // eval against the default synthetic protocol
+    let out = bin()
+        .args(["eval", "--model"])
+        .arg(&model)
+        .args(["--size", "300"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("mcc="), "missing metrics: {text}");
+
+    // predict on a CSV of queries
+    let queries = dir.join("q.csv");
+    std::fs::write(&queries, "20.0,20.0\n-8.0,18.0\n0.0,0.0\n").unwrap();
+    let out = bin()
+        .args(["predict", "--model"])
+        .arg(&model)
+        .arg("--queries")
+        .arg(&queries)
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let labels: Vec<&str> = std::str::from_utf8(&out.stdout)
+        .unwrap()
+        .lines()
+        .collect();
+    assert_eq!(labels.len(), 3);
+    for l in &labels {
+        assert!(*l == "1" || *l == "-1", "bad label {l}");
+    }
+    // the origin is off-band -> anomalous
+    assert_eq!(labels[2], "-1");
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn figures_subcommand_writes_files() {
+    let dir = tmpdir();
+    let out = bin()
+        .args(["figures", "--fig", "1", "--out-dir"])
+        .arg(&dir)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "figures failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let csv = std::fs::read_to_string(dir.join("fig1.csv")).unwrap();
+    assert!(csv.starts_with("kind,x,y,label"));
+    assert!(csv.contains("lower,") && csv.contains("upper,"));
+    let svg = std::fs::read_to_string(dir.join("fig1.svg")).unwrap();
+    assert!(svg.starts_with("<svg"));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn sweep_subcommand_ranks_grid() {
+    let out = bin()
+        .args([
+            "sweep", "--size", "200", "--nu1", "0.1,0.5", "--nu2", "0.05",
+            "--eps-grid", "0.5", "--folds", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "sweep failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("mean MCC"));
+    assert!(text.contains("2 grid points"));
+}
+
+#[test]
+fn bad_arguments_fail_cleanly() {
+    // missing required --model
+    let out = bin().args(["predict", "--queries", "x.csv"]).output().unwrap();
+    assert!(!out.status.success());
+    // invalid nu1
+    let out = bin()
+        .args(["train", "--nu1", "2.0", "--size", "50", "--out", "/tmp/x.json"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("nu1"));
+    // unknown figure
+    let out = bin().args(["figures", "--fig", "9"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn info_reports_manifest() {
+    // works with or without artifacts; just must not crash
+    let out = bin().args(["info"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("threads available"));
+}

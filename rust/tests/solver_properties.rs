@@ -1,0 +1,185 @@
+//! Property-based tests over the solver invariants (in-tree `testing`
+//! harness; see DESIGN.md §5). Each property runs dozens of randomized
+//! cases over datasets, kernels and hyper-parameters.
+
+use slabsvm::data::synthetic::{Noise, SlabConfig};
+use slabsvm::kernel::Kernel;
+use slabsvm::solver::smo::{train_full, SmoParams};
+use slabsvm::solver::validate::certify;
+use slabsvm::testing::{forall, Gen};
+
+/// Random-but-valid problem instance.
+fn gen_problem(g: &mut Gen) -> (slabsvm::data::Dataset, Kernel, SmoParams) {
+    let m = g.size(40, 300);
+    let cfg = SlabConfig {
+        angle: g.f64(0.0, 1.2),
+        offset: g.f64(15.0, 30.0),
+        half_len: g.f64(1.0, 4.0),
+        spread: g.f64(0.1, 0.5),
+        noise: *g.choose(&[Noise::Gaussian, Noise::Laplace]),
+        contamination: g.f64(0.0, 0.05),
+    };
+    let ds = cfg.generate(m, g.rng.next_u64());
+    let kernel = *g.choose(&[
+        Kernel::Linear,
+        Kernel::Rbf { g: 0.01 },
+        Kernel::Rbf { g: 0.1 },
+    ]);
+    let params = SmoParams {
+        nu1: g.f64(0.15, 0.8),
+        nu2: g.f64(0.02, 0.2),
+        eps: g.f64(0.2, 0.8),
+        ..Default::default()
+    };
+    (ds, kernel, params)
+}
+
+#[test]
+fn prop_feasibility_and_certification() {
+    forall("feasibility+kkt", 30, |g| {
+        let (ds, kernel, params) = gen_problem(g);
+        let (_, out) = train_full(&ds.x, kernel, &params)
+            .map_err(|e| format!("train failed: {e}"))?;
+        // both sums conserved to fp accuracy
+        let sa: f64 = out.alpha.iter().sum();
+        let sb: f64 = out.alpha_bar.iter().sum();
+        if (sa - 1.0).abs() > 1e-8 {
+            return Err(format!("sum(alpha)={sa}"));
+        }
+        if (sb - params.eps).abs() > 1e-8 {
+            return Err(format!("sum(alpha_bar)={sb} want {}", params.eps));
+        }
+        // box constraints
+        let m = out.alpha.len() as f64;
+        let cap_a = 1.0 / (params.nu1 * m);
+        let cap_b = params.eps / (params.nu2 * m);
+        for i in 0..out.alpha.len() {
+            if out.alpha[i] < -1e-12 || out.alpha[i] > cap_a + 1e-12 {
+                return Err(format!("alpha[{i}]={} outside box", out.alpha[i]));
+            }
+            if out.alpha_bar[i] < -1e-12 || out.alpha_bar[i] > cap_b + 1e-12 {
+                return Err(format!("alpha_bar[{i}] outside box"));
+            }
+        }
+        // independent certification
+        let k = kernel.gram(&ds.x, 4);
+        let scale = 1.0 + out.rho2.abs().max(out.rho1.abs());
+        certify(
+            &k, &out.alpha, &out.alpha_bar, out.rho1, out.rho2,
+            params.nu1, params.nu2, params.eps, 1e-2 * scale,
+        )
+        .map_err(|e| format!("certification: {e}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_margins_match_gamma() {
+    forall("margin-consistency", 20, |g| {
+        let (ds, kernel, params) = gen_problem(g);
+        let (_, out) = train_full(&ds.x, kernel, &params)
+            .map_err(|e| format!("train failed: {e}"))?;
+        let k = kernel.gram(&ds.x, 4);
+        for i in 0..out.gamma.len() {
+            let si: f64 =
+                (0..out.gamma.len()).map(|j| out.gamma[j] * k.get(i, j)).sum();
+            if (si - out.s[i]).abs() > 1e-6 * (1.0 + si.abs()) {
+                return Err(format!("margin drift at {i}: {si} vs {}", out.s[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slab_ordered_and_nu_bounds() {
+    forall("slab-order+nu", 20, |g| {
+        let (ds, kernel, params) = gen_problem(g);
+        let (_, out) = train_full(&ds.x, kernel, &params)
+            .map_err(|e| format!("train failed: {e}"))?;
+        if out.rho1 > out.rho2 + 1e-9 {
+            return Err(format!("rho1 {} > rho2 {}", out.rho1, out.rho2));
+        }
+        // ν-properties (finite-sample slack 8%)
+        let m = out.s.len() as f64;
+        let below =
+            out.s.iter().filter(|&&s| s < out.rho1 - 1e-9).count() as f64 / m;
+        let above =
+            out.s.iter().filter(|&&s| s > out.rho2 + 1e-9).count() as f64 / m;
+        if below > params.nu1 + 0.08 {
+            return Err(format!("below={below} > nu1={}", params.nu1));
+        }
+        if above > params.nu2 + 0.08 {
+            return Err(format!("above={above} > nu2={}", params.nu2));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_objective_independent_of_heuristic_and_seed() {
+    use slabsvm::solver::Heuristic;
+    forall("heuristic-invariance", 12, |g| {
+        let (ds, kernel, params) = gen_problem(g);
+        let mut objs = Vec::new();
+        for h in [
+            Heuristic::PaperMaxFbar,
+            Heuristic::MaxViolation,
+            Heuristic::RandomViolator,
+        ] {
+            let p = SmoParams { heuristic: h, seed: g.rng.next_u64(), ..params };
+            let (_, out) = train_full(&ds.x, kernel, &p)
+                .map_err(|e| format!("train failed ({h:?}): {e}"))?;
+            objs.push(out.stats.objective);
+        }
+        let lo = objs.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = objs.iter().cloned().fold(f64::MIN, f64::max);
+        if hi - lo > 1e-2 * hi.abs().max(1e-6) {
+            return Err(format!("objectives diverge: {objs:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_model_persistence_is_lossless() {
+    forall("persistence", 10, |g| {
+        let (ds, kernel, params) = gen_problem(g);
+        let (model, _) = train_full(&ds.x, kernel, &params)
+            .map_err(|e| format!("train failed: {e}"))?;
+        let json = model.to_json().to_string();
+        let back = slabsvm::solver::ocssvm::SlabModel::from_json(
+            &slabsvm::util::json::Json::parse(&json).unwrap(),
+        )
+        .map_err(|e| format!("reload: {e}"))?;
+        for i in 0..ds.len().min(20) {
+            let p = ds.x.row(i);
+            if (model.score(p) - back.score(p)).abs() > 1e-12 {
+                return Err("score drift after JSON round-trip".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scoring_translation_consistency() {
+    // decision depends on the margin s(x) only through (s-rho1)(rho2-s):
+    // shifting BOTH rhos and scores by the same additive kernel shift
+    // preserves labels. We verify label consistency between the model's
+    // classify() and an explicitly recomputed decision.
+    forall("decision-consistency", 10, |g| {
+        let (ds, kernel, params) = gen_problem(g);
+        let (model, _) = train_full(&ds.x, kernel, &params)
+            .map_err(|e| format!("train failed: {e}"))?;
+        for i in 0..ds.len().min(30) {
+            let x = ds.x.row(i);
+            let s = model.score(x);
+            let manual = if (s - model.rho1) * (model.rho2 - s) >= 0.0 { 1 } else { -1 };
+            if manual != model.classify(x) {
+                return Err(format!("label mismatch at {i}"));
+            }
+        }
+        Ok(())
+    });
+}
