@@ -6,7 +6,9 @@
 //! as either *drops* (sensor degradation — below the band) or *spikes*
 //! (overload — above the band). A single-plane OCSVM must cut away one
 //! side only; the slab bounds normality from BOTH sides, which is the
-//! OCSSVM's reason to exist. This example measures that difference.
+//! OCSSVM's reason to exist. This example measures that difference —
+//! both models trained through the one `Trainer` API, only the
+//! `SolverKind` differs.
 //!
 //! ```bash
 //! cargo run --release --example anomaly_detection
@@ -17,8 +19,7 @@ use slabsvm::data::Dataset;
 use slabsvm::kernel::Kernel;
 use slabsvm::linalg::Matrix;
 use slabsvm::metrics::Confusion;
-use slabsvm::solver::ocsvm_smo::{self, OcsvmParams};
-use slabsvm::solver::smo::{train_full, SmoParams};
+use slabsvm::solver::{SolverKind, Trainer};
 use slabsvm::util::rng::Rng;
 
 const DIM: usize = 8;
@@ -59,25 +60,30 @@ fn main() -> slabsvm::Result<()> {
     let eval = Dataset::new(eval_pos.vstack(&eval_neg), y);
 
     // --- OCSSVM (slab) -----------------------------------------------------
-    let params = SmoParams { nu1: 0.1, nu2: 0.05, eps: 0.5, ..Default::default() };
-    let (slab, out) = train_full(&train_x, Kernel::Linear, &params)?;
-    let slab_cm = slab.evaluate(&eval);
+    let slab = Trainer::new(SolverKind::Smo)
+        .kernel(Kernel::Linear)
+        .nu1(0.1)
+        .nu2(0.05)
+        .eps(0.5)
+        .fit(&train_x)?;
+    let slab_cm = slab.model.evaluate(&eval);
     println!(
         "OCSSVM slab : {} iters, {} SVs, rho=[{:.2}, {:.2}]",
-        out.stats.iterations,
-        slab.n_sv(),
-        slab.rho1,
-        slab.rho2
+        slab.stats.iterations,
+        slab.model.n_sv(),
+        slab.model.rho1,
+        slab.model.rho2
     );
     report("OCSSVM", &slab_cm);
 
     // --- OCSVM baseline (single plane, ref [2]) -----------------------------
-    let (ocsvm, _) = ocsvm_smo::train(
-        &train_x,
-        Kernel::Linear,
-        &OcsvmParams { nu: 0.1, ..Default::default() },
-    )?;
-    let ocsvm_cm = ocsvm.evaluate(&eval);
+    // same Trainer surface: the OCSVM kind returns a slab with no upper
+    // plane (rho2 = NO_UPPER_PLANE), i.e. the classic sgn(s - rho).
+    let ocsvm = Trainer::new(SolverKind::OcsvmSmo)
+        .kernel(Kernel::Linear)
+        .nu1(0.1)
+        .fit(&train_x)?;
+    let ocsvm_cm = ocsvm.model.evaluate(&eval);
     report("OCSVM ", &ocsvm_cm);
 
     // The slab must catch the overload faults the single plane lets

@@ -2,11 +2,12 @@
 //!
 //! Trains the OCSSVM by sharding the data across threads, then retraining
 //! on the union of shard support vectors (ν rescaled so the subset solve
-//! matches the full dual — see solver/cascade.rs). Compares wall-clock
-//! and objective against the direct solve, at an SV-sparse operating
-//! point (ν₁ = 0.1) and at the paper's ν₁ = 0.5 (where half the data are
-//! SVs and the cascade cannot shrink the problem — an honest negative
-//! result).
+//! matches the full dual — see solver/cascade.rs). In the unified API the
+//! cascade is a `Trainer` layer: `.cascade(shards, max_rounds)` on top of
+//! any solver kind. Compares wall-clock and objective against the direct
+//! solve, at an SV-sparse operating point (ν₁ = 0.1) and at the paper's
+//! ν₁ = 0.5 (where half the data are SVs and the cascade cannot shrink
+//! the problem — an honest negative result).
 //!
 //! ```bash
 //! cargo run --release --example cascade_training
@@ -16,8 +17,7 @@ use std::time::Instant;
 
 use slabsvm::data::synthetic::SlabConfig;
 use slabsvm::kernel::Kernel;
-use slabsvm::solver::cascade::{self, CascadeParams};
-use slabsvm::solver::smo::{train_full, SmoParams};
+use slabsvm::solver::{SolverKind, Trainer};
 
 fn main() -> slabsvm::Result<()> {
     let m = 6000;
@@ -25,33 +25,37 @@ fn main() -> slabsvm::Result<()> {
 
     for (label, nu1) in [("sparse SVs (nu1=0.1)", 0.1), ("paper constants (nu1=0.5)", 0.5)] {
         println!("\n=== {label} ===");
-        let smo = SmoParams { nu1, nu2: 0.05, eps: 0.5, ..Default::default() };
+        let base = Trainer::new(SolverKind::Smo)
+            .kernel(Kernel::Linear)
+            .nu1(nu1)
+            .nu2(0.05)
+            .eps(0.5);
 
         let t0 = Instant::now();
-        let (direct_model, direct) = train_full(&ds.x, Kernel::Linear, &smo)?;
+        let direct = base.fit(&ds.x)?;
         let t_direct = t0.elapsed().as_secs_f64();
         println!(
             "direct : {t_direct:.3}s, obj {:.4}, {} SVs",
             direct.stats.objective,
-            direct_model.n_sv()
+            direct.model.n_sv()
         );
 
         for shards in [2usize, 4, 8] {
             let t0 = Instant::now();
-            let p = CascadeParams { smo, shards, max_rounds: 4 };
-            let (model, casc) = cascade::train(&ds.x, Kernel::Linear, &p)?;
+            let casc = base.clone().cascade(shards, 4).fit(&ds.x)?;
             let t_casc = t0.elapsed().as_secs_f64();
-            let rel = (casc.outcome.stats.objective - direct.stats.objective).abs()
+            let trace = casc.cascade.as_ref().expect("cascade trace");
+            let rel = (casc.stats.objective - direct.stats.objective).abs()
                 / direct.stats.objective.abs().max(1e-9);
             println!(
                 "casc x{shards}: {t_casc:.3}s ({:.2}x), obj {:.4} (Δ {:.1e}), \
                  union {} -> {} SVs, {} rounds",
                 t_direct / t_casc,
-                casc.outcome.stats.objective,
+                casc.stats.objective,
                 rel,
-                casc.candidate_sizes[0],
-                model.n_sv(),
-                casc.rounds,
+                trace.candidate_sizes[0],
+                casc.model.n_sv(),
+                trace.rounds,
             );
         }
     }

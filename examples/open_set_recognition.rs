@@ -5,7 +5,8 @@
 //! must be rejected. We train one OCSSVM on class 0 and evaluate on the
 //! full mixture, sweeping the slab-width parameters to show the
 //! precision/recall trade-off nu1/nu2 control. RBF kernel — class
-//! regions are radial blobs, not half-spaces.
+//! regions are radial blobs, not half-spaces. Everything runs through
+//! the unified `Trainer` API.
 //!
 //! ```bash
 //! cargo run --release --example open_set_recognition
@@ -14,8 +15,7 @@
 use slabsvm::data::synthetic::open_set;
 use slabsvm::kernel::Kernel;
 use slabsvm::metrics::roc_auc;
-use slabsvm::solver::ocsvm_smo::{self, OcsvmParams};
-use slabsvm::solver::smo::{train_full, SmoParams};
+use slabsvm::solver::{SolverKind, Trainer};
 
 fn main() -> slabsvm::Result<()> {
     // 6 classes on a circle; class 0 is the known one.
@@ -42,9 +42,13 @@ fn main() -> slabsvm::Result<()> {
         (0.2, 0.1, 0.5),
         (0.3, 0.2, 0.5),
     ] {
-        let params = SmoParams { nu1, nu2, eps, ..Default::default() };
-        let (model, _) = train_full(&scenario.train.x, kernel, &params)?;
-        let c = model.evaluate(&scenario.eval);
+        let report = Trainer::new(SolverKind::Smo)
+            .kernel(kernel)
+            .nu1(nu1)
+            .nu2(nu2)
+            .eps(eps)
+            .fit(&scenario.train.x)?;
+        let c = report.model.evaluate(&scenario.eval);
         println!(
             "{nu1:>6} {nu2:>6} {eps:>6} | {:>7.3} {:>7.3} {:>7.3} {:>7.3}",
             c.mcc(),
@@ -62,28 +66,27 @@ fn main() -> slabsvm::Result<()> {
     );
 
     // Margin-based ranking quality (threshold-free view).
-    let params = SmoParams {
-        nu1: best.1,
-        nu2: best.2,
-        eps: best.3,
-        ..Default::default()
-    };
-    let (model, _) = train_full(&scenario.train.x, kernel, &params)?;
+    let report = Trainer::new(SolverKind::Smo)
+        .kernel(kernel)
+        .nu1(best.1)
+        .nu2(best.2)
+        .eps(best.3)
+        .fit(&scenario.train.x)?;
     let margins: Vec<f64> = (0..scenario.eval.len())
-        .map(|i| model.margin(scenario.eval.x.row(i)))
+        .map(|i| report.model.margin(scenario.eval.x.row(i)))
         .collect();
     println!(
         "ROC-AUC of the slab margin: {:.3}",
         roc_auc(&scenario.eval.y, &margins)
     );
 
-    // Baseline: single-plane OCSVM at a comparable operating point.
-    let (ocsvm, _) = ocsvm_smo::train(
-        &scenario.train.x,
-        kernel,
-        &OcsvmParams { nu: best.1, ..Default::default() },
-    )?;
-    let c = ocsvm.evaluate(&scenario.eval);
+    // Baseline: single-plane OCSVM at a comparable operating point —
+    // same API, different SolverKind.
+    let ocsvm = Trainer::new(SolverKind::OcsvmSmo)
+        .kernel(kernel)
+        .nu1(best.1)
+        .fit(&scenario.train.x)?;
+    let c = ocsvm.model.evaluate(&scenario.eval);
     println!(
         "OCSVM baseline (nu={}): MCC={:.3} F1={:.3}",
         best.1,

@@ -1,4 +1,5 @@
-//! Quickstart: train an OCSSVM with SMO, inspect it, classify points.
+//! Quickstart: train an OCSSVM through the unified `Trainer` API,
+//! inspect the report, classify points.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -6,7 +7,7 @@
 
 use slabsvm::data::synthetic::SlabConfig;
 use slabsvm::kernel::Kernel;
-use slabsvm::solver::smo::{train_full, SmoParams};
+use slabsvm::solver::{SolverKind, Trainer};
 
 fn main() -> slabsvm::Result<()> {
     // 1. A one-class training set: 1000 points along a noisy 2-D band
@@ -16,22 +17,37 @@ fn main() -> slabsvm::Result<()> {
     println!("training points: {} (d = {})", train.len(), train.dim());
 
     // 2. Train with the paper's constants: nu1 = 0.5, nu2 = 0.01, eps = 2/3.
-    let params = SmoParams { nu1: 0.5, nu2: 0.01, eps: 2.0 / 3.0, ..Default::default() };
-    let (model, outcome) = train_full(&train.x, Kernel::Linear, &params)?;
+    //    Every solver kind trains through the same `fit` — swap
+    //    SolverKind::Smo for ::Pg / ::Ipm / ::OcsvmSmo and nothing else
+    //    changes.
+    let report = Trainer::new(SolverKind::Smo)
+        .kernel(Kernel::Linear)
+        .nu1(0.5)
+        .nu2(0.01)
+        .eps(2.0 / 3.0)
+        .fit(&train.x)?;
     println!(
         "trained in {} SMO iterations ({:.3}s): {} support vectors",
-        outcome.stats.iterations, outcome.stats.seconds, model.n_sv()
+        report.stats.iterations,
+        report.stats.seconds,
+        report.model.n_sv()
     );
     println!(
         "slab: rho1 = {:.4}, rho2 = {:.4} (width {:.4})",
-        model.rho1,
-        model.rho2,
-        model.width()
+        report.model.rho1,
+        report.model.rho2,
+        report.model.width()
+    );
+    // every fit carries its own KKT certificate — no separate call needed
+    println!(
+        "certificate: max KKT violation {:.3e}, |sum(alpha) - 1| = {:.1e}",
+        report.certificate.max_kkt_violation,
+        report.certificate.sum_alpha_violation
     );
 
     // 3. Classify: +1 inside the slab (target class), -1 outside.
     let eval = config.generate_eval(500, 500, 7);
-    let confusion = model.evaluate(&eval);
+    let confusion = report.model.evaluate(&eval);
     println!(
         "eval on 500 positives + 500 anomalies: MCC = {:.3}, F1 = {:.3}, \
          accuracy = {:.3}",
@@ -46,15 +62,19 @@ fn main() -> slabsvm::Result<()> {
         "point ({:.2}, {:.2}): label {:+}, margin {:.4}",
         inside[0],
         inside[1],
-        model.classify(inside),
-        model.margin(inside)
+        report.model.classify(inside),
+        report.model.margin(inside)
     );
 
     // 5. Persist + reload.
-    model.save("/tmp/slabsvm_quickstart.json")?;
+    report.model.save("/tmp/slabsvm_quickstart.json")?;
     let reloaded =
         slabsvm::solver::ocssvm::SlabModel::load("/tmp/slabsvm_quickstart.json")?;
-    assert_eq!(reloaded.classify(inside), model.classify(inside));
+    assert_eq!(reloaded.classify(inside), report.model.classify(inside));
     println!("model round-tripped through /tmp/slabsvm_quickstart.json");
+
+    // 6. Solver names round-trip for CLI/config use.
+    let kind: SolverKind = "smo".parse()?;
+    assert_eq!(kind, SolverKind::Smo);
     Ok(())
 }

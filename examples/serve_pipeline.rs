@@ -3,7 +3,9 @@
 //! Demonstrates the full L3 coordinator with the PJRT engine when
 //! artifacts are present (falls back to native otherwise): async train
 //! job → model registry → dynamically batched scoring under a bursty
-//! synthetic workload → service stats.
+//! synthetic workload → service stats. Training jobs carry a full
+//! `Trainer`, so heterogeneous tenants (different solvers, kernels,
+//! layers) run through one queue.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_pipeline
@@ -15,7 +17,7 @@ use slabsvm::coordinator::{BatcherConfig, Coordinator, JobStatus, TrainRequest};
 use slabsvm::data::synthetic::SlabConfig;
 use slabsvm::kernel::Kernel;
 use slabsvm::runtime::Engine;
-use slabsvm::solver::smo::SmoParams;
+use slabsvm::solver::{SolverKind, Trainer};
 
 fn main() -> slabsvm::Result<()> {
     // PJRT engine if artifacts exist, else native.
@@ -36,17 +38,21 @@ fn main() -> slabsvm::Result<()> {
         2,
     );
 
-    // Train two model variants asynchronously (two tenants).
+    // Train two model variants asynchronously (two tenants) — one on the
+    // paper's SMO, one warm-started, through the same job queue.
     let mut jobs = Vec::new();
-    for (name, nu1) in [("tenant-a", 0.5), ("tenant-b", 0.2)] {
+    for (name, nu1, warm) in [("tenant-a", 0.5, 0), ("tenant-b", 0.2, 2)] {
         let ds = SlabConfig::default().generate(1000, 42);
+        let trainer = Trainer::new(SolverKind::Smo)
+            .kernel(Kernel::Linear)
+            .nu1(nu1)
+            .warm_start(warm);
         jobs.push((
             name,
             coordinator.submit_train(TrainRequest {
                 name: name.into(),
                 dataset: ds,
-                kernel: Kernel::Linear,
-                params: SmoParams { nu1, ..Default::default() },
+                trainer,
             }),
         ));
     }

@@ -1,7 +1,7 @@
-//! End-to-end validation driver (EXPERIMENTS.md §E2E).
+//! End-to-end validation driver (DESIGN.md experiment index, §E2E).
 //!
 //! Exercises every layer of the system on the paper's workload at every
-//! Table-1 size: synthetic data → SMO training → independent KKT
+//! Table-1 size: synthetic data → unified-API training → independent KKT
 //! certification → MCC evaluation → model persistence → serving through
 //! the coordinator (PJRT engine when artifacts are present) → engine
 //! equivalence check (native vs PJRT scores). Prints the Table-1 rows
@@ -18,8 +18,8 @@ use slabsvm::coordinator::{BatcherConfig, Coordinator};
 use slabsvm::data::synthetic::SlabConfig;
 use slabsvm::kernel::Kernel;
 use slabsvm::runtime::Engine;
-use slabsvm::solver::smo::{train_full, SmoParams};
 use slabsvm::solver::validate::certify;
+use slabsvm::solver::{SolverKind, Trainer};
 
 const PAPER: &[(usize, f64, f64)] = &[
     (500, 0.35, 0.07),
@@ -34,7 +34,11 @@ fn main() -> slabsvm::Result<()> {
         "end-to-end driver | engines: native{}",
         if pjrt.is_some() { " + pjrt" } else { " (pjrt unavailable)" }
     );
-    let params = SmoParams::default(); // the paper's constants
+    // the paper's constants are the Trainer defaults; pull them back out
+    // so the independent certification checks the exact trained problem
+    let trainer = Trainer::new(SolverKind::Smo).kernel(Kernel::Linear);
+    let smo = trainer.smo_params();
+    let (nu1, nu2, eps) = (smo.nu1, smo.nu2, smo.eps);
 
     println!(
         "\n{:>6} {:>10} {:>8} {:>8} {:>10} {:>12} {:>12}",
@@ -47,21 +51,24 @@ fn main() -> slabsvm::Result<()> {
     for &(m, paper_t, paper_mcc) in PAPER {
         let ds = SlabConfig::default().generate(m, 1000 + m as u64);
 
-        // train (L3 solver over the native Gram)
-        let (model, out) = train_full(&ds.x, Kernel::Linear, &params)?;
+        // train (L3 solver over the native Gram, unified API)
+        let report = trainer.fit(&ds.x)?;
+        let model = &report.model;
 
-        // certify against an independently computed Gram matrix
+        // certify against an independently computed Gram matrix (the
+        // report's built-in certificate reuses the solver's margins;
+        // this one recomputes everything from scratch)
         let k = Kernel::Linear.gram(&ds.x, 4);
         certify(
             &k,
-            &out.alpha,
-            &out.alpha_bar,
-            out.rho1,
-            out.rho2,
-            params.nu1,
-            params.nu2,
-            params.eps,
-            1e-2 * (1.0 + out.rho2.abs()),
+            &report.dual.alpha,
+            &report.dual.alpha_bar,
+            report.dual.rho1,
+            report.dual.rho2,
+            nu1,
+            nu2,
+            eps,
+            1e-2 * (1.0 + report.dual.rho2.abs()),
         )
         .expect("solution must certify");
 
@@ -114,10 +121,10 @@ fn main() -> slabsvm::Result<()> {
 
         println!(
             "{m:>6} {:>10.3} {:>8.3} {:>8} {:>10} {paper_t:>12.2} {paper_mcc:>12.2}",
-            out.stats.seconds,
+            report.stats.seconds,
             cm.mcc(),
             model.n_sv(),
-            out.stats.iterations,
+            report.stats.iterations,
         );
     }
 

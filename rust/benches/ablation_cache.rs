@@ -3,29 +3,31 @@
 //! The paper's related work motivates kernel-value caching (LFU, Li/
 //! Wen/He 2019) as a lever on SVM training time. This bench sweeps the
 //! row-cache policy (LRU vs LFU) and capacity against the full-Gram
-//! precompute, reporting train time and cache hit rate. Expected shape:
-//! precompute wins at paper scale (memory is cheap at m ≤ 5000), caches
-//! approach it as capacity grows, LFU ≥ LRU at small capacities because
-//! SMO's working set is heavy-tailed (hot violators are re-selected).
+//! precompute — in the unified API the cache is just the
+//! `Trainer::cache_rows(capacity, policy)` layer. Reports train time and
+//! cache hit rate. Expected shape: precompute wins at paper scale
+//! (memory is cheap at m ≤ 5000), caches approach it as capacity grows,
+//! LFU ≥ LRU at small capacities because SMO's working set is
+//! heavy-tailed (hot violators are re-selected).
 //!
 //! Run: `cargo bench --bench ablation_cache`
 
 use slabsvm::bench::Bench;
-use slabsvm::cache::{CachedRows, Policy};
+use slabsvm::cache::Policy;
 use slabsvm::data::synthetic::SlabConfig;
 use slabsvm::kernel::Kernel;
-use slabsvm::solver::smo::{train_cached, train_full, SmoParams};
+use slabsvm::solver::{SolverKind, Trainer};
 
 fn main() {
     let mut bench = Bench::from_env();
-    let params = SmoParams::default();
+    let base = Trainer::new(SolverKind::Smo).kernel(Kernel::Linear);
 
     for &m in &[1000usize, 2000] {
         let ds = SlabConfig::default().generate(m, 5000 + m as u64);
 
         bench.run(&format!("precomputed/m={m}"), || {
-            let (_, out) = train_full(&ds.x, Kernel::Linear, &params).expect("train");
-            vec![("iterations".into(), out.stats.iterations as f64)]
+            let report = base.fit(&ds.x).expect("train");
+            vec![("iterations".into(), report.stats.iterations as f64)]
         });
 
         for policy in [Policy::Lru, Policy::Lfu] {
@@ -36,15 +38,13 @@ fn main() {
                     if policy == Policy::Lru { "lru-" } else { "lfu-" },
                     frac * 100.0
                 );
+                let trainer = base.clone().cache_rows(cap, policy);
                 bench.run(&name, || {
-                    let cache =
-                        CachedRows::with_policy(&ds.x, Kernel::Linear, cap, policy);
-                    let (_, out) = train_cached(&ds.x, Kernel::Linear, &params, cache)
-                        .expect("train");
+                    let report = trainer.fit(&ds.x).expect("train");
                     vec![
-                        ("hit_rate".into(), out.stats.cache.hit_rate()),
-                        ("evictions".into(), out.stats.cache.evictions as f64),
-                        ("iterations".into(), out.stats.iterations as f64),
+                        ("hit_rate".into(), report.stats.cache.hit_rate()),
+                        ("evictions".into(), report.stats.cache.evictions as f64),
+                        ("iterations".into(), report.stats.iterations as f64),
                     ]
                 });
             }

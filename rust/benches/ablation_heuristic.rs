@@ -2,7 +2,7 @@
 //!
 //! The paper's §3.2 heuristic (first choice max |f̄| over violators,
 //! second choice max |f̄_b − f̄_a|) vs the classic max-violation rule vs
-//! uniformly random violator selection. All three must reach the same
+//! uniformly random violator selection. All four must reach the same
 //! objective (asserted); the metric is iterations-to-converge and
 //! wall-clock. This quantifies how much the paper's heuristic actually
 //! buys — its §3.2 is the paper's only algorithmic novelty beyond the
@@ -13,45 +13,37 @@
 use slabsvm::bench::Bench;
 use slabsvm::data::synthetic::SlabConfig;
 use slabsvm::kernel::Kernel;
-use slabsvm::solver::smo::{train_full, SmoParams};
-use slabsvm::solver::Heuristic;
+use slabsvm::solver::{Heuristic, SolverKind, Trainer};
 
 fn main() {
     let mut bench = Bench::from_env();
-    let heuristics = [
-        Heuristic::PaperMaxFbar,
-        Heuristic::MaxViolation,
-        Heuristic::RandomViolator,
-        Heuristic::SecondOrder,
-    ];
 
     for &m in &[500usize, 2000] {
         let ds = SlabConfig::default().generate(m, 4000 + m as u64);
         let mut objectives = Vec::new();
-        for h in heuristics {
-            let params = SmoParams { heuristic: h, ..Default::default() };
-            bench.run(&format!("{}/m={m}", h.name()), || {
-                let (_, out) =
-                    train_full(&ds.x, Kernel::Linear, &params).expect("train");
-                objectives.push(out.stats.objective);
+        for h in Heuristic::ALL {
+            let trainer = Trainer::new(SolverKind::Smo)
+                .kernel(Kernel::Linear)
+                .heuristic(h);
+            bench.run(&format!("{h}/m={m}"), || {
+                let report = trainer.fit(&ds.x).expect("train");
+                objectives.push(report.stats.objective);
                 vec![
-                    ("iterations".into(), out.stats.iterations as f64),
-                    ("objective".into(), out.stats.objective),
+                    ("iterations".into(), report.stats.iterations as f64),
+                    ("objective".into(), report.stats.objective),
                 ]
             });
         }
         // shrinking ablation on the paper heuristic
-        let params = SmoParams {
-            shrinking: false,
-            ..Default::default()
-        };
+        let trainer = Trainer::new(SolverKind::Smo)
+            .kernel(Kernel::Linear)
+            .shrinking(false);
         bench.run(&format!("paper-no-shrink/m={m}"), || {
-            let (_, out) =
-                train_full(&ds.x, Kernel::Linear, &params).expect("train");
-            objectives.push(out.stats.objective);
+            let report = trainer.fit(&ds.x).expect("train");
+            objectives.push(report.stats.objective);
             vec![
-                ("iterations".into(), out.stats.iterations as f64),
-                ("objective".into(), out.stats.objective),
+                ("iterations".into(), report.stats.iterations as f64),
+                ("objective".into(), report.stats.objective),
             ]
         });
         // all heuristics must land on the same optimum

@@ -16,7 +16,7 @@ use slabsvm::bench::Bench;
 use slabsvm::data::synthetic::SlabConfig;
 use slabsvm::kernel::Kernel;
 use slabsvm::runtime::Engine;
-use slabsvm::solver::smo::{train_full, SmoParams};
+use slabsvm::solver::{SolverKind, Trainer};
 
 fn main() {
     let Ok(pjrt) = Engine::pjrt("artifacts") else {
@@ -54,8 +54,11 @@ fn main() {
 
     // ---- (b) batch scoring ---------------------------------------------
     let train = SlabConfig::default().generate(1000, 42);
-    let (model, _) =
-        train_full(&train.x, Kernel::Linear, &SmoParams::default()).unwrap();
+    let model = Trainer::new(SolverKind::Smo)
+        .kernel(Kernel::Linear)
+        .fit(&train.x)
+        .unwrap()
+        .model;
     let model = Arc::new(model);
     for &q in &[64usize, 256, 1024] {
         let queries = SlabConfig::default().generate_eval(q / 2, q / 2, 9);

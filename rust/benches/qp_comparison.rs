@@ -5,19 +5,24 @@
 //! comparison on the identical dual problem: the paper's SMO vs a
 //! projected-gradient (FISTA) first-order solver vs a primal-dual
 //! interior-point method (each iteration of which factorizes a dense
-//! 2m×2m matrix — the O(m³) cost generic QP brings).
+//! 2m×2m matrix — the O(m³) cost generic QP brings). All three run
+//! through the one `Trainer` API — the bench body is a loop over
+//! `SolverKind`, which is exactly the apples-to-apples dispatch the
+//! unified interface exists for.
 //!
 //! Expected shape: IPM slowest and growing ~cubically (capped at
 //! m ≤ 1000 to keep runtime sane), PG in between (O(m²) per iteration,
 //! many iterations), SMO fastest with gentle growth. Each solver's
-//! solution is certified against the SMO objective before timing.
+//! objective is checked against SMO's before timing.
 //!
 //! Run: `cargo bench --bench qp_comparison`
 
 use slabsvm::bench::Bench;
 use slabsvm::data::synthetic::SlabConfig;
 use slabsvm::kernel::Kernel;
-use slabsvm::solver::{qp_ipm, qp_pg, smo};
+use slabsvm::solver::{SolverKind, Trainer};
+
+const KINDS: [SolverKind; 3] = [SolverKind::Smo, SolverKind::Pg, SolverKind::Ipm];
 
 fn main() {
     let mut bench = Bench::from_env();
@@ -26,56 +31,45 @@ fn main() {
     // correctness gate: all three reach the same objective at m=250
     {
         let ds = SlabConfig::default().generate(250, 31);
-        let k = Kernel::Linear.gram(&ds.x, 8);
-        let (_, smo_out) =
-            smo::train_full(&ds.x, Kernel::Linear, &smo::SmoParams::default())
-                .expect("smo");
-        let (_, _, _, _, pg) = qp_pg::solve(&k, &qp_pg::PgParams::default()).expect("pg");
-        let (_, _, _, _, ipm) =
-            qp_ipm::solve(&k, &qp_ipm::IpmParams::default()).expect("ipm");
-        let obj = smo_out.stats.objective;
-        assert!(
-            (pg.objective - obj).abs() < 1e-2 * obj.abs().max(1e-9),
-            "PG objective {} vs SMO {}",
-            pg.objective,
-            obj
+        let objectives: Vec<f64> = KINDS
+            .iter()
+            .map(|&kind| {
+                Trainer::new(kind)
+                    .kernel(Kernel::Linear)
+                    .fit(&ds.x)
+                    .unwrap_or_else(|e| panic!("{kind} failed: {e}"))
+                    .stats
+                    .objective
+            })
+            .collect();
+        let smo_obj = objectives[0];
+        for (kind, obj) in KINDS.iter().zip(&objectives) {
+            assert!(
+                (obj - smo_obj).abs() < 1e-2 * smo_obj.abs().max(1e-9),
+                "{kind} objective {obj} vs SMO {smo_obj}"
+            );
+        }
+        println!(
+            "objective agreement at m=250: smo={smo_obj:.4} pg={:.4} ipm={:.4}",
+            objectives[1], objectives[2]
         );
-        assert!(
-            (ipm.objective - obj).abs() < 1e-2 * obj.abs().max(1e-9),
-            "IPM objective {} vs SMO {}",
-            ipm.objective,
-            obj
-        );
-        println!("objective agreement at m=250: smo={obj:.4} pg={:.4} ipm={:.4}",
-                 pg.objective, ipm.objective);
     }
 
     for &m in &sizes {
         let ds = SlabConfig::default().generate(m, 3000 + m as u64);
-
-        bench.run(&format!("smo/m={m}"), || {
-            let (_, out) =
-                smo::train_full(&ds.x, Kernel::Linear, &smo::SmoParams::default())
-                    .expect("smo");
-            vec![("iterations".into(), out.stats.iterations as f64)]
-        });
-
-        bench.run(&format!("proj-grad/m={m}"), || {
-            let (_, st) =
-                qp_pg::train(&ds.x, Kernel::Linear, &qp_pg::PgParams::default())
-                    .expect("pg");
-            vec![("iterations".into(), st.iterations as f64)]
-        });
-
-        if m <= 1000 {
-            bench.run(&format!("ipm/m={m}"), || {
-                let (_, st) = qp_ipm::train(
-                    &ds.x,
-                    Kernel::Linear,
-                    &qp_ipm::IpmParams::default(),
-                )
-                .expect("ipm");
-                vec![("iterations".into(), st.iterations as f64)]
+        for kind in KINDS {
+            if kind == SolverKind::Ipm && m > 1000 {
+                continue;
+            }
+            let trainer = Trainer::new(kind).kernel(Kernel::Linear);
+            bench.run(&format!("{kind}/m={m}"), || {
+                let report = trainer
+                    .fit(&ds.x)
+                    .unwrap_or_else(|e| panic!("{kind} failed: {e}"));
+                vec![
+                    ("iterations".into(), report.stats.iterations as f64),
+                    ("objective".into(), report.stats.objective),
+                ]
             });
         }
     }

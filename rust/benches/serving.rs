@@ -13,12 +13,13 @@ use slabsvm::coordinator::{BatcherConfig, Coordinator};
 use slabsvm::data::synthetic::SlabConfig;
 use slabsvm::kernel::Kernel;
 use slabsvm::runtime::Engine;
-use slabsvm::solver::smo::SmoParams;
+use slabsvm::solver::{SolverKind, Trainer};
 
 fn main() {
     let mut bench = Bench::from_env();
     let n_requests = 4000usize;
     let eval = SlabConfig::default().generate_eval(n_requests, n_requests, 17);
+    let trainer = Trainer::new(SolverKind::Smo).kernel(Kernel::Linear);
 
     let mut engines = vec![("native", Engine::Native)];
     match Engine::pjrt("artifacts") {
@@ -39,31 +40,30 @@ fn main() {
         ] {
             let engine = engine.clone();
             bench.run(&format!("serve-{ename}-{label}/n={n_requests}"), || {
-            let c = Coordinator::start(engine.clone(), cfg, 2);
-            let ds = SlabConfig::default().generate(1000, 42);
-            c.train_blocking("m", &ds, Kernel::Linear, &SmoParams::default())
-                .expect("train");
-            let t0 = std::time::Instant::now();
-            let rxs: Vec<_> = (0..n_requests)
-                .map(|i| c.score_async("m", vec![eval.x.row(i).to_vec()]))
-                .collect();
-            let mut ok = 0usize;
-            for rx in rxs {
-                if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
-                    ok += 1;
+                let c = Coordinator::start(engine.clone(), cfg, 2);
+                let ds = SlabConfig::default().generate(1000, 42);
+                c.train_blocking("m", &ds, &trainer).expect("train");
+                let t0 = std::time::Instant::now();
+                let rxs: Vec<_> = (0..n_requests)
+                    .map(|i| c.score_async("m", vec![eval.x.row(i).to_vec()]))
+                    .collect();
+                let mut ok = 0usize;
+                for rx in rxs {
+                    if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+                        ok += 1;
+                    }
                 }
-            }
-            let dt = t0.elapsed().as_secs_f64();
-            let stats = c.stats();
-            let out = vec![
-                ("req_per_s".into(), ok as f64 / dt),
-                ("mean_batch".into(), stats.mean_batch_size()),
-                ("p50_us".into(), stats.request_latency.quantile_us(0.5) as f64),
-                ("p99_us".into(), stats.request_latency.quantile_us(0.99) as f64),
-                ("errors".into(), stats.errors.get() as f64),
-            ];
-            c.shutdown();
-            out
+                let dt = t0.elapsed().as_secs_f64();
+                let stats = c.stats();
+                let out = vec![
+                    ("req_per_s".into(), ok as f64 / dt),
+                    ("mean_batch".into(), stats.mean_batch_size()),
+                    ("p50_us".into(), stats.request_latency.quantile_us(0.5) as f64),
+                    ("p99_us".into(), stats.request_latency.quantile_us(0.99) as f64),
+                    ("errors".into(), stats.errors.get() as f64),
+                ];
+                c.shutdown();
+                out
             });
         }
     }

@@ -13,7 +13,7 @@
 use slabsvm::bench::Bench;
 use slabsvm::data::synthetic::SlabConfig;
 use slabsvm::kernel::Kernel;
-use slabsvm::solver::smo::{train_full, SmoParams};
+use slabsvm::solver::{SolverKind, Trainer};
 
 const PAPER: &[(usize, f64, f64)] = &[
     (500, 0.35, 0.07),
@@ -24,19 +24,19 @@ const PAPER: &[(usize, f64, f64)] = &[
 
 fn main() {
     let mut bench = Bench::from_env();
-    let params = SmoParams::default();
+    // the paper's constants are the Trainer defaults
+    let trainer = Trainer::new(SolverKind::Smo).kernel(Kernel::Linear);
 
     for &(m, paper_t, paper_mcc) in PAPER {
         let ds = SlabConfig::default().generate(m, 1000 + m as u64);
         let eval = SlabConfig::default().generate_eval(m / 2, m / 2, 77 + m as u64);
         bench.run(&format!("table1/m={m}"), || {
-            let (model, out) =
-                train_full(&ds.x, Kernel::Linear, &params).expect("train");
-            let mcc = model.evaluate(&eval).mcc();
+            let report = trainer.fit(&ds.x).expect("train");
+            let mcc = report.model.evaluate(&eval).mcc();
             vec![
                 ("mcc".into(), mcc),
-                ("iterations".into(), out.stats.iterations as f64),
-                ("n_sv".into(), model.n_sv() as f64),
+                ("iterations".into(), report.stats.iterations as f64),
+                ("n_sv".into(), report.model.n_sv() as f64),
                 ("paper_time_s".into(), paper_t),
                 ("paper_mcc".into(), paper_mcc),
             ]

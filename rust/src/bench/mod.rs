@@ -2,7 +2,7 @@
 //!
 //! [`harness::Bench`] runs a closure with warmup + repeated timed
 //! samples and reports median / mean / MAD / min; benches print both a
-//! human table and machine-readable JSON lines so EXPERIMENTS.md numbers
+//! human table and machine-readable JSON lines so reported numbers
 //! are reproducible by re-running the bench binaries.
 
 pub mod harness;

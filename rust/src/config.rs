@@ -11,6 +11,7 @@ use std::path::Path;
 
 use crate::error::{Error, Result};
 use crate::kernel::Kernel;
+use crate::solver::api::{SolverKind, Trainer};
 use crate::solver::smo::SmoParams;
 use crate::solver::Heuristic;
 
@@ -96,6 +97,8 @@ impl ConfigMap {
 /// Fully resolved run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
+    /// which solver trains the model (key: `solver = smo|pg|ipm|ocsvm-smo`)
+    pub solver: SolverKind,
     pub smo: SmoParams,
     pub kernel: Kernel,
     /// artifacts directory for the PJRT engine
@@ -109,6 +112,7 @@ pub struct RunConfig {
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
+            solver: SolverKind::Smo,
             smo: SmoParams::default(),
             kernel: Kernel::Linear,
             artifacts_dir: "artifacts".into(),
@@ -123,6 +127,9 @@ impl RunConfig {
     /// Build from a config map (each key optional, defaults otherwise).
     pub fn from_map(m: &ConfigMap) -> Result<RunConfig> {
         let mut c = RunConfig::default();
+        if let Some(kind) = m.get("solver") {
+            c.solver = kind.parse()?;
+        }
         c.smo.nu1 = m.get_f64("smo.nu1", c.smo.nu1)?;
         c.smo.nu2 = m.get_f64("smo.nu2", c.smo.nu2)?;
         c.smo.eps = m.get_f64("smo.eps", c.smo.eps)?;
@@ -150,17 +157,31 @@ impl RunConfig {
         c.threads = m.get_usize("threads", c.threads)?;
         Ok(c)
     }
+
+    /// Lower into a [`Trainer`] for the unified solver API. Shared
+    /// hyper-parameters (ν₁, ν₂, ε, kernel, heuristic, seed) carry over
+    /// to any solver kind; the SMO-flavored `tol`/`max_iter` from the
+    /// `[smo]` section are applied only when the SMO solver is selected,
+    /// so other kinds keep their own per-solver defaults.
+    pub fn trainer(&self) -> Trainer {
+        let mut t = Trainer::new(self.solver)
+            .kernel(self.kernel)
+            .nu1(self.smo.nu1)
+            .nu2(self.smo.nu2)
+            .eps(self.smo.eps)
+            .heuristic(self.smo.heuristic)
+            .seed(self.seed);
+        if self.solver == SolverKind::Smo {
+            t = t.tol(self.smo.tol).max_iter(self.smo.max_iter);
+        }
+        t
+    }
 }
 
-/// Parse a heuristic name (CLI + config).
+/// Parse a heuristic name (CLI + config). Thin wrapper over
+/// [`Heuristic`]'s `FromStr`, kept for call-site ergonomics.
 pub fn parse_heuristic(s: &str) -> Result<Heuristic> {
-    match s {
-        "paper-max-fbar" | "paper" => Ok(Heuristic::PaperMaxFbar),
-        "max-violation" => Ok(Heuristic::MaxViolation),
-        "random-violator" | "random" => Ok(Heuristic::RandomViolator),
-        "second-order" | "wss2" => Ok(Heuristic::SecondOrder),
-        other => Err(Error::config(format!("unknown heuristic {other}"))),
-    }
+    s.parse()
 }
 
 /// Parse a kernel spec (CLI + config).
@@ -230,5 +251,28 @@ mod tests {
         assert!(parse_heuristic("nope").is_err());
         assert_eq!(parse_kernel("linear", 0.0, 0.0, 0.0).unwrap(), Kernel::Linear);
         assert!(parse_kernel("quantum", 0.0, 0.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn solver_key_roundtrips_into_trainer() {
+        let m = ConfigMap::parse("solver = ipm\n[smo]\nnu1 = 0.25\n").unwrap();
+        let c = RunConfig::from_map(&m).unwrap();
+        assert_eq!(c.solver, SolverKind::Ipm);
+        let t = c.trainer();
+        assert_eq!(t.kind(), SolverKind::Ipm);
+        // non-SMO kinds must keep their own iteration defaults
+        assert_eq!(
+            t.ipm_params().max_iter,
+            crate::solver::qp_ipm::IpmParams::default().max_iter
+        );
+        assert_eq!(t.ipm_params().nu1, 0.25);
+
+        let m = ConfigMap::parse("solver = warp-drive\n").unwrap();
+        assert!(RunConfig::from_map(&m).is_err());
+
+        // default stays the paper's solver
+        let c = RunConfig::from_map(&ConfigMap::default()).unwrap();
+        assert_eq!(c.solver, SolverKind::Smo);
+        assert_eq!(c.trainer().smo_params().tol, SmoParams::default().tol);
     }
 }

@@ -12,8 +12,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use super::registry::ModelRegistry;
 use super::stats::ServiceStats;
 use crate::data::Dataset;
-use crate::kernel::Kernel;
-use crate::solver::smo::{train_full, SmoParams};
+use crate::solver::api::Trainer;
 
 /// Opaque job handle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -39,13 +38,13 @@ pub enum JobStatus {
     },
 }
 
-/// A training job.
+/// A training job: any [`Trainer`] configuration (solver kind, kernel,
+/// layers) runs through the unified `fit` path.
 pub struct TrainRequest {
     /// registry name for the resulting model
     pub name: String,
     pub dataset: Dataset,
-    pub kernel: Kernel,
-    pub params: SmoParams,
+    pub trainer: Trainer,
 }
 
 enum Msg {
@@ -76,17 +75,16 @@ impl TrainQueue {
                         Msg::Shutdown => break,
                     };
                     set_status(&state2, id, JobStatus::Running);
-                    let result =
-                        train_full(&req.dataset.x, req.kernel, &req.params);
+                    let result = req.trainer.fit(&req.dataset.x);
                     let status = match result {
-                        Ok((model, out)) => {
-                            let n_sv = model.n_sv();
-                            let version = registry.insert(&req.name, model);
+                        Ok(report) => {
+                            let n_sv = report.model.n_sv();
+                            let version = registry.insert(&req.name, report.model);
                             stats.jobs_done.inc();
                             JobStatus::Done {
                                 version,
-                                iterations: out.stats.iterations,
-                                seconds: out.stats.seconds,
+                                iterations: report.stats.iterations,
+                                seconds: report.stats.seconds,
                                 n_sv,
                             }
                         }
@@ -167,6 +165,7 @@ fn set_status(
 mod tests {
     use super::*;
     use crate::data::synthetic::SlabConfig;
+    use crate::kernel::Kernel;
 
     fn queue() -> (TrainQueue, Arc<ModelRegistry>) {
         let registry = Arc::new(ModelRegistry::new());
@@ -181,8 +180,7 @@ mod tests {
         let id = q.submit(TrainRequest {
             name: "j1".into(),
             dataset: ds,
-            kernel: Kernel::Linear,
-            params: SmoParams::default(),
+            trainer: Trainer::default().kernel(Kernel::Linear),
         });
         let s = q.wait(id).unwrap();
         match s {
@@ -214,8 +212,7 @@ mod tests {
             last = Some(q.submit(TrainRequest {
                 name: "same".into(),
                 dataset: ds,
-                kernel: Kernel::Linear,
-                params: SmoParams::default(),
+                trainer: Trainer::default().kernel(Kernel::Linear),
             }));
         }
         let s = q.wait(last.unwrap()).unwrap();

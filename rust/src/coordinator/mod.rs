@@ -27,10 +27,9 @@ use std::sync::Arc;
 
 use crate::data::Dataset;
 use crate::error::Error;
-use crate::kernel::Kernel;
 use crate::runtime::Engine;
+use crate::solver::api::Trainer;
 use crate::solver::ocssvm::SlabModel;
-use crate::solver::smo::SmoParams;
 use crate::Result;
 
 pub use batcher::{BatcherConfig, DynamicBatcher, ScoreResponse};
@@ -72,16 +71,18 @@ impl Coordinator {
         self.registry.get(name)
     }
 
-    /// Train synchronously and register.
+    /// Train synchronously through the unified solver API and register.
+    /// Any [`Trainer`] configuration works — solver kind, kernel and
+    /// layers (warm start / cascade / cache) included, so heterogeneous
+    /// solvers serve behind this one interface.
     pub fn train_blocking(
         &self,
         name: &str,
         ds: &Dataset,
-        kernel: Kernel,
-        params: &SmoParams,
+        trainer: &Trainer,
     ) -> Result<Arc<SlabModel>> {
-        let model = crate::solver::smo::train(&ds.x, kernel, params)?;
-        self.registry.insert(name, model);
+        let report = trainer.fit(&ds.x)?;
+        self.registry.insert(name, report.model);
         self.registry
             .get(name)
             .ok_or_else(|| Error::Coordinator("registration raced".into()))
@@ -133,6 +134,7 @@ impl Coordinator {
 mod tests {
     use super::*;
     use crate::data::synthetic::SlabConfig;
+    use crate::kernel::Kernel;
 
     fn quick_coordinator() -> Coordinator {
         Coordinator::start(
@@ -146,7 +148,7 @@ mod tests {
     fn train_register_score_roundtrip() {
         let c = quick_coordinator();
         let ds = SlabConfig::default().generate(150, 81);
-        c.train_blocking("m1", &ds, Kernel::Linear, &SmoParams::default())
+        c.train_blocking("m1", &ds, &Trainer::default().kernel(Kernel::Linear))
             .unwrap();
         let q = SlabConfig::default().generate_eval(10, 10, 82);
         let queries: Vec<Vec<f64>> =
@@ -176,8 +178,7 @@ mod tests {
         let id = c.submit_train(TrainRequest {
             name: "async1".into(),
             dataset: ds,
-            kernel: Kernel::Linear,
-            params: SmoParams::default(),
+            trainer: Trainer::default().kernel(Kernel::Linear),
         });
         let status = c.wait_job(id).unwrap();
         assert!(matches!(status, JobStatus::Done { .. }), "{status:?}");
@@ -192,8 +193,7 @@ mod tests {
         let id = c.submit_train(TrainRequest {
             name: "bad".into(),
             dataset: ds,
-            kernel: Kernel::Linear,
-            params: SmoParams { nu1: -1.0, ..Default::default() },
+            trainer: Trainer::default().kernel(Kernel::Linear).nu1(-1.0),
         });
         let status = c.wait_job(id).unwrap();
         assert!(matches!(status, JobStatus::Failed { .. }), "{status:?}");
@@ -205,7 +205,7 @@ mod tests {
     fn many_concurrent_scoring_requests() {
         let c = quick_coordinator();
         let ds = SlabConfig::default().generate(120, 85);
-        c.train_blocking("m", &ds, Kernel::Linear, &SmoParams::default())
+        c.train_blocking("m", &ds, &Trainer::default().kernel(Kernel::Linear))
             .unwrap();
         let eval = SlabConfig::default().generate_eval(100, 100, 86);
         let receivers: Vec<_> = (0..eval.len())

@@ -10,7 +10,8 @@
 use crate::data::Dataset;
 use crate::kernel::Kernel;
 use crate::metrics::Confusion;
-use crate::solver::smo::{train_full, SmoParams};
+use crate::solver::api::Trainer;
+use crate::solver::smo::SmoParams;
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -59,8 +60,10 @@ pub fn cross_validate(
             .flat_map(|(_, v)| v.iter().copied())
             .collect();
         let tr = train.select(&train_idx);
-        let (model, out) = train_full(&tr.x, kernel, params)?;
-        secs += out.stats.seconds;
+        let report =
+            Trainer::from_smo_params(*params).kernel(kernel).fit(&tr.x)?;
+        secs += report.stats.seconds;
+        let model = report.model;
 
         // eval set: held-out positives + all negatives
         let held_pos = train.select(&folds[held]);

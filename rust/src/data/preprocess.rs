@@ -257,12 +257,18 @@ mod tests {
         // interaction between preprocessing and the kernel choice.
         use crate::data::synthetic::SlabConfig;
         use crate::kernel::Kernel;
-        use crate::solver::smo::{train_full, SmoParams};
+        use crate::solver::api::Trainer;
         let ds = SlabConfig::default().generate(200, 9);
         let sc = Standardizer::fit(&ds.x);
         let xs = sc.transform(&ds.x);
-        let p = SmoParams { nu1: 0.3, nu2: 0.05, eps: 0.5, ..Default::default() };
-        let (model, _) = train_full(&xs, Kernel::Rbf { g: 0.5 }, &p).unwrap();
+        let model = Trainer::default()
+            .kernel(Kernel::Rbf { g: 0.5 })
+            .nu1(0.3)
+            .nu2(0.05)
+            .eps(0.5)
+            .fit(&xs)
+            .unwrap()
+            .model;
         assert!(model.n_sv() > 0);
         // a wildly out-of-band point (in standardized space) is rejected
         assert_eq!(model.classify(&[8.0, -8.0]), -1);

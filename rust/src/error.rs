@@ -2,47 +2,72 @@
 //!
 //! One [`Error`] enum spanning data loading, solver, runtime (PJRT) and
 //! coordinator failures, so every public API returns [`Result<T>`] with a
-//! single error type that callers can match on.
+//! single error type that callers can match on. Hand-implemented
+//! `Display`/`Error` (no proc-macro dependency in the vendored crate set).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// All failure modes of the slabsvm stack.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Invalid hyper-parameters or config values (e.g. nu outside (0,1]).
-    #[error("invalid configuration: {0}")]
     Config(String),
 
     /// Dataset parsing / shape problems.
-    #[error("data error: {0}")]
     Data(String),
 
     /// Solver failed to converge within its iteration budget.
-    #[error("solver did not converge: {0}")]
     NoConvergence(String),
 
     /// A solution failed feasibility / KKT certification.
-    #[error("solution certification failed: {0}")]
     Certification(String),
 
     /// Problems locating / parsing AOT artifacts (manifest, HLO files).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// PJRT client / compile / execute failures from the `xla` crate.
-    #[error("pjrt runtime error: {0}")]
     Pjrt(String),
 
     /// Coordinator-level failures (queue shutdown, deadline exceeded...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "invalid configuration: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::NoConvergence(m) => write!(f, "solver did not converge: {m}"),
+            Error::Certification(m) => {
+                write!(f, "solution certification failed: {m}")
+            }
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Pjrt(m) => write!(f, "pjrt runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -59,5 +84,30 @@ impl Error {
     /// Helper for data errors.
     pub fn data(msg: impl Into<String>) -> Self {
         Error::Data(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(
+            Error::config("nu out of range").to_string(),
+            "invalid configuration: nu out of range"
+        );
+        assert_eq!(Error::data("bad csv").to_string(), "data error: bad csv");
+        assert!(Error::NoConvergence("x".into())
+            .to_string()
+            .starts_with("solver did not converge"));
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
     }
 }

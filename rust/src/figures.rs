@@ -168,12 +168,16 @@ mod tests {
     use super::*;
     use crate::data::synthetic::SlabConfig;
     use crate::kernel::Kernel;
-    use crate::solver::smo::{train, SmoParams};
+    use crate::solver::api::Trainer;
 
     fn fig() -> Figure {
         let cfg = SlabConfig { contamination: 0.0, ..Default::default() };
         let ds = cfg.generate(200, 121);
-        let model = train(&ds.x, Kernel::Linear, &SmoParams::default()).unwrap();
+        let model = Trainer::default()
+            .kernel(Kernel::Linear)
+            .fit(&ds.x)
+            .unwrap()
+            .model;
         build_figure(&model, &ds, "test figure")
     }
 

@@ -11,26 +11,51 @@
 //! * **Layer 3 (this crate)** — the paper's contribution: the OCSSVM
 //!   **SMO solver** ([`solver::smo`]), its working-set heuristic, the
 //!   baselines it is compared against ([`solver::qp_pg`],
-//!   [`solver::qp_ipm`], [`solver::ocsvm_smo`]), and a serving
-//!   coordinator ([`coordinator`]) that batches scoring requests onto the
-//!   PJRT-compiled artifacts ([`runtime`]).
+//!   [`solver::qp_ipm`], [`solver::ocsvm_smo`]) — all behind the unified
+//!   [`solver::api`] — and a serving coordinator ([`coordinator`]) that
+//!   batches scoring requests onto the PJRT-compiled artifacts
+//!   ([`runtime`]).
 //!
 //! Python never runs at request time: once `make artifacts` has produced
 //! `artifacts/*.hlo.txt`, the `slabsvm` binary is self-contained.
 //!
 //! ## Quick start
 //!
+//! Every solver trains through one entry point: pick a
+//! [`solver::SolverKind`], configure a [`solver::Trainer`], call `fit`.
+//! The returned [`solver::FitReport`] carries the model, the full dual
+//! point, effort stats and a KKT certificate.
+//!
 //! ```no_run
 //! use slabsvm::data::synthetic::SlabConfig;
 //! use slabsvm::kernel::Kernel;
-//! use slabsvm::solver::smo::{SmoParams, train};
+//! use slabsvm::solver::{SolverKind, Trainer};
 //!
 //! let ds = SlabConfig::default().generate(1000, 42);
-//! let params = SmoParams { nu1: 0.5, nu2: 0.01, eps: 2.0 / 3.0, ..Default::default() };
-//! let model = train(&ds.x, Kernel::Linear, &params).unwrap();
-//! let label = model.classify(&ds.x.row(0)); // +1 inside the slab
+//! // the paper's constants: nu1 = 0.5, nu2 = 0.01, eps = 2/3
+//! let report = Trainer::new(SolverKind::Smo)
+//!     .kernel(Kernel::Linear)
+//!     .nu1(0.5)
+//!     .nu2(0.01)
+//!     .eps(2.0 / 3.0)
+//!     .fit(&ds.x)
+//!     .unwrap();
+//! let label = report.model.classify(ds.x.row(0)); // +1 inside the slab
+//! assert!(report.certificate.max_kkt_violation.is_finite());
 //! # let _ = label;
 //! ```
+//!
+//! Swapping `SolverKind::Smo` for `::Pg`, `::Ipm` or `::OcsvmSmo`
+//! changes nothing else — that is the point: benches, examples and the
+//! coordinator dispatch over [`solver::SolverKind`] instead of
+//! per-module `train` functions. Warm starts, cascade sharding and
+//! bounded kernel-row caches are [`solver::Trainer`] layers
+//! (`.warm_start(n)`, `.cascade(shards, rounds)`,
+//! `.cache_rows(cap, policy)`) that compose on top.
+//!
+//! The old per-module free functions (`solver::smo::train`,
+//! `solver::qp_pg::train`, …) still work but are `#[deprecated]` shims
+//! over this API; see CHANGES.md for the deprecation path.
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every table/figure of the paper to a bench target.

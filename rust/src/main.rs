@@ -22,8 +22,8 @@ use slabsvm::error::Error;
 use slabsvm::kernel::Kernel;
 use slabsvm::metrics::roc_auc;
 use slabsvm::runtime::Engine;
+use slabsvm::solver::api::{SolverKind, Trainer};
 use slabsvm::solver::ocssvm::SlabModel;
-use slabsvm::solver::smo::{train_full, SmoParams};
 use slabsvm::util::cli::{parse_args, render_help, ArgSpec, Parsed};
 use slabsvm::util::logging;
 use slabsvm::Result;
@@ -84,17 +84,18 @@ fn kernel_args() -> Vec<ArgSpec> {
     ]
 }
 
-fn smo_args() -> Vec<ArgSpec> {
+fn solver_args() -> Vec<ArgSpec> {
     vec![
-        ArgSpec::opt("nu1", "0.5", "nu1 (lower-plane outlier bound)"),
+        ArgSpec::opt("solver", "smo", "solver: smo|pg|ipm|ocsvm-smo"),
+        ArgSpec::opt("nu1", "0.5", "nu1 (lower-plane outlier bound; OCSVM nu)"),
         ArgSpec::opt("nu2", "0.01", "nu2 (upper-plane violator bound)"),
         ArgSpec::opt("eps", "0.6666666666666666", "eps (upper-plane mass)"),
-        ArgSpec::opt("tol", "1e-5", "KKT tolerance"),
-        ArgSpec::opt("max-iter", "500000", "iteration budget"),
+        ArgSpec::opt("tol", "", "convergence tolerance (empty = per-solver default)"),
+        ArgSpec::opt("max-iter", "", "iteration budget (empty = per-solver default)"),
         ArgSpec::opt(
             "heuristic",
             "paper-max-fbar",
-            "working-set rule: paper-max-fbar|max-violation|random-violator",
+            "SMO working-set rule: paper-max-fbar|max-violation|random-violator|second-order",
         ),
     ]
 }
@@ -118,16 +119,27 @@ fn parse_kernel_from(p: &Parsed) -> Result<Kernel> {
     )
 }
 
-fn parse_smo_from(p: &Parsed) -> Result<SmoParams> {
-    Ok(SmoParams {
-        nu1: p.get_f64("nu1")?,
-        nu2: p.get_f64("nu2")?,
-        eps: p.get_f64("eps")?,
-        tol: p.get_f64("tol")?,
-        max_iter: p.get_usize("max-iter")?,
-        heuristic: parse_heuristic(p.get_str("heuristic")?)?,
-        ..Default::default()
-    })
+fn parse_trainer_from(p: &Parsed, kernel: Kernel) -> Result<Trainer> {
+    let kind: SolverKind = p.get_str("solver")?.parse()?;
+    let mut t = Trainer::new(kind)
+        .kernel(kernel)
+        .nu1(p.get_f64("nu1")?)
+        .nu2(p.get_f64("nu2")?)
+        .eps(p.get_f64("eps")?)
+        .heuristic(parse_heuristic(p.get_str("heuristic")?)?);
+    let tol = p.get_str("tol")?;
+    if !tol.is_empty() {
+        t = t.tol(tol.parse::<f64>().map_err(|_| {
+            Error::config(format!("--tol: not a number: {tol}"))
+        })?);
+    }
+    let max_iter = p.get_str("max-iter")?;
+    if !max_iter.is_empty() {
+        t = t.max_iter(max_iter.parse::<usize>().map_err(|_| {
+            Error::config(format!("--max-iter: not an integer: {max_iter}"))
+        })?);
+    }
+    Ok(t)
 }
 
 fn load_dataset(p: &Parsed) -> Result<Dataset> {
@@ -159,36 +171,41 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let mut spec = vec![ArgSpec::opt("out", "model.json", "output model path")];
     spec.extend(data_args());
     spec.extend(kernel_args());
-    spec.extend(smo_args());
+    spec.extend(solver_args());
     if args.iter().any(|a| a == "--help") {
-        println!("{}", render_help("train", "train an OCSSVM with SMO", &spec));
+        println!(
+            "{}",
+            render_help("train", "train a one-class model (any solver)", &spec)
+        );
         return Ok(());
     }
     let p = parse_args(&spec, args)?;
     let ds = load_dataset(&p)?.positives_only();
     let kernel = parse_kernel_from(&p)?;
-    let params = parse_smo_from(&p)?;
+    let trainer = parse_trainer_from(&p, kernel)?;
     println!(
-        "training on {} points (d={}) kernel={} nu1={} nu2={} eps={:.4}",
+        "training on {} points (d={}) solver={} kernel={} nu1={} nu2={} eps={}",
         ds.len(),
         ds.dim(),
+        trainer.kind(),
         kernel.family(),
-        params.nu1,
-        params.nu2,
-        params.eps
+        p.get_f64("nu1")?,
+        p.get_f64("nu2")?,
+        p.get_f64("eps")?
     );
-    let (model, out) = train_full(&ds.x, kernel, &params)?;
+    let report = trainer.fit(&ds.x)?;
     println!(
-        "done: {} iterations in {:.3}s, {} SVs, rho1={:.6} rho2={:.6} (width {:.6})",
-        out.stats.iterations,
-        out.stats.seconds,
-        model.n_sv(),
-        model.rho1,
-        model.rho2,
-        model.width()
+        "done: {} iterations in {:.3}s, {} SVs, rho1={:.6} rho2={:.6}, \
+         max KKT violation {:.3e}",
+        report.stats.iterations,
+        report.stats.seconds,
+        report.model.n_sv(),
+        report.model.rho1,
+        report.model.rho2,
+        report.certificate.max_kkt_violation,
     );
     let out_path = p.get_str("out")?;
-    model.save(out_path)?;
+    report.model.save(out_path)?;
     println!("model saved to {out_path}");
     Ok(())
 }
@@ -292,31 +309,30 @@ fn cmd_figures(args: &[String]) -> Result<()> {
     let seed = p.get_usize("seed")? as u64;
     // paper captions: Fig1 m=1000 nu1=.5 nu2=.01 eps=2/3;
     //                 Fig2 m=2000 nu1=.2 nu2=.08 eps=1/2
-    let (m, params) = match fig_no {
-        1 => (
-            1000,
-            SmoParams { nu1: 0.5, nu2: 0.01, eps: 2.0 / 3.0, ..Default::default() },
-        ),
-        2 => (
-            2000,
-            SmoParams { nu1: 0.2, nu2: 0.08, eps: 0.5, ..Default::default() },
-        ),
+    let (m, nu1, nu2, eps) = match fig_no {
+        1 => (1000, 0.5, 0.01, 2.0 / 3.0),
+        2 => (2000, 0.2, 0.08, 0.5),
         other => {
             return Err(Error::config(format!("no figure {other} in the paper")))
         }
     };
     let ds = SlabConfig::default().generate(m, seed);
-    let (model, out) = train_full(&ds.x, Kernel::Linear, &params)?;
+    let report = Trainer::new(SolverKind::Smo)
+        .kernel(Kernel::Linear)
+        .nu1(nu1)
+        .nu2(nu2)
+        .eps(eps)
+        .fit(&ds.x)?;
+    let model = report.model;
     println!(
         "fig {fig_no}: m={m} iterations={} rho1={:.4} rho2={:.4} width={:.4}",
-        out.stats.iterations,
+        report.stats.iterations,
         model.rho1,
         model.rho2,
         model.width()
     );
     let title = format!(
-        "Fig. {fig_no}: OCSSVM slab, m={m}, nu1={}, nu2={}, eps={:.3}",
-        params.nu1, params.nu2, params.eps
+        "Fig. {fig_no}: OCSSVM slab, m={m}, nu1={nu1}, nu2={nu2}, eps={eps:.3}"
     );
     let fig = slabsvm::figures::build_figure(&model, &ds, &title);
     let dir = std::path::PathBuf::from(p.get_str("out-dir")?);
@@ -352,7 +368,8 @@ fn cmd_bench(args: &[String]) -> Result<()> {
 
 /// Table 1: training time + MCC vs m (linear kernel, paper constants).
 fn bench_table1(seeds: usize) -> Result<()> {
-    let params = SmoParams::default(); // nu1=.5 nu2=.01 eps=2/3 as in the paper
+    // nu1=.5 nu2=.01 eps=2/3 as in the paper (the Trainer defaults)
+    let trainer = Trainer::new(SolverKind::Smo).kernel(Kernel::Linear);
     println!("Table 1 — SMO training time and MCC vs m (linear kernel)");
     println!(
         "{:>6} {:>12} {:>10} {:>8} {:>12}",
@@ -365,14 +382,14 @@ fn bench_table1(seeds: usize) -> Result<()> {
         let mut iters = 0;
         for seed in 0..seeds as u64 {
             let ds = SlabConfig::default().generate(m, 1000 + seed);
-            let (model, out) = train_full(&ds.x, Kernel::Linear, &params)?;
+            let report = trainer.fit(&ds.x)?;
             let eval =
                 SlabConfig::default().generate_eval(m / 2, m / 2, 2000 + seed);
-            let c = model.evaluate(&eval);
-            times.push(out.stats.seconds);
+            let c = report.model.evaluate(&eval);
+            times.push(report.stats.seconds);
             mccs.push(c.mcc());
-            svs = model.n_sv();
-            iters = out.stats.iterations;
+            svs = report.model.n_sv();
+            iters = report.stats.iterations;
         }
         println!(
             "{m:>6} {:>12.3} {:>10.3} {svs:>8} {iters:>12}",
@@ -386,42 +403,27 @@ fn bench_table1(seeds: usize) -> Result<()> {
     Ok(())
 }
 
-/// SMO vs generic QP solvers (the paper's scaling claim).
+/// SMO vs generic QP solvers (the paper's scaling claim). One Trainer
+/// per [`SolverKind`] — the dispatch the unified API exists for.
 fn bench_qp(seeds: usize) -> Result<()> {
-    use slabsvm::solver::{qp_ipm, qp_pg};
     println!("SMO vs generic QP solvers — median training seconds");
-    println!("{:>6} {:>12} {:>12} {:>12}", "m", "smo", "proj-grad", "ipm");
+    println!("{:>6} {:>12} {:>12} {:>12}", "m", "smo", "pg", "ipm");
     for &m in &[250usize, 500, 1000, 2000] {
-        let mut t_smo = Vec::new();
-        let mut t_pg = Vec::new();
-        let mut t_ipm = Vec::new();
-        for seed in 0..seeds as u64 {
-            let ds = SlabConfig::default().generate(m, 3000 + seed);
-            let (_, out) =
-                train_full(&ds.x, Kernel::Linear, &SmoParams::default())?;
-            t_smo.push(out.stats.seconds);
-            let (_, st) =
-                qp_pg::train(&ds.x, Kernel::Linear, &qp_pg::PgParams::default())?;
-            t_pg.push(st.seconds);
-            if m <= 1000 {
-                let (_, st) = qp_ipm::train(
-                    &ds.x,
-                    Kernel::Linear,
-                    &qp_ipm::IpmParams::default(),
-                )?;
-                t_ipm.push(st.seconds);
+        let mut medians = Vec::new();
+        for kind in [SolverKind::Smo, SolverKind::Pg, SolverKind::Ipm] {
+            if kind == SolverKind::Ipm && m > 1000 {
+                medians.push("   (skipped)".to_string());
+                continue;
             }
+            let trainer = Trainer::new(kind).kernel(Kernel::Linear);
+            let mut times = Vec::new();
+            for seed in 0..seeds as u64 {
+                let ds = SlabConfig::default().generate(m, 3000 + seed);
+                times.push(trainer.fit(&ds.x)?.stats.seconds);
+            }
+            medians.push(format!("{:>12.3}", slabsvm::linalg::median(&times)));
         }
-        let ipm_s = if t_ipm.is_empty() {
-            "   (skipped)".to_string()
-        } else {
-            format!("{:>12.3}", slabsvm::linalg::median(&t_ipm))
-        };
-        println!(
-            "{m:>6} {:>12.3} {:>12.3} {ipm_s}",
-            slabsvm::linalg::median(&t_smo),
-            slabsvm::linalg::median(&t_pg),
-        );
+        println!("{m:>6} {} {} {}", medians[0], medians[1], medians[2]);
     }
     Ok(())
 }
@@ -431,19 +433,17 @@ fn bench_heuristics(seeds: usize) -> Result<()> {
     use slabsvm::solver::Heuristic;
     println!("Working-set heuristics — median iterations / seconds (m=2000)");
     println!("{:>18} {:>12} {:>12}", "heuristic", "iterations", "time(s)");
-    for h in [
-        Heuristic::PaperMaxFbar,
-        Heuristic::MaxViolation,
-        Heuristic::RandomViolator,
-    ] {
+    for h in Heuristic::ALL {
+        let trainer = Trainer::new(SolverKind::Smo)
+            .kernel(Kernel::Linear)
+            .heuristic(h);
         let mut iters = Vec::new();
         let mut times = Vec::new();
         for seed in 0..seeds as u64 {
             let ds = SlabConfig::default().generate(2000, 4000 + seed);
-            let params = SmoParams { heuristic: h, ..Default::default() };
-            let (_, out) = train_full(&ds.x, Kernel::Linear, &params)?;
-            iters.push(out.stats.iterations as f64);
-            times.push(out.stats.seconds);
+            let report = trainer.fit(&ds.x)?;
+            iters.push(report.stats.iterations as f64);
+            times.push(report.stats.seconds);
         }
         println!(
             "{:>18} {:>12.0} {:>12.3}",
@@ -487,8 +487,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let job = c.submit_train(TrainRequest {
         name: "demo".into(),
         dataset: ds,
-        kernel: Kernel::Linear,
-        params: SmoParams::default(),
+        trainer: Trainer::new(SolverKind::Smo).kernel(Kernel::Linear),
     });
     match c.wait_job(job) {
         Some(slabsvm::coordinator::JobStatus::Done {

@@ -110,7 +110,7 @@ impl Engine {
 mod tests {
     use super::*;
     use crate::data::synthetic::SlabConfig;
-    use crate::solver::smo::{train_full, SmoParams};
+    use crate::solver::api::Trainer;
 
     #[test]
     fn native_gram_works() {
@@ -123,8 +123,7 @@ mod tests {
     #[test]
     fn native_predict_matches_model() {
         let ds = SlabConfig::default().generate(120, 72);
-        let (model, _) =
-            train_full(&ds.x, Kernel::Linear, &SmoParams::default()).unwrap();
+        let model = Trainer::default().kernel(Kernel::Linear).fit(&ds.x).unwrap().model;
         let model = Arc::new(model);
         let q = SlabConfig::default().generate_eval(30, 30, 73);
         let (scores, labels) = Engine::Native.predict(&model, &q.x).unwrap();

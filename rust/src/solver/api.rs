@@ -1,0 +1,1083 @@
+//! Unified estimator API: one [`Solver`] trait over every OCSSVM solver
+//! and a [`Trainer`] builder that layers warm-start, cascade sharding
+//! and kernel caching on top.
+//!
+//! Before this module each solver exposed a differently-shaped free
+//! function (`smo::train → SlabModel`, `qp_pg::train → (SlabModel,
+//! SolveStats)`, `ocsvm_smo::train → (OcsvmModel, SolveStats)`, plus
+//! bespoke `cascade::train` / `warmstart::train`), so every bench,
+//! example and the serving coordinator hand-rolled its own dispatch.
+//! Now:
+//!
+//! * [`SolverKind`] names the four solvers, with `FromStr`/`Display`
+//!   round-tripping for CLI flags and config files;
+//! * [`Solver`] is the object-safe training interface — `fit` builds the
+//!   Gram natively, `fit_gram` accepts a precomputed one, and
+//!   `fit_provider` streams kernel rows through any
+//!   [`KernelProvider`] (bounded caches included);
+//! * [`FitReport`] is the uniform outcome: the trained [`SlabModel`],
+//!   the full dual point ([`DualSolution`]), effort stats and an
+//!   always-computed KKT [`Certificate`];
+//! * [`Trainer`] composes the orthogonal layers — `warm_start(epochs)`,
+//!   `cascade(shards, rounds)`, `cache_rows(capacity, policy)` — over
+//!   any solver kind without bespoke entry points.
+//!
+//! The Schölkopf one-class SVM is served through the same interface by
+//! embedding it as a slab with no upper plane: its dual is exactly the
+//! OCSSVM α-block with ᾱ ≡ 0 (ε = 0), so the returned model carries
+//! `rho2 =` [`NO_UPPER_PLANE`] and classifies identically to the
+//! single-hyperplane decision `sgn(s − ρ)`.
+//!
+//! ```no_run
+//! use slabsvm::data::synthetic::SlabConfig;
+//! use slabsvm::kernel::Kernel;
+//! use slabsvm::solver::{SolverKind, Trainer};
+//!
+//! let ds = SlabConfig::default().generate(1000, 42);
+//! let report = Trainer::new(SolverKind::Smo)
+//!     .kernel(Kernel::Linear)
+//!     .nu1(0.5)
+//!     .nu2(0.01)
+//!     .eps(2.0 / 3.0)
+//!     .fit(&ds.x)
+//!     .unwrap();
+//! assert!(report.model.width() > 0.0);
+//! assert!(report.certificate.max_kkt_violation < 1e-2);
+//! ```
+//!
+//! Numerical contract: for every kind, the trait path reproduces the
+//! legacy free-function path bit-for-bit (same Gram build, same core
+//! solve) — pinned by `rust/tests/api_parity.rs`.
+
+use std::fmt;
+use std::str::FromStr;
+
+use super::ocssvm::SlabModel;
+use super::ocsvm_smo::{self, OcsvmParams};
+use super::qp_ipm::{self, IpmParams};
+use super::qp_pg::{self, PgParams};
+use super::smo::{self, SmoParams};
+use super::validate::{self, Certificate};
+use super::warmstart::{self, WarmStartParams};
+use super::{Heuristic, SolveStats};
+use crate::cache::{CacheStats, CachedRows, KernelProvider, Policy, PrecomputedGram};
+use crate::error::Error;
+use crate::kernel::Kernel;
+use crate::linalg::{matvec, Matrix};
+use crate::Result;
+
+/// `rho2` sentinel for models embedded from the single-plane one-class
+/// SVM: far above any reachable margin, so the slab decision
+/// `(s − ρ1)(ρ2 − s) ≥ 0` degenerates to the OCSVM's `s ≥ ρ`, and the
+/// ranking margin `f̄ = min(s − ρ1, ρ2 − s)` degenerates to `s − ρ1`.
+/// Finite (not `f64::INFINITY`) so JSON model persistence round-trips.
+pub const NO_UPPER_PLANE: f64 = 1e300;
+
+/// Margin tolerance the cascade layer uses to flag out-of-candidate KKT
+/// violators when no explicit tolerance is configured.
+const CASCADE_DEFAULT_TOL: f64 = 1e-5;
+
+// ---------------------------------------------------------------------------
+// SolverKind
+// ---------------------------------------------------------------------------
+
+/// The four trainable solvers, nameable for CLI and config files.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SolverKind {
+    /// The paper's SMO on the faithful (α, ᾱ) slab dual.
+    Smo,
+    /// Projected-gradient (FISTA) baseline on the same dual.
+    Pg,
+    /// Primal-dual interior-point baseline on the same dual.
+    Ipm,
+    /// Schölkopf ν-one-class SVM via SMO (non-slab baseline).
+    OcsvmSmo,
+}
+
+impl SolverKind {
+    /// Every kind, in paper-comparison order.
+    pub const ALL: [SolverKind; 4] = [
+        SolverKind::Smo,
+        SolverKind::Pg,
+        SolverKind::Ipm,
+        SolverKind::OcsvmSmo,
+    ];
+
+    /// Canonical name (what [`fmt::Display`] prints and
+    /// [`FromStr`] accepts).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Smo => "smo",
+            SolverKind::Pg => "pg",
+            SolverKind::Ipm => "ipm",
+            SolverKind::OcsvmSmo => "ocsvm-smo",
+        }
+    }
+
+    /// Construct the solver with its per-kind default hyper-parameters.
+    pub fn default_solver(self) -> Box<dyn Solver + Send + Sync> {
+        match self {
+            SolverKind::Smo => Box::new(SmoSolver::default()),
+            SolverKind::Pg => Box::new(PgSolver::default()),
+            SolverKind::Ipm => Box::new(IpmSolver::default()),
+            SolverKind::OcsvmSmo => Box::new(OcsvmSolver::default()),
+        }
+    }
+}
+
+impl fmt::Display for SolverKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for SolverKind {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<SolverKind> {
+        match s {
+            "smo" => Ok(SolverKind::Smo),
+            "pg" | "proj-grad" | "projected-gradient" => Ok(SolverKind::Pg),
+            "ipm" | "interior-point" => Ok(SolverKind::Ipm),
+            "ocsvm-smo" | "ocsvm" => Ok(SolverKind::OcsvmSmo),
+            other => Err(Error::config(format!(
+                "unknown solver {other:?} (expected smo|pg|ipm|ocsvm-smo)"
+            ))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FitReport
+// ---------------------------------------------------------------------------
+
+/// Full dual point of a trained model, in the faithful (α, ᾱ)
+/// parameterization, over **all** training rows (the model itself keeps
+/// only the support vectors).
+#[derive(Clone, Debug)]
+pub struct DualSolution {
+    /// lower-plane multipliers α (Σα = 1)
+    pub alpha: Vec<f64>,
+    /// upper-plane multipliers ᾱ (Σᾱ = ε; all-zero for the OCSVM kind)
+    pub alpha_bar: Vec<f64>,
+    /// γ = α − ᾱ (what the model stores for its SVs)
+    pub gamma: Vec<f64>,
+    /// margins s = Kγ at exit
+    pub s: Vec<f64>,
+    /// lower slab offset
+    pub rho1: f64,
+    /// upper slab offset ([`NO_UPPER_PLANE`] for the OCSVM kind)
+    pub rho2: f64,
+}
+
+/// Cascade-layer accounting (present only when the cascade layer ran).
+#[derive(Clone, Debug)]
+pub struct CascadeTrace {
+    /// candidate-set size per union round (starts at the shard-SV union)
+    pub candidate_sizes: Vec<usize>,
+    /// union-retrain rounds executed (0 = direct-solve fallback)
+    pub rounds: usize,
+}
+
+/// Uniform training outcome for every [`Solver`].
+#[derive(Clone, Debug)]
+pub struct FitReport {
+    /// the trained model (support vectors only)
+    pub model: SlabModel,
+    /// the full dual point the model was assembled from
+    pub dual: DualSolution,
+    /// convergence + effort accounting
+    pub stats: SolveStats,
+    /// feasibility / KKT report, always computed (an O(m) pass over the
+    /// solver-maintained margins — never a pass/fail gate; judge it with
+    /// your own tolerance, or use [`validate::certify`] independently)
+    pub certificate: Certificate,
+    /// cascade accounting when the [`Trainer`] cascade layer ran
+    pub cascade: Option<CascadeTrace>,
+}
+
+// ---------------------------------------------------------------------------
+// Solver trait
+// ---------------------------------------------------------------------------
+
+/// One training interface over every solver.
+///
+/// Object-safe through [`Solver::fit`] / [`Solver::fit_gram`], so a
+/// registry can hold heterogeneous `Box<dyn Solver>`s behind one
+/// interface; [`Solver::fit_provider`] is generic (cache-backed
+/// training) and therefore `where Self: Sized`.
+pub trait Solver {
+    /// Which [`SolverKind`] this solver implements.
+    fn kind(&self) -> SolverKind;
+
+    /// Train on a precomputed Gram matrix `k` of `x`.
+    fn fit_gram(&self, x: &Matrix, kernel: Kernel, k: &Matrix) -> Result<FitReport>;
+
+    /// Train end-to-end: build the Gram with the native engine, then
+    /// [`Solver::fit_gram`].
+    fn fit(&self, x: &Matrix, kernel: Kernel) -> Result<FitReport> {
+        let threads = crate::util::threadpool::default_threads();
+        let k = kernel.gram(x, threads);
+        self.fit_gram(x, kernel, &k)
+    }
+
+    /// Train against any [`KernelProvider`] (bounded row caches, external
+    /// Gram sources). The default materializes the full matrix through
+    /// the provider — row-streaming solvers (SMO) override this to keep
+    /// memory bounded.
+    fn fit_provider<P: KernelProvider>(
+        &self,
+        x: &Matrix,
+        kernel: Kernel,
+        provider: &mut P,
+    ) -> Result<FitReport>
+    where
+        Self: Sized,
+    {
+        let k = materialize_gram(provider);
+        self.fit_gram(x, kernel, &k)
+    }
+}
+
+/// Pull every row out of a provider into a dense Gram matrix.
+fn materialize_gram<P: KernelProvider>(provider: &mut P) -> Matrix {
+    let m = provider.m();
+    let mut k = Matrix::zeros(m, m);
+    for i in 0..m {
+        provider.with_row(i, &mut |row| {
+            k.row_mut(i).copy_from_slice(row);
+        });
+    }
+    k
+}
+
+/// Read-only [`KernelProvider`] over a borrowed Gram matrix (zero-copy
+/// bridge from `fit_gram` into the row-streaming SMO core).
+struct BorrowedGram<'a> {
+    k: &'a Matrix,
+}
+
+impl KernelProvider for BorrowedGram<'_> {
+    fn m(&self) -> usize {
+        self.k.rows()
+    }
+    fn diag(&self, i: usize) -> f64 {
+        self.k.get(i, i)
+    }
+    fn with_row<R>(&mut self, i: usize, f: &mut dyn FnMut(&[f64]) -> R) -> R {
+        f(self.k.row(i))
+    }
+    fn with_two_rows<R>(
+        &mut self,
+        a: usize,
+        b: usize,
+        f: &mut dyn FnMut(&[f64], &[f64]) -> R,
+    ) -> R {
+        f(self.k.row(a), self.k.row(b))
+    }
+    fn stats(&self) -> CacheStats {
+        CacheStats::default()
+    }
+}
+
+/// Assemble the uniform report from a solved slab dual. `eps = 0` marks
+/// the degenerate ᾱ-block of the OCSVM embedding (cap_b = 0, all-zero
+/// ᾱ), which the certificate handles exactly.
+#[allow(clippy::too_many_arguments)]
+fn assemble_slab(
+    x: &Matrix,
+    kernel: Kernel,
+    sv_tol: f64,
+    nu1: f64,
+    nu2: f64,
+    eps: f64,
+    alpha: Vec<f64>,
+    alpha_bar: Vec<f64>,
+    s: Vec<f64>,
+    rho1: f64,
+    rho2: f64,
+    stats: SolveStats,
+) -> FitReport {
+    let m = alpha.len() as f64;
+    let gamma: Vec<f64> =
+        alpha.iter().zip(&alpha_bar).map(|(a, b)| a - b).collect();
+    let cap_a = 1.0 / (nu1 * m);
+    let cap_b = if eps > 0.0 { eps / (nu2 * m) } else { f64::INFINITY };
+    let cls_tol = cap_a.min(cap_b) * 1e-6;
+    let certificate = validate::report_with_margins(
+        &alpha, &alpha_bar, &s, rho1, rho2, nu1, nu2, eps, cls_tol,
+    );
+    let model = SlabModel::from_dual(x, &gamma, rho1, rho2, kernel, sv_tol);
+    FitReport {
+        model,
+        dual: DualSolution { alpha, alpha_bar, gamma, s, rho1, rho2 },
+        stats,
+        certificate,
+        cascade: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Concrete solvers
+// ---------------------------------------------------------------------------
+
+/// The paper's SMO ([`smo::solve`]) behind the [`Solver`] interface.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SmoSolver {
+    pub params: SmoParams,
+}
+
+impl Solver for SmoSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Smo
+    }
+
+    fn fit_gram(&self, x: &Matrix, kernel: Kernel, k: &Matrix) -> Result<FitReport> {
+        let mut provider = BorrowedGram { k };
+        self.fit_provider(x, kernel, &mut provider)
+    }
+
+    fn fit_provider<P: KernelProvider>(
+        &self,
+        x: &Matrix,
+        kernel: Kernel,
+        provider: &mut P,
+    ) -> Result<FitReport> {
+        let out = smo::solve(provider, &self.params)?;
+        Ok(assemble_slab(
+            x,
+            kernel,
+            self.params.sv_tol,
+            self.params.nu1,
+            self.params.nu2,
+            self.params.eps,
+            out.alpha,
+            out.alpha_bar,
+            out.s,
+            out.rho1,
+            out.rho2,
+            out.stats,
+        ))
+    }
+}
+
+/// Projected-gradient baseline ([`qp_pg::solve`]) behind [`Solver`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PgSolver {
+    pub params: PgParams,
+}
+
+impl Solver for PgSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Pg
+    }
+
+    fn fit_gram(&self, x: &Matrix, kernel: Kernel, k: &Matrix) -> Result<FitReport> {
+        let (alpha, alpha_bar, rho1, rho2, stats) = qp_pg::solve(k, &self.params)?;
+        let gamma: Vec<f64> =
+            alpha.iter().zip(&alpha_bar).map(|(a, b)| a - b).collect();
+        let mut s = vec![0.0; gamma.len()];
+        matvec(k, &gamma, &mut s);
+        Ok(assemble_slab(
+            x,
+            kernel,
+            self.params.sv_tol,
+            self.params.nu1,
+            self.params.nu2,
+            self.params.eps,
+            alpha,
+            alpha_bar,
+            s,
+            rho1,
+            rho2,
+            stats,
+        ))
+    }
+}
+
+/// Interior-point baseline ([`qp_ipm::solve`]) behind [`Solver`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IpmSolver {
+    pub params: IpmParams,
+}
+
+impl Solver for IpmSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Ipm
+    }
+
+    fn fit_gram(&self, x: &Matrix, kernel: Kernel, k: &Matrix) -> Result<FitReport> {
+        let (alpha, alpha_bar, rho1, rho2, stats) = qp_ipm::solve(k, &self.params)?;
+        let gamma: Vec<f64> =
+            alpha.iter().zip(&alpha_bar).map(|(a, b)| a - b).collect();
+        let mut s = vec![0.0; gamma.len()];
+        matvec(k, &gamma, &mut s);
+        Ok(assemble_slab(
+            x,
+            kernel,
+            self.params.sv_tol,
+            self.params.nu1,
+            self.params.nu2,
+            self.params.eps,
+            alpha,
+            alpha_bar,
+            s,
+            rho1,
+            rho2,
+            stats,
+        ))
+    }
+}
+
+/// Schölkopf one-class SVM ([`ocsvm_smo::solve`]) behind [`Solver`],
+/// embedded as a slab with no upper plane (ᾱ ≡ 0, ε = 0,
+/// `rho2 =` [`NO_UPPER_PLANE`]). Decision, ranking margin and objective
+/// all match the single-hyperplane formulation exactly.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OcsvmSolver {
+    pub params: OcsvmParams,
+}
+
+impl Solver for OcsvmSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::OcsvmSmo
+    }
+
+    fn fit_gram(&self, x: &Matrix, kernel: Kernel, k: &Matrix) -> Result<FitReport> {
+        let (alpha, rho, stats) = ocsvm_smo::solve(k, &self.params)?;
+        let m = alpha.len();
+        let mut s = vec![0.0; m];
+        matvec(k, &alpha, &mut s);
+        Ok(assemble_slab(
+            x,
+            kernel,
+            self.params.sv_tol,
+            self.params.nu,
+            1.0, // unused: eps = 0 collapses the ᾱ box to {0}
+            0.0,
+            alpha,
+            vec![0.0; m],
+            s,
+            rho,
+            NO_UPPER_PLANE,
+            stats,
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trainer
+// ---------------------------------------------------------------------------
+
+/// Cascade layer configuration.
+#[derive(Clone, Copy, Debug)]
+struct CascadeOpts {
+    shards: usize,
+    max_rounds: usize,
+}
+
+/// Kernel-row cache layer configuration.
+#[derive(Clone, Copy, Debug)]
+struct CacheOpts {
+    capacity: usize,
+    policy: Policy,
+}
+
+/// Builder over any [`SolverKind`], composing warm-start, cascade
+/// sharding and kernel caching as orthogonal layers.
+///
+/// Hyper-parameters shared across solvers (ν₁, ν₂, ε, heuristic, seed)
+/// have concrete defaults; `tol` and `max_iter` default to **per-solver**
+/// values (an SMO tolerance makes no sense as an IPM complementarity
+/// gap, and the IPM's O(m³) iterations need a budget of ~200, not
+/// 500 000), so they are only overridden when set explicitly.
+///
+/// Layer composition rules (violations are [`Error::Config`], not
+/// silent):
+///
+/// * `warm_start` and `cache_rows` require the row-streaming SMO solver;
+/// * `cascade` composes with any solver kind (each shard / union solve
+///   goes through the same [`Solver`] path, with ν rescaled so the
+///   subset dual's box matches the full problem — see
+///   `solver/cascade.rs` for the derivation);
+/// * `cascade` + `cache_rows` together are unsupported.
+#[derive(Clone, Debug)]
+pub struct Trainer {
+    kind: SolverKind,
+    kernel: Kernel,
+    nu1: f64,
+    nu2: f64,
+    eps: f64,
+    tol: Option<f64>,
+    max_iter: Option<usize>,
+    heuristic: Heuristic,
+    seed: u64,
+    sv_tol: f64,
+    shrinking: bool,
+    warm_epochs: usize,
+    cascade: Option<CascadeOpts>,
+    cache: Option<CacheOpts>,
+}
+
+impl Default for Trainer {
+    fn default() -> Self {
+        Trainer::new(SolverKind::Smo)
+    }
+}
+
+impl Trainer {
+    /// A trainer for `kind` with the paper's default constants
+    /// (ν₁ = 0.5, ν₂ = 0.01, ε = 2/3, linear kernel) and the kind's own
+    /// tolerance / iteration defaults.
+    pub fn new(kind: SolverKind) -> Trainer {
+        Trainer {
+            kind,
+            kernel: Kernel::Linear,
+            nu1: 0.5,
+            nu2: 0.01,
+            eps: 2.0 / 3.0,
+            tol: None,
+            max_iter: None,
+            heuristic: Heuristic::PaperMaxFbar,
+            seed: 0,
+            sv_tol: 1e-10,
+            shrinking: true,
+            warm_epochs: 0,
+            cascade: None,
+            cache: None,
+        }
+    }
+
+    /// Import a full [`SmoParams`] (kind becomes [`SolverKind::Smo`];
+    /// `tol`/`max_iter` become explicit). The one-call migration path
+    /// from the legacy free functions.
+    pub fn from_smo_params(p: SmoParams) -> Trainer {
+        let mut t = Trainer::new(SolverKind::Smo);
+        t.nu1 = p.nu1;
+        t.nu2 = p.nu2;
+        t.eps = p.eps;
+        t.tol = Some(p.tol);
+        t.max_iter = Some(p.max_iter);
+        t.heuristic = p.heuristic;
+        t.seed = p.seed;
+        t.sv_tol = p.sv_tol;
+        t.shrinking = p.shrinking;
+        t
+    }
+
+    /// Switch the solver kind, keeping every other setting.
+    pub fn solver(mut self, kind: SolverKind) -> Trainer {
+        self.kind = kind;
+        self
+    }
+
+    /// Which solver this trainer dispatches to.
+    pub fn kind(&self) -> SolverKind {
+        self.kind
+    }
+
+    /// Kernel to train with (default: linear, as in the paper).
+    pub fn kernel(mut self, kernel: Kernel) -> Trainer {
+        self.kernel = kernel;
+        self
+    }
+
+    /// ν₁ — lower-plane outlier bound (OCSVM kind: its single ν).
+    pub fn nu1(mut self, nu1: f64) -> Trainer {
+        self.nu1 = nu1;
+        self
+    }
+
+    /// ν₂ — upper-plane violator bound (ignored by the OCSVM kind).
+    pub fn nu2(mut self, nu2: f64) -> Trainer {
+        self.nu2 = nu2;
+        self
+    }
+
+    /// ε — upper-plane mass (ignored by the OCSVM kind).
+    pub fn eps(mut self, eps: f64) -> Trainer {
+        self.eps = eps;
+        self
+    }
+
+    /// Explicit convergence tolerance (meaning is per-solver: KKT margin
+    /// units for SMO/PG, complementarity gap for IPM).
+    pub fn tol(mut self, tol: f64) -> Trainer {
+        self.tol = Some(tol);
+        self
+    }
+
+    /// Explicit iteration budget.
+    pub fn max_iter(mut self, max_iter: usize) -> Trainer {
+        self.max_iter = Some(max_iter);
+        self
+    }
+
+    /// SMO working-set selection rule (SMO kind only; others ignore it).
+    pub fn heuristic(mut self, heuristic: Heuristic) -> Trainer {
+        self.heuristic = heuristic;
+        self
+    }
+
+    /// Seed for randomized selection / warm-start pair sampling.
+    pub fn seed(mut self, seed: u64) -> Trainer {
+        self.seed = seed;
+        self
+    }
+
+    /// |γ| above which a row is kept as a support vector.
+    pub fn sv_tol(mut self, sv_tol: f64) -> Trainer {
+        self.sv_tol = sv_tol;
+        self
+    }
+
+    /// Toggle SMO active-set shrinking.
+    pub fn shrinking(mut self, shrinking: bool) -> Trainer {
+        self.shrinking = shrinking;
+        self
+    }
+
+    /// Layer: stochastic warm start — `epochs` random-pair epochs before
+    /// the exact solve (SMO kind only). 0 disables.
+    pub fn warm_start(mut self, epochs: usize) -> Trainer {
+        self.warm_epochs = epochs;
+        self
+    }
+
+    /// Layer: Graf-style cascade — train `shards` sub-problems in
+    /// parallel, retrain on the union of their support vectors for up to
+    /// `max_rounds` rounds. Composes with any solver kind.
+    pub fn cascade(mut self, shards: usize, max_rounds: usize) -> Trainer {
+        self.cascade = Some(CascadeOpts { shards, max_rounds });
+        self
+    }
+
+    /// Layer: bounded kernel-row cache instead of the full Gram matrix
+    /// (SMO kind only; memory O(capacity · m)).
+    pub fn cache_rows(mut self, capacity: usize, policy: Policy) -> Trainer {
+        self.cache = Some(CacheOpts { capacity, policy });
+        self
+    }
+
+    // ---------------------------------------------------- param lowering
+
+    /// Lower the shared fields into [`SmoParams`].
+    pub fn smo_params(&self) -> SmoParams {
+        let d = SmoParams::default();
+        SmoParams {
+            nu1: self.nu1,
+            nu2: self.nu2,
+            eps: self.eps,
+            tol: self.tol.unwrap_or(d.tol),
+            max_iter: self.max_iter.unwrap_or(d.max_iter),
+            heuristic: self.heuristic,
+            seed: self.seed,
+            sv_tol: self.sv_tol,
+            shrinking: self.shrinking,
+        }
+    }
+
+    /// Lower the shared fields into [`PgParams`].
+    pub fn pg_params(&self) -> PgParams {
+        let d = PgParams::default();
+        PgParams {
+            nu1: self.nu1,
+            nu2: self.nu2,
+            eps: self.eps,
+            tol: self.tol.unwrap_or(d.tol),
+            max_iter: self.max_iter.unwrap_or(d.max_iter),
+            power_iters: d.power_iters,
+            sv_tol: self.sv_tol,
+        }
+    }
+
+    /// Lower the shared fields into [`IpmParams`].
+    pub fn ipm_params(&self) -> IpmParams {
+        let d = IpmParams::default();
+        IpmParams {
+            nu1: self.nu1,
+            nu2: self.nu2,
+            eps: self.eps,
+            tol: self.tol.unwrap_or(d.tol),
+            max_iter: self.max_iter.unwrap_or(d.max_iter),
+            tau: d.tau,
+            sigma: d.sigma,
+            sv_tol: self.sv_tol,
+        }
+    }
+
+    /// Lower the shared fields into [`OcsvmParams`] (ν = ν₁).
+    pub fn ocsvm_params(&self) -> OcsvmParams {
+        let d = OcsvmParams::default();
+        OcsvmParams {
+            nu: self.nu1,
+            tol: self.tol.unwrap_or(d.tol),
+            max_iter: self.max_iter.unwrap_or(d.max_iter),
+            sv_tol: self.sv_tol,
+        }
+    }
+
+    /// Instantiate the configured base solver (no layers).
+    pub fn build_solver(&self) -> Box<dyn Solver + Send + Sync> {
+        match self.kind {
+            SolverKind::Smo => Box::new(SmoSolver { params: self.smo_params() }),
+            SolverKind::Pg => Box::new(PgSolver { params: self.pg_params() }),
+            SolverKind::Ipm => Box::new(IpmSolver { params: self.ipm_params() }),
+            SolverKind::OcsvmSmo => {
+                Box::new(OcsvmSolver { params: self.ocsvm_params() })
+            }
+        }
+    }
+
+    // ------------------------------------------------------------- fitting
+
+    fn validate_composition(&self) -> Result<()> {
+        if self.warm_epochs > 0 && self.kind != SolverKind::Smo {
+            return Err(Error::config(format!(
+                "warm_start requires the smo solver (got {})",
+                self.kind
+            )));
+        }
+        if let Some(c) = &self.cache {
+            if self.kind != SolverKind::Smo {
+                return Err(Error::config(format!(
+                    "cache_rows requires the row-streaming smo solver (got {}); \
+                     dense solvers need the full Gram matrix",
+                    self.kind
+                )));
+            }
+            if c.capacity < 2 {
+                return Err(Error::config(
+                    "cache_rows capacity must be >= 2 (SMO touches row pairs)",
+                ));
+            }
+            if self.cascade.is_some() {
+                return Err(Error::config(
+                    "cascade + cache_rows is unsupported; pick one layer",
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Train on `x` with the configured solver and layers.
+    pub fn fit(&self, x: &Matrix) -> Result<FitReport> {
+        self.validate_composition()?;
+        if self.cascade.is_some() {
+            return self.fit_cascade(x);
+        }
+        self.fit_direct(x)
+    }
+
+    /// One solve, no cascade (warm-start / cache layers still apply).
+    fn fit_direct(&self, x: &Matrix) -> Result<FitReport> {
+        match self.kind {
+            SolverKind::Smo => {
+                if let Some(c) = self.cache {
+                    let mut provider =
+                        CachedRows::with_policy(x, self.kernel, c.capacity, c.policy);
+                    self.fit_smo_with(x, &mut provider)
+                } else {
+                    let threads = crate::util::threadpool::default_threads();
+                    let mut provider =
+                        PrecomputedGram::build(x, self.kernel, threads);
+                    self.fit_smo_with(x, &mut provider)
+                }
+            }
+            _ => self.build_solver().fit(x, self.kernel),
+        }
+    }
+
+    /// SMO path over any provider, with the optional warm-start layer.
+    fn fit_smo_with<P: KernelProvider>(
+        &self,
+        x: &Matrix,
+        provider: &mut P,
+    ) -> Result<FitReport> {
+        let p = self.smo_params();
+        let warm = if self.warm_epochs > 0 {
+            Some(warmstart::warm_state(
+                provider,
+                &WarmStartParams { smo: p, epochs: self.warm_epochs },
+            ))
+        } else {
+            None
+        };
+        let out = smo::solve_from(provider, &p, warm)?;
+        Ok(assemble_slab(
+            x,
+            self.kernel,
+            p.sv_tol,
+            p.nu1,
+            p.nu2,
+            p.eps,
+            out.alpha,
+            out.alpha_bar,
+            out.s,
+            out.rho1,
+            out.rho2,
+            out.stats,
+        ))
+    }
+
+    /// ε used for the certificate / cascade reconstruction: the OCSVM
+    /// embedding carries no ᾱ mass.
+    fn effective_eps(&self) -> f64 {
+        if self.kind == SolverKind::OcsvmSmo {
+            0.0
+        } else {
+            self.eps
+        }
+    }
+
+    /// Graf-style cascade over any solver kind (algorithm ported from
+    /// the SMO-only `solver/cascade.rs`; see its module docs for the
+    /// ν-rescaling derivation). Each shard / union solve goes through
+    /// [`Trainer::fit_direct`], so warm-start composes per sub-solve.
+    fn fit_cascade(&self, x: &Matrix) -> Result<FitReport> {
+        let opts = self.cascade.expect("fit_cascade called without cascade opts");
+        let m = x.rows();
+        let shards = opts.shards.max(1);
+        let mut base = self.clone();
+        base.cascade = None;
+        if m < shards * 16 || shards == 1 {
+            let mut report = base.fit_direct(x)?;
+            report.cascade =
+                Some(CascadeTrace { candidate_sizes: vec![m], rounds: 0 });
+            return Ok(report);
+        }
+
+        // ---- layer 1: parallel shard solves ---------------------------
+        // round-robin assignment keeps shards distributionally balanced
+        let mut shard_idx: Vec<Vec<usize>> = vec![Vec::new(); shards];
+        for i in 0..m {
+            shard_idx[i % shards].push(i);
+        }
+        let shard_svs: Vec<Result<Vec<usize>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = shard_idx
+                .iter()
+                .map(|idx| {
+                    let sub = base.clone();
+                    scope.spawn(move || -> Result<Vec<usize>> {
+                        let xs = x.select_rows(idx);
+                        let report = sub.fit_direct(&xs)?;
+                        // SVs of this shard, mapped back to global indices
+                        Ok(idx
+                            .iter()
+                            .enumerate()
+                            .filter(|(r, _)| {
+                                report.dual.gamma[*r].abs() > sub.sv_tol
+                            })
+                            .map(|(_, &g)| g)
+                            .collect())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard thread"))
+                .collect()
+        });
+        let mut candidates: Vec<usize> = Vec::new();
+        for svs in shard_svs {
+            candidates.extend(svs?);
+        }
+        candidates.sort_unstable();
+        candidates.dedup();
+
+        // ---- layer 2+: retrain on the union until the SV set stabilizes
+        let cascade_tol = self.tol.unwrap_or(CASCADE_DEFAULT_TOL);
+        let mut candidate_sizes = vec![candidates.len()];
+        let mut rounds = 0;
+        loop {
+            rounds += 1;
+            // pad for ν' ≤ 1 feasibility of the rescaled subset dual.
+            // Collected separately: pushing into `candidates` mid-scan
+            // would unsort it and break the binary_search dedup check.
+            let min_size = ((self.nu1.max(self.nu2) * m as f64).ceil() as usize
+                + 1)
+            .min(m);
+            if candidates.len() < min_size {
+                let mut pad: Vec<usize> = Vec::new();
+                for i in 0..m {
+                    if candidates.len() + pad.len() >= min_size {
+                        break;
+                    }
+                    if candidates.binary_search(&i).is_err() {
+                        pad.push(i);
+                    }
+                }
+                candidates.extend(pad);
+                candidates.sort_unstable();
+            }
+            let m_sub = candidates.len();
+            let scale = m as f64 / m_sub as f64;
+            let mut sub = base.clone();
+            sub.nu1 = (self.nu1 * scale).min(1.0);
+            sub.nu2 = (self.nu2 * scale).min(1.0);
+            let xs = x.select_rows(&candidates);
+            let report = sub.fit_direct(&xs)?;
+            let sv_of_candidates: Vec<usize> = candidates
+                .iter()
+                .enumerate()
+                .filter(|(r, _)| report.dual.gamma[*r].abs() > self.sv_tol)
+                .map(|(_, &g)| g)
+                .collect();
+            // convergence check: does the model violate KKT on any point
+            // OUTSIDE the candidate set? (those points have γ = 0, so
+            // the check is "is the margin inside the slab")
+            let mut violators: Vec<usize> = Vec::new();
+            for i in 0..m {
+                if candidates.binary_search(&i).is_ok() {
+                    continue;
+                }
+                let s = report.model.score(x.row(i));
+                if s < report.dual.rho1 - cascade_tol * (1.0 + s.abs())
+                    || s > report.dual.rho2 + cascade_tol * (1.0 + s.abs())
+                {
+                    violators.push(i);
+                }
+            }
+            if violators.is_empty() || rounds >= opts.max_rounds {
+                // rebuild the dual in GLOBAL index space (γ is re-derived
+                // as α − ᾱ inside assemble_slab; the sub-solve keeps them
+                // exactly consistent)
+                let mut alpha = vec![0.0; m];
+                let mut alpha_bar = vec![0.0; m];
+                for (r, &g) in candidates.iter().enumerate() {
+                    alpha[g] = report.dual.alpha[r];
+                    alpha_bar[g] = report.dual.alpha_bar[r];
+                }
+                let s: Vec<f64> =
+                    (0..m).map(|i| report.model.score(x.row(i))).collect();
+                let mut final_report = assemble_slab(
+                    x,
+                    self.kernel,
+                    self.sv_tol,
+                    self.nu1,
+                    self.nu2,
+                    self.effective_eps(),
+                    alpha,
+                    alpha_bar,
+                    s,
+                    report.dual.rho1,
+                    report.dual.rho2,
+                    report.stats,
+                );
+                final_report.cascade =
+                    Some(CascadeTrace { candidate_sizes, rounds });
+                return Ok(final_report);
+            }
+            // grow the candidate set with the violators and retrain
+            candidates = sv_of_candidates;
+            candidates.extend(violators);
+            candidates.sort_unstable();
+            candidates.dedup();
+            candidate_sizes.push(candidates.len());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+
+    #[test]
+    fn kind_roundtrip_and_rejection() {
+        for kind in SolverKind::ALL {
+            assert_eq!(kind.to_string().parse::<SolverKind>().unwrap(), kind);
+        }
+        assert!("newton".parse::<SolverKind>().is_err());
+        assert_eq!("ocsvm".parse::<SolverKind>().unwrap(), SolverKind::OcsvmSmo);
+    }
+
+    #[test]
+    fn all_kinds_fit_through_the_trait() {
+        let ds = SlabConfig::default().generate(80, 7);
+        for kind in SolverKind::ALL {
+            let solver = kind.default_solver();
+            assert_eq!(solver.kind(), kind);
+            let report = solver.fit(&ds.x, Kernel::Linear).unwrap();
+            assert_eq!(report.dual.gamma.len(), 80);
+            assert!(report.stats.iterations > 0, "{kind}: no iterations");
+            assert!(
+                report.certificate.sum_alpha_violation < 1e-6,
+                "{kind}: sum(alpha) off by {}",
+                report.certificate.sum_alpha_violation
+            );
+        }
+    }
+
+    #[test]
+    fn trainer_smo_matches_trait_smo() {
+        let ds = SlabConfig::default().generate(120, 8);
+        let via_trainer =
+            Trainer::new(SolverKind::Smo).kernel(Kernel::Linear).fit(&ds.x).unwrap();
+        let via_trait =
+            SmoSolver::default().fit(&ds.x, Kernel::Linear).unwrap();
+        assert!(
+            (via_trainer.stats.objective - via_trait.stats.objective).abs() < 1e-12
+        );
+        assert_eq!(via_trainer.dual.gamma, via_trait.dual.gamma);
+    }
+
+    #[test]
+    fn composition_rules_are_enforced() {
+        let t = Trainer::new(SolverKind::Ipm).warm_start(2);
+        assert!(t.validate_composition().is_err());
+        let t = Trainer::new(SolverKind::Pg).cache_rows(64, Policy::Lru);
+        assert!(t.validate_composition().is_err());
+        let t = Trainer::new(SolverKind::Smo)
+            .cascade(4, 3)
+            .cache_rows(64, Policy::Lru);
+        assert!(t.validate_composition().is_err());
+        let t = Trainer::new(SolverKind::Smo).cache_rows(1, Policy::Lru);
+        assert!(t.validate_composition().is_err());
+        let t = Trainer::new(SolverKind::Smo).warm_start(2).cascade(4, 3);
+        assert!(t.validate_composition().is_ok());
+    }
+
+    #[test]
+    fn ocsvm_embedding_is_single_plane() {
+        let ds = SlabConfig::default().generate(150, 9);
+        let report = Trainer::new(SolverKind::OcsvmSmo)
+            .kernel(Kernel::Rbf { g: 0.5 })
+            .nu1(0.3)
+            .fit(&ds.x)
+            .unwrap();
+        assert_eq!(report.dual.rho2, NO_UPPER_PLANE);
+        assert!(report.dual.alpha_bar.iter().all(|&v| v == 0.0));
+        // decision degenerates to sgn(s - rho1)
+        for i in 0..ds.len() {
+            let s = report.model.score(ds.x.row(i));
+            let want = if s - report.dual.rho1 >= 0.0 { 1 } else { -1 };
+            assert_eq!(report.model.classify(ds.x.row(i)), want, "row {i}");
+        }
+    }
+
+    #[test]
+    fn per_solver_iteration_defaults_apply() {
+        // an unset max_iter must lower to each solver's own default, not
+        // a shared one (an SMO budget would be catastrophic for the IPM)
+        let t = Trainer::new(SolverKind::Ipm);
+        assert_eq!(t.ipm_params().max_iter, IpmParams::default().max_iter);
+        assert_eq!(t.smo_params().max_iter, SmoParams::default().max_iter);
+        let t = t.max_iter(77);
+        assert_eq!(t.ipm_params().max_iter, 77);
+        assert_eq!(t.smo_params().max_iter, 77);
+    }
+
+    #[test]
+    fn materialized_gram_matches_direct() {
+        let ds = SlabConfig::default().generate(40, 10);
+        let mut provider = PrecomputedGram::build(&ds.x, Kernel::Linear, 2);
+        let k = materialize_gram(&mut provider);
+        let want = Kernel::Linear.gram(&ds.x, 2);
+        for i in 0..40 {
+            for j in 0..40 {
+                assert_eq!(k.get(i, j), want.get(i, j));
+            }
+        }
+    }
+}

@@ -2,27 +2,47 @@
 //!
 //! Graf-style cascade adapted to the one-class slab setting: split the
 //! training set into P shards, train an OCSSVM per shard **in parallel**
-//! (std::thread, one full SMO per shard), then keep only each shard's
+//! (std::thread, one full solve per shard), then keep only each shard's
 //! support vectors and retrain on their union. Iterate until the
 //! support-vector set stabilizes (or `max_rounds`). The final pass over
 //! the (much smaller) union yields a model whose objective matches the
 //! direct solve to within the union-approximation error — exact when the
 //! union contains the true SV set, which the convergence test checks.
 //!
+//! **ν-rescaling.** The ν-parameterization couples the box caps to the
+//! dataset size (cap_a = 1/(ν₁m)), so solving on a SUBSET with the
+//! original ν solves a different problem. The union retrain therefore
+//! rescales ν' = ν · m / m' so per-point caps — and hence the dual
+//! feasible set restricted to the candidates — match the full problem
+//! exactly. Feasibility needs ν' ≤ 1, i.e. m' ≥ ν·m: the candidate set
+//! is padded with non-candidates when the union is too small.
+//!
+//! The algorithm lives in the unified API as the [`Trainer::cascade`]
+//! layer (`trainer.cascade(shards, max_rounds).fit(x)`), where it
+//! composes with **any** [`SolverKind`] — each shard / union solve goes
+//! through the same `Solver` path. This module keeps the SMO-flavored
+//! [`CascadeParams`]/[`CascadeOutcome`] types and a deprecated `train`
+//! shim over the Trainer.
+//!
 //! Worth it when m is large and the SV fraction is small: per-shard SMO
 //! costs fall quadratically with shard size, and shards run in parallel.
 //! Ablation note: with the paper's ν₁ = 0.5 HALF the data are support
 //! vectors, so the cascade's union barely shrinks — parallelism is the
 //! paper's suggestion, but its own hyper-parameters undercut it (see
-//! EXPERIMENTS.md). At ν₁ = 0.1 the cascade wins.
+//! DESIGN.md, experiment index). At ν₁ = 0.1 the cascade wins.
+//!
+//! [`Trainer::cascade`]: super::api::Trainer::cascade
+//! [`SolverKind`]: super::api::SolverKind
 
+use super::api::Trainer;
 use super::ocssvm::SlabModel;
-use super::smo::{train_full, SmoOutcome, SmoParams};
+use super::smo::{SmoOutcome, SmoParams};
 use crate::kernel::Kernel;
 use crate::linalg::Matrix;
 use crate::Result;
 
-/// Cascade configuration.
+/// Cascade configuration (legacy shim; the unified API takes the same
+/// knobs via `Trainer::cascade(shards, max_rounds)`).
 #[derive(Clone, Copy, Debug)]
 pub struct CascadeParams {
     pub smo: SmoParams,
@@ -48,184 +68,85 @@ pub struct CascadeOutcome {
 
 /// Train via the cascade. Falls back to a direct solve when the data is
 /// too small to shard meaningfully.
+#[deprecated(
+    since = "0.2.0",
+    note = "use the unified API: \
+            `Trainer::from_smo_params(p.smo).kernel(kernel)\
+             .cascade(p.shards, p.max_rounds).fit(x)` — the cascade layer \
+            now composes with any SolverKind"
+)]
 pub fn train(
     x: &Matrix,
     kernel: Kernel,
     p: &CascadeParams,
 ) -> Result<(SlabModel, CascadeOutcome)> {
-    let m = x.rows();
-    let shards = p.shards.max(1);
-    if m < shards * 16 || shards == 1 {
-        let (model, outcome) = train_full(x, kernel, &p.smo)?;
-        return Ok((
-            model,
-            CascadeOutcome { outcome, candidate_sizes: vec![m], rounds: 0 },
-        ));
-    }
-
-    // ---- layer 1: parallel shard solves -------------------------------
-    // round-robin assignment keeps shards distributionally balanced
-    let mut shard_idx: Vec<Vec<usize>> = vec![Vec::new(); shards];
-    for i in 0..m {
-        shard_idx[i % shards].push(i);
-    }
-    let shard_svs: Vec<Result<Vec<usize>>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = shard_idx
-            .iter()
-            .map(|idx| {
-                let smo = p.smo;
-                scope.spawn(move || -> Result<Vec<usize>> {
-                    let xs = x.select_rows(idx);
-                    let (model, out) = train_full(&xs, kernel, &smo)?;
-                    let _ = model;
-                    // SVs of this shard, mapped back to global indices
-                    Ok(idx
-                        .iter()
-                        .enumerate()
-                        .filter(|(r, _)| out.gamma[*r].abs() > smo.sv_tol)
-                        .map(|(_, &g)| g)
-                        .collect())
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("shard thread")).collect()
-    });
-    let mut candidates: Vec<usize> = Vec::new();
-    for svs in shard_svs {
-        candidates.extend(svs?);
-    }
-    candidates.sort_unstable();
-    candidates.dedup();
-
-    // ---- layer 2+: retrain on the union until the SV set stabilizes ----
-    //
-    // The ν-parameterization couples the box caps to the dataset size
-    // (cap_a = 1/(ν₁ m)), so solving on a SUBSET with the original ν
-    // solves a different problem. The union retrain therefore rescales
-    // ν' = ν · m / m' so per-point caps — and hence the dual feasible
-    // set restricted to the candidates — match the full problem exactly.
-    // Feasibility needs ν' ≤ 1, i.e. m' ≥ ν·m: the candidate set is
-    // padded with non-candidates when the union is too small.
-    let mut candidate_sizes = vec![candidates.len()];
-    let mut rounds = 0;
-    loop {
-        rounds += 1;
-        // pad for ν' ≤ 1 feasibility
-        let min_size = ((p.smo.nu1.max(p.smo.nu2) * m as f64).ceil() as usize
-            + 1)
-        .min(m);
-        if candidates.len() < min_size {
-            for i in 0..m {
-                if candidates.len() >= min_size {
-                    break;
-                }
-                if candidates.binary_search(&i).is_err() {
-                    candidates.push(i);
-                }
-            }
-            candidates.sort_unstable();
-        }
-        let m_sub = candidates.len();
-        let scale = m as f64 / m_sub as f64;
-        let sub_params = SmoParams {
-            nu1: (p.smo.nu1 * scale).min(1.0),
-            nu2: (p.smo.nu2 * scale).min(1.0),
-            ..p.smo
-        };
-        let xs = x.select_rows(&candidates);
-        let (model, out) = train_full(&xs, kernel, &sub_params)?;
-        let sv_of_candidates: Vec<usize> = candidates
-            .iter()
-            .enumerate()
-            .filter(|(r, _)| out.gamma[*r].abs() > p.smo.sv_tol)
-            .map(|(_, &g)| g)
-            .collect();
-        // convergence check: does the model violate KKT on any point
-        // OUTSIDE the candidate set? (those points have γ = 0, so the
-        // check is just "is the margin inside the slab")
-        let mut violators: Vec<usize> = Vec::new();
-        for i in 0..m {
-            if candidates.binary_search(&i).is_ok() {
-                continue;
-            }
-            let s = model.score(x.row(i));
-            if s < out.rho1 - p.smo.tol * (1.0 + s.abs())
-                || s > out.rho2 + p.smo.tol * (1.0 + s.abs())
-            {
-                violators.push(i);
-            }
-        }
-        if violators.is_empty() || rounds >= p.max_rounds {
-            // rebuild the outcome in GLOBAL index space
-            let mut gamma = vec![0.0; m];
-            let mut alpha = vec![0.0; m];
-            let mut alpha_bar = vec![0.0; m];
-            for (r, &g) in candidates.iter().enumerate() {
-                gamma[g] = out.gamma[r];
-                alpha[g] = out.alpha[r];
-                alpha_bar[g] = out.alpha_bar[r];
-            }
-            let s: Vec<f64> = (0..m).map(|i| model.score(x.row(i))).collect();
-            let outcome = SmoOutcome {
-                alpha,
-                alpha_bar,
-                gamma,
-                s,
-                rho1: out.rho1,
-                rho2: out.rho2,
-                stats: out.stats,
-            };
-            let final_model = SlabModel::from_dual(
-                x, &outcome.gamma, out.rho1, out.rho2, kernel, p.smo.sv_tol,
-            );
-            return Ok((
-                final_model,
-                CascadeOutcome { outcome, candidate_sizes, rounds },
-            ));
-        }
-        // grow the candidate set with the violators and retrain
-        candidates = sv_of_candidates;
-        candidates.extend(violators);
-        candidates.sort_unstable();
-        candidates.dedup();
-        candidate_sizes.push(candidates.len());
-    }
+    let report = Trainer::from_smo_params(p.smo)
+        .kernel(kernel)
+        .cascade(p.shards, p.max_rounds)
+        .fit(x)?;
+    let trace = report.cascade.clone().expect("cascade layer always traces");
+    let outcome = SmoOutcome {
+        alpha: report.dual.alpha,
+        alpha_bar: report.dual.alpha_bar,
+        gamma: report.dual.gamma,
+        s: report.dual.s,
+        rho1: report.dual.rho1,
+        rho2: report.dual.rho2,
+        stats: report.stats,
+    };
+    Ok((
+        report.model,
+        CascadeOutcome {
+            outcome,
+            candidate_sizes: trace.candidate_sizes,
+            rounds: trace.rounds,
+        },
+    ))
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shim must keep matching the Trainer layer
+
     use super::*;
     use crate::data::synthetic::SlabConfig;
+    use crate::solver::api::SolverKind;
 
     fn sparse_sv_params() -> SmoParams {
         // small nu1 -> few SVs -> cascade's sweet spot
         SmoParams { nu1: 0.1, nu2: 0.05, eps: 0.5, ..Default::default() }
     }
 
+    fn sparse_trainer() -> Trainer {
+        Trainer::from_smo_params(sparse_sv_params())
+    }
+
     #[test]
     fn cascade_matches_direct_objective() {
         let ds = SlabConfig::default().generate(600, 91);
-        let direct = train_full(&ds.x, Kernel::Linear, &sparse_sv_params()).unwrap();
-        let p = CascadeParams { smo: sparse_sv_params(), shards: 4, max_rounds: 4 };
-        let (model, casc) = train(&ds.x, Kernel::Linear, &p).unwrap();
-        let rel = (casc.outcome.stats.objective - direct.1.stats.objective).abs()
-            / direct.1.stats.objective.abs().max(1e-9);
+        let direct = sparse_trainer().fit(&ds.x).unwrap();
+        let casc = sparse_trainer().cascade(4, 4).fit(&ds.x).unwrap();
+        let trace = casc.cascade.as_ref().unwrap();
+        let rel = (casc.stats.objective - direct.stats.objective).abs()
+            / direct.stats.objective.abs().max(1e-9);
         assert!(
             rel < 0.05,
             "cascade {} vs direct {}",
-            casc.outcome.stats.objective,
-            direct.1.stats.objective
+            casc.stats.objective,
+            direct.stats.objective
         );
-        assert!(model.width() > 0.0);
-        assert!(casc.candidate_sizes[0] < 600, "union should shrink the problem");
+        assert!(casc.model.width() > 0.0);
+        assert!(
+            trace.candidate_sizes[0] < 600,
+            "union should shrink the problem"
+        );
     }
 
     #[test]
     fn cascade_predictions_agree_with_direct() {
         let ds = SlabConfig::default().generate(500, 92);
-        let (direct, _) = train_full(&ds.x, Kernel::Linear, &sparse_sv_params()).unwrap();
-        let p = CascadeParams { smo: sparse_sv_params(), shards: 4, max_rounds: 4 };
-        let (casc, _) = train(&ds.x, Kernel::Linear, &p).unwrap();
+        let direct = sparse_trainer().fit(&ds.x).unwrap().model;
+        let casc = sparse_trainer().cascade(4, 4).fit(&ds.x).unwrap().model;
         let eval = SlabConfig::default().generate_eval(200, 200, 93);
         let agree = (0..eval.len())
             .filter(|&i| direct.classify(eval.x.row(i)) == casc.classify(eval.x.row(i)))
@@ -255,5 +176,43 @@ mod tests {
         let sb: f64 = casc.outcome.alpha_bar.iter().sum();
         assert!((sa - 1.0).abs() < 1e-8, "sum(alpha)={sa}");
         assert!((sb - 0.5).abs() < 1e-8, "sum(alpha_bar)={sb}");
+    }
+
+    #[test]
+    fn shim_matches_trainer_layer_exactly() {
+        let ds = SlabConfig::default().generate(400, 96);
+        let p = CascadeParams { smo: sparse_sv_params(), shards: 4, max_rounds: 3 };
+        let (model, casc) = train(&ds.x, Kernel::Linear, &p).unwrap();
+        let report = sparse_trainer().cascade(4, 3).fit(&ds.x).unwrap();
+        assert_eq!(casc.outcome.gamma, report.dual.gamma);
+        assert_eq!(model.rho1, report.model.rho1);
+        assert_eq!(model.rho2, report.model.rho2);
+    }
+
+    #[test]
+    fn cascade_composes_with_other_solver_kinds() {
+        // the ipm per shard: tiny problem so the O(m^3) steps stay cheap
+        let ds = SlabConfig::default().generate(160, 97);
+        let report = Trainer::new(SolverKind::Ipm)
+            .nu1(0.1)
+            .nu2(0.05)
+            .eps(0.5)
+            .cascade(2, 2)
+            .fit(&ds.x)
+            .unwrap();
+        let direct = Trainer::new(SolverKind::Ipm)
+            .nu1(0.1)
+            .nu2(0.05)
+            .eps(0.5)
+            .fit(&ds.x)
+            .unwrap();
+        let rel = (report.stats.objective - direct.stats.objective).abs()
+            / direct.stats.objective.abs().max(1e-9);
+        assert!(
+            rel < 0.05,
+            "ipm cascade {} vs direct {}",
+            report.stats.objective,
+            direct.stats.objective
+        );
     }
 }

@@ -9,7 +9,8 @@
 //!           Σᵢ γᵢ = 1 − ε
 //! ```
 //!
-//! Solvers (all produce a [`ocssvm::SlabModel`] and a [`SolveStats`]):
+//! Solvers (all trainable through the unified [`api::Solver`] trait /
+//! [`api::Trainer`] builder, producing an [`api::FitReport`]):
 //!
 //! * [`smo`] — **the paper's contribution**: sequential minimal
 //!   optimization with the max-|f̄| working-set heuristic;
@@ -19,11 +20,18 @@
 //! * [`ocsvm_smo`] — Schölkopf one-class SVM via SMO (reference [2]),
 //!   the non-slab baseline.
 //!
+//! [`api`] is the single entry point: [`api::SolverKind`] names the four
+//! solvers for CLI/config round-tripping, [`api::Trainer`] composes
+//! warm-start, cascade sharding and kernel caching as orthogonal layers
+//! on top of any of them. The per-module `train` free functions are kept
+//! as thin deprecated shims.
+//!
 //! [`validate`] certifies any returned solution: box + sum feasibility
 //! and ε-KKT. Every solver's output is certified in the test suite; the
 //! SMO/PG/IPM objective agreement test is the strongest correctness
 //! signal (three independent algorithms, one optimum).
 
+pub mod api;
 pub mod cascade;
 pub mod ocssvm;
 pub mod ocsvm_smo;
@@ -32,6 +40,8 @@ pub mod qp_pg;
 pub mod smo;
 pub mod validate;
 pub mod warmstart;
+
+pub use api::{DualSolution, FitReport, Solver, SolverKind, Trainer};
 
 use crate::cache::CacheStats;
 
@@ -93,12 +103,45 @@ pub enum Heuristic {
 }
 
 impl Heuristic {
+    /// Every heuristic, in ablation order.
+    pub const ALL: [Heuristic; 4] = [
+        Heuristic::PaperMaxFbar,
+        Heuristic::MaxViolation,
+        Heuristic::RandomViolator,
+        Heuristic::SecondOrder,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             Heuristic::PaperMaxFbar => "paper-max-fbar",
             Heuristic::MaxViolation => "max-violation",
             Heuristic::RandomViolator => "random-violator",
             Heuristic::SecondOrder => "second-order",
+        }
+    }
+}
+
+impl std::fmt::Display for Heuristic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Heuristic {
+    type Err = crate::error::Error;
+
+    /// Inverse of [`Heuristic::name`] (a couple of short aliases kept
+    /// for CLI ergonomics).
+    fn from_str(s: &str) -> Result<Heuristic, Self::Err> {
+        match s {
+            "paper-max-fbar" | "paper" => Ok(Heuristic::PaperMaxFbar),
+            "max-violation" => Ok(Heuristic::MaxViolation),
+            "random-violator" | "random" => Ok(Heuristic::RandomViolator),
+            "second-order" | "wss2" => Ok(Heuristic::SecondOrder),
+            other => Err(crate::error::Error::config(format!(
+                "unknown heuristic {other:?} (expected paper-max-fbar|\
+                 max-violation|random-violator|second-order)"
+            ))),
         }
     }
 }

@@ -237,6 +237,12 @@ pub fn solve(k: &Matrix, p: &OcsvmParams) -> Result<(Vec<f64>, f64, SolveStats)>
 }
 
 /// Train an [`OcsvmModel`] end-to-end.
+#[deprecated(
+    since = "0.2.0",
+    note = "use the unified API: `Trainer::new(SolverKind::OcsvmSmo).kernel(kernel).fit(x)` \
+            (solver::api) — returns the slab embedding with rho2 = NO_UPPER_PLANE; \
+            decision, margin ranking and objective are identical"
+)]
 pub fn train(x: &Matrix, kernel: Kernel, p: &OcsvmParams) -> Result<(OcsvmModel, SolveStats)> {
     let threads = crate::util::threadpool::default_threads();
     let k = kernel.gram(x, threads);
@@ -256,6 +262,8 @@ pub fn train(x: &Matrix, kernel: Kernel, p: &OcsvmParams) -> Result<(OcsvmModel,
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // legacy shims stay covered until removal
+
     use super::*;
     use crate::data::synthetic::SlabConfig;
 

@@ -282,6 +282,11 @@ pub fn solve(
 }
 
 /// Train a [`SlabModel`] with the interior-point method.
+#[deprecated(
+    since = "0.2.0",
+    note = "use the unified API: `Trainer::new(SolverKind::Ipm).kernel(kernel).fit(x)` \
+            (solver::api) — same numerics, uniform FitReport"
+)]
 pub fn train(x: &Matrix, kernel: Kernel, p: &IpmParams) -> Result<(SlabModel, SolveStats)> {
     let threads = crate::util::threadpool::default_threads();
     let k = kernel.gram(x, threads);
@@ -296,6 +301,8 @@ pub fn train(x: &Matrix, kernel: Kernel, p: &IpmParams) -> Result<(SlabModel, So
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // legacy shims stay covered until removal
+
     use super::*;
     use crate::data::synthetic::SlabConfig;
 

@@ -256,6 +256,11 @@ pub fn solve(
 }
 
 /// Train a [`SlabModel`] with projected gradient.
+#[deprecated(
+    since = "0.2.0",
+    note = "use the unified API: `Trainer::new(SolverKind::Pg).kernel(kernel).fit(x)` \
+            (solver::api) — same numerics, uniform FitReport"
+)]
 pub fn train(x: &Matrix, kernel: Kernel, p: &PgParams) -> Result<(SlabModel, SolveStats)> {
     let threads = crate::util::threadpool::default_threads();
     let k = kernel.gram(x, threads);
@@ -270,6 +275,8 @@ pub fn train(x: &Matrix, kernel: Kernel, p: &PgParams) -> Result<(SlabModel, Sol
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // legacy shims stay covered until removal
+
     use super::*;
     use crate::data::synthetic::SlabConfig;
     use crate::solver::validate::certify;

@@ -111,12 +111,27 @@ enum Block {
 }
 
 /// Train on `x` with a precomputed Gram matrix (native engine, parallel
-/// build). The standard entry point at paper scale.
+/// build).
+#[deprecated(
+    since = "0.2.0",
+    note = "use the unified API: `Trainer::from_smo_params(*p).kernel(kernel).fit(x)` \
+            (solver::api) — same numerics, uniform FitReport"
+)]
 pub fn train(x: &Matrix, kernel: Kernel, p: &SmoParams) -> Result<SlabModel> {
-    train_full(x, kernel, p).map(|(m, _)| m)
+    let threads = crate::util::threadpool::default_threads();
+    let mut provider = PrecomputedGram::build(x, kernel, threads);
+    let out = solve(&mut provider, p)?;
+    Ok(SlabModel::from_dual(
+        x, &out.gamma, out.rho1, out.rho2, kernel, p.sv_tol,
+    ))
 }
 
 /// Train returning the raw dual outcome too (benches/tests need stats).
+#[deprecated(
+    since = "0.2.0",
+    note = "use the unified API: `Trainer::from_smo_params(*p).kernel(kernel).fit(x)` \
+            returns the model, the full dual and the stats in one FitReport"
+)]
 pub fn train_full(
     x: &Matrix,
     kernel: Kernel,
@@ -132,6 +147,11 @@ pub fn train_full(
 
 /// Train with a bounded kernel-row cache instead of the full Gram
 /// (memory O(capacity · m); the A2 ablation path).
+#[deprecated(
+    since = "0.2.0",
+    note = "use the unified API: \
+            `Trainer::from_smo_params(*p).kernel(kernel).cache_rows(cap, policy).fit(x)`"
+)]
 pub fn train_cached(
     x: &Matrix,
     kernel: Kernel,
@@ -786,6 +806,11 @@ fn recover_rhos_gamma(
 
 #[cfg(test)]
 mod tests {
+    // The deprecated free-function shims are exercised here on purpose:
+    // api_parity.rs pins them against the Trainer path, and these tests
+    // keep their behavior covered until removal.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::data::synthetic::SlabConfig;
     use crate::solver::validate::certify;

@@ -32,7 +32,9 @@ pub struct Certificate {
 
 /// Compute the report without pass/fail judgement. `cls_tol` is the
 /// bound-classification tolerance (how close to a bound counts as *at*
-/// the bound).
+/// the bound). Margins are recomputed from `k` (one mat-vec); use
+/// [`report_with_margins`] when an exact margin vector is already in
+/// hand (every solver maintains one).
 #[allow(clippy::too_many_arguments)]
 pub fn report(
     k: &Matrix,
@@ -48,6 +50,33 @@ pub fn report(
     let m = alpha.len();
     assert_eq!(k.rows(), m);
     assert_eq!(alpha_bar.len(), m);
+    // margins s = K (α − ᾱ)
+    let gamma: Vec<f64> = alpha.iter().zip(alpha_bar).map(|(a, b)| a - b).collect();
+    let mut s = vec![0.0; m];
+    crate::linalg::matvec(k, &gamma, &mut s);
+    report_with_margins(alpha, alpha_bar, &s, rho1, rho2, nu1, nu2, eps, cls_tol)
+}
+
+/// [`report`] with the margin vector `s = K(α − ᾱ)` supplied by the
+/// caller instead of recomputed — O(m) instead of O(m²), and usable when
+/// the full Gram matrix was never materialized (bounded row caches).
+/// The caller is responsible for `s` being the true margins; solvers
+/// maintain them to ~1e-8 (asserted by the margin-drift tests).
+#[allow(clippy::too_many_arguments)]
+pub fn report_with_margins(
+    alpha: &[f64],
+    alpha_bar: &[f64],
+    s: &[f64],
+    rho1: f64,
+    rho2: f64,
+    nu1: f64,
+    nu2: f64,
+    eps: f64,
+    cls_tol: f64,
+) -> Certificate {
+    let m = alpha.len();
+    assert_eq!(alpha_bar.len(), m);
+    assert_eq!(s.len(), m);
     let cap_a = 1.0 / (nu1 * m as f64);
     let cap_b = eps / (nu2 * m as f64);
 
@@ -63,10 +92,6 @@ pub fn report(
     cert.sum_alpha_violation = (alpha.iter().sum::<f64>() - 1.0).abs();
     cert.sum_alpha_bar_violation = (alpha_bar.iter().sum::<f64>() - eps).abs();
 
-    // margins s = K (α − ᾱ)
-    let gamma: Vec<f64> = alpha.iter().zip(alpha_bar).map(|(a, b)| a - b).collect();
-    let mut s = vec![0.0; m];
-    crate::linalg::matvec(k, &gamma, &mut s);
     for i in 0..m {
         let va = if alpha[i] <= cls_tol {
             (rho1 - s[i]).max(0.0)
@@ -88,7 +113,13 @@ pub fn report(
             cert.worst_index = i;
         }
     }
-    cert.objective = 0.5 * gamma.iter().zip(&s).map(|(g, si)| g * si).sum::<f64>();
+    cert.objective = 0.5
+        * alpha
+            .iter()
+            .zip(alpha_bar)
+            .zip(s)
+            .map(|((a, ab), si)| (a - ab) * si)
+            .sum::<f64>();
     cert
 }
 
@@ -188,6 +219,26 @@ mod tests {
         let alpha_bar = [0.25, 0.25];
         assert!(certify(&k, &alpha, &alpha_bar, -9.0, 9.0, 0.5, 0.5, 0.5, 1e-6)
             .is_err());
+    }
+
+    #[test]
+    fn report_with_margins_matches_report() {
+        let k = Matrix::from_rows(&[&[2.0, 0.5], &[0.5, 2.0]]);
+        let alpha = [0.6, 0.4];
+        let alpha_bar = [0.3, 0.2];
+        let gamma: Vec<f64> =
+            alpha.iter().zip(&alpha_bar).map(|(a, b)| a - b).collect();
+        let mut s = vec![0.0; 2];
+        crate::linalg::matvec(&k, &gamma, &mut s);
+        let full = report(&k, &alpha, &alpha_bar, 0.1, 0.9, 0.5, 0.5, 0.5, 1e-9);
+        let fast = report_with_margins(
+            &alpha, &alpha_bar, &s, 0.1, 0.9, 0.5, 0.5, 0.5, 1e-9,
+        );
+        assert_eq!(full.max_box_violation, fast.max_box_violation);
+        assert_eq!(full.sum_alpha_violation, fast.sum_alpha_violation);
+        assert_eq!(full.max_kkt_violation, fast.max_kkt_violation);
+        assert_eq!(full.worst_index, fast.worst_index);
+        assert!((full.objective - fast.objective).abs() < 1e-15);
     }
 
     #[test]

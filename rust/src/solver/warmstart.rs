@@ -15,6 +15,9 @@
 //! Everything stays dual-feasible throughout (same box windows and pair
 //! conservation as the main solver), so the warm start changes only the
 //! path, never the optimum — asserted by the tests.
+//!
+//! In the unified API this is the `Trainer::warm_start(epochs)` layer
+//! (`solver::api`); [`warm_state`] is the reusable pre-pass it calls.
 
 use super::ocssvm::SlabModel;
 use super::smo::{solve_from, SmoOutcome, SmoParams, WarmState};
@@ -110,6 +113,12 @@ pub fn warm_state<P: KernelProvider>(
 }
 
 /// Warm-started training end-to-end.
+#[deprecated(
+    since = "0.2.0",
+    note = "use the unified API: \
+            `Trainer::from_smo_params(p.smo).kernel(kernel).warm_start(p.epochs).fit(x)` \
+            (solver::api) — same pre-pass, same optimum"
+)]
 pub fn train(
     x: &Matrix,
     kernel: Kernel,
@@ -127,6 +136,8 @@ pub fn train(
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // legacy shims stay covered until removal
+
     use super::*;
     use crate::data::synthetic::SlabConfig;
     use crate::solver::smo::train_full;

@@ -4,7 +4,7 @@
 //! distributions the data generators and tests need: uniform, standard
 //! normal (Marsaglia polar), Laplace (inverse CDF) and shuffling.
 //! Deterministic across runs and platforms — every experiment in
-//! EXPERIMENTS.md records its seed.
+//! DESIGN.md (experiment index) records its seed.
 
 /// xoshiro256++ PRNG. Not cryptographic; fast and high-quality for
 /// simulation workloads.

@@ -1,0 +1,277 @@
+//! API-redesign safety net: the unified `Solver` / `Trainer` path must
+//! reproduce the legacy per-module `train` free functions **exactly** —
+//! same objective, same dual vector γ, same (ρ1, ρ2) — for every
+//! [`SolverKind`]. Plus the `FromStr`/`Display` round-trip contracts the
+//! CLI and config layers rely on.
+//!
+//! The legacy shims are deprecated; calling them here is the point.
+#![allow(deprecated)]
+
+use slabsvm::cache::{CachedRows, Policy};
+use slabsvm::data::synthetic::SlabConfig;
+use slabsvm::kernel::Kernel;
+use slabsvm::solver::api::{SolverKind, Trainer, NO_UPPER_PLANE};
+use slabsvm::solver::smo::SmoParams;
+use slabsvm::solver::warmstart::WarmStartParams;
+use slabsvm::solver::{cascade, ocsvm_smo, qp_ipm, qp_pg, smo, warmstart, Heuristic};
+
+/// Objective agreement bound. The two paths run the identical core
+/// solve on the identical Gram, so this is slack over bit-equality —
+/// and far inside the redesign's 1e-8 acceptance bound.
+const OBJ_TOL: f64 = 1e-9;
+
+fn assert_gamma_eq(ours: &[f64], legacy: &[f64], kind: SolverKind) {
+    assert_eq!(ours.len(), legacy.len(), "{kind}: gamma length");
+    for (i, (a, b)) in ours.iter().zip(legacy).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-12,
+            "{kind}: gamma[{i}] diverged: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn parity_smo() {
+    let ds = SlabConfig::default().generate(300, 11);
+    let p = SmoParams::default();
+    let (legacy_model, legacy) =
+        smo::train_full(&ds.x, Kernel::Linear, &p).unwrap();
+    let report = Trainer::from_smo_params(p)
+        .kernel(Kernel::Linear)
+        .fit(&ds.x)
+        .unwrap();
+    assert!(
+        (report.stats.objective - legacy.stats.objective).abs() <= OBJ_TOL,
+        "objective: {} vs {}",
+        report.stats.objective,
+        legacy.stats.objective
+    );
+    assert_gamma_eq(&report.dual.gamma, &legacy.gamma, SolverKind::Smo);
+    assert_eq!(report.dual.rho1, legacy.rho1);
+    assert_eq!(report.dual.rho2, legacy.rho2);
+    assert_eq!(report.model.n_sv(), legacy_model.n_sv());
+
+    // the single deprecated-model entry point agrees too
+    let single = smo::train(&ds.x, Kernel::Linear, &p).unwrap();
+    assert_eq!(single.rho1, report.model.rho1);
+
+    // and the trait object path (registry-style dispatch) is the same fit
+    let via_trait = SolverKind::Smo
+        .default_solver()
+        .fit(&ds.x, Kernel::Linear)
+        .unwrap();
+    assert_gamma_eq(&via_trait.dual.gamma, &legacy.gamma, SolverKind::Smo);
+}
+
+#[test]
+fn parity_pg() {
+    let ds = SlabConfig::default().generate(150, 12);
+    let p = qp_pg::PgParams::default();
+    let k = Kernel::Linear.gram(&ds.x, 4);
+    let (alpha, alpha_bar, rho1, rho2, stats) = qp_pg::solve(&k, &p).unwrap();
+    let legacy_gamma: Vec<f64> =
+        alpha.iter().zip(&alpha_bar).map(|(a, b)| a - b).collect();
+
+    let report = Trainer::new(SolverKind::Pg)
+        .kernel(Kernel::Linear)
+        .fit(&ds.x)
+        .unwrap();
+    assert!(
+        (report.stats.objective - stats.objective).abs() <= OBJ_TOL,
+        "objective: {} vs {}",
+        report.stats.objective,
+        stats.objective
+    );
+    assert_gamma_eq(&report.dual.gamma, &legacy_gamma, SolverKind::Pg);
+    assert_eq!(report.dual.rho1, rho1);
+    assert_eq!(report.dual.rho2, rho2);
+
+    // deprecated end-to-end shim
+    let (legacy_model, legacy_stats) =
+        qp_pg::train(&ds.x, Kernel::Linear, &p).unwrap();
+    assert!((legacy_stats.objective - stats.objective).abs() <= OBJ_TOL);
+    assert_eq!(legacy_model.rho1, report.model.rho1);
+}
+
+#[test]
+fn parity_ipm() {
+    let ds = SlabConfig::default().generate(100, 13);
+    let p = qp_ipm::IpmParams::default();
+    let k = Kernel::Linear.gram(&ds.x, 4);
+    let (alpha, alpha_bar, rho1, rho2, stats) = qp_ipm::solve(&k, &p).unwrap();
+    let legacy_gamma: Vec<f64> =
+        alpha.iter().zip(&alpha_bar).map(|(a, b)| a - b).collect();
+
+    let report = Trainer::new(SolverKind::Ipm)
+        .kernel(Kernel::Linear)
+        .fit(&ds.x)
+        .unwrap();
+    assert!(
+        (report.stats.objective - stats.objective).abs() <= OBJ_TOL,
+        "objective: {} vs {}",
+        report.stats.objective,
+        stats.objective
+    );
+    assert_gamma_eq(&report.dual.gamma, &legacy_gamma, SolverKind::Ipm);
+    assert_eq!(report.dual.rho1, rho1);
+    assert_eq!(report.dual.rho2, rho2);
+}
+
+#[test]
+fn parity_ocsvm() {
+    let ds = SlabConfig::default().generate(200, 14);
+    let p = ocsvm_smo::OcsvmParams::default();
+    let k = Kernel::Rbf { g: 0.5 }.gram(&ds.x, 4);
+    let (alpha, rho, stats) = ocsvm_smo::solve(&k, &p).unwrap();
+
+    let report = Trainer::new(SolverKind::OcsvmSmo)
+        .kernel(Kernel::Rbf { g: 0.5 })
+        .nu1(p.nu)
+        .fit(&ds.x)
+        .unwrap();
+    assert!(
+        (report.stats.objective - stats.objective).abs() <= OBJ_TOL,
+        "objective: {} vs {}",
+        report.stats.objective,
+        stats.objective
+    );
+    // the embedding carries gamma = alpha, rho1 = rho, no upper plane
+    assert_gamma_eq(&report.dual.gamma, &alpha, SolverKind::OcsvmSmo);
+    assert_eq!(report.dual.rho1, rho);
+    assert_eq!(report.dual.rho2, NO_UPPER_PLANE);
+
+    // decision parity against the legacy OcsvmModel on held-out points
+    let (legacy_model, _) =
+        ocsvm_smo::train(&ds.x, Kernel::Rbf { g: 0.5 }, &p).unwrap();
+    let eval = SlabConfig::default().generate_eval(100, 100, 15);
+    for i in 0..eval.len() {
+        assert_eq!(
+            report.model.classify(eval.x.row(i)),
+            legacy_model.classify(eval.x.row(i)),
+            "decision diverged at eval row {i}"
+        );
+    }
+}
+
+#[test]
+fn parity_warmstart_layer() {
+    let ds = SlabConfig::default().generate(250, 16);
+    let p = WarmStartParams { smo: SmoParams::default(), epochs: 2 };
+    let (_, legacy) = warmstart::train(&ds.x, Kernel::Linear, &p).unwrap();
+    let report = Trainer::from_smo_params(p.smo)
+        .kernel(Kernel::Linear)
+        .warm_start(p.epochs)
+        .fit(&ds.x)
+        .unwrap();
+    assert!(
+        (report.stats.objective - legacy.stats.objective).abs() <= OBJ_TOL,
+        "objective: {} vs {}",
+        report.stats.objective,
+        legacy.stats.objective
+    );
+    assert_gamma_eq(&report.dual.gamma, &legacy.gamma, SolverKind::Smo);
+    assert_eq!(report.dual.rho1, legacy.rho1);
+    assert_eq!(report.dual.rho2, legacy.rho2);
+}
+
+#[test]
+fn parity_cached_layer() {
+    let ds = SlabConfig::default().generate(150, 17);
+    let p = SmoParams::default();
+    let cache = CachedRows::with_policy(&ds.x, Kernel::Linear, 32, Policy::Lru);
+    let (_, legacy) = smo::train_cached(&ds.x, Kernel::Linear, &p, cache).unwrap();
+    let report = Trainer::from_smo_params(p)
+        .kernel(Kernel::Linear)
+        .cache_rows(32, Policy::Lru)
+        .fit(&ds.x)
+        .unwrap();
+    assert!(
+        (report.stats.objective - legacy.stats.objective).abs() <= OBJ_TOL,
+        "objective: {} vs {}",
+        report.stats.objective,
+        legacy.stats.objective
+    );
+    assert_gamma_eq(&report.dual.gamma, &legacy.gamma, SolverKind::Smo);
+    assert_eq!(report.stats.cache.misses, legacy.stats.cache.misses);
+}
+
+#[test]
+fn parity_cascade_layer() {
+    let ds = SlabConfig::default().generate(400, 18);
+    let smo_p = SmoParams { nu1: 0.1, nu2: 0.05, eps: 0.5, ..Default::default() };
+    let p = cascade::CascadeParams { smo: smo_p, shards: 4, max_rounds: 3 };
+    let (legacy_model, legacy) = cascade::train(&ds.x, Kernel::Linear, &p).unwrap();
+    let report = Trainer::from_smo_params(smo_p)
+        .kernel(Kernel::Linear)
+        .cascade(4, 3)
+        .fit(&ds.x)
+        .unwrap();
+    assert_gamma_eq(&report.dual.gamma, &legacy.outcome.gamma, SolverKind::Smo);
+    assert_eq!(report.dual.rho1, legacy.outcome.rho1);
+    assert_eq!(report.model.n_sv(), legacy_model.n_sv());
+    let trace = report.cascade.as_ref().expect("trace");
+    assert_eq!(trace.candidate_sizes, legacy.candidate_sizes);
+    assert_eq!(trace.rounds, legacy.rounds);
+}
+
+// ---------------------------------------------------------------------------
+// FromStr <-> Display round-trips (CLI / config contract)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn solver_kind_name_roundtrip() {
+    for kind in SolverKind::ALL {
+        let name = kind.to_string();
+        assert_eq!(name.parse::<SolverKind>().unwrap(), kind, "{name}");
+    }
+    // explicit canonical names stay stable (config files depend on them)
+    assert_eq!("smo".parse::<SolverKind>().unwrap(), SolverKind::Smo);
+    assert_eq!("pg".parse::<SolverKind>().unwrap(), SolverKind::Pg);
+    assert_eq!("ipm".parse::<SolverKind>().unwrap(), SolverKind::Ipm);
+    assert_eq!(
+        "ocsvm-smo".parse::<SolverKind>().unwrap(),
+        SolverKind::OcsvmSmo
+    );
+}
+
+#[test]
+fn solver_kind_rejects_unknown_names() {
+    for bad in ["", "newton", "SMO", "smo ", "qp", "interior point"] {
+        assert!(
+            bad.parse::<SolverKind>().is_err(),
+            "{bad:?} should be rejected"
+        );
+    }
+}
+
+#[test]
+fn heuristic_name_roundtrip() {
+    for h in Heuristic::ALL {
+        let name = h.to_string();
+        assert_eq!(name.parse::<Heuristic>().unwrap(), h, "{name}");
+        assert_eq!(name, h.name());
+    }
+}
+
+#[test]
+fn heuristic_rejects_unknown_names() {
+    for bad in ["", "bogus", "PAPER", "max violation"] {
+        assert!(bad.parse::<Heuristic>().is_err(), "{bad:?} should be rejected");
+    }
+}
+
+#[test]
+fn every_kind_constructible_from_str_and_fits() {
+    // the acceptance criterion, end to end: name -> SolverKind ->
+    // Solver::fit, one loop, no per-solver dispatch anywhere
+    let ds = SlabConfig::default().generate(90, 19);
+    for name in ["smo", "pg", "ipm", "ocsvm-smo"] {
+        let kind: SolverKind = name.parse().unwrap();
+        let report = kind
+            .default_solver()
+            .fit(&ds.x, Kernel::Linear)
+            .unwrap_or_else(|e| panic!("{name} failed: {e}"));
+        assert!(report.stats.iterations > 0, "{name}");
+        assert!(report.model.n_sv() > 0, "{name}");
+    }
+}

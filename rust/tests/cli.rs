@@ -16,6 +16,37 @@ fn tmpdir() -> PathBuf {
 }
 
 #[test]
+fn train_accepts_any_solver_kind_and_rejects_unknown() {
+    // own directory: sibling tests remove tmpdir() concurrently
+    let dir = std::env::temp_dir()
+        .join(format!("slabsvm_cli_solvers_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // every SolverKind name trains through the same subcommand
+    for solver in ["smo", "pg", "ipm", "ocsvm-smo"] {
+        let model = dir.join(format!("m_{solver}.json"));
+        let out = bin()
+            .args(["train", "--solver", solver, "--size", "120", "--out"])
+            .arg(&model)
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "--solver {solver} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        assert!(model.exists(), "--solver {solver} wrote no model");
+    }
+    // unknown solver name fails with a clear error
+    let out = bin()
+        .args(["train", "--solver", "newton", "--size", "50", "--out", "/tmp/x.json"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown solver"));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn help_and_unknown_subcommand() {
     let out = bin().arg("help").output().unwrap();
     assert!(out.status.success());

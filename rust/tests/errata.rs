@@ -1,14 +1,21 @@
 //! Errata-regression tests: every deviation from the paper's text that
 //! DESIGN.md §1.1 documents is pinned here, with the failure mode the
-//! uncorrected version would produce.
+//! uncorrected version would produce. Training goes through the unified
+//! `Trainer` API (bit-identical to the legacy SMO path — see
+//! api_parity.rs).
 
 use slabsvm::data::synthetic::SlabConfig;
 use slabsvm::kernel::Kernel;
-use slabsvm::solver::smo::{solve_gamma_relaxed, train_full, SmoParams};
-use slabsvm::solver::{check_params, fbar, kkt_violation};
+use slabsvm::linalg::Matrix;
+use slabsvm::solver::smo::{solve_gamma_relaxed, SmoParams};
+use slabsvm::solver::{check_params, fbar, kkt_violation, FitReport, Trainer};
 
 fn paper_params() -> SmoParams {
     SmoParams { nu1: 0.5, nu2: 0.01, eps: 2.0 / 3.0, ..Default::default() }
+}
+
+fn fit(x: &Matrix, p: &SmoParams) -> FitReport {
+    Trainer::from_smo_params(*p).kernel(Kernel::Linear).fit(x).unwrap()
 }
 
 /// Erratum A (the big one): eqs. (30)–(32) drop Σα = 1 / Σᾱ = ε in
@@ -22,11 +29,11 @@ fn gamma_relaxation_is_not_the_ocssvm_dual() {
     let p = paper_params();
 
     let (gamma_rel, _, _, rel_stats) = solve_gamma_relaxed(&k, &p).unwrap();
-    let (_, out) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
+    let report = fit(&ds.x, &p);
 
     // faithful solution conserves both sums
-    let sa: f64 = out.alpha.iter().sum();
-    let sb: f64 = out.alpha_bar.iter().sum();
+    let sa: f64 = report.dual.alpha.iter().sum();
+    let sb: f64 = report.dual.alpha_bar.iter().sum();
     assert!((sa - 1.0).abs() < 1e-9);
     assert!((sb - p.eps).abs() < 1e-9);
 
@@ -38,7 +45,7 @@ fn gamma_relaxation_is_not_the_ocssvm_dual() {
         p.eps
     );
     // ...which buys it a strictly lower objective (larger feasible set)
-    assert!(rel_stats.objective < 0.9 * out.stats.objective);
+    assert!(rel_stats.objective < 0.9 * report.stats.objective);
 }
 
 /// Erratum B: with a linear kernel, a slab exists only if the data's
@@ -52,10 +59,10 @@ fn linear_kernel_needs_radial_margin() {
 
     // origin-crossing band: R_min/R_max ≈ 0.26 < eps = 2/3 -> collapse
     let near = SlabConfig { offset: 0.8, ..Default::default() }.generate(300, 2);
-    let (_, out_near) = train_full(&near.x, Kernel::Linear, &p).unwrap();
+    let out_near = fit(&near.x, &p);
     // offset band: R_min/R_max ≈ 0.92 > 2/3 -> macroscopic slab
     let far = SlabConfig::default().generate(300, 2);
-    let (_, out_far) = train_full(&far.x, Kernel::Linear, &p).unwrap();
+    let out_far = fit(&far.x, &p);
 
     assert!(
         out_near.stats.objective < 1e-6,
@@ -95,8 +102,7 @@ fn kkt_case_table_is_errata_corrected() {
 #[test]
 fn paper_heuristic_must_be_restricted_to_violators() {
     let ds = SlabConfig::default().generate(200, 3);
-    let p = paper_params();
-    let (_, out) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
+    let out = fit(&ds.x, &paper_params()).dual;
     // the max |f̄| point at the optimum is interior (not a violator)
     let mut best_fbar = f64::MIN;
     let mut best_i = 0;
@@ -125,7 +131,7 @@ fn paper_heuristic_must_be_restricted_to_violators() {
 fn converged_state_has_zero_violators() {
     let ds = SlabConfig::default().generate(500, 4);
     let p = paper_params();
-    let (_, out) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
+    let out = fit(&ds.x, &p).dual;
     let m = out.gamma.len() as f64;
     let (lo, hi) = check_params(500, p.nu1, p.nu2, p.eps).unwrap();
     let scale = 1.0 + out.s.iter().map(|v| v.abs()).sum::<f64>() / m;
@@ -155,11 +161,11 @@ fn both_figure_parameter_sets_work() {
     let ds = SlabConfig::default().generate(400, 5);
     for (nu1, nu2, eps) in [(0.5, 0.01, 2.0 / 3.0), (0.2, 0.08, 0.5)] {
         let p = SmoParams { nu1, nu2, eps, ..Default::default() };
-        let (model, out) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
+        let report = fit(&ds.x, &p);
         assert!(
-            out.rho1 < out.rho2,
+            report.dual.rho1 < report.dual.rho2,
             "slab must be ordered for nu1={nu1} nu2={nu2} eps={eps}"
         );
-        assert!(model.width() > 0.0);
+        assert!(report.model.width() > 0.0);
     }
 }

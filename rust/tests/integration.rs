@@ -1,5 +1,6 @@
 //! Cross-module integration tests: data → solver → metrics → persistence
-//! → coordinator, composed the way downstream users compose them.
+//! → coordinator, composed the way downstream users compose them — all
+//! training through the unified `Trainer` API.
 
 use std::sync::Arc;
 
@@ -10,24 +11,33 @@ use slabsvm::kernel::Kernel;
 use slabsvm::metrics::roc_auc;
 use slabsvm::runtime::Engine;
 use slabsvm::solver::ocssvm::SlabModel;
-use slabsvm::solver::ocsvm_smo::{self, OcsvmParams};
-use slabsvm::solver::smo::{train_full, SmoParams};
 use slabsvm::solver::validate::certify;
+use slabsvm::solver::{SolverKind, Trainer};
 
 /// The full paper pipeline at Fig-1 scale: generate → train → certify →
 /// evaluate → persist → reload → identical predictions.
 #[test]
 fn paper_pipeline_fig1_scale() {
-    let params = SmoParams::default();
+    let trainer = Trainer::new(SolverKind::Smo).kernel(Kernel::Linear);
+    // certify against the exact constants the trainer lowered to
+    let smo = trainer.smo_params();
+    let (nu1, nu2, eps) = (smo.nu1, smo.nu2, smo.eps);
     let ds = SlabConfig::default().generate(1000, 42);
-    let (model, out) = train_full(&ds.x, Kernel::Linear, &params).unwrap();
+    let report = trainer.fit(&ds.x).unwrap();
+    let model = &report.model;
 
     // certify against an independently built Gram matrix
     let k = Kernel::Linear.gram(&ds.x, 4);
     certify(
-        &k, &out.alpha, &out.alpha_bar, out.rho1, out.rho2,
-        params.nu1, params.nu2, params.eps,
-        1e-2 * (1.0 + out.rho2.abs()),
+        &k,
+        &report.dual.alpha,
+        &report.dual.alpha_bar,
+        report.dual.rho1,
+        report.dual.rho2,
+        nu1,
+        nu2,
+        eps,
+        1e-2 * (1.0 + report.dual.rho2.abs()),
     )
     .unwrap();
 
@@ -59,11 +69,11 @@ fn csv_train_matches_in_memory() {
     let loaded = load_csv(&path, CsvOptions::default()).unwrap();
     assert_eq!(loaded.len(), 300);
 
-    let p = SmoParams::default();
-    let (m1, o1) = train_full(&ds.x, Kernel::Linear, &p).unwrap();
-    let (m2, o2) = train_full(&loaded.x, Kernel::Linear, &p).unwrap();
-    assert!((o1.stats.objective - o2.stats.objective).abs() < 1e-6);
-    assert!((m1.rho1 - m2.rho1).abs() < 1e-6);
+    let trainer = Trainer::new(SolverKind::Smo).kernel(Kernel::Linear);
+    let r1 = trainer.fit(&ds.x).unwrap();
+    let r2 = trainer.fit(&loaded.x).unwrap();
+    assert!((r1.stats.objective - r2.stats.objective).abs() < 1e-6);
+    assert!((r1.model.rho1 - r2.model.rho1).abs() < 1e-6);
     std::fs::remove_file(path).ok();
 }
 
@@ -71,8 +81,14 @@ fn csv_train_matches_in_memory() {
 #[test]
 fn rbf_handles_annulus() {
     let ds = annulus(3.0, 0.1, 400, 11);
-    let p = SmoParams { nu1: 0.1, nu2: 0.05, eps: 0.5, ..Default::default() };
-    let (rbf, _) = train_full(&ds.x, Kernel::Rbf { g: 0.8 }, &p).unwrap();
+    let rbf = Trainer::new(SolverKind::Smo)
+        .kernel(Kernel::Rbf { g: 0.8 })
+        .nu1(0.1)
+        .nu2(0.05)
+        .eps(0.5)
+        .fit(&ds.x)
+        .unwrap()
+        .model;
     // inside-ring and far-outside points must both be rejected
     let center = [0.0, 0.0];
     let far = [10.0, 10.0];
@@ -87,8 +103,14 @@ fn rbf_handles_annulus() {
 #[test]
 fn open_set_recognition_quality() {
     let sc = open_set(5, 6.0, 0.5, 500, 600, 23);
-    let p = SmoParams { nu1: 0.05, nu2: 0.05, eps: 0.5, ..Default::default() };
-    let (model, _) = train_full(&sc.train.x, Kernel::Rbf { g: 0.4 }, &p).unwrap();
+    let model = Trainer::new(SolverKind::Smo)
+        .kernel(Kernel::Rbf { g: 0.4 })
+        .nu1(0.05)
+        .nu2(0.05)
+        .eps(0.5)
+        .fit(&sc.train.x)
+        .unwrap()
+        .model;
     let cm = model.evaluate(&sc.eval);
     assert!(cm.mcc() > 0.7, "open-set MCC {:.3}", cm.mcc());
     let margins: Vec<f64> =
@@ -97,6 +119,7 @@ fn open_set_recognition_quality() {
 }
 
 /// OCSSVM vs OCSVM on two-sided anomalies: the slab's raison d'être.
+/// Both models train through the same API; only the SolverKind differs.
 #[test]
 fn slab_beats_single_plane_on_two_sided_anomalies() {
     // healthy band + anomalies on BOTH sides of it
@@ -104,18 +127,20 @@ fn slab_beats_single_plane_on_two_sided_anomalies() {
     let train = cfg.generate(600, 31);
     let eval = cfg.generate_eval(300, 300, 33);
 
-    let (slab, _) = train_full(
-        &train.x,
-        Kernel::Linear,
-        &SmoParams { nu1: 0.1, nu2: 0.05, eps: 0.5, ..Default::default() },
-    )
-    .unwrap();
-    let (plane, _) = ocsvm_smo::train(
-        &train.x,
-        Kernel::Linear,
-        &OcsvmParams { nu: 0.1, ..Default::default() },
-    )
-    .unwrap();
+    let slab = Trainer::new(SolverKind::Smo)
+        .kernel(Kernel::Linear)
+        .nu1(0.1)
+        .nu2(0.05)
+        .eps(0.5)
+        .fit(&train.x)
+        .unwrap()
+        .model;
+    let plane = Trainer::new(SolverKind::OcsvmSmo)
+        .kernel(Kernel::Linear)
+        .nu1(0.1)
+        .fit(&train.x)
+        .unwrap()
+        .model;
 
     let slab_mcc = slab.evaluate(&eval).mcc();
     let plane_mcc = plane.evaluate(&eval).mcc();
@@ -138,8 +163,7 @@ fn coordinator_end_to_end() {
     let id = c.submit_train(TrainRequest {
         name: "it".into(),
         dataset: ds,
-        kernel: Kernel::Linear,
-        params: SmoParams::default(),
+        trainer: Trainer::new(SolverKind::Smo).kernel(Kernel::Linear),
     });
     assert!(matches!(c.wait_job(id), Some(JobStatus::Done { .. })));
 
@@ -153,13 +177,30 @@ fn coordinator_end_to_end() {
     c.shutdown();
 }
 
+/// A heterogeneous registry: different solver kinds trained through the
+/// same coordinator interface, served side by side.
+#[test]
+fn coordinator_serves_heterogeneous_solvers() {
+    let c = Coordinator::start(Engine::Native, BatcherConfig::default(), 1);
+    let ds = SlabConfig::default().generate(200, 55);
+    for (name, kind) in [("smo", SolverKind::Smo), ("pg", SolverKind::Pg)] {
+        c.train_blocking(name, &ds, &Trainer::new(kind).kernel(Kernel::Linear))
+            .unwrap();
+    }
+    // the origin sits far off the slab band: every solver rejects it
+    let q = vec![vec![0.0, 0.0]];
+    assert_eq!(c.score("smo", q.clone()).unwrap().labels[0], -1);
+    assert_eq!(c.score("pg", q).unwrap().labels[0], -1);
+    c.shutdown();
+}
+
 /// Model hot-swap: re-registering a name bumps the version and new
 /// requests see the new model.
 #[test]
 fn coordinator_model_hot_swap() {
     let c = Coordinator::start(Engine::Native, BatcherConfig::default(), 1);
     let ds = SlabConfig::default().generate(200, 61);
-    c.train_blocking("hot", &ds, Kernel::Linear, &SmoParams::default())
+    c.train_blocking("hot", &ds, &Trainer::default().kernel(Kernel::Linear))
         .unwrap();
     let v1 = c.model("hot").unwrap();
 
@@ -167,8 +208,7 @@ fn coordinator_model_hot_swap() {
     c.train_blocking(
         "hot",
         &ds,
-        Kernel::Linear,
-        &SmoParams { nu1: 0.05, ..Default::default() },
+        &Trainer::default().kernel(Kernel::Linear).nu1(0.05),
     )
     .unwrap();
     let v2 = c.model("hot").unwrap();
@@ -184,7 +224,11 @@ fn coordinator_model_hot_swap() {
 #[test]
 fn concurrent_prediction_determinism() {
     let ds = SlabConfig::default().generate(300, 71);
-    let (model, _) = train_full(&ds.x, Kernel::Linear, &SmoParams::default()).unwrap();
+    let model = Trainer::new(SolverKind::Smo)
+        .kernel(Kernel::Linear)
+        .fit(&ds.x)
+        .unwrap()
+        .model;
     let model = Arc::new(model);
     let eval = SlabConfig::default().generate_eval(50, 50, 72);
     let eval = Arc::new(eval);

@@ -9,7 +9,8 @@ use std::sync::Arc;
 use slabsvm::data::synthetic::SlabConfig;
 use slabsvm::kernel::Kernel;
 use slabsvm::runtime::{Engine, Manifest, PjrtProxy};
-use slabsvm::solver::smo::{train_full, SmoParams};
+use slabsvm::solver::smo::SmoParams;
+use slabsvm::solver::{SolverKind, Trainer};
 
 fn artifacts() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -49,8 +50,11 @@ fn predict_equivalence_with_query_chunking() {
     let Some(dir) = artifacts() else { return };
     let pjrt = Engine::pjrt(&dir).unwrap();
     let train = SlabConfig::default().generate(500, 11);
-    let (model, _) =
-        train_full(&train.x, Kernel::Linear, &SmoParams::default()).unwrap();
+    let model = Trainer::new(SolverKind::Smo)
+        .kernel(Kernel::Linear)
+        .fit(&train.x)
+        .unwrap()
+        .model;
     let model = Arc::new(model);
 
     // 700 queries forces chunking over the q=256 bucket
@@ -80,7 +84,11 @@ fn kkt_sweep_artifact_matches_reference() {
     let proxy = PjrtProxy::start(&dir).unwrap();
     let ds = SlabConfig::default().generate(300, 21);
     let params = SmoParams::default();
-    let (_, out) = train_full(&ds.x, Kernel::Linear, &params).unwrap();
+    let out = Trainer::from_smo_params(params)
+        .kernel(Kernel::Linear)
+        .fit(&ds.x)
+        .unwrap()
+        .dual;
     let k = Kernel::Linear.gram(&ds.x, 4);
     let m = 300f64;
     let (lo, hi) = (-params.eps / (params.nu2 * m), 1.0 / (params.nu1 * m));

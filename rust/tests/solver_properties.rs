@@ -1,11 +1,13 @@
 //! Property-based tests over the solver invariants (in-tree `testing`
 //! harness; see DESIGN.md §5). Each property runs dozens of randomized
-//! cases over datasets, kernels and hyper-parameters.
+//! cases over datasets, kernels and hyper-parameters, training through
+//! the unified `Trainer` API.
 
 use slabsvm::data::synthetic::{Noise, SlabConfig};
 use slabsvm::kernel::Kernel;
-use slabsvm::solver::smo::{train_full, SmoParams};
+use slabsvm::solver::smo::SmoParams;
 use slabsvm::solver::validate::certify;
+use slabsvm::solver::{FitReport, Trainer};
 use slabsvm::testing::{forall, Gen};
 
 /// Random-but-valid problem instance.
@@ -34,12 +36,22 @@ fn gen_problem(g: &mut Gen) -> (slabsvm::data::Dataset, Kernel, SmoParams) {
     (ds, kernel, params)
 }
 
+fn fit(
+    ds: &slabsvm::data::Dataset,
+    kernel: Kernel,
+    params: &SmoParams,
+) -> Result<FitReport, String> {
+    Trainer::from_smo_params(*params)
+        .kernel(kernel)
+        .fit(&ds.x)
+        .map_err(|e| format!("train failed: {e}"))
+}
+
 #[test]
 fn prop_feasibility_and_certification() {
     forall("feasibility+kkt", 30, |g| {
         let (ds, kernel, params) = gen_problem(g);
-        let (_, out) = train_full(&ds.x, kernel, &params)
-            .map_err(|e| format!("train failed: {e}"))?;
+        let out = fit(&ds, kernel, &params)?.dual;
         // both sums conserved to fp accuracy
         let sa: f64 = out.alpha.iter().sum();
         let sb: f64 = out.alpha_bar.iter().sum();
@@ -77,8 +89,7 @@ fn prop_feasibility_and_certification() {
 fn prop_margins_match_gamma() {
     forall("margin-consistency", 20, |g| {
         let (ds, kernel, params) = gen_problem(g);
-        let (_, out) = train_full(&ds.x, kernel, &params)
-            .map_err(|e| format!("train failed: {e}"))?;
+        let out = fit(&ds, kernel, &params)?.dual;
         let k = kernel.gram(&ds.x, 4);
         for i in 0..out.gamma.len() {
             let si: f64 =
@@ -95,8 +106,7 @@ fn prop_margins_match_gamma() {
 fn prop_slab_ordered_and_nu_bounds() {
     forall("slab-order+nu", 20, |g| {
         let (ds, kernel, params) = gen_problem(g);
-        let (_, out) = train_full(&ds.x, kernel, &params)
-            .map_err(|e| format!("train failed: {e}"))?;
+        let out = fit(&ds, kernel, &params)?.dual;
         if out.rho1 > out.rho2 + 1e-9 {
             return Err(format!("rho1 {} > rho2 {}", out.rho1, out.rho2));
         }
@@ -128,9 +138,9 @@ fn prop_objective_independent_of_heuristic_and_seed() {
             Heuristic::RandomViolator,
         ] {
             let p = SmoParams { heuristic: h, seed: g.rng.next_u64(), ..params };
-            let (_, out) = train_full(&ds.x, kernel, &p)
-                .map_err(|e| format!("train failed ({h:?}): {e}"))?;
-            objs.push(out.stats.objective);
+            let report = fit(&ds, kernel, &p)
+                .map_err(|e| format!("({h:?}) {e}"))?;
+            objs.push(report.stats.objective);
         }
         let lo = objs.iter().cloned().fold(f64::MAX, f64::min);
         let hi = objs.iter().cloned().fold(f64::MIN, f64::max);
@@ -145,8 +155,7 @@ fn prop_objective_independent_of_heuristic_and_seed() {
 fn prop_model_persistence_is_lossless() {
     forall("persistence", 10, |g| {
         let (ds, kernel, params) = gen_problem(g);
-        let (model, _) = train_full(&ds.x, kernel, &params)
-            .map_err(|e| format!("train failed: {e}"))?;
+        let model = fit(&ds, kernel, &params)?.model;
         let json = model.to_json().to_string();
         let back = slabsvm::solver::ocssvm::SlabModel::from_json(
             &slabsvm::util::json::Json::parse(&json).unwrap(),
@@ -170,8 +179,7 @@ fn prop_scoring_translation_consistency() {
     // classify() and an explicitly recomputed decision.
     forall("decision-consistency", 10, |g| {
         let (ds, kernel, params) = gen_problem(g);
-        let (model, _) = train_full(&ds.x, kernel, &params)
-            .map_err(|e| format!("train failed: {e}"))?;
+        let model = fit(&ds, kernel, &params)?.model;
         for i in 0..ds.len().min(30) {
             let x = ds.x.row(i);
             let s = model.score(x);
@@ -179,6 +187,50 @@ fn prop_scoring_translation_consistency() {
             if manual != model.classify(x) {
                 return Err(format!("label mismatch at {i}"));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_report_certificate_matches_independent_certify() {
+    // the FitReport's built-in certificate (margin-based, O(m)) must
+    // agree with a from-scratch Gram-based certification
+    forall("certificate-consistency", 10, |g| {
+        let (ds, kernel, params) = gen_problem(g);
+        let report = fit(&ds, kernel, &params)?;
+        let k = kernel.gram(&ds.x, 4);
+        let m = ds.len() as f64;
+        let cls_tol = (1.0 / (params.nu1 * m))
+            .min(params.eps / (params.nu2 * m))
+            * 1e-6;
+        let full = slabsvm::solver::validate::report(
+            &k,
+            &report.dual.alpha,
+            &report.dual.alpha_bar,
+            report.dual.rho1,
+            report.dual.rho2,
+            params.nu1,
+            params.nu2,
+            params.eps,
+            cls_tol,
+        );
+        let fast = &report.certificate;
+        // margins drift by <= ~1e-8, so the two reports agree loosely
+        let scale = 1.0 + report.dual.rho2.abs();
+        if (full.max_kkt_violation - fast.max_kkt_violation).abs() > 1e-6 * scale {
+            return Err(format!(
+                "kkt: full {} vs fast {}",
+                full.max_kkt_violation, fast.max_kkt_violation
+            ));
+        }
+        if (full.objective - fast.objective).abs()
+            > 1e-6 * full.objective.abs().max(1.0)
+        {
+            return Err(format!(
+                "objective: full {} vs fast {}",
+                full.objective, fast.objective
+            ));
         }
         Ok(())
     });

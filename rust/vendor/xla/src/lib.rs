@@ -1,0 +1,146 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! Mirrors exactly the slice of the `xla` crate API that
+//! `slabsvm::runtime::pjrt` uses (client, compile, execute, literals),
+//! but with no XLA/PJRT shared library behind it: every runtime entry
+//! point returns an "unavailable" error. [`PjRtClient::cpu`] failing is
+//! the load-bearing behavior — `Engine::pjrt(..)` then errors cleanly at
+//! startup and every caller falls back to the native engine, which is
+//! what the benches, examples and the CLI already handle.
+//!
+//! On a machine with a real PJRT plugin, replace this path dependency
+//! with the actual `xla` bindings; no `slabsvm` source changes needed.
+
+use std::fmt;
+
+/// Stub error: carries the "runtime unavailable" message.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias (matches the real crate's `Result`).
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT runtime unavailable: built against the offline `xla` stub \
+         (no XLA/PJRT shared library in this environment)"
+            .to_string(),
+    ))
+}
+
+/// Host-side tensor value. Constructible (so padding helpers compile and
+/// run), but device transfer / execution always reports unavailable.
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    data: Vec<f32>,
+}
+
+impl Literal {
+    /// Build a rank-1 f32 literal from a host slice.
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { data: v.to_vec() }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    /// Copy the buffer out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    /// Split a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    /// Number of host elements currently stored.
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Parsed HLO module (stub: never constructible from a file).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer handle (stub: never produced).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Transfer the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle (stub: never produced).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute on the device; one `Vec<PjRtBuffer>` per output.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] is the stub's failure point:
+/// it errors immediately, so nothing downstream ever runs.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Construct the CPU client.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literals_are_constructible() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0]);
+        assert_eq!(l.element_count(), 3);
+        assert!(l.reshape(&[3, 1]).is_err());
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
