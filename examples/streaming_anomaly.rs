@@ -1,0 +1,101 @@
+//! Streaming anomaly detection: a slab model that never goes stale.
+//!
+//! A sensor emits an unbounded stream of readings. We keep a one-class
+//! slab model current with the `stream` subsystem: every reading is
+//! scored against the live model, absorbed by the incremental SMO
+//! (evicting the oldest reading once the window is full), and the
+//! refreshed model is hot-swapped into the coordinator's registry —
+//! scoring traffic through the batcher never stops. Mid-stream the
+//! sensor's baseline shifts (a mean-shift drift); the drift monitor
+//! trips, a full cascade retrain runs in the background, and the new
+//! model version starts serving while readings keep flowing.
+//!
+//! ```bash
+//! cargo run --release --example streaming_anomaly
+//! ```
+
+use slabsvm::coordinator::{BatcherConfig, Coordinator};
+use slabsvm::data::synthetic::{Drift, DriftSchedule, SlabConfig, SlabStream};
+use slabsvm::runtime::Engine;
+use slabsvm::stream::{DriftConfig, StreamConfig};
+
+fn main() -> slabsvm::Result<()> {
+    let fast = std::env::var("SLABSVM_BENCH_FAST").as_deref() == Ok("1");
+    let total = if fast { 600 } else { 2400 };
+    let shift_at = total / 2;
+
+    // the sensor: a noisy band that sags to a lower baseline mid-stream
+    let mut sensor = SlabStream::new(SlabConfig::default(), 2026).with_drift(
+        DriftSchedule {
+            drift: Drift::MeanShift { delta: -9.0 },
+            start: shift_at,
+            duration: 100,
+        },
+    );
+
+    let coordinator =
+        Coordinator::start(Engine::Native, BatcherConfig::default(), 2);
+    let mut session = coordinator.open_stream(
+        "sensor",
+        StreamConfig {
+            window: 256,
+            min_train: 96,
+            drift: DriftConfig {
+                recent: 96,
+                min_observations: 48,
+                outside_frac: 0.85,
+                rho_rel: 4.0,
+            },
+            ..Default::default()
+        },
+    );
+
+    println!("streaming {total} readings (baseline shift at {shift_at})…");
+    let t0 = std::time::Instant::now();
+    let mut anomalies = 0u64;
+    let mut last_version = 0u64;
+    for i in 0..total {
+        let reading = sensor.next_point();
+        // score through the serving path before absorbing — exactly what
+        // live traffic sees (skipped during model warmup)
+        if last_version > 0 {
+            let resp = coordinator.score("sensor", vec![reading.to_vec()])?;
+            if resp.labels[0] < 0 {
+                anomalies += 1;
+            }
+        }
+        let update = coordinator.stream_push(&mut session, &reading)?;
+        if let Some(v) = update.version {
+            last_version = v;
+        }
+        if let Some(id) = update.retrain_submitted {
+            println!(
+                "[{i}] drift detected ({:?}) → background retrain {id:?} \
+                 (scoring continues)",
+                update.drift
+            );
+        }
+        if let Some(v) = update.retrain_completed {
+            println!("[{i}] retrain landed: serving model v{v}");
+        }
+        if (i + 1) % (total / 6) == 0 {
+            let (r1, r2) = session.solver().rho();
+            println!(
+                "[{}] model v{last_version}  slab=[{r1:.2}, {r2:.2}]  \
+                 outside={:.2}",
+                i + 1,
+                session.drift_monitor().outside_fraction()
+            );
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "\n{total} readings in {dt:.2}s ({:.0} updates/s) — {anomalies} \
+         flagged anomalous, {} background retrains, final model v{last_version}",
+        total as f64 / dt,
+        session.retrains()
+    );
+    println!("coordinator: {}", coordinator.stats().summary());
+    coordinator.shutdown();
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Bench: **ST1** — incremental stream update vs full retrain per sample.
+//!
+//! The streaming subsystem's reason to exist, quantified: once the
+//! window is full, absorbing one sample via [`IncrementalSmo::push`]
+//! (rank-1 Gram maintenance + mass-conserving perturbation + a few
+//! warm-started repair sweeps) must be far cheaper than what a naive
+//! serving loop pays — a cold [`Trainer::fit`] on the whole window for
+//! every arriving sample (full Gram build + cold SMO solve).
+//!
+//! Reported per window size (and in the BENCHJSON line): median seconds
+//! per incremental update (`update_s`), median seconds per full retrain
+//! (`retrain_s`), and the ratio (`speedup` — the acceptance floor is
+//! 10× at window 2000).
+//!
+//! Run: `cargo bench --bench streaming`
+
+use slabsvm::bench::Bench;
+use slabsvm::data::synthetic::{SlabConfig, SlabStream};
+use slabsvm::kernel::Kernel;
+use slabsvm::linalg::median;
+use slabsvm::solver::{SolverKind, Trainer};
+use slabsvm::stream::{IncrementalConfig, IncrementalSmo};
+
+fn main() {
+    let fast = std::env::var("SLABSVM_BENCH_FAST").as_deref() == Ok("1");
+    let mut bench = if fast {
+        Bench::new(0, 1, 60.0)
+    } else {
+        Bench::new(0, 2, 300.0)
+    };
+    let windows: &[usize] = if fast { &[200] } else { &[500, 2000] };
+    let updates = if fast { 20 } else { 100 };
+    let retrains = if fast { 1 } else { 3 };
+
+    for &w in windows {
+        bench.run(&format!("stream-update-vs-retrain/w={w}"), || {
+            let mut stream = SlabStream::new(SlabConfig::default(), 1234);
+            let mut inc = IncrementalSmo::new(
+                Kernel::Linear,
+                w,
+                2,
+                IncrementalConfig::default(),
+            );
+            // fill to steady state (growth is the uninteresting phase)
+            for _ in 0..w {
+                inc.push(&stream.next_point()).expect("fill");
+            }
+
+            // incremental path: absorb one sample, window full
+            let mut update_times = Vec::with_capacity(updates);
+            for _ in 0..updates {
+                let x = stream.next_point();
+                let t0 = std::time::Instant::now();
+                inc.push(&x).expect("incremental update");
+                update_times.push(t0.elapsed().as_secs_f64());
+            }
+            let update_s = median(&update_times);
+
+            // baseline: what retrain-per-sample serving would pay for the
+            // same freshness — a cold fit on the current window contents
+            let trainer = Trainer::new(SolverKind::Smo).kernel(Kernel::Linear);
+            let mut retrain_times = Vec::with_capacity(retrains);
+            for _ in 0..retrains {
+                inc.push(&stream.next_point()).expect("advance window");
+                let snapshot = inc.window().matrix();
+                let t0 = std::time::Instant::now();
+                let report = trainer.fit(&snapshot).expect("full retrain");
+                retrain_times.push(t0.elapsed().as_secs_f64());
+                assert!(report.model.width() > 0.0);
+            }
+            let retrain_s = median(&retrain_times);
+
+            vec![
+                ("update_s".into(), update_s),
+                ("updates_per_s".into(), 1.0 / update_s.max(1e-12)),
+                ("retrain_s".into(), retrain_s),
+                ("speedup".into(), retrain_s / update_s.max(1e-12)),
+                (
+                    "repair_iters_total".into(),
+                    inc.repair_iterations() as f64,
+                ),
+            ]
+        });
+    }
+    bench.report("ST1 — incremental stream update vs full retrain per sample");
+}

@@ -176,16 +176,19 @@ fn dispatch_loop(
         );
     }
 
-    // Per-model pending groups. The flush deadline runs from when the
-    // group was OPENED by the dispatcher, not from request submission —
-    // under a burst the submission timestamps are already stale by the
-    // time requests are dequeued, and measuring from them collapses every
-    // flush to a singleton (no batching at exactly the moment batching
-    // pays the most).
+    // Per-model pending groups. The flush deadline runs from the OLDEST
+    // member request's submission time: a request's channel wait counts
+    // toward `max_wait_us`, so a group whose oldest request is over-age
+    // flushes on the very next dispatcher tick — below `max_batch`, and
+    // even if no further request ever arrives. Bursts still coalesce
+    // because the whole backlog is drained into groups *before* the
+    // deadline scan runs (stale timestamps flush the burst as one batch,
+    // not as singletons).
     struct Group {
         reqs: Vec<Request>,
         size: usize,
-        opened: Instant,
+        /// earliest `enqueued` among member requests
+        oldest: Instant,
     }
     let mut pending: HashMap<String, Group> = HashMap::new();
     let mut pending_count = 0usize;
@@ -224,9 +227,10 @@ fn dispatch_loop(
             let group = pending.entry(key.clone()).or_insert_with(|| Group {
                 reqs: Vec::new(),
                 size: 0,
-                opened: Instant::now(),
+                oldest: req.enqueued,
             });
             group.size += req.queries.len();
+            group.oldest = group.oldest.min(req.enqueued);
             group.reqs.push(req);
             pending_count += 1;
             if group.size >= cfg.max_batch {
@@ -242,9 +246,7 @@ fn dispatch_loop(
         let keys: Vec<String> = pending
             .iter()
             .filter(|(_, g)| {
-                shutting_down
-                    || now.duration_since(g.opened).as_micros() as u64
-                        >= cfg.max_wait_us
+                shutting_down || deadline_expired(g.oldest, now, cfg.max_wait_us)
             })
             .map(|(k, _)| k.clone())
             .collect();
@@ -265,6 +267,13 @@ fn dispatch_loop(
     for h in handles {
         let _ = h.join();
     }
+}
+
+/// Deadline policy: a pending group must flush once its oldest request
+/// has waited `max_wait_us` — measured from *submission*, so time spent
+/// in the dispatcher's channel counts too.
+fn deadline_expired(oldest: Instant, now: Instant, max_wait_us: u64) -> bool {
+    now.saturating_duration_since(oldest).as_micros() as u64 >= max_wait_us
 }
 
 /// Run one model-grouped batch end-to-end and fan results back out.
@@ -352,7 +361,7 @@ mod tests {
     use super::*;
     use crate::data::synthetic::SlabConfig;
     use crate::kernel::Kernel;
-    use crate::solver::smo::{train, SmoParams};
+    use crate::solver::{SolverKind, Trainer};
 
     fn setup(cfg: BatcherConfig) -> (DynamicBatcher, Arc<ModelRegistry>, Arc<ServiceStats>) {
         let registry = Arc::new(ModelRegistry::new());
@@ -369,7 +378,11 @@ mod tests {
 
     fn trained_model() -> crate::solver::ocssvm::SlabModel {
         let ds = SlabConfig::default().generate(100, 91);
-        train(&ds.x, Kernel::Linear, &SmoParams::default()).unwrap()
+        Trainer::new(SolverKind::Smo)
+            .kernel(Kernel::Linear)
+            .fit(&ds.x)
+            .unwrap()
+            .model
     }
 
     #[test]
@@ -408,6 +421,43 @@ mod tests {
         let rx = b.submit("m", vec![vec![20.0, 20.0]]);
         let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.labels.len(), 1);
+        assert_eq!(stats.batches.get(), 1);
+        b.shutdown();
+    }
+
+    #[test]
+    fn deadline_counts_queue_wait_not_group_open() {
+        // the policy itself: a request that already waited longer than
+        // max_wait_us (e.g. in the dispatcher's channel) must flush on
+        // the next tick, regardless of when its group was opened
+        let now = Instant::now();
+        let waited = now - Duration::from_micros(10_000);
+        assert!(deadline_expired(waited, now, 5_000));
+        assert!(deadline_expired(waited, now, 10_000));
+        assert!(!deadline_expired(now, now, 5_000));
+        // clock skew / same-instant never underflows
+        assert!(!deadline_expired(now + Duration::from_micros(50), now, 5_000));
+    }
+
+    #[test]
+    fn overdue_group_below_max_batch_flushes_without_new_arrivals() {
+        // regression: a group below max_batch whose oldest request is
+        // past max_wait_us must be flushed by the dispatcher's own tick —
+        // no follow-up request may be required to unblock it
+        let (b, registry, stats) = setup(BatcherConfig {
+            max_batch: 1_000_000, // size trigger unreachable
+            max_wait_us: 20_000,
+            queue_cap: 1024,
+        });
+        registry.insert("m", trained_model());
+        let rx = b.submit("m", vec![vec![20.0, 20.0]]);
+        // no further submissions: only the deadline tick can flush
+        let resp = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("deadline tick never flushed the group")
+            .unwrap();
+        assert_eq!(resp.labels.len(), 1);
+        assert!(resp.latency >= Duration::from_micros(20_000));
         assert_eq!(stats.batches.get(), 1);
         b.shutdown();
     }

@@ -10,6 +10,13 @@
 //!   their model on completion;
 //! * [`stats`] — latency histograms + counters for every stage.
 //!
+//! Streaming (the L4 layer): [`Coordinator::open_stream`] /
+//! [`Coordinator::stream_push`] drive a
+//! [`crate::stream::StreamSession`] — each absorbed sample hot-swaps
+//! the published model version in the registry, and drift trips
+//! escalate a background cascade retrain through the same train queue
+//! (experiment ST1, `rust/benches/streaming.rs`).
+//!
 //! Everything is std-thread based (no async runtime in the vendored
 //! crate set); channels are `std::sync::mpsc`, shared state is behind
 //! `RwLock`/`Mutex`. The binary's `serve` subcommand drives this with a
@@ -30,12 +37,27 @@ use crate::error::Error;
 use crate::runtime::Engine;
 use crate::solver::api::Trainer;
 use crate::solver::ocssvm::SlabModel;
+use crate::stream::{DriftEvent, StreamConfig, StreamSession};
 use crate::Result;
 
 pub use batcher::{BatcherConfig, DynamicBatcher, ScoreResponse};
 pub use jobs::{JobId, JobStatus, TrainQueue, TrainRequest};
 pub use registry::ModelRegistry;
 pub use stats::{Histogram, ServiceStats};
+
+/// What one [`Coordinator::stream_push`] did.
+#[derive(Debug, Default)]
+pub struct StreamUpdate {
+    /// registry version the refreshed model was hot-swapped under
+    /// (None during session warmup)
+    pub version: Option<u64>,
+    /// drift verdict for this sample
+    pub drift: Option<DriftEvent>,
+    /// background cascade retrain submitted on this push
+    pub retrain_submitted: Option<JobId>,
+    /// a previously submitted retrain completed; its registry version
+    pub retrain_completed: Option<u64>,
+}
 
 /// The assembled service.
 pub struct Coordinator {
@@ -119,6 +141,68 @@ impl Coordinator {
             .map_err(|_| Error::Coordinator("batcher shut down".into()))?
     }
 
+    /// Open a streaming session publishing under `name`. The session is
+    /// handed back to the caller (it is single-writer state); every
+    /// [`Coordinator::stream_push`] hot-swaps the published model, so
+    /// concurrent scorers via [`Coordinator::score`] always see a
+    /// complete model at a monotonically increasing version.
+    pub fn open_stream(&self, name: &str, cfg: StreamConfig) -> StreamSession {
+        StreamSession::new(name, cfg)
+    }
+
+    /// Absorb one streamed sample: reconcile any finished background
+    /// retrain, update the session's model incrementally, hot-swap the
+    /// registry entry, and escalate to a background cascade retrain when
+    /// the drift monitor trips. Scoring through the batcher is never
+    /// blocked — the retrain runs on the [`TrainQueue`] thread and
+    /// registers its model exactly like any other training job.
+    pub fn stream_push(
+        &self,
+        session: &mut StreamSession,
+        x: &[f64],
+    ) -> Result<StreamUpdate> {
+        let mut update = StreamUpdate::default();
+        if let Some(id) = session.pending_retrain() {
+            match self.job_status(id) {
+                Some(JobStatus::Done { version, .. }) => {
+                    // Baseline on the retrained model only if it is still
+                    // the registered entry; an incremental publish may
+                    // have hot-swapped over it between Done being set and
+                    // this reconcile, in which case the session's own
+                    // freshest offsets are the coherent reference.
+                    let rho = match self.registry.get_versioned(session.name())
+                    {
+                        Some((m, v)) if v == version => (m.rho1, m.rho2),
+                        _ => session.solver().rho(),
+                    };
+                    session.retrain_finished(Some(rho));
+                    update.retrain_completed = Some(version);
+                }
+                Some(JobStatus::Failed { .. }) | None => {
+                    // drop the marker; the next drift trip resubmits
+                    session.retrain_finished(None);
+                }
+                _ => {}
+            }
+        }
+        let absorbed = session.absorb(x)?;
+        update.drift = absorbed.drift;
+        if let Some(model) = absorbed.model {
+            update.version =
+                Some(self.registry.insert(session.name(), model));
+        }
+        if absorbed.retrain_wanted {
+            let id = self.submit_train(TrainRequest {
+                name: session.name().to_string(),
+                dataset: session.snapshot(),
+                trainer: session.retrain_trainer(),
+            });
+            session.retrain_submitted(id);
+            update.retrain_submitted = Some(id);
+        }
+        Ok(update)
+    }
+
     pub fn stats(&self) -> &ServiceStats {
         &self.stats
     }
@@ -198,6 +282,30 @@ mod tests {
         let status = c.wait_job(id).unwrap();
         assert!(matches!(status, JobStatus::Failed { .. }), "{status:?}");
         assert!(c.model("bad").is_none());
+        c.shutdown();
+    }
+
+    #[test]
+    fn stream_push_publishes_and_versions() {
+        let c = quick_coordinator();
+        let mut s = c.open_stream(
+            "live",
+            StreamConfig { window: 48, min_train: 24, ..Default::default() },
+        );
+        let ds = SlabConfig::default().generate(60, 87);
+        let mut last_version = 0;
+        for i in 0..60 {
+            let u = c.stream_push(&mut s, ds.x.row(i)).unwrap();
+            if let Some(v) = u.version {
+                assert!(v > last_version, "version must be monotone");
+                last_version = v;
+            }
+        }
+        // warmup ends at min_train; every later push hot-swaps a version
+        assert_eq!(last_version, 60 - 24 + 1);
+        // the streamed model serves through the batcher like any other
+        let resp = c.score("live", vec![ds.x.row(0).to_vec()]).unwrap();
+        assert_eq!(resp.labels.len(), 1);
         c.shutdown();
     }
 

@@ -39,6 +39,16 @@ impl ModelRegistry {
         self.inner.read().unwrap().get(name).map(|e| Arc::clone(&e.model))
     }
 
+    /// Model + its version in one consistent read (a `get` followed by a
+    /// `version` can straddle a swap; this cannot).
+    pub fn get_versioned(&self, name: &str) -> Option<(Arc<SlabModel>, u64)> {
+        self.inner
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|e| (Arc::clone(&e.model), e.version))
+    }
+
     pub fn version(&self, name: &str) -> Option<u64> {
         self.inner.read().unwrap().get(name).map(|e| e.version)
     }
@@ -97,6 +107,103 @@ mod tests {
         assert!(r.remove("x"));
         assert!(!r.remove("x"));
         assert!(r.is_empty());
+    }
+
+    /// Model whose internal consistency encodes its version: a reader
+    /// that ever sees `gamma[0] != rho1` or `rho2 != rho1 + 1` observed
+    /// a torn model.
+    fn versioned_model(v: u64) -> SlabModel {
+        SlabModel {
+            x_sv: Matrix::from_rows(&[&[v as f64]]),
+            gamma: vec![v as f64],
+            rho1: v as f64,
+            rho2: v as f64 + 1.0,
+            kernel: Kernel::Linear,
+        }
+    }
+
+    #[test]
+    fn hot_swap_is_atomic_and_versions_are_monotone() {
+        use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+        let r = Arc::new(ModelRegistry::new());
+        r.insert("hot", versioned_model(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let readers_up = Arc::new(AtomicU64::new(0));
+        let reads = Arc::new(AtomicU64::new(0));
+
+        // concurrent scorers: every observed model must be internally
+        // consistent and versions must never go backwards
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let r = Arc::clone(&r);
+                let stop = Arc::clone(&stop);
+                let readers_up = Arc::clone(&readers_up);
+                let reads = Arc::clone(&reads);
+                std::thread::spawn(move || {
+                    let mut last = 0u64;
+                    let mut seen = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let (m, v) = r.get_versioned("hot").expect("present");
+                        assert_eq!(
+                            m.gamma[0], m.rho1,
+                            "torn model at version {v}"
+                        );
+                        assert_eq!(m.rho2, m.rho1 + 1.0, "torn model");
+                        assert_eq!(m.x_sv.get(0, 0), m.rho1, "torn model");
+                        assert!(
+                            v >= last,
+                            "version went backwards: {v} after {last}"
+                        );
+                        last = v;
+                        seen += 1;
+                        reads.fetch_add(1, Ordering::SeqCst);
+                        if seen == 1 {
+                            readers_up.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                    seen
+                })
+            })
+            .collect();
+
+        // don't start swapping until every reader has observed the map
+        // at least once — otherwise a loaded machine can finish all the
+        // swaps before any reader is scheduled and the check is vacuous
+        while readers_up.load(Ordering::SeqCst) < 4 {
+            std::thread::yield_now();
+        }
+        // writer: hundreds of hot swaps
+        let before_swaps = reads.load(Ordering::SeqCst);
+        for v in 1..=400u64 {
+            let got = r.insert("hot", versioned_model(v));
+            assert_eq!(got, v + 1); // insert at construction was version 1
+        }
+        // don't stop until at least one read happened during/after the
+        // swaps — otherwise starved readers make the torn-model checks
+        // vacuous (they'd only ever have seen the pre-swap state)
+        while reads.load(Ordering::SeqCst) <= before_swaps {
+            std::thread::yield_now();
+        }
+        stop.store(true, Ordering::Relaxed);
+        for h in readers {
+            h.join().unwrap();
+        }
+        assert!(
+            reads.load(Ordering::SeqCst) > before_swaps,
+            "readers never overlapped the swaps"
+        );
+        assert_eq!(r.version("hot"), Some(401));
+    }
+
+    #[test]
+    fn get_versioned_pairs_model_with_its_version() {
+        let r = ModelRegistry::new();
+        assert!(r.get_versioned("x").is_none());
+        r.insert("x", versioned_model(7));
+        let (m, v) = r.get_versioned("x").unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(m.rho1, 7.0);
     }
 
     #[test]

@@ -105,17 +105,22 @@ impl SlabConfig {
         ]
     }
 
+    /// One training draw: on-band, or off-band with probability
+    /// `contamination`.
+    fn sample_train(&self, rng: &mut Rng) -> [f64; 2] {
+        if rng.uniform() < self.contamination {
+            self.sample_off(rng)
+        } else {
+            self.sample_on(rng)
+        }
+    }
+
     /// One-class training set of `m` points (contaminated per config).
     pub fn generate(&self, m: usize, seed: u64) -> Dataset {
         let mut rng = Rng::new(seed);
         let mut data = Vec::with_capacity(m * 2);
         for _ in 0..m {
-            let p = if rng.uniform() < self.contamination {
-                self.sample_off(&mut rng)
-            } else {
-                self.sample_on(&mut rng)
-            };
-            data.extend_from_slice(&p);
+            data.extend_from_slice(&self.sample_train(&mut rng));
         }
         Dataset::unlabeled(Matrix::from_vec(m, 2, data))
     }
@@ -142,6 +147,109 @@ impl SlabConfig {
     pub fn perp_coord(&self, p: &[f64]) -> f64 {
         let n = self.normal();
         p[0] * n[0] + p[1] * n[1]
+    }
+}
+
+// --------------------------------------------------------------- drift
+
+/// How a [`SlabStream`]'s band evolves over a span of the stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Drift {
+    /// the band's perpendicular offset moves by `delta` (mean shift)
+    MeanShift { delta: f64 },
+    /// the perpendicular spread is multiplied by `factor` (variance
+    /// inflation; `factor < 1` deflates)
+    VarianceInflation { factor: f64 },
+    /// the band's direction rotates by `delta` radians (gradual rotation)
+    Rotation { delta: f64 },
+}
+
+/// One drift episode: ramps linearly from `start` over `duration`
+/// samples, then stays fully applied (`duration = 0` is a step change).
+#[derive(Clone, Copy, Debug)]
+pub struct DriftSchedule {
+    pub drift: Drift,
+    /// sample index the ramp begins at
+    pub start: usize,
+    /// samples the ramp spans
+    pub duration: usize,
+}
+
+impl DriftSchedule {
+    /// Ramp progress in [0, 1] at sample `t`.
+    fn progress(&self, t: usize) -> f64 {
+        if t < self.start {
+            0.0
+        } else if self.duration == 0 || t >= self.start + self.duration {
+            1.0
+        } else {
+            (t - self.start) as f64 / self.duration as f64
+        }
+    }
+}
+
+/// Unbounded, seeded-deterministic sample stream over an evolving slab
+/// band — the workload generator for the streaming subsystem (stream
+/// CLI, `benches/streaming.rs`, the drift E2E tests). Two streams built
+/// with the same base config, schedules and seed produce identical
+/// samples.
+pub struct SlabStream {
+    base: SlabConfig,
+    schedules: Vec<DriftSchedule>,
+    rng: Rng,
+    t: usize,
+}
+
+impl SlabStream {
+    pub fn new(base: SlabConfig, seed: u64) -> SlabStream {
+        SlabStream { base, schedules: Vec::new(), rng: Rng::new(seed), t: 0 }
+    }
+
+    /// Add a drift episode (builder style; episodes compose additively).
+    pub fn with_drift(mut self, schedule: DriftSchedule) -> SlabStream {
+        self.schedules.push(schedule);
+        self
+    }
+
+    /// Samples drawn so far.
+    pub fn position(&self) -> usize {
+        self.t
+    }
+
+    /// The effective band configuration at sample `t`, all scheduled
+    /// drifts applied at their ramp progress.
+    pub fn config_at(&self, t: usize) -> SlabConfig {
+        let mut cfg = self.base.clone();
+        for s in &self.schedules {
+            let p = s.progress(t);
+            if p == 0.0 {
+                continue;
+            }
+            match s.drift {
+                Drift::MeanShift { delta } => cfg.offset += p * delta,
+                Drift::VarianceInflation { factor } => {
+                    cfg.spread *= 1.0 + p * (factor - 1.0)
+                }
+                Drift::Rotation { delta } => cfg.angle += p * delta,
+            }
+        }
+        cfg
+    }
+
+    /// Draw the next sample from the band as it stands right now.
+    pub fn next_point(&mut self) -> [f64; 2] {
+        let cfg = self.config_at(self.t);
+        self.t += 1;
+        cfg.sample_train(&mut self.rng)
+    }
+
+    /// Draw `n` samples into a matrix (row per sample).
+    pub fn take(&mut self, n: usize) -> Matrix {
+        let mut data = Vec::with_capacity(n * 2);
+        for _ in 0..n {
+            data.extend_from_slice(&self.next_point());
+        }
+        Matrix::from_vec(n, 2, data)
     }
 }
 
@@ -283,6 +391,104 @@ mod tests {
             .count();
         let rate = off as f64 / ds.len() as f64;
         assert!((rate - 0.2).abs() < 0.03, "contamination rate {rate}");
+    }
+
+    #[test]
+    fn slab_stream_is_deterministic_and_matches_base_before_drift() {
+        let mk = || {
+            SlabStream::new(SlabConfig::default(), 77).with_drift(DriftSchedule {
+                drift: Drift::MeanShift { delta: -10.0 },
+                start: 50,
+                duration: 20,
+            })
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..120 {
+            assert_eq!(a.next_point(), b.next_point());
+        }
+        assert_eq!(a.position(), 120);
+    }
+
+    #[test]
+    fn mean_shift_ramps_then_holds() {
+        let s = SlabStream::new(SlabConfig::default(), 1).with_drift(
+            DriftSchedule {
+                drift: Drift::MeanShift { delta: -8.0 },
+                start: 100,
+                duration: 40,
+            },
+        );
+        let base = SlabConfig::default().offset;
+        assert_eq!(s.config_at(0).offset, base);
+        assert_eq!(s.config_at(99).offset, base);
+        let mid = s.config_at(120).offset; // halfway through the ramp
+        assert!((mid - (base - 4.0)).abs() < 1e-12, "mid={mid}");
+        assert_eq!(s.config_at(140).offset, base - 8.0);
+        assert_eq!(s.config_at(10_000).offset, base - 8.0);
+    }
+
+    #[test]
+    fn variance_inflation_scales_perpendicular_spread() {
+        let s = SlabStream::new(
+            SlabConfig { contamination: 0.0, ..Default::default() },
+            2,
+        )
+        .with_drift(
+            DriftSchedule {
+                drift: Drift::VarianceInflation { factor: 3.0 },
+                start: 0,
+                duration: 0, // step
+            },
+        );
+        let cfg = s.config_at(5);
+        assert!((cfg.spread - SlabConfig::default().spread * 3.0).abs() < 1e-12);
+        // drawn points really spread wider (perp sd ≈ 3x base)
+        let mut s = s;
+        let pts = s.take(3000);
+        let perps: Vec<f64> =
+            (0..3000).map(|i| cfg.perp_coord(pts.row(i))).collect();
+        let sd = crate::linalg::std_dev(&perps);
+        assert!((sd - cfg.spread).abs() < 0.1, "sd={sd} want≈{}", cfg.spread);
+    }
+
+    #[test]
+    fn rotation_turns_the_band_direction() {
+        let s = SlabStream::new(
+            SlabConfig { contamination: 0.0, ..Default::default() },
+            3,
+        )
+        .with_drift(DriftSchedule {
+            drift: Drift::Rotation { delta: 0.3 },
+            start: 0,
+            duration: 0,
+        });
+        let rotated = s.config_at(1);
+        assert!((rotated.angle - (0.45 + 0.3)).abs() < 1e-12);
+        // points concentrate around the ROTATED band's center line
+        let mut s = s;
+        let pts = s.take(2000);
+        let perps: Vec<f64> =
+            (0..2000).map(|i| rotated.perp_coord(pts.row(i))).collect();
+        let mean = crate::linalg::mean(&perps);
+        assert!((mean - rotated.offset).abs() < 0.05, "mean perp {mean}");
+    }
+
+    #[test]
+    fn composed_drifts_apply_additively() {
+        let s = SlabStream::new(SlabConfig::default(), 4)
+            .with_drift(DriftSchedule {
+                drift: Drift::MeanShift { delta: 2.0 },
+                start: 0,
+                duration: 0,
+            })
+            .with_drift(DriftSchedule {
+                drift: Drift::VarianceInflation { factor: 2.0 },
+                start: 0,
+                duration: 0,
+            });
+        let cfg = s.config_at(1);
+        assert!((cfg.offset - 22.0).abs() < 1e-12);
+        assert!((cfg.spread - 0.5).abs() < 1e-12);
     }
 
     #[test]

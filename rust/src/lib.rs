@@ -53,6 +53,19 @@
 //! (`.warm_start(n)`, `.cascade(shards, rounds)`,
 //! `.cache_rows(cap, policy)`) that compose on top.
 //!
+//! For unbounded sample streams the [`stream`] layer keeps a model
+//! current without batch retrains — incremental/decremental SMO over a
+//! sliding window, with drift-triggered background retrains:
+//!
+//! ```no_run
+//! use slabsvm::stream::{StreamConfig, StreamSession};
+//! let mut session = StreamSession::new("live", StreamConfig::default());
+//! let absorbed = session.absorb(&[20.0, 3.0]).unwrap(); // one sample in
+//! let _model = absorbed.model; // fresh model, once warm
+//! // (drive through Coordinator::open_stream/stream_push to hot-swap
+//! //  the served model version and escalate retrains on drift)
+//! ```
+//!
 //! The old per-module free functions (`solver::smo::train`,
 //! `solver::qp_pg::train`, …) still work but are `#[deprecated]` shims
 //! over this API; see CHANGES.md for the deprecation path.
@@ -72,6 +85,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod runtime;
 pub mod solver;
+pub mod stream;
 pub mod testing;
 pub mod util;
 

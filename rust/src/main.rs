@@ -42,6 +42,7 @@ fn main() -> ExitCode {
         "figures" => cmd_figures(rest),
         "bench" => cmd_bench(rest),
         "serve" => cmd_serve(rest),
+        "stream" => cmd_stream(rest),
         "sweep" => cmd_sweep(rest),
         "info" => cmd_info(rest),
         "--help" | "-h" | "help" => {
@@ -68,6 +69,7 @@ fn usage() -> String {
      \tfigures  regenerate paper Fig. 1 / Fig. 2 (CSV + SVG)\n\
      \tbench    print paper tables: --which table1|qp|heuristics\n\
      \tserve    run the serving coordinator on a synthetic workload\n\
+     \tstream   online learning over a synthetic drifting stream\n\
      \tsweep    k-fold cross-validated hyper-parameter grid search\n\
      \tinfo     artifact manifest + engine diagnostics\n"
         .to_string()
@@ -521,6 +523,148 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         ok as f64 / dt
     );
     println!("stats: {}", c.stats().summary());
+    c.shutdown();
+    Ok(())
+}
+
+// ------------------------------------------------------------------ stream
+
+fn cmd_stream(args: &[String]) -> Result<()> {
+    use slabsvm::data::synthetic::{Drift, DriftSchedule, SlabStream};
+    use slabsvm::stream::StreamConfig;
+
+    let mut spec = vec![
+        ArgSpec::opt("points", "3000", "stream length (samples)"),
+        ArgSpec::opt("window", "512", "sliding-window capacity"),
+        ArgSpec::opt("min-train", "128", "samples before the first publish"),
+        ArgSpec::opt("nu1", "0.5", "nu1 (lower-plane outlier bound)"),
+        ArgSpec::opt("nu2", "0.01", "nu2 (upper-plane violator bound)"),
+        ArgSpec::opt("eps", "0.6666666666666666", "eps (upper-plane mass)"),
+        ArgSpec::opt(
+            "drift",
+            "mean-shift",
+            "injected drift: none|mean-shift|variance|rotation",
+        ),
+        ArgSpec::opt("drift-at", "1500", "sample index the drift ramp starts"),
+        ArgSpec::opt("drift-len", "200", "ramp length in samples (0 = step)"),
+        ArgSpec::opt(
+            "drift-amount",
+            "-8.0",
+            "drift magnitude (offset delta | spread factor | radians)",
+        ),
+        ArgSpec::opt("seed", "42", "stream seed"),
+        ArgSpec::opt("report-every", "500", "progress line cadence"),
+    ];
+    spec.extend(kernel_args());
+    if args.iter().any(|a| a == "--help") {
+        println!(
+            "{}",
+            render_help(
+                "stream",
+                "incremental online learning on a drifting synthetic stream",
+                &spec
+            )
+        );
+        return Ok(());
+    }
+    let p = parse_args(&spec, args)?;
+    let kernel = parse_kernel_from(&p)?;
+    let points = p.get_usize("points")?;
+    let report_every = p.get_usize("report-every")?.max(1);
+
+    let mut cfg = StreamConfig {
+        kernel,
+        dim: 2,
+        window: p.get_usize("window")?,
+        min_train: p.get_usize("min-train")?,
+        ..Default::default()
+    };
+    cfg.incremental.smo.nu1 = p.get_f64("nu1")?;
+    cfg.incremental.smo.nu2 = p.get_f64("nu2")?;
+    cfg.incremental.smo.eps = p.get_f64("eps")?;
+
+    let amount = p.get_f64("drift-amount")?;
+    let drift = match p.get_str("drift")? {
+        "none" => None,
+        "mean-shift" => Some(Drift::MeanShift { delta: amount }),
+        "variance" => Some(Drift::VarianceInflation { factor: amount.abs() }),
+        "rotation" => Some(Drift::Rotation { delta: amount }),
+        other => {
+            return Err(Error::config(format!(
+                "unknown drift {other:?} (expected none|mean-shift|variance|rotation)"
+            )))
+        }
+    };
+    let mut stream = SlabStream::new(
+        SlabConfig::default(),
+        p.get_usize("seed")? as u64,
+    );
+    if let Some(d) = drift {
+        stream = stream.with_drift(DriftSchedule {
+            drift: d,
+            start: p.get_usize("drift-at")?,
+            duration: p.get_usize("drift-len")?,
+        });
+        println!(
+            "drift: {d:?} ramping from sample {} over {}",
+            p.get_usize("drift-at")?,
+            p.get_usize("drift-len")?
+        );
+    }
+
+    let c = Coordinator::start(Engine::Native, BatcherConfig::default(), 2);
+    let mut session = c.open_stream("stream", cfg);
+    println!(
+        "streaming {points} samples through window={} min_train={} kernel={}",
+        session.config().window,
+        session.config().min_train,
+        kernel.family()
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut last_version = 0u64;
+    let mut drift_samples = 0u64;
+    let mut retrains_done = 0u64;
+    for i in 0..points {
+        let x = stream.next_point();
+        let u = c.stream_push(&mut session, &x)?;
+        if let Some(v) = u.version {
+            last_version = v;
+        }
+        if u.drift.is_some() {
+            drift_samples += 1;
+        }
+        if let Some(id) = u.retrain_submitted {
+            println!(
+                "[{i}] drift {:?} → background cascade retrain {id:?}",
+                u.drift
+            );
+        }
+        if let Some(v) = u.retrain_completed {
+            retrains_done += 1;
+            println!("[{i}] background retrain landed → model v{v}");
+        }
+        if (i + 1) % report_every == 0 {
+            let (r1, r2) = session.solver().rho();
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "[{}] v{last_version} rho=[{r1:.3}, {r2:.3}] outside={:.2} \
+                 {:.0} updates/s",
+                i + 1,
+                session.drift_monitor().outside_fraction(),
+                (i + 1) as f64 / dt
+            );
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "done: {points} updates in {dt:.2}s ({:.0} updates/s), final model \
+         v{last_version}, {} drift-flagged samples, {retrains_done} background \
+         retrains, {} total repair iterations",
+        points as f64 / dt,
+        drift_samples,
+        session.solver().repair_iterations()
+    );
     c.shutdown();
     Ok(())
 }

@@ -1,0 +1,216 @@
+//! Distribution-drift detection for streamed slab models.
+//!
+//! Two complementary signals, both O(1) per sample:
+//!
+//! * **outside fraction** — the rolling fraction of arriving samples
+//!   whose margin lands *outside* the current slab `[ρ1, ρ2]`, scored
+//!   *before* the sample is absorbed. On in-distribution traffic this
+//!   hovers near its construction value ν₁ + ν₂ (the ν-property), so the
+//!   threshold is an absolute fraction comfortably above that;
+//! * **ρ displacement** — how far the incrementally tracked `(ρ1, ρ2)`
+//!   have wandered from the baseline snapshot taken at the last full
+//!   retrain, measured in units of the baseline slab width. The
+//!   incremental solver *adapts* to drift, so its offsets moving is
+//!   itself evidence the data moved.
+//!
+//! When either signal trips, [`DriftMonitor::check`] yields a
+//! [`DriftEvent`]; the owning [`crate::stream::StreamSession`] escalates
+//! to a full cascade retrain on the background
+//! [`crate::coordinator::TrainQueue`] and re-baselines once the new
+//! model lands.
+
+/// Drift-detection thresholds.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftConfig {
+    /// samples in the rolling outside-fraction window
+    pub recent: usize,
+    /// minimum observations before any verdict (warmup guard)
+    pub min_observations: usize,
+    /// trip when the rolling outside fraction reaches this (absolute;
+    /// pick it above the model's natural ν₁ + ν₂ outside rate)
+    pub outside_frac: f64,
+    /// trip when |ρ − ρ_baseline| exceeds this multiple of the baseline
+    /// slab width, for either plane
+    pub rho_rel: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            recent: 128,
+            min_observations: 64,
+            outside_frac: 0.9,
+            rho_rel: 1.0,
+        }
+    }
+}
+
+/// What tripped, with the observed magnitude.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DriftEvent {
+    /// rolling outside-the-slab fraction reached `frac`
+    OutsideFraction { frac: f64 },
+    /// a slab offset moved `rel` baseline-widths from its snapshot
+    RhoDisplacement { rel: f64 },
+}
+
+/// Rolling drift state; owned per stream session.
+pub struct DriftMonitor {
+    cfg: DriftConfig,
+    /// ring of outside/inside verdicts for the last `recent` samples
+    ring: Vec<bool>,
+    head: usize,
+    filled: usize,
+    outside: usize,
+    observed: u64,
+    baseline: Option<(f64, f64)>,
+}
+
+impl DriftMonitor {
+    pub fn new(cfg: DriftConfig) -> DriftMonitor {
+        assert!(cfg.recent > 0, "rolling window must be non-empty");
+        DriftMonitor {
+            cfg,
+            ring: vec![false; cfg.recent],
+            head: 0,
+            filled: 0,
+            outside: 0,
+            observed: 0,
+            baseline: None,
+        }
+    }
+
+    pub fn config(&self) -> &DriftConfig {
+        &self.cfg
+    }
+
+    /// Snapshot `(ρ1, ρ2)` as the new reference (call at first fit and
+    /// after every completed retrain). Also clears the rolling window so
+    /// pre-retrain evidence cannot immediately re-trip.
+    pub fn rebaseline(&mut self, rho1: f64, rho2: f64) {
+        self.baseline = Some((rho1, rho2));
+        self.ring.iter_mut().for_each(|b| *b = false);
+        self.head = 0;
+        self.filled = 0;
+        self.outside = 0;
+        self.observed = 0;
+    }
+
+    pub fn baseline(&self) -> Option<(f64, f64)> {
+        self.baseline
+    }
+
+    /// Record one arriving sample's margin vs the current slab.
+    pub fn observe(&mut self, score: f64, rho1: f64, rho2: f64) {
+        let out = score < rho1 || score > rho2;
+        if self.filled == self.ring.len() {
+            if self.ring[self.head] {
+                self.outside -= 1;
+            }
+        } else {
+            self.filled += 1;
+        }
+        self.ring[self.head] = out;
+        if out {
+            self.outside += 1;
+        }
+        self.head = (self.head + 1) % self.ring.len();
+        self.observed += 1;
+    }
+
+    /// Rolling outside-the-slab fraction over the last `recent` samples.
+    pub fn outside_fraction(&self) -> f64 {
+        if self.filled == 0 {
+            0.0
+        } else {
+            self.outside as f64 / self.filled as f64
+        }
+    }
+
+    /// Evaluate both signals against the current `(ρ1, ρ2)`.
+    pub fn check(&self, rho1: f64, rho2: f64) -> Option<DriftEvent> {
+        if self.observed < self.cfg.min_observations as u64 {
+            return None;
+        }
+        let frac = self.outside_fraction();
+        if frac >= self.cfg.outside_frac {
+            return Some(DriftEvent::OutsideFraction { frac });
+        }
+        if let Some((b1, b2)) = self.baseline {
+            let width = (b2 - b1).abs().max(1e-12);
+            let rel = ((rho1 - b1).abs() / width).max((rho2 - b2).abs() / width);
+            if rel >= self.cfg.rho_rel {
+                return Some(DriftEvent::RhoDisplacement { rel });
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monitor(recent: usize, min_obs: usize) -> DriftMonitor {
+        DriftMonitor::new(DriftConfig {
+            recent,
+            min_observations: min_obs,
+            outside_frac: 0.75,
+            rho_rel: 0.5,
+        })
+    }
+
+    #[test]
+    fn warmup_never_trips() {
+        let mut m = monitor(8, 16);
+        for _ in 0..15 {
+            m.observe(-10.0, 0.0, 1.0); // wildly outside
+            assert_eq!(m.check(0.0, 1.0), None);
+        }
+        m.observe(-10.0, 0.0, 1.0);
+        assert!(matches!(
+            m.check(0.0, 1.0),
+            Some(DriftEvent::OutsideFraction { .. })
+        ));
+    }
+
+    #[test]
+    fn outside_fraction_is_rolling() {
+        let mut m = monitor(4, 1);
+        for _ in 0..4 {
+            m.observe(-1.0, 0.0, 1.0); // outside
+        }
+        assert!((m.outside_fraction() - 1.0).abs() < 1e-12);
+        for _ in 0..4 {
+            m.observe(0.5, 0.0, 1.0); // inside, evicts the old verdicts
+        }
+        assert_eq!(m.outside_fraction(), 0.0);
+        assert_eq!(m.check(0.0, 1.0), None);
+    }
+
+    #[test]
+    fn rho_displacement_trips_relative_to_width() {
+        let mut m = monitor(8, 1);
+        m.rebaseline(0.0, 2.0); // width 2
+        for _ in 0..8 {
+            m.observe(1.0, 0.0, 2.0); // inside: no outside signal
+        }
+        assert_eq!(m.check(0.4, 2.0), None); // 0.2 widths < 0.5
+        let e = m.check(1.2, 2.0); // 0.6 widths
+        assert!(
+            matches!(e, Some(DriftEvent::RhoDisplacement { rel }) if rel > 0.5)
+        );
+    }
+
+    #[test]
+    fn rebaseline_clears_evidence() {
+        let mut m = monitor(8, 4);
+        for _ in 0..8 {
+            m.observe(-5.0, 0.0, 1.0);
+        }
+        assert!(m.check(0.0, 1.0).is_some());
+        m.rebaseline(0.0, 1.0);
+        assert_eq!(m.outside_fraction(), 0.0);
+        assert_eq!(m.check(0.0, 1.0), None); // back in warmup
+    }
+}

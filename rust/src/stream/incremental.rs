@@ -1,0 +1,621 @@
+//! Incremental / decremental SMO over a sliding window.
+//!
+//! [`IncrementalSmo`] keeps an exact, feasible dual point
+//! `(α, ᾱ, s = K(α−ᾱ))` for the OCSSVM dual of the *current window
+//! contents* and updates it per sample instead of re-solving from
+//! scratch:
+//!
+//! * **add** — the incoming sample's multipliers are seeded at the
+//!   clipped box midpoint (`cap/2`), paid for by mass-conserving
+//!   transfers from donor coordinates so Σα = 1 and Σᾱ = ε never move;
+//! * **decremental remove** — the evicted sample's α/ᾱ mass is
+//!   redistributed to in-window coordinates with box headroom (its γ
+//!   contribution leaves the margins in the same O(m) pass);
+//! * **repair** — a bounded number of warm-started SMO sweeps
+//!   ([`solve_from`]) restores KKT within `tol`. Warm-starting from the
+//!   perturbed optimum is the whole trick: the perturbation touches O(1)
+//!   coordinates, so repair needs a few dozen pair updates where a cold
+//!   solve needs thousands (`benches/streaming.rs`).
+//!
+//! Every mass transfer applies its exact rank-1 margin update from the
+//! window's live Gram row, so `s` stays bit-consistent with the dual
+//! between repairs (a periodic O(m²) refresh caps floating-point drift
+//! on unbounded streams). [`IncrementalSmo::report`] assembles the same
+//! [`FitReport`] batch training returns — model, full dual, stats and
+//! KKT certificate — so everything downstream of a `Trainer` works
+//! unchanged on a streamed model.
+
+use crate::kernel::Kernel;
+use crate::solver::api::{DualSolution, FitReport};
+use crate::solver::ocssvm::SlabModel;
+use crate::solver::smo::{solve_from, SmoParams, WarmState};
+use crate::solver::{validate, SolveStats};
+use crate::Result;
+
+use super::window::SlidingWindow;
+
+/// Mass below this is considered fully placed (absolute, on multipliers
+/// whose scale is 1/m).
+const MASS_EPS: f64 = 1e-15;
+
+/// Streaming solver configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct IncrementalConfig {
+    /// hyper-parameters shared with batch SMO (ν₁, ν₂, ε, tol, …);
+    /// `max_iter` is ignored — `repair_max_iter` bounds the per-update
+    /// sweeps instead
+    pub smo: SmoParams,
+    /// iteration bound for the per-update KKT repair
+    pub repair_max_iter: usize,
+    /// exact O(m²) margin recomputation every this many admits (caps
+    /// floating-point drift on unbounded streams)
+    pub refresh_every: u64,
+}
+
+impl Default for IncrementalConfig {
+    fn default() -> Self {
+        IncrementalConfig {
+            smo: SmoParams::default(),
+            repair_max_iter: 100_000,
+            refresh_every: 1024,
+        }
+    }
+}
+
+/// Exact dual state of the current window, updated per sample.
+pub struct IncrementalSmo {
+    window: SlidingWindow,
+    cfg: IncrementalConfig,
+    alpha: Vec<f64>,
+    alpha_bar: Vec<f64>,
+    /// margins s = K(α − ᾱ) over the window, maintained incrementally
+    s: Vec<f64>,
+    rho1: f64,
+    rho2: f64,
+    /// stats of the most recent repair
+    stats: SolveStats,
+    /// cumulative repair iterations across the stream
+    repair_iterations: u64,
+}
+
+impl IncrementalSmo {
+    /// Empty streaming solver over a fresh window.
+    pub fn new(
+        kernel: Kernel,
+        capacity: usize,
+        dim: usize,
+        cfg: IncrementalConfig,
+    ) -> IncrementalSmo {
+        IncrementalSmo {
+            window: SlidingWindow::new(kernel, capacity, dim),
+            cfg,
+            alpha: Vec::new(),
+            alpha_bar: Vec::new(),
+            s: Vec::new(),
+            rho1: 0.0,
+            rho2: 0.0,
+            stats: SolveStats::default(),
+            repair_iterations: 0,
+        }
+    }
+
+    pub fn window(&self) -> &SlidingWindow {
+        &self.window
+    }
+
+    pub fn len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window.is_empty()
+    }
+
+    pub fn config(&self) -> &IncrementalConfig {
+        &self.cfg
+    }
+
+    /// Slab offsets of the current dual point.
+    pub fn rho(&self) -> (f64, f64) {
+        (self.rho1, self.rho2)
+    }
+
+    /// Stats of the most recent repair solve.
+    pub fn last_stats(&self) -> &SolveStats {
+        &self.stats
+    }
+
+    /// Cumulative repair iterations over the stream's lifetime.
+    pub fn repair_iterations(&self) -> u64 {
+        self.repair_iterations
+    }
+
+    fn cap_a(&self) -> f64 {
+        1.0 / (self.cfg.smo.nu1 * self.len() as f64)
+    }
+
+    fn cap_b(&self) -> f64 {
+        self.cfg.smo.eps / (self.cfg.smo.nu2 * self.len() as f64)
+    }
+
+    /// Exact margin of window slot `i` under the current dual, from the
+    /// live Gram row: s_i = Σ_j (α_j − ᾱ_j) k(x_i, x_j).
+    fn margin_of_slot(&self, i: usize) -> f64 {
+        let row = self.window.row(i);
+        self.alpha
+            .iter()
+            .zip(&self.alpha_bar)
+            .zip(row)
+            .map(|((a, b), k)| (a - b) * k)
+            .sum()
+    }
+
+    /// Margin of an arbitrary point under the current dual (O(m·d)) —
+    /// lets callers score *before* absorbing, without building a model.
+    pub fn score(&self, x: &[f64]) -> f64 {
+        let kernel = self.window.kernel();
+        let mut s = 0.0;
+        for j in 0..self.len() {
+            let g = self.alpha[j] - self.alpha_bar[j];
+            if g != 0.0 {
+                s += g * kernel.eval(self.window.point(j), x);
+            }
+        }
+        s
+    }
+
+    /// Absorb one sample: admit (evicting the oldest once the window is
+    /// full), restore dual feasibility, repair KKT. Errors leave the
+    /// pre-repair feasible state in place.
+    pub fn push(&mut self, x: &[f64]) -> Result<()> {
+        if self.window.is_full() {
+            self.replace_oldest(x);
+        } else {
+            self.grow_add(x);
+        }
+        if self.window.admitted() % self.cfg.refresh_every.max(1) == 0 {
+            self.recompute_margins();
+        }
+        self.repair()
+    }
+
+    // ----------------------------------------------------- mass movement
+
+    /// α_j += δ with the exact rank-1 margin update (γ_j moves by δ).
+    fn bump_alpha(&mut self, j: usize, delta: f64) {
+        self.alpha[j] += delta;
+        let row = self.window.row(j);
+        for (sv, rv) in self.s.iter_mut().zip(row) {
+            *sv += delta * rv;
+        }
+    }
+
+    /// ᾱ_j += δ with the exact rank-1 margin update (γ_j moves by −δ).
+    fn bump_abar(&mut self, j: usize, delta: f64) {
+        self.alpha_bar[j] += delta;
+        let row = self.window.row(j);
+        for (sv, rv) in self.s.iter_mut().zip(row) {
+            *sv -= delta * rv;
+        }
+    }
+
+    /// Hand `mass` to coordinates ≠ `skip` with box headroom, greediest
+    /// headroom first. Returns whatever could not be placed (only when
+    /// the rest of the box is saturated, e.g. ν = 1).
+    fn distribute(&mut self, in_alpha: bool, mut mass: f64, skip: usize) -> f64 {
+        let cap = if in_alpha { self.cap_a() } else { self.cap_b() };
+        while mass > MASS_EPS {
+            let vals = if in_alpha { &self.alpha } else { &self.alpha_bar };
+            let mut best = usize::MAX;
+            let mut best_room = 0.0;
+            for (j, &v) in vals.iter().enumerate() {
+                let room = cap - v;
+                if j != skip && room > best_room {
+                    best_room = room;
+                    best = j;
+                }
+            }
+            if best == usize::MAX || best_room <= MASS_EPS {
+                break;
+            }
+            let take = mass.min(best_room);
+            if in_alpha {
+                self.bump_alpha(best, take);
+            } else {
+                self.bump_abar(best, take);
+            }
+            mass -= take;
+        }
+        mass.max(0.0)
+    }
+
+    /// Pull up to `want` mass from donor coordinates ≠ `skip`, largest
+    /// donors first. Returns how much was actually collected.
+    fn collect(&mut self, in_alpha: bool, want: f64, skip: usize) -> f64 {
+        let mut left = want;
+        while left > MASS_EPS {
+            let vals = if in_alpha { &self.alpha } else { &self.alpha_bar };
+            let mut best = usize::MAX;
+            let mut best_val = 0.0;
+            for (j, &v) in vals.iter().enumerate() {
+                if j != skip && v > best_val {
+                    best_val = v;
+                    best = j;
+                }
+            }
+            if best == usize::MAX || best_val <= MASS_EPS {
+                break;
+            }
+            let take = left.min(best_val);
+            if in_alpha {
+                self.bump_alpha(best, -take);
+            } else {
+                self.bump_abar(best, -take);
+            }
+            left -= take;
+        }
+        want - left.max(0.0)
+    }
+
+    /// Seed slot `i` toward the clipped box midpoint, on top of whatever
+    /// redistribution already left there (`i`'s margin contributions are
+    /// applied through the usual bumps — the caller guarantees row `i`
+    /// is current).
+    fn seed(&mut self, in_alpha: bool, i: usize, carry: f64) {
+        let cap = if in_alpha { self.cap_a() } else { self.cap_b() };
+        if carry > 0.0 {
+            let have = if in_alpha { self.alpha[i] } else { self.alpha_bar[i] };
+            let placed = carry.min((cap - have).max(0.0));
+            if placed > 0.0 {
+                if in_alpha {
+                    self.bump_alpha(i, placed);
+                } else {
+                    self.bump_abar(i, placed);
+                }
+            }
+            // a carry the slot cannot hold goes back to the general pool
+            // (sum conservation; unreachable outside ν = 1 corners)
+            let overflow = carry - placed;
+            if overflow > MASS_EPS {
+                self.distribute(in_alpha, overflow, usize::MAX);
+            }
+        }
+        let have = if in_alpha { self.alpha[i] } else { self.alpha_bar[i] };
+        let target = cap * 0.5;
+        if have < target {
+            let got = self.collect(in_alpha, target - have, i);
+            if got > 0.0 {
+                if in_alpha {
+                    self.bump_alpha(i, got);
+                } else {
+                    self.bump_abar(i, got);
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------- update paths
+
+    /// Window still growing: append the sample, shrink every box to the
+    /// new m, seed the newcomer from the clip overflow + donors.
+    fn grow_add(&mut self, x: &[f64]) {
+        let i = self.window.admit(x);
+        if self.len() == 1 {
+            // the very first sample carries the whole dual mass: Σα = 1,
+            // Σᾱ = ε (inside the m = 1 box since ν₁, ν₂ ≤ 1)
+            let eps = self.cfg.smo.eps;
+            self.alpha.push(1.0);
+            self.alpha_bar.push(eps);
+            self.s.push((1.0 - eps) * self.window.row(0)[0]);
+            return;
+        }
+        self.alpha.push(0.0);
+        self.alpha_bar.push(0.0);
+        // newcomer's margin under the current γ (its own γ is 0)
+        let si = self.margin_of_slot(i);
+        self.s.push(si);
+        // caps shrank from 1/(ν(m−1)) to 1/(νm): clip the overflow into a
+        // pool, then let the pool flow to whoever has headroom (usually
+        // the newcomer — its box is empty)
+        for in_alpha in [true, false] {
+            let cap = if in_alpha { self.cap_a() } else { self.cap_b() };
+            let vals = if in_alpha { &self.alpha } else { &self.alpha_bar };
+            let over: Vec<(usize, f64)> = vals
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v > cap)
+                .map(|(j, &v)| (j, v - cap))
+                .collect();
+            let mut pool = 0.0;
+            for (j, d) in over {
+                if in_alpha {
+                    self.bump_alpha(j, -d);
+                } else {
+                    self.bump_abar(j, -d);
+                }
+                pool += d;
+            }
+            let rem = self.distribute(in_alpha, pool, usize::MAX);
+            self.seed(in_alpha, i, rem);
+        }
+    }
+
+    /// Steady state: decrementally remove the oldest sample (mass
+    /// redistributed, γ contribution withdrawn from the margins), then
+    /// admit the new one in its slot and seed it.
+    fn replace_oldest(&mut self, x: &[f64]) {
+        let i = self.window.next_slot();
+        // withdraw the evicted dual mass while its kernel row still exists
+        let freed_a = self.alpha[i];
+        let freed_b = self.alpha_bar[i];
+        self.bump_alpha(i, -freed_a);
+        self.bump_abar(i, -freed_b);
+        let rem_a = self.distribute(true, freed_a, i);
+        let rem_b = self.distribute(false, freed_b, i);
+        // swap the sample; the old kernel row is overwritten here
+        let slot = self.window.admit(x);
+        debug_assert_eq!(slot, i);
+        // s[i] tracked stale old-row contributions — rebuild it exactly
+        self.s[i] = self.margin_of_slot(i);
+        // seed the newcomer (plus any mass the saturated box bounced back)
+        self.seed(true, i, rem_a);
+        self.seed(false, i, rem_b);
+    }
+
+    /// Exact O(m²) margin rebuild from the live Gram matrix.
+    fn recompute_margins(&mut self) {
+        for i in 0..self.len() {
+            self.s[i] = self.margin_of_slot(i);
+        }
+    }
+
+    /// Bounded warm-started SMO sweeps restoring KKT within `tol`.
+    fn repair(&mut self) -> Result<()> {
+        let p = SmoParams {
+            max_iter: self.cfg.repair_max_iter,
+            ..self.cfg.smo
+        };
+        let warm = WarmState {
+            alpha: self.alpha.clone(),
+            alpha_bar: self.alpha_bar.clone(),
+            s: self.s.clone(),
+        };
+        let out = solve_from(&mut self.window, &p, Some(warm))?;
+        self.alpha = out.alpha;
+        self.alpha_bar = out.alpha_bar;
+        self.s = out.s;
+        self.rho1 = out.rho1;
+        self.rho2 = out.rho2;
+        self.repair_iterations += out.stats.iterations as u64;
+        self.stats = out.stats;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ output
+
+    /// The current model alone — the per-sample publish path. Gathers
+    /// support rows straight off the window; no dual clones, no window
+    /// matrix copy, no certificate (use [`IncrementalSmo::report`] when
+    /// those are wanted).
+    pub fn model(&self) -> SlabModel {
+        let sv_tol = self.cfg.smo.sv_tol;
+        let dim = self.window.dim();
+        let sv: Vec<(usize, f64)> = self
+            .alpha
+            .iter()
+            .zip(&self.alpha_bar)
+            .map(|(a, b)| a - b)
+            .enumerate()
+            .filter(|(_, g)| g.abs() > sv_tol)
+            .collect();
+        let mut x_sv = crate::linalg::Matrix::zeros(sv.len(), dim);
+        let mut gamma = Vec::with_capacity(sv.len());
+        for (r, &(i, g)) in sv.iter().enumerate() {
+            x_sv.row_mut(r).copy_from_slice(self.window.point(i));
+            gamma.push(g);
+        }
+        SlabModel {
+            x_sv,
+            gamma,
+            rho1: self.rho1,
+            rho2: self.rho2,
+            kernel: self.window.kernel(),
+        }
+    }
+
+    /// Assemble the uniform [`FitReport`] for the current window — same
+    /// shape batch [`crate::solver::Trainer::fit`] returns, certificate
+    /// included.
+    pub fn report(&self) -> FitReport {
+        let p = &self.cfg.smo;
+        let gamma: Vec<f64> = self
+            .alpha
+            .iter()
+            .zip(&self.alpha_bar)
+            .map(|(a, b)| a - b)
+            .collect();
+        let cls_tol = self.cap_a().min(self.cap_b()) * 1e-6;
+        let certificate = validate::report_with_margins(
+            &self.alpha,
+            &self.alpha_bar,
+            &self.s,
+            self.rho1,
+            self.rho2,
+            p.nu1,
+            p.nu2,
+            p.eps,
+            cls_tol,
+        );
+        let model = self.model();
+        let mut stats = self.stats;
+        stats.objective =
+            0.5 * gamma.iter().zip(&self.s).map(|(g, si)| g * si).sum::<f64>();
+        FitReport {
+            model,
+            dual: DualSolution {
+                alpha: self.alpha.clone(),
+                alpha_bar: self.alpha_bar.clone(),
+                gamma,
+                s: self.s.clone(),
+                rho1: self.rho1,
+                rho2: self.rho2,
+            },
+            stats,
+            certificate,
+            cascade: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+    use crate::solver::{SolverKind, Trainer};
+
+    fn stream_points(n: usize, seed: u64) -> Vec<[f64; 2]> {
+        let ds = SlabConfig::default().generate(n, seed);
+        (0..n).map(|i| [ds.x.get(i, 0), ds.x.get(i, 1)]).collect()
+    }
+
+    fn assert_invariants(inc: &IncrementalSmo) {
+        let m = inc.len();
+        let p = &inc.cfg.smo;
+        let (cap_a, cap_b) = (inc.cap_a(), inc.cap_b());
+        let sa: f64 = inc.alpha.iter().sum();
+        let sb: f64 = inc.alpha_bar.iter().sum();
+        assert!((sa - 1.0).abs() < 1e-9, "sum(alpha)={sa}");
+        assert!((sb - p.eps).abs() < 1e-9, "sum(alpha_bar)={sb}");
+        for j in 0..m {
+            assert!(
+                inc.alpha[j] >= -1e-12 && inc.alpha[j] <= cap_a + 1e-12,
+                "alpha[{j}]={} out of [0,{cap_a}]",
+                inc.alpha[j]
+            );
+            assert!(
+                inc.alpha_bar[j] >= -1e-12 && inc.alpha_bar[j] <= cap_b + 1e-12,
+                "alpha_bar[{j}]={} out of [0,{cap_b}]",
+                inc.alpha_bar[j]
+            );
+        }
+        // margins must equal K gamma exactly (within fp accumulation)
+        for i in 0..m {
+            let si: f64 = (0..m)
+                .map(|j| {
+                    (inc.alpha[j] - inc.alpha_bar[j]) * inc.window.row(i)[j]
+                })
+                .sum();
+            assert!(
+                (si - inc.s[i]).abs() < 1e-7 * (1.0 + si.abs()),
+                "margin drift at {i}: {si} vs {}",
+                inc.s[i]
+            );
+        }
+    }
+
+    #[test]
+    fn invariants_hold_through_growth_and_replacement() {
+        for kernel in [Kernel::Linear, Kernel::Rbf { g: 0.05 }] {
+            let mut inc =
+                IncrementalSmo::new(kernel, 60, 2, IncrementalConfig::default());
+            for p in stream_points(150, 31) {
+                inc.push(&p).unwrap();
+            }
+            assert_eq!(inc.len(), 60);
+            assert_invariants(&inc);
+            let report = inc.report();
+            assert!(report.certificate.sum_alpha_violation < 1e-6);
+            assert!(report.certificate.sum_alpha_bar_violation < 1e-6);
+            assert!(report.model.width() > 0.0);
+        }
+    }
+
+    #[test]
+    fn streamed_dual_matches_batch_fit_on_same_window() {
+        let mut inc = IncrementalSmo::new(
+            Kernel::Linear,
+            80,
+            2,
+            IncrementalConfig::default(),
+        );
+        for p in stream_points(120, 32) {
+            inc.push(&p).unwrap();
+        }
+        let streamed = inc.report();
+        let batch = Trainer::from_smo_params(inc.cfg.smo)
+            .solver(SolverKind::Smo)
+            .kernel(Kernel::Linear)
+            .fit(&inc.window().matrix())
+            .unwrap();
+        let rel = (streamed.stats.objective - batch.stats.objective).abs()
+            / batch.stats.objective.abs().max(1e-9);
+        assert!(
+            rel < 1e-3,
+            "objective diverged: streamed {} vs batch {}",
+            streamed.stats.objective,
+            batch.stats.objective
+        );
+        let width = batch.model.width().max(1e-9);
+        assert!((streamed.dual.rho1 - batch.dual.rho1).abs() / width < 1e-3);
+        assert!((streamed.dual.rho2 - batch.dual.rho2).abs() / width < 1e-3);
+    }
+
+    #[test]
+    fn repair_is_cheap_next_to_cold_solve() {
+        let mut inc = IncrementalSmo::new(
+            Kernel::Linear,
+            100,
+            2,
+            IncrementalConfig::default(),
+        );
+        let pts = stream_points(130, 33);
+        for p in &pts[..100] {
+            inc.push(p).unwrap();
+        }
+        let mut repair_iters = Vec::new();
+        for p in &pts[100..] {
+            inc.push(p).unwrap();
+            repair_iters.push(inc.last_stats().iterations);
+        }
+        let cold = Trainer::from_smo_params(inc.cfg.smo)
+            .kernel(Kernel::Linear)
+            .fit(&inc.window().matrix())
+            .unwrap();
+        let median_repair = {
+            let mut v = repair_iters.clone();
+            v.sort_unstable();
+            v[v.len() / 2]
+        };
+        assert!(
+            median_repair * 3 < cold.stats.iterations.max(1),
+            "repair {median_repair} iters vs cold {}",
+            cold.stats.iterations
+        );
+    }
+
+    #[test]
+    fn score_matches_report_model() {
+        let mut inc = IncrementalSmo::new(
+            Kernel::Rbf { g: 0.1 },
+            40,
+            2,
+            IncrementalConfig::default(),
+        );
+        for p in stream_points(55, 34) {
+            inc.push(&p).unwrap();
+        }
+        let model = inc.report().model;
+        let probe = [19.0, 4.0];
+        assert!((inc.score(&probe) - model.score(&probe)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn periodic_refresh_keeps_margins_exact() {
+        let cfg = IncrementalConfig { refresh_every: 16, ..Default::default() };
+        let mut inc = IncrementalSmo::new(Kernel::Linear, 30, 2, cfg);
+        for p in stream_points(90, 35) {
+            inc.push(&p).unwrap();
+        }
+        assert_invariants(&inc);
+    }
+}

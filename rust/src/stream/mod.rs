@@ -1,0 +1,58 @@
+//! Streaming OCSSVM (the L4 online-learning layer).
+//!
+//! Everything below `stream::` keeps a slab model current over an
+//! unbounded sample stream instead of a static batch:
+//!
+//! * [`window::SlidingWindow`] — bounded FIFO sample buffer with an
+//!   incrementally maintained Gram matrix (admit appends a kernel
+//!   row/column, steady-state eviction overwrites one slot in place),
+//!   exposed to the solver core as a [`crate::cache::KernelProvider`];
+//! * [`incremental::IncrementalSmo`] — per-sample **add** (the new
+//!   point's dual weight is seeded at the clipped box midpoint, paid for
+//!   by mass-conserving transfers from donors) and **decremental
+//!   remove** (the evicted point's α/ᾱ mass is redistributed to
+//!   in-window points with box headroom), each followed by a bounded
+//!   number of warm-started SMO repair sweeps
+//!   ([`crate::solver::smo::solve_from`]) that restore KKT within
+//!   `tol`. Results surface as the same
+//!   [`crate::solver::FitReport`] batch training produces, so the KKT
+//!   [`certificate`](crate::solver::validate::Certificate) keeps
+//!   working;
+//! * [`drift::DriftMonitor`] — rolling outside-the-slab fraction and
+//!   `(ρ1, ρ2)` displacement vs a baseline; trips a [`drift::DriftEvent`]
+//!   when the stream no longer looks like the data the slab was fit on;
+//! * [`session::StreamSession`] — the per-stream state machine the
+//!   [`crate::coordinator::Coordinator`] owns: each absorbed sample
+//!   atomically hot-swaps the published model version in the
+//!   [`crate::coordinator::ModelRegistry`], and a tripped drift monitor
+//!   escalates to a full cascade retrain on the
+//!   [`crate::coordinator::TrainQueue`] (background — scoring through
+//!   the [`crate::coordinator::DynamicBatcher`] never stalls).
+//!
+//! Why incremental works here: the slab dual decomposes per-sample (the
+//! same property the SMO pair update exploits), so admitting or evicting
+//! one point perturbs a *feasible* dual by O(1) coordinates. A
+//! warm-started exact solve from that perturbed point needs a few dozen
+//! pair updates instead of a cold solve's thousands — `benches/
+//! streaming.rs` (experiment ST1 in DESIGN.md) records the ratio against
+//! a full retrain per sample.
+//!
+//! ```no_run
+//! use slabsvm::stream::{StreamConfig, StreamSession};
+//!
+//! let mut session = StreamSession::new("live", StreamConfig::default());
+//! let absorbed = session.absorb(&[20.0, 3.0]).unwrap();
+//! if let Some(model) = absorbed.model {
+//!     let _w = model.width(); // publishable model after warmup
+//! }
+//! ```
+
+pub mod drift;
+pub mod incremental;
+pub mod session;
+pub mod window;
+
+pub use drift::{DriftConfig, DriftEvent, DriftMonitor};
+pub use incremental::{IncrementalConfig, IncrementalSmo};
+pub use session::{Absorbed, StreamConfig, StreamSession};
+pub use window::SlidingWindow;

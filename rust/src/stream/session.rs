@@ -1,0 +1,302 @@
+//! Per-stream state machine: window + incremental solver + drift watch.
+//!
+//! A [`StreamSession`] is the unit the
+//! [`crate::coordinator::Coordinator`] owns per live stream. It is a
+//! pure state machine — [`StreamSession::absorb`] turns one arriving
+//! sample into (a) a publishable [`FitReport`] once warm and (b) a drift
+//! verdict — while the coordinator supplies the side effects: publishing
+//! the model into the [`crate::coordinator::ModelRegistry`] (an atomic
+//! hot-swap scorers never see torn) and submitting the escalated
+//! cascade retrain to the background
+//! [`crate::coordinator::TrainQueue`]. Keeping the session side-effect
+//! free makes the whole streaming path testable without threads.
+
+use crate::coordinator::JobId;
+use crate::data::Dataset;
+use crate::kernel::Kernel;
+use crate::solver::api::Trainer;
+use crate::solver::ocssvm::SlabModel;
+
+use super::drift::{DriftConfig, DriftEvent, DriftMonitor};
+use super::incremental::{IncrementalConfig, IncrementalSmo};
+
+/// Everything a live stream needs configured up front.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamConfig {
+    pub kernel: Kernel,
+    /// feature dimension of arriving samples
+    pub dim: usize,
+    /// sliding-window capacity (the training-set size the model sees)
+    pub window: usize,
+    /// samples before the first model is published (and drift armed)
+    pub min_train: usize,
+    pub incremental: IncrementalConfig,
+    pub drift: DriftConfig,
+    /// cascade shards for the escalated background retrain
+    pub retrain_shards: usize,
+    /// cascade union-retrain rounds for the escalated retrain
+    pub retrain_rounds: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            kernel: Kernel::Linear,
+            dim: 2,
+            window: 512,
+            min_train: 64,
+            incremental: IncrementalConfig::default(),
+            drift: DriftConfig::default(),
+            retrain_shards: 4,
+            retrain_rounds: 2,
+        }
+    }
+}
+
+/// Outcome of absorbing one sample.
+pub struct Absorbed {
+    /// publishable model (None while the session is still warming up).
+    /// Deliberately not the full [`crate::solver::FitReport`] — this is
+    /// the per-sample hot path; call `session.solver().report()` when
+    /// the dual + certificate are wanted.
+    pub model: Option<SlabModel>,
+    /// drift verdict for this sample (scored before absorption)
+    pub drift: Option<DriftEvent>,
+    /// the session wants a background retrain (drift tripped and none is
+    /// already in flight) — the owner snapshots + submits
+    pub retrain_wanted: bool,
+}
+
+/// One live stream's state.
+pub struct StreamSession {
+    name: String,
+    cfg: StreamConfig,
+    inc: IncrementalSmo,
+    drift: DriftMonitor,
+    pending_retrain: Option<JobId>,
+    baselined: bool,
+    updates: u64,
+    retrains: u64,
+}
+
+impl StreamSession {
+    /// `min_train` is clamped to the window capacity — a warmup bar the
+    /// window can never reach would otherwise mean a session that
+    /// absorbs forever without publishing or arming drift detection.
+    pub fn new(name: impl Into<String>, mut cfg: StreamConfig) -> StreamSession {
+        cfg.min_train = cfg.min_train.min(cfg.window);
+        StreamSession {
+            name: name.into(),
+            inc: IncrementalSmo::new(
+                cfg.kernel,
+                cfg.window,
+                cfg.dim,
+                cfg.incremental,
+            ),
+            drift: DriftMonitor::new(cfg.drift),
+            cfg,
+            pending_retrain: None,
+            baselined: false,
+            updates: 0,
+            retrains: 0,
+        }
+    }
+
+    /// Registry name this session publishes under.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn config(&self) -> &StreamConfig {
+        &self.cfg
+    }
+
+    /// The streaming solver (window, dual state, stats).
+    pub fn solver(&self) -> &IncrementalSmo {
+        &self.inc
+    }
+
+    pub fn drift_monitor(&self) -> &DriftMonitor {
+        &self.drift
+    }
+
+    /// Samples absorbed so far.
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    /// Completed background retrains.
+    pub fn retrains(&self) -> u64 {
+        self.retrains
+    }
+
+    /// Warm = enough samples to publish and watch for drift.
+    pub fn is_warm(&self) -> bool {
+        self.inc.len() >= self.cfg.min_train
+    }
+
+    /// In-flight background retrain, if any.
+    pub fn pending_retrain(&self) -> Option<JobId> {
+        self.pending_retrain
+    }
+
+    /// Record a submitted background retrain.
+    pub fn retrain_submitted(&mut self, id: JobId) {
+        self.pending_retrain = Some(id);
+    }
+
+    /// A background retrain finished: clear the in-flight marker and, on
+    /// success, re-baseline drift on the retrained slab offsets.
+    pub fn retrain_finished(&mut self, new_rho: Option<(f64, f64)>) {
+        self.pending_retrain = None;
+        if let Some((r1, r2)) = new_rho {
+            self.drift.rebaseline(r1, r2);
+            self.retrains += 1;
+        }
+    }
+
+    /// Copy of the current window contents (background-retrain input).
+    pub fn snapshot(&self) -> Dataset {
+        Dataset::unlabeled(self.inc.window().matrix())
+    }
+
+    /// The trainer an escalated retrain runs with: same hyper-parameters
+    /// as the incremental solver, cascade-sharded for throughput.
+    pub fn retrain_trainer(&self) -> Trainer {
+        Trainer::from_smo_params(self.inc.config().smo)
+            .kernel(self.cfg.kernel)
+            .cascade(self.cfg.retrain_shards, self.cfg.retrain_rounds)
+    }
+
+    /// Absorb one sample: score it against the current slab (drift
+    /// evidence), update the dual incrementally, and report.
+    pub fn absorb(&mut self, x: &[f64]) -> crate::Result<Absorbed> {
+        let mut drift_event = None;
+        if self.is_warm() {
+            let (r1, r2) = self.inc.rho();
+            if !self.baselined {
+                self.drift.rebaseline(r1, r2);
+                self.baselined = true;
+            }
+            self.drift.observe(self.inc.score(x), r1, r2);
+            drift_event = self.drift.check(r1, r2);
+        }
+        self.inc.push(x)?;
+        self.updates += 1;
+        let model = if self.is_warm() { Some(self.inc.model()) } else { None };
+        Ok(Absorbed {
+            model,
+            retrain_wanted: drift_event.is_some()
+                && self.pending_retrain.is_none(),
+            drift: drift_event,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+
+    fn quick_config() -> StreamConfig {
+        StreamConfig {
+            window: 64,
+            min_train: 32,
+            drift: DriftConfig {
+                recent: 24,
+                min_observations: 12,
+                outside_frac: 0.9,
+                rho_rel: 10.0, // isolate the outside-fraction signal
+            },
+            ..Default::default()
+        }
+    }
+
+    fn feed(session: &mut StreamSession, cfg: &SlabConfig, n: usize, seed: u64) {
+        let ds = cfg.generate(n, seed);
+        for i in 0..n {
+            session.absorb(ds.x.row(i)).unwrap();
+        }
+    }
+
+    #[test]
+    fn warmup_then_publishable_reports() {
+        let mut s = StreamSession::new("t", quick_config());
+        let ds = SlabConfig::default().generate(40, 51);
+        for i in 0..40 {
+            let a = s.absorb(ds.x.row(i)).unwrap();
+            if i + 1 < 32 {
+                assert!(a.model.is_none(), "published during warmup at {i}");
+                assert!(a.drift.is_none());
+            } else {
+                let model = a.model.expect("warm session must publish");
+                assert!(model.width() > 0.0);
+                // the hot-path model matches the full report's model
+                let report = s.solver().report();
+                assert_eq!(model.gamma, report.model.gamma);
+                assert_eq!(model.rho1, report.model.rho1);
+            }
+        }
+        assert!(s.is_warm());
+        assert_eq!(s.updates(), 40);
+    }
+
+    #[test]
+    fn mean_shift_trips_drift_and_requests_one_retrain() {
+        let mut s = StreamSession::new("t", quick_config());
+        feed(&mut s, &SlabConfig::default(), 80, 52);
+        assert!(s.drift_monitor().baseline().is_some());
+        // shift the band a long way BELOW the learned slab: downward
+        // shifts land under ρ1 (the ν₁ quantile), which only moves after
+        // ~ν₁·window shifted samples — the rolling fraction trips first
+        let shifted = SlabConfig { offset: 6.0, ..Default::default() };
+        let ds = shifted.generate(60, 53);
+        let mut tripped = 0;
+        let mut wanted = 0;
+        for i in 0..60 {
+            let a = s.absorb(ds.x.row(i)).unwrap();
+            if a.drift.is_some() {
+                tripped += 1;
+                if a.retrain_wanted {
+                    wanted += 1;
+                    s.retrain_submitted(JobId(7)); // owner would submit
+                }
+            }
+        }
+        assert!(tripped > 0, "mean shift never tripped the monitor");
+        assert_eq!(wanted, 1, "retrain must be requested exactly once");
+        assert_eq!(s.pending_retrain(), Some(JobId(7)));
+        // completion re-baselines and re-arms
+        s.retrain_finished(Some((0.0, 1.0)));
+        assert_eq!(s.pending_retrain(), None);
+        assert_eq!(s.retrains(), 1);
+        assert_eq!(s.drift_monitor().baseline(), Some((0.0, 1.0)));
+    }
+
+    #[test]
+    fn snapshot_matches_window() {
+        let mut s = StreamSession::new("t", quick_config());
+        feed(&mut s, &SlabConfig::default(), 70, 54);
+        let snap = s.snapshot();
+        assert_eq!(snap.len(), 64); // window capacity
+        assert_eq!(snap.x.data(), s.solver().window().matrix().data());
+    }
+
+    #[test]
+    fn min_train_clamps_to_window_capacity() {
+        // a warmup bar above capacity would never be reached — the
+        // session must clamp it instead of never publishing
+        let s = StreamSession::new(
+            "t",
+            StreamConfig { window: 32, min_train: 500, ..Default::default() },
+        );
+        assert_eq!(s.config().min_train, 32);
+    }
+
+    #[test]
+    fn retrain_trainer_carries_session_params() {
+        let s = StreamSession::new("t", quick_config());
+        let t = s.retrain_trainer();
+        assert_eq!(t.kind(), crate::solver::SolverKind::Smo);
+    }
+}

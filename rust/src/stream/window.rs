@@ -1,0 +1,262 @@
+//! Bounded sample window with an incrementally maintained Gram matrix.
+//!
+//! The window is the streaming solver's working set: at most `capacity`
+//! samples, FIFO eviction once full. The Gram matrix over the resident
+//! samples is maintained *incrementally* — admitting a point while
+//! growing appends one kernel row/column (O(m·d) kernel evaluations);
+//! a steady-state admit overwrites the evicted point's slot in place
+//! (same cost), never rebuilding the O(m²) matrix. The window implements
+//! [`KernelProvider`], so the SMO repair sweeps of
+//! [`crate::stream::incremental`] stream rows straight out of it exactly
+//! like batch training streams them out of
+//! [`crate::cache::PrecomputedGram`].
+//!
+//! Slot order is ring order, not arrival order; everything downstream
+//! (dual state, margins, models) is row-permutation invariant.
+
+use crate::cache::{CacheStats, KernelProvider};
+use crate::kernel::Kernel;
+use crate::linalg::Matrix;
+
+/// Bounded FIFO sample buffer + live Gram matrix.
+pub struct SlidingWindow {
+    kernel: Kernel,
+    capacity: usize,
+    dim: usize,
+    /// resident samples, flattened row-major (`len · dim`)
+    points: Vec<f64>,
+    /// gram[i][j] = k(x_i, x_j) over resident samples
+    gram: Vec<Vec<f64>>,
+    /// total samples ever admitted (ring cursor once full)
+    admitted: u64,
+}
+
+impl SlidingWindow {
+    /// Empty window for `dim`-dimensional samples (capacity ≥ 2: the
+    /// repair sweeps are pair updates).
+    pub fn new(kernel: Kernel, capacity: usize, dim: usize) -> SlidingWindow {
+        assert!(capacity >= 2, "streaming window needs at least two slots");
+        assert!(dim > 0, "samples must have at least one feature");
+        SlidingWindow {
+            kernel,
+            capacity,
+            dim,
+            points: Vec::new(),
+            gram: Vec::new(),
+            admitted: 0,
+        }
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Resident sample count (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.gram.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gram.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len() == self.capacity
+    }
+
+    /// Total samples ever admitted (≥ `len`).
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    /// Slot the next admit will fill: append position while growing, the
+    /// oldest resident sample's slot (FIFO) once full.
+    pub fn next_slot(&self) -> usize {
+        if self.is_full() {
+            (self.admitted % self.capacity as u64) as usize
+        } else {
+            self.len()
+        }
+    }
+
+    /// Resident sample `i` (slot order).
+    pub fn point(&self, i: usize) -> &[f64] {
+        &self.points[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Kernel row of slot `i` against every resident sample.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.gram[i]
+    }
+
+    /// Admit `x`. Returns the slot it landed in; while the window is
+    /// still growing that is a fresh slot, afterwards it is the evicted
+    /// oldest sample's slot (the caller handles the evicted dual mass
+    /// *before* calling this — the old row is gone afterwards).
+    pub fn admit(&mut self, x: &[f64]) -> usize {
+        assert_eq!(x.len(), self.dim, "sample dimension mismatch");
+        let slot = self.next_slot();
+        if self.is_full() {
+            self.points[slot * self.dim..(slot + 1) * self.dim]
+                .copy_from_slice(x);
+            let m = self.len();
+            let mut row = std::mem::take(&mut self.gram[slot]);
+            for j in 0..m {
+                row[j] = self.kernel.eval(x, self.point(j));
+            }
+            for j in 0..m {
+                if j != slot {
+                    self.gram[j][slot] = row[j];
+                }
+            }
+            self.gram[slot] = row;
+        } else {
+            self.points.extend_from_slice(x);
+            let m = self.len() + 1;
+            let mut row = Vec::with_capacity(self.capacity);
+            for j in 0..m {
+                row.push(self.kernel.eval(x, self.point(j)));
+            }
+            for j in 0..m - 1 {
+                self.gram[j].push(row[j]);
+            }
+            self.gram.push(row);
+        }
+        self.admitted += 1;
+        slot
+    }
+
+    /// Dense copy of the resident samples (slot order) — model assembly
+    /// and retrain snapshots.
+    pub fn matrix(&self) -> Matrix {
+        Matrix::from_vec(self.len(), self.dim, self.points.clone())
+    }
+}
+
+impl KernelProvider for SlidingWindow {
+    fn m(&self) -> usize {
+        self.len()
+    }
+    fn diag(&self, i: usize) -> f64 {
+        self.gram[i][i]
+    }
+    fn with_row<R>(&mut self, i: usize, f: &mut dyn FnMut(&[f64]) -> R) -> R {
+        f(&self.gram[i])
+    }
+    fn with_two_rows<R>(
+        &mut self,
+        a: usize,
+        b: usize,
+        f: &mut dyn FnMut(&[f64], &[f64]) -> R,
+    ) -> R {
+        f(&self.gram[a], &self.gram[b])
+    }
+    fn stats(&self) -> CacheStats {
+        CacheStats::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fill(w: &mut SlidingWindow, n: usize, rng: &mut Rng) {
+        for _ in 0..n {
+            let p: Vec<f64> = (0..w.dim()).map(|_| rng.normal()).collect();
+            w.admit(&p);
+        }
+    }
+
+    fn assert_gram_exact(w: &SlidingWindow) {
+        let k = w.kernel();
+        for i in 0..w.len() {
+            assert_eq!(w.row(i).len(), w.len());
+            for j in 0..w.len() {
+                let want = k.eval(w.point(i), w.point(j));
+                assert!(
+                    (w.row(i)[j] - want).abs() < 1e-12,
+                    "gram[{i}][{j}] stale: {} vs {want}",
+                    w.row(i)[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grows_then_rings() {
+        let mut w = SlidingWindow::new(Kernel::Linear, 4, 3);
+        let mut rng = Rng::new(1);
+        fill(&mut w, 3, &mut rng);
+        assert_eq!(w.len(), 3);
+        assert!(!w.is_full());
+        assert_eq!(w.next_slot(), 3);
+        fill(&mut w, 1, &mut rng);
+        assert!(w.is_full());
+        // FIFO: next admits overwrite slots 0, 1, 2, 3, 0, ...
+        for want in [0usize, 1, 2, 3, 0] {
+            assert_eq!(w.next_slot(), want);
+            let p: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+            assert_eq!(w.admit(&p), want);
+        }
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.admitted(), 9);
+    }
+
+    #[test]
+    fn gram_stays_exact_through_growth_and_replacement() {
+        for kernel in [Kernel::Linear, Kernel::Rbf { g: 0.3 }] {
+            let mut w = SlidingWindow::new(kernel, 6, 2);
+            let mut rng = Rng::new(7);
+            for step in 0..20 {
+                fill(&mut w, 1, &mut rng);
+                if step % 3 == 0 {
+                    assert_gram_exact(&w);
+                }
+            }
+            assert_gram_exact(&w);
+        }
+    }
+
+    #[test]
+    fn provider_matches_gram() {
+        let mut w = SlidingWindow::new(Kernel::Rbf { g: 0.5 }, 5, 2);
+        let mut rng = Rng::new(3);
+        fill(&mut w, 8, &mut rng); // wrapped
+        assert_eq!(w.m(), 5);
+        for i in 0..w.m() {
+            assert!((w.diag(i) - 1.0).abs() < 1e-12); // RBF diag
+        }
+        let direct = w.row(1).to_vec();
+        w.with_row(1, &mut |r| assert_eq!(r, &direct[..]));
+        w.with_two_rows(0, 4, &mut |a, b| {
+            assert!((a[4] - b[0]).abs() < 1e-12); // symmetry
+        });
+    }
+
+    #[test]
+    fn matrix_snapshot_matches_points() {
+        let mut w = SlidingWindow::new(Kernel::Linear, 3, 2);
+        let mut rng = Rng::new(11);
+        fill(&mut w, 5, &mut rng);
+        let m = w.matrix();
+        assert_eq!(m.rows(), 3);
+        for i in 0..3 {
+            assert_eq!(m.row(i), w.point(i));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_capacity_one() {
+        SlidingWindow::new(Kernel::Linear, 1, 2);
+    }
+}

@@ -47,6 +47,41 @@ fn train_accepts_any_solver_kind_and_rejects_unknown() {
 }
 
 #[test]
+fn stream_subcommand_runs_online_updates() {
+    let out = bin()
+        .args([
+            "stream",
+            "--points",
+            "400",
+            "--window",
+            "96",
+            "--min-train",
+            "48",
+            "--drift",
+            "mean-shift",
+            "--drift-at",
+            "200",
+            "--drift-len",
+            "40",
+            "--drift-amount",
+            "-8.0",
+            "--report-every",
+            "200",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stream failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("streaming 400 samples"), "missing banner: {text}");
+    assert!(text.contains("done: 400 updates"), "missing summary: {text}");
+    assert!(text.contains("updates/s"));
+}
+
+#[test]
 fn help_and_unknown_subcommand() {
     let out = bin().arg("help").output().unwrap();
     assert!(out.status.success());

@@ -1,5 +1,5 @@
 //! Property-based tests over the solver invariants (in-tree `testing`
-//! harness; see DESIGN.md §5). Each property runs dozens of randomized
+//! harness; see DESIGN.md §6). Each property runs dozens of randomized
 //! cases over datasets, kernels and hyper-parameters, training through
 //! the unified `Trainer` API.
 

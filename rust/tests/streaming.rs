@@ -1,0 +1,198 @@
+//! Streaming subsystem end-to-end: incremental/batch parity on a pinned
+//! stream, independent certification, and the drift → background
+//! retrain → hot-swap pipeline under live scoring traffic.
+
+use slabsvm::coordinator::{BatcherConfig, Coordinator, JobStatus};
+use slabsvm::data::synthetic::{
+    Drift, DriftSchedule, SlabConfig, SlabStream,
+};
+use slabsvm::kernel::Kernel;
+use slabsvm::metrics::roc_auc;
+use slabsvm::runtime::Engine;
+use slabsvm::solver::validate::certify;
+use slabsvm::solver::Trainer;
+use slabsvm::stream::{
+    DriftConfig, IncrementalConfig, IncrementalSmo, StreamConfig,
+};
+
+/// Acceptance: after N incremental adds + M decremental evictions on a
+/// pinned synthetic stream, objective, (ρ1, ρ2) and decision AUC match a
+/// from-scratch batch `Trainer` fit on the same window within 1e-3
+/// relative tolerance.
+#[test]
+fn incremental_matches_batch_after_adds_and_evictions() {
+    let cfg = IncrementalConfig::default();
+    let mut inc = IncrementalSmo::new(Kernel::Linear, 160, 2, cfg);
+    let mut stream = SlabStream::new(SlabConfig::default(), 9001);
+    // 160 adds fill the window; 60 more each evict the oldest
+    for _ in 0..220 {
+        inc.push(&stream.next_point()).unwrap();
+    }
+    let streamed = inc.report();
+    let window = inc.window().matrix();
+    let batch = Trainer::from_smo_params(cfg.smo)
+        .kernel(Kernel::Linear)
+        .fit(&window)
+        .unwrap();
+
+    let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-9);
+    assert!(
+        rel(streamed.stats.objective, batch.stats.objective) < 1e-3,
+        "objective: streamed {} vs batch {}",
+        streamed.stats.objective,
+        batch.stats.objective
+    );
+    assert!(
+        rel(streamed.dual.rho1, batch.dual.rho1) < 1e-3,
+        "rho1: streamed {} vs batch {}",
+        streamed.dual.rho1,
+        batch.dual.rho1
+    );
+    assert!(
+        rel(streamed.dual.rho2, batch.dual.rho2) < 1e-3,
+        "rho2: streamed {} vs batch {}",
+        streamed.dual.rho2,
+        batch.dual.rho2
+    );
+
+    let eval = SlabConfig::default().generate_eval(300, 300, 9002);
+    let margins = |m: &slabsvm::solver::ocssvm::SlabModel| -> Vec<f64> {
+        (0..eval.len()).map(|i| m.margin(eval.x.row(i))).collect()
+    };
+    let auc_streamed = roc_auc(&eval.y, &margins(&streamed.model));
+    let auc_batch = roc_auc(&eval.y, &margins(&batch.model));
+    assert!(
+        (auc_streamed - auc_batch).abs() < 1e-3,
+        "AUC: streamed {auc_streamed} vs batch {auc_batch}"
+    );
+}
+
+/// The streamed dual certifies against a freshly built Gram matrix —
+/// independent of every incremental bookkeeping path.
+#[test]
+fn streamed_solution_certifies_independently() {
+    let cfg = IncrementalConfig::default();
+    let mut inc = IncrementalSmo::new(Kernel::Rbf { g: 0.05 }, 90, 2, cfg);
+    let mut stream = SlabStream::new(SlabConfig::default(), 9003);
+    for _ in 0..140 {
+        inc.push(&stream.next_point()).unwrap();
+    }
+    let report = inc.report();
+    let k = Kernel::Rbf { g: 0.05 }.gram(&inc.window().matrix(), 2);
+    certify(
+        &k,
+        &report.dual.alpha,
+        &report.dual.alpha_bar,
+        report.dual.rho1,
+        report.dual.rho2,
+        cfg.smo.nu1,
+        cfg.smo.nu2,
+        cfg.smo.eps,
+        1e-3,
+    )
+    .expect("streamed dual must satisfy feasibility + KKT");
+}
+
+/// Acceptance: a mean-shift drift injected mid-stream trips the
+/// DriftMonitor, the background cascade retrain completes, and the
+/// registry serves the new model version while scoring continues with
+/// no request errors.
+#[test]
+fn drift_trips_background_retrain_while_scoring_continues() {
+    let c = Coordinator::start(
+        Engine::Native,
+        BatcherConfig { max_batch: 64, max_wait_us: 200, queue_cap: 4096 },
+        2,
+    );
+    let mut session = c.open_stream(
+        "live",
+        StreamConfig {
+            window: 200,
+            min_train: 100,
+            drift: DriftConfig {
+                recent: 48,
+                min_observations: 24,
+                outside_frac: 0.9,
+                rho_rel: 8.0, // the outside-fraction signal drives this test
+            },
+            retrain_shards: 2,
+            retrain_rounds: 2,
+            ..Default::default()
+        },
+    );
+    // the band sags well below the learned slab mid-stream
+    let mut stream = SlabStream::new(SlabConfig::default(), 4242).with_drift(
+        DriftSchedule {
+            drift: Drift::MeanShift { delta: -9.0 },
+            start: 400,
+            duration: 60,
+        },
+    );
+
+    // a sustained shift may legitimately retrain more than once (each
+    // completion re-baselines the monitor against a still-moving stream);
+    // one in-flight job at a time is the invariant
+    let mut last_version = 0u64;
+    let mut first_submit = None;
+    let mut version_at_first_submit = 0u64;
+    let mut completed_version = None;
+    let mut scored = 0u64;
+    for i in 0..900 {
+        let x = stream.next_point();
+        let in_flight_before = session.pending_retrain();
+        let u = c.stream_push(&mut session, &x).unwrap();
+        if let Some(v) = u.version {
+            assert!(v > last_version, "published version must be monotone");
+            last_version = v;
+        }
+        if let Some(id) = u.retrain_submitted {
+            assert!(
+                in_flight_before.is_none() || u.retrain_completed.is_some(),
+                "submitted a second retrain while one was in flight"
+            );
+            assert!(i >= 400, "retrain tripped before the drift was injected");
+            if first_submit.is_none() {
+                first_submit = Some(id);
+                version_at_first_submit = last_version;
+            }
+        }
+        if let Some(v) = u.retrain_completed {
+            completed_version = Some(v);
+        }
+        // live scoring traffic throughout — warmup excluded, errors fatal
+        if last_version > 0 && i % 7 == 0 {
+            let resp = c
+                .score("live", vec![x.to_vec()])
+                .expect("scoring request failed during streaming/retrain");
+            assert_eq!(resp.labels.len(), 1);
+            scored += 1;
+        }
+    }
+    let id = first_submit.expect("mean shift never tripped the drift monitor");
+    // the first job ran in the background; make sure it landed
+    let status = c.wait_job(id).expect("job vanished");
+    assert!(
+        matches!(status, JobStatus::Done { .. }),
+        "background retrain failed: {status:?}"
+    );
+    if completed_version.is_none() {
+        // stream ended before reconciliation; one more push reconciles
+        let u = c.stream_push(&mut session, &stream.next_point()).unwrap();
+        completed_version = u.retrain_completed;
+        if let Some(v) = u.version {
+            last_version = v;
+        }
+    }
+    let retrained = completed_version.expect("retrain never reconciled");
+    assert!(
+        retrained > version_at_first_submit,
+        "retrained model must land at a newer registry version"
+    );
+    assert!(session.retrains() >= 1);
+    assert!(scored > 80, "scoring path starved: only {scored} requests");
+    // the post-retrain model keeps serving
+    let resp = c.score("live", vec![stream.next_point().to_vec()]).unwrap();
+    assert_eq!(resp.labels.len(), 1);
+    assert!(c.model("live").is_some());
+    c.shutdown();
+}
