@@ -1,25 +1,41 @@
-//! Bench: **ST1** — incremental stream update vs full retrain per sample.
+//! Benches: **ST1** — incremental stream update vs full retrain per
+//! sample — and **MS1** — aggregate absorb throughput of the sharded
+//! multi-stream session manager vs sequential single-stream loops.
 //!
-//! The streaming subsystem's reason to exist, quantified: once the
+//! ST1, the streaming subsystem's reason to exist, quantified: once the
 //! window is full, absorbing one sample via [`IncrementalSmo::push`]
 //! (rank-1 Gram maintenance + mass-conserving perturbation + a few
 //! warm-started repair sweeps) must be far cheaper than what a naive
 //! serving loop pays — a cold [`Trainer::fit`] on the whole window for
-//! every arriving sample (full Gram build + cold SMO solve).
-//!
-//! Reported per window size (and in the BENCHJSON line): median seconds
-//! per incremental update (`update_s`), median seconds per full retrain
+//! every arriving sample (full Gram build + cold SMO solve). Reported
+//! per window size (and in the BENCHJSON line): median seconds per
+//! incremental update (`update_s`), median seconds per full retrain
 //! (`retrain_s`), and the ratio (`speedup` — the acceptance floor is
 //! 10× at window 2000).
+//!
+//! MS1, the manager's reason to exist, quantified: the same per-stream
+//! absorb work fanned across shard worker threads must beat running the
+//! M streams one after another on the caller thread. Reported per
+//! stream count M ∈ {1, 4, 16}: wall seconds and aggregate updates/s
+//! for both paths plus the ratio (`speedup` — the acceptance floor is
+//! 2× at M = 16 on ≥ 2 shard workers). Before timing is trusted, every
+//! stream's final objective and (ρ1, ρ2) are asserted to match the
+//! single-stream path within 1e-9 — the manager must parallelize the
+//! work, not change it.
 //!
 //! Run: `cargo bench --bench streaming`
 
 use slabsvm::bench::Bench;
+use slabsvm::coordinator::{BatcherConfig, Coordinator};
 use slabsvm::data::synthetic::{SlabConfig, SlabStream};
 use slabsvm::kernel::Kernel;
 use slabsvm::linalg::median;
+use slabsvm::runtime::Engine;
 use slabsvm::solver::{SolverKind, Trainer};
-use slabsvm::stream::{IncrementalConfig, IncrementalSmo};
+use slabsvm::stream::{
+    IncrementalConfig, IncrementalSmo, StreamConfig, StreamPoolConfig,
+    StreamSession, StreamSpec,
+};
 
 fn main() {
     let fast = std::env::var("SLABSVM_BENCH_FAST").as_deref() == Ok("1");
@@ -82,5 +98,116 @@ fn main() {
             ]
         });
     }
-    bench.report("ST1 — incremental stream update vs full retrain per sample");
+    // ------------------------------------------------------------- MS1
+    let stream_counts: &[usize] = if fast { &[1, 4] } else { &[1, 4, 16] };
+    let (ms_window, ms_updates) = if fast { (48, 48) } else { (128, 128) };
+    // the MS1 claim is about ≥ 2 shard workers
+    let shard_workers =
+        slabsvm::util::threadpool::default_threads().clamp(2, 4);
+
+    for &m_streams in stream_counts {
+        bench.run(&format!("multi-stream-absorb/m={m_streams}"), || {
+            let per_stream = ms_window + ms_updates;
+            // pinned per-stream sample sequences (identical for both paths)
+            let seqs: Vec<Vec<[f64; 2]>> = (0..m_streams)
+                .map(|i| {
+                    let mut s = SlabStream::new(
+                        SlabConfig::default(),
+                        7000 + i as u64,
+                    );
+                    (0..per_stream).map(|_| s.next_point()).collect()
+                })
+                .collect();
+            let cfg = StreamConfig {
+                kernel: Kernel::Linear,
+                dim: 2,
+                window: ms_window,
+                min_train: ms_window / 2,
+                ..Default::default()
+            };
+
+            // baseline: the M streams absorbed one after another on this
+            // thread — exactly what a single-writer coordinator pays
+            let t0 = std::time::Instant::now();
+            let baseline: Vec<(f64, (f64, f64))> = seqs
+                .iter()
+                .map(|seq| {
+                    let mut session = StreamSession::new("seq", cfg);
+                    for x in seq {
+                        session.absorb(x).expect("sequential absorb");
+                    }
+                    (
+                        session.solver().report().stats.objective,
+                        session.solver().rho(),
+                    )
+                })
+                .collect();
+            let seq_s = t0.elapsed().as_secs_f64();
+
+            // manager path: M producers, sessions sharded across workers
+            let c = Coordinator::start_with_streams(
+                Engine::Native,
+                BatcherConfig::default(),
+                1,
+                StreamPoolConfig {
+                    shards: shard_workers,
+                    mailbox_cap: 256,
+                },
+            );
+            c.open_streams(
+                (0..m_streams)
+                    .map(|i| StreamSpec::new(format!("t{i}"), cfg))
+                    .collect(),
+            )
+            .expect("open streams");
+            let t1 = std::time::Instant::now();
+            std::thread::scope(|scope| {
+                for (i, seq) in seqs.iter().enumerate() {
+                    let c = &c;
+                    scope.spawn(move || {
+                        let name = format!("t{i}");
+                        for x in seq {
+                            c.push(&name, x).expect("managed push");
+                        }
+                    });
+                }
+            });
+            c.quiesce_streams();
+            let mgr_s = t1.elapsed().as_secs_f64();
+
+            // parity gate: a fast wrong manager is worthless
+            for (i, &(obj, rho)) in baseline.iter().enumerate() {
+                let s = c.close_stream(&format!("t{i}")).expect("close");
+                assert_eq!(s.updates as usize, per_stream);
+                assert!(
+                    (s.objective - obj).abs() <= 1e-9 * obj.abs().max(1.0),
+                    "stream {i} objective diverged: {} vs {obj}",
+                    s.objective
+                );
+                assert!(
+                    (s.rho.0 - rho.0).abs() <= 1e-9
+                        && (s.rho.1 - rho.1).abs() <= 1e-9,
+                    "stream {i} rho diverged: {:?} vs {rho:?}",
+                    s.rho
+                );
+            }
+            c.shutdown();
+
+            let total = (m_streams * per_stream) as f64;
+            vec![
+                ("streams".into(), m_streams as f64),
+                ("shards".into(), shard_workers as f64),
+                ("seq_s".into(), seq_s),
+                ("mgr_s".into(), mgr_s),
+                ("seq_updates_per_s".into(), total / seq_s.max(1e-12)),
+                ("mgr_updates_per_s".into(), total / mgr_s.max(1e-12)),
+                ("speedup".into(), seq_s / mgr_s.max(1e-12)),
+            ]
+        });
+    }
+
+    bench.report(
+        "ST1 — incremental update vs full retrain per sample; \
+         MS1 — sharded multi-stream absorb throughput vs sequential",
+    );
 }

@@ -52,12 +52,14 @@ enum Msg {
     Shutdown,
 }
 
-/// Handle to the trainer thread.
+/// Handle to the trainer thread. Shared behind an `Arc` by the
+/// coordinator and the stream-manager shard workers (which submit
+/// drift-escalated retrains), so `shutdown` takes `&self`.
 pub struct TrainQueue {
     tx: Sender<Msg>,
     state: Arc<(Mutex<HashMap<JobId, JobStatus>>, Condvar)>,
     next_id: Mutex<u64>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl TrainQueue {
@@ -97,7 +99,12 @@ impl TrainQueue {
                 }
             })
             .expect("spawn trainer");
-        TrainQueue { tx, state, next_id: Mutex::new(1), worker: Some(worker) }
+        TrainQueue {
+            tx,
+            state,
+            next_id: Mutex::new(1),
+            worker: Mutex::new(Some(worker)),
+        }
     }
 
     /// Enqueue a job, returning its handle immediately.
@@ -143,9 +150,10 @@ impl TrainQueue {
         }
     }
 
-    pub fn shutdown(mut self) {
+    /// Stop after finishing everything already queued. Idempotent.
+    pub fn shutdown(&self) {
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.worker.take() {
+        if let Some(h) = self.worker.lock().unwrap().take() {
             let _ = h.join();
         }
     }

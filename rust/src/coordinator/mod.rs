@@ -10,12 +10,21 @@
 //!   their model on completion;
 //! * [`stats`] — latency histograms + counters for every stage.
 //!
-//! Streaming (the L4 layer): [`Coordinator::open_stream`] /
-//! [`Coordinator::stream_push`] drive a
-//! [`crate::stream::StreamSession`] — each absorbed sample hot-swaps
-//! the published model version in the registry, and drift trips
-//! escalate a background cascade retrain through the same train queue
-//! (experiment ST1, `rust/benches/streaming.rs`).
+//! Streaming (the L4 layer) comes in two shapes:
+//!
+//! * single-writer — [`Coordinator::open_stream`] /
+//!   [`Coordinator::stream_push`]: the caller owns a
+//!   [`crate::stream::StreamSession`] and pushes samples itself; each
+//!   absorbed sample hot-swaps the published model version in the
+//!   registry, drift trips escalate a background cascade retrain
+//!   through the same train queue (experiment ST1,
+//!   `rust/benches/streaming.rs`);
+//! * sharded multi-stream — [`Coordinator::open_streams`] /
+//!   [`Coordinator::push`] / [`Coordinator::close_stream`]: sessions
+//!   live on the [`crate::stream::StreamManager`]'s shard worker
+//!   threads (hashed by name, bounded mailboxes with backpressure,
+//!   weighted-fair scheduling per shard), so one coordinator drives
+//!   many concurrent tenant streams (experiment MS1).
 //!
 //! Everything is std-thread based (no async runtime in the vendored
 //! crate set); channels are `std::sync::mpsc`, shared state is behind
@@ -37,7 +46,11 @@ use crate::error::Error;
 use crate::runtime::Engine;
 use crate::solver::api::Trainer;
 use crate::solver::ocssvm::SlabModel;
-use crate::stream::{DriftEvent, StreamConfig, StreamSession};
+use crate::stream::shard::reconcile_retrain;
+use crate::stream::{
+    DriftEvent, StreamConfig, StreamManager, StreamPoolConfig, StreamSession,
+    StreamSpec, StreamSummary,
+};
 use crate::Result;
 
 pub use batcher::{BatcherConfig, DynamicBatcher, ScoreResponse};
@@ -63,13 +76,31 @@ pub struct StreamUpdate {
 pub struct Coordinator {
     registry: Arc<ModelRegistry>,
     batcher: DynamicBatcher,
-    jobs: TrainQueue,
+    jobs: Arc<TrainQueue>,
+    streams: StreamManager,
     stats: Arc<ServiceStats>,
 }
 
 impl Coordinator {
-    /// Start the service with `workers` scoring workers on `engine`.
+    /// Start the service with `workers` scoring workers on `engine` and
+    /// the default stream-manager sizing ([`StreamPoolConfig`]).
     pub fn start(engine: Engine, cfg: BatcherConfig, workers: usize) -> Coordinator {
+        Coordinator::start_with_streams(
+            engine,
+            cfg,
+            workers,
+            StreamPoolConfig::default(),
+        )
+    }
+
+    /// [`Coordinator::start`] with explicit stream-manager sizing
+    /// (shard worker threads + per-shard mailbox bound).
+    pub fn start_with_streams(
+        engine: Engine,
+        cfg: BatcherConfig,
+        workers: usize,
+        pool: StreamPoolConfig,
+    ) -> Coordinator {
         let registry = Arc::new(ModelRegistry::new());
         let stats = Arc::new(ServiceStats::new());
         let batcher = DynamicBatcher::start(
@@ -79,8 +110,17 @@ impl Coordinator {
             cfg,
             workers,
         );
-        let jobs = TrainQueue::start(Arc::clone(&registry), Arc::clone(&stats));
-        Coordinator { registry, batcher, jobs, stats }
+        let jobs = Arc::new(TrainQueue::start(
+            Arc::clone(&registry),
+            Arc::clone(&stats),
+        ));
+        let streams = StreamManager::start(
+            pool,
+            Arc::clone(&registry),
+            Arc::clone(&jobs),
+            Arc::clone(&stats),
+        );
+        Coordinator { registry, batcher, jobs, streams, stats }
     }
 
     /// Register a pre-trained model under a name.
@@ -161,30 +201,14 @@ impl Coordinator {
         session: &mut StreamSession,
         x: &[f64],
     ) -> Result<StreamUpdate> {
-        let mut update = StreamUpdate::default();
-        if let Some(id) = session.pending_retrain() {
-            match self.job_status(id) {
-                Some(JobStatus::Done { version, .. }) => {
-                    // Baseline on the retrained model only if it is still
-                    // the registered entry; an incremental publish may
-                    // have hot-swapped over it between Done being set and
-                    // this reconcile, in which case the session's own
-                    // freshest offsets are the coherent reference.
-                    let rho = match self.registry.get_versioned(session.name())
-                    {
-                        Some((m, v)) if v == version => (m.rho1, m.rho2),
-                        _ => session.solver().rho(),
-                    };
-                    session.retrain_finished(Some(rho));
-                    update.retrain_completed = Some(version);
-                }
-                Some(JobStatus::Failed { .. }) | None => {
-                    // drop the marker; the next drift trip resubmits
-                    session.retrain_finished(None);
-                }
-                _ => {}
-            }
-        }
+        let mut update = StreamUpdate {
+            retrain_completed: reconcile_retrain(
+                session,
+                &self.registry,
+                &self.jobs,
+            ),
+            ..StreamUpdate::default()
+        };
         let absorbed = session.absorb(x)?;
         update.drift = absorbed.drift;
         if let Some(model) = absorbed.model {
@@ -203,12 +227,53 @@ impl Coordinator {
         Ok(update)
     }
 
+    // ------------------------------------------- sharded multi-stream
+
+    /// Open a set of managed tenant streams on the sharded session
+    /// manager (all-or-nothing). Each stream lives on the shard its
+    /// name hashes to; samples go in through [`Coordinator::push`].
+    pub fn open_streams(&self, specs: Vec<StreamSpec>) -> Result<()> {
+        self.streams.open_streams(specs)
+    }
+
+    /// Enqueue one sample for a managed stream onto its shard's bounded
+    /// mailbox. Blocks under backpressure (never drops); the owning
+    /// shard worker absorbs it, hot-swaps the published model and
+    /// escalates background retrains exactly like
+    /// [`Coordinator::stream_push`] does.
+    pub fn push(&self, name: &str, x: &[f64]) -> Result<()> {
+        self.streams.push(name, x)
+    }
+
+    /// Close a managed stream: drains its queued samples, then returns
+    /// its final accounting.
+    pub fn close_stream(&self, name: &str) -> Result<StreamSummary> {
+        self.streams.close_stream(name)
+    }
+
+    /// Block until every queued sample on every shard has been absorbed.
+    pub fn quiesce_streams(&self) {
+        self.streams.quiesce()
+    }
+
+    /// The sharded session manager (open-stream census, backlog).
+    pub fn stream_manager(&self) -> &StreamManager {
+        &self.streams
+    }
+
+    /// The shared model registry (version probes, direct lookups).
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.registry
+    }
+
     pub fn stats(&self) -> &ServiceStats {
         &self.stats
     }
 
-    /// Graceful shutdown: drains queues, joins workers.
+    /// Graceful shutdown: drains the stream shards first (they publish
+    /// models and submit retrains), then the batcher and train queue.
     pub fn shutdown(self) {
+        self.streams.shutdown();
         self.batcher.shutdown();
         self.jobs.shutdown();
     }

@@ -106,6 +106,21 @@ pub struct ServiceStats {
     pub request_latency: Histogram,
     /// per-batch execution latency
     pub batch_latency: Histogram,
+    /// streamed samples enqueued through the session manager
+    pub stream_pushes: Counter,
+    /// streamed samples absorbed by shard workers
+    pub stream_absorbed: Counter,
+    /// producer waits caused by a full per-stream mailbox queue
+    /// (backpressure — counted per 50 ms wait slice, never a dropped
+    /// sample)
+    pub stream_backpressure: Counter,
+    /// streamed samples whose absorb failed after a successful push
+    /// (the one place the manager can lose a sample — also logged)
+    pub stream_absorb_errors: Counter,
+    /// background retrains escalated by shard workers
+    pub stream_retrains: Counter,
+    /// per-sample incremental absorb latency on the shard workers
+    pub absorb_latency: Histogram,
 }
 
 impl Default for ServiceStats {
@@ -125,6 +140,12 @@ impl ServiceStats {
             jobs_failed: Counter::default(),
             request_latency: Histogram::new(),
             batch_latency: Histogram::new(),
+            stream_pushes: Counter::default(),
+            stream_absorbed: Counter::default(),
+            stream_backpressure: Counter::default(),
+            stream_absorb_errors: Counter::default(),
+            stream_retrains: Counter::default(),
+            absorb_latency: Histogram::new(),
         }
     }
 
@@ -151,6 +172,22 @@ impl ServiceStats {
             self.request_latency.quantile_us(0.5),
             self.request_latency.quantile_us(0.99),
             self.request_latency.mean_us(),
+        )
+    }
+
+    /// One-line human summary of the streaming data plane.
+    pub fn stream_summary(&self) -> String {
+        format!(
+            "pushed={} absorbed={} absorb_errors={} backpressure_waits={} \
+             retrains={} absorb p50={}us p99={}us mean={:.0}us",
+            self.stream_pushes.get(),
+            self.stream_absorbed.get(),
+            self.stream_absorb_errors.get(),
+            self.stream_backpressure.get(),
+            self.stream_retrains.get(),
+            self.absorb_latency.quantile_us(0.5),
+            self.absorb_latency.quantile_us(0.99),
+            self.absorb_latency.mean_us(),
         )
     }
 }
@@ -197,5 +234,18 @@ mod tests {
         s.batches.add(4);
         assert!((s.mean_batch_size() - 25.0).abs() < 1e-12);
         assert!(!s.summary().is_empty());
+    }
+
+    #[test]
+    fn stream_counters_and_summary() {
+        let s = ServiceStats::new();
+        s.stream_pushes.add(10);
+        s.stream_absorbed.add(10);
+        s.stream_backpressure.inc();
+        s.stream_retrains.inc();
+        s.absorb_latency.record_us(120);
+        let line = s.stream_summary();
+        assert!(line.contains("pushed=10"), "{line}");
+        assert!(line.contains("backpressure_waits=1"), "{line}");
     }
 }

@@ -66,6 +66,22 @@
 //! //  the served model version and escalate retrains on drift)
 //! ```
 //!
+//! Many concurrent streams go through the sharded session manager
+//! instead — sessions hashed across shard worker threads, bounded
+//! mailboxes with backpressure, weighted-fair scheduling per shard:
+//!
+//! ```no_run
+//! use slabsvm::coordinator::{BatcherConfig, Coordinator};
+//! use slabsvm::runtime::Engine;
+//! use slabsvm::stream::{StreamConfig, StreamSpec};
+//! let c = Coordinator::start(Engine::Native, BatcherConfig::default(), 2);
+//! c.open_streams(vec![StreamSpec::new("tenant-a", StreamConfig::default())])
+//!     .unwrap();
+//! c.push("tenant-a", &[20.0, 3.0]).unwrap(); // any thread, any tenant
+//! let summary = c.close_stream("tenant-a").unwrap(); // drains, reports
+//! # let _ = summary.updates;
+//! ```
+//!
 //! The old per-module free functions (`solver::smo::train`,
 //! `solver::qp_pg::train`, …) still work but are `#[deprecated]` shims
 //! over this API; see CHANGES.md for the deprecation path.

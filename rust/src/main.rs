@@ -69,7 +69,7 @@ fn usage() -> String {
      \tfigures  regenerate paper Fig. 1 / Fig. 2 (CSV + SVG)\n\
      \tbench    print paper tables: --which table1|qp|heuristics\n\
      \tserve    run the serving coordinator on a synthetic workload\n\
-     \tstream   online learning over a synthetic drifting stream\n\
+     \tstream   online learning over synthetic drifting streams (--streams M = sharded multi-tenant)\n\
      \tsweep    k-fold cross-validated hyper-parameter grid search\n\
      \tinfo     artifact manifest + engine diagnostics\n"
         .to_string()
@@ -534,7 +534,10 @@ fn cmd_stream(args: &[String]) -> Result<()> {
     use slabsvm::stream::StreamConfig;
 
     let mut spec = vec![
-        ArgSpec::opt("points", "3000", "stream length (samples)"),
+        ArgSpec::opt("points", "3000", "stream length (samples, per stream)"),
+        ArgSpec::opt("streams", "1", "concurrent tenant streams (>1 = sharded manager)"),
+        ArgSpec::opt("shards", "2", "shard worker threads for --streams > 1"),
+        ArgSpec::opt("mailbox", "2048", "per-stream queue bound (samples)"),
         ArgSpec::opt("window", "512", "sliding-window capacity"),
         ArgSpec::opt("min-train", "128", "samples before the first publish"),
         ArgSpec::opt("nu1", "0.5", "nu1 (lower-plane outlier bound)"),
@@ -595,6 +598,11 @@ fn cmd_stream(args: &[String]) -> Result<()> {
             )))
         }
     };
+    let n_streams = p.get_usize("streams")?.max(1);
+    if n_streams > 1 {
+        return run_multi_stream(&p, cfg, drift, points, n_streams);
+    }
+
     let mut stream = SlabStream::new(
         SlabConfig::default(),
         p.get_usize("seed")? as u64,
@@ -665,6 +673,102 @@ fn cmd_stream(args: &[String]) -> Result<()> {
         drift_samples,
         session.solver().repair_iterations()
     );
+    c.shutdown();
+    Ok(())
+}
+
+/// `slabsvm stream --streams M`: M tenant streams driven concurrently
+/// through the sharded session manager — M producer threads enqueue
+/// onto shard mailboxes, shard workers absorb fairly and hot-swap each
+/// tenant's published model.
+fn run_multi_stream(
+    p: &Parsed,
+    cfg: slabsvm::stream::StreamConfig,
+    drift: Option<slabsvm::data::synthetic::Drift>,
+    points: usize,
+    n_streams: usize,
+) -> Result<()> {
+    use slabsvm::data::synthetic::{DriftSchedule, SlabStream};
+    use slabsvm::stream::{StreamPoolConfig, StreamSpec};
+
+    let shards = p.get_usize("shards")?.max(1);
+    let seed0 = p.get_usize("seed")? as u64;
+    let drift_at = p.get_usize("drift-at")?;
+    let drift_len = p.get_usize("drift-len")?;
+
+    let c = Coordinator::start_with_streams(
+        Engine::Native,
+        BatcherConfig::default(),
+        2,
+        StreamPoolConfig { shards, mailbox_cap: p.get_usize("mailbox")? },
+    );
+    c.open_streams(
+        (0..n_streams)
+            .map(|i| StreamSpec::new(format!("tenant-{i}"), cfg))
+            .collect(),
+    )?;
+    println!(
+        "streaming {points} samples x {n_streams} tenants through {shards} \
+         shard workers (window={}, min_train={})",
+        cfg.window, cfg.min_train
+    );
+    if let Some(d) = drift {
+        println!(
+            "drift: {d:?} ramping from sample {drift_at} over {drift_len} \
+             (every tenant, independent seeds)"
+        );
+    }
+
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for i in 0..n_streams {
+            let c = &c;
+            scope.spawn(move || {
+                let mut stream =
+                    SlabStream::new(SlabConfig::default(), seed0 + i as u64);
+                if let Some(d) = drift {
+                    stream = stream.with_drift(DriftSchedule {
+                        drift: d,
+                        start: drift_at,
+                        duration: drift_len,
+                    });
+                }
+                let name = format!("tenant-{i}");
+                for _ in 0..points {
+                    let x = stream.next_point();
+                    if c.push(&name, &x).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    c.quiesce_streams();
+    let dt = t0.elapsed().as_secs_f64();
+
+    let mut total_retrains = 0u64;
+    for i in 0..n_streams {
+        let s = c.close_stream(&format!("tenant-{i}"))?;
+        total_retrains += s.retrains;
+        println!(
+            "  {}: {} updates, {} retrains, v{}, slab=[{:.3}, {:.3}]",
+            s.name,
+            s.updates,
+            s.retrains,
+            s.version.unwrap_or(0),
+            s.rho.0,
+            s.rho.1
+        );
+    }
+    let total = (points * n_streams) as f64;
+    println!(
+        "aggregate: {} samples over {n_streams} tenants in {dt:.2}s \
+         ({:.0} updates/s) on {shards} shards, {total_retrains} background \
+         retrains",
+        total as u64,
+        total / dt
+    );
+    println!("streams: {}", c.stats().stream_summary());
     c.shutdown();
     Ok(())
 }

@@ -1,0 +1,399 @@
+//! Sharded multi-stream session manager: one coordinator driving many
+//! concurrent tenant streams.
+//!
+//! `Coordinator::stream_push` is single-writer — the caller owns the
+//! session and pushes one sample at a time. That shape cannot serve many
+//! tenants at once, so the manager applies the paper's decompose-and-
+//! parallelize logic one level up: sessions are **hashed to N shards by
+//! stream name**, each shard is one worker thread running an event loop
+//! over its sessions, and producers just enqueue onto the owning shard's
+//! mailbox, **bounded per stream** ([`StreamManager::push`] blocks under
+//! backpressure rather than dropping — absorbs are never lost, and a
+//! hot tenant's backlog only blocks its own producer).
+//!
+//! Within a shard the data plane is served **weighted-fair** (round-
+//! robin over streams, at most `weight` samples per visit), so one hot
+//! tenant cannot starve the others; across shards, streams proceed in
+//! parallel. Per-stream semantics are exactly the single-writer path's:
+//! samples of one stream absorb in push order on one thread, every
+//! absorbed sample hot-swaps the published model in the
+//! [`ModelRegistry`](crate::coordinator::ModelRegistry) at a
+//! monotonically increasing version, and a drift trip escalates a
+//! background cascade retrain on the shared
+//! [`TrainQueue`](crate::coordinator::TrainQueue) whose completion is
+//! handed back to the owning shard (see `stream::shard`).
+//!
+//! ```no_run
+//! use slabsvm::coordinator::{BatcherConfig, Coordinator};
+//! use slabsvm::runtime::Engine;
+//! use slabsvm::stream::{StreamConfig, StreamSpec};
+//!
+//! let c = Coordinator::start(Engine::Native, BatcherConfig::default(), 2);
+//! c.open_streams(vec![
+//!     StreamSpec::new("tenant-a", StreamConfig::default()),
+//!     StreamSpec::new("tenant-b", StreamConfig::default()).weight(4),
+//! ]).unwrap();
+//! c.push("tenant-a", &[20.0, 3.0]).unwrap();
+//! c.quiesce_streams();
+//! let summary = c.close_stream("tenant-a").unwrap();
+//! assert_eq!(summary.updates, 1);
+//! ```
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::coordinator::{ModelRegistry, ServiceStats, TrainQueue};
+use crate::error::Error;
+use crate::Result;
+
+use super::session::StreamConfig;
+use super::shard::{run_worker, Shard};
+
+/// Sizing of the sharded session manager.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamPoolConfig {
+    /// shard worker threads; sessions are hashed across them by name
+    pub shards: usize,
+    /// per-STREAM queue bound in samples; a producer blocks
+    /// (backpressure) while its own stream's queue is at this depth, so
+    /// a hot tenant's backlog never blocks its shard-mates' producers
+    pub mailbox_cap: usize,
+}
+
+impl Default for StreamPoolConfig {
+    fn default() -> Self {
+        StreamPoolConfig { shards: 2, mailbox_cap: 1024 }
+    }
+}
+
+/// One tenant stream to open on the manager.
+#[derive(Clone, Debug)]
+pub struct StreamSpec {
+    pub name: String,
+    pub cfg: StreamConfig,
+    /// weighted-fair service weight: samples absorbed per scheduler
+    /// visit before the shard moves to the next stream (≥ 1)
+    pub weight: u32,
+}
+
+impl StreamSpec {
+    pub fn new(name: impl Into<String>, cfg: StreamConfig) -> StreamSpec {
+        StreamSpec { name: name.into(), cfg, weight: 1 }
+    }
+
+    /// Builder: set the fair-scheduling weight.
+    pub fn weight(mut self, weight: u32) -> StreamSpec {
+        self.weight = weight.max(1);
+        self
+    }
+}
+
+/// Final accounting for a closed stream (everything queued at close time
+/// is absorbed first — the drain is part of the close).
+#[derive(Clone, Debug)]
+pub struct StreamSummary {
+    pub name: String,
+    /// samples absorbed over the stream's lifetime
+    pub updates: u64,
+    /// completed background retrains
+    pub retrains: u64,
+    /// last registry version this stream published (None = never warm)
+    pub version: Option<u64>,
+    /// slab offsets (ρ1, ρ2) at close
+    pub rho: (f64, f64),
+    /// dual objective ½ γᵀKγ at close
+    pub objective: f64,
+}
+
+/// The sharded session manager. Owned by the
+/// [`Coordinator`](crate::coordinator::Coordinator), which forwards
+/// `open_streams` / `push` / `close_stream` to it.
+pub struct StreamManager {
+    shards: Vec<Arc<Shard>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// stream name → owning shard index (the open-stream set)
+    route: RwLock<HashMap<String, usize>>,
+    stats: Arc<ServiceStats>,
+}
+
+impl StreamManager {
+    /// Spawn `pool.shards` worker threads sharing `registry` (model
+    /// hot-swaps), `jobs` (escalated retrains) and `stats`.
+    pub fn start(
+        pool: StreamPoolConfig,
+        registry: Arc<ModelRegistry>,
+        jobs: Arc<TrainQueue>,
+        stats: Arc<ServiceStats>,
+    ) -> StreamManager {
+        let n = pool.shards.max(1);
+        let shards: Vec<Arc<Shard>> =
+            (0..n).map(|_| Arc::new(Shard::new(pool.mailbox_cap))).collect();
+        let workers = shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let shard = Arc::clone(shard);
+                let registry = Arc::clone(&registry);
+                let jobs = Arc::clone(&jobs);
+                let stats = Arc::clone(&stats);
+                std::thread::Builder::new()
+                    .name(format!("slabsvm-shard-{i}"))
+                    .spawn(move || run_worker(shard, registry, jobs, stats))
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        StreamManager {
+            shards,
+            workers: Mutex::new(workers),
+            route: RwLock::new(HashMap::new()),
+            stats,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Deterministic name → shard placement (`DefaultHasher` uses fixed
+    /// keys, so placement is stable for a given build).
+    fn shard_of(&self, name: &str) -> usize {
+        let mut h = DefaultHasher::new();
+        name.hash(&mut h);
+        (h.finish() % self.shards.len() as u64) as usize
+    }
+
+    /// Open a set of tenant streams, all-or-nothing: any name already
+    /// open (or duplicated within the call) rejects the whole batch.
+    pub fn open_streams(&self, specs: Vec<StreamSpec>) -> Result<()> {
+        let mut route = self.route.write().unwrap();
+        let mut seen = HashSet::new();
+        for spec in &specs {
+            if route.contains_key(&spec.name) || !seen.insert(spec.name.as_str())
+            {
+                return Err(Error::Coordinator(format!(
+                    "stream '{}' already open",
+                    spec.name
+                )));
+            }
+        }
+        let mut opened: Vec<String> = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let idx = self.shard_of(&spec.name);
+            if !self.shards[idx].open(&spec.name, spec.cfg, spec.weight) {
+                // all-or-nothing also under a shutdown race: un-route
+                // whatever part of the batch already opened (the draining
+                // shards drop the half-opened sessions on their way out)
+                for name in opened {
+                    route.remove(&name);
+                }
+                return Err(Error::Coordinator(format!(
+                    "stream '{}': manager is shutting down",
+                    spec.name
+                )));
+            }
+            route.insert(spec.name.clone(), idx);
+            opened.push(spec.name);
+        }
+        Ok(())
+    }
+
+    /// Enqueue one sample onto the owning shard's mailbox. Blocks while
+    /// this stream's queue is at capacity (backpressure; never drops).
+    pub fn push(&self, name: &str, x: &[f64]) -> Result<()> {
+        let idx = {
+            let route = self.route.read().unwrap();
+            *route.get(name).ok_or_else(|| {
+                Error::Coordinator(format!("unknown stream '{name}'"))
+            })?
+        };
+        self.shards[idx].push(name, x, &self.stats)?;
+        self.stats.stream_pushes.inc();
+        Ok(())
+    }
+
+    /// Close a stream: everything already queued for it is absorbed
+    /// first, then its final accounting comes back. New pushes to the
+    /// name fail as soon as this is called; the name is reusable once it
+    /// returns.
+    pub fn close_stream(&self, name: &str) -> Result<StreamSummary> {
+        let idx = {
+            let mut route = self.route.write().unwrap();
+            route.remove(name).ok_or_else(|| {
+                Error::Coordinator(format!("unknown stream '{name}'"))
+            })?
+        };
+        self.shards[idx].close(name)
+    }
+
+    /// Block until every queued sample on every shard has been absorbed
+    /// (the point where counters like `stream_absorbed` are exact).
+    pub fn quiesce(&self) {
+        for shard in &self.shards {
+            shard.wait_idle();
+        }
+    }
+
+    /// Is a stream currently open?
+    pub fn is_open(&self, name: &str) -> bool {
+        self.route.read().unwrap().contains_key(name)
+    }
+
+    /// Number of open streams.
+    pub fn open_count(&self) -> usize {
+        self.route.read().unwrap().len()
+    }
+
+    /// Samples queued or in flight across all shards (diagnostics).
+    pub fn backlog(&self) -> usize {
+        self.shards.iter().map(|s| s.queue_depth()).sum()
+    }
+
+    /// Drain everything queued, then stop the shard workers. Safe with
+    /// background retrains still in flight — they belong to the train
+    /// queue and are simply no longer reconciled into (now dropped)
+    /// sessions. Idempotent.
+    pub fn shutdown(&self) {
+        for shard in &self.shards {
+            shard.begin_drain();
+        }
+        let mut workers = self.workers.lock().unwrap();
+        for handle in workers.drain(..) {
+            let _ = handle.join();
+        }
+        self.route.write().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+
+    fn harness(
+        shards: usize,
+        mailbox_cap: usize,
+    ) -> (StreamManager, Arc<ModelRegistry>, Arc<TrainQueue>) {
+        let registry = Arc::new(ModelRegistry::new());
+        let stats = Arc::new(ServiceStats::new());
+        let jobs = Arc::new(TrainQueue::start(
+            Arc::clone(&registry),
+            Arc::clone(&stats),
+        ));
+        let m = StreamManager::start(
+            StreamPoolConfig { shards, mailbox_cap },
+            Arc::clone(&registry),
+            Arc::clone(&jobs),
+            stats,
+        );
+        (m, registry, jobs)
+    }
+
+    fn quick_cfg() -> StreamConfig {
+        StreamConfig { window: 32, min_train: 16, ..Default::default() }
+    }
+
+    #[test]
+    fn open_push_quiesce_close_roundtrip() {
+        let (m, registry, jobs) = harness(2, 64);
+        m.open_streams(vec![StreamSpec::new("s", quick_cfg())]).unwrap();
+        assert!(m.is_open("s"));
+        assert_eq!(m.open_count(), 1);
+        let ds = SlabConfig::default().generate(40, 301);
+        for i in 0..40 {
+            m.push("s", ds.x.row(i)).unwrap();
+        }
+        m.quiesce();
+        assert_eq!(m.backlog(), 0);
+        // warm stream published a model under its name
+        assert!(registry.get("s").is_some());
+        let summary = m.close_stream("s").unwrap();
+        assert_eq!(summary.updates, 40);
+        assert!(summary.version.is_some());
+        assert!(summary.objective.is_finite());
+        assert!(!m.is_open("s"));
+        m.shutdown();
+        jobs.shutdown();
+    }
+
+    #[test]
+    fn duplicate_open_rejected_all_or_nothing() {
+        let (m, _registry, jobs) = harness(2, 64);
+        m.open_streams(vec![StreamSpec::new("a", quick_cfg())]).unwrap();
+        // existing name rejects the whole batch: b must not open
+        assert!(m
+            .open_streams(vec![
+                StreamSpec::new("b", quick_cfg()),
+                StreamSpec::new("a", quick_cfg()),
+            ])
+            .is_err());
+        assert!(!m.is_open("b"));
+        // intra-call duplicate rejects too
+        assert!(m
+            .open_streams(vec![
+                StreamSpec::new("c", quick_cfg()),
+                StreamSpec::new("c", quick_cfg()),
+            ])
+            .is_err());
+        assert!(!m.is_open("c"));
+        m.shutdown();
+        jobs.shutdown();
+    }
+
+    #[test]
+    fn unknown_stream_errors() {
+        let (m, _registry, jobs) = harness(2, 64);
+        assert!(m.push("ghost", &[0.0, 0.0]).is_err());
+        assert!(m.close_stream("ghost").is_err());
+        m.shutdown();
+        jobs.shutdown();
+    }
+
+    #[test]
+    fn name_reusable_after_close() {
+        let (m, _registry, jobs) = harness(1, 64);
+        m.open_streams(vec![StreamSpec::new("s", quick_cfg())]).unwrap();
+        let ds = SlabConfig::default().generate(5, 302);
+        for i in 0..5 {
+            m.push("s", ds.x.row(i)).unwrap();
+        }
+        let first = m.close_stream("s").unwrap();
+        assert_eq!(first.updates, 5);
+        assert!(m.push("s", ds.x.row(0)).is_err(), "closed stream took a push");
+        m.open_streams(vec![StreamSpec::new("s", quick_cfg())]).unwrap();
+        m.push("s", ds.x.row(0)).unwrap();
+        m.quiesce();
+        let second = m.close_stream("s").unwrap();
+        assert_eq!(second.updates, 1, "session must restart fresh");
+        m.shutdown();
+        jobs.shutdown();
+    }
+
+    #[test]
+    fn hashing_spreads_streams_across_shards() {
+        let (m, _registry, jobs) = harness(4, 64);
+        let mut per_shard = vec![0usize; 4];
+        for i in 0..256 {
+            per_shard[m.shard_of(&format!("stream-{i}"))] += 1;
+        }
+        for (i, &n) in per_shard.iter().enumerate() {
+            assert!(n > 0, "shard {i} never assigned: {per_shard:?}");
+        }
+        m.shutdown();
+        jobs.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_refuses_new_work() {
+        let (m, _registry, jobs) = harness(2, 64);
+        m.open_streams(vec![StreamSpec::new("s", quick_cfg())]).unwrap();
+        m.shutdown();
+        m.shutdown();
+        assert!(m.push("s", &[0.0, 0.0]).is_err());
+        assert!(m
+            .open_streams(vec![StreamSpec::new("late", quick_cfg())])
+            .is_err());
+        jobs.shutdown();
+    }
+}

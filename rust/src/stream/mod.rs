@@ -27,7 +27,14 @@
 //!   [`crate::coordinator::ModelRegistry`], and a tripped drift monitor
 //!   escalates to a full cascade retrain on the
 //!   [`crate::coordinator::TrainQueue`] (background — scoring through
-//!   the [`crate::coordinator::DynamicBatcher`] never stalls).
+//!   the [`crate::coordinator::DynamicBatcher`] never stalls);
+//! * [`manager::StreamManager`] — the sharded multi-stream session
+//!   manager: sessions hashed across N shard worker threads by stream
+//!   name, per-stream bounded queues with blocking backpressure, and
+//!   weighted-fair scheduling within a shard so one hot tenant cannot
+//!   starve its shard-mates. `Coordinator::open_streams` / `push` /
+//!   `close_stream` are the front door (experiment MS1,
+//!   `rust/benches/streaming.rs`).
 //!
 //! Why incremental works here: the slab dual decomposes per-sample (the
 //! same property the SMO pair update exploits), so admitting or evicting
@@ -49,10 +56,13 @@
 
 pub mod drift;
 pub mod incremental;
+pub mod manager;
 pub mod session;
+pub(crate) mod shard;
 pub mod window;
 
 pub use drift::{DriftConfig, DriftEvent, DriftMonitor};
 pub use incremental::{IncrementalConfig, IncrementalSmo};
+pub use manager::{StreamManager, StreamPoolConfig, StreamSpec, StreamSummary};
 pub use session::{Absorbed, StreamConfig, StreamSession};
 pub use window::SlidingWindow;

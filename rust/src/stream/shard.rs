@@ -1,0 +1,636 @@
+//! One shard of the multi-stream session manager: a bounded mailbox of
+//! per-stream sample queues plus the worker loop that exclusively owns
+//! this shard's [`StreamSession`]s.
+//!
+//! Concurrency shape: producers only touch the [`Mailbox`] (enqueue a
+//! sample, block when the shard is at capacity); the single worker
+//! thread pops batches under the same lock but **absorbs them with the
+//! lock released**, so a millisecond-scale SMO repair never blocks
+//! producers on other streams of the same shard. Sessions live in
+//! worker-local state — no lock is ever held across an absorb.
+//!
+//! Fairness: the data plane is popped weighted-round-robin
+//! ([`Mailbox::pop_fair`]): each scheduler visit takes at most `weight`
+//! samples from one stream before the cursor moves on, so a hot stream
+//! with a deep queue cannot starve its shard-mates — it just queues
+//! deeper and, past its own per-stream queue bound, backpressures its
+//! own producer (the bound is per stream precisely so a hot tenant's
+//! backlog never blocks a shard-mate's producer).
+//!
+//! Retrain hand-back: a drift-escalated background retrain is submitted
+//! by the shard worker and its completion is reconciled by the *owning
+//! shard* on a later loop tick ([`reconcile_retrain`]) — not by whatever
+//! caller thread happens to push next, as the single-writer
+//! `Coordinator::stream_push` path does.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    JobStatus, ModelRegistry, ServiceStats, TrainQueue, TrainRequest,
+};
+use crate::error::Error;
+use crate::Result;
+
+use super::manager::StreamSummary;
+use super::session::{StreamConfig, StreamSession};
+
+/// Control-plane events. Not subject to the data-plane bound — an open
+/// or close must never be refused because samples are queued.
+pub(crate) enum Control {
+    Open { name: String, cfg: StreamConfig },
+    Close { name: String, ack: Sender<Result<StreamSummary>> },
+}
+
+/// Per-stream FIFO of samples waiting to be absorbed.
+struct StreamQueue {
+    samples: VecDeque<Vec<f64>>,
+    /// weighted-fair service weight: samples per scheduler visit (≥ 1)
+    weight: u32,
+    /// expected sample dimension — validated at push time so a
+    /// malformed producer errors instead of panicking the shard worker
+    dim: usize,
+}
+
+/// Shared producer/worker state of one shard.
+struct Mailbox {
+    /// entry exists exactly while the stream is open on this shard
+    queues: HashMap<String, StreamQueue>,
+    /// round-robin service order (open order) + next-visit cursor
+    order: Vec<String>,
+    cursor: usize,
+    /// total samples across all queues (idle/quiesce accounting; the
+    /// backpressure bound is per-stream queue depth, not this total)
+    queued: usize,
+    /// samples popped by the worker but not yet absorbed (so "idle"
+    /// means queued + in_flight == 0, not just an empty queue)
+    in_flight: usize,
+    control: VecDeque<Control>,
+    draining: bool,
+}
+
+impl Mailbox {
+    fn new() -> Mailbox {
+        Mailbox {
+            queues: HashMap::new(),
+            order: Vec::new(),
+            cursor: 0,
+            queued: 0,
+            in_flight: 0,
+            control: VecDeque::new(),
+            draining: false,
+        }
+    }
+
+    /// Weighted-fair pop: scan streams round-robin from the cursor; the
+    /// first non-empty queue yields up to `weight` samples and the
+    /// cursor moves just past it, so every non-empty shard-mate is
+    /// visited before this stream is served again.
+    fn pop_fair(&mut self) -> Option<(String, Vec<Vec<f64>>)> {
+        let n = self.order.len();
+        if n == 0 {
+            return None;
+        }
+        for step in 0..n {
+            let idx = (self.cursor + step) % n;
+            // probe without allocating; clone only the selected name
+            let has_work = self
+                .queues
+                .get(&self.order[idx])
+                .is_some_and(|q| !q.samples.is_empty());
+            if !has_work {
+                continue;
+            }
+            let name = self.order[idx].clone();
+            let q = self.queues.get_mut(&name).expect("probed above");
+            let take = (q.weight.max(1) as usize).min(q.samples.len());
+            let batch: Vec<Vec<f64>> = q.samples.drain(..take).collect();
+            self.queued -= take;
+            self.in_flight += take;
+            self.cursor = (idx + 1) % n;
+            return Some((name, batch));
+        }
+        None
+    }
+
+    /// Drop a stream's queue and service-order slot (close finalize).
+    fn remove_stream(&mut self, name: &str) {
+        if let Some(q) = self.queues.remove(name) {
+            self.queued -= q.samples.len();
+        }
+        if let Some(pos) = self.order.iter().position(|n| n == name) {
+            self.order.remove(pos);
+            if pos < self.cursor {
+                self.cursor -= 1;
+            }
+            if self.order.is_empty() {
+                self.cursor = 0;
+            } else {
+                self.cursor %= self.order.len();
+            }
+        }
+    }
+}
+
+/// One shard: mailbox + condvars. The worker thread is spawned by the
+/// manager and runs [`run_worker`] over this state.
+pub(crate) struct Shard {
+    mail: Mutex<Mailbox>,
+    /// worker wakeups: data or control arrived, or draining began
+    not_empty: Condvar,
+    /// producer + quiescer wakeups: space freed / work retired
+    space: Condvar,
+    cap: usize,
+}
+
+impl Shard {
+    pub(crate) fn new(mailbox_cap: usize) -> Shard {
+        Shard {
+            mail: Mutex::new(Mailbox::new()),
+            not_empty: Condvar::new(),
+            space: Condvar::new(),
+            cap: mailbox_cap.max(1),
+        }
+    }
+
+    /// Register a stream: queue entry (so pushes routed here are valid
+    /// immediately) + the Open control the worker turns into a session.
+    /// Returns false when the shard is already draining.
+    pub(crate) fn open(&self, name: &str, cfg: StreamConfig, weight: u32) -> bool {
+        let mut mail = self.mail.lock().unwrap();
+        if mail.draining {
+            return false;
+        }
+        mail.queues.insert(
+            name.to_string(),
+            StreamQueue {
+                samples: VecDeque::new(),
+                weight: weight.max(1),
+                dim: cfg.dim,
+            },
+        );
+        mail.order.push(name.to_string());
+        mail.control.push_back(Control::Open {
+            name: name.to_string(),
+            cfg,
+        });
+        drop(mail);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Enqueue one sample. The bound is **per stream**: a producer
+    /// blocks only while its own stream's queue is at capacity (counted
+    /// in `stats.stream_backpressure`) rather than dropping the sample,
+    /// so absorbs are never lost to backpressure — and a hot tenant
+    /// backpressures its own producer, not its shard-mates'.
+    pub(crate) fn push(
+        &self,
+        name: &str,
+        x: &[f64],
+        stats: &ServiceStats,
+    ) -> Result<()> {
+        let mut mail = self.mail.lock().unwrap();
+        loop {
+            if mail.draining {
+                return Err(Error::Coordinator(format!(
+                    "stream '{name}': manager is shutting down"
+                )));
+            }
+            let depth = match mail.queues.get(name) {
+                None => {
+                    return Err(Error::Coordinator(format!(
+                        "unknown stream '{name}'"
+                    )))
+                }
+                Some(q) if q.dim != x.len() => {
+                    return Err(Error::Coordinator(format!(
+                        "stream '{name}': sample has {} features, \
+                         stream expects {}",
+                        x.len(),
+                        q.dim
+                    )))
+                }
+                Some(q) => q.samples.len(),
+            };
+            if depth < self.cap {
+                break;
+            }
+            stats.stream_backpressure.inc();
+            let (guard, _) = self
+                .space
+                .wait_timeout(mail, Duration::from_millis(50))
+                .unwrap();
+            mail = guard;
+        }
+        mail.queues
+            .get_mut(name)
+            .expect("checked above")
+            .samples
+            .push_back(x.to_vec());
+        mail.queued += 1;
+        drop(mail);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Request close + drain: the worker absorbs everything still queued
+    /// for the stream, then answers with its final [`StreamSummary`].
+    pub(crate) fn close(&self, name: &str) -> Result<StreamSummary> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        {
+            let mut mail = self.mail.lock().unwrap();
+            if mail.draining {
+                return Err(Error::Coordinator(format!(
+                    "stream '{name}': manager is shutting down"
+                )));
+            }
+            mail.control.push_back(Control::Close {
+                name: name.to_string(),
+                ack: tx,
+            });
+        }
+        self.not_empty.notify_one();
+        rx.recv().map_err(|_| {
+            Error::Coordinator("stream manager worker exited".into())
+        })?
+    }
+
+    /// Block until nothing is queued or in flight on this shard.
+    pub(crate) fn wait_idle(&self) {
+        let mut mail = self.mail.lock().unwrap();
+        while mail.queued + mail.in_flight > 0 || !mail.control.is_empty() {
+            let (guard, _) = self
+                .space
+                .wait_timeout(mail, Duration::from_millis(20))
+                .unwrap();
+            mail = guard;
+        }
+    }
+
+    /// Samples currently queued (diagnostics).
+    pub(crate) fn queue_depth(&self) -> usize {
+        let mail = self.mail.lock().unwrap();
+        mail.queued + mail.in_flight
+    }
+
+    /// Begin shutdown: refuse new pushes, let the worker drain what is
+    /// already queued (controls included) and exit.
+    pub(crate) fn begin_drain(&self) {
+        let mut mail = self.mail.lock().unwrap();
+        mail.draining = true;
+        drop(mail);
+        self.not_empty.notify_all();
+        self.space.notify_all();
+    }
+}
+
+/// Worker-local per-stream state (exclusively owned — never locked).
+struct Slot {
+    session: StreamSession,
+    /// last registry version this shard published for the stream
+    last_version: Option<u64>,
+}
+
+fn summarize(slot: &Slot) -> StreamSummary {
+    let solver = slot.session.solver();
+    let (objective, rho) = if solver.is_empty() {
+        (0.0, (0.0, 0.0))
+    } else {
+        (solver.report().stats.objective, solver.rho())
+    };
+    StreamSummary {
+        name: slot.session.name().to_string(),
+        updates: slot.session.updates(),
+        retrains: slot.session.retrains(),
+        version: slot.last_version,
+        rho,
+        objective,
+    }
+}
+
+/// Reconcile a finished background retrain with its session: clear the
+/// in-flight marker and re-baseline drift on the retrained offsets (or
+/// the session's own freshest ones if an incremental publish already
+/// hot-swapped over the retrained entry). Shared by the shard worker
+/// (owning-shard hand-back) and the single-writer
+/// `Coordinator::stream_push` path. Returns the completed registry
+/// version, if a retrain landed.
+pub(crate) fn reconcile_retrain(
+    session: &mut StreamSession,
+    registry: &ModelRegistry,
+    jobs: &TrainQueue,
+) -> Option<u64> {
+    let id = session.pending_retrain()?;
+    match jobs.status(id) {
+        Some(JobStatus::Done { version, .. }) => {
+            let rho = match registry.get_versioned(session.name()) {
+                Some((m, v)) if v == version => (m.rho1, m.rho2),
+                _ => session.solver().rho(),
+            };
+            session.retrain_finished(Some(rho));
+            Some(version)
+        }
+        Some(JobStatus::Failed { .. }) | None => {
+            // drop the marker; the next drift trip resubmits
+            session.retrain_finished(None);
+            None
+        }
+        _ => None,
+    }
+}
+
+/// Absorb one sample into a slot: hot-swap the refreshed model into the
+/// registry and escalate a background retrain when drift tripped.
+fn absorb_one(
+    slot: &mut Slot,
+    x: &[f64],
+    registry: &ModelRegistry,
+    jobs: &TrainQueue,
+    stats: &ServiceStats,
+) {
+    let t0 = Instant::now();
+    match slot.session.absorb(x) {
+        Ok(absorbed) => {
+            if let Some(model) = absorbed.model {
+                slot.last_version =
+                    Some(registry.insert(slot.session.name(), model));
+            }
+            if absorbed.retrain_wanted {
+                let id = jobs.submit(TrainRequest {
+                    name: slot.session.name().to_string(),
+                    dataset: slot.session.snapshot(),
+                    trainer: slot.session.retrain_trainer(),
+                });
+                slot.session.retrain_submitted(id);
+                stats.stream_retrains.inc();
+            }
+            stats.stream_absorbed.inc();
+        }
+        Err(e) => {
+            // the producer already got Ok from push — record the loss
+            // where it is diagnosable instead of folding it into the
+            // scoring error counter
+            crate::log_warn!(
+                "stream",
+                "stream '{}': absorb failed, sample dropped: {e}",
+                slot.session.name()
+            );
+            stats.stream_absorb_errors.inc();
+        }
+    }
+    stats.absorb_latency.record(t0.elapsed());
+}
+
+/// The shard worker loop. Exits once draining is requested and every
+/// queue, control event and close acknowledgement has been retired —
+/// in-flight background retrains do NOT block the exit (they are the
+/// train queue's to finish; the session is simply dropped).
+pub(crate) fn run_worker(
+    shard: Arc<Shard>,
+    registry: Arc<ModelRegistry>,
+    jobs: Arc<TrainQueue>,
+    stats: Arc<ServiceStats>,
+) {
+    let mut slots: HashMap<String, Slot> = HashMap::new();
+    let mut closing: HashMap<String, Sender<Result<StreamSummary>>> =
+        HashMap::new();
+    loop {
+        // Take work. Controls are drained in the same critical section
+        // as the data pop, and a stream's queue entry is created in the
+        // same critical section as its Open control, so a session always
+        // exists (processed below, before the absorb) by the time its
+        // first sample is popped.
+        let (controls, batch, draining) = {
+            let mut mail = shard.mail.lock().unwrap();
+            let controls: Vec<Control> = mail.control.drain(..).collect();
+            let batch = mail.pop_fair();
+            (controls, batch, mail.draining)
+        };
+
+        for c in controls {
+            match c {
+                Control::Open { name, cfg } => {
+                    let session = StreamSession::new(name.clone(), cfg);
+                    slots.insert(name, Slot { session, last_version: None });
+                }
+                Control::Close { name, ack } => {
+                    closing.insert(name, ack);
+                }
+            }
+        }
+
+        let had_batch = batch.is_some();
+        if let Some((name, samples)) = batch {
+            if let Some(slot) = slots.get_mut(&name) {
+                for x in &samples {
+                    absorb_one(slot, x, &registry, &jobs, &stats);
+                }
+            }
+            let mut mail = shard.mail.lock().unwrap();
+            mail.in_flight -= samples.len();
+            drop(mail);
+            shard.space.notify_all();
+        }
+
+        // Owning-shard retrain hand-back: completed background retrains
+        // re-baseline their session here, on the shard that owns it.
+        let mut pending_retrains = false;
+        for slot in slots.values_mut() {
+            reconcile_retrain(&mut slot.session, &registry, &jobs);
+            pending_retrains |= slot.session.pending_retrain().is_some();
+        }
+
+        // Finalize closes whose queues have fully drained. The emptiness
+        // check and the queue removal happen in ONE critical section: a
+        // racing push that already passed the route lookup may still land
+        // a sample, and a bare check-then-remove would silently drop it —
+        // the "absorbs are never lost" invariant holds only if a late
+        // sample defers the finalize to a later tick instead.
+        if !closing.is_empty() {
+            let candidates: Vec<String> = closing.keys().cloned().collect();
+            for name in candidates {
+                let drained = {
+                    let mut mail = shard.mail.lock().unwrap();
+                    let empty = match mail.queues.get(&name) {
+                        Some(q) => q.samples.is_empty(),
+                        None => true,
+                    };
+                    if empty {
+                        mail.remove_stream(&name);
+                    }
+                    empty
+                };
+                if !drained {
+                    continue; // a late push landed; absorb it first
+                }
+                let ack = closing.remove(&name).expect("key from closing");
+                let summary = slots.remove(&name).map(|slot| summarize(&slot));
+                shard.space.notify_all();
+                let _ = ack.send(summary.ok_or_else(|| {
+                    Error::Coordinator(format!("unknown stream '{name}'"))
+                }));
+            }
+        }
+
+        if draining {
+            let done = {
+                let mail = shard.mail.lock().unwrap();
+                mail.queued == 0
+                    && mail.in_flight == 0
+                    && mail.control.is_empty()
+                    && closing.is_empty()
+            };
+            if done {
+                shard.space.notify_all();
+                return;
+            }
+            continue;
+        }
+
+        if !had_batch {
+            // Idle: sleep until data/control arrives (push, open, close
+            // and begin_drain all notify `not_empty`, and the lock is
+            // held from the emptiness check to the wait, so no wakeup is
+            // missed). Only a pending background retrain needs a poll —
+            // the train queue has no way to notify this shard.
+            let mail = shard.mail.lock().unwrap();
+            if mail.queued == 0 && mail.control.is_empty() && !mail.draining {
+                if pending_retrains {
+                    let _ = shard
+                        .not_empty
+                        .wait_timeout(mail, Duration::from_millis(5))
+                        .unwrap();
+                } else {
+                    let _ = shard.not_empty.wait(mail).unwrap();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mailbox_with(streams: &[(&str, u32, usize)]) -> Mailbox {
+        // (name, weight, queued samples)
+        let mut m = Mailbox::new();
+        for &(name, weight, n) in streams {
+            let mut q = VecDeque::new();
+            for i in 0..n {
+                q.push_back(vec![i as f64]);
+            }
+            m.queued += n;
+            m.queues.insert(
+                name.to_string(),
+                StreamQueue { samples: q, weight, dim: 1 },
+            );
+            m.order.push(name.to_string());
+        }
+        m
+    }
+
+    #[test]
+    fn pop_fair_round_robins_across_streams() {
+        // hot stream with a deep queue cannot starve its shard-mates
+        let mut m = mailbox_with(&[("hot", 1, 100), ("cold", 1, 3)]);
+        let mut service = Vec::new();
+        while let Some((name, batch)) = m.pop_fair() {
+            assert_eq!(batch.len(), 1);
+            service.push(name);
+        }
+        // cold's 3 samples are served within the first 6 visits
+        let cold_positions: Vec<usize> = service
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.as_str() == "cold")
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(cold_positions.len(), 3);
+        assert!(
+            *cold_positions.last().unwrap() <= 5,
+            "cold starved: served at {cold_positions:?}"
+        );
+        assert_eq!(service.len(), 103);
+        assert_eq!(m.queued, 0);
+        assert_eq!(m.in_flight, 103);
+    }
+
+    #[test]
+    fn pop_fair_respects_weights() {
+        let mut m = mailbox_with(&[("a", 3, 9), ("b", 1, 3)]);
+        let mut sizes = Vec::new();
+        while let Some((name, batch)) = m.pop_fair() {
+            sizes.push((name, batch.len()));
+        }
+        // a gets 3 per visit, b gets 1 per visit, alternating
+        assert_eq!(
+            sizes,
+            vec![
+                ("a".to_string(), 3),
+                ("b".to_string(), 1),
+                ("a".to_string(), 3),
+                ("b".to_string(), 1),
+                ("a".to_string(), 3),
+                ("b".to_string(), 1),
+            ]
+        );
+    }
+
+    #[test]
+    fn pop_fair_empty_and_single() {
+        let mut m = Mailbox::new();
+        assert!(m.pop_fair().is_none());
+        let mut m = mailbox_with(&[("only", 2, 5)]);
+        let (n, b) = m.pop_fair().unwrap();
+        assert_eq!((n.as_str(), b.len()), ("only", 2));
+    }
+
+    #[test]
+    fn remove_stream_fixes_cursor_and_counts() {
+        let mut m = mailbox_with(&[("a", 1, 2), ("b", 1, 2), ("c", 1, 2)]);
+        let (first, _) = m.pop_fair().unwrap();
+        assert_eq!(first, "a");
+        assert_eq!(m.cursor, 1);
+        m.remove_stream("a"); // removed index 0 < cursor -> cursor shifts
+        assert_eq!(m.cursor, 0);
+        // 6 queued - 1 popped - a's 1 remaining (dropped with the queue)
+        assert_eq!(m.queued, 4);
+        let (next, _) = m.pop_fair().unwrap();
+        assert_eq!(next, "b");
+        m.remove_stream("b");
+        m.remove_stream("c");
+        assert_eq!(m.queued, 0);
+        assert!(m.pop_fair().is_none());
+        assert_eq!(m.cursor, 0);
+    }
+
+    #[test]
+    fn shard_push_rejects_unknown_stream() {
+        let shard = Shard::new(8);
+        let stats = ServiceStats::new();
+        assert!(shard.push("ghost", &[0.0, 0.0], &stats).is_err());
+    }
+
+    #[test]
+    fn shard_push_rejects_dimension_mismatch() {
+        let shard = Shard::new(8);
+        let stats = ServiceStats::new();
+        assert!(shard.open("s", StreamConfig::default(), 1)); // dim = 2
+        assert!(shard.push("s", &[1.0, 2.0, 3.0], &stats).is_err());
+        assert!(shard.push("s", &[1.0], &stats).is_err());
+        assert_eq!(shard.queue_depth(), 0, "bad samples must not queue");
+    }
+
+    #[test]
+    fn shard_open_rejected_while_draining() {
+        let shard = Shard::new(8);
+        shard.begin_drain();
+        assert!(!shard.open("late", StreamConfig::default(), 1));
+        let stats = ServiceStats::new();
+        assert!(shard.push("late", &[0.0, 0.0], &stats).is_err());
+    }
+}

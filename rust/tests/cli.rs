@@ -82,6 +82,49 @@ fn stream_subcommand_runs_online_updates() {
 }
 
 #[test]
+fn stream_subcommand_multi_tenant_mode() {
+    let out = bin()
+        .args([
+            "stream",
+            "--streams",
+            "3",
+            "--shards",
+            "2",
+            "--points",
+            "120",
+            "--window",
+            "48",
+            "--min-train",
+            "24",
+            "--drift",
+            "none",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "multi-tenant stream failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("streaming 120 samples x 3 tenants through 2 shard"),
+        "missing banner: {text}"
+    );
+    for tenant in ["tenant-0", "tenant-1", "tenant-2"] {
+        assert!(
+            text.contains(&format!("{tenant}: 120 updates")),
+            "missing per-tenant summary for {tenant}: {text}"
+        );
+    }
+    assert!(
+        text.contains("aggregate: 360 samples over 3 tenants"),
+        "missing aggregate line: {text}"
+    );
+    assert!(text.contains("backpressure_waits="), "missing stream stats: {text}");
+}
+
+#[test]
 fn help_and_unknown_subcommand() {
     let out = bin().arg("help").output().unwrap();
     assert!(out.status.success());
