@@ -44,7 +44,7 @@ fn main() -> slabsvm::Result<()> {
         Engine::Native,
         BatcherConfig::default(),
         2,
-        StreamPoolConfig { shards: 2, mailbox_cap: 512 },
+        StreamPoolConfig { shards: 2, mailbox_cap: 512, checkpoint: None },
     );
     coordinator.open_streams(
         (0..tenants)

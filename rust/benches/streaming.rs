@@ -23,6 +23,15 @@
 //! single-stream path within 1e-9 — the manager must parallelize the
 //! work, not change it.
 //!
+//! **PS1** — restore-resume vs cold window refill — quantifies the
+//! persistence subsystem: a restored session (decode + Gram rebuild +
+//! certificate, `restore_s`) serves at the reference AUC immediately
+//! (`restore_samples_to_auc` = 0), while a cold session must absorb
+//! `cold_samples_to_auc` fresh samples over `cold_refill_s` seconds
+//! before its published model recovers the reference AUC (within
+//! 0.02). ρ parity ≤ 1e-9 between the live and restored session is
+//! asserted before timing is trusted.
+//!
 //! Run: `cargo bench --bench streaming`
 
 use slabsvm::bench::Bench;
@@ -152,6 +161,7 @@ fn main() {
                 StreamPoolConfig {
                     shards: shard_workers,
                     mailbox_cap: 256,
+                    checkpoint: None,
                 },
             );
             c.open_streams(
@@ -206,8 +216,84 @@ fn main() {
         });
     }
 
+    // ------------------------------------------------------------- PS1
+    let ps_window = if fast { 64 } else { 256 };
+    let warm_feed = ps_window + ps_window / 2;
+    bench.run(&format!("restore-vs-cold-refill/w={ps_window}"), || {
+        let cfg = StreamConfig {
+            kernel: Kernel::Linear,
+            dim: 2,
+            window: ps_window,
+            min_train: ps_window / 2,
+            ..Default::default()
+        };
+        let mut stream = SlabStream::new(SlabConfig::default(), 4242);
+        let mut live = StreamSession::new("ps1", cfg);
+        for _ in 0..warm_feed {
+            live.absorb(&stream.next_point()).expect("warm feed");
+        }
+        let eval = SlabConfig::default().generate_eval(200, 200, 4243);
+        let auc_of = |model: &slabsvm::solver::ocssvm::SlabModel| {
+            let margins: Vec<f64> = (0..eval.len())
+                .map(|i| model.margin(eval.x.row(i)))
+                .collect();
+            slabsvm::metrics::roc_auc(&eval.y, &margins)
+        };
+        let ref_auc = auc_of(&live.solver().model());
+        let bytes = live.snapshot();
+
+        // restore path: one decode + Gram rebuild + certificate buys
+        // back the full model — zero samples to recover AUC
+        let t0 = std::time::Instant::now();
+        let restored = StreamSession::restore(&bytes).expect("restore");
+        let restore_s = t0.elapsed().as_secs_f64();
+        let restored_auc = auc_of(&restored.solver().model());
+        // parity gate: a fast wrong restore is worthless
+        let (l, r) = (live.solver().rho(), restored.solver().rho());
+        assert!(
+            (l.0 - r.0).abs() <= 1e-9 && (l.1 - r.1).abs() <= 1e-9,
+            "restored rho diverged: {l:?} vs {r:?}"
+        );
+        assert!(
+            (restored_auc - ref_auc).abs() <= 1e-9,
+            "restored AUC {restored_auc} != reference {ref_auc}"
+        );
+
+        // cold path: a fresh session on the SAME continuing stream must
+        // refill before its model recovers the reference AUC
+        let cap = 4 * ps_window;
+        let mut cold = StreamSession::new("cold", cfg);
+        let mut cold_samples = 0usize;
+        let mut recovered = None;
+        let t1 = std::time::Instant::now();
+        while cold_samples < cap {
+            let a = cold.absorb(&stream.next_point()).expect("cold absorb");
+            cold_samples += 1;
+            if let Some(model) = a.model {
+                if cold_samples % 4 == 0 && auc_of(&model) >= ref_auc - 0.02
+                {
+                    recovered = Some(cold_samples);
+                    break;
+                }
+            }
+        }
+        let cold_s = t1.elapsed().as_secs_f64();
+        vec![
+            ("ref_auc".into(), ref_auc),
+            ("restore_s".into(), restore_s),
+            ("restore_samples_to_auc".into(), 0.0),
+            (
+                "cold_samples_to_auc".into(),
+                recovered.unwrap_or(cap) as f64,
+            ),
+            ("cold_refill_s".into(), cold_s),
+            ("refill_speedup".into(), cold_s / restore_s.max(1e-12)),
+        ]
+    });
+
     bench.report(
         "ST1 — incremental update vs full retrain per sample; \
-         MS1 — sharded multi-stream absorb throughput vs sequential",
+         MS1 — sharded multi-stream absorb throughput vs sequential; \
+         PS1 — snapshot restore-resume vs cold window refill",
     );
 }

@@ -26,6 +26,15 @@
 //!   weighted-fair scheduling per shard), so one coordinator drives
 //!   many concurrent tenant streams (experiment MS1).
 //!
+//! Managed streams are durable: shard workers checkpoint sessions
+//! periodically ([`crate::stream::CheckpointConfig`] on the pool
+//! config), and [`Coordinator::snapshot_streams`] /
+//! [`Coordinator::restore_streams`] snapshot and resume the whole
+//! fleet across a process restart — restored sessions continue from
+//! their persisted window + dual state via a bounded warm-started
+//! repair instead of a cold window refill (experiment PS1,
+//! `rust/src/stream/persist.rs`).
+//!
 //! Everything is std-thread based (no async runtime in the vendored
 //! crate set); channels are `std::sync::mpsc`, shared state is behind
 //! `RwLock`/`Mutex`. The binary's `serve` subcommand drives this with a
@@ -218,7 +227,7 @@ impl Coordinator {
         if absorbed.retrain_wanted {
             let id = self.submit_train(TrainRequest {
                 name: session.name().to_string(),
-                dataset: session.snapshot(),
+                dataset: session.window_dataset(),
                 trainer: session.retrain_trainer(),
             });
             session.retrain_submitted(id);
@@ -254,6 +263,32 @@ impl Coordinator {
     /// Block until every queued sample on every shard has been absorbed.
     pub fn quiesce_streams(&self) {
         self.streams.quiesce()
+    }
+
+    /// Snapshot every open managed stream into `dir` (atomic writes,
+    /// per-stream failure isolation). Call
+    /// [`Coordinator::quiesce_streams`] first when every pushed sample
+    /// must be captured. Restore into a fresh coordinator with
+    /// [`Coordinator::restore_streams`].
+    pub fn snapshot_streams(
+        &self,
+        dir: &std::path::Path,
+    ) -> Result<Vec<crate::stream::SnapshotOutcome>> {
+        self.streams.snapshot_streams(dir)
+    }
+
+    /// Resume every `*.snap` session in `dir` on this coordinator: the
+    /// window + dual state restore without a cold refill (bounded
+    /// warm-started repair instead of a full retrain), each model is
+    /// re-published at or past its pre-restart registry version, and
+    /// new samples can be pushed immediately. Per-file failure
+    /// isolation: a corrupt snapshot yields an error outcome for that
+    /// file while every other stream resumes.
+    pub fn restore_streams(
+        &self,
+        dir: &std::path::Path,
+    ) -> Result<Vec<crate::stream::RestoreOutcome>> {
+        self.streams.restore_streams(dir)
     }
 
     /// The sharded session manager (open-stream census, backlog).

@@ -35,6 +35,25 @@ impl ModelRegistry {
         version
     }
 
+    /// Insert at a version no lower than `floor` (still monotone per
+    /// name). Snapshot restore uses this to resume the pre-restart
+    /// version sequence, so a watcher that recorded versions before the
+    /// crash never observes the counter reset.
+    pub fn insert_with_floor(
+        &self,
+        name: &str,
+        model: SlabModel,
+        floor: u64,
+    ) -> u64 {
+        let mut map = self.inner.write().unwrap();
+        let version = map.get(name).map_or(1, |e| e.version + 1).max(floor);
+        map.insert(
+            name.to_string(),
+            Entry { model: Arc::new(model), version },
+        );
+        version
+    }
+
     pub fn get(&self, name: &str) -> Option<Arc<SlabModel>> {
         self.inner.read().unwrap().get(name).map(|e| Arc::clone(&e.model))
     }

@@ -119,6 +119,13 @@ pub struct ServiceStats {
     pub stream_absorb_errors: Counter,
     /// background retrains escalated by shard workers
     pub stream_retrains: Counter,
+    /// session snapshots durably written (periodic checkpoints + final
+    /// close/drain checkpoints + front-door snapshot sweeps)
+    pub stream_checkpoints: Counter,
+    /// snapshot writes that failed (also logged with the path)
+    pub stream_checkpoint_errors: Counter,
+    /// sessions resumed from a snapshot by this process
+    pub stream_restores: Counter,
     /// per-sample incremental absorb latency on the shard workers
     pub absorb_latency: Histogram,
 }
@@ -145,6 +152,9 @@ impl ServiceStats {
             stream_backpressure: Counter::default(),
             stream_absorb_errors: Counter::default(),
             stream_retrains: Counter::default(),
+            stream_checkpoints: Counter::default(),
+            stream_checkpoint_errors: Counter::default(),
+            stream_restores: Counter::default(),
             absorb_latency: Histogram::new(),
         }
     }
@@ -179,12 +189,16 @@ impl ServiceStats {
     pub fn stream_summary(&self) -> String {
         format!(
             "pushed={} absorbed={} absorb_errors={} backpressure_waits={} \
-             retrains={} absorb p50={}us p99={}us mean={:.0}us",
+             retrains={} checkpoints={} checkpoint_errors={} restores={} \
+             absorb p50={}us p99={}us mean={:.0}us",
             self.stream_pushes.get(),
             self.stream_absorbed.get(),
             self.stream_absorb_errors.get(),
             self.stream_backpressure.get(),
             self.stream_retrains.get(),
+            self.stream_checkpoints.get(),
+            self.stream_checkpoint_errors.get(),
+            self.stream_restores.get(),
             self.absorb_latency.quantile_us(0.5),
             self.absorb_latency.quantile_us(0.99),
             self.absorb_latency.mean_us(),

@@ -34,6 +34,11 @@ pub enum Error {
     /// Coordinator-level failures (queue shutdown, deadline exceeded...).
     Coordinator(String),
 
+    /// Stream snapshot/restore failures: bad magic, unsupported format
+    /// version, checksum or config-fingerprint mismatch, infeasible
+    /// persisted dual state.
+    Snapshot(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -50,6 +55,7 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Pjrt(m) => write!(f, "pjrt runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Snapshot(m) => write!(f, "snapshot error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -85,6 +91,10 @@ impl Error {
     pub fn data(msg: impl Into<String>) -> Self {
         Error::Data(msg.into())
     }
+    /// Helper for snapshot/restore errors.
+    pub fn snapshot(msg: impl Into<String>) -> Self {
+        Error::Snapshot(msg.into())
+    }
 }
 
 #[cfg(test)]
@@ -98,6 +108,10 @@ mod tests {
             "invalid configuration: nu out of range"
         );
         assert_eq!(Error::data("bad csv").to_string(), "data error: bad csv");
+        assert_eq!(
+            Error::snapshot("bad magic").to_string(),
+            "snapshot error: bad magic"
+        );
         assert!(Error::NoConvergence("x".into())
             .to_string()
             .starts_with("solver did not converge"));

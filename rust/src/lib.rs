@@ -82,6 +82,21 @@
 //! # let _ = summary.updates;
 //! ```
 //!
+//! Sessions are durable ([`stream::persist`]): snapshot a session (or
+//! a whole fleet via `Coordinator::snapshot_streams`) and a restarted
+//! process resumes it from the persisted window + dual state — a
+//! bounded warm-started repair instead of a cold window refill:
+//!
+//! ```no_run
+//! use slabsvm::stream::{StreamConfig, StreamSession};
+//! let mut session = StreamSession::new("live", StreamConfig::default());
+//! session.absorb(&[20.0, 3.0]).unwrap();
+//! let bytes = session.snapshot(); // versioned, checksummed, bitwise
+//! // …process restarts…
+//! let resumed = StreamSession::restore(&bytes).unwrap();
+//! assert_eq!(resumed.updates(), 1); // counters, window, dual: intact
+//! ```
+//!
 //! The old per-module free functions (`solver::smo::train`,
 //! `solver::qp_pg::train`, …) still work but are `#[deprecated]` shims
 //! over this API; see CHANGES.md for the deprecation path.

@@ -7,6 +7,10 @@
 //!   figures   regenerate the paper's Fig. 1 / Fig. 2 (CSV + SVG)
 //!   bench     print paper tables: table1 | qp | heuristics
 //!   serve     run the coordinator on a synthetic open-loop workload
+//!   stream    online learning on drifting streams; --restore-dir
+//!             resumes a snapshotted fleet, --snapshot-dir /
+//!             --checkpoint-dir persist it
+//!   snapshot  write durable stream snapshots (or --inspect one)
 //!   info      artifact manifest + engine diagnostics
 //!
 //! Run `slabsvm <cmd> --help` for per-command options.
@@ -43,6 +47,7 @@ fn main() -> ExitCode {
         "bench" => cmd_bench(rest),
         "serve" => cmd_serve(rest),
         "stream" => cmd_stream(rest),
+        "snapshot" => cmd_snapshot(rest),
         "sweep" => cmd_sweep(rest),
         "info" => cmd_info(rest),
         "--help" | "-h" | "help" => {
@@ -70,6 +75,7 @@ fn usage() -> String {
      \tbench    print paper tables: --which table1|qp|heuristics\n\
      \tserve    run the serving coordinator on a synthetic workload\n\
      \tstream   online learning over synthetic drifting streams (--streams M = sharded multi-tenant)\n\
+     \tsnapshot write durable stream snapshots from a synthetic fleet, or --inspect one\n\
      \tsweep    k-fold cross-validated hyper-parameter grid search\n\
      \tinfo     artifact manifest + engine diagnostics\n"
         .to_string()
@@ -557,6 +563,26 @@ fn cmd_stream(args: &[String]) -> Result<()> {
         ),
         ArgSpec::opt("seed", "42", "stream seed"),
         ArgSpec::opt("report-every", "500", "progress line cadence"),
+        ArgSpec::opt(
+            "restore-dir",
+            "",
+            "resume sessions from this snapshot directory before streaming",
+        ),
+        ArgSpec::opt(
+            "snapshot-dir",
+            "",
+            "write a final snapshot of every stream here when done",
+        ),
+        ArgSpec::opt(
+            "checkpoint-dir",
+            "",
+            "periodically checkpoint live sessions into this directory",
+        ),
+        ArgSpec::opt(
+            "checkpoint-ms",
+            "1000",
+            "per-stream checkpoint cadence for --checkpoint-dir (ms)",
+        ),
     ];
     spec.extend(kernel_args());
     if args.iter().any(|a| a == "--help") {
@@ -621,7 +647,37 @@ fn cmd_stream(args: &[String]) -> Result<()> {
     }
 
     let c = Coordinator::start(Engine::Native, BatcherConfig::default(), 2);
-    let mut session = c.open_stream("stream", cfg);
+    let restore_dir = p.get_str("restore-dir")?;
+    let mut session = if restore_dir.is_empty() {
+        c.open_stream("stream", cfg)
+    } else {
+        let path = slabsvm::stream::persist::snapshot_path(
+            std::path::Path::new(restore_dir),
+            "stream",
+        );
+        let snap = slabsvm::stream::persist::read_snapshot(&path)?;
+        use slabsvm::stream::Snapshot;
+        if Snapshot::config_fingerprint(&snap.cfg)
+            != Snapshot::config_fingerprint(&cfg)
+        {
+            println!(
+                "note: snapshot config differs from the CLI flags; the \
+                 snapshotted configuration governs the restored session"
+            );
+        }
+        let (session, info) = snap.into_session()?;
+        println!(
+            "restored '{}' from {}: {} updates, window {}/{}, \
+             repaired={}",
+            session.name(),
+            path.display(),
+            session.updates(),
+            session.solver().len(),
+            session.config().window,
+            info.repaired
+        );
+        session
+    };
     println!(
         "streaming {points} samples through window={} min_train={} kernel={}",
         session.config().window,
@@ -673,6 +729,15 @@ fn cmd_stream(args: &[String]) -> Result<()> {
         drift_samples,
         session.solver().repair_iterations()
     );
+    let snap_dir = p.get_str("snapshot-dir")?;
+    if !snap_dir.is_empty() {
+        let dir = std::path::Path::new(snap_dir);
+        std::fs::create_dir_all(dir)?;
+        let path =
+            slabsvm::stream::persist::snapshot_path(dir, session.name());
+        slabsvm::stream::persist::write_atomic(&path, &session.snapshot())?;
+        println!("snapshot written to {}", path.display());
+    }
     c.shutdown();
     Ok(())
 }
@@ -696,17 +761,72 @@ fn run_multi_stream(
     let drift_at = p.get_usize("drift-at")?;
     let drift_len = p.get_usize("drift-len")?;
 
+    let ckpt_dir = p.get_str("checkpoint-dir")?;
+    let checkpoint = if ckpt_dir.is_empty() {
+        None
+    } else {
+        std::fs::create_dir_all(ckpt_dir)?;
+        println!(
+            "checkpointing every {}ms into {ckpt_dir}",
+            p.get_usize("checkpoint-ms")?
+        );
+        Some(slabsvm::stream::CheckpointConfig::new(
+            ckpt_dir,
+            std::time::Duration::from_millis(
+                p.get_usize("checkpoint-ms")? as u64
+            ),
+        ))
+    };
     let c = Coordinator::start_with_streams(
         Engine::Native,
         BatcherConfig::default(),
         2,
-        StreamPoolConfig { shards, mailbox_cap: p.get_usize("mailbox")? },
+        StreamPoolConfig {
+            shards,
+            mailbox_cap: p.get_usize("mailbox")?,
+            checkpoint,
+        },
     );
-    c.open_streams(
-        (0..n_streams)
-            .map(|i| StreamSpec::new(format!("tenant-{i}"), cfg))
-            .collect(),
-    )?;
+
+    // resume everything a previous run snapshotted, then cold-open the
+    // rest of the fleet — a restarted coordinator picks up where the
+    // old one stopped, no cold window refills
+    let restore_dir = p.get_str("restore-dir")?;
+    if !restore_dir.is_empty() {
+        let mut any_restored = false;
+        for o in c.restore_streams(std::path::Path::new(restore_dir))? {
+            match o.result {
+                Ok(r) => {
+                    any_restored = true;
+                    println!(
+                        "restored '{}': {} updates, v{}, repaired={}",
+                        r.name,
+                        r.updates,
+                        r.version.unwrap_or(0),
+                        r.repaired
+                    );
+                }
+                Err(e) => {
+                    eprintln!("restore {} failed: {e}", o.file.display())
+                }
+            }
+        }
+        if any_restored {
+            println!(
+                "note: restored tenants keep their snapshotted \
+                 configuration; stream flags apply only to newly \
+                 opened tenants"
+            );
+        }
+    }
+    let missing: Vec<StreamSpec> = (0..n_streams)
+        .map(|i| format!("tenant-{i}"))
+        .filter(|name| !c.stream_manager().is_open(name))
+        .map(|name| StreamSpec::new(name, cfg))
+        .collect();
+    if !missing.is_empty() {
+        c.open_streams(missing)?;
+    }
     println!(
         "streaming {points} samples x {n_streams} tenants through {shards} \
          shard workers (window={}, min_train={})",
@@ -746,6 +866,19 @@ fn run_multi_stream(
     c.quiesce_streams();
     let dt = t0.elapsed().as_secs_f64();
 
+    let snap_dir = p.get_str("snapshot-dir")?;
+    if !snap_dir.is_empty() {
+        let outcomes =
+            c.snapshot_streams(std::path::Path::new(snap_dir))?;
+        let ok = outcomes.iter().filter(|o| o.result.is_ok()).count();
+        println!("snapshotted {ok}/{} streams into {snap_dir}", outcomes.len());
+        for o in &outcomes {
+            if let Err(e) = &o.result {
+                eprintln!("snapshot '{}' failed: {e}", o.name);
+            }
+        }
+    }
+
     let mut total_retrains = 0u64;
     for i in 0..n_streams {
         let s = c.close_stream(&format!("tenant-{i}"))?;
@@ -769,6 +902,105 @@ fn run_multi_stream(
         total / dt
     );
     println!("streams: {}", c.stats().stream_summary());
+    c.shutdown();
+    Ok(())
+}
+
+// ---------------------------------------------------------------- snapshot
+
+/// `slabsvm snapshot`: either describe one snapshot file (--inspect —
+/// the format is self-describing, everything prints from the file
+/// alone) or drive a short synthetic multi-tenant fleet and write a
+/// restorable snapshot directory (the input for `slabsvm stream
+/// --restore-dir`).
+fn cmd_snapshot(args: &[String]) -> Result<()> {
+    use slabsvm::data::synthetic::SlabStream;
+    use slabsvm::stream::{persist, StreamConfig, StreamPoolConfig, StreamSpec};
+
+    let spec = vec![
+        ArgSpec::opt("inspect", "", "describe this snapshot file and exit"),
+        ArgSpec::opt("out", "snapshots", "snapshot directory to write"),
+        ArgSpec::opt("points", "600", "samples per stream before snapshotting"),
+        ArgSpec::opt("streams", "2", "tenant streams"),
+        ArgSpec::opt("shards", "2", "shard worker threads"),
+        ArgSpec::opt("window", "128", "sliding-window capacity"),
+        ArgSpec::opt("min-train", "64", "samples before the first publish"),
+        ArgSpec::opt("seed", "42", "stream seed"),
+    ];
+    if args.iter().any(|a| a == "--help") {
+        println!(
+            "{}",
+            render_help(
+                "snapshot",
+                "write durable stream snapshots, or --inspect one",
+                &spec
+            )
+        );
+        return Ok(());
+    }
+    let p = parse_args(&spec, args)?;
+
+    let inspect = p.get_str("inspect")?;
+    if !inspect.is_empty() {
+        let snap = persist::read_snapshot(std::path::Path::new(inspect))?;
+        println!("{}", snap.describe());
+        return Ok(());
+    }
+
+    let n_streams = p.get_usize("streams")?.max(1);
+    let points = p.get_usize("points")?;
+    let seed0 = p.get_usize("seed")? as u64;
+    let cfg = StreamConfig {
+        dim: 2,
+        window: p.get_usize("window")?,
+        min_train: p.get_usize("min-train")?,
+        ..Default::default()
+    };
+    let c = Coordinator::start_with_streams(
+        Engine::Native,
+        BatcherConfig::default(),
+        2,
+        StreamPoolConfig {
+            shards: p.get_usize("shards")?.max(1),
+            mailbox_cap: 2048,
+            checkpoint: None,
+        },
+    );
+    c.open_streams(
+        (0..n_streams)
+            .map(|i| StreamSpec::new(format!("tenant-{i}"), cfg))
+            .collect(),
+    )?;
+    println!("feeding {points} samples x {n_streams} tenants before snapshot");
+    for i in 0..n_streams {
+        let mut stream =
+            SlabStream::new(SlabConfig::default(), seed0 + i as u64);
+        let name = format!("tenant-{i}");
+        for _ in 0..points {
+            c.push(&name, &stream.next_point())?;
+        }
+    }
+    c.quiesce_streams();
+    let dir = std::path::PathBuf::from(p.get_str("out")?);
+    let outcomes = c.snapshot_streams(&dir)?;
+    for o in &outcomes {
+        match &o.result {
+            Ok(()) => println!(
+                "  {} -> {}",
+                o.name,
+                persist::snapshot_path(&dir, &o.name).display()
+            ),
+            Err(e) => eprintln!("  {} FAILED: {e}", o.name),
+        }
+    }
+    let ok = outcomes.iter().filter(|o| o.result.is_ok()).count();
+    println!(
+        "snapshotted {ok}/{} streams into {} (restore with: slabsvm stream \
+         --streams {n_streams} --restore-dir {})",
+        outcomes.len(),
+        dir.display(),
+        dir.display()
+    );
     c.shutdown();
     Ok(())
 }

@@ -103,6 +103,44 @@ impl IncrementalSmo {
         &self.window
     }
 
+    /// Reassemble a streaming solver from persisted state (snapshot
+    /// restore). The caller (`stream::persist`) has already validated
+    /// feasibility and shapes; this just adopts the dual point. Run
+    /// [`IncrementalSmo::repair_in_place`] afterwards if the state does
+    /// not certify.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn restore(
+        window: SlidingWindow,
+        cfg: IncrementalConfig,
+        alpha: Vec<f64>,
+        alpha_bar: Vec<f64>,
+        s: Vec<f64>,
+        rho1: f64,
+        rho2: f64,
+        repair_iterations: u64,
+    ) -> IncrementalSmo {
+        debug_assert_eq!(alpha.len(), window.len());
+        debug_assert_eq!(alpha_bar.len(), window.len());
+        debug_assert_eq!(s.len(), window.len());
+        IncrementalSmo {
+            window,
+            cfg,
+            alpha,
+            alpha_bar,
+            s,
+            rho1,
+            rho2,
+            stats: SolveStats::default(),
+            repair_iterations,
+        }
+    }
+
+    /// The bounded warm-started KKT repair sweep, callable on a
+    /// restored state (the same sweep every absorbed sample ends with).
+    pub(crate) fn repair_in_place(&mut self) -> Result<()> {
+        self.repair()
+    }
+
     pub fn len(&self) -> usize {
         self.window.len()
     }
@@ -118,6 +156,28 @@ impl IncrementalSmo {
     /// Slab offsets of the current dual point.
     pub fn rho(&self) -> (f64, f64) {
         (self.rho1, self.rho2)
+    }
+
+    /// Lower-plane multipliers α over the window (slot order).
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    /// Upper-plane multipliers ᾱ over the window (slot order).
+    pub fn alpha_bar(&self) -> &[f64] {
+        &self.alpha_bar
+    }
+
+    /// The incrementally maintained margins s = K(α − ᾱ).
+    pub fn margins(&self) -> &[f64] {
+        &self.s
+    }
+
+    /// Margins recomputed exactly from the live Gram matrix (what
+    /// snapshots serialize: the restore side recomputes from the
+    /// re-derived Gram and lands on bitwise-identical values).
+    pub fn fresh_margins(&self) -> Vec<f64> {
+        (0..self.len()).map(|i| self.margin_of_slot(i)).collect()
     }
 
     /// Stats of the most recent repair solve.

@@ -42,17 +42,19 @@
 use std::collections::hash_map::DefaultHasher;
 use std::collections::{HashMap, HashSet};
 use std::hash::{Hash, Hasher};
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::coordinator::{ModelRegistry, ServiceStats, TrainQueue};
 use crate::error::Error;
 use crate::Result;
 
+use super::persist::{self, CheckpointConfig};
 use super::session::StreamConfig;
-use super::shard::{run_worker, Shard};
+use super::shard::{run_worker, CheckpointSink, Shard};
 
 /// Sizing of the sharded session manager.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct StreamPoolConfig {
     /// shard worker threads; sessions are hashed across them by name
     pub shards: usize,
@@ -60,12 +62,45 @@ pub struct StreamPoolConfig {
     /// (backpressure) while its own stream's queue is at this depth, so
     /// a hot tenant's backlog never blocks its shard-mates' producers
     pub mailbox_cap: usize,
+    /// periodic durable checkpointing of every live session (None =
+    /// off). Shard workers serialize at most one due session per loop
+    /// tick; a dedicated writer thread does the atomic file I/O.
+    pub checkpoint: Option<CheckpointConfig>,
 }
 
 impl Default for StreamPoolConfig {
     fn default() -> Self {
-        StreamPoolConfig { shards: 2, mailbox_cap: 1024 }
+        StreamPoolConfig { shards: 2, mailbox_cap: 1024, checkpoint: None }
     }
+}
+
+/// Per-stream outcome of a front-door [`StreamManager::snapshot_streams`]
+/// sweep (failure isolation: one stream's write error never blocks the
+/// rest).
+#[derive(Debug)]
+pub struct SnapshotOutcome {
+    pub name: String,
+    pub result: Result<()>,
+}
+
+/// One stream resumed by [`StreamManager::restore_streams`].
+#[derive(Clone, Debug)]
+pub struct RestoredStream {
+    pub name: String,
+    /// samples absorbed over the stream's pre-restart lifetime
+    pub updates: u64,
+    /// registry version the restored model was re-published under
+    /// (None while the restored session was still warming up)
+    pub version: Option<u64>,
+    /// a repair sweep had to run (the snapshot state did not certify)
+    pub repaired: bool,
+}
+
+/// Per-file outcome of restoring a snapshot directory.
+#[derive(Debug)]
+pub struct RestoreOutcome {
+    pub file: PathBuf,
+    pub result: Result<RestoredStream>,
 }
 
 /// One tenant stream to open on the manager.
@@ -116,11 +151,16 @@ pub struct StreamManager {
     /// stream name → owning shard index (the open-stream set)
     route: RwLock<HashMap<String, usize>>,
     stats: Arc<ServiceStats>,
+    /// checkpoint writer thread (None when checkpointing is off); it
+    /// exits once every shard worker has dropped its sender
+    ckpt_writer: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl StreamManager {
     /// Spawn `pool.shards` worker threads sharing `registry` (model
-    /// hot-swaps), `jobs` (escalated retrains) and `stats`.
+    /// hot-swaps), `jobs` (escalated retrains) and `stats`. With
+    /// `pool.checkpoint` set, also spawns the snapshot writer thread
+    /// the shard workers hand serialized sessions to.
     pub fn start(
         pool: StreamPoolConfig,
         registry: Arc<ModelRegistry>,
@@ -130,6 +170,42 @@ impl StreamManager {
         let n = pool.shards.max(1);
         let shards: Vec<Arc<Shard>> =
             (0..n).map(|_| Arc::new(Shard::new(pool.mailbox_cap))).collect();
+        let (sink, ckpt_writer) = match &pool.checkpoint {
+            Some(cfg) => {
+                let (tx, rx) =
+                    std::sync::mpsc::channel::<(PathBuf, Vec<u8>)>();
+                let wstats = Arc::clone(&stats);
+                let writer = std::thread::Builder::new()
+                    .name("slabsvm-ckpt-writer".into())
+                    .spawn(move || {
+                        // drains until every shard drops its sender;
+                        // each write is temp-file + fsync + rename, so
+                        // a crash mid-write never leaves a truncated
+                        // snapshot visible
+                        for (path, bytes) in rx {
+                            match persist::write_atomic(&path, &bytes) {
+                                Ok(()) => {
+                                    wstats.stream_checkpoints.inc()
+                                }
+                                Err(e) => {
+                                    wstats.stream_checkpoint_errors.inc();
+                                    crate::log_warn!(
+                                        "stream",
+                                        "checkpoint write {} failed: {e}",
+                                        path.display()
+                                    );
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn checkpoint writer");
+                (
+                    Some(CheckpointSink { cfg: cfg.clone(), tx }),
+                    Some(writer),
+                )
+            }
+            None => (None, None),
+        };
         let workers = shards
             .iter()
             .enumerate()
@@ -138,17 +214,24 @@ impl StreamManager {
                 let registry = Arc::clone(&registry);
                 let jobs = Arc::clone(&jobs);
                 let stats = Arc::clone(&stats);
+                let sink = sink.clone();
                 std::thread::Builder::new()
                     .name(format!("slabsvm-shard-{i}"))
-                    .spawn(move || run_worker(shard, registry, jobs, stats))
+                    .spawn(move || {
+                        run_worker(shard, registry, jobs, stats, sink)
+                    })
                     .expect("spawn shard worker")
             })
             .collect();
+        // the workers hold the only senders now: when the last worker
+        // exits, the writer's channel closes and it drains out
+        drop(sink);
         StreamManager {
             shards,
             workers: Mutex::new(workers),
             route: RwLock::new(HashMap::new()),
             stats,
+            ckpt_writer: Mutex::new(ckpt_writer),
         }
     }
 
@@ -235,6 +318,98 @@ impl StreamManager {
         }
     }
 
+    /// Snapshot every open stream into `dir` (created if missing), one
+    /// durable `*.snap` file per stream via atomic temp-file + rename
+    /// writes, with per-stream failure isolation: one stream's write
+    /// error is reported in its outcome and never blocks the rest.
+    ///
+    /// The sweep captures each session's absorbed-so-far state; call
+    /// [`StreamManager::quiesce`] first when every pushed sample must
+    /// be in the snapshot.
+    pub fn snapshot_streams(&self, dir: &Path) -> Result<Vec<SnapshotOutcome>> {
+        std::fs::create_dir_all(dir)?;
+        // group open streams by owning shard so a dead shard's streams
+        // get per-stream error outcomes instead of a lost ack
+        let by_shard: Vec<(usize, Vec<String>)> = {
+            let route = self.route.read().unwrap();
+            let mut groups: HashMap<usize, Vec<String>> = HashMap::new();
+            for (name, &idx) in route.iter() {
+                groups.entry(idx).or_default().push(name.clone());
+            }
+            groups.into_iter().collect()
+        };
+        let mut outcomes = Vec::new();
+        for (idx, names) in by_shard {
+            match self.shards[idx].snapshot_all(dir.to_path_buf()) {
+                Ok(results) => {
+                    for (name, result) in results {
+                        outcomes.push(SnapshotOutcome { name, result });
+                    }
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    for name in names {
+                        outcomes.push(SnapshotOutcome {
+                            name,
+                            result: Err(Error::Coordinator(msg.clone())),
+                        });
+                    }
+                }
+            }
+        }
+        outcomes.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(outcomes)
+    }
+
+    /// Restore every `*.snap` file in `dir` into this manager: each
+    /// snapshot is decoded, its Gram matrix re-derived and checksum-
+    /// verified, the dual resumed (repair sweep only when the state
+    /// does not certify), the session adopted by the shard its name
+    /// hashes to, and its model re-published at (or past) the
+    /// pre-restart registry version. Per-file failure isolation: a
+    /// corrupt or conflicting snapshot yields an `Err` outcome for that
+    /// file while every other stream restores.
+    pub fn restore_streams(&self, dir: &Path) -> Result<Vec<RestoreOutcome>> {
+        let files = persist::list_snapshots(dir)?;
+        let mut outcomes = Vec::with_capacity(files.len());
+        for file in files {
+            let result = self.restore_one(&file);
+            outcomes.push(RestoreOutcome { file, result });
+        }
+        Ok(outcomes)
+    }
+
+    fn restore_one(&self, file: &Path) -> Result<RestoredStream> {
+        let snap = persist::read_snapshot(file)?;
+        let weight = snap.weight;
+        let last_version = snap.last_version;
+        let updates = snap.updates;
+        let (session, info) = snap.into_session()?;
+        let name = session.name().to_string();
+        // route insertion is atomic with the adopt (same write lock a
+        // concurrent open_streams/restore of the name would need)
+        let mut route = self.route.write().unwrap();
+        if route.contains_key(&name) {
+            return Err(Error::Coordinator(format!(
+                "stream '{name}' already open"
+            )));
+        }
+        let idx = self.shard_of(&name);
+        let version = self.shards[idx].adopt(
+            &name,
+            Box::new(session),
+            weight,
+            last_version,
+        )?;
+        route.insert(name.clone(), idx);
+        Ok(RestoredStream {
+            name,
+            updates,
+            version,
+            repaired: info.repaired,
+        })
+    }
+
     /// Is a stream currently open?
     pub fn is_open(&self, name: &str) -> bool {
         self.route.read().unwrap().contains_key(name)
@@ -262,6 +437,12 @@ impl StreamManager {
         for handle in workers.drain(..) {
             let _ = handle.join();
         }
+        // every worker (sender) is gone: the writer drains its queue
+        // and exits, so joining it guarantees all final checkpoints of
+        // a graceful shutdown are durably on disk
+        if let Some(writer) = self.ckpt_writer.lock().unwrap().take() {
+            let _ = writer.join();
+        }
         self.route.write().unwrap().clear();
     }
 }
@@ -282,7 +463,7 @@ mod tests {
             Arc::clone(&stats),
         ));
         let m = StreamManager::start(
-            StreamPoolConfig { shards, mailbox_cap },
+            StreamPoolConfig { shards, mailbox_cap, checkpoint: None },
             Arc::clone(&registry),
             Arc::clone(&jobs),
             stats,

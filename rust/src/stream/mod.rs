@@ -34,7 +34,15 @@
 //!   weighted-fair scheduling within a shard so one hot tenant cannot
 //!   starve its shard-mates. `Coordinator::open_streams` / `push` /
 //!   `close_stream` are the front door (experiment MS1,
-//!   `rust/benches/streaming.rs`).
+//!   `rust/benches/streaming.rs`);
+//! * [`persist`] — durable sessions: a versioned, self-describing
+//!   binary snapshot of a session's window + dual state + drift
+//!   baseline, restored via Gram re-derivation (checksum-verified) and
+//!   a warm-started repair sweep. Shard workers checkpoint
+//!   periodically (atomic temp-file + rename writes on a dedicated
+//!   writer thread); `Coordinator::snapshot_streams` /
+//!   `restore_streams` resume a whole multi-tenant fleet after a
+//!   restart without cold window refills (experiment PS1).
 //!
 //! Why incremental works here: the slab dual decomposes per-sample (the
 //! same property the SMO pair update exploits), so admitting or evicting
@@ -57,12 +65,17 @@
 pub mod drift;
 pub mod incremental;
 pub mod manager;
+pub mod persist;
 pub mod session;
 pub(crate) mod shard;
 pub mod window;
 
 pub use drift::{DriftConfig, DriftEvent, DriftMonitor};
 pub use incremental::{IncrementalConfig, IncrementalSmo};
-pub use manager::{StreamManager, StreamPoolConfig, StreamSpec, StreamSummary};
+pub use manager::{
+    RestoredStream, RestoreOutcome, SnapshotOutcome, StreamManager,
+    StreamPoolConfig, StreamSpec, StreamSummary,
+};
+pub use persist::{CheckpointConfig, RestoreInfo, Snapshot};
 pub use session::{Absorbed, StreamConfig, StreamSession};
 pub use window::SlidingWindow;

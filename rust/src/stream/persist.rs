@@ -1,0 +1,922 @@
+//! Durable stream sessions: versioned binary snapshot / restore (L4
+//! persistence).
+//!
+//! A [`Snapshot`] captures everything a [`StreamSession`] needs to
+//! resume after a process restart *without* a cold window refill: the
+//! sliding-window samples (slot order + ring cursor), the full dual
+//! state `(α, ᾱ, s)` with the slab offsets, the drift baseline, the
+//! session counters and the last published registry version. The Gram
+//! matrix is deliberately **not** serialized — it is O(m²), fully
+//! determined by the samples, and re-derived on restore, then verified
+//! against a checksum taken over the live matrix at snapshot time (a
+//! bitwise-symmetric kernel makes the rebuild exact).
+//!
+//! The on-disk format is self-describing and versioned:
+//!
+//! ```text
+//! [ magic "SLABSNAP" | format version u32 | config fingerprint u64 ]
+//! [ name | weight | last registry version ]
+//! [ config section: kernel, dims, SMO/incremental/drift parameters ]
+//! [ state: samples, α, ᾱ, s, ρ1, ρ2, drift baseline, counters,
+//!   gram checksum ]
+//! [ payload checksum u64 over every preceding byte ]
+//! ```
+//!
+//! All integers are little-endian; floats are IEEE-754 bit patterns, so
+//! a snapshot round-trips **bitwise**. The trailing payload checksum
+//! (FNV-1a) means a crash-truncated or corrupted file fails with a
+//! clean [`Error::Snapshot`] instead of half-loading; the config
+//! fingerprint (FNV-1a over the config section alone) lets a restorer
+//! that *expects* a particular [`StreamConfig`] reject a snapshot taken
+//! under a different one ([`Snapshot::restore_expecting`]).
+//!
+//! Restore semantics: the dual state written at snapshot time is always
+//! post-repair (every absorbed sample ends in a bounded KKT repair), so
+//! the restored state normally certifies as-is and restore is **exact**
+//! — bitwise model/dual parity with the snapshot. If the state does not
+//! certify (a snapshot hand-built or taken by a future writer mid-
+//! perturbation), restore self-heals with the same warm-started bounded
+//! repair sweep the per-sample path uses. Either way the resumed
+//! session passes a fresh-Gram KKT certificate.
+//!
+//! Durability: [`write_atomic`] writes to a temp file in the target
+//! directory, fsyncs, then renames over the destination (and fsyncs the
+//! directory), so a crash mid-write can never leave a truncated
+//! `*.snap` visible to a restorer.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::error::Error;
+use crate::kernel::Kernel;
+use crate::solver::smo::SmoParams;
+use crate::solver::{validate, Heuristic};
+use crate::Result;
+
+use super::drift::DriftConfig;
+use super::incremental::{IncrementalConfig, IncrementalSmo};
+use super::session::{StreamConfig, StreamSession};
+use super::window::SlidingWindow;
+
+/// First 8 bytes of every snapshot.
+pub const MAGIC: [u8; 8] = *b"SLABSNAP";
+
+/// Format version this build writes (and the only one it reads).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Periodic per-shard checkpointing of live sessions.
+#[derive(Clone, Debug)]
+pub struct CheckpointConfig {
+    /// directory the per-stream `*.snap` files land in
+    pub dir: PathBuf,
+    /// minimum time between two checkpoints of the same stream; the
+    /// shard worker serializes at most ONE due session per loop tick
+    /// (the absorb hot path is never blocked longer than one serialize)
+    /// and hands the bytes to a dedicated writer thread for the I/O
+    pub every: Duration,
+}
+
+impl CheckpointConfig {
+    pub fn new(dir: impl Into<PathBuf>, every: Duration) -> CheckpointConfig {
+        CheckpointConfig { dir: dir.into(), every }
+    }
+}
+
+// ------------------------------------------------------------------ fnv
+
+/// FNV-1a 64-bit — the format's checksum/fingerprint hash (stable,
+/// dependency-free, byte-order independent).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Checksum of a window's Gram matrix (row-major over resident slots).
+/// Computed from the *live* matrix at snapshot time and from the
+/// re-derived matrix at restore time; equality proves the rebuild.
+fn gram_checksum(window: &SlidingWindow) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for i in 0..window.len() {
+        for &v in window.row(i) {
+            for &b in &v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+    }
+    h
+}
+
+// -------------------------------------------------------------- encoder
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64s(&mut self, vs: &[f64]) {
+        for &v in vs {
+            self.f64(v);
+        }
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+// -------------------------------------------------------------- decoder
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+    fn need(&self, n: usize) -> Result<()> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::snapshot(format!(
+                "truncated snapshot: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+    fn u8(&mut self) -> Result<u8> {
+        self.need(1)?;
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        self.need(4)?;
+        let v = u32::from_le_bytes(
+            self.buf[self.pos..self.pos + 4].try_into().unwrap(),
+        );
+        self.pos += 4;
+        Ok(v)
+    }
+    fn u64(&mut self) -> Result<u64> {
+        self.need(8)?;
+        let v = u64::from_le_bytes(
+            self.buf[self.pos..self.pos + 8].try_into().unwrap(),
+        );
+        self.pos += 8;
+        Ok(v)
+    }
+    fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| {
+            Error::snapshot(format!("length field {v} overflows usize"))
+        })
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        self.need(n.checked_mul(8).ok_or_else(|| {
+            Error::snapshot("length field overflows".to_string())
+        })?)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        self.need(n)?;
+        let s = std::str::from_utf8(&self.buf[self.pos..self.pos + n])
+            .map_err(|_| Error::snapshot("stream name is not UTF-8"))?
+            .to_string();
+        self.pos += n;
+        Ok(s)
+    }
+}
+
+// ------------------------------------------------------ config section
+
+fn kernel_tag(k: &Kernel) -> (u8, f64, f64, f64) {
+    match *k {
+        Kernel::Linear => (0, 0.0, 0.0, 0.0),
+        Kernel::Rbf { g } => (1, g, 0.0, 0.0),
+        Kernel::Poly { g, c, degree } => (2, g, c, degree),
+        Kernel::Sigmoid { g, c } => (3, g, c, 0.0),
+    }
+}
+
+fn kernel_from_tag(tag: u8, g: f64, c: f64, degree: f64) -> Result<Kernel> {
+    match tag {
+        0 => Ok(Kernel::Linear),
+        1 => Ok(Kernel::Rbf { g }),
+        2 => Ok(Kernel::Poly { g, c, degree }),
+        3 => Ok(Kernel::Sigmoid { g, c }),
+        other => Err(Error::snapshot(format!("unknown kernel tag {other}"))),
+    }
+}
+
+fn heuristic_tag(h: Heuristic) -> u8 {
+    match h {
+        Heuristic::PaperMaxFbar => 0,
+        Heuristic::MaxViolation => 1,
+        Heuristic::RandomViolator => 2,
+        Heuristic::SecondOrder => 3,
+    }
+}
+
+fn heuristic_from_tag(tag: u8) -> Result<Heuristic> {
+    match tag {
+        0 => Ok(Heuristic::PaperMaxFbar),
+        1 => Ok(Heuristic::MaxViolation),
+        2 => Ok(Heuristic::RandomViolator),
+        3 => Ok(Heuristic::SecondOrder),
+        other => Err(Error::snapshot(format!("unknown heuristic tag {other}"))),
+    }
+}
+
+/// Canonical byte encoding of a [`StreamConfig`] — the fingerprint is
+/// FNV-1a over exactly these bytes, so two configs fingerprint equal
+/// iff every field matches bitwise.
+fn config_section(cfg: &StreamConfig) -> Vec<u8> {
+    let mut e = Enc::new();
+    let (tag, g, c, degree) = kernel_tag(&cfg.kernel);
+    e.u8(tag);
+    e.f64(g);
+    e.f64(c);
+    e.f64(degree);
+    e.u64(cfg.dim as u64);
+    e.u64(cfg.window as u64);
+    e.u64(cfg.min_train as u64);
+    let p = &cfg.incremental.smo;
+    e.f64(p.nu1);
+    e.f64(p.nu2);
+    e.f64(p.eps);
+    e.f64(p.tol);
+    e.u64(p.max_iter as u64);
+    e.u8(heuristic_tag(p.heuristic));
+    e.u64(p.seed);
+    e.f64(p.sv_tol);
+    e.u8(p.shrinking as u8);
+    e.u64(cfg.incremental.repair_max_iter as u64);
+    e.u64(cfg.incremental.refresh_every);
+    e.u64(cfg.drift.recent as u64);
+    e.u64(cfg.drift.min_observations as u64);
+    e.f64(cfg.drift.outside_frac);
+    e.f64(cfg.drift.rho_rel);
+    e.u64(cfg.retrain_shards as u64);
+    e.u64(cfg.retrain_rounds as u64);
+    e.buf
+}
+
+fn decode_config(d: &mut Dec<'_>) -> Result<StreamConfig> {
+    let tag = d.u8()?;
+    let (g, c, degree) = (d.f64()?, d.f64()?, d.f64()?);
+    let kernel = kernel_from_tag(tag, g, c, degree)?;
+    let dim = d.usize()?;
+    let window = d.usize()?;
+    let min_train = d.usize()?;
+    let smo = SmoParams {
+        nu1: d.f64()?,
+        nu2: d.f64()?,
+        eps: d.f64()?,
+        tol: d.f64()?,
+        max_iter: d.usize()?,
+        heuristic: heuristic_from_tag(d.u8()?)?,
+        seed: d.u64()?,
+        sv_tol: d.f64()?,
+        shrinking: d.u8()? != 0,
+    };
+    let incremental = IncrementalConfig {
+        smo,
+        repair_max_iter: d.usize()?,
+        refresh_every: d.u64()?,
+    };
+    let drift = DriftConfig {
+        recent: d.usize()?,
+        min_observations: d.usize()?,
+        outside_frac: d.f64()?,
+        rho_rel: d.f64()?,
+    };
+    Ok(StreamConfig {
+        kernel,
+        dim,
+        window,
+        min_train,
+        incremental,
+        drift,
+        retrain_shards: d.usize()?,
+        retrain_rounds: d.usize()?,
+    })
+}
+
+// ------------------------------------------------------------ snapshot
+
+/// What happened on restore, beyond the session itself.
+#[derive(Clone, Copy, Debug)]
+pub struct RestoreInfo {
+    /// max KKT violation of the restored dual before any repair
+    pub kkt_violation: f64,
+    /// whether a warm-started repair sweep had to run (false = the
+    /// snapshot state certified as-is and the restore is bitwise exact)
+    pub repaired: bool,
+}
+
+/// A decoded (or about-to-be-encoded) stream-session snapshot.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub name: String,
+    /// manager fair-scheduling weight (1 for single-writer sessions)
+    pub weight: u32,
+    /// last registry version the owner published (0 = never)
+    pub last_version: u64,
+    pub cfg: StreamConfig,
+    /// resident sample count (≤ cfg.window)
+    pub len: usize,
+    /// window ring cursor: total samples ever admitted
+    pub admitted: u64,
+    /// resident samples, slot order, row-major `len · dim`
+    pub points: Vec<f64>,
+    pub alpha: Vec<f64>,
+    pub alpha_bar: Vec<f64>,
+    /// margins s = K(α − ᾱ), freshly recomputed at capture time so the
+    /// restore-side recomputation from the re-derived Gram is bitwise
+    /// identical
+    pub s: Vec<f64>,
+    pub rho1: f64,
+    pub rho2: f64,
+    /// the session had armed its drift baseline
+    pub baselined: bool,
+    /// drift baseline (ρ1, ρ2) at the last (re)baseline, if armed
+    pub baseline: Option<(f64, f64)>,
+    pub updates: u64,
+    pub retrains: u64,
+    pub repair_iterations: u64,
+    /// FNV-1a over the live Gram matrix at capture time
+    pub gram_checksum: u64,
+}
+
+impl Snapshot {
+    /// Capture a session's full resume state. `weight`/`last_version`
+    /// are the manager-layer envelope (pass `1`/`None` for a
+    /// single-writer session).
+    pub fn capture(
+        session: &StreamSession,
+        weight: u32,
+        last_version: Option<u64>,
+    ) -> Snapshot {
+        let inc = session.solver();
+        let w = inc.window();
+        let mut points = Vec::with_capacity(w.len() * w.dim());
+        for i in 0..w.len() {
+            points.extend_from_slice(w.point(i));
+        }
+        let (rho1, rho2) = inc.rho();
+        Snapshot {
+            name: session.name().to_string(),
+            weight: weight.max(1),
+            last_version: last_version.unwrap_or(0),
+            cfg: *session.config(),
+            len: w.len(),
+            admitted: w.admitted(),
+            points,
+            alpha: inc.alpha().to_vec(),
+            alpha_bar: inc.alpha_bar().to_vec(),
+            s: inc.fresh_margins(),
+            rho1,
+            rho2,
+            baselined: session.is_baselined(),
+            baseline: session.drift_monitor().baseline(),
+            updates: session.updates(),
+            retrains: session.retrains(),
+            repair_iterations: inc.repair_iterations(),
+            gram_checksum: gram_checksum(w),
+        }
+    }
+
+    /// Fingerprint of a config — what the header carries, and what
+    /// [`Snapshot::restore_expecting`] compares against.
+    pub fn config_fingerprint(cfg: &StreamConfig) -> u64 {
+        fnv1a(&config_section(cfg))
+    }
+
+    /// Serialize to the canonical byte format (see module docs).
+    /// `decode(encode(s))` round-trips bitwise.
+    pub fn encode(&self) -> Vec<u8> {
+        let cfg_bytes = config_section(&self.cfg);
+        let mut e = Enc::new();
+        e.buf.extend_from_slice(&MAGIC);
+        e.u32(FORMAT_VERSION);
+        e.u64(fnv1a(&cfg_bytes));
+        e.str(&self.name);
+        e.u32(self.weight);
+        e.u64(self.last_version);
+        e.buf.extend_from_slice(&cfg_bytes);
+        e.u64(self.len as u64);
+        e.u64(self.admitted);
+        e.f64s(&self.points);
+        e.f64s(&self.alpha);
+        e.f64s(&self.alpha_bar);
+        e.f64s(&self.s);
+        e.f64(self.rho1);
+        e.f64(self.rho2);
+        e.u8(self.baselined as u8);
+        match self.baseline {
+            Some((b1, b2)) => {
+                e.u8(1);
+                e.f64(b1);
+                e.f64(b2);
+            }
+            None => e.u8(0),
+        }
+        e.u64(self.updates);
+        e.u64(self.retrains);
+        e.u64(self.repair_iterations);
+        e.u64(self.gram_checksum);
+        let check = fnv1a(&e.buf);
+        e.u64(check);
+        e.buf
+    }
+
+    /// Parse + integrity-check a snapshot. Magic, format version, the
+    /// trailing payload checksum (truncation/corruption) and the config
+    /// fingerprint are all verified; every failure is a clean
+    /// [`Error::Snapshot`], never a panic.
+    pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
+        if bytes.len() < MAGIC.len() + 4 + 8 + 8 {
+            return Err(Error::snapshot(format!(
+                "file too short to be a snapshot ({} bytes)",
+                bytes.len()
+            )));
+        }
+        if bytes[..8] != MAGIC {
+            return Err(Error::snapshot(
+                "bad magic: not a slabsvm stream snapshot",
+            ));
+        }
+        let version =
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != FORMAT_VERSION {
+            return Err(Error::snapshot(format!(
+                "unsupported snapshot format version {version} \
+                 (this build reads version {FORMAT_VERSION})"
+            )));
+        }
+        let body_end = bytes.len() - 8;
+        let stored_check =
+            u64::from_le_bytes(bytes[body_end..].try_into().unwrap());
+        if fnv1a(&bytes[..body_end]) != stored_check {
+            return Err(Error::snapshot(
+                "payload checksum mismatch: snapshot is truncated or \
+                 corrupted",
+            ));
+        }
+        let mut d = Dec::new(&bytes[..body_end]);
+        d.pos = 8 + 4; // past magic + version
+        let fingerprint = d.u64()?;
+        let name = d.str()?;
+        let weight = d.u32()?;
+        let last_version = d.u64()?;
+        let cfg_start = d.pos;
+        let cfg = decode_config(&mut d)?;
+        if fnv1a(&bytes[cfg_start..d.pos]) != fingerprint {
+            return Err(Error::snapshot(
+                "config fingerprint does not match the config section",
+            ));
+        }
+        let len = d.usize()?;
+        if cfg.dim == 0 || cfg.window < 2 {
+            return Err(Error::snapshot(format!(
+                "invalid config: dim={} window={}",
+                cfg.dim, cfg.window
+            )));
+        }
+        if len > cfg.window {
+            return Err(Error::snapshot(format!(
+                "resident count {len} exceeds window capacity {}",
+                cfg.window
+            )));
+        }
+        let admitted = d.u64()?;
+        if admitted < len as u64 {
+            return Err(Error::snapshot(format!(
+                "ring cursor admitted={admitted} below resident count {len}"
+            )));
+        }
+        let points = d.f64s(len.checked_mul(cfg.dim).ok_or_else(|| {
+            Error::snapshot("sample block size overflows".to_string())
+        })?)?;
+        let alpha = d.f64s(len)?;
+        let alpha_bar = d.f64s(len)?;
+        let s = d.f64s(len)?;
+        let rho1 = d.f64()?;
+        let rho2 = d.f64()?;
+        let baselined = d.u8()? != 0;
+        let baseline = if d.u8()? != 0 {
+            Some((d.f64()?, d.f64()?))
+        } else {
+            None
+        };
+        let updates = d.u64()?;
+        let retrains = d.u64()?;
+        let repair_iterations = d.u64()?;
+        let gram_checksum = d.u64()?;
+        if d.pos != body_end {
+            return Err(Error::snapshot(format!(
+                "{} trailing bytes after snapshot state",
+                body_end - d.pos
+            )));
+        }
+        Ok(Snapshot {
+            name,
+            weight,
+            last_version,
+            cfg,
+            len,
+            admitted,
+            points,
+            alpha,
+            alpha_bar,
+            s,
+            rho1,
+            rho2,
+            baselined,
+            baseline,
+            updates,
+            retrains,
+            repair_iterations,
+            gram_checksum,
+        })
+    }
+
+    /// Reject a snapshot taken under a different stream configuration
+    /// (field-for-field, via the config fingerprint), then restore.
+    pub fn restore_expecting(
+        bytes: &[u8],
+        expected: &StreamConfig,
+    ) -> Result<(StreamSession, RestoreInfo)> {
+        let snap = Snapshot::decode(bytes)?;
+        let got = Snapshot::config_fingerprint(&snap.cfg);
+        let want = Snapshot::config_fingerprint(expected);
+        if got != want {
+            return Err(Error::snapshot(format!(
+                "config fingerprint mismatch: snapshot {got:#018x}, \
+                 expected {want:#018x} — the stream '{}' was captured \
+                 under a different configuration",
+                snap.name
+            )));
+        }
+        snap.into_session()
+    }
+
+    /// One-line human description (the `slabsvm snapshot --inspect`
+    /// output) — the format is self-describing, so everything here
+    /// comes from the file alone.
+    pub fn describe(&self) -> String {
+        format!(
+            "stream '{}' format v{FORMAT_VERSION} fingerprint {:#018x}\n\
+             kernel={} dim={} window={} resident={} admitted={}\n\
+             nu1={} nu2={} eps={} updates={} retrains={} \
+             last_version={}\n\
+             rho=[{:.6}, {:.6}] baseline={:?} repair_iterations={}",
+            self.name,
+            Snapshot::config_fingerprint(&self.cfg),
+            self.cfg.kernel.family(),
+            self.cfg.dim,
+            self.cfg.window,
+            self.len,
+            self.admitted,
+            self.cfg.incremental.smo.nu1,
+            self.cfg.incremental.smo.nu2,
+            self.cfg.incremental.smo.eps,
+            self.updates,
+            self.retrains,
+            self.last_version,
+            self.rho1,
+            self.rho2,
+            self.baseline,
+            self.repair_iterations,
+        )
+    }
+
+    /// Validate the state, re-derive the Gram matrix from the restored
+    /// samples (verified against the stored checksum) and resume the
+    /// session. The restored dual is certified against the fresh Gram;
+    /// a state outside tolerance gets the standard warm-started bounded
+    /// repair sweep (see module docs).
+    pub fn into_session(self) -> Result<(StreamSession, RestoreInfo)> {
+        let m = self.len;
+        if self.points.len() != m * self.cfg.dim {
+            return Err(Error::snapshot(format!(
+                "sample block holds {} values, want {}",
+                self.points.len(),
+                m * self.cfg.dim
+            )));
+        }
+        for v in self
+            .points
+            .iter()
+            .chain(&self.alpha)
+            .chain(&self.alpha_bar)
+            .chain(&self.s)
+            .chain([self.rho1, self.rho2].iter())
+        {
+            if !v.is_finite() {
+                return Err(Error::snapshot(
+                    "non-finite value in snapshot state",
+                ));
+            }
+        }
+        let p = self.cfg.incremental.smo;
+        if m > 0 {
+            let sa: f64 = self.alpha.iter().sum();
+            let sb: f64 = self.alpha_bar.iter().sum();
+            if (sa - 1.0).abs() > 1e-6 || (sb - p.eps).abs() > 1e-6 {
+                return Err(Error::snapshot(format!(
+                    "infeasible dual state: sum(alpha)={sa}, \
+                     sum(alpha_bar)={sb} (eps={})",
+                    p.eps
+                )));
+            }
+            let cap_a = 1.0 / (p.nu1 * m as f64);
+            let cap_b = p.eps / (p.nu2 * m as f64);
+            for i in 0..m {
+                let in_box = (-1e-9..=cap_a + 1e-9).contains(&self.alpha[i])
+                    && (-1e-9..=cap_b + 1e-9).contains(&self.alpha_bar[i]);
+                if !in_box {
+                    return Err(Error::snapshot(format!(
+                        "dual coordinate {i} outside its box",
+                    )));
+                }
+            }
+        }
+
+        // Re-derive the Gram matrix from the samples; the checksum over
+        // the rebuilt matrix must match the one taken over the live
+        // matrix at snapshot time.
+        let window = SlidingWindow::restore(
+            self.cfg.kernel,
+            self.cfg.window,
+            self.cfg.dim,
+            self.points,
+            self.admitted,
+        );
+        let rebuilt = gram_checksum(&window);
+        if rebuilt != self.gram_checksum {
+            return Err(Error::snapshot(format!(
+                "gram checksum mismatch after rebuild: stored \
+                 {:#018x}, recomputed {rebuilt:#018x}",
+                self.gram_checksum
+            )));
+        }
+
+        let mut inc = IncrementalSmo::restore(
+            window,
+            self.cfg.incremental,
+            self.alpha,
+            self.alpha_bar,
+            self.s,
+            self.rho1,
+            self.rho2,
+            self.repair_iterations,
+        );
+
+        // Certify against the fresh Gram; repair only when the restored
+        // dual is outside tolerance (never for snapshots this code
+        // wrote — they are post-repair states — so the normal restore
+        // is bitwise exact).
+        let mut info = RestoreInfo { kkt_violation: 0.0, repaired: false };
+        if m >= 2 {
+            let cap_a = 1.0 / (p.nu1 * m as f64);
+            let cap_b = p.eps / (p.nu2 * m as f64);
+            let cert = validate::report_with_margins(
+                inc.alpha(),
+                inc.alpha_bar(),
+                inc.margins(),
+                self.rho1,
+                self.rho2,
+                p.nu1,
+                p.nu2,
+                p.eps,
+                cap_a.min(cap_b) * 1e-6,
+            );
+            info.kkt_violation = cert.max_kkt_violation;
+            let margin_scale = 1.0
+                + inc.margins().iter().map(|v| v.abs()).sum::<f64>()
+                    / m as f64;
+            if cert.max_kkt_violation > p.tol * margin_scale {
+                inc.repair_in_place()?;
+                info.repaired = true;
+            }
+        }
+
+        let session = StreamSession::from_parts(
+            self.name,
+            self.cfg,
+            inc,
+            self.baselined,
+            self.baseline,
+            self.updates,
+            self.retrains,
+        );
+        Ok((session, info))
+    }
+}
+
+// ------------------------------------------------------------ file I/O
+
+/// Deterministic snapshot filename for a stream: sanitized name plus an
+/// FNV hash of the raw name (distinct names never collide on disk even
+/// when sanitization makes them look alike).
+pub fn snapshot_filename(name: &str) -> String {
+    let safe: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .take(64)
+        .collect();
+    format!("{safe}-{:08x}.snap", fnv1a(name.as_bytes()) as u32)
+}
+
+/// `dir/<snapshot_filename(name)>`.
+pub fn snapshot_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(snapshot_filename(name))
+}
+
+/// Crash-safe file replacement: write to a temp file in the same
+/// directory, fsync it, rename over the destination, fsync the
+/// directory. A reader can only ever observe the old file or the
+/// complete new one — never a truncation (and a truncated leftover
+/// would fail the payload checksum anyway). The temp name carries the
+/// pid and a process-wide nonce so concurrent writers targeting the
+/// same snapshot (e.g. a front-door sweep racing the periodic
+/// checkpoint writer) never share a temp file — last rename wins with
+/// a complete file either way.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static TMP_NONCE: AtomicU64 = AtomicU64::new(0);
+    let nonce = TMP_NONCE.fetch_add(1, Ordering::Relaxed);
+    let tmp = path.with_extension(format!(
+        "snap.{}-{nonce}.tmp",
+        std::process::id()
+    ));
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Read + decode one snapshot file.
+pub fn read_snapshot(path: &Path) -> Result<Snapshot> {
+    let bytes = std::fs::read(path)?;
+    Snapshot::decode(&bytes)
+}
+
+/// All `*.snap` files in a directory, sorted by filename (deterministic
+/// restore order).
+pub fn list_snapshots(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.extension().and_then(|e| e.to_str()) == Some("snap") {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+
+    fn warm_session(n: usize, seed: u64) -> StreamSession {
+        let cfg = StreamConfig {
+            window: 32,
+            min_train: 16,
+            ..Default::default()
+        };
+        let mut s = StreamSession::new("t", cfg);
+        let ds = SlabConfig::default().generate(n, seed);
+        for i in 0..n {
+            s.absorb(ds.x.row(i)).unwrap();
+        }
+        s
+    }
+
+    #[test]
+    fn encode_decode_roundtrips_bitwise() {
+        let session = warm_session(40, 401);
+        let snap = Snapshot::capture(&session, 3, Some(25));
+        let bytes = snap.encode();
+        let back = Snapshot::decode(&bytes).unwrap();
+        assert_eq!(back.name, "t");
+        assert_eq!(back.weight, 3);
+        assert_eq!(back.last_version, 25);
+        assert_eq!(back.len, 32);
+        assert_eq!(back.admitted, 40);
+        assert_eq!(back.points, snap.points);
+        assert_eq!(back.alpha, snap.alpha);
+        assert_eq!(back.alpha_bar, snap.alpha_bar);
+        assert_eq!(back.s, snap.s);
+        assert_eq!(back.rho1.to_bits(), snap.rho1.to_bits());
+        assert_eq!(back.rho2.to_bits(), snap.rho2.to_bits());
+        assert_eq!(back.baseline, snap.baseline);
+        assert_eq!(back.updates, 40);
+        assert_eq!(back.gram_checksum, snap.gram_checksum);
+        // canonical: re-encoding the decoded snapshot is byte-identical
+        assert_eq!(back.encode(), bytes);
+    }
+
+    #[test]
+    fn fingerprint_changes_with_any_config_field() {
+        let base = StreamConfig::default();
+        let f0 = Snapshot::config_fingerprint(&base);
+        let mut w = base;
+        w.window += 1;
+        assert_ne!(f0, Snapshot::config_fingerprint(&w));
+        let mut k = base;
+        k.kernel = Kernel::Rbf { g: 0.5 };
+        assert_ne!(f0, Snapshot::config_fingerprint(&k));
+        let mut n = base;
+        n.incremental.smo.nu1 += 1e-12;
+        assert_ne!(f0, Snapshot::config_fingerprint(&n));
+        assert_eq!(f0, Snapshot::config_fingerprint(&base));
+    }
+
+    #[test]
+    fn empty_and_warming_sessions_snapshot_too() {
+        let cfg = StreamConfig { window: 8, min_train: 4, ..Default::default() };
+        // empty
+        let s0 = StreamSession::new("empty", cfg);
+        let (r0, _) =
+            Snapshot::decode(&Snapshot::capture(&s0, 1, None).encode())
+                .unwrap()
+                .into_session()
+                .unwrap();
+        assert_eq!(r0.updates(), 0);
+        assert!(r0.solver().is_empty());
+        // one sample (no repairable pair yet)
+        let mut s1 = StreamSession::new("one", cfg);
+        s1.absorb(&[20.0, 3.0]).unwrap();
+        let (r1, info) =
+            Snapshot::decode(&Snapshot::capture(&s1, 1, None).encode())
+                .unwrap()
+                .into_session()
+                .unwrap();
+        assert_eq!(r1.solver().len(), 1);
+        assert!(!info.repaired);
+        assert_eq!(r1.solver().alpha(), &[1.0]);
+    }
+
+    #[test]
+    fn filenames_are_sanitized_and_collision_free() {
+        let a = snapshot_filename("tenant/alpha");
+        let b = snapshot_filename("tenant_alpha");
+        assert!(a.ends_with(".snap"));
+        assert!(!a.contains('/'));
+        assert_ne!(a, b, "sanitized collisions must differ via the hash");
+        assert_eq!(a, snapshot_filename("tenant/alpha"), "deterministic");
+    }
+
+    #[test]
+    fn describe_is_self_contained() {
+        let session = warm_session(20, 402);
+        let snap = Snapshot::capture(&session, 1, None);
+        let text = snap.describe();
+        assert!(text.contains("stream 't'"), "{text}");
+        assert!(text.contains("format v1"), "{text}");
+        assert!(text.contains("window=32"), "{text}");
+    }
+}

@@ -156,8 +156,64 @@ impl StreamSession {
     }
 
     /// Copy of the current window contents (background-retrain input).
-    pub fn snapshot(&self) -> Dataset {
+    pub fn window_dataset(&self) -> Dataset {
         Dataset::unlabeled(self.inc.window().matrix())
+    }
+
+    /// Serialize the session's full resume state to the versioned
+    /// binary snapshot format (see [`crate::stream::persist`]):
+    /// window samples + ring cursor, dual `(α, ᾱ, s)`, slab offsets,
+    /// drift baseline and counters, Gram checksum. Restore with
+    /// [`StreamSession::restore`].
+    pub fn snapshot(&self) -> Vec<u8> {
+        super::persist::Snapshot::capture(self, 1, None).encode()
+    }
+
+    /// Resume a session from [`StreamSession::snapshot`] bytes: the
+    /// Gram matrix is re-derived from the restored samples (verified
+    /// against the stored checksum) and the dual resumes via a
+    /// warm-started bounded repair sweep when it does not already
+    /// certify — which it does for every snapshot this code writes, so
+    /// the restore is normally bitwise exact.
+    pub fn restore(bytes: &[u8]) -> crate::Result<StreamSession> {
+        let (session, _) = super::persist::Snapshot::decode(bytes)?.into_session()?;
+        Ok(session)
+    }
+
+    /// The drift baseline has been armed (first warm publish happened).
+    pub(crate) fn is_baselined(&self) -> bool {
+        self.baselined
+    }
+
+    /// Reassemble a session from persisted parts (snapshot restore).
+    /// The drift monitor's *rolling* evidence window is deliberately
+    /// not persisted — it restarts empty (back in its warmup guard),
+    /// while the baseline slab offsets are re-armed, so a restored
+    /// stream re-accumulates drift evidence before it can trip.
+    pub(crate) fn from_parts(
+        name: String,
+        mut cfg: StreamConfig,
+        inc: IncrementalSmo,
+        baselined: bool,
+        baseline: Option<(f64, f64)>,
+        updates: u64,
+        retrains: u64,
+    ) -> StreamSession {
+        cfg.min_train = cfg.min_train.min(cfg.window);
+        let mut drift = DriftMonitor::new(cfg.drift);
+        if let Some((r1, r2)) = baseline {
+            drift.rebaseline(r1, r2);
+        }
+        StreamSession {
+            name,
+            cfg,
+            inc,
+            drift,
+            pending_retrain: None,
+            baselined,
+            updates,
+            retrains,
+        }
     }
 
     /// The trainer an escalated retrain runs with: same hyper-parameters
@@ -274,12 +330,44 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_matches_window() {
+    fn window_dataset_matches_window() {
         let mut s = StreamSession::new("t", quick_config());
         feed(&mut s, &SlabConfig::default(), 70, 54);
-        let snap = s.snapshot();
+        let snap = s.window_dataset();
         assert_eq!(snap.len(), 64); // window capacity
         assert_eq!(snap.x.data(), s.solver().window().matrix().data());
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bitwise() {
+        let mut s = StreamSession::new("t", quick_config());
+        feed(&mut s, &SlabConfig::default(), 70, 55);
+        let bytes = s.snapshot();
+        let r = StreamSession::restore(&bytes).unwrap();
+        assert_eq!(r.name(), "t");
+        assert_eq!(r.updates(), 70);
+        assert_eq!(r.solver().alpha(), s.solver().alpha());
+        assert_eq!(r.solver().alpha_bar(), s.solver().alpha_bar());
+        let ((a1, a2), (b1, b2)) = (s.solver().rho(), r.solver().rho());
+        assert_eq!(a1.to_bits(), b1.to_bits());
+        assert_eq!(a2.to_bits(), b2.to_bits());
+        assert_eq!(r.drift_monitor().baseline(), s.drift_monitor().baseline());
+        // both continue identically on the same future samples
+        let ds = SlabConfig::default().generate(20, 56);
+        let mut s2 = s;
+        let mut r2 = r;
+        for i in 0..20 {
+            s2.absorb(ds.x.row(i)).unwrap();
+            r2.absorb(ds.x.row(i)).unwrap();
+        }
+        let (so, ro) = (
+            s2.solver().report().stats.objective,
+            r2.solver().report().stats.objective,
+        );
+        assert!(
+            (so - ro).abs() <= 1e-9 * so.abs().max(1.0),
+            "post-restore objective diverged: {so} vs {ro}"
+        );
     }
 
     #[test]

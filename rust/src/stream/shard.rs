@@ -22,8 +22,17 @@
 //! shard* on a later loop tick ([`reconcile_retrain`]) — not by whatever
 //! caller thread happens to push next, as the single-writer
 //! `Coordinator::stream_push` path does.
+//!
+//! Checkpointing: with a [`CheckpointConfig`] the worker serializes at
+//! most ONE dirty session per loop tick (whichever has gone longest
+//! past the cadence), so the absorb hot path is never blocked longer
+//! than a single serialize; the bytes go to the manager's writer thread
+//! which does the atomic temp-file + fsync + rename I/O off the data
+//! plane. Close and drain write a final checkpoint so a graceful stop
+//! persists the freshest state.
 
 use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -35,13 +44,45 @@ use crate::error::Error;
 use crate::Result;
 
 use super::manager::StreamSummary;
+use super::persist::{snapshot_path, CheckpointConfig, Snapshot};
 use super::session::{StreamConfig, StreamSession};
 
 /// Control-plane events. Not subject to the data-plane bound — an open
 /// or close must never be refused because samples are queued.
 pub(crate) enum Control {
-    Open { name: String, cfg: StreamConfig },
-    Close { name: String, ack: Sender<Result<StreamSummary>> },
+    Open {
+        name: String,
+        cfg: StreamConfig,
+        weight: u32,
+    },
+    /// Adopt a restored session (snapshot restore). The worker inserts
+    /// it, re-publishes its model (resuming the registry version
+    /// sequence at `last_version + 1` or later) and acks the published
+    /// version so the restorer can report deterministic state.
+    Adopt {
+        name: String,
+        session: Box<StreamSession>,
+        last_version: u64,
+        ack: Sender<Option<u64>>,
+    },
+    Close {
+        name: String,
+        ack: Sender<Result<StreamSummary>>,
+    },
+    /// Front-door snapshot sweep: serialize every session this shard
+    /// owns into `dir`, one result per stream (failure isolation — one
+    /// bad write never blocks the rest).
+    Snapshot {
+        dir: PathBuf,
+        ack: Sender<Vec<(String, Result<()>)>>,
+    },
+}
+
+/// Where periodic checkpoints go: cadence + the writer thread's inbox.
+#[derive(Clone)]
+pub(crate) struct CheckpointSink {
+    pub(crate) cfg: CheckpointConfig,
+    pub(crate) tx: Sender<(PathBuf, Vec<u8>)>,
 }
 
 /// Per-stream FIFO of samples waiting to be absorbed.
@@ -175,10 +216,70 @@ impl Shard {
         mail.control.push_back(Control::Open {
             name: name.to_string(),
             cfg,
+            weight: weight.max(1),
         });
         drop(mail);
         self.not_empty.notify_one();
         true
+    }
+
+    /// Register a restored session (queue entry + Adopt control), then
+    /// block until the worker has inserted it and re-published its
+    /// model. Returns the published registry version (None while the
+    /// restored session was still warming up), or an error when the
+    /// shard is draining / its worker already exited.
+    pub(crate) fn adopt(
+        &self,
+        name: &str,
+        session: Box<StreamSession>,
+        weight: u32,
+        last_version: u64,
+    ) -> Result<Option<u64>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        {
+            let mut mail = self.mail.lock().unwrap();
+            if mail.draining {
+                return Err(Error::Coordinator(format!(
+                    "stream '{name}': manager is shutting down"
+                )));
+            }
+            mail.queues.insert(
+                name.to_string(),
+                StreamQueue {
+                    samples: VecDeque::new(),
+                    weight: weight.max(1),
+                    dim: session.config().dim,
+                },
+            );
+            mail.order.push(name.to_string());
+            mail.control.push_back(Control::Adopt {
+                name: name.to_string(),
+                session,
+                last_version,
+                ack: tx,
+            });
+        }
+        self.not_empty.notify_one();
+        rx.recv().map_err(|_| {
+            Error::Coordinator("stream manager worker exited".into())
+        })
+    }
+
+    /// Ask the worker to serialize every session it owns into `dir`
+    /// (one result per stream). Blocks until the sweep completes.
+    pub(crate) fn snapshot_all(
+        &self,
+        dir: PathBuf,
+    ) -> Result<Vec<(String, Result<()>)>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        {
+            let mut mail = self.mail.lock().unwrap();
+            mail.control.push_back(Control::Snapshot { dir, ack: tx });
+        }
+        self.not_empty.notify_one();
+        rx.recv().map_err(|_| {
+            Error::Coordinator("stream manager worker exited".into())
+        })
     }
 
     /// Enqueue one sample. The bound is **per stream**: a producer
@@ -292,6 +393,25 @@ struct Slot {
     session: StreamSession,
     /// last registry version this shard published for the stream
     last_version: Option<u64>,
+    /// fair-scheduling weight (mirrored from the mailbox queue so a
+    /// snapshot can persist it without taking the mail lock)
+    weight: u32,
+    /// state has changed since the last durable checkpoint
+    dirty: bool,
+    /// when this stream was last checkpointed (or created)
+    last_ckpt: Instant,
+}
+
+impl Slot {
+    fn new(session: StreamSession, weight: u32) -> Slot {
+        Slot {
+            session,
+            last_version: None,
+            weight,
+            dirty: false,
+            last_ckpt: Instant::now(),
+        }
+    }
 }
 
 fn summarize(slot: &Slot) -> StreamSummary {
@@ -361,12 +481,13 @@ fn absorb_one(
             if absorbed.retrain_wanted {
                 let id = jobs.submit(TrainRequest {
                     name: slot.session.name().to_string(),
-                    dataset: slot.session.snapshot(),
+                    dataset: slot.session.window_dataset(),
                     trainer: slot.session.retrain_trainer(),
                 });
                 slot.session.retrain_submitted(id);
                 stats.stream_retrains.inc();
             }
+            slot.dirty = true;
             stats.stream_absorbed.inc();
         }
         Err(e) => {
@@ -384,15 +505,37 @@ fn absorb_one(
     stats.absorb_latency.record(t0.elapsed());
 }
 
+/// Serialize one session and hand the bytes to the writer thread. The
+/// slot only goes clean when the writer actually accepted the bytes —
+/// on a failed hand-off it stays dirty so the next due tick retries
+/// (the cadence clock still advances, so a dead writer is a warning
+/// per cadence, not a hot spin).
+fn checkpoint_slot(slot: &mut Slot, sink: &CheckpointSink) {
+    let snap = Snapshot::capture(&slot.session, slot.weight, slot.last_version);
+    let path = snapshot_path(&sink.cfg.dir, slot.session.name());
+    if sink.tx.send((path, snap.encode())).is_ok() {
+        slot.dirty = false;
+    } else {
+        crate::log_warn!(
+            "stream",
+            "stream '{}': checkpoint writer is gone, snapshot dropped",
+            slot.session.name()
+        );
+    }
+    slot.last_ckpt = Instant::now();
+}
+
 /// The shard worker loop. Exits once draining is requested and every
 /// queue, control event and close acknowledgement has been retired —
 /// in-flight background retrains do NOT block the exit (they are the
-/// train queue's to finish; the session is simply dropped).
+/// train queue's to finish; the session is checkpointed a final time
+/// when checkpointing is on, then dropped).
 pub(crate) fn run_worker(
     shard: Arc<Shard>,
     registry: Arc<ModelRegistry>,
     jobs: Arc<TrainQueue>,
     stats: Arc<ServiceStats>,
+    ckpt: Option<CheckpointSink>,
 ) {
     let mut slots: HashMap<String, Slot> = HashMap::new();
     let mut closing: HashMap<String, Sender<Result<StreamSummary>>> =
@@ -412,12 +555,70 @@ pub(crate) fn run_worker(
 
         for c in controls {
             match c {
-                Control::Open { name, cfg } => {
+                Control::Open { name, cfg, weight } => {
                     let session = StreamSession::new(name.clone(), cfg);
-                    slots.insert(name, Slot { session, last_version: None });
+                    slots.insert(name, Slot::new(session, weight));
+                }
+                Control::Adopt { name, session, last_version, ack } => {
+                    let weight = {
+                        let mail = shard.mail.lock().unwrap();
+                        mail.queues.get(&name).map_or(1, |q| q.weight)
+                    };
+                    let mut slot = Slot::new(*session, weight);
+                    // resume serving immediately: re-publish the
+                    // restored model at (or past) the pre-restart
+                    // version so scorers and version watchers continue
+                    // seamlessly
+                    if slot.session.is_warm() {
+                        let v = registry.insert_with_floor(
+                            slot.session.name(),
+                            slot.session.solver().model(),
+                            last_version + 1,
+                        );
+                        slot.last_version = Some(v);
+                    }
+                    stats.stream_restores.inc();
+                    let version = slot.last_version;
+                    slots.insert(name, slot);
+                    let _ = ack.send(version);
                 }
                 Control::Close { name, ack } => {
                     closing.insert(name, ack);
+                }
+                Control::Snapshot { dir, ack } => {
+                    // Front-door sweep: write every owned session, one
+                    // result per stream — a failing write is isolated
+                    // to its stream. Writes run synchronously on the
+                    // worker ON PURPOSE: `snapshot_streams` promises
+                    // durable-on-return (the E2E kill/restore contract
+                    // rests on it). Absorption pauses for the sweep,
+                    // but producers keep enqueuing up to the per-stream
+                    // mailbox bound, and the documented protocol is to
+                    // quiesce first anyway.
+                    let mut results = Vec::with_capacity(slots.len());
+                    for slot in slots.values_mut() {
+                        let snap = Snapshot::capture(
+                            &slot.session,
+                            slot.weight,
+                            slot.last_version,
+                        );
+                        let path =
+                            snapshot_path(&dir, slot.session.name());
+                        let res = super::persist::write_atomic(
+                            &path,
+                            &snap.encode(),
+                        );
+                        if res.is_ok() {
+                            slot.dirty = false;
+                            slot.last_ckpt = Instant::now();
+                            stats.stream_checkpoints.inc();
+                        } else {
+                            stats.stream_checkpoint_errors.inc();
+                        }
+                        results
+                            .push((slot.session.name().to_string(), res));
+                    }
+                    let _ = ack.send(results);
                 }
             }
         }
@@ -439,8 +640,25 @@ pub(crate) fn run_worker(
         // re-baseline their session here, on the shard that owns it.
         let mut pending_retrains = false;
         for slot in slots.values_mut() {
-            reconcile_retrain(&mut slot.session, &registry, &jobs);
+            if reconcile_retrain(&mut slot.session, &registry, &jobs)
+                .is_some()
+            {
+                slot.dirty = true;
+            }
             pending_retrains |= slot.session.pending_retrain().is_some();
+        }
+
+        // Periodic checkpoint: at most ONE due session per tick (the
+        // absorb hot path is never blocked longer than one serialize);
+        // the writer thread does the disk I/O.
+        if let Some(sink) = &ckpt {
+            let due = slots
+                .values_mut()
+                .filter(|s| s.dirty && s.last_ckpt.elapsed() >= sink.cfg.every)
+                .max_by_key(|s| s.last_ckpt.elapsed());
+            if let Some(slot) = due {
+                checkpoint_slot(slot, sink);
+            }
         }
 
         // Finalize closes whose queues have fully drained. The emptiness
@@ -467,7 +685,16 @@ pub(crate) fn run_worker(
                     continue; // a late push landed; absorb it first
                 }
                 let ack = closing.remove(&name).expect("key from closing");
-                let summary = slots.remove(&name).map(|slot| summarize(&slot));
+                let summary = slots.remove(&name).map(|mut slot| {
+                    // final checkpoint: a graceful close persists the
+                    // freshest state for a later restore
+                    if let Some(sink) = &ckpt {
+                        if slot.dirty {
+                            checkpoint_slot(&mut slot, sink);
+                        }
+                    }
+                    summarize(&slot)
+                });
                 shard.space.notify_all();
                 let _ = ack.send(summary.ok_or_else(|| {
                     Error::Coordinator(format!("unknown stream '{name}'"))
@@ -484,6 +711,16 @@ pub(crate) fn run_worker(
                     && closing.is_empty()
             };
             if done {
+                // final checkpoints on the way out: a graceful
+                // shutdown leaves every session restorable at its
+                // freshest state
+                if let Some(sink) = &ckpt {
+                    for slot in slots.values_mut() {
+                        if slot.dirty {
+                            checkpoint_slot(slot, sink);
+                        }
+                    }
+                }
                 shard.space.notify_all();
                 return;
             }
@@ -494,14 +731,32 @@ pub(crate) fn run_worker(
             // Idle: sleep until data/control arrives (push, open, close
             // and begin_drain all notify `not_empty`, and the lock is
             // held from the emptiness check to the wait, so no wakeup is
-            // missed). Only a pending background retrain needs a poll —
-            // the train queue has no way to notify this shard.
+            // missed). A pending background retrain needs a poll (the
+            // train queue cannot notify this shard), and a dirty session
+            // needs a timed wake at its next checkpoint due time —
+            // otherwise an idle shard would defer periodic durability
+            // until the next push.
+            let next_ckpt = ckpt.as_ref().and_then(|sink| {
+                slots
+                    .values()
+                    .filter(|s| s.dirty)
+                    .map(|s| sink.cfg.every.saturating_sub(s.last_ckpt.elapsed()))
+                    .min()
+            });
             let mail = shard.mail.lock().unwrap();
             if mail.queued == 0 && mail.control.is_empty() && !mail.draining {
                 if pending_retrains {
                     let _ = shard
                         .not_empty
                         .wait_timeout(mail, Duration::from_millis(5))
+                        .unwrap();
+                } else if let Some(due_in) = next_ckpt {
+                    let _ = shard
+                        .not_empty
+                        .wait_timeout(
+                            mail,
+                            due_in.max(Duration::from_millis(1)),
+                        )
                         .unwrap();
                 } else {
                     let _ = shard.not_empty.wait(mail).unwrap();

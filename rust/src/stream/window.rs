@@ -139,6 +139,44 @@ impl SlidingWindow {
     pub fn matrix(&self) -> Matrix {
         Matrix::from_vec(self.len(), self.dim, self.points.clone())
     }
+
+    /// Rebuild a window from persisted samples (snapshot restore): the
+    /// Gram matrix is **re-derived** from the points — it is never
+    /// serialized — with the same `kernel.eval` the live path uses, so
+    /// the rebuild is bitwise identical to the matrix the snapshot was
+    /// taken over (kernel evaluation is symmetric in its arguments at
+    /// the bit level). `admitted` restores the FIFO ring cursor so the
+    /// next admit overwrites the same slot it would have pre-restart.
+    /// The caller (`stream::persist`) validates shapes; this asserts.
+    pub(crate) fn restore(
+        kernel: Kernel,
+        capacity: usize,
+        dim: usize,
+        points: Vec<f64>,
+        admitted: u64,
+    ) -> SlidingWindow {
+        assert!(capacity >= 2, "streaming window needs at least two slots");
+        assert!(dim > 0, "samples must have at least one feature");
+        assert_eq!(points.len() % dim, 0, "ragged sample block");
+        let m = points.len() / dim;
+        assert!(m <= capacity, "more resident samples than capacity");
+        let mut w = SlidingWindow {
+            kernel,
+            capacity,
+            dim,
+            points,
+            gram: Vec::with_capacity(m),
+            admitted,
+        };
+        for i in 0..m {
+            let mut row = Vec::with_capacity(m);
+            for j in 0..m {
+                row.push(kernel.eval(w.point(i), w.point(j)));
+            }
+            w.gram.push(row);
+        }
+        w
+    }
 }
 
 impl KernelProvider for SlidingWindow {
@@ -258,5 +296,36 @@ mod tests {
     #[should_panic]
     fn rejects_capacity_one() {
         SlidingWindow::new(Kernel::Linear, 1, 2);
+    }
+
+    #[test]
+    fn restore_rebuilds_gram_bitwise_and_keeps_ring_cursor() {
+        for kernel in [Kernel::Linear, Kernel::Rbf { g: 0.3 }] {
+            let mut live = SlidingWindow::new(kernel, 5, 3);
+            let mut rng = Rng::new(17);
+            fill(&mut live, 13, &mut rng); // wrapped ring
+            let mut points = Vec::new();
+            for i in 0..live.len() {
+                points.extend_from_slice(live.point(i));
+            }
+            let back = SlidingWindow::restore(
+                kernel,
+                live.capacity(),
+                live.dim(),
+                points,
+                live.admitted(),
+            );
+            assert_eq!(back.len(), live.len());
+            assert_eq!(back.next_slot(), live.next_slot());
+            for i in 0..live.len() {
+                for j in 0..live.len() {
+                    assert_eq!(
+                        back.row(i)[j].to_bits(),
+                        live.row(i)[j].to_bits(),
+                        "gram[{i}][{j}] not bitwise equal after rebuild"
+                    );
+                }
+            }
+        }
     }
 }

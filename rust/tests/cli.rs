@@ -125,6 +125,93 @@ fn stream_subcommand_multi_tenant_mode() {
 }
 
 #[test]
+fn snapshot_then_restore_resumes_the_fleet() {
+    let dir = std::env::temp_dir()
+        .join(format!("slabsvm_cli_snap_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // write a snapshot directory from a short synthetic fleet
+    let out = bin()
+        .args([
+            "snapshot", "--streams", "2", "--points", "90", "--window",
+            "48", "--min-train", "24", "--out",
+        ])
+        .arg(&dir)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "snapshot failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("snapshotted 2/2 streams"), "{text}");
+    let snaps: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            e.path().extension().and_then(|x| x.to_str()) == Some("snap")
+        })
+        .collect();
+    assert_eq!(snaps.len(), 2, "expected two .snap files");
+
+    // the format is self-describing: --inspect prints from the file alone
+    let out = bin()
+        .args(["snapshot", "--inspect"])
+        .arg(snaps[0].path())
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "inspect failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("format v1"), "{text}");
+    assert!(text.contains("window=48"), "{text}");
+
+    // a fresh coordinator resumes the fleet and keeps absorbing
+    let out = bin()
+        .args([
+            "stream", "--streams", "2", "--points", "40", "--window", "48",
+            "--min-train", "24", "--drift", "none", "--restore-dir",
+        ])
+        .arg(&dir)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "restore failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("restored 'tenant-0': 90 updates"),
+        "missing restore line: {text}"
+    );
+    // 90 pre-restart + 40 new absorbs per tenant
+    assert!(
+        text.contains("tenant-0: 130 updates"),
+        "restored session did not resume its counters: {text}"
+    );
+
+    // corrupt/truncated snapshots fail cleanly, not with a panic
+    let victim = snaps[0].path();
+    let bytes = std::fs::read(&victim).unwrap();
+    std::fs::write(&victim, &bytes[..bytes.len() / 2]).unwrap();
+    let out = bin()
+        .args(["snapshot", "--inspect"])
+        .arg(&victim)
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("snapshot error"), "unexpected error: {err}");
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn help_and_unknown_subcommand() {
     let out = bin().arg("help").output().unwrap();
     assert!(out.status.success());

@@ -1,0 +1,211 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/fixtures/golden-v1.snap.
+
+Writes a format-v1 stream-session snapshot (see
+rust/src/stream/persist.rs) for a hand-constructed session whose dual
+point is analytically exact: with nu1 = nu2 = 1 the box constraints pin
+the UNIQUE feasible point alpha_i = 1/m, abar_i = eps/m, so the state
+is optimal by construction, every margin is a dyadic rational
+(bit-exact in binary), and restore must reproduce it bitwise with no
+repair sweep. rho1/rho2 are the solver's interval-fallback recovery
+values (all variables at their bounds): rho1 = max_i s_i,
+rho2 = min_i s_i.
+
+The script re-decodes what it wrote and checks every field, so an
+encoder/decoder skew here fails at generation time, not in CI.
+"""
+import struct
+
+MAGIC = b"SLABSNAP"
+FORMAT_VERSION = 1
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x00000100000001B3
+MASK = (1 << 64) - 1
+
+
+def fnv1a(data: bytes) -> int:
+    h = FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & MASK
+    return h
+
+
+def u8(v):
+    return struct.pack("<B", v)
+
+
+def u32(v):
+    return struct.pack("<I", v)
+
+
+def u64(v):
+    return struct.pack("<Q", v)
+
+
+def f64(v):
+    return struct.pack("<d", v)
+
+
+def f64s(vs):
+    return b"".join(f64(v) for v in vs)
+
+
+def s(text):
+    raw = text.encode()
+    return u32(len(raw)) + raw
+
+
+# ----------------------------------------------------------- the session
+NAME = "golden"
+WEIGHT = 1
+LAST_VERSION = 0
+
+# StreamConfig: linear kernel, dim 2, window 4, min_train 2; SMO params
+# are the crate defaults except nu1 = nu2 = 1, eps = 0.5.
+DIM, WINDOW, MIN_TRAIN = 2, 4, 2
+NU1, NU2, EPS = 1.0, 1.0, 0.5
+TOL, MAX_ITER, HEURISTIC, SEED = 1e-5, 500_000, 0, 0
+SV_TOL, SHRINKING = 1e-10, 1
+REPAIR_MAX_ITER, REFRESH_EVERY = 100_000, 1024
+DRIFT_RECENT, DRIFT_MIN_OBS = 128, 64
+DRIFT_OUTSIDE_FRAC, DRIFT_RHO_REL = 0.9, 1.0
+RETRAIN_SHARDS, RETRAIN_ROUNDS = 4, 2
+
+POINTS = [(1.0, 0.0), (0.0, 1.0), (1.0, 1.0), (0.5, 0.5)]
+M = len(POINTS)
+ADMITTED = 4
+ALPHA = [1.0 / (NU1 * M)] * M        # 0.25 each — the unique feasible point
+ALPHA_BAR = [EPS / (NU2 * M)] * M    # 0.125 each
+GAMMA = [a - b for a, b in zip(ALPHA, ALPHA_BAR)]  # 0.125 each
+
+
+def dot(a, b):
+    return a[0] * b[0] + a[1] * b[1]
+
+
+GRAM = [[dot(POINTS[i], POINTS[j]) for j in range(M)] for i in range(M)]
+# margins s_i = sum_j gamma_j * K_ij, accumulated left to right exactly
+# like IncrementalSmo::margin_of_slot
+S = []
+for i in range(M):
+    acc = 0.0
+    for j in range(M):
+        acc += GAMMA[j] * GRAM[i][j]
+    S.append(acc)
+# all variables sit at their bounds -> interval-fallback rho recovery:
+# rho1 in [max s, +inf) -> max s; rho2 in (-inf, min s] -> min s
+RHO1 = max(S)
+RHO2 = min(S)
+BASELINED = 1
+BASELINE = (RHO1, RHO2)
+UPDATES, RETRAINS, REPAIR_ITERATIONS = 4, 0, 0
+
+GRAM_CHECKSUM = fnv1a(b"".join(f64s(row) for row in GRAM))
+
+# ------------------------------------------------------------- encoding
+cfg = b"".join(
+    [
+        u8(0), f64(0.0), f64(0.0), f64(0.0),  # linear kernel, no params
+        u64(DIM), u64(WINDOW), u64(MIN_TRAIN),
+        f64(NU1), f64(NU2), f64(EPS), f64(TOL),
+        u64(MAX_ITER), u8(HEURISTIC), u64(SEED),
+        f64(SV_TOL), u8(SHRINKING),
+        u64(REPAIR_MAX_ITER), u64(REFRESH_EVERY),
+        u64(DRIFT_RECENT), u64(DRIFT_MIN_OBS),
+        f64(DRIFT_OUTSIDE_FRAC), f64(DRIFT_RHO_REL),
+        u64(RETRAIN_SHARDS), u64(RETRAIN_ROUNDS),
+    ]
+)
+
+body = b"".join(
+    [
+        MAGIC,
+        u32(FORMAT_VERSION),
+        u64(fnv1a(cfg)),
+        s(NAME),
+        u32(WEIGHT),
+        u64(LAST_VERSION),
+        cfg,
+        u64(M),
+        u64(ADMITTED),
+        f64s(v for p in POINTS for v in p),
+        f64s(ALPHA),
+        f64s(ALPHA_BAR),
+        f64s(S),
+        f64(RHO1),
+        f64(RHO2),
+        u8(BASELINED),
+        u8(1), f64(BASELINE[0]), f64(BASELINE[1]),
+        u64(UPDATES),
+        u64(RETRAINS),
+        u64(REPAIR_ITERATIONS),
+        u64(GRAM_CHECKSUM),
+    ]
+)
+blob = body + u64(fnv1a(body))
+
+# ---------------------------------------------------- verification pass
+class Dec:
+    def __init__(self, buf):
+        self.buf, self.pos = buf, 0
+
+    def take(self, n):
+        assert self.pos + n <= len(self.buf), "truncated"
+        out = self.buf[self.pos:self.pos + n]
+        self.pos += n
+        return out
+
+    def u8(self):
+        return struct.unpack("<B", self.take(1))[0]
+
+    def u32(self):
+        return struct.unpack("<I", self.take(4))[0]
+
+    def u64(self):
+        return struct.unpack("<Q", self.take(8))[0]
+
+    def f64(self):
+        return struct.unpack("<d", self.take(8))[0]
+
+    def f64s(self, n):
+        return list(struct.unpack(f"<{n}d", self.take(8 * n)))
+
+    def s(self):
+        return self.take(self.u32()).decode()
+
+
+def verify(buf):
+    assert buf[:8] == MAGIC
+    body, check = buf[:-8], struct.unpack("<Q", buf[-8:])[0]
+    assert fnv1a(body) == check, "payload checksum"
+    d = Dec(body)
+    d.pos = 12
+    fingerprint = d.u64()
+    assert d.s() == NAME
+    assert d.u32() == WEIGHT
+    assert d.u64() == LAST_VERSION
+    cfg_start = d.pos
+    d.take(len(cfg))
+    assert fnv1a(body[cfg_start:d.pos]) == fingerprint, "fingerprint"
+    assert d.u64() == M and d.u64() == ADMITTED
+    assert d.f64s(M * DIM) == [v for p in POINTS for v in p]
+    assert d.f64s(M) == ALPHA and d.f64s(M) == ALPHA_BAR
+    assert d.f64s(M) == S
+    assert (d.f64(), d.f64()) == (RHO1, RHO2)
+    assert d.u8() == BASELINED and d.u8() == 1
+    assert (d.f64(), d.f64()) == BASELINE
+    assert (d.u64(), d.u64(), d.u64()) == (UPDATES, RETRAINS,
+                                           REPAIR_ITERATIONS)
+    assert d.u64() == GRAM_CHECKSUM
+    assert d.pos == len(body), "trailing bytes"
+
+
+verify(blob)
+
+out = __file__.replace("make_golden.py", "golden-v1.snap")
+with open(out, "wb") as fh:
+    fh.write(blob)
+print(f"wrote {out}: {len(blob)} bytes")
+print(f"  s = {S}  rho1 = {RHO1}  rho2 = {RHO2}")
+print(f"  gram checksum {GRAM_CHECKSUM:#018x}")

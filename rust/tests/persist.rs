@@ -1,0 +1,532 @@
+//! Durability tests for the stream snapshot/restore subsystem (L4
+//! persistence): golden-fixture format pinning, corruption/version
+//! rejection, bitwise restore parity, the multi-tenant
+//! snapshot → kill → restore → continue E2E, and checkpoint hygiene.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use slabsvm::coordinator::{BatcherConfig, Coordinator};
+use slabsvm::data::synthetic::{SlabConfig, SlabStream};
+use slabsvm::error::Error;
+use slabsvm::kernel::Kernel;
+use slabsvm::runtime::Engine;
+use slabsvm::solver::validate;
+use slabsvm::stream::{
+    persist, CheckpointConfig, Snapshot, StreamConfig, StreamPoolConfig,
+    StreamSession, StreamSpec,
+};
+
+/// The committed golden snapshot: a seeded ν₁ = ν₂ = 1 session whose
+/// dual point is the unique feasible (hence optimal) one, written by
+/// `rust/tests/fixtures/make_golden.py`. Restoring it must stay
+/// bitwise-exact forever; bumping FORMAT_VERSION requires a migration
+/// path for this file, not a silent break.
+const GOLDEN: &[u8] = include_bytes!("fixtures/golden-v1.snap");
+
+fn golden_config() -> StreamConfig {
+    let mut cfg = StreamConfig {
+        kernel: Kernel::Linear,
+        dim: 2,
+        window: 4,
+        min_train: 2,
+        ..Default::default()
+    };
+    cfg.incremental.smo.nu1 = 1.0;
+    cfg.incremental.smo.nu2 = 1.0;
+    cfg.incremental.smo.eps = 0.5;
+    cfg
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("slabsvm_persist_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ------------------------------------------------------ golden fixture
+
+#[test]
+fn golden_fixture_decodes_with_expected_contents() {
+    let snap = Snapshot::decode(GOLDEN).expect("golden fixture must decode");
+    assert_eq!(snap.name, "golden");
+    assert_eq!(snap.weight, 1);
+    assert_eq!(snap.last_version, 0);
+    assert_eq!(snap.len, 4);
+    assert_eq!(snap.admitted, 4);
+    assert_eq!(snap.cfg.window, 4);
+    assert_eq!(snap.cfg.dim, 2);
+    assert_eq!(snap.cfg.kernel, Kernel::Linear);
+    assert_eq!(snap.cfg.incremental.smo.nu1, 1.0);
+    assert_eq!(snap.cfg.incremental.smo.eps, 0.5);
+    assert_eq!(
+        snap.points,
+        vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 0.5, 0.5]
+    );
+    assert_eq!(snap.alpha, vec![0.25; 4]);
+    assert_eq!(snap.alpha_bar, vec![0.125; 4]);
+    assert_eq!(snap.s, vec![0.3125, 0.3125, 0.625, 0.3125]);
+    assert_eq!(snap.rho1.to_bits(), 0.625f64.to_bits());
+    assert_eq!(snap.rho2.to_bits(), 0.3125f64.to_bits());
+    assert_eq!(snap.baseline, Some((0.625, 0.3125)));
+    assert_eq!(snap.updates, 4);
+    assert_eq!(snap.retrains, 0);
+}
+
+#[test]
+fn golden_fixture_restores_with_bitwise_model_and_dual_parity() {
+    let (session, info) =
+        Snapshot::decode(GOLDEN).unwrap().into_session().unwrap();
+    // the ν = 1 dual point is the unique feasible point: it certifies
+    // as-is, so no repair ran and the restore is bitwise exact
+    assert!(!info.repaired, "optimal golden state must not need repair");
+    assert_eq!(info.kkt_violation, 0.0);
+    assert_eq!(session.name(), "golden");
+    assert_eq!(session.updates(), 4);
+    assert_eq!(session.solver().alpha(), &[0.25; 4]);
+    assert_eq!(session.solver().alpha_bar(), &[0.125; 4]);
+    assert_eq!(
+        session.solver().margins(),
+        &[0.3125, 0.3125, 0.625, 0.3125]
+    );
+    let (r1, r2) = session.solver().rho();
+    assert_eq!(r1.to_bits(), 0.625f64.to_bits());
+    assert_eq!(r2.to_bits(), 0.3125f64.to_bits());
+    // model parity: support vectors carry γ = α − ᾱ = 0.125 each
+    let model = session.solver().model();
+    assert_eq!(model.gamma, vec![0.125; 4]);
+    assert_eq!(model.rho1.to_bits(), 0.625f64.to_bits());
+    assert_eq!(model.rho2.to_bits(), 0.3125f64.to_bits());
+    // fresh-Gram KKT certificate on the restored state
+    let gram = Kernel::Linear.gram(&session.solver().window().matrix(), 1);
+    validate::certify(
+        &gram,
+        session.solver().alpha(),
+        session.solver().alpha_bar(),
+        r1,
+        r2,
+        1.0,
+        1.0,
+        0.5,
+        1e-9,
+    )
+    .expect("restored golden session must certify against a fresh Gram");
+}
+
+#[test]
+fn golden_fixture_roundtrips_byte_identical() {
+    // decode → restore → re-snapshot must reproduce the committed file
+    // exactly: the encoding is canonical and capture is lossless
+    let (session, _) =
+        Snapshot::decode(GOLDEN).unwrap().into_session().unwrap();
+    assert_eq!(
+        session.snapshot(),
+        GOLDEN,
+        "re-snapshot of the restored golden session must be byte-identical"
+    );
+}
+
+#[test]
+fn golden_fixture_fingerprint_gates_config_mismatch() {
+    // the exact config restores…
+    let (session, _) =
+        Snapshot::restore_expecting(GOLDEN, &golden_config()).unwrap();
+    assert_eq!(session.updates(), 4);
+    // …and the default config (different ν, window, …) is a clean
+    // typed error, not a panic
+    let err = Snapshot::restore_expecting(GOLDEN, &StreamConfig::default())
+        .unwrap_err();
+    assert!(
+        matches!(err, Error::Snapshot(_)),
+        "want Error::Snapshot, got {err:?}"
+    );
+    assert!(
+        err.to_string().contains("fingerprint"),
+        "unexpected message: {err}"
+    );
+}
+
+// ------------------------------------------- corruption and versioning
+
+#[test]
+fn unknown_format_version_is_a_clean_typed_error() {
+    let mut bytes = GOLDEN.to_vec();
+    bytes[8] = 99; // format version field (little-endian u32 at [8..12))
+    let err = Snapshot::decode(&bytes).unwrap_err();
+    assert!(matches!(err, Error::Snapshot(_)), "got {err:?}");
+    assert!(
+        err.to_string().contains("version 99"),
+        "unexpected message: {err}"
+    );
+}
+
+#[test]
+fn bad_magic_is_a_clean_typed_error() {
+    let mut bytes = GOLDEN.to_vec();
+    bytes[0] = b'X';
+    let err = Snapshot::decode(&bytes).unwrap_err();
+    assert!(matches!(err, Error::Snapshot(_)), "got {err:?}");
+    assert!(err.to_string().contains("magic"), "unexpected: {err}");
+}
+
+#[test]
+fn truncation_anywhere_is_a_checksum_error_not_a_panic() {
+    // every prefix of a valid snapshot must be rejected cleanly — this
+    // is the crash-mid-write contract restore() relies on
+    let full = GOLDEN;
+    for cut in [1, 8, 11, 12, 20, 27, full.len() / 2, full.len() - 1] {
+        let err = Snapshot::decode(&full[..cut]).unwrap_err();
+        assert!(
+            matches!(err, Error::Snapshot(_)),
+            "cut at {cut}: want Error::Snapshot, got {err:?}"
+        );
+    }
+}
+
+#[test]
+fn bitflip_in_state_fails_the_payload_checksum() {
+    let mut bytes = GOLDEN.to_vec();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    let err = Snapshot::decode(&bytes).unwrap_err();
+    assert!(
+        err.to_string().contains("checksum"),
+        "unexpected message: {err}"
+    );
+}
+
+#[test]
+fn infeasible_dual_state_is_rejected_before_resume() {
+    // re-encode the golden snapshot with a broken Σα: structurally
+    // valid (checksums recomputed) but dually infeasible
+    let mut snap = Snapshot::decode(GOLDEN).unwrap();
+    snap.alpha[0] = 0.75; // Σα = 1.5, and above cap_a = 0.25
+    let err = snap.into_session().unwrap_err();
+    assert!(matches!(err, Error::Snapshot(_)), "got {err:?}");
+}
+
+#[test]
+fn inconsistent_ring_cursor_is_rejected() {
+    // admitted < resident count is impossible for any real window; a
+    // checksum-valid snapshot claiming it must fail decode, not
+    // silently corrupt FIFO order after restore
+    let mut snap = Snapshot::decode(GOLDEN).unwrap();
+    snap.admitted = 2;
+    let err = Snapshot::decode(&snap.encode()).unwrap_err();
+    assert!(
+        err.to_string().contains("ring cursor"),
+        "unexpected message: {err}"
+    );
+}
+
+#[test]
+fn gram_checksum_mismatch_is_detected() {
+    // tamper with a sample but keep the recorded gram checksum: the
+    // re-derived matrix no longer matches what the snapshot was taken
+    // over
+    let mut snap = Snapshot::decode(GOLDEN).unwrap();
+    snap.points[0] = 2.0;
+    let err = snap.into_session().unwrap_err();
+    assert!(
+        err.to_string().contains("gram checksum"),
+        "unexpected message: {err}"
+    );
+}
+
+// -------------------------------------------------- session-level parity
+
+#[test]
+fn restored_session_is_bitwise_equal_and_continues_in_parity() {
+    for kernel in [Kernel::Linear, Kernel::Rbf { g: 0.05 }] {
+        let cfg = StreamConfig {
+            kernel,
+            window: 64,
+            min_train: 32,
+            ..Default::default()
+        };
+        let mut live = StreamSession::new("s", cfg);
+        let ds = SlabConfig::default().generate(150, 901);
+        for i in 0..100 {
+            live.absorb(ds.x.row(i)).unwrap();
+        }
+        let bytes = live.snapshot();
+        let restored = StreamSession::restore(&bytes).unwrap();
+        // dual parity at the snapshot point is bitwise
+        assert_eq!(restored.solver().alpha(), live.solver().alpha());
+        assert_eq!(
+            restored.solver().alpha_bar(),
+            live.solver().alpha_bar()
+        );
+        assert_eq!(restored.solver().rho(), live.solver().rho());
+        // fresh-Gram KKT certificate for the resumed session
+        let report = restored.solver().report();
+        let p = cfg.incremental.smo;
+        let gram =
+            kernel.gram(&restored.solver().window().matrix(), 1);
+        validate::certify(
+            &gram,
+            &report.dual.alpha,
+            &report.dual.alpha_bar,
+            report.dual.rho1,
+            report.dual.rho2,
+            p.nu1,
+            p.nu2,
+            p.eps,
+            1e-3,
+        )
+        .expect("restored session must pass a fresh-Gram certificate");
+        // and both copies absorb the same future identically
+        let mut live = live;
+        let mut restored = restored;
+        for i in 100..150 {
+            live.absorb(ds.x.row(i)).unwrap();
+            restored.absorb(ds.x.row(i)).unwrap();
+        }
+        let (lo, ro) = (
+            live.solver().report().stats.objective,
+            restored.solver().report().stats.objective,
+        );
+        assert!(
+            (lo - ro).abs() <= 1e-9 * lo.abs().max(1.0),
+            "{kernel:?}: objective diverged after resume: {lo} vs {ro}"
+        );
+        let ((l1, l2), (r1, r2)) = (live.solver().rho(), restored.solver().rho());
+        assert!((l1 - r1).abs() <= 1e-9 && (l2 - r2).abs() <= 1e-9);
+    }
+}
+
+// --------------------------------------------------- multi-tenant E2E
+
+/// The acceptance E2E: open a multi-tenant fleet, push, snapshot all,
+/// kill the coordinator, restore into a fresh one, continue pushing —
+/// restored models must be parity-equal (≤ 1e-9 on objective and ρ)
+/// with an uninterrupted run, and the resumed dual must pass a
+/// fresh-Gram KKT certificate.
+#[test]
+fn e2e_snapshot_kill_restore_continue_with_model_parity() {
+    let n_streams = 3usize;
+    let before = 80usize;
+    let after = 40usize;
+    let cfg = StreamConfig {
+        window: 48,
+        min_train: 24,
+        ..Default::default()
+    };
+    let seqs: Vec<Vec<[f64; 2]>> = (0..n_streams)
+        .map(|i| {
+            let mut s = SlabStream::new(SlabConfig::default(), 9100 + i as u64);
+            (0..before + after).map(|_| s.next_point()).collect()
+        })
+        .collect();
+
+    // uninterrupted reference: one session per tenant over the full
+    // sequence, plus its state at the snapshot point
+    let mut ref_at_snap = Vec::new();
+    let mut ref_final = Vec::new();
+    for seq in &seqs {
+        let mut s = StreamSession::new("ref", cfg);
+        for x in &seq[..before] {
+            s.absorb(x).unwrap();
+        }
+        ref_at_snap.push(s.solver().rho());
+        for x in &seq[before..] {
+            s.absorb(x).unwrap();
+        }
+        ref_final.push((
+            s.solver().report().stats.objective,
+            s.solver().rho(),
+        ));
+    }
+
+    // phase 1: a live fleet absorbs the first chunk and is snapshotted
+    let dir = tmpdir("e2e");
+    let c1 = Coordinator::start(Engine::Native, BatcherConfig::default(), 1);
+    c1.open_streams(
+        (0..n_streams)
+            .map(|i| StreamSpec::new(format!("t{i}"), cfg))
+            .collect(),
+    )
+    .unwrap();
+    std::thread::scope(|scope| {
+        for (i, seq) in seqs.iter().enumerate() {
+            let c = &c1;
+            scope.spawn(move || {
+                let name = format!("t{i}");
+                for x in &seq[..before] {
+                    c.push(&name, x).unwrap();
+                }
+            });
+        }
+    });
+    c1.quiesce_streams();
+    let outcomes = c1.snapshot_streams(&dir).unwrap();
+    assert_eq!(outcomes.len(), n_streams);
+    for o in &outcomes {
+        assert!(o.result.is_ok(), "snapshot '{}' failed", o.name);
+    }
+    let versions_before: Vec<u64> = (0..n_streams)
+        .map(|i| c1.registry().version(&format!("t{i}")).unwrap())
+        .collect();
+    // kill the coordinator — sessions, registry, everything is gone
+    c1.shutdown();
+
+    // phase 2: a fresh coordinator restores the fleet from disk
+    let c2 = Coordinator::start(Engine::Native, BatcherConfig::default(), 1);
+    let restored = c2.restore_streams(&dir).unwrap();
+    assert_eq!(restored.len(), n_streams);
+    for r in &restored {
+        let r = r.result.as_ref().expect("restore failed");
+        assert_eq!(r.updates, before as u64);
+        assert!(!r.repaired, "post-repair snapshots must restore exactly");
+    }
+    for (i, &v_before) in versions_before.iter().enumerate() {
+        let name = format!("t{i}");
+        // restored model is immediately servable, at a version that
+        // continues (never resets) the pre-restart sequence
+        let v_now = c2.registry().version(&name).unwrap();
+        assert!(
+            v_now > v_before,
+            "{name}: version went backwards: {v_now} after {v_before}"
+        );
+        let model = c2.registry().get(&name).unwrap();
+        let ref_rho = ref_at_snap[i];
+        assert!(
+            (model.rho1 - ref_rho.0).abs() <= 1e-9
+                && (model.rho2 - ref_rho.1).abs() <= 1e-9,
+            "{name}: restored model rho diverged from uninterrupted run"
+        );
+    }
+
+    // phase 3: keep pushing; the resumed fleet must match the
+    // uninterrupted reference at the end
+    std::thread::scope(|scope| {
+        for (i, seq) in seqs.iter().enumerate() {
+            let c = &c2;
+            scope.spawn(move || {
+                let name = format!("t{i}");
+                for x in &seq[before..] {
+                    c.push(&name, x).unwrap();
+                }
+            });
+        }
+    });
+    c2.quiesce_streams();
+    for (i, &(ref_obj, ref_rho)) in ref_final.iter().enumerate() {
+        let s = c2.close_stream(&format!("t{i}")).unwrap();
+        assert_eq!(s.updates, (before + after) as u64);
+        assert!(
+            (s.objective - ref_obj).abs() <= 1e-9 * ref_obj.abs().max(1.0),
+            "t{i}: objective diverged: {} vs uninterrupted {ref_obj}",
+            s.objective
+        );
+        assert!(
+            (s.rho.0 - ref_rho.0).abs() <= 1e-9
+                && (s.rho.1 - ref_rho.1).abs() <= 1e-9,
+            "t{i}: rho diverged: {:?} vs {ref_rho:?}",
+            s.rho
+        );
+    }
+    c2.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn restore_isolates_corrupt_files_per_stream() {
+    let dir = tmpdir("isolate");
+    // two good snapshots…
+    for (name, seed) in [("good-a", 71u64), ("good-b", 72)] {
+        let cfg = StreamConfig { window: 32, min_train: 16, ..Default::default() };
+        let mut s = StreamSession::new(name, cfg);
+        let ds = SlabConfig::default().generate(40, seed);
+        for i in 0..40 {
+            s.absorb(ds.x.row(i)).unwrap();
+        }
+        persist::write_atomic(
+            &persist::snapshot_path(&dir, name),
+            &s.snapshot(),
+        )
+        .unwrap();
+    }
+    // …and one garbage file
+    std::fs::write(dir.join("junk.snap"), b"definitely not a snapshot")
+        .unwrap();
+
+    let c = Coordinator::start(Engine::Native, BatcherConfig::default(), 1);
+    let outcomes = c.restore_streams(&dir).unwrap();
+    assert_eq!(outcomes.len(), 3);
+    let ok: Vec<&str> = outcomes
+        .iter()
+        .filter_map(|o| o.result.as_ref().ok().map(|r| r.name.as_str()))
+        .collect();
+    assert_eq!(ok.len(), 2, "both good snapshots must restore: {outcomes:?}");
+    let failed: Vec<_> =
+        outcomes.iter().filter(|o| o.result.is_err()).collect();
+    assert_eq!(failed.len(), 1);
+    assert!(failed[0].file.ends_with("junk.snap"));
+    assert!(c.stream_manager().is_open("good-a"));
+    assert!(c.stream_manager().is_open("good-b"));
+    // restoring the same directory again conflicts per-stream (already
+    // open), again without touching the healthy state
+    let again = c.restore_streams(&dir).unwrap();
+    assert!(again.iter().all(|o| o.result.is_err()));
+    assert_eq!(c.stream_manager().open_count(), 2);
+    c.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+// ------------------------------------------------------- checkpointing
+
+#[test]
+fn periodic_checkpoints_land_and_restore() {
+    let dir = tmpdir("ckpt");
+    let c = Coordinator::start_with_streams(
+        Engine::Native,
+        BatcherConfig::default(),
+        1,
+        StreamPoolConfig {
+            shards: 2,
+            mailbox_cap: 256,
+            // zero cadence: every loop tick may checkpoint one dirty
+            // session — deterministic for the test, no sleeps needed
+            checkpoint: Some(CheckpointConfig::new(&dir, Duration::ZERO)),
+        },
+    );
+    let cfg = StreamConfig { window: 32, min_train: 16, ..Default::default() };
+    c.open_streams(vec![
+        StreamSpec::new("ck-a", cfg),
+        StreamSpec::new("ck-b", cfg),
+    ])
+    .unwrap();
+    let ds = SlabConfig::default().generate(60, 77);
+    for i in 0..60 {
+        c.push("ck-a", ds.x.row(i)).unwrap();
+        c.push("ck-b", ds.x.row(i)).unwrap();
+    }
+    c.quiesce_streams();
+    // graceful shutdown flushes a final checkpoint of every dirty
+    // session through the writer thread before it exits
+    c.shutdown();
+
+    let files = persist::list_snapshots(&dir).unwrap();
+    assert_eq!(files.len(), 2, "one snapshot per stream: {files:?}");
+    // no stray temp files may survive the atomic write protocol
+    let strays: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            e.path().extension().and_then(|x| x.to_str()) == Some("tmp")
+        })
+        .collect();
+    assert!(strays.is_empty(), "leftover temp files: {strays:?}");
+    // the final checkpoints carry the full pre-shutdown state
+    for file in &files {
+        let snap = persist::read_snapshot(file).unwrap();
+        assert_eq!(snap.updates, 60, "{}", file.display());
+        let (session, info) = snap.into_session().unwrap();
+        assert!(!info.repaired);
+        assert!(session.is_warm());
+    }
+    std::fs::remove_dir_all(dir).ok();
+}

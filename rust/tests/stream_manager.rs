@@ -17,7 +17,7 @@ fn coordinator(shards: usize, mailbox_cap: usize) -> Coordinator {
         Engine::Native,
         BatcherConfig { max_batch: 64, max_wait_us: 200, queue_cap: 4096 },
         2,
-        StreamPoolConfig { shards, mailbox_cap },
+        StreamPoolConfig { shards, mailbox_cap, checkpoint: None },
     )
 }
 
