@@ -8,7 +8,10 @@
 //! registry — scoring traffic through the batcher keeps flowing the
 //! whole time. One tenant's baseline sags mid-stream; its drift monitor
 //! trips and a background cascade retrain lands on the owning shard
-//! without pausing anyone else.
+//! without pausing anyone else. Before the fleet closes, one tenant
+//! handles a deletion request: `Coordinator::forget` routes the
+//! removal to the owning shard, which withdraws the reading's dual
+//! mass, repairs and re-publishes — no retrain, no pause.
 //!
 //! ```bash
 //! cargo run --release --example multi_stream_serving
@@ -103,6 +106,16 @@ fn main() -> slabsvm::Result<()> {
     });
     coordinator.quiesce_streams();
     let dt = t0.elapsed().as_secs_f64();
+
+    // a deletion request for tenant-2: its most recent reading's stable
+    // id is its arrival count minus one (ids are 0-based push indices)
+    let out = coordinator.forget("tenant-2", per_tenant as u64 - 1)?;
+    println!(
+        "tenant-2 forgot reading #{}: {} resident remain, model v{}",
+        out.id,
+        out.resident,
+        out.version.unwrap_or(0)
+    );
 
     let mut total_updates = 0u64;
     for i in 0..tenants {

@@ -8,7 +8,11 @@
 //! scoring traffic through the batcher never stops. Mid-stream the
 //! sensor's baseline shifts (a mean-shift drift); the drift monitor
 //! trips, a full cascade retrain runs in the background, and the new
-//! model version starts serving while readings keep flowing.
+//! model version starts serving while readings keep flowing. At the
+//! end, one reading is **forgotten** — targeted unlearning by its
+//! stable sample id withdraws its dual mass and repairs, so the
+//! re-published model provably no longer reflects it (a "delete my
+//! data" request at streaming cost, no retrain).
 //!
 //! ```bash
 //! cargo run --release --example streaming_anomaly
@@ -95,6 +99,25 @@ fn main() -> slabsvm::Result<()> {
         total as f64 / dt,
         session.retrains()
     );
+
+    // Targeted unlearning: the sensor's owner asks us to delete one
+    // specific reading. Its stable id is its arrival index; forgetting
+    // it withdraws its dual mass, repairs KKT and hands back a model
+    // fit on the remaining window — which we hot-swap so the served
+    // slab stops reflecting the deleted reading immediately.
+    let forget_id = session.solver().window().id(0);
+    let before = session.solver().len();
+    let forgotten = session.forget(forget_id)?;
+    if let Some(model) = forgotten.model {
+        coordinator.register("sensor", model);
+    }
+    println!(
+        "forgot reading #{forget_id}: window {before} -> {} resident, \
+         repaired in {} pair updates",
+        forgotten.resident,
+        session.solver().last_stats().iterations
+    );
+
     println!("coordinator: {}", coordinator.stats().summary());
     coordinator.shutdown();
     Ok(())

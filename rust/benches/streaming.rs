@@ -42,8 +42,8 @@ use slabsvm::linalg::median;
 use slabsvm::runtime::Engine;
 use slabsvm::solver::{SolverKind, Trainer};
 use slabsvm::stream::{
-    IncrementalConfig, IncrementalSmo, StreamConfig, StreamPoolConfig,
-    StreamSession, StreamSpec,
+    IncrementalConfig, IncrementalSmo, PolicyKind, StreamConfig,
+    StreamPoolConfig, StreamSession, StreamSpec,
 };
 
 fn main() {
@@ -291,9 +291,93 @@ fn main() {
         ]
     });
 
+    // ------------------------------------------------------------- WP1
+    // Eviction policy vs window size: the InteriorFirst policy keeps
+    // the support set resident (interior |α−ᾱ| ≈ 0 points leave first),
+    // so a smaller window should hold the AUC a larger FIFO window
+    // needs. Every run streams the same drifting sequence (mean-shift
+    // ramp — the SlabStream generators) and is scored on an eval set
+    // drawn from the stream's FINAL configuration, so the number
+    // measures how well the surviving window represents the current
+    // band. The update cost is timed alongside: InteriorFirst evicts
+    // zero-mass points, so its perturbation is smaller where FIFO may
+    // rip out a support vector per absorb.
+    let wp_windows: &[usize] = if fast { &[24, 48] } else { &[32, 64, 128] };
+    let wp_points = if fast { 260 } else { 1200 };
+    for policy in PolicyKind::ALL {
+        for &w in wp_windows {
+            bench.run(&format!("window-policy-auc/{policy}/w={w}"), || {
+                let mut cfg = StreamConfig {
+                    kernel: Kernel::Linear,
+                    dim: 2,
+                    window: w,
+                    min_train: w / 2,
+                    ..Default::default()
+                };
+                cfg.incremental.policy = policy;
+                let mut session = StreamSession::new("wp1", cfg);
+                // a mild mean-shift ramp (two noise-spreads): enough
+                // that a window full of stale points mis-centers the
+                // slab, small enough that the policy comparison is
+                // about window composition, not raw tracking speed
+                let mut stream =
+                    SlabStream::new(SlabConfig::default(), 31415).with_drift(
+                        slabsvm::data::synthetic::DriftSchedule {
+                            drift: slabsvm::data::synthetic::Drift::MeanShift {
+                                delta: -0.5,
+                            },
+                            start: wp_points / 2,
+                            duration: wp_points / 4,
+                        },
+                    );
+                let t0 = std::time::Instant::now();
+                for _ in 0..wp_points {
+                    session.absorb(&stream.next_point()).expect("wp1 absorb");
+                }
+                let stream_s = t0.elapsed().as_secs_f64();
+                // eval against the post-drift band the stream ended on
+                let eval = stream
+                    .config_at(wp_points)
+                    .generate_eval(250, 250, 2718);
+                let model = session.solver().model();
+                let margins: Vec<f64> = (0..eval.len())
+                    .map(|i| model.margin(eval.x.row(i)))
+                    .collect();
+                let auc = slabsvm::metrics::roc_auc(&eval.y, &margins);
+                // structural sanity only — the AUC itself is the
+                // reported measurement, not a gate (a quality gate on a
+                // drifting workload would flap; the BENCHJSON trajectory
+                // is what the artifact lane archives)
+                assert!(
+                    (0.0..=1.0).contains(&auc) && model.n_sv() > 0,
+                    "policy {policy} w={w}: degenerate run (auc {auc})"
+                );
+                vec![
+                    ("window".into(), w as f64),
+                    (
+                        "policy_interior_first".into(),
+                        (policy == PolicyKind::InteriorFirst) as u8 as f64,
+                    ),
+                    ("auc".into(), auc),
+                    ("n_sv".into(), model.n_sv() as f64),
+                    ("stream_s".into(), stream_s),
+                    (
+                        "updates_per_s".into(),
+                        wp_points as f64 / stream_s.max(1e-12),
+                    ),
+                    (
+                        "repair_iters_total".into(),
+                        session.solver().repair_iterations() as f64,
+                    ),
+                ]
+            });
+        }
+    }
+
     bench.report(
         "ST1 — incremental update vs full retrain per sample; \
          MS1 — sharded multi-stream absorb throughput vs sequential; \
-         PS1 — snapshot restore-resume vs cold window refill",
+         PS1 — snapshot restore-resume vs cold window refill; \
+         WP1 — eviction policy (fifo vs interior-first) AUC vs window size",
     );
 }

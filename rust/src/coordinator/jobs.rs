@@ -36,6 +36,10 @@ pub enum JobStatus {
     Failed {
         error: String,
     },
+    /// Superseded via [`TrainQueue::cancel`] before it could publish:
+    /// its model (possibly fit on since-deleted data) never reaches
+    /// the registry. Terminal, like `Done`/`Failed`.
+    Cancelled,
 }
 
 /// A training job: any [`Trainer`] configuration (solver kind, kernel,
@@ -76,8 +80,35 @@ impl TrainQueue {
                         Msg::Job(id, req) => (id, req),
                         Msg::Shutdown => break,
                     };
-                    set_status(&state2, id, JobStatus::Running);
+                    // Queued -> Running only if not already cancelled —
+                    // one critical section, so a concurrent cancel()
+                    // either lands before (job skipped) or after (the
+                    // post-fit check below catches it).
+                    let cancelled = {
+                        let mut map = state2.0.lock().unwrap();
+                        if matches!(map.get(&id), Some(JobStatus::Cancelled))
+                        {
+                            true
+                        } else {
+                            map.insert(id, JobStatus::Running);
+                            false
+                        }
+                    };
+                    if cancelled {
+                        continue;
+                    }
                     let result = req.trainer.fit(&req.dataset.x);
+                    // Publish-or-discard atomically with the status: a
+                    // cancel that landed while the fit ran means this
+                    // model was trained on data that has since been
+                    // deleted or replaced — it must never reach the
+                    // registry.
+                    let (lock, cvar) = &*state2;
+                    let mut map = lock.lock().unwrap();
+                    if matches!(map.get(&id), Some(JobStatus::Cancelled)) {
+                        cvar.notify_all();
+                        continue;
+                    }
                     let status = match result {
                         Ok(report) => {
                             let n_sv = report.model.n_sv();
@@ -95,7 +126,8 @@ impl TrainQueue {
                             JobStatus::Failed { error: e.to_string() }
                         }
                     };
-                    set_status(&state2, id, status);
+                    map.insert(id, status);
+                    cvar.notify_all();
                 }
             })
             .expect("spawn trainer");
@@ -133,6 +165,26 @@ impl TrainQueue {
         self.state.0.lock().unwrap().get(&id).cloned()
     }
 
+    /// Cancel a queued or running job: its model will never reach the
+    /// registry (a fit already in progress is not interrupted — its
+    /// result is discarded on completion). The supersede path of
+    /// targeted unlearning relies on this: a retrain trained *with* a
+    /// since-forgotten sample must not publish. Returns false when the
+    /// job is unknown or already terminal (a `Done` job has published;
+    /// cancelling cannot unpublish).
+    pub fn cancel(&self, id: JobId) -> bool {
+        let (lock, cvar) = &*self.state;
+        let mut map = lock.lock().unwrap();
+        match map.get(&id) {
+            Some(JobStatus::Queued) | Some(JobStatus::Running) => {
+                map.insert(id, JobStatus::Cancelled);
+                cvar.notify_all();
+                true
+            }
+            _ => false,
+        }
+    }
+
     /// Block until the job reaches a terminal state.
     pub fn wait(&self, id: JobId) -> Option<JobStatus> {
         let (lock, cvar) = &*self.state;
@@ -140,9 +192,9 @@ impl TrainQueue {
         loop {
             match map.get(&id) {
                 None => return None,
-                Some(JobStatus::Done { .. }) | Some(JobStatus::Failed { .. }) => {
-                    return map.get(&id).cloned()
-                }
+                Some(JobStatus::Done { .. })
+                | Some(JobStatus::Failed { .. })
+                | Some(JobStatus::Cancelled) => return map.get(&id).cloned(),
                 _ => {
                     map = cvar.wait(map).unwrap();
                 }
@@ -208,6 +260,44 @@ mod tests {
         let (q, _) = queue();
         assert!(q.status(JobId(999)).is_none());
         assert!(q.wait(JobId(999)).is_none());
+        q.shutdown();
+    }
+
+    #[test]
+    fn cancelled_job_never_publishes() {
+        let (q, registry) = queue();
+        // j1 occupies the single worker; j2 is cancelled while queued
+        let j1 = q.submit(TrainRequest {
+            name: "keep".into(),
+            dataset: SlabConfig::default().generate(400, 301),
+            trainer: Trainer::default().kernel(Kernel::Linear),
+        });
+        let j2 = q.submit(TrainRequest {
+            name: "superseded".into(),
+            dataset: SlabConfig::default().generate(80, 302),
+            trainer: Trainer::default().kernel(Kernel::Linear),
+        });
+        assert!(q.cancel(j2), "queued/running job must be cancellable");
+        assert!(matches!(q.wait(j1), Some(JobStatus::Done { .. })));
+        assert!(
+            matches!(q.wait(j2), Some(JobStatus::Cancelled)),
+            "cancelled job must terminate as Cancelled"
+        );
+        assert!(
+            registry.get("superseded").is_none(),
+            "a cancelled job's model must never reach the registry"
+        );
+        // terminal jobs cannot be cancelled
+        assert!(!q.cancel(j1));
+        assert!(!q.cancel(JobId(999)));
+        // the queue keeps working after a cancel
+        let j3 = q.submit(TrainRequest {
+            name: "after".into(),
+            dataset: SlabConfig::default().generate(80, 303),
+            trainer: Trainer::default().kernel(Kernel::Linear),
+        });
+        assert!(matches!(q.wait(j3), Some(JobStatus::Done { .. })));
+        assert!(registry.get("after").is_some());
         q.shutdown();
     }
 

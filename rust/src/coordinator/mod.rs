@@ -57,8 +57,8 @@ use crate::solver::api::Trainer;
 use crate::solver::ocssvm::SlabModel;
 use crate::stream::shard::reconcile_retrain;
 use crate::stream::{
-    DriftEvent, StreamConfig, StreamManager, StreamPoolConfig, StreamSession,
-    StreamSpec, StreamSummary,
+    DriftEvent, ForgetOutcome, StreamConfig, StreamManager, StreamPoolConfig,
+    StreamSession, StreamSpec, StreamSummary,
 };
 use crate::Result;
 
@@ -252,6 +252,24 @@ impl Coordinator {
     /// [`Coordinator::stream_push`] does.
     pub fn push(&self, name: &str, x: &[f64]) -> Result<()> {
         self.streams.push(name, x)
+    }
+
+    /// Targeted unlearning on a managed stream: remove the resident
+    /// sample with stable id `id` (the 0-based arrival index of that
+    /// stream's pushes), withdraw its dual mass, repair, and hot-swap
+    /// the post-removal model — "forget user X" without a retrain. The
+    /// command is applied by the owning shard at its next tick, before
+    /// samples still queued for the stream; call
+    /// [`Coordinator::quiesce_streams`] first when the id might still
+    /// be in flight. A background retrain in flight at removal time was
+    /// trained on data including the sample — the shard **cancels** it
+    /// (a cancelled job's model never reaches the registry, even if its
+    /// fit already ran) and submits a fresh retrain of the post-removal
+    /// window in its place. Non-resident ids (never absorbed, evicted
+    /// by the window, or already forgotten) return a typed
+    /// [`crate::Error::Unlearning`] and the stream keeps running.
+    pub fn forget(&self, name: &str, id: u64) -> Result<ForgetOutcome> {
+        self.streams.forget(name, id)
     }
 
     /// Close a managed stream: drains its queued samples, then returns

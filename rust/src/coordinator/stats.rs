@@ -119,6 +119,8 @@ pub struct ServiceStats {
     pub stream_absorb_errors: Counter,
     /// background retrains escalated by shard workers
     pub stream_retrains: Counter,
+    /// samples removed by targeted unlearning (`forget`)
+    pub stream_forgets: Counter,
     /// session snapshots durably written (periodic checkpoints + final
     /// close/drain checkpoints + front-door snapshot sweeps)
     pub stream_checkpoints: Counter,
@@ -152,6 +154,7 @@ impl ServiceStats {
             stream_backpressure: Counter::default(),
             stream_absorb_errors: Counter::default(),
             stream_retrains: Counter::default(),
+            stream_forgets: Counter::default(),
             stream_checkpoints: Counter::default(),
             stream_checkpoint_errors: Counter::default(),
             stream_restores: Counter::default(),
@@ -189,13 +192,14 @@ impl ServiceStats {
     pub fn stream_summary(&self) -> String {
         format!(
             "pushed={} absorbed={} absorb_errors={} backpressure_waits={} \
-             retrains={} checkpoints={} checkpoint_errors={} restores={} \
-             absorb p50={}us p99={}us mean={:.0}us",
+             retrains={} forgets={} checkpoints={} checkpoint_errors={} \
+             restores={} absorb p50={}us p99={}us mean={:.0}us",
             self.stream_pushes.get(),
             self.stream_absorbed.get(),
             self.stream_absorb_errors.get(),
             self.stream_backpressure.get(),
             self.stream_retrains.get(),
+            self.stream_forgets.get(),
             self.stream_checkpoints.get(),
             self.stream_checkpoint_errors.get(),
             self.stream_restores.get(),

@@ -39,6 +39,11 @@ pub enum Error {
     /// persisted dual state.
     Snapshot(String),
 
+    /// Targeted unlearning failures: the sample id is not resident
+    /// (never admitted, already evicted, or already forgotten), or the
+    /// removal would empty the window.
+    Unlearning(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -56,6 +61,7 @@ impl fmt::Display for Error {
             Error::Pjrt(m) => write!(f, "pjrt runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Snapshot(m) => write!(f, "snapshot error: {m}"),
+            Error::Unlearning(m) => write!(f, "unlearning error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -95,6 +101,10 @@ impl Error {
     pub fn snapshot(msg: impl Into<String>) -> Self {
         Error::Snapshot(msg.into())
     }
+    /// Helper for targeted-unlearning errors.
+    pub fn unlearning(msg: impl Into<String>) -> Self {
+        Error::Unlearning(msg.into())
+    }
 }
 
 #[cfg(test)]
@@ -111,6 +121,10 @@ mod tests {
         assert_eq!(
             Error::snapshot("bad magic").to_string(),
             "snapshot error: bad magic"
+        );
+        assert_eq!(
+            Error::unlearning("id 7 not resident").to_string(),
+            "unlearning error: id 7 not resident"
         );
         assert!(Error::NoConvergence("x".into())
             .to_string()

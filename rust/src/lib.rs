@@ -82,6 +82,27 @@
 //! # let _ = summary.updates;
 //! ```
 //!
+//! Windows evict by a pluggable policy ([`stream::policy`]) — FIFO, or
+//! `interior-first` (evict the smallest-|α−ᾱ| resident so support
+//! vectors stay; a smaller window then holds a larger FIFO window's
+//! accuracy) — and the same arbitrary-slot removal path gives targeted
+//! **unlearning**: forget any resident sample by its stable id (its
+//! 0-based arrival index) for the cost of one warm-started repair
+//! sweep, no retrain:
+//!
+//! ```no_run
+//! use slabsvm::stream::{PolicyKind, StreamConfig, StreamSession};
+//! let mut cfg = StreamConfig::default();
+//! cfg.incremental.policy = PolicyKind::InteriorFirst;
+//! let mut session = StreamSession::new("live", cfg);
+//! let first = session.absorb(&[20.0, 3.0]).unwrap();
+//! session.absorb(&[21.0, 2.0]).unwrap();
+//! let f = session.forget(first.sample_id).unwrap(); // "forget user X"
+//! assert_eq!(f.resident, 1); // dual mass withdrawn, KKT repaired
+//! // on a managed fleet: Coordinator::forget("tenant", id); at rest:
+//! // `slabsvm forget --snapshot f.snap --id 7`
+//! ```
+//!
 //! Sessions are durable ([`stream::persist`]): snapshot a session (or
 //! a whole fleet via `Coordinator::snapshot_streams`) and a restarted
 //! process resumes it from the persisted window + dual state — a

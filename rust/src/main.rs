@@ -9,8 +9,11 @@
 //!   serve     run the coordinator on a synthetic open-loop workload
 //!   stream    online learning on drifting streams; --restore-dir
 //!             resumes a snapshotted fleet, --snapshot-dir /
-//!             --checkpoint-dir persist it
+//!             --checkpoint-dir persist it, --evict picks the
+//!             window-eviction policy
 //!   snapshot  write durable stream snapshots (or --inspect one)
+//!   forget    targeted unlearning: remove samples by id from a
+//!             stream snapshot, repair, write it back
 //!   info      artifact manifest + engine diagnostics
 //!
 //! Run `slabsvm <cmd> --help` for per-command options.
@@ -48,6 +51,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(rest),
         "stream" => cmd_stream(rest),
         "snapshot" => cmd_snapshot(rest),
+        "forget" => cmd_forget(rest),
         "sweep" => cmd_sweep(rest),
         "info" => cmd_info(rest),
         "--help" | "-h" | "help" => {
@@ -76,6 +80,7 @@ fn usage() -> String {
      \tserve    run the serving coordinator on a synthetic workload\n\
      \tstream   online learning over synthetic drifting streams (--streams M = sharded multi-tenant)\n\
      \tsnapshot write durable stream snapshots from a synthetic fleet, or --inspect one\n\
+     \tforget   targeted unlearning: remove samples by id from a snapshot, repair, write back\n\
      \tsweep    k-fold cross-validated hyper-parameter grid search\n\
      \tinfo     artifact manifest + engine diagnostics\n"
         .to_string()
@@ -583,6 +588,11 @@ fn cmd_stream(args: &[String]) -> Result<()> {
             "1000",
             "per-stream checkpoint cadence for --checkpoint-dir (ms)",
         ),
+        ArgSpec::opt(
+            "evict",
+            "fifo",
+            "window-eviction policy: fifo|interior-first",
+        ),
     ];
     spec.extend(kernel_args());
     if args.iter().any(|a| a == "--help") {
@@ -611,6 +621,7 @@ fn cmd_stream(args: &[String]) -> Result<()> {
     cfg.incremental.smo.nu1 = p.get_f64("nu1")?;
     cfg.incremental.smo.nu2 = p.get_f64("nu2")?;
     cfg.incremental.smo.eps = p.get_f64("eps")?;
+    cfg.incremental.policy = p.get_str("evict")?.parse()?;
 
     let amount = p.get_f64("drift-amount")?;
     let drift = match p.get_str("drift")? {
@@ -926,6 +937,11 @@ fn cmd_snapshot(args: &[String]) -> Result<()> {
         ArgSpec::opt("window", "128", "sliding-window capacity"),
         ArgSpec::opt("min-train", "64", "samples before the first publish"),
         ArgSpec::opt("seed", "42", "stream seed"),
+        ArgSpec::opt(
+            "evict",
+            "fifo",
+            "window-eviction policy: fifo|interior-first",
+        ),
     ];
     if args.iter().any(|a| a == "--help") {
         println!(
@@ -950,12 +966,13 @@ fn cmd_snapshot(args: &[String]) -> Result<()> {
     let n_streams = p.get_usize("streams")?.max(1);
     let points = p.get_usize("points")?;
     let seed0 = p.get_usize("seed")? as u64;
-    let cfg = StreamConfig {
+    let mut cfg = StreamConfig {
         dim: 2,
         window: p.get_usize("window")?,
         min_train: p.get_usize("min-train")?,
         ..Default::default()
     };
+    cfg.incremental.policy = p.get_str("evict")?.parse()?;
     let c = Coordinator::start_with_streams(
         Engine::Native,
         BatcherConfig::default(),
@@ -1002,6 +1019,92 @@ fn cmd_snapshot(args: &[String]) -> Result<()> {
         dir.display()
     );
     c.shutdown();
+    Ok(())
+}
+
+// ------------------------------------------------------------------ forget
+
+/// `slabsvm forget`: offline targeted unlearning — load a stream
+/// snapshot, remove the given sample ids (withdrawing their dual mass
+/// and repairing with the warm-started bounded sweep), and write the
+/// shrunk session back as a fresh snapshot. The result restores like
+/// any other snapshot (`slabsvm stream --restore-dir`), so "forget
+/// user X" works on a fleet at rest without replaying the stream.
+fn cmd_forget(args: &[String]) -> Result<()> {
+    use slabsvm::stream::{persist, Snapshot};
+
+    let spec = vec![
+        ArgSpec::req("snapshot", "path to the stream snapshot to edit"),
+        ArgSpec::req(
+            "id",
+            "comma-separated stable sample ids (0-based arrival indices)",
+        ),
+        ArgSpec::opt("out", "", "output path (default: rewrite in place)"),
+    ];
+    if args.iter().any(|a| a == "--help") {
+        println!(
+            "{}",
+            render_help(
+                "forget",
+                "remove samples by id from a snapshot, repair, write back",
+                &spec
+            )
+        );
+        return Ok(());
+    }
+    let p = parse_args(&spec, args)?;
+    let path = std::path::PathBuf::from(p.get_str("snapshot")?);
+    let ids: Vec<u64> = p
+        .get_str("id")?
+        .split(',')
+        .map(|t| {
+            t.trim().parse::<u64>().map_err(|_| {
+                Error::config(format!("--id: not a sample id: {t:?}"))
+            })
+        })
+        .collect::<Result<_>>()?;
+
+    let snap = persist::read_snapshot(&path)?;
+    let before = snap.len;
+    // the manager-layer envelope must survive the edit: dropping the
+    // fair-share weight or the registry version watermark would make a
+    // later --restore-dir regress published versions / scheduling
+    let (weight, last_version) = (snap.weight, snap.last_version);
+    let (mut session, info) = snap.into_session()?;
+    if info.repaired {
+        println!("note: snapshot state needed a repair sweep on load");
+    }
+    for &id in &ids {
+        session.forget(id)?;
+        println!(
+            "forgot sample {id} from '{}' ({} resident remain)",
+            session.name(),
+            session.solver().len()
+        );
+    }
+    let (r1, r2) = session.solver().rho();
+    println!(
+        "window {} -> {} resident, rho=[{r1:.6}, {r2:.6}], {} forgets \
+         over the stream's lifetime",
+        before,
+        session.solver().len(),
+        session.forgets()
+    );
+    let out_str = p.get_str("out")?;
+    let out = if out_str.is_empty() {
+        path
+    } else {
+        std::path::PathBuf::from(out_str)
+    };
+    let bytes =
+        Snapshot::capture(&session, weight, Some(last_version)).encode();
+    persist::write_atomic(&out, &bytes)?;
+    println!(
+        "snapshot written to {} (format v{})",
+        out.display(),
+        persist::FORMAT_VERSION
+    );
+    let _ = Snapshot::decode(&std::fs::read(&out)?)?; // self-check
     Ok(())
 }
 

@@ -10,7 +10,17 @@
 //!   transfers from donor coordinates so Σα = 1 and Σᾱ = ε never move;
 //! * **decremental remove** — the evicted sample's α/ᾱ mass is
 //!   redistributed to in-window coordinates with box headroom (its γ
-//!   contribution leaves the margins in the same O(m) pass);
+//!   contribution leaves the margins in the same O(m) pass). The
+//!   victim is picked by the configured
+//!   [`EvictionPolicy`](super::policy::EvictionPolicy)
+//!   ([`PolicyKind::Fifo`] reproduces the classic oldest-first window
+//!   bitwise; [`PolicyKind::InteriorFirst`] evicts the smallest
+//!   |α − ᾱ| resident so support vectors stay);
+//! * **targeted unlearning** — [`IncrementalSmo::forget`] removes an
+//!   *arbitrary* resident sample by its stable id ("forget user X"):
+//!   same mass withdrawal, then the window compacts by swap-remove and
+//!   the freed mass redistributes under the *grown* boxes
+//!   (cap = 1/(νm) loosens to 1/(ν(m−1)), so the mass always fits);
 //! * **repair** — a bounded number of warm-started SMO sweeps
 //!   ([`solve_from`]) restores KKT within `tol`. Warm-starting from the
 //!   perturbed optimum is the whole trick: the perturbation touches O(1)
@@ -25,6 +35,7 @@
 //! KKT certificate — so everything downstream of a `Trainer` works
 //! unchanged on a streamed model.
 
+use crate::error::Error;
 use crate::kernel::Kernel;
 use crate::solver::api::{DualSolution, FitReport};
 use crate::solver::ocssvm::SlabModel;
@@ -32,6 +43,7 @@ use crate::solver::smo::{solve_from, SmoParams, WarmState};
 use crate::solver::{validate, SolveStats};
 use crate::Result;
 
+use super::policy::PolicyKind;
 use super::window::SlidingWindow;
 
 /// Mass below this is considered fully placed (absolute, on multipliers
@@ -50,6 +62,8 @@ pub struct IncrementalConfig {
     /// exact O(m²) margin recomputation every this many admits (caps
     /// floating-point drift on unbounded streams)
     pub refresh_every: u64,
+    /// which resident sample a full-window absorb evicts
+    pub policy: PolicyKind,
 }
 
 impl Default for IncrementalConfig {
@@ -58,6 +72,7 @@ impl Default for IncrementalConfig {
             smo: SmoParams::default(),
             repair_max_iter: 100_000,
             refresh_every: 1024,
+            policy: PolicyKind::Fifo,
         }
     }
 }
@@ -224,18 +239,78 @@ impl IncrementalSmo {
         s
     }
 
-    /// Absorb one sample: admit (evicting the oldest once the window is
-    /// full), restore dual feasibility, repair KKT. Errors leave the
-    /// pre-repair feasible state in place.
-    pub fn push(&mut self, x: &[f64]) -> Result<()> {
-        if self.window.is_full() {
-            self.replace_oldest(x);
+    /// Absorb one sample: admit (evicting the configured policy's
+    /// victim once the window is full), restore dual feasibility,
+    /// repair KKT. Returns the absorbed sample's stable id (its admit
+    /// sequence number — the handle [`IncrementalSmo::forget`] takes).
+    /// Errors leave the pre-repair feasible state in place.
+    pub fn push(&mut self, x: &[f64]) -> Result<u64> {
+        let slot = if self.window.is_full() {
+            let victim = self.cfg.policy.policy().victim(
+                self.window.ids(),
+                &self.alpha,
+                &self.alpha_bar,
+            );
+            self.replace_slot(victim, x);
+            victim
         } else {
-            self.grow_add(x);
-        }
+            self.grow_add(x)
+        };
+        let id = self.window.id(slot);
         if self.window.admitted() % self.cfg.refresh_every.max(1) == 0 {
             self.recompute_margins();
         }
+        self.repair()?;
+        Ok(id)
+    }
+
+    /// Targeted unlearning: remove the resident sample with stable id
+    /// `id` ("forget user X"), exactly withdrawing its dual mass — the
+    /// same headroom-greedy redistribution the eviction path uses, then
+    /// a swap-remove compaction of the window and a warm-started
+    /// bounded repair sweep. The boxes *grow* when m shrinks
+    /// (cap = 1/(νm) → 1/(ν(m−1))), so the freed mass always finds
+    /// headroom and Σα = 1 / Σᾱ = ε are preserved (up to the placement
+    /// granularity `MASS_EPS`). A non-resident id (never admitted,
+    /// evicted, or
+    /// already forgotten) is a typed [`Error::Unlearning`] and the
+    /// state is untouched; so is forgetting the only resident sample
+    /// (an empty window has no feasible dual).
+    pub fn forget(&mut self, id: u64) -> Result<()> {
+        let Some(slot) = self.window.slot_of_id(id) else {
+            return Err(Error::unlearning(format!(
+                "sample id {id} is not resident (never admitted, already \
+                 evicted, or already forgotten)"
+            )));
+        };
+        if self.len() < 2 {
+            return Err(Error::unlearning(
+                "cannot forget the only resident sample: an empty window \
+                 has no feasible dual (close the stream instead)",
+            ));
+        }
+        // Withdraw the sample's dual mass while its kernel row still
+        // exists (the bumps apply the exact rank-1 margin updates).
+        let freed_a = self.alpha[slot];
+        let freed_b = self.alpha_bar[slot];
+        self.bump_alpha(slot, -freed_a);
+        self.bump_abar(slot, -freed_b);
+        // Compact: the window swap-removes the slot; the dual vectors
+        // mirror the identical index mapping. The remaining margins are
+        // already exact — the removed coordinate's γ is zero.
+        self.window.remove(slot);
+        self.alpha.swap_remove(slot);
+        self.alpha_bar.swap_remove(slot);
+        self.s.swap_remove(slot);
+        // Redistribute under the grown boxes: (m−1)·1/(ν(m−1)) = 1/ν ≥ 1,
+        // so the freed mass always fits (ν ≤ 1).
+        let rem_a = self.distribute(true, freed_a, usize::MAX);
+        let rem_b = self.distribute(false, freed_b, usize::MAX);
+        debug_assert!(
+            rem_a <= MASS_EPS * self.len() as f64
+                && rem_b <= MASS_EPS * self.len() as f64,
+            "freed mass must fit the grown boxes: {rem_a} / {rem_b} left"
+        );
         self.repair()
     }
 
@@ -358,8 +433,9 @@ impl IncrementalSmo {
 
     /// Window still growing: append the sample, shrink every box to the
     /// new m, seed the newcomer from the clip overflow + donors.
-    fn grow_add(&mut self, x: &[f64]) {
-        let i = self.window.admit(x);
+    /// Returns the newcomer's slot.
+    fn grow_add(&mut self, x: &[f64]) -> usize {
+        let i = self.window.append(x);
         if self.len() == 1 {
             // the very first sample carries the whole dual mass: Σα = 1,
             // Σᾱ = ε (inside the m = 1 box since ν₁, ν₂ ≤ 1)
@@ -367,7 +443,7 @@ impl IncrementalSmo {
             self.alpha.push(1.0);
             self.alpha_bar.push(eps);
             self.s.push((1.0 - eps) * self.window.row(0)[0]);
-            return;
+            return i;
         }
         self.alpha.push(0.0);
         self.alpha_bar.push(0.0);
@@ -398,13 +474,15 @@ impl IncrementalSmo {
             let rem = self.distribute(in_alpha, pool, usize::MAX);
             self.seed(in_alpha, i, rem);
         }
+        i
     }
 
-    /// Steady state: decrementally remove the oldest sample (mass
+    /// Steady state: decrementally remove the victim slot (mass
     /// redistributed, γ contribution withdrawn from the margins), then
-    /// admit the new one in its slot and seed it.
-    fn replace_oldest(&mut self, x: &[f64]) {
-        let i = self.window.next_slot();
+    /// admit the new sample in its slot and seed it. With the Fifo
+    /// policy the victim is the oldest resident — bit-for-bit the
+    /// pre-policy eviction path.
+    fn replace_slot(&mut self, i: usize, x: &[f64]) {
         // withdraw the evicted dual mass while its kernel row still exists
         let freed_a = self.alpha[i];
         let freed_b = self.alpha_bar[i];
@@ -413,8 +491,7 @@ impl IncrementalSmo {
         let rem_a = self.distribute(true, freed_a, i);
         let rem_b = self.distribute(false, freed_b, i);
         // swap the sample; the old kernel row is overwritten here
-        let slot = self.window.admit(x);
-        debug_assert_eq!(slot, i);
+        self.window.replace(i, x);
         // s[i] tracked stale old-row contributions — rebuild it exactly
         self.s[i] = self.margin_of_slot(i);
         // seed the newcomer (plus any mass the saturated box bounced back)
@@ -677,5 +754,102 @@ mod tests {
             inc.push(&p).unwrap();
         }
         assert_invariants(&inc);
+    }
+
+    #[test]
+    fn push_returns_the_stable_sample_id() {
+        let mut inc =
+            IncrementalSmo::new(Kernel::Linear, 4, 2, IncrementalConfig::default());
+        for (i, p) in stream_points(7, 36).iter().enumerate() {
+            assert_eq!(inc.push(p).unwrap(), i as u64);
+        }
+        // window holds the last 4: ids 3..=6
+        assert_eq!(inc.window().slot_of_id(2), None);
+        assert!(inc.window().slot_of_id(3).is_some());
+    }
+
+    #[test]
+    fn forget_withdraws_mass_exactly_and_stays_feasible() {
+        for kernel in [Kernel::Linear, Kernel::Rbf { g: 0.05 }] {
+            let mut inc =
+                IncrementalSmo::new(kernel, 40, 2, IncrementalConfig::default());
+            for p in stream_points(55, 37) {
+                inc.push(&p).unwrap();
+            }
+            let victim = inc.window().id(7);
+            inc.forget(victim).unwrap();
+            assert_eq!(inc.len(), 39);
+            assert_eq!(inc.window().slot_of_id(victim), None);
+            assert_invariants(&inc);
+            // forgetting again is a typed error, state untouched
+            let alpha_before = inc.alpha().to_vec();
+            let err = inc.forget(victim).unwrap_err();
+            assert!(
+                matches!(err, crate::Error::Unlearning(_)),
+                "want Error::Unlearning, got {err:?}"
+            );
+            assert_eq!(inc.alpha(), &alpha_before[..]);
+        }
+    }
+
+    #[test]
+    fn forget_of_last_resident_is_rejected() {
+        let mut inc =
+            IncrementalSmo::new(Kernel::Linear, 4, 2, IncrementalConfig::default());
+        inc.push(&[20.0, 3.0]).unwrap();
+        let err = inc.forget(0).unwrap_err();
+        assert!(matches!(err, crate::Error::Unlearning(_)), "{err:?}");
+        assert_eq!(inc.len(), 1);
+    }
+
+    #[test]
+    fn interior_first_evicts_smallest_margin_slack() {
+        use crate::stream::policy::PolicyKind;
+        let cfg = IncrementalConfig {
+            policy: PolicyKind::InteriorFirst,
+            ..Default::default()
+        };
+        let mut inc = IncrementalSmo::new(Kernel::Linear, 20, 2, cfg);
+        let pts = stream_points(30, 38);
+        for p in &pts[..20] {
+            inc.push(p).unwrap();
+        }
+        for p in &pts[20..] {
+            // the predicted victim is the smallest-|γ| (oldest-tied) slot
+            let want = PolicyKind::InteriorFirst.policy().victim(
+                inc.window().ids(),
+                inc.alpha(),
+                inc.alpha_bar(),
+            );
+            let want_id = inc.window().id(want);
+            inc.push(p).unwrap();
+            assert_eq!(
+                inc.window().slot_of_id(want_id),
+                None,
+                "victim id {want_id} must have been evicted"
+            );
+            assert_invariants(&inc);
+        }
+    }
+
+    #[test]
+    fn fifo_policy_evicts_in_ring_order() {
+        // the Fifo policy must reproduce the classic oldest-first window:
+        // victims come out in admit order, one per steady-state push
+        let mut inc =
+            IncrementalSmo::new(Kernel::Linear, 8, 2, IncrementalConfig::default());
+        let pts = stream_points(24, 39);
+        for p in &pts[..8] {
+            inc.push(p).unwrap();
+        }
+        for (k, p) in pts[8..].iter().enumerate() {
+            inc.push(p).unwrap();
+            assert_eq!(
+                inc.window().slot_of_id(k as u64),
+                None,
+                "push {k}: oldest id {k} must be evicted first"
+            );
+            assert!(inc.window().slot_of_id(k as u64 + 1).is_some());
+        }
     }
 }

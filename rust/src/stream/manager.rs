@@ -103,6 +103,20 @@ pub struct RestoreOutcome {
     pub result: Result<RestoredStream>,
 }
 
+/// What a targeted [`StreamManager::forget`] did.
+#[derive(Clone, Debug)]
+pub struct ForgetOutcome {
+    pub name: String,
+    /// the forgotten sample's stable id (its 0-based arrival index)
+    pub id: u64,
+    /// registry version of the re-published post-removal model (None
+    /// when the shrunk session is below its warmup bar — the last
+    /// published model keeps serving until the next absorb)
+    pub version: Option<u64>,
+    /// resident samples remaining in the window
+    pub resident: usize,
+}
+
 /// One tenant stream to open on the manager.
 #[derive(Clone, Debug)]
 pub struct StreamSpec {
@@ -121,6 +135,12 @@ impl StreamSpec {
     /// Builder: set the fair-scheduling weight.
     pub fn weight(mut self, weight: u32) -> StreamSpec {
         self.weight = weight.max(1);
+        self
+    }
+
+    /// Builder: set the window-eviction policy (default FIFO).
+    pub fn eviction(mut self, policy: super::policy::PolicyKind) -> StreamSpec {
+        self.cfg.incremental.policy = policy;
         self
     }
 }
@@ -294,6 +314,32 @@ impl StreamManager {
         self.shards[idx].push(name, x, &self.stats)?;
         self.stats.stream_pushes.inc();
         Ok(())
+    }
+
+    /// Targeted unlearning on a managed stream: ask the owning shard to
+    /// remove the resident sample with stable id `id` (the 0-based
+    /// arrival index of that stream's pushes), withdraw its dual mass,
+    /// repair, and re-publish the post-removal model. Blocks until the
+    /// owning shard has applied it (like a retrain completion, the
+    /// reconciliation happens on the shard's own loop — never on this
+    /// caller's thread). The command is control-plane: it runs at the
+    /// shard's next tick, *before* samples still queued for the stream
+    /// — [`StreamManager::quiesce`] first when the id to forget might
+    /// still be in flight. A background retrain in flight at removal
+    /// time is **cancelled** (its training set contained the forgotten
+    /// sample — its model never reaches the registry) and replaced by a
+    /// fresh retrain of the post-removal window. A
+    /// non-resident id (never absorbed, already
+    /// evicted, or already forgotten) is a typed
+    /// [`crate::Error::Unlearning`]; the stream keeps running.
+    pub fn forget(&self, name: &str, id: u64) -> Result<ForgetOutcome> {
+        let idx = {
+            let route = self.route.read().unwrap();
+            *route.get(name).ok_or_else(|| {
+                Error::Coordinator(format!("unknown stream '{name}'"))
+            })?
+        };
+        self.shards[idx].forget(name, id)
     }
 
     /// Close a stream: everything already queued for it is absorbed
@@ -547,6 +593,37 @@ mod tests {
         m.quiesce();
         let second = m.close_stream("s").unwrap();
         assert_eq!(second.updates, 1, "session must restart fresh");
+        m.shutdown();
+        jobs.shutdown();
+    }
+
+    #[test]
+    fn forget_routes_to_owning_shard_and_rejects_bad_ids() {
+        let (m, registry, jobs) = harness(2, 64);
+        m.open_streams(vec![StreamSpec::new("s", quick_cfg())]).unwrap();
+        let ds = SlabConfig::default().generate(40, 303);
+        for i in 0..40 {
+            m.push("s", ds.x.row(i)).unwrap();
+        }
+        m.quiesce();
+        let v_before = registry.version("s").unwrap();
+        // window 32, 40 pushed: ids 8..=39 are resident
+        let out = m.forget("s", 20).unwrap();
+        assert_eq!(out.name, "s");
+        assert_eq!(out.id, 20);
+        assert_eq!(out.resident, 31);
+        assert!(out.version.unwrap() > v_before, "forget must re-publish");
+        // id 0 was FIFO-evicted long ago: typed error, stream survives
+        let err = m.forget("s", 0).unwrap_err();
+        assert!(
+            matches!(err, crate::Error::Unlearning(_)),
+            "want Error::Unlearning, got {err:?}"
+        );
+        m.push("s", ds.x.row(0)).unwrap();
+        m.quiesce();
+        let summary = m.close_stream("s").unwrap();
+        assert_eq!(summary.updates, 41, "stream must keep absorbing");
+        assert!(m.forget("s", 1).is_err(), "closed stream cannot forget");
         m.shutdown();
         jobs.shutdown();
     }

@@ -35,6 +35,16 @@
 //!   starve its shard-mates. `Coordinator::open_streams` / `push` /
 //!   `close_stream` are the front door (experiment MS1,
 //!   `rust/benches/streaming.rs`);
+//! * [`policy`] — pluggable window eviction: [`policy::Fifo`] (oldest
+//!   first — bitwise-identical to the classic ring window) and
+//!   [`policy::InteriorFirst`] (evict the smallest-|α−ᾱ| resident so
+//!   support vectors stay — a smaller window holds the accuracy of a
+//!   larger FIFO one, experiment WP1). The same arbitrary-slot removal
+//!   path powers **targeted unlearning**: [`session::StreamSession::forget`]
+//!   (and `Coordinator::forget` / `slabsvm forget`) removes any
+//!   resident sample by its stable id, withdraws its dual mass via the
+//!   eviction path's headroom-greedy redistribution and repairs —
+//!   "forget user X" at the cost of one warm-started sweep;
 //! * [`persist`] — durable sessions: a versioned, self-describing
 //!   binary snapshot of a session's window + dual state + drift
 //!   baseline, restored via Gram re-derivation (checksum-verified) and
@@ -66,6 +76,7 @@ pub mod drift;
 pub mod incremental;
 pub mod manager;
 pub mod persist;
+pub mod policy;
 pub mod session;
 pub(crate) mod shard;
 pub mod window;
@@ -73,9 +84,10 @@ pub mod window;
 pub use drift::{DriftConfig, DriftEvent, DriftMonitor};
 pub use incremental::{IncrementalConfig, IncrementalSmo};
 pub use manager::{
-    RestoredStream, RestoreOutcome, SnapshotOutcome, StreamManager,
-    StreamPoolConfig, StreamSpec, StreamSummary,
+    ForgetOutcome, RestoredStream, RestoreOutcome, SnapshotOutcome,
+    StreamManager, StreamPoolConfig, StreamSpec, StreamSummary,
 };
 pub use persist::{CheckpointConfig, RestoreInfo, Snapshot};
-pub use session::{Absorbed, StreamConfig, StreamSession};
+pub use policy::{EvictionPolicy, Fifo, InteriorFirst, PolicyKind};
+pub use session::{Absorbed, Forgotten, StreamConfig, StreamSession};
 pub use window::SlidingWindow;

@@ -16,11 +16,20 @@
 //! ```text
 //! [ magic "SLABSNAP" | format version u32 | config fingerprint u64 ]
 //! [ name | weight | last registry version ]
-//! [ config section: kernel, dims, SMO/incremental/drift parameters ]
-//! [ state: samples, α, ᾱ, s, ρ1, ρ2, drift baseline, counters,
-//!   gram checksum ]
+//! [ config section: kernel, dims, SMO/incremental/drift parameters,
+//!   eviction policy (v2) ]
+//! [ state: sample ids (v2), samples, α, ᾱ, s, ρ1, ρ2, drift baseline,
+//!   counters (v2 adds forgets), gram checksum ]
 //! [ payload checksum u64 over every preceding byte ]
 //! ```
+//!
+//! This build writes **format v2** (eviction-policy tag in the config
+//! section; stable per-sample ids and the forget counter in the state)
+//! and still reads v1: a v1 snapshot decodes as the [`PolicyKind::Fifo`]
+//! policy with ids synthesized from the ring cursor — exactly the
+//! identities the v1 writer's FIFO window held, so a restored v1
+//! session evicts and forgets identically to one that never restarted.
+//! Re-encoding a decoded v1 snapshot produces its canonical v2 form.
 //!
 //! All integers are little-endian; floats are IEEE-754 bit patterns, so
 //! a snapshot round-trips **bitwise**. The trailing payload checksum
@@ -55,14 +64,16 @@ use crate::Result;
 
 use super::drift::DriftConfig;
 use super::incremental::{IncrementalConfig, IncrementalSmo};
+use super::policy::PolicyKind;
 use super::session::{StreamConfig, StreamSession};
 use super::window::SlidingWindow;
 
 /// First 8 bytes of every snapshot.
 pub const MAGIC: [u8; 8] = *b"SLABSNAP";
 
-/// Format version this build writes (and the only one it reads).
-pub const FORMAT_VERSION: u32 = 1;
+/// Format version this build writes. Reads this and every earlier one
+/// (v1 decodes as the Fifo policy with synthesized sample ids).
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Periodic per-shard checkpointing of live sessions.
 #[derive(Clone, Debug)]
@@ -257,9 +268,10 @@ fn heuristic_from_tag(tag: u8) -> Result<Heuristic> {
     }
 }
 
-/// Canonical byte encoding of a [`StreamConfig`] — the fingerprint is
-/// FNV-1a over exactly these bytes, so two configs fingerprint equal
-/// iff every field matches bitwise.
+/// Canonical (current-version) byte encoding of a [`StreamConfig`] —
+/// the fingerprint is FNV-1a over exactly these bytes, so two configs
+/// fingerprint equal iff every field matches bitwise. v2 appends the
+/// eviction-policy tag.
 fn config_section(cfg: &StreamConfig) -> Vec<u8> {
     let mut e = Enc::new();
     let (tag, g, c, degree) = kernel_tag(&cfg.kernel);
@@ -288,10 +300,11 @@ fn config_section(cfg: &StreamConfig) -> Vec<u8> {
     e.f64(cfg.drift.rho_rel);
     e.u64(cfg.retrain_shards as u64);
     e.u64(cfg.retrain_rounds as u64);
+    e.u8(cfg.incremental.policy.tag());
     e.buf
 }
 
-fn decode_config(d: &mut Dec<'_>) -> Result<StreamConfig> {
+fn decode_config(d: &mut Dec<'_>, version: u32) -> Result<StreamConfig> {
     let tag = d.u8()?;
     let (g, c, degree) = (d.f64()?, d.f64()?, d.f64()?);
     let kernel = kernel_from_tag(tag, g, c, degree)?;
@@ -309,10 +322,11 @@ fn decode_config(d: &mut Dec<'_>) -> Result<StreamConfig> {
         sv_tol: d.f64()?,
         shrinking: d.u8()? != 0,
     };
-    let incremental = IncrementalConfig {
+    let mut incremental = IncrementalConfig {
         smo,
         repair_max_iter: d.usize()?,
         refresh_every: d.u64()?,
+        policy: PolicyKind::Fifo,
     };
     let drift = DriftConfig {
         recent: d.usize()?,
@@ -320,6 +334,12 @@ fn decode_config(d: &mut Dec<'_>) -> Result<StreamConfig> {
         outside_frac: d.f64()?,
         rho_rel: d.f64()?,
     };
+    let retrain_shards = d.usize()?;
+    let retrain_rounds = d.usize()?;
+    // v1 predates eviction policies; every v1 window was FIFO
+    if version >= 2 {
+        incremental.policy = PolicyKind::from_tag(d.u8()?)?;
+    }
     Ok(StreamConfig {
         kernel,
         dim,
@@ -327,9 +347,32 @@ fn decode_config(d: &mut Dec<'_>) -> Result<StreamConfig> {
         min_train,
         incremental,
         drift,
-        retrain_shards: d.usize()?,
-        retrain_rounds: d.usize()?,
+        retrain_shards,
+        retrain_rounds,
     })
+}
+
+/// Reconstruct the per-slot sample ids a v1 (pre-id) snapshot's FIFO
+/// window held: residents are the last `len` admits; while growing,
+/// slot i holds admit i; once full, admit `a` sits at slot
+/// `a % capacity` (the old ring cursor). v1 windows never shrank, so
+/// any other shape is a corrupt file.
+fn synthesize_v1_ids(len: usize, admitted: u64, capacity: usize) -> Result<Vec<u64>> {
+    if admitted == len as u64 {
+        return Ok((0..admitted).collect());
+    }
+    if len == capacity {
+        let cap = capacity as u64;
+        let base = admitted - cap;
+        return Ok((0..len as u64)
+            .map(|slot| base + ((slot + cap - base % cap) % cap))
+            .collect());
+    }
+    Err(Error::snapshot(format!(
+        "v1 snapshot is inconsistent: {admitted} admitted but only {len} \
+         resident in a window of {capacity} (partial v1 windows never \
+         evicted)"
+    )))
 }
 
 // ------------------------------------------------------------ snapshot
@@ -347,6 +390,10 @@ pub struct RestoreInfo {
 /// A decoded (or about-to-be-encoded) stream-session snapshot.
 #[derive(Clone, Debug)]
 pub struct Snapshot {
+    /// format version this snapshot was decoded from (informational:
+    /// [`FORMAT_VERSION`] for fresh captures, and [`Snapshot::encode`]
+    /// always writes the current format regardless)
+    pub format_version: u32,
     pub name: String,
     /// manager fair-scheduling weight (1 for single-writer sessions)
     pub weight: u32,
@@ -355,8 +402,11 @@ pub struct Snapshot {
     pub cfg: StreamConfig,
     /// resident sample count (≤ cfg.window)
     pub len: usize,
-    /// window ring cursor: total samples ever admitted
+    /// total samples ever admitted (also the next sample id)
     pub admitted: u64,
+    /// stable per-sample ids, slot order (v1 files: synthesized from
+    /// the ring cursor — the identities the FIFO window actually held)
+    pub ids: Vec<u64>,
     /// resident samples, slot order, row-major `len · dim`
     pub points: Vec<f64>,
     pub alpha: Vec<f64>,
@@ -373,6 +423,8 @@ pub struct Snapshot {
     pub baseline: Option<(f64, f64)>,
     pub updates: u64,
     pub retrains: u64,
+    /// samples removed by targeted unlearning (0 for v1 files)
+    pub forgets: u64,
     pub repair_iterations: u64,
     /// FNV-1a over the live Gram matrix at capture time
     pub gram_checksum: u64,
@@ -395,12 +447,14 @@ impl Snapshot {
         }
         let (rho1, rho2) = inc.rho();
         Snapshot {
+            format_version: FORMAT_VERSION,
             name: session.name().to_string(),
             weight: weight.max(1),
             last_version: last_version.unwrap_or(0),
             cfg: *session.config(),
             len: w.len(),
             admitted: w.admitted(),
+            ids: w.ids().to_vec(),
             points,
             alpha: inc.alpha().to_vec(),
             alpha_bar: inc.alpha_bar().to_vec(),
@@ -411,6 +465,7 @@ impl Snapshot {
             baseline: session.drift_monitor().baseline(),
             updates: session.updates(),
             retrains: session.retrains(),
+            forgets: session.forgets(),
             repair_iterations: inc.repair_iterations(),
             gram_checksum: gram_checksum(w),
         }
@@ -436,6 +491,9 @@ impl Snapshot {
         e.buf.extend_from_slice(&cfg_bytes);
         e.u64(self.len as u64);
         e.u64(self.admitted);
+        for &id in &self.ids {
+            e.u64(id);
+        }
         e.f64s(&self.points);
         e.f64s(&self.alpha);
         e.f64s(&self.alpha_bar);
@@ -453,6 +511,7 @@ impl Snapshot {
         }
         e.u64(self.updates);
         e.u64(self.retrains);
+        e.u64(self.forgets);
         e.u64(self.repair_iterations);
         e.u64(self.gram_checksum);
         let check = fnv1a(&e.buf);
@@ -478,10 +537,10 @@ impl Snapshot {
         }
         let version =
             u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-        if version != FORMAT_VERSION {
+        if version == 0 || version > FORMAT_VERSION {
             return Err(Error::snapshot(format!(
                 "unsupported snapshot format version {version} \
-                 (this build reads version {FORMAT_VERSION})"
+                 (this build reads versions 1..={FORMAT_VERSION})"
             )));
         }
         let body_end = bytes.len() - 8;
@@ -500,7 +559,7 @@ impl Snapshot {
         let weight = d.u32()?;
         let last_version = d.u64()?;
         let cfg_start = d.pos;
-        let cfg = decode_config(&mut d)?;
+        let cfg = decode_config(&mut d, version)?;
         if fnv1a(&bytes[cfg_start..d.pos]) != fingerprint {
             return Err(Error::snapshot(
                 "config fingerprint does not match the config section",
@@ -525,6 +584,32 @@ impl Snapshot {
                 "ring cursor admitted={admitted} below resident count {len}"
             )));
         }
+        let ids = if version >= 2 {
+            // bound the allocation by the actual bytes present (the
+            // same discipline f64s() applies)
+            d.need(len.checked_mul(8).ok_or_else(|| {
+                Error::snapshot("id block size overflows".to_string())
+            })?)?;
+            let mut ids = Vec::with_capacity(len);
+            for _ in 0..len {
+                ids.push(d.u64()?);
+            }
+            ids
+        } else {
+            synthesize_v1_ids(len, admitted, cfg.window)?
+        };
+        if ids.iter().any(|&id| id >= admitted) {
+            return Err(Error::snapshot(format!(
+                "sample id at or past the admit counter {admitted}"
+            )));
+        }
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        if sorted.windows(2).any(|w| w[0] == w[1]) {
+            return Err(Error::snapshot(
+                "duplicate sample ids in snapshot state",
+            ));
+        }
         let points = d.f64s(len.checked_mul(cfg.dim).ok_or_else(|| {
             Error::snapshot("sample block size overflows".to_string())
         })?)?;
@@ -541,6 +626,7 @@ impl Snapshot {
         };
         let updates = d.u64()?;
         let retrains = d.u64()?;
+        let forgets = if version >= 2 { d.u64()? } else { 0 };
         let repair_iterations = d.u64()?;
         let gram_checksum = d.u64()?;
         if d.pos != body_end {
@@ -550,12 +636,14 @@ impl Snapshot {
             )));
         }
         Ok(Snapshot {
+            format_version: version,
             name,
             weight,
             last_version,
             cfg,
             len,
             admitted,
+            ids,
             points,
             alpha,
             alpha_bar,
@@ -566,6 +654,7 @@ impl Snapshot {
             baseline,
             updates,
             retrains,
+            forgets,
             repair_iterations,
             gram_checksum,
         })
@@ -596,23 +685,27 @@ impl Snapshot {
     /// comes from the file alone.
     pub fn describe(&self) -> String {
         format!(
-            "stream '{}' format v{FORMAT_VERSION} fingerprint {:#018x}\n\
-             kernel={} dim={} window={} resident={} admitted={}\n\
-             nu1={} nu2={} eps={} updates={} retrains={} \
+            "stream '{}' format v{} fingerprint {:#018x}\n\
+             kernel={} dim={} window={} resident={} admitted={} \
+             policy={}\n\
+             nu1={} nu2={} eps={} updates={} retrains={} forgets={} \
              last_version={}\n\
              rho=[{:.6}, {:.6}] baseline={:?} repair_iterations={}",
             self.name,
+            self.format_version,
             Snapshot::config_fingerprint(&self.cfg),
             self.cfg.kernel.family(),
             self.cfg.dim,
             self.cfg.window,
             self.len,
             self.admitted,
+            self.cfg.incremental.policy,
             self.cfg.incremental.smo.nu1,
             self.cfg.incremental.smo.nu2,
             self.cfg.incremental.smo.eps,
             self.updates,
             self.retrains,
+            self.forgets,
             self.last_version,
             self.rho1,
             self.rho2,
@@ -681,6 +774,7 @@ impl Snapshot {
             self.cfg.window,
             self.cfg.dim,
             self.points,
+            self.ids,
             self.admitted,
         );
         let rebuilt = gram_checksum(&window);
@@ -740,6 +834,7 @@ impl Snapshot {
             self.baseline,
             self.updates,
             self.retrains,
+            self.forgets,
         );
         Ok((session, info))
     }
@@ -846,6 +941,8 @@ mod tests {
         assert_eq!(back.last_version, 25);
         assert_eq!(back.len, 32);
         assert_eq!(back.admitted, 40);
+        assert_eq!(back.ids, snap.ids);
+        assert_eq!(back.forgets, 0);
         assert_eq!(back.points, snap.points);
         assert_eq!(back.alpha, snap.alpha);
         assert_eq!(back.alpha_bar, snap.alpha_bar);
@@ -872,6 +969,9 @@ mod tests {
         let mut n = base;
         n.incremental.smo.nu1 += 1e-12;
         assert_ne!(f0, Snapshot::config_fingerprint(&n));
+        let mut p = base;
+        p.incremental.policy = PolicyKind::InteriorFirst;
+        assert_ne!(f0, Snapshot::config_fingerprint(&p));
         assert_eq!(f0, Snapshot::config_fingerprint(&base));
     }
 
@@ -916,7 +1016,25 @@ mod tests {
         let snap = Snapshot::capture(&session, 1, None);
         let text = snap.describe();
         assert!(text.contains("stream 't'"), "{text}");
-        assert!(text.contains("format v1"), "{text}");
+        assert!(text.contains("format v2"), "{text}");
         assert!(text.contains("window=32"), "{text}");
+        assert!(text.contains("policy=fifo"), "{text}");
+    }
+
+    #[test]
+    fn forgotten_sessions_snapshot_and_restore_their_state() {
+        let mut s = warm_session(40, 403);
+        let id = s.solver().window().id(3);
+        s.forget(id).unwrap();
+        let snap = Snapshot::capture(&s, 1, None);
+        assert_eq!(snap.forgets, 1);
+        assert_eq!(snap.len, 31);
+        assert!(!snap.ids.contains(&id));
+        let (back, info) =
+            Snapshot::decode(&snap.encode()).unwrap().into_session().unwrap();
+        assert!(!info.repaired, "post-repair forget state must certify");
+        assert_eq!(back.forgets(), 1);
+        assert_eq!(back.solver().window().ids(), s.solver().window().ids());
+        assert_eq!(back.solver().alpha(), s.solver().alpha());
     }
 }

@@ -1,0 +1,209 @@
+//! Pluggable window-eviction policies.
+//!
+//! Once a [`super::window::SlidingWindow`] is full, every further
+//! absorb must evict one resident sample. Which one is a policy
+//! decision, made over the *dual* state — the same decomposition
+//! argument that makes the per-sample SMO update cheap says the dual
+//! weight γ = α − ᾱ is exactly how much a resident point carries the
+//! slab: interior points (γ ≈ 0) can leave without moving the model,
+//! support vectors cannot.
+//!
+//! * [`Fifo`] — evict the oldest resident sample (smallest per-sample
+//!   id). Bitwise-identical to the pre-policy eviction path: with no
+//!   targeted removals the oldest id always sits in the slot the old
+//!   ring cursor (`admitted % capacity`) pointed at.
+//! * [`InteriorFirst`] — evict the resident point with the smallest
+//!   margin-slack score |α − ᾱ|, i.e. interior non-support points
+//!   before support vectors; ties break toward the oldest id (so a
+//!   window of all-interior points degrades to FIFO, deterministically).
+//!   Keeping the support set resident is what lets a smaller window
+//!   hold the accuracy of a larger FIFO one (experiment WP1,
+//!   `rust/benches/streaming.rs`).
+//!
+//! The trait is object-safe and stateless; configs carry the
+//! serializable [`PolicyKind`] tag (snapshot format v2, CLI `--evict`)
+//! and resolve it to a `&'static dyn EvictionPolicy` at use sites.
+
+use crate::error::Error;
+
+/// Selects the eviction victim among the resident samples.
+///
+/// `ids[i]` is slot `i`'s stable per-sample id (admit sequence number —
+/// older samples have smaller ids); `alpha`/`alpha_bar` are the slot's
+/// dual multipliers. All three slices share the slot indexing and are
+/// non-empty when this is called. Returns the victim slot index.
+pub trait EvictionPolicy: Send + Sync {
+    /// The serializable tag of this policy.
+    fn kind(&self) -> PolicyKind;
+
+    /// Pick the slot to evict. Must be a valid index into `ids`.
+    fn victim(&self, ids: &[u64], alpha: &[f64], alpha_bar: &[f64]) -> usize;
+}
+
+/// Evict the oldest resident sample (smallest id) — the classic
+/// sliding window, bitwise-identical to the pre-policy ring cursor.
+pub struct Fifo;
+
+impl Fifo {
+    /// Slot of the smallest id — THE min-id scan. Shared by the trait
+    /// impl and by callers with no dual state in hand
+    /// (`SlidingWindow::fifo_slot`), so the "bitwise-identical to the
+    /// old ring cursor" contract has exactly one implementation.
+    pub fn oldest(ids: &[u64]) -> usize {
+        let mut best = 0;
+        for (i, &id) in ids.iter().enumerate() {
+            if id < ids[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+impl EvictionPolicy for Fifo {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Fifo
+    }
+
+    fn victim(&self, ids: &[u64], _alpha: &[f64], _alpha_bar: &[f64]) -> usize {
+        Fifo::oldest(ids)
+    }
+}
+
+/// Evict the resident point with the smallest |α − ᾱ| (interior
+/// non-support points before support vectors); ties go to the oldest.
+pub struct InteriorFirst;
+
+impl EvictionPolicy for InteriorFirst {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::InteriorFirst
+    }
+
+    fn victim(&self, ids: &[u64], alpha: &[f64], alpha_bar: &[f64]) -> usize {
+        let mut best = 0;
+        let mut best_score = f64::INFINITY;
+        let mut best_id = u64::MAX;
+        for i in 0..ids.len() {
+            let score = (alpha[i] - alpha_bar[i]).abs();
+            if score < best_score || (score == best_score && ids[i] < best_id)
+            {
+                best = i;
+                best_score = score;
+                best_id = ids[i];
+            }
+        }
+        best
+    }
+}
+
+/// Serializable policy tag: what configs, snapshots (format v2) and the
+/// CLI (`--evict`) carry; resolves to the trait object via
+/// [`PolicyKind::policy`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// evict the oldest resident sample
+    #[default]
+    Fifo,
+    /// evict the smallest-|α − ᾱ| resident (interior points first)
+    InteriorFirst,
+}
+
+static FIFO: Fifo = Fifo;
+static INTERIOR_FIRST: InteriorFirst = InteriorFirst;
+
+impl PolicyKind {
+    /// Every kind, for sweeps and benches.
+    pub const ALL: [PolicyKind; 2] = [PolicyKind::Fifo, PolicyKind::InteriorFirst];
+
+    /// The policy implementation behind this tag.
+    pub fn policy(self) -> &'static dyn EvictionPolicy {
+        match self {
+            PolicyKind::Fifo => &FIFO,
+            PolicyKind::InteriorFirst => &INTERIOR_FIRST,
+        }
+    }
+
+    /// Stable one-byte tag for the snapshot format (v2).
+    pub fn tag(self) -> u8 {
+        match self {
+            PolicyKind::Fifo => 0,
+            PolicyKind::InteriorFirst => 1,
+        }
+    }
+
+    /// Inverse of [`PolicyKind::tag`]; unknown tags are a typed error
+    /// (a snapshot written by a future build, never a panic).
+    pub fn from_tag(tag: u8) -> crate::Result<PolicyKind> {
+        match tag {
+            0 => Ok(PolicyKind::Fifo),
+            1 => Ok(PolicyKind::InteriorFirst),
+            other => Err(Error::snapshot(format!(
+                "unknown eviction policy tag {other}"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::InteriorFirst => "interior-first",
+        })
+    }
+}
+
+impl std::str::FromStr for PolicyKind {
+    type Err = Error;
+
+    fn from_str(s: &str) -> crate::Result<PolicyKind> {
+        match s {
+            "fifo" => Ok(PolicyKind::Fifo),
+            "interior-first" => Ok(PolicyKind::InteriorFirst),
+            other => Err(Error::config(format!(
+                "unknown eviction policy {other:?} (expected fifo|interior-first)"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_picks_smallest_id_regardless_of_mass() {
+        let ids = [7u64, 3, 11, 5];
+        let a = [0.0, 0.9, 0.1, 0.2];
+        let b = [0.0, 0.0, 0.0, 0.0];
+        assert_eq!(Fifo.victim(&ids, &a, &b), 1);
+    }
+
+    #[test]
+    fn interior_first_picks_smallest_margin_slack() {
+        let ids = [0u64, 1, 2, 3];
+        let a = [0.30, 0.25, 0.25, 0.20];
+        let b = [0.00, 0.25, 0.10, 0.05];
+        // |gamma| = [0.30, 0.00, 0.15, 0.15] -> slot 1 is interior
+        assert_eq!(InteriorFirst.victim(&ids, &a, &b), 1);
+    }
+
+    #[test]
+    fn interior_first_breaks_ties_toward_oldest() {
+        let ids = [9u64, 2, 5];
+        let a = [0.5, 0.25, 0.25];
+        let b = [0.0, 0.25, 0.25]; // slots 1 and 2 tie at |gamma| = 0
+        assert_eq!(InteriorFirst.victim(&ids, &a, &b), 1);
+    }
+
+    #[test]
+    fn kind_round_trips_through_tag_and_str() {
+        for kind in PolicyKind::ALL {
+            assert_eq!(PolicyKind::from_tag(kind.tag()).unwrap(), kind);
+            assert_eq!(kind.to_string().parse::<PolicyKind>().unwrap(), kind);
+            assert_eq!(kind.policy().kind(), kind);
+        }
+        assert!(PolicyKind::from_tag(9).is_err());
+        assert!("lru".parse::<PolicyKind>().is_err());
+    }
+}

@@ -60,11 +60,33 @@ pub struct Absorbed {
     /// the per-sample hot path; call `session.solver().report()` when
     /// the dual + certificate are wanted.
     pub model: Option<SlabModel>,
+    /// the absorbed sample's stable id — its 0-based arrival index on
+    /// this stream, and the handle [`StreamSession::forget`] takes
+    pub sample_id: u64,
     /// drift verdict for this sample (scored before absorption)
     pub drift: Option<DriftEvent>,
     /// the session wants a background retrain (drift tripped and none is
     /// already in flight) — the owner snapshots + submits
     pub retrain_wanted: bool,
+}
+
+/// Outcome of a targeted [`StreamSession::forget`].
+pub struct Forgotten {
+    /// refreshed model over the shrunk window (None when the removal
+    /// dropped the session back below its warmup bar) — the owner
+    /// hot-swaps it so the served model no longer reflects the
+    /// forgotten sample
+    pub model: Option<SlabModel>,
+    /// resident samples remaining after the removal
+    pub resident: usize,
+    /// a background retrain was in flight at removal time — it was
+    /// trained on a window that still contained the forgotten sample,
+    /// so its completion would re-publish a model derived from deleted
+    /// data. The owner must cancel it (`TrainQueue::cancel` — a
+    /// cancelled job's model never reaches the registry) and submit a
+    /// fresh retrain of the post-removal window, as
+    /// `Coordinator::forget` does, or accept the stale publish.
+    pub retrain_stale: bool,
 }
 
 /// One live stream's state.
@@ -77,6 +99,7 @@ pub struct StreamSession {
     baselined: bool,
     updates: u64,
     retrains: u64,
+    forgets: u64,
 }
 
 impl StreamSession {
@@ -99,6 +122,7 @@ impl StreamSession {
             baselined: false,
             updates: 0,
             retrains: 0,
+            forgets: 0,
         }
     }
 
@@ -128,6 +152,11 @@ impl StreamSession {
     /// Completed background retrains.
     pub fn retrains(&self) -> u64 {
         self.retrains
+    }
+
+    /// Samples removed by targeted unlearning.
+    pub fn forgets(&self) -> u64 {
+        self.forgets
     }
 
     /// Warm = enough samples to publish and watch for drift.
@@ -190,6 +219,7 @@ impl StreamSession {
     /// not persisted — it restarts empty (back in its warmup guard),
     /// while the baseline slab offsets are re-armed, so a restored
     /// stream re-accumulates drift evidence before it can trip.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn from_parts(
         name: String,
         mut cfg: StreamConfig,
@@ -198,6 +228,7 @@ impl StreamSession {
         baseline: Option<(f64, f64)>,
         updates: u64,
         retrains: u64,
+        forgets: u64,
     ) -> StreamSession {
         cfg.min_train = cfg.min_train.min(cfg.window);
         let mut drift = DriftMonitor::new(cfg.drift);
@@ -213,6 +244,7 @@ impl StreamSession {
             baselined,
             updates,
             retrains,
+            forgets,
         }
     }
 
@@ -237,14 +269,34 @@ impl StreamSession {
             self.drift.observe(self.inc.score(x), r1, r2);
             drift_event = self.drift.check(r1, r2);
         }
-        self.inc.push(x)?;
+        let sample_id = self.inc.push(x)?;
         self.updates += 1;
         let model = if self.is_warm() { Some(self.inc.model()) } else { None };
         Ok(Absorbed {
             model,
+            sample_id,
             retrain_wanted: drift_event.is_some()
                 && self.pending_retrain.is_none(),
             drift: drift_event,
+        })
+    }
+
+    /// Targeted unlearning: remove the resident sample with stable id
+    /// `id` (the 0-based arrival index this stream assigned it — see
+    /// [`Absorbed::sample_id`]), withdraw its dual mass and repair.
+    /// Returns the refreshed model for the owner to hot-swap (None when
+    /// the shrunk window fell back below the warmup bar — the owner
+    /// keeps serving the last published model and the next absorb
+    /// re-publishes). Non-resident ids are a typed
+    /// [`crate::Error::Unlearning`]; the session is untouched.
+    pub fn forget(&mut self, id: u64) -> crate::Result<Forgotten> {
+        self.inc.forget(id)?;
+        self.forgets += 1;
+        let model = if self.is_warm() { Some(self.inc.model()) } else { None };
+        Ok(Forgotten {
+            model,
+            resident: self.inc.len(),
+            retrain_stale: self.pending_retrain.is_some(),
         })
     }
 }
@@ -386,5 +438,60 @@ mod tests {
         let s = StreamSession::new("t", quick_config());
         let t = s.retrain_trainer();
         assert_eq!(t.kind(), crate::solver::SolverKind::Smo);
+    }
+
+    #[test]
+    fn absorb_reports_arrival_index_as_sample_id() {
+        let mut s = StreamSession::new("t", quick_config());
+        let ds = SlabConfig::default().generate(10, 57);
+        for i in 0..10 {
+            let a = s.absorb(ds.x.row(i)).unwrap();
+            assert_eq!(a.sample_id, i as u64);
+        }
+    }
+
+    #[test]
+    fn forget_shrinks_window_and_republishes_when_warm() {
+        let mut s = StreamSession::new("t", quick_config());
+        feed(&mut s, &SlabConfig::default(), 70, 58); // window 64, warm
+        let id = s.solver().window().id(5);
+        let f = s.forget(id).unwrap();
+        assert_eq!(f.resident, 63);
+        assert!(f.model.is_some(), "warm session must republish");
+        assert_eq!(s.forgets(), 1);
+        assert_eq!(s.updates(), 70, "forget is not an update");
+        assert_eq!(s.solver().window().slot_of_id(id), None);
+        // non-resident id: typed error, counters untouched
+        assert!(matches!(
+            s.forget(id).unwrap_err(),
+            crate::Error::Unlearning(_)
+        ));
+        assert_eq!(s.forgets(), 1);
+    }
+
+    #[test]
+    fn forget_flags_an_in_flight_retrain_as_stale() {
+        let mut s = StreamSession::new("t", quick_config());
+        feed(&mut s, &SlabConfig::default(), 70, 60);
+        let id = s.solver().window().id(3);
+        let clean = s.forget(id).unwrap();
+        assert!(!clean.retrain_stale, "no retrain in flight");
+        // a pending retrain was trained WITH the next victim: flag it
+        s.retrain_submitted(JobId(9));
+        let id = s.solver().window().id(7);
+        let stale = s.forget(id).unwrap();
+        assert!(stale.retrain_stale, "in-flight retrain must be flagged");
+        assert_eq!(s.pending_retrain(), Some(JobId(9)), "owner supersedes");
+    }
+
+    #[test]
+    fn forget_below_warmup_bar_withholds_the_model() {
+        let cfg = StreamConfig { window: 64, min_train: 6, ..quick_config() };
+        let mut s = StreamSession::new("t", cfg);
+        feed(&mut s, &SlabConfig::default(), 6, 59); // exactly at the bar
+        let id = s.solver().window().id(0);
+        let f = s.forget(id).unwrap();
+        assert_eq!(f.resident, 5);
+        assert!(f.model.is_none(), "below min_train there is no publish");
     }
 }

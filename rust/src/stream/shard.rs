@@ -43,7 +43,7 @@ use crate::coordinator::{
 use crate::error::Error;
 use crate::Result;
 
-use super::manager::StreamSummary;
+use super::manager::{ForgetOutcome, StreamSummary};
 use super::persist::{snapshot_path, CheckpointConfig, Snapshot};
 use super::session::{StreamConfig, StreamSession};
 
@@ -68,6 +68,15 @@ pub(crate) enum Control {
     Close {
         name: String,
         ack: Sender<Result<StreamSummary>>,
+    },
+    /// Targeted unlearning: the owning shard removes the resident
+    /// sample, repairs and re-publishes, then acks — the same
+    /// owning-shard reconciliation discipline retrain completions use.
+    /// A bad id is a typed error in the ack, never a worker panic.
+    Forget {
+        name: String,
+        id: u64,
+        ack: Sender<Result<ForgetOutcome>>,
     },
     /// Front-door snapshot sweep: serialize every session this shard
     /// owns into `dir`, one result per stream (failure isolation — one
@@ -337,6 +346,29 @@ impl Shard {
         Ok(())
     }
 
+    /// Ask the worker to forget one resident sample of `name`. Blocks
+    /// until the owning shard has applied (or rejected) the removal.
+    pub(crate) fn forget(&self, name: &str, id: u64) -> Result<ForgetOutcome> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        {
+            let mut mail = self.mail.lock().unwrap();
+            if mail.draining {
+                return Err(Error::Coordinator(format!(
+                    "stream '{name}': manager is shutting down"
+                )));
+            }
+            mail.control.push_back(Control::Forget {
+                name: name.to_string(),
+                id,
+                ack: tx,
+            });
+        }
+        self.not_empty.notify_one();
+        rx.recv().map_err(|_| {
+            Error::Coordinator("stream manager worker exited".into())
+        })?
+    }
+
     /// Request close + drain: the worker absorbs everything still queued
     /// for the stream, then answers with its final [`StreamSummary`].
     pub(crate) fn close(&self, name: &str) -> Result<StreamSummary> {
@@ -453,8 +485,10 @@ pub(crate) fn reconcile_retrain(
             session.retrain_finished(Some(rho));
             Some(version)
         }
-        Some(JobStatus::Failed { .. }) | None => {
-            // drop the marker; the next drift trip resubmits
+        Some(JobStatus::Failed { .. }) | Some(JobStatus::Cancelled) | None => {
+            // drop the marker; the next drift trip resubmits (a
+            // Cancelled job was superseded — typically by a forget —
+            // and its successor carries its own marker)
             session.retrain_finished(None);
             None
         }
@@ -584,6 +618,79 @@ pub(crate) fn run_worker(
                 }
                 Control::Close { name, ack } => {
                     closing.insert(name, ack);
+                }
+                Control::Forget { name, id, ack } => {
+                    let res = match slots.get_mut(&name) {
+                        None => Err(Error::Coordinator(format!(
+                            "unknown stream '{name}'"
+                        ))),
+                        Some(slot) => match slot.session.forget(id) {
+                            Ok(f) => {
+                                // an in-flight background retrain was
+                                // trained on a window that still held
+                                // the forgotten sample: cancel it
+                                // BEFORE publishing the post-removal
+                                // model — a stale fit finishing in the
+                                // gap would otherwise land at a HIGHER
+                                // version than the clean model. With
+                                // this order, either the cancel wins
+                                // (the stale model never publishes) or
+                                // a just-finished Done is immediately
+                                // superseded by the insert below (or,
+                                // for a below-warmup session that skips
+                                // the insert, by the replacement
+                                // retrain).
+                                if f.retrain_stale {
+                                    if let Some(old) =
+                                        slot.session.pending_retrain()
+                                    {
+                                        jobs.cancel(old);
+                                    }
+                                }
+                                // hot-swap the post-removal model so the
+                                // served slab stops reflecting the
+                                // forgotten sample immediately
+                                let version = f.model.map(|model| {
+                                    let v = registry
+                                        .insert(slot.session.name(), model);
+                                    slot.last_version = Some(v);
+                                    v
+                                });
+                                // and retrain on the post-removal window
+                                // in the cancelled job's place
+                                if f.retrain_stale {
+                                    let rid = jobs.submit(TrainRequest {
+                                        name: slot
+                                            .session
+                                            .name()
+                                            .to_string(),
+                                        dataset: slot
+                                            .session
+                                            .window_dataset(),
+                                        trainer: slot
+                                            .session
+                                            .retrain_trainer(),
+                                    });
+                                    slot.session.retrain_submitted(rid);
+                                    stats.stream_retrains.inc();
+                                }
+                                slot.dirty = true;
+                                stats.stream_forgets.inc();
+                                Ok(ForgetOutcome {
+                                    name: name.clone(),
+                                    id,
+                                    version,
+                                    resident: f.resident,
+                                })
+                            }
+                            // typed rejection (non-resident id, last
+                            // sample): the stream keeps running — the
+                            // error travels to the caller, never a
+                            // worker panic
+                            Err(e) => Err(e),
+                        },
+                    };
+                    let _ = ack.send(res);
                 }
                 Control::Snapshot { dir, ack } => {
                     // Front-door sweep: write every owned session, one

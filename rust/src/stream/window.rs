@@ -1,24 +1,38 @@
 //! Bounded sample window with an incrementally maintained Gram matrix.
 //!
 //! The window is the streaming solver's working set: at most `capacity`
-//! samples, FIFO eviction once full. The Gram matrix over the resident
-//! samples is maintained *incrementally* — admitting a point while
-//! growing appends one kernel row/column (O(m·d) kernel evaluations);
-//! a steady-state admit overwrites the evicted point's slot in place
-//! (same cost), never rebuilding the O(m²) matrix. The window implements
+//! samples. The Gram matrix over the resident samples is maintained
+//! *incrementally* — admitting a point while growing appends one kernel
+//! row/column (O(m·d) kernel evaluations); a steady-state admit
+//! overwrites the evicted victim's slot in place (same cost); a
+//! targeted [`SlidingWindow::remove`] compacts by swap-remove — never
+//! rebuilding the O(m²) matrix. The window implements
 //! [`KernelProvider`], so the SMO repair sweeps of
 //! [`crate::stream::incremental`] stream rows straight out of it exactly
 //! like batch training streams them out of
 //! [`crate::cache::PrecomputedGram`].
 //!
-//! Slot order is ring order, not arrival order; everything downstream
-//! (dual state, margins, models) is row-permutation invariant.
+//! Every admitted sample gets a **stable per-sample id** — its admit
+//! sequence number — so callers can address residents by identity
+//! (targeted unlearning) and eviction policies can order them by age.
+//! Slot order is storage order, not arrival order; everything
+//! downstream (dual state, margins, models) is row-permutation
+//! invariant, and [`SlidingWindow::remove`]'s swap-remove index mapping
+//! (last slot moves into the hole) is the contract the solver's dual
+//! vectors mirror.
+//!
+//! The choice of *which* slot a steady-state admit overwrites belongs
+//! to the caller (an [`crate::stream::policy::EvictionPolicy`] over the
+//! dual state); [`SlidingWindow::fifo_slot`] — the oldest resident's
+//! slot — reproduces the classic ring behavior bitwise: with no
+//! targeted removals the smallest id always sits where the old
+//! `admitted % capacity` cursor pointed.
 
 use crate::cache::{CacheStats, KernelProvider};
 use crate::kernel::Kernel;
 use crate::linalg::Matrix;
 
-/// Bounded FIFO sample buffer + live Gram matrix.
+/// Bounded sample buffer + live Gram matrix + stable per-sample ids.
 pub struct SlidingWindow {
     kernel: Kernel,
     capacity: usize,
@@ -27,7 +41,9 @@ pub struct SlidingWindow {
     points: Vec<f64>,
     /// gram[i][j] = k(x_i, x_j) over resident samples
     gram: Vec<Vec<f64>>,
-    /// total samples ever admitted (ring cursor once full)
+    /// per-slot stable sample id (the admit sequence number)
+    ids: Vec<u64>,
+    /// total samples ever admitted (also the next sample id)
     admitted: u64,
 }
 
@@ -43,6 +59,7 @@ impl SlidingWindow {
             dim,
             points: Vec::new(),
             gram: Vec::new(),
+            ids: Vec::new(),
             admitted: 0,
         }
     }
@@ -72,16 +89,42 @@ impl SlidingWindow {
         self.len() == self.capacity
     }
 
-    /// Total samples ever admitted (≥ `len`).
+    /// Total samples ever admitted (≥ `len`); also the id the next
+    /// admitted sample will get.
     pub fn admitted(&self) -> u64 {
         self.admitted
     }
 
-    /// Slot the next admit will fill: append position while growing, the
-    /// oldest resident sample's slot (FIFO) once full.
+    /// Stable id of the sample in slot `i` (its admit sequence number).
+    pub fn id(&self, i: usize) -> u64 {
+        self.ids[i]
+    }
+
+    /// Per-slot ids (slot order — shares indexing with rows/points).
+    pub fn ids(&self) -> &[u64] {
+        &self.ids
+    }
+
+    /// Slot currently holding the sample with id `id`, if resident.
+    pub fn slot_of_id(&self, id: u64) -> Option<usize> {
+        self.ids.iter().position(|&v| v == id)
+    }
+
+    /// Slot of the oldest resident sample (smallest id) — the classic
+    /// FIFO victim, delegated to [`crate::stream::policy::Fifo::oldest`]
+    /// so the "bitwise-identical to the pre-policy ring cursor"
+    /// contract has exactly one implementation. With no targeted
+    /// removals this is exactly where the old `admitted % capacity`
+    /// cursor pointed.
+    pub fn fifo_slot(&self) -> usize {
+        super::policy::Fifo::oldest(&self.ids)
+    }
+
+    /// Slot the next FIFO admit will fill: append position while
+    /// growing, the oldest resident sample's slot once full.
     pub fn next_slot(&self) -> usize {
         if self.is_full() {
-            (self.admitted % self.capacity as u64) as usize
+            self.fifo_slot()
         } else {
             self.len()
         }
@@ -97,41 +140,89 @@ impl SlidingWindow {
         &self.gram[i]
     }
 
-    /// Admit `x`. Returns the slot it landed in; while the window is
-    /// still growing that is a fresh slot, afterwards it is the evicted
-    /// oldest sample's slot (the caller handles the evicted dual mass
-    /// *before* calling this — the old row is gone afterwards).
-    pub fn admit(&mut self, x: &[f64]) -> usize {
+    /// Append `x` into a fresh slot (window must not be full). Returns
+    /// the new slot; the sample's id is the admit sequence number.
+    pub fn append(&mut self, x: &[f64]) -> usize {
         assert_eq!(x.len(), self.dim, "sample dimension mismatch");
-        let slot = self.next_slot();
-        if self.is_full() {
-            self.points[slot * self.dim..(slot + 1) * self.dim]
-                .copy_from_slice(x);
-            let m = self.len();
-            let mut row = std::mem::take(&mut self.gram[slot]);
-            for j in 0..m {
-                row[j] = self.kernel.eval(x, self.point(j));
-            }
-            for j in 0..m {
-                if j != slot {
-                    self.gram[j][slot] = row[j];
-                }
-            }
-            self.gram[slot] = row;
-        } else {
-            self.points.extend_from_slice(x);
-            let m = self.len() + 1;
-            let mut row = Vec::with_capacity(self.capacity);
-            for j in 0..m {
-                row.push(self.kernel.eval(x, self.point(j)));
-            }
-            for j in 0..m - 1 {
-                self.gram[j].push(row[j]);
-            }
-            self.gram.push(row);
+        assert!(!self.is_full(), "append on a full window");
+        self.points.extend_from_slice(x);
+        let m = self.len() + 1;
+        let mut row = Vec::with_capacity(self.capacity);
+        for j in 0..m {
+            row.push(self.kernel.eval(x, self.point(j)));
         }
+        for j in 0..m - 1 {
+            self.gram[j].push(row[j]);
+        }
+        self.gram.push(row);
+        self.ids.push(self.admitted);
         self.admitted += 1;
-        slot
+        m - 1
+    }
+
+    /// Overwrite `slot` with `x` (the eviction path): the victim's
+    /// kernel row/column is recomputed in place and the slot gets a
+    /// fresh id. The caller withdraws the victim's dual mass *before*
+    /// calling this — the old row is gone afterwards.
+    pub fn replace(&mut self, slot: usize, x: &[f64]) {
+        assert_eq!(x.len(), self.dim, "sample dimension mismatch");
+        assert!(slot < self.len(), "replace of an empty slot");
+        self.points[slot * self.dim..(slot + 1) * self.dim]
+            .copy_from_slice(x);
+        let m = self.len();
+        let mut row = std::mem::take(&mut self.gram[slot]);
+        for j in 0..m {
+            row[j] = self.kernel.eval(x, self.point(j));
+        }
+        for j in 0..m {
+            if j != slot {
+                self.gram[j][slot] = row[j];
+            }
+        }
+        self.gram[slot] = row;
+        self.ids[slot] = self.admitted;
+        self.admitted += 1;
+    }
+
+    /// Admit `x` with FIFO eviction: append while growing, overwrite
+    /// the oldest resident's slot once full. Returns the slot. (The
+    /// incremental solver drives [`SlidingWindow::append`] /
+    /// [`SlidingWindow::replace`] directly so its eviction policy can
+    /// pick the victim; this convenience keeps the classic shape.)
+    pub fn admit(&mut self, x: &[f64]) -> usize {
+        if self.is_full() {
+            let slot = self.fifo_slot();
+            self.replace(slot, x);
+            slot
+        } else {
+            self.append(x)
+        }
+    }
+
+    /// Targeted removal (unlearning): drop `slot` and compact by
+    /// swap-remove — the **last** slot's sample/row/id move into
+    /// `slot`, every other slot keeps its index, and the window shrinks
+    /// by one. Callers maintaining parallel per-slot state must apply
+    /// the same `swap_remove(slot)` mapping. `admitted` is unchanged
+    /// (ids stay unique). O(m) — no Gram rebuild.
+    pub fn remove(&mut self, slot: usize) {
+        let m = self.len();
+        assert!(slot < m, "remove of an empty slot");
+        let last = m - 1;
+        if slot != last {
+            let (head, tail) = self.points.split_at_mut(last * self.dim);
+            head[slot * self.dim..(slot + 1) * self.dim]
+                .copy_from_slice(&tail[..self.dim]);
+        }
+        self.points.truncate(last * self.dim);
+        self.ids.swap_remove(slot);
+        // row `last` moves into row `slot`, then column `last` moves
+        // into column `slot` of every surviving row — one consistent
+        // index relabeling (old index `last` -> `slot`).
+        self.gram.swap_remove(slot);
+        for row in &mut self.gram {
+            row.swap_remove(slot);
+        }
     }
 
     /// Dense copy of the resident samples (slot order) — model assembly
@@ -145,14 +236,17 @@ impl SlidingWindow {
     /// serialized — with the same `kernel.eval` the live path uses, so
     /// the rebuild is bitwise identical to the matrix the snapshot was
     /// taken over (kernel evaluation is symmetric in its arguments at
-    /// the bit level). `admitted` restores the FIFO ring cursor so the
-    /// next admit overwrites the same slot it would have pre-restart.
-    /// The caller (`stream::persist`) validates shapes; this asserts.
+    /// the bit level). `ids` restore the per-slot sample identities
+    /// (hence the FIFO age order) and `admitted` the id counter, so the
+    /// next admit evicts the same victim and assigns the same id it
+    /// would have pre-restart. The caller (`stream::persist`) validates
+    /// shapes and id uniqueness; this asserts.
     pub(crate) fn restore(
         kernel: Kernel,
         capacity: usize,
         dim: usize,
         points: Vec<f64>,
+        ids: Vec<u64>,
         admitted: u64,
     ) -> SlidingWindow {
         assert!(capacity >= 2, "streaming window needs at least two slots");
@@ -160,12 +254,14 @@ impl SlidingWindow {
         assert_eq!(points.len() % dim, 0, "ragged sample block");
         let m = points.len() / dim;
         assert!(m <= capacity, "more resident samples than capacity");
+        assert_eq!(ids.len(), m, "one id per resident sample");
         let mut w = SlidingWindow {
             kernel,
             capacity,
             dim,
             points,
             gram: Vec::with_capacity(m),
+            ids,
             admitted,
         };
         for i in 0..m {
@@ -299,6 +395,66 @@ mod tests {
     }
 
     #[test]
+    fn ids_are_admit_sequence_numbers_and_survive_eviction() {
+        let mut w = SlidingWindow::new(Kernel::Linear, 3, 2);
+        let mut rng = Rng::new(21);
+        fill(&mut w, 3, &mut rng);
+        assert_eq!(w.ids(), &[0, 1, 2]);
+        fill(&mut w, 2, &mut rng); // FIFO overwrites slots 0 then 1
+        assert_eq!(w.ids(), &[3, 4, 2]);
+        assert_eq!(w.fifo_slot(), 2, "oldest id must be the FIFO victim");
+        assert_eq!(w.slot_of_id(4), Some(1));
+        assert_eq!(w.slot_of_id(0), None, "evicted id must not resolve");
+        assert_eq!(w.admitted(), 5);
+    }
+
+    #[test]
+    fn remove_compacts_by_swap_remove_and_keeps_gram_exact() {
+        for kernel in [Kernel::Linear, Kernel::Rbf { g: 0.4 }] {
+            let mut w = SlidingWindow::new(kernel, 6, 3);
+            let mut rng = Rng::new(33);
+            fill(&mut w, 8, &mut rng); // wrapped: ids 2..=7
+            let last_id = w.id(w.len() - 1);
+            let victim_id = w.id(2);
+            let moved_point: Vec<f64> = w.point(w.len() - 1).to_vec();
+            w.remove(2);
+            assert_eq!(w.len(), 5);
+            // last slot moved into the hole (swap-remove contract)
+            assert_eq!(w.id(2), last_id);
+            assert_eq!(w.point(2), &moved_point[..]);
+            assert_eq!(w.slot_of_id(victim_id), None);
+            assert_gram_exact(&w);
+            // a removal below capacity reopens growth: append next
+            assert!(!w.is_full());
+            assert_eq!(w.next_slot(), 5);
+            fill(&mut w, 1, &mut rng);
+            assert_eq!(w.id(5), 8);
+            assert_gram_exact(&w);
+            // removing the last slot is the degenerate swap
+            let keep: Vec<u64> = w.ids()[..w.len() - 1].to_vec();
+            w.remove(w.len() - 1);
+            assert_eq!(w.ids(), &keep[..]);
+            assert_gram_exact(&w);
+        }
+    }
+
+    #[test]
+    fn fifo_slot_matches_legacy_ring_cursor_without_removals() {
+        // the bitwise-identity contract of the Fifo policy: with no
+        // targeted removals, the oldest-id slot IS admitted % capacity
+        let mut w = SlidingWindow::new(Kernel::Linear, 5, 2);
+        let mut rng = Rng::new(55);
+        fill(&mut w, 5, &mut rng);
+        for _ in 0..17 {
+            assert_eq!(
+                w.fifo_slot() as u64,
+                w.admitted() % w.capacity() as u64
+            );
+            fill(&mut w, 1, &mut rng);
+        }
+    }
+
+    #[test]
     fn restore_rebuilds_gram_bitwise_and_keeps_ring_cursor() {
         for kernel in [Kernel::Linear, Kernel::Rbf { g: 0.3 }] {
             let mut live = SlidingWindow::new(kernel, 5, 3);
@@ -313,9 +469,11 @@ mod tests {
                 live.capacity(),
                 live.dim(),
                 points,
+                live.ids().to_vec(),
                 live.admitted(),
             );
             assert_eq!(back.len(), live.len());
+            assert_eq!(back.ids(), live.ids());
             assert_eq!(back.next_slot(), live.next_slot());
             for i in 0..live.len() {
                 for j in 0..live.len() {

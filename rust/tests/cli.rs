@@ -98,6 +98,8 @@ fn stream_subcommand_multi_tenant_mode() {
             "24",
             "--drift",
             "none",
+            "--evict",
+            "interior-first",
         ])
         .output()
         .unwrap();
@@ -167,8 +169,9 @@ fn snapshot_then_restore_resumes_the_fleet() {
         String::from_utf8_lossy(&out.stderr)
     );
     let text = String::from_utf8_lossy(&out.stdout);
-    assert!(text.contains("format v1"), "{text}");
+    assert!(text.contains("format v2"), "{text}");
     assert!(text.contains("window=48"), "{text}");
+    assert!(text.contains("policy=fifo"), "{text}");
 
     // a fresh coordinator resumes the fleet and keeps absorbing
     let out = bin()
@@ -207,6 +210,102 @@ fn snapshot_then_restore_resumes_the_fleet() {
     assert!(!out.status.success());
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("snapshot error"), "unexpected error: {err}");
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn forget_subcommand_edits_a_snapshot_in_place() {
+    let dir = std::env::temp_dir()
+        .join(format!("slabsvm_cli_forget_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // build a snapshot directory (FIFO: resident ids after 90 pushes
+    // through a 48-slot window are deterministically 42..=89)
+    let out = bin()
+        .args([
+            "snapshot", "--streams", "1", "--points", "90", "--window",
+            "48", "--min-train", "24", "--out",
+        ])
+        .arg(&dir)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "snapshot failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let snap = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .find(|e| {
+            e.path().extension().and_then(|x| x.to_str()) == Some("snap")
+        })
+        .expect("no snapshot written")
+        .path();
+
+    // the manager envelope (registry version watermark) before the edit
+    let out = bin()
+        .args(["snapshot", "--inspect"])
+        .arg(&snap)
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    let watermark = text
+        .split_whitespace()
+        .find(|t| t.starts_with("last_version="))
+        .expect("inspect must print last_version")
+        .to_string();
+    assert_ne!(watermark, "last_version=0", "warm fleet must have published");
+
+    // remove two resident samples by their 0-based arrival indices
+    let out = bin()
+        .args(["forget", "--snapshot"])
+        .arg(&snap)
+        .args(["--id", "50,60"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "forget failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("forgot sample 50"), "{text}");
+    assert!(text.contains("forgot sample 60"), "{text}");
+    assert!(text.contains("48 -> 46 resident"), "{text}");
+
+    // the rewritten (in-place) snapshot reflects the removals
+    let out = bin()
+        .args(["snapshot", "--inspect"])
+        .arg(&snap)
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("resident=46"), "{text}");
+    assert!(text.contains("forgets=2"), "{text}");
+    // the rewrite must not reset the registry version watermark (a
+    // later --restore-dir would otherwise regress published versions)
+    assert!(
+        text.contains(&watermark),
+        "forget dropped the version watermark {watermark}: {text}"
+    );
+
+    // forgetting an already-forgotten id fails cleanly, typed — and an
+    // FIFO-evicted one (id 0) the same way
+    for gone in ["50", "0"] {
+        let out = bin()
+            .args(["forget", "--snapshot"])
+            .arg(&snap)
+            .args(["--id", gone])
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "forget of id {gone} must fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("unlearning error"), "unexpected error: {err}");
+    }
 
     std::fs::remove_dir_all(dir).ok();
 }

@@ -1,15 +1,21 @@
 #!/usr/bin/env python3
-"""Generate rust/tests/fixtures/golden-v1.snap.
+"""Generate rust/tests/fixtures/golden-v1.snap and golden-v2.snap.
 
-Writes a format-v1 stream-session snapshot (see
-rust/src/stream/persist.rs) for a hand-constructed session whose dual
-point is analytically exact: with nu1 = nu2 = 1 the box constraints pin
-the UNIQUE feasible point alpha_i = 1/m, abar_i = eps/m, so the state
-is optimal by construction, every margin is a dyadic rational
-(bit-exact in binary), and restore must reproduce it bitwise with no
-repair sweep. rho1/rho2 are the solver's interval-fallback recovery
-values (all variables at their bounds): rho1 = max_i s_i,
-rho2 = min_i s_i.
+Writes stream-session snapshots (see rust/src/stream/persist.rs) for a
+hand-constructed session whose dual point is analytically exact: with
+nu1 = nu2 = 1 the box constraints pin the UNIQUE feasible point
+alpha_i = 1/m, abar_i = eps/m, so the state is optimal by construction,
+every margin is a dyadic rational (bit-exact in binary), and restore
+must reproduce it bitwise with no repair sweep. rho1/rho2 are the
+solver's interval-fallback recovery values (all variables at their
+bounds): rho1 = max_i s_i, rho2 = min_i s_i.
+
+golden-v1.snap is the frozen format-v1 file (byte-for-byte what the
+original generator wrote — it pins the v1 **decode** path: Fifo policy,
+ids synthesized from the ring cursor). golden-v2.snap pins the current
+format: the eviction-policy tag in the config section (interior-first,
+to exercise the non-default tag) and explicit per-sample ids + the
+forget counter in the state.
 
 The script re-decodes what it wrote and checks every field, so an
 encoder/decoder skew here fails at generation time, not in CI.
@@ -209,3 +215,87 @@ with open(out, "wb") as fh:
 print(f"wrote {out}: {len(blob)} bytes")
 print(f"  s = {S}  rho1 = {RHO1}  rho2 = {RHO2}")
 print(f"  gram checksum {GRAM_CHECKSUM:#018x}")
+
+# ===================================================== format v2 golden
+#
+# Same analytically-exact dual state, written in the current format:
+# config section gains the eviction-policy tag (interior-first = 1, the
+# non-default, so the byte is actually exercised), state gains explicit
+# per-sample ids and the forget counter. The story the counters tell:
+# 10 samples absorbed, 2 forgotten, 4 evicted, 4 resident with
+# non-contiguous ids — exactly what a forget-y stream leaves behind.
+FORMAT_VERSION_V2 = 2
+POLICY_INTERIOR_FIRST = 1
+IDS_V2 = [3, 5, 8, 9]          # slot order; unique, all < ADMITTED_V2
+ADMITTED_V2 = 10
+UPDATES_V2 = 10
+FORGETS_V2 = 2
+
+cfg_v2 = cfg + u8(POLICY_INTERIOR_FIRST)
+
+body_v2 = b"".join(
+    [
+        MAGIC,
+        u32(FORMAT_VERSION_V2),
+        u64(fnv1a(cfg_v2)),
+        s(NAME),
+        u32(WEIGHT),
+        u64(LAST_VERSION),
+        cfg_v2,
+        u64(M),
+        u64(ADMITTED_V2),
+        b"".join(u64(i) for i in IDS_V2),
+        f64s(v for p in POINTS for v in p),
+        f64s(ALPHA),
+        f64s(ALPHA_BAR),
+        f64s(S),
+        f64(RHO1),
+        f64(RHO2),
+        u8(BASELINED),
+        u8(1), f64(BASELINE[0]), f64(BASELINE[1]),
+        u64(UPDATES_V2),
+        u64(RETRAINS),
+        u64(FORGETS_V2),
+        u64(REPAIR_ITERATIONS),
+        u64(GRAM_CHECKSUM),
+    ]
+)
+blob_v2 = body_v2 + u64(fnv1a(body_v2))
+
+
+def verify_v2(buf):
+    assert buf[:8] == MAGIC
+    body, check = buf[:-8], struct.unpack("<Q", buf[-8:])[0]
+    assert fnv1a(body) == check, "payload checksum"
+    d = Dec(body)
+    assert d.take(8) == MAGIC
+    assert d.u32() == FORMAT_VERSION_V2
+    fingerprint = d.u64()
+    assert d.s() == NAME
+    assert d.u32() == WEIGHT
+    assert d.u64() == LAST_VERSION
+    cfg_start = d.pos
+    d.take(len(cfg_v2))
+    assert fnv1a(body[cfg_start:d.pos]) == fingerprint, "fingerprint"
+    assert body[d.pos - 1] == POLICY_INTERIOR_FIRST, "policy tag"
+    assert d.u64() == M and d.u64() == ADMITTED_V2
+    assert [d.u64() for _ in range(M)] == IDS_V2
+    assert d.f64s(M * DIM) == [v for p in POINTS for v in p]
+    assert d.f64s(M) == ALPHA and d.f64s(M) == ALPHA_BAR
+    assert d.f64s(M) == S
+    assert (d.f64(), d.f64()) == (RHO1, RHO2)
+    assert d.u8() == BASELINED and d.u8() == 1
+    assert (d.f64(), d.f64()) == BASELINE
+    assert (d.u64(), d.u64()) == (UPDATES_V2, RETRAINS)
+    assert (d.u64(), d.u64()) == (FORGETS_V2, REPAIR_ITERATIONS)
+    assert d.u64() == GRAM_CHECKSUM
+    assert d.pos == len(body), "trailing bytes"
+
+
+verify_v2(blob_v2)
+
+out_v2 = __file__.replace("make_golden.py", "golden-v2.snap")
+with open(out_v2, "wb") as fh:
+    fh.write(blob_v2)
+print(f"wrote {out_v2}: {len(blob_v2)} bytes")
+print(f"  policy=interior-first ids={IDS_V2} forgets={FORGETS_V2}")

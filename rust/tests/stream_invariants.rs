@@ -24,7 +24,7 @@ use slabsvm::data::synthetic::{
 use slabsvm::kernel::Kernel;
 use slabsvm::solver::smo::SmoParams;
 use slabsvm::solver::validate;
-use slabsvm::stream::{IncrementalConfig, IncrementalSmo};
+use slabsvm::stream::{IncrementalConfig, IncrementalSmo, PolicyKind};
 use slabsvm::util::rng::Rng;
 
 /// Certify every invariant of the current dual state, independently of
@@ -159,6 +159,90 @@ fn randomized_sequences_preserve_invariants_after_every_op() {
             assert_invariants(&inc, &format!("seq {seq} op {op}"));
         }
         assert!(inc.len() == cap.min(ops), "seq {seq}: bad window fill");
+    }
+}
+
+/// ~200 seeded random **removal** sequences (100 per eviction policy):
+/// absorbs (growth adds + policy evicts once full) interleaved with
+/// `forget(random resident id)` targeted removals, the invariants
+/// certified after EVERY operation — box, Σα = 1 / Σᾱ = ε, and the
+/// fresh-Gram KKT certificate. Also pins, per sequence, that a bogus
+/// forget is a typed error leaving the dual untouched to the bit.
+#[test]
+fn randomized_removal_sequences_preserve_invariants_after_every_op() {
+    for policy in PolicyKind::ALL {
+        for seq in 0..100u64 {
+            let mut rng = Rng::new(0xF0_1D_0000 + seq);
+            let cap = 8 + rng.below(25); // window capacity in [8, 32]
+            let kernel = if rng.below(2) == 0 {
+                Kernel::Linear
+            } else {
+                Kernel::Rbf { g: 0.02 + 0.2 * rng.uniform() }
+            };
+            let smo = SmoParams {
+                nu1: [0.3, 0.5, 0.8][rng.below(3)],
+                nu2: [0.05, 0.1, 0.2][rng.below(3)],
+                eps: [0.4, 2.0 / 3.0][rng.below(2)],
+                ..SmoParams::default()
+            };
+            let cfg = IncrementalConfig {
+                smo,
+                refresh_every: [4, 64, 1024][rng.below(3)],
+                policy,
+                ..IncrementalConfig::default()
+            };
+
+            let mut inc = IncrementalSmo::new(kernel, cap, 2, cfg);
+            let mut stream =
+                SlabStream::new(SlabConfig::default(), 0x5EED_F000 + seq);
+            if rng.below(2) == 0 {
+                stream = stream.with_drift(DriftSchedule {
+                    drift: Drift::MeanShift {
+                        delta: rng.uniform_range(-6.0, 6.0),
+                    },
+                    start: cap,
+                    duration: rng.below(cap) + 1,
+                });
+            }
+
+            let ops = cap + 1 + rng.below(2 * cap);
+            for op in 0..ops {
+                // ~30% forgets once enough residents exist; the rest
+                // absorbs — so sequences mix growth adds, policy evicts
+                // (the window refills to full after removals) and
+                // targeted removals at every window fill level
+                if inc.len() >= 3 && rng.below(10) < 3 {
+                    let ids = inc.window().ids().to_vec();
+                    let victim = ids[rng.below(ids.len())];
+                    inc.forget(victim).unwrap_or_else(|e| {
+                        panic!(
+                            "{policy:?} seq {seq} op {op}: forget({victim}) \
+                             failed: {e}"
+                        )
+                    });
+                } else {
+                    inc.push(&stream.next_point()).unwrap_or_else(|e| {
+                        panic!("{policy:?} seq {seq} op {op}: push failed: {e}")
+                    });
+                }
+                assert_invariants(&inc, &format!("{policy:?} seq {seq} op {op}"));
+            }
+            assert!(inc.len() >= 2 && inc.len() <= cap, "{policy:?} seq {seq}");
+
+            // a non-resident id is a typed rejection, bitwise untouched
+            let alpha: Vec<u64> =
+                inc.alpha().iter().map(|v| v.to_bits()).collect();
+            assert!(
+                matches!(
+                    inc.forget(u64::MAX),
+                    Err(slabsvm::Error::Unlearning(_))
+                ),
+                "{policy:?} seq {seq}: bogus forget must be typed"
+            );
+            let after: Vec<u64> =
+                inc.alpha().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(alpha, after, "{policy:?} seq {seq}");
+        }
     }
 }
 

@@ -1,0 +1,316 @@
+//! First-principles certification of targeted unlearning.
+//!
+//! The removal test suite the feature ships under:
+//!
+//! * **unlearning ≡ retrain** — `forget(x)` followed by the
+//!   warm-started repair must land on the same optimum a from-scratch
+//!   fit on the window minus x finds, to ≤ 1e-6 objective/ρ parity
+//!   (both solvers run at `tol = 1e-9`, so each sits within ~1e-7
+//!   margin units of the optimum and the comparison is meaningful);
+//! * **exact mass removal** — the forgotten sample's α/ᾱ leave the
+//!   dual entirely (Σα = 1, Σᾱ = ε still hold over the survivors, its
+//!   id no longer resolves);
+//! * a **fresh-Gram KKT certificate** on every post-forget state —
+//!   margins recomputed from scratch via `solver::validate`, none of
+//!   the incremental bookkeeping trusted;
+//! * **typed failure** — forgetting a non-resident id (or the last
+//!   resident sample) is `Error::Unlearning`, the state is untouched,
+//!   and a shard worker serving the stream survives it.
+
+use slabsvm::coordinator::{BatcherConfig, Coordinator};
+use slabsvm::data::synthetic::SlabConfig;
+use slabsvm::error::Error;
+use slabsvm::kernel::Kernel;
+use slabsvm::runtime::Engine;
+use slabsvm::solver::smo::SmoParams;
+use slabsvm::solver::{validate, SolverKind, Trainer};
+use slabsvm::stream::{
+    IncrementalConfig, IncrementalSmo, PolicyKind, StreamConfig, StreamSpec,
+};
+use slabsvm::util::rng::Rng;
+
+/// Fresh-Gram KKT certificate of the current dual (margins recomputed
+/// from a from-scratch Gram matrix — the incremental `s` is not
+/// consulted).
+fn certify_fresh(inc: &IncrementalSmo, ctx: &str) {
+    let p = inc.config().smo;
+    let m = inc.len();
+    let report = inc.report();
+    let k = inc.window().kernel().gram(&inc.window().matrix(), 1);
+    let cap_a = 1.0 / (p.nu1 * m as f64);
+    let cap_b = p.eps / (p.nu2 * m as f64);
+    let cert = validate::report(
+        &k,
+        &report.dual.alpha,
+        &report.dual.alpha_bar,
+        report.dual.rho1,
+        report.dual.rho2,
+        p.nu1,
+        p.nu2,
+        p.eps,
+        cap_a.min(cap_b) * 1e-6,
+    );
+    assert!(cert.max_box_violation <= 1e-9, "{ctx}: box {cert:?}");
+    assert!(
+        cert.sum_alpha_violation <= 1e-9 && cert.sum_alpha_bar_violation <= 1e-9,
+        "{ctx}: mass sums broken: {cert:?}"
+    );
+    let margin_scale =
+        1.0 + report.dual.s.iter().map(|v| v.abs()).sum::<f64>() / m as f64;
+    assert!(
+        cert.max_kkt_violation <= p.tol * margin_scale * 4.0,
+        "{ctx}: KKT violation {} (tol {})",
+        cert.max_kkt_violation,
+        p.tol * margin_scale * 4.0
+    );
+}
+
+/// `forget(x)` + repair vs a from-scratch fit on window ∖ {x}: ≤ 1e-6
+/// objective and ρ parity, for every seed, both eviction policies,
+/// linear and RBF kernels.
+#[test]
+fn forget_then_repair_matches_from_scratch_retrain() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(0xF0_6E7 + seed);
+        let cap = 16 + rng.below(25); // window in [16, 40]
+        let kernel = if seed % 2 == 0 {
+            Kernel::Linear
+        } else {
+            Kernel::Rbf { g: 0.02 + 0.1 * rng.uniform() }
+        };
+        let smo = SmoParams {
+            nu1: [0.3, 0.5, 0.8][rng.below(3)],
+            nu2: [0.05, 0.1][rng.below(2)],
+            eps: [0.4, 2.0 / 3.0][rng.below(2)],
+            // both paths solve essentially to the optimum, so the 1e-6
+            // parity bound measures the unlearning path, not solver slack
+            tol: 1e-9,
+            ..SmoParams::default()
+        };
+        let cfg = IncrementalConfig {
+            smo,
+            policy: if rng.below(2) == 0 {
+                PolicyKind::Fifo
+            } else {
+                PolicyKind::InteriorFirst
+            },
+            ..IncrementalConfig::default()
+        };
+        let mut inc = IncrementalSmo::new(kernel, cap, 2, cfg);
+        let ds = SlabConfig::default().generate(cap + rng.below(cap), seed);
+        for i in 0..ds.len() {
+            inc.push(ds.x.row(i)).unwrap();
+        }
+
+        // forget a random resident sample
+        let ids = inc.window().ids().to_vec();
+        let victim = ids[rng.below(ids.len())];
+        let m_before = inc.len();
+        inc.forget(victim).unwrap();
+
+        // exact removal: id gone, window shrunk, dual mass conserved
+        assert_eq!(inc.len(), m_before - 1, "seed {seed}");
+        assert_eq!(inc.window().slot_of_id(victim), None, "seed {seed}");
+        let sa: f64 = inc.alpha().iter().sum();
+        let sb: f64 = inc.alpha_bar().iter().sum();
+        assert!((sa - 1.0).abs() < 1e-9, "seed {seed}: sum(alpha)={sa}");
+        assert!(
+            (sb - smo.eps).abs() < 1e-9,
+            "seed {seed}: sum(alpha_bar)={sb}"
+        );
+        certify_fresh(&inc, &format!("seed {seed} post-forget"));
+
+        // the from-scratch reference on exactly the surviving window
+        let streamed = inc.report();
+        let batch = Trainer::from_smo_params(smo)
+            .solver(SolverKind::Smo)
+            .kernel(kernel)
+            .fit(&inc.window().matrix())
+            .unwrap();
+        let rel_obj = (streamed.stats.objective - batch.stats.objective).abs()
+            / batch.stats.objective.abs().max(1e-9);
+        assert!(
+            rel_obj <= 1e-6,
+            "seed {seed}: objective parity {rel_obj:.3e}: forget+repair \
+             {} vs retrain {}",
+            streamed.stats.objective,
+            batch.stats.objective
+        );
+        let rho_scale = 1.0 + batch.dual.rho1.abs().max(batch.dual.rho2.abs());
+        assert!(
+            (streamed.dual.rho1 - batch.dual.rho1).abs() / rho_scale <= 1e-6
+                && (streamed.dual.rho2 - batch.dual.rho2).abs() / rho_scale
+                    <= 1e-6,
+            "seed {seed}: rho parity: [{}, {}] vs [{}, {}]",
+            streamed.dual.rho1,
+            streamed.dual.rho2,
+            batch.dual.rho1,
+            batch.dual.rho2
+        );
+    }
+}
+
+/// Forgetting several samples in a row keeps matching the from-scratch
+/// fit — removals compose.
+#[test]
+fn repeated_forgets_compose() {
+    let smo = SmoParams { tol: 1e-9, ..SmoParams::default() };
+    let cfg = IncrementalConfig { smo, ..IncrementalConfig::default() };
+    let mut inc = IncrementalSmo::new(Kernel::Linear, 30, 2, cfg);
+    let ds = SlabConfig::default().generate(42, 77);
+    for i in 0..42 {
+        inc.push(ds.x.row(i)).unwrap();
+    }
+    let mut rng = Rng::new(0xC0117);
+    for round in 0..8 {
+        let ids = inc.window().ids().to_vec();
+        inc.forget(ids[rng.below(ids.len())]).unwrap();
+        certify_fresh(&inc, &format!("round {round}"));
+    }
+    assert_eq!(inc.len(), 22);
+    let streamed = inc.report();
+    let batch = Trainer::from_smo_params(smo)
+        .kernel(Kernel::Linear)
+        .fit(&inc.window().matrix())
+        .unwrap();
+    let rel = (streamed.stats.objective - batch.stats.objective).abs()
+        / batch.stats.objective.abs().max(1e-9);
+    assert!(rel <= 1e-6, "8 composed forgets diverged: {rel:.3e}");
+}
+
+/// Non-resident ids (never admitted / already evicted / already
+/// forgotten) and last-sample removals are typed errors that leave the
+/// dual untouched to the bit.
+#[test]
+fn bad_forgets_are_typed_and_leave_state_untouched() {
+    let mut inc =
+        IncrementalSmo::new(Kernel::Linear, 8, 2, IncrementalConfig::default());
+    let ds = SlabConfig::default().generate(12, 78);
+    for i in 0..12 {
+        inc.push(ds.x.row(i)).unwrap();
+    }
+    let alpha: Vec<u64> = inc.alpha().iter().map(|v| v.to_bits()).collect();
+    let s: Vec<u64> = inc.margins().iter().map(|v| v.to_bits()).collect();
+    for bad in [0u64, 3, 12, u64::MAX] {
+        // ids 0..=3 were FIFO-evicted, 12+ never admitted
+        let err = inc.forget(bad).unwrap_err();
+        assert!(
+            matches!(err, Error::Unlearning(_)),
+            "id {bad}: want Error::Unlearning, got {err:?}"
+        );
+    }
+    let alpha_after: Vec<u64> =
+        inc.alpha().iter().map(|v| v.to_bits()).collect();
+    let s_after: Vec<u64> = inc.margins().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(alpha, alpha_after, "rejected forgets must not touch α");
+    assert_eq!(s, s_after, "rejected forgets must not touch the margins");
+}
+
+/// The mailbox path: `Coordinator::forget` routes to the owning shard,
+/// re-publishes the shrunk model at a higher registry version, rejects
+/// bad ids with a typed error, and the shard worker keeps absorbing
+/// afterwards (the acceptance shape of "a malformed forget must not
+/// panic the worker").
+#[test]
+fn coordinator_forget_republishes_and_survives_bad_ids() {
+    let c = Coordinator::start(Engine::Native, BatcherConfig::default(), 1);
+    let cfg = StreamConfig { window: 32, min_train: 16, ..Default::default() };
+    c.open_streams(vec![
+        StreamSpec::new("a", cfg),
+        StreamSpec::new("b", cfg).eviction(PolicyKind::InteriorFirst),
+    ])
+    .unwrap();
+    let ds = SlabConfig::default().generate(40, 79);
+    for i in 0..40 {
+        c.push("a", ds.x.row(i)).unwrap();
+        c.push("b", ds.x.row(i)).unwrap();
+    }
+    c.quiesce_streams();
+    let v_before = c.registry().version("a").unwrap();
+
+    // FIFO stream "a" holds ids 8..=39
+    let out = c.forget("a", 15).unwrap();
+    assert_eq!((out.name.as_str(), out.id, out.resident), ("a", 15, 31));
+    let v_forget = out.version.expect("warm stream must re-publish");
+    assert!(v_forget > v_before, "forget must bump the registry version");
+    // the hot-swapped model no longer carries the forgotten point: the
+    // served model equals the session's post-removal solver state
+    // (checked through a snapshot sweep — the worker owns the session)
+    let snap_dir = std::env::temp_dir()
+        .join(format!("slabsvm_unlearn_{}", std::process::id()));
+    std::fs::create_dir_all(&snap_dir).unwrap();
+    let outcomes = c.snapshot_streams(&snap_dir).unwrap();
+    assert!(outcomes.iter().all(|o| o.result.is_ok()));
+    let snap = slabsvm::stream::persist::read_snapshot(
+        &slabsvm::stream::persist::snapshot_path(&snap_dir, "a"),
+    )
+    .unwrap();
+    std::fs::remove_dir_all(&snap_dir).ok();
+    assert_eq!(snap.forgets, 1);
+    assert_eq!(snap.len, 31);
+    assert!(!snap.ids.contains(&15), "forgotten id must leave the window");
+    let served = c.registry().get("a").unwrap();
+    assert_eq!(
+        served.rho1.to_bits(),
+        snap.rho1.to_bits(),
+        "served model must be the post-removal state"
+    );
+
+    // bad ids: typed error through the mailbox, worker stays alive
+    for bad in [0u64, 15, 999] {
+        let err = c.forget("a", bad).unwrap_err();
+        assert!(
+            matches!(err, Error::Unlearning(_)),
+            "id {bad}: want Error::Unlearning through the mailbox, got {err:?}"
+        );
+    }
+    assert!(c.forget("ghost", 1).is_err(), "unknown stream is an error");
+
+    // both streams keep absorbing after the (rejected) forgets
+    for i in 0..5 {
+        c.push("a", ds.x.row(i)).unwrap();
+        c.push("b", ds.x.row(i)).unwrap();
+    }
+    c.quiesce_streams();
+    assert_eq!(c.close_stream("a").unwrap().updates, 45);
+    assert_eq!(c.close_stream("b").unwrap().updates, 45);
+    assert_eq!(c.stats().stream_forgets.get(), 1);
+    c.shutdown();
+}
+
+/// Unlearning interacts with the policies: under InteriorFirst the
+/// support set stays resident, and forgetting a support vector forces
+/// the repair to rebuild the slab without it.
+#[test]
+fn forgetting_a_support_vector_moves_the_slab_honestly() {
+    let smo = SmoParams { tol: 1e-9, ..SmoParams::default() };
+    let cfg = IncrementalConfig {
+        smo,
+        policy: PolicyKind::InteriorFirst,
+        ..IncrementalConfig::default()
+    };
+    let mut inc = IncrementalSmo::new(Kernel::Linear, 24, 2, cfg);
+    let ds = SlabConfig::default().generate(36, 80);
+    for i in 0..36 {
+        inc.push(ds.x.row(i)).unwrap();
+    }
+    // the heaviest |γ| resident is certainly a support vector
+    let (sv_slot, _) = inc
+        .alpha()
+        .iter()
+        .zip(inc.alpha_bar())
+        .map(|(a, b)| (a - b).abs())
+        .enumerate()
+        .fold((0, f64::MIN), |acc, (i, g)| if g > acc.1 { (i, g) } else { acc });
+    let sv_id = inc.window().id(sv_slot);
+    inc.forget(sv_id).unwrap();
+    certify_fresh(&inc, "post-SV-forget");
+    // and the result still matches the from-scratch fit on the survivors
+    let batch = Trainer::from_smo_params(smo)
+        .kernel(Kernel::Linear)
+        .fit(&inc.window().matrix())
+        .unwrap();
+    let rel = (inc.report().stats.objective - batch.stats.objective).abs()
+        / batch.stats.objective.abs().max(1e-9);
+    assert!(rel <= 1e-6, "SV removal diverged from retrain: {rel:.3e}");
+}
