@@ -7,7 +7,9 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{self, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
+
+use crate::sync::{Condvar, Mutex};
 
 use super::registry::ModelRegistry;
 use super::stats::ServiceStats;
@@ -70,7 +72,7 @@ impl TrainQueue {
     pub fn start(registry: Arc<ModelRegistry>, stats: Arc<ServiceStats>) -> TrainQueue {
         let (tx, rx) = mpsc::channel::<Msg>();
         let state: Arc<(Mutex<HashMap<JobId, JobStatus>>, Condvar)> =
-            Arc::new((Mutex::new(HashMap::new()), Condvar::new()));
+            Arc::new((Mutex::new("jobs.state", HashMap::new()), Condvar::new()));
         let state2 = Arc::clone(&state);
         let worker = std::thread::Builder::new()
             .name("slabsvm-trainer".into())
@@ -85,7 +87,7 @@ impl TrainQueue {
                     // either lands before (job skipped) or after (the
                     // post-fit check below catches it).
                     let cancelled = {
-                        let mut map = state2.0.lock().unwrap();
+                        let mut map = state2.0.lock();
                         if matches!(map.get(&id), Some(JobStatus::Cancelled))
                         {
                             true
@@ -104,7 +106,7 @@ impl TrainQueue {
                     // deleted or replaced — it must never reach the
                     // registry.
                     let (lock, cvar) = &*state2;
-                    let mut map = lock.lock().unwrap();
+                    let mut map = lock.lock();
                     if matches!(map.get(&id), Some(JobStatus::Cancelled)) {
                         cvar.notify_all();
                         continue;
@@ -134,15 +136,15 @@ impl TrainQueue {
         TrainQueue {
             tx,
             state,
-            next_id: Mutex::new(1),
-            worker: Mutex::new(Some(worker)),
+            next_id: Mutex::new("jobs.next_id", 1),
+            worker: Mutex::new("jobs.worker", Some(worker)),
         }
     }
 
     /// Enqueue a job, returning its handle immediately.
     pub fn submit(&self, req: TrainRequest) -> JobId {
         let id = {
-            let mut n = self.next_id.lock().unwrap();
+            let mut n = self.next_id.lock();
             let id = JobId(*n);
             *n += 1;
             id
@@ -162,7 +164,7 @@ impl TrainQueue {
 
     /// Non-blocking status poll.
     pub fn status(&self, id: JobId) -> Option<JobStatus> {
-        self.state.0.lock().unwrap().get(&id).cloned()
+        self.state.0.lock().get(&id).cloned()
     }
 
     /// Cancel a queued or running job: its model will never reach the
@@ -174,7 +176,7 @@ impl TrainQueue {
     /// cancelling cannot unpublish).
     pub fn cancel(&self, id: JobId) -> bool {
         let (lock, cvar) = &*self.state;
-        let mut map = lock.lock().unwrap();
+        let mut map = lock.lock();
         match map.get(&id) {
             Some(JobStatus::Queued) | Some(JobStatus::Running) => {
                 map.insert(id, JobStatus::Cancelled);
@@ -188,7 +190,7 @@ impl TrainQueue {
     /// Block until the job reaches a terminal state.
     pub fn wait(&self, id: JobId) -> Option<JobStatus> {
         let (lock, cvar) = &*self.state;
-        let mut map = lock.lock().unwrap();
+        let mut map = lock.lock();
         loop {
             match map.get(&id) {
                 None => return None,
@@ -196,7 +198,7 @@ impl TrainQueue {
                 | Some(JobStatus::Failed { .. })
                 | Some(JobStatus::Cancelled) => return map.get(&id).cloned(),
                 _ => {
-                    map = cvar.wait(map).unwrap();
+                    map = cvar.wait(map);
                 }
             }
         }
@@ -205,7 +207,11 @@ impl TrainQueue {
     /// Stop after finishing everything already queued. Idempotent.
     pub fn shutdown(&self) {
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.worker.lock().unwrap().take() {
+        // take the handle under the lock, join with it released: the
+        // join waits out every queued fit, and a concurrent status/wait
+        // caller must not queue behind that on the handle lock
+        let handle = self.worker.lock().take();
+        if let Some(h) = handle {
             let _ = h.join();
         }
     }
@@ -217,7 +223,7 @@ fn set_status(
     status: JobStatus,
 ) {
     let (lock, cvar) = &**state;
-    lock.lock().unwrap().insert(id, status);
+    lock.lock().insert(id, status);
     cvar.notify_all();
 }
 

@@ -172,19 +172,28 @@ impl ServiceStats {
         }
     }
 
-    /// One-line human summary.
+    /// One-line human summary. Every serving-side [`ServiceStats`]
+    /// field is surfaced here or in
+    /// [`ServiceStats::stream_summary`] — lint rule [[R4]] checks the
+    /// two summaries stay complete as counters are added.
     pub fn summary(&self) -> String {
         format!(
             "requests={} scored={} batches={} (mean batch {:.1}) errors={} \
-             p50={}us p99={}us mean={:.0}us",
+             jobs_done={} jobs_failed={} \
+             p50={}us p99={}us mean={:.0}us \
+             batch p50={}us mean={:.0}us",
             self.requests.get(),
             self.scored.get(),
             self.batches.get(),
             self.mean_batch_size(),
             self.errors.get(),
+            self.jobs_done.get(),
+            self.jobs_failed.get(),
             self.request_latency.quantile_us(0.5),
             self.request_latency.quantile_us(0.99),
             self.request_latency.mean_us(),
+            self.batch_latency.quantile_us(0.5),
+            self.batch_latency.mean_us(),
         )
     }
 

@@ -122,6 +122,21 @@
 //! `solver::qp_pg::train`, …) still work but are `#[deprecated]` shims
 //! over this API; see CHANGES.md for the deprecation path.
 //!
+//! ## Invariant enforcement
+//!
+//! The concurrency and panic-freedom rules the serving stack relies on
+//! are enforced mechanically (DESIGN.md §7): `cargo run -p slablint`
+//! statically lints the source for rules R1–R5 (panic-capable sites in
+//! the data plane, guards held across absorbs/sends, hot-loop
+//! allocations, counter completeness, doc cross-references), and the
+//! **`lock-audit`** cargo feature swaps every lock in the shard/
+//! manager/job layer for a tracked variant ([`sync`]) that builds a
+//! global lock-order graph at runtime, panics on a would-be deadlock
+//! cycle, and asserts that no tracked lock is held across an absorb.
+//! The feature costs nothing when disabled (plain `std::sync`
+//! newtypes); unit tests always track, and CI runs the concurrency
+//! suite with `--features lock-audit`.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every table/figure of the paper to a bench target.
 
@@ -138,6 +153,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod solver;
 pub mod stream;
+pub mod sync;
 pub mod testing;
 pub mod util;
 

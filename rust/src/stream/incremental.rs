@@ -91,6 +91,13 @@ pub struct IncrementalSmo {
     stats: SolveStats,
     /// cumulative repair iterations across the stream
     repair_iterations: u64,
+    /// Reusable warm-start buffers for [`IncrementalSmo::repair`]: the
+    /// previous repair's state vectors ping-pong back as the next
+    /// repair's scratch, so the steady-state absorb path allocates
+    /// nothing (lint rule [[R3]]).
+    scratch_alpha: Vec<f64>,
+    scratch_abar: Vec<f64>,
+    scratch_s: Vec<f64>,
 }
 
 impl IncrementalSmo {
@@ -111,6 +118,9 @@ impl IncrementalSmo {
             rho2: 0.0,
             stats: SolveStats::default(),
             repair_iterations: 0,
+            scratch_alpha: Vec::new(),
+            scratch_abar: Vec::new(),
+            scratch_s: Vec::new(),
         }
     }
 
@@ -147,6 +157,9 @@ impl IncrementalSmo {
             rho2,
             stats: SolveStats::default(),
             repair_iterations,
+            scratch_alpha: Vec::new(),
+            scratch_abar: Vec::new(),
+            scratch_s: Vec::new(),
         }
     }
 
@@ -455,21 +468,19 @@ impl IncrementalSmo {
         // the newcomer — its box is empty)
         for in_alpha in [true, false] {
             let cap = if in_alpha { self.cap_a() } else { self.cap_b() };
-            let vals = if in_alpha { &self.alpha } else { &self.alpha_bar };
-            let over: Vec<(usize, f64)> = vals
-                .iter()
-                .enumerate()
-                .filter(|(_, &v)| v > cap)
-                .map(|(j, &v)| (j, v - cap))
-                .collect();
+            // clip by index so the sweep needs no overflow list — this
+            // runs on every pre-steady-state absorb (lint rule [[R3]])
             let mut pool = 0.0;
-            for (j, d) in over {
-                if in_alpha {
-                    self.bump_alpha(j, -d);
-                } else {
-                    self.bump_abar(j, -d);
+            for j in 0..self.len() {
+                let v = if in_alpha { self.alpha[j] } else { self.alpha_bar[j] };
+                if v > cap {
+                    if in_alpha {
+                        self.bump_alpha(j, -(v - cap));
+                    } else {
+                        self.bump_abar(j, -(v - cap));
+                    }
+                    pool += v - cap;
                 }
-                pool += d;
             }
             let rem = self.distribute(in_alpha, pool, usize::MAX);
             self.seed(in_alpha, i, rem);
@@ -512,15 +523,29 @@ impl IncrementalSmo {
             max_iter: self.cfg.repair_max_iter,
             ..self.cfg.smo
         };
+        // Warm-start from a copy staged in the reusable scratch buffers
+        // (clear + extend within retained capacity — the steady-state
+        // absorb path allocates nothing, lint rule [[R3]]); an error
+        // from the bounded solve leaves the pre-repair feasible state
+        // in `self` untouched.
+        self.scratch_alpha.clear();
+        self.scratch_alpha.extend_from_slice(&self.alpha);
+        self.scratch_abar.clear();
+        self.scratch_abar.extend_from_slice(&self.alpha_bar);
+        self.scratch_s.clear();
+        self.scratch_s.extend_from_slice(&self.s);
         let warm = WarmState {
-            alpha: self.alpha.clone(),
-            alpha_bar: self.alpha_bar.clone(),
-            s: self.s.clone(),
+            alpha: std::mem::take(&mut self.scratch_alpha),
+            alpha_bar: std::mem::take(&mut self.scratch_abar),
+            s: std::mem::take(&mut self.scratch_s),
         };
         let out = solve_from(&mut self.window, &p, Some(warm))?;
-        self.alpha = out.alpha;
-        self.alpha_bar = out.alpha_bar;
-        self.s = out.s;
+        // ping-pong: the superseded state vectors become the next
+        // repair's scratch, keeping both sets of buffers at capacity
+        self.scratch_alpha = std::mem::replace(&mut self.alpha, out.alpha);
+        self.scratch_abar =
+            std::mem::replace(&mut self.alpha_bar, out.alpha_bar);
+        self.scratch_s = std::mem::replace(&mut self.s, out.s);
         self.rho1 = out.rho1;
         self.rho2 = out.rho2;
         self.repair_iterations += out.stats.iterations as u64;

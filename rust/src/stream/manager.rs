@@ -43,7 +43,9 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::{HashMap, HashSet};
 use std::hash::{Hash, Hasher};
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::Arc;
+
+use crate::sync::{Mutex, RwLock};
 
 use crate::coordinator::{ModelRegistry, ServiceStats, TrainQueue};
 use crate::error::Error;
@@ -248,15 +250,27 @@ impl StreamManager {
         drop(sink);
         StreamManager {
             shards,
-            workers: Mutex::new(workers),
-            route: RwLock::new(HashMap::new()),
+            workers: Mutex::new("manager.workers", workers),
+            route: RwLock::new("manager.route", HashMap::new()),
             stats,
-            ckpt_writer: Mutex::new(ckpt_writer),
+            ckpt_writer: Mutex::new("manager.ckpt_writer", ckpt_writer),
         }
     }
 
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Routed shard lookup. Route entries only ever hold indices handed
+    /// out by [`StreamManager::shard_of`], so a miss means the route map
+    /// and the shard vector disagree — surfaced as a typed error
+    /// instead of an index panic on the serving path.
+    fn shard_at(&self, idx: usize) -> Result<&Arc<Shard>> {
+        self.shards.get(idx).ok_or_else(|| {
+            Error::Coordinator(
+                "stream route points at a missing shard".into(),
+            )
+        })
     }
 
     /// Deterministic name → shard placement (`DefaultHasher` uses fixed
@@ -270,7 +284,7 @@ impl StreamManager {
     /// Open a set of tenant streams, all-or-nothing: any name already
     /// open (or duplicated within the call) rejects the whole batch.
     pub fn open_streams(&self, specs: Vec<StreamSpec>) -> Result<()> {
-        let mut route = self.route.write().unwrap();
+        let mut route = self.route.write();
         let mut seen = HashSet::new();
         for spec in &specs {
             if route.contains_key(&spec.name) || !seen.insert(spec.name.as_str())
@@ -284,17 +298,23 @@ impl StreamManager {
         let mut opened: Vec<String> = Vec::with_capacity(specs.len());
         for spec in specs {
             let idx = self.shard_of(&spec.name);
-            if !self.shards[idx].open(&spec.name, spec.cfg, spec.weight) {
+            let accepted = self
+                .shard_at(idx)
+                .map(|shard| shard.open(&spec.name, spec.cfg, spec.weight));
+            if !matches!(accepted, Ok(true)) {
                 // all-or-nothing also under a shutdown race: un-route
                 // whatever part of the batch already opened (the draining
                 // shards drop the half-opened sessions on their way out)
                 for name in opened {
                     route.remove(&name);
                 }
-                return Err(Error::Coordinator(format!(
-                    "stream '{}': manager is shutting down",
-                    spec.name
-                )));
+                return Err(match accepted {
+                    Err(e) => e,
+                    _ => Error::Coordinator(format!(
+                        "stream '{}': manager is shutting down",
+                        spec.name
+                    )),
+                });
             }
             route.insert(spec.name.clone(), idx);
             opened.push(spec.name);
@@ -306,12 +326,12 @@ impl StreamManager {
     /// this stream's queue is at capacity (backpressure; never drops).
     pub fn push(&self, name: &str, x: &[f64]) -> Result<()> {
         let idx = {
-            let route = self.route.read().unwrap();
+            let route = self.route.read();
             *route.get(name).ok_or_else(|| {
                 Error::Coordinator(format!("unknown stream '{name}'"))
             })?
         };
-        self.shards[idx].push(name, x, &self.stats)?;
+        self.shard_at(idx)?.push(name, x, &self.stats)?;
         self.stats.stream_pushes.inc();
         Ok(())
     }
@@ -334,12 +354,12 @@ impl StreamManager {
     /// [`crate::Error::Unlearning`]; the stream keeps running.
     pub fn forget(&self, name: &str, id: u64) -> Result<ForgetOutcome> {
         let idx = {
-            let route = self.route.read().unwrap();
+            let route = self.route.read();
             *route.get(name).ok_or_else(|| {
                 Error::Coordinator(format!("unknown stream '{name}'"))
             })?
         };
-        self.shards[idx].forget(name, id)
+        self.shard_at(idx)?.forget(name, id)
     }
 
     /// Close a stream: everything already queued for it is absorbed
@@ -348,12 +368,12 @@ impl StreamManager {
     /// returns.
     pub fn close_stream(&self, name: &str) -> Result<StreamSummary> {
         let idx = {
-            let mut route = self.route.write().unwrap();
+            let mut route = self.route.write();
             route.remove(name).ok_or_else(|| {
                 Error::Coordinator(format!("unknown stream '{name}'"))
             })?
         };
-        self.shards[idx].close(name)
+        self.shard_at(idx)?.close(name)
     }
 
     /// Block until every queued sample on every shard has been absorbed
@@ -377,7 +397,7 @@ impl StreamManager {
         // group open streams by owning shard so a dead shard's streams
         // get per-stream error outcomes instead of a lost ack
         let by_shard: Vec<(usize, Vec<String>)> = {
-            let route = self.route.read().unwrap();
+            let route = self.route.read();
             let mut groups: HashMap<usize, Vec<String>> = HashMap::new();
             for (name, &idx) in route.iter() {
                 groups.entry(idx).or_default().push(name.clone());
@@ -386,7 +406,10 @@ impl StreamManager {
         };
         let mut outcomes = Vec::new();
         for (idx, names) in by_shard {
-            match self.shards[idx].snapshot_all(dir.to_path_buf()) {
+            let swept = self
+                .shard_at(idx)
+                .and_then(|shard| shard.snapshot_all(dir.to_path_buf()));
+            match swept {
                 Ok(results) => {
                     for (name, result) in results {
                         outcomes.push(SnapshotOutcome { name, result });
@@ -432,38 +455,48 @@ impl StreamManager {
         let updates = snap.updates;
         let (session, info) = snap.into_session()?;
         let name = session.name().to_string();
-        // route insertion is atomic with the adopt (same write lock a
-        // concurrent open_streams/restore of the name would need)
-        let mut route = self.route.write().unwrap();
-        if route.contains_key(&name) {
-            return Err(Error::Coordinator(format!(
-                "stream '{name}' already open"
-            )));
-        }
         let idx = self.shard_of(&name);
-        let version = self.shards[idx].adopt(
-            &name,
-            Box::new(session),
-            weight,
-            last_version,
-        )?;
-        route.insert(name.clone(), idx);
-        Ok(RestoredStream {
-            name,
-            updates,
-            version,
-            repaired: info.repaired,
-        })
+        // Reserve the name under the route write lock, then adopt with
+        // the lock RELEASED: adopt blocks on the shard worker's ack, and
+        // holding the route lock across that wait would stall every
+        // push/open on the manager for the whole restore (and violate
+        // the no-lock-across-a-blocking-handoff rule, lint [[R2]]). The
+        // reservation keeps the restore atomic against a concurrent
+        // open/restore of the same name; it is rolled back on failure.
+        {
+            let mut route = self.route.write();
+            if route.contains_key(&name) {
+                return Err(Error::Coordinator(format!(
+                    "stream '{name}' already open"
+                )));
+            }
+            route.insert(name.clone(), idx);
+        }
+        let adopted = self.shard_at(idx).and_then(|shard| {
+            shard.adopt(&name, Box::new(session), weight, last_version)
+        });
+        match adopted {
+            Ok(version) => Ok(RestoredStream {
+                name,
+                updates,
+                version,
+                repaired: info.repaired,
+            }),
+            Err(e) => {
+                self.route.write().remove(&name);
+                Err(e)
+            }
+        }
     }
 
     /// Is a stream currently open?
     pub fn is_open(&self, name: &str) -> bool {
-        self.route.read().unwrap().contains_key(name)
+        self.route.read().contains_key(name)
     }
 
     /// Number of open streams.
     pub fn open_count(&self) -> usize {
-        self.route.read().unwrap().len()
+        self.route.read().len()
     }
 
     /// Samples queued or in flight across all shards (diagnostics).
@@ -479,17 +512,24 @@ impl StreamManager {
         for shard in &self.shards {
             shard.begin_drain();
         }
-        let mut workers = self.workers.lock().unwrap();
-        for handle in workers.drain(..) {
+        // take the handles under the lock, join with it released — a
+        // join can block for a full drain, and a second (idempotent)
+        // shutdown call must not queue behind it on the handle lock
+        let handles: Vec<std::thread::JoinHandle<()>> = {
+            let mut workers = self.workers.lock();
+            workers.drain(..).collect()
+        };
+        for handle in handles {
             let _ = handle.join();
         }
         // every worker (sender) is gone: the writer drains its queue
         // and exits, so joining it guarantees all final checkpoints of
         // a graceful shutdown are durably on disk
-        if let Some(writer) = self.ckpt_writer.lock().unwrap().take() {
+        let writer = self.ckpt_writer.lock().take();
+        if let Some(writer) = writer {
             let _ = writer.join();
         }
-        self.route.write().unwrap().clear();
+        self.route.write().clear();
     }
 }
 

@@ -167,7 +167,10 @@ impl<'a> Dec<'a> {
         Dec { buf, pos: 0 }
     }
     fn need(&self, n: usize) -> Result<()> {
-        if self.pos + n > self.buf.len() {
+        let end = self.pos.checked_add(n).ok_or_else(|| {
+            Error::snapshot("length field overflows".to_string())
+        })?;
+        if end > self.buf.len() {
             return Err(Error::snapshot(format!(
                 "truncated snapshot: wanted {n} bytes at offset {}, have {}",
                 self.pos,
@@ -176,27 +179,33 @@ impl<'a> Dec<'a> {
         }
         Ok(())
     }
+    /// Take the next `n` bytes. The single bounds check every decode
+    /// goes through — a truncated or corrupt file is a typed
+    /// [`Error::snapshot`], never an index panic on the restore path.
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.need(n)?;
+        let end = self.pos + n;
+        let s = self.buf.get(self.pos..end).ok_or_else(|| {
+            Error::snapshot("truncated snapshot".to_string())
+        })?;
+        self.pos = end;
+        Ok(s)
+    }
     fn u8(&mut self) -> Result<u8> {
-        self.need(1)?;
-        let v = self.buf[self.pos];
-        self.pos += 1;
-        Ok(v)
+        match self.take(1)? {
+            &[v] => Ok(v),
+            _ => Err(Error::snapshot("truncated snapshot".to_string())),
+        }
     }
     fn u32(&mut self) -> Result<u32> {
-        self.need(4)?;
-        let v = u32::from_le_bytes(
-            self.buf[self.pos..self.pos + 4].try_into().unwrap(),
-        );
-        self.pos += 4;
-        Ok(v)
+        let mut b = [0u8; 4];
+        b.copy_from_slice(self.take(4)?);
+        Ok(u32::from_le_bytes(b))
     }
     fn u64(&mut self) -> Result<u64> {
-        self.need(8)?;
-        let v = u64::from_le_bytes(
-            self.buf[self.pos..self.pos + 8].try_into().unwrap(),
-        );
-        self.pos += 8;
-        Ok(v)
+        let mut b = [0u8; 8];
+        b.copy_from_slice(self.take(8)?);
+        Ok(u64::from_le_bytes(b))
     }
     fn usize(&mut self) -> Result<usize> {
         let v = self.u64()?;
@@ -219,11 +228,9 @@ impl<'a> Dec<'a> {
     }
     fn str(&mut self) -> Result<String> {
         let n = self.u32()? as usize;
-        self.need(n)?;
-        let s = std::str::from_utf8(&self.buf[self.pos..self.pos + n])
+        let s = std::str::from_utf8(self.take(n)?)
             .map_err(|_| Error::snapshot("stream name is not UTF-8"))?
             .to_string();
-        self.pos += n;
         Ok(s)
     }
 }
@@ -530,13 +537,21 @@ impl Snapshot {
                 bytes.len()
             )));
         }
-        if bytes[..8] != MAGIC {
+        // the length precheck above covers every header access; each
+        // one still goes through `get` so a corrupt file can only ever
+        // surface as a typed error, never an index panic
+        let truncated =
+            || Error::snapshot("file too short to be a snapshot".to_string());
+        if bytes.get(..MAGIC.len()).ok_or_else(truncated)? != MAGIC {
             return Err(Error::snapshot(
                 "bad magic: not a slabsvm stream snapshot",
             ));
         }
-        let version =
-            u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        let version = {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(bytes.get(8..12).ok_or_else(truncated)?);
+            u32::from_le_bytes(b)
+        };
         if version == 0 || version > FORMAT_VERSION {
             return Err(Error::snapshot(format!(
                 "unsupported snapshot format version {version} \
@@ -544,15 +559,19 @@ impl Snapshot {
             )));
         }
         let body_end = bytes.len() - 8;
-        let stored_check =
-            u64::from_le_bytes(bytes[body_end..].try_into().unwrap());
-        if fnv1a(&bytes[..body_end]) != stored_check {
+        let body = bytes.get(..body_end).ok_or_else(truncated)?;
+        let stored_check = {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(bytes.get(body_end..).ok_or_else(truncated)?);
+            u64::from_le_bytes(b)
+        };
+        if fnv1a(body) != stored_check {
             return Err(Error::snapshot(
                 "payload checksum mismatch: snapshot is truncated or \
                  corrupted",
             ));
         }
-        let mut d = Dec::new(&bytes[..body_end]);
+        let mut d = Dec::new(body);
         d.pos = 8 + 4; // past magic + version
         let fingerprint = d.u64()?;
         let name = d.str()?;
@@ -560,7 +579,10 @@ impl Snapshot {
         let last_version = d.u64()?;
         let cfg_start = d.pos;
         let cfg = decode_config(&mut d, version)?;
-        if fnv1a(&bytes[cfg_start..d.pos]) != fingerprint {
+        let cfg_section = body.get(cfg_start..d.pos).ok_or_else(|| {
+            Error::snapshot("config section out of bounds".to_string())
+        })?;
+        if fnv1a(cfg_section) != fingerprint {
             return Err(Error::snapshot(
                 "config fingerprint does not match the config section",
             ));
@@ -743,6 +765,14 @@ impl Snapshot {
             }
         }
         let p = self.cfg.incremental.smo;
+        if self.alpha.len() != m || self.alpha_bar.len() != m || self.s.len() != m {
+            return Err(Error::snapshot(format!(
+                "dual blocks hold {}/{}/{} values, want {m} each",
+                self.alpha.len(),
+                self.alpha_bar.len(),
+                self.s.len()
+            )));
+        }
         if m > 0 {
             let sa: f64 = self.alpha.iter().sum();
             let sb: f64 = self.alpha_bar.iter().sum();
@@ -755,9 +785,9 @@ impl Snapshot {
             }
             let cap_a = 1.0 / (p.nu1 * m as f64);
             let cap_b = p.eps / (p.nu2 * m as f64);
-            for i in 0..m {
-                let in_box = (-1e-9..=cap_a + 1e-9).contains(&self.alpha[i])
-                    && (-1e-9..=cap_b + 1e-9).contains(&self.alpha_bar[i]);
+            for (i, (a, b)) in self.alpha.iter().zip(&self.alpha_bar).enumerate() {
+                let in_box = (-1e-9..=cap_a + 1e-9).contains(a)
+                    && (-1e-9..=cap_b + 1e-9).contains(b);
                 if !in_box {
                     return Err(Error::snapshot(format!(
                         "dual coordinate {i} outside its box",

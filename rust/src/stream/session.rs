@@ -259,6 +259,9 @@ impl StreamSession {
     /// Absorb one sample: score it against the current slab (drift
     /// evidence), update the dual incrementally, and report.
     pub fn absorb(&mut self, x: &[f64]) -> crate::Result<Absorbed> {
+        // an absorb runs a bounded SMO repair — milliseconds of work
+        // that must never execute with a serving-stack lock held
+        crate::sync::assert_lock_free("session absorb");
         let mut drift_event = None;
         if self.is_warm() {
             let (r1, r2) = self.inc.rho();
@@ -290,6 +293,8 @@ impl StreamSession {
     /// re-publishes). Non-resident ids are a typed
     /// [`crate::Error::Unlearning`]; the session is untouched.
     pub fn forget(&mut self, id: u64) -> crate::Result<Forgotten> {
+        // same repair-scale work as an absorb: no lock may be held here
+        crate::sync::assert_lock_free("session forget");
         self.inc.forget(id)?;
         self.forgets += 1;
         let model = if self.is_warm() { Some(self.inc.model()) } else { None };

@@ -34,8 +34,10 @@
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::sync::{Condvar, Mutex};
 
 use crate::coordinator::{
     JobStatus, ModelRegistry, ServiceStats, TrainQueue, TrainRequest,
@@ -146,15 +148,16 @@ impl Mailbox {
         for step in 0..n {
             let idx = (self.cursor + step) % n;
             // probe without allocating; clone only the selected name
+            let Some(candidate) = self.order.get(idx) else { continue };
             let has_work = self
                 .queues
-                .get(&self.order[idx])
+                .get(candidate)
                 .is_some_and(|q| !q.samples.is_empty());
             if !has_work {
                 continue;
             }
-            let name = self.order[idx].clone();
-            let q = self.queues.get_mut(&name).expect("probed above");
+            let name = candidate.clone();
+            let Some(q) = self.queues.get_mut(&name) else { continue };
             let take = (q.weight.max(1) as usize).min(q.samples.len());
             let batch: Vec<Vec<f64>> = q.samples.drain(..take).collect();
             self.queued -= take;
@@ -198,7 +201,7 @@ pub(crate) struct Shard {
 impl Shard {
     pub(crate) fn new(mailbox_cap: usize) -> Shard {
         Shard {
-            mail: Mutex::new(Mailbox::new()),
+            mail: Mutex::new("shard.mail", Mailbox::new()),
             not_empty: Condvar::new(),
             space: Condvar::new(),
             cap: mailbox_cap.max(1),
@@ -209,7 +212,7 @@ impl Shard {
     /// immediately) + the Open control the worker turns into a session.
     /// Returns false when the shard is already draining.
     pub(crate) fn open(&self, name: &str, cfg: StreamConfig, weight: u32) -> bool {
-        let mut mail = self.mail.lock().unwrap();
+        let mut mail = self.mail.lock();
         if mail.draining {
             return false;
         }
@@ -246,7 +249,7 @@ impl Shard {
     ) -> Result<Option<u64>> {
         let (tx, rx) = std::sync::mpsc::channel();
         {
-            let mut mail = self.mail.lock().unwrap();
+            let mut mail = self.mail.lock();
             if mail.draining {
                 return Err(Error::Coordinator(format!(
                     "stream '{name}': manager is shutting down"
@@ -282,7 +285,7 @@ impl Shard {
     ) -> Result<Vec<(String, Result<()>)>> {
         let (tx, rx) = std::sync::mpsc::channel();
         {
-            let mut mail = self.mail.lock().unwrap();
+            let mut mail = self.mail.lock();
             mail.control.push_back(Control::Snapshot { dir, ack: tx });
         }
         self.not_empty.notify_one();
@@ -302,7 +305,7 @@ impl Shard {
         x: &[f64],
         stats: &ServiceStats,
     ) -> Result<()> {
-        let mut mail = self.mail.lock().unwrap();
+        let mut mail = self.mail.lock();
         loop {
             if mail.draining {
                 return Err(Error::Coordinator(format!(
@@ -329,17 +332,16 @@ impl Shard {
                 break;
             }
             stats.stream_backpressure.inc();
-            let (guard, _) = self
-                .space
-                .wait_timeout(mail, Duration::from_millis(50))
-                .unwrap();
+            let (guard, _) =
+                self.space.wait_timeout(mail, Duration::from_millis(50));
             mail = guard;
         }
-        mail.queues
-            .get_mut(name)
-            .expect("checked above")
-            .samples
-            .push_back(x.to_vec());
+        // the guard was held since the existence check above, so the
+        // entry is still there; a miss is a typed error regardless
+        let Some(q) = mail.queues.get_mut(name) else {
+            return Err(Error::Coordinator(format!("unknown stream '{name}'")));
+        };
+        q.samples.push_back(x.to_vec());
         mail.queued += 1;
         drop(mail);
         self.not_empty.notify_one();
@@ -351,7 +353,7 @@ impl Shard {
     pub(crate) fn forget(&self, name: &str, id: u64) -> Result<ForgetOutcome> {
         let (tx, rx) = std::sync::mpsc::channel();
         {
-            let mut mail = self.mail.lock().unwrap();
+            let mut mail = self.mail.lock();
             if mail.draining {
                 return Err(Error::Coordinator(format!(
                     "stream '{name}': manager is shutting down"
@@ -374,7 +376,7 @@ impl Shard {
     pub(crate) fn close(&self, name: &str) -> Result<StreamSummary> {
         let (tx, rx) = std::sync::mpsc::channel();
         {
-            let mut mail = self.mail.lock().unwrap();
+            let mut mail = self.mail.lock();
             if mail.draining {
                 return Err(Error::Coordinator(format!(
                     "stream '{name}': manager is shutting down"
@@ -393,26 +395,24 @@ impl Shard {
 
     /// Block until nothing is queued or in flight on this shard.
     pub(crate) fn wait_idle(&self) {
-        let mut mail = self.mail.lock().unwrap();
+        let mut mail = self.mail.lock();
         while mail.queued + mail.in_flight > 0 || !mail.control.is_empty() {
-            let (guard, _) = self
-                .space
-                .wait_timeout(mail, Duration::from_millis(20))
-                .unwrap();
+            let (guard, _) =
+                self.space.wait_timeout(mail, Duration::from_millis(20));
             mail = guard;
         }
     }
 
     /// Samples currently queued (diagnostics).
     pub(crate) fn queue_depth(&self) -> usize {
-        let mail = self.mail.lock().unwrap();
+        let mail = self.mail.lock();
         mail.queued + mail.in_flight
     }
 
     /// Begin shutdown: refuse new pushes, let the worker drain what is
     /// already queued (controls included) and exit.
     pub(crate) fn begin_drain(&self) {
-        let mut mail = self.mail.lock().unwrap();
+        let mut mail = self.mail.lock();
         mail.draining = true;
         drop(mail);
         self.not_empty.notify_all();
@@ -505,6 +505,9 @@ fn absorb_one(
     jobs: &TrainQueue,
     stats: &ServiceStats,
 ) {
+    // runtime form of the R2 invariant: the caller released the mail
+    // lock before handing the batch here
+    crate::sync::assert_lock_free("absorb");
     let t0 = Instant::now();
     match slot.session.absorb(x) {
         Ok(absorbed) => {
@@ -545,6 +548,9 @@ fn absorb_one(
 /// (the cadence clock still advances, so a dead writer is a warning
 /// per cadence, not a hot spin).
 fn checkpoint_slot(slot: &mut Slot, sink: &CheckpointSink) {
+    // serialization + the writer hand-off must not run under the mail
+    // lock: producers would stall for the whole encode
+    crate::sync::assert_lock_free("checkpoint serialize");
     let snap = Snapshot::capture(&slot.session, slot.weight, slot.last_version);
     let path = snapshot_path(&sink.cfg.dir, slot.session.name());
     if sink.tx.send((path, snap.encode())).is_ok() {
@@ -581,7 +587,7 @@ pub(crate) fn run_worker(
         // exists (processed below, before the absorb) by the time its
         // first sample is popped.
         let (controls, batch, draining) = {
-            let mut mail = shard.mail.lock().unwrap();
+            let mut mail = shard.mail.lock();
             let controls: Vec<Control> = mail.control.drain(..).collect();
             let batch = mail.pop_fair();
             (controls, batch, mail.draining)
@@ -595,7 +601,7 @@ pub(crate) fn run_worker(
                 }
                 Control::Adopt { name, session, last_version, ack } => {
                     let weight = {
-                        let mail = shard.mail.lock().unwrap();
+                        let mail = shard.mail.lock();
                         mail.queues.get(&name).map_or(1, |q| q.weight)
                     };
                     let mut slot = Slot::new(*session, weight);
@@ -737,7 +743,7 @@ pub(crate) fn run_worker(
                     absorb_one(slot, x, &registry, &jobs, &stats);
                 }
             }
-            let mut mail = shard.mail.lock().unwrap();
+            let mut mail = shard.mail.lock();
             mail.in_flight -= samples.len();
             drop(mail);
             shard.space.notify_all();
@@ -778,7 +784,7 @@ pub(crate) fn run_worker(
             let candidates: Vec<String> = closing.keys().cloned().collect();
             for name in candidates {
                 let drained = {
-                    let mut mail = shard.mail.lock().unwrap();
+                    let mut mail = shard.mail.lock();
                     let empty = match mail.queues.get(&name) {
                         Some(q) => q.samples.is_empty(),
                         None => true,
@@ -791,7 +797,7 @@ pub(crate) fn run_worker(
                 if !drained {
                     continue; // a late push landed; absorb it first
                 }
-                let ack = closing.remove(&name).expect("key from closing");
+                let Some(ack) = closing.remove(&name) else { continue };
                 let summary = slots.remove(&name).map(|mut slot| {
                     // final checkpoint: a graceful close persists the
                     // freshest state for a later restore
@@ -811,7 +817,7 @@ pub(crate) fn run_worker(
 
         if draining {
             let done = {
-                let mail = shard.mail.lock().unwrap();
+                let mail = shard.mail.lock();
                 mail.queued == 0
                     && mail.in_flight == 0
                     && mail.control.is_empty()
@@ -850,23 +856,19 @@ pub(crate) fn run_worker(
                     .map(|s| sink.cfg.every.saturating_sub(s.last_ckpt.elapsed()))
                     .min()
             });
-            let mail = shard.mail.lock().unwrap();
+            let mail = shard.mail.lock();
             if mail.queued == 0 && mail.control.is_empty() && !mail.draining {
                 if pending_retrains {
                     let _ = shard
                         .not_empty
-                        .wait_timeout(mail, Duration::from_millis(5))
-                        .unwrap();
+                        .wait_timeout(mail, Duration::from_millis(5));
                 } else if let Some(due_in) = next_ckpt {
-                    let _ = shard
-                        .not_empty
-                        .wait_timeout(
-                            mail,
-                            due_in.max(Duration::from_millis(1)),
-                        )
-                        .unwrap();
+                    let _ = shard.not_empty.wait_timeout(
+                        mail,
+                        due_in.max(Duration::from_millis(1)),
+                    );
                 } else {
-                    let _ = shard.not_empty.wait(mail).unwrap();
+                    let _ = shard.not_empty.wait(mail);
                 }
             }
         }

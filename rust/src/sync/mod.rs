@@ -1,0 +1,129 @@
+//! Synchronization primitives for the serving stack, in two builds:
+//!
+//! * **release** (default): transparent newtypes over [`std::sync`]
+//!   with poison *recovery* — `lock()` / `read()` / `write()` return
+//!   the guard directly instead of a `LockResult`. A poisoned lock is
+//!   not a reason to panic a shard worker: every structure guarded
+//!   here (mailboxes, job tables, route maps) is kept consistent by
+//!   its own invariants, not by unwind flags, so the wrapper takes the
+//!   guard out of the `PoisonError` and carries on. This removes the
+//!   `.lock().unwrap()` pattern from the data plane wholesale (lint
+//!   rule [[R1]]) at zero runtime cost.
+//!
+//! * **audited** (`cfg(any(test, feature = "lock-audit"))`): the same
+//!   API backed by [`tracked`] — every `Mutex`/`RwLock` carries a
+//!   name, acquisitions are recorded per thread, a global lock-order
+//!   graph accumulates `held → acquired` edges keyed by lock *class*
+//!   (name), and an acquisition that would close a cycle in that graph
+//!   panics with the offending chain **before** blocking, turning a
+//!   potential deadlock into a deterministic test failure. The
+//!   runtime side of lint rule [[R2]]: [`assert_lock_free`] panics if
+//!   the calling thread holds any tracked lock, and is asserted at
+//!   every absorb/repair/checkpoint entry point.
+//!
+//! The release build never compiles the tracking code, so the audit
+//! layer costs nothing outside tests; CI runs the concurrency suite
+//! with `--features lock-audit` so the graph is exercised per commit.
+
+#[cfg(any(test, feature = "lock-audit"))]
+pub mod tracked;
+
+#[cfg(any(test, feature = "lock-audit"))]
+pub use tracked::{
+    assert_lock_free, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard,
+    RwLockWriteGuard,
+};
+
+#[cfg(not(any(test, feature = "lock-audit")))]
+mod plain {
+    use std::sync::PoisonError;
+    use std::time::Duration;
+
+    pub type MutexGuard<'a, T> = std::sync::MutexGuard<'a, T>;
+    pub type RwLockReadGuard<'a, T> = std::sync::RwLockReadGuard<'a, T>;
+    pub type RwLockWriteGuard<'a, T> = std::sync::RwLockWriteGuard<'a, T>;
+
+    /// [`std::sync::Mutex`] with poison recovery. The `name` is the
+    /// lock's class in the audited build; it is not stored here.
+    pub struct Mutex<T> {
+        inner: std::sync::Mutex<T>,
+    }
+
+    impl<T> Mutex<T> {
+        pub fn new(_name: &'static str, value: T) -> Mutex<T> {
+            Mutex { inner: std::sync::Mutex::new(value) }
+        }
+
+        pub fn lock(&self) -> MutexGuard<'_, T> {
+            self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+        }
+    }
+
+    /// [`std::sync::RwLock`] with poison recovery.
+    pub struct RwLock<T> {
+        inner: std::sync::RwLock<T>,
+    }
+
+    impl<T> RwLock<T> {
+        pub fn new(_name: &'static str, value: T) -> RwLock<T> {
+            RwLock { inner: std::sync::RwLock::new(value) }
+        }
+
+        pub fn read(&self) -> RwLockReadGuard<'_, T> {
+            self.inner.read().unwrap_or_else(PoisonError::into_inner)
+        }
+
+        pub fn write(&self) -> RwLockWriteGuard<'_, T> {
+            self.inner.write().unwrap_or_else(PoisonError::into_inner)
+        }
+    }
+
+    /// [`std::sync::Condvar`] whose waits hand the guard back directly.
+    #[derive(Default)]
+    pub struct Condvar {
+        inner: std::sync::Condvar,
+    }
+
+    impl Condvar {
+        pub fn new() -> Condvar {
+            Condvar { inner: std::sync::Condvar::new() }
+        }
+
+        pub fn notify_one(&self) {
+            self.inner.notify_one();
+        }
+
+        pub fn notify_all(&self) {
+            self.inner.notify_all();
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+            self.inner.wait(guard).unwrap_or_else(PoisonError::into_inner)
+        }
+
+        /// Returns the reacquired guard and whether the wait timed out.
+        pub fn wait_timeout<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+            dur: Duration,
+        ) -> (MutexGuard<'a, T>, bool) {
+            match self.inner.wait_timeout(guard, dur) {
+                Ok((g, t)) => (g, t.timed_out()),
+                Err(poisoned) => {
+                    let (g, t) = poisoned.into_inner();
+                    (g, t.timed_out())
+                }
+            }
+        }
+    }
+
+    /// Runtime side of the no-lock-across-absorb rule; free in release.
+    #[inline(always)]
+    pub fn assert_lock_free(_context: &str) {}
+}
+
+#[cfg(not(any(test, feature = "lock-audit")))]
+pub use plain::{
+    assert_lock_free, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard,
+    RwLockWriteGuard,
+};

@@ -1,0 +1,491 @@
+//! Tracked locks: the dynamic half of the concurrency lint.
+//!
+//! Every [`Mutex`]/[`RwLock`] created here belongs to a *class* (its
+//! `&'static str` name — all shard mailboxes are one class) and is one
+//! *instance* of that class. Each thread keeps a stack of the tracked
+//! locks it currently holds; each acquisition
+//!
+//! 1. panics if this thread already holds the same instance (a
+//!    guaranteed self-deadlock with `std` locks);
+//! 2. records a `held-class → acquired-class` edge, with the thread
+//!    and hold-set that first produced it, into a process-global
+//!    lock-order graph;
+//! 3. runs a DFS from the acquired class and panics with the chain if
+//!    the new edge closed a cycle — the classic ABBA pattern is
+//!    reported *before* the acquisition blocks, so a test fails
+//!    deterministically instead of hanging. Nested instances of the
+//!    same class count as a cycle too (there is no consistent order
+//!    between two mailboxes).
+//!
+//! [`assert_lock_free`] is the runtime form of the "no lock held
+//! across an absorb" invariant: called at every absorb / repair /
+//! checkpoint entry point, it panics if the calling thread holds any
+//! tracked lock. [`Condvar::wait`] participates correctly: the wait
+//! releases the lock (popped from the hold stack) and the reacquire is
+//! re-checked like any other acquisition.
+//!
+//! Edges accumulate for the process lifetime (the graph is append-only
+//! and tiny — one node per lock class), so a cycle is caught even when
+//! the two halves of the inversion happen in different tests.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex as StdMutex, OnceLock, PoisonError};
+use std::time::Duration;
+
+// ------------------------------------------------------------ registry
+
+#[derive(Default)]
+struct Graph {
+    /// class name → class id (index into `names`)
+    ids: HashMap<&'static str, usize>,
+    names: Vec<&'static str>,
+    /// held-class → acquired-class, with the context that first made it
+    edges: HashMap<usize, HashMap<usize, String>>,
+}
+
+fn graph() -> &'static StdMutex<Graph> {
+    static GRAPH: OnceLock<StdMutex<Graph>> = OnceLock::new();
+    GRAPH.get_or_init(|| StdMutex::new(Graph::default()))
+}
+
+fn intern(name: &'static str) -> usize {
+    let mut g = graph().lock().unwrap_or_else(PoisonError::into_inner);
+    if let Some(&id) = g.ids.get(name) {
+        return id;
+    }
+    let id = g.names.len();
+    g.names.push(name);
+    g.ids.insert(name, id);
+    id
+}
+
+fn next_instance() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+thread_local! {
+    /// (class, instance, name) of every tracked lock this thread holds,
+    /// oldest first.
+    static HELD: RefCell<Vec<(usize, u64, &'static str)>> =
+        const { RefCell::new(Vec::new()) };
+}
+
+/// DFS from `start`: the names along a path that returns to `start`,
+/// if the edge set contains one.
+fn find_cycle(g: &Graph, start: usize) -> Option<String> {
+    let mut stack = vec![(start, vec![start])];
+    let mut visited = vec![false; g.names.len()];
+    while let Some((node, path)) = stack.pop() {
+        let Some(nexts) = g.edges.get(&node) else { continue };
+        for (&next, ctx) in nexts {
+            if next == start {
+                let mut chain: Vec<&str> = path
+                    .iter()
+                    .map(|&c| g.names.get(c).copied().unwrap_or("?"))
+                    .collect();
+                chain.push(g.names.get(start).copied().unwrap_or("?"));
+                return Some(format!(
+                    "{} (closing edge first seen: {ctx})",
+                    chain.join(" -> ")
+                ));
+            }
+            if let Some(seen) = visited.get_mut(next) {
+                if !*seen {
+                    *seen = true;
+                    let mut p = path.clone();
+                    p.push(next);
+                    stack.push((next, p));
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Record an acquisition attempt by this thread. Panics on a relock of
+/// the same instance or on a lock-order cycle; called BEFORE blocking
+/// on the underlying lock, so the report preempts the deadlock.
+fn on_acquire(class: usize, instance: u64, name: &'static str) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if held.iter().any(|&(_, inst, _)| inst == instance) {
+            panic!(
+                "lock-audit: thread '{}' re-locking '{name}' which it \
+                 already holds (self-deadlock)",
+                thread_label()
+            );
+        }
+        if !held.is_empty() {
+            let mut g =
+                graph().lock().unwrap_or_else(PoisonError::into_inner);
+            for &(held_class, _, held_name) in held.iter() {
+                g.edges.entry(held_class).or_default().entry(class).or_insert_with(
+                    || {
+                        format!(
+                            "'{held_name}' held while acquiring '{name}' \
+                             on thread '{}'",
+                            thread_label()
+                        )
+                    },
+                );
+            }
+            if let Some(cycle) = find_cycle(&g, class) {
+                panic!(
+                    "lock-audit: acquiring '{name}' on thread '{}' closes \
+                     a lock-order cycle: {cycle}",
+                    thread_label()
+                );
+            }
+        }
+        held.push((class, instance, name));
+    });
+}
+
+/// The instance is no longer held by this thread (guard drop or the
+/// release half of a condvar wait).
+fn on_release(instance: u64) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(pos) =
+            held.iter().rposition(|&(_, inst, _)| inst == instance)
+        {
+            held.remove(pos);
+        }
+    });
+}
+
+fn thread_label() -> String {
+    std::thread::current().name().unwrap_or("<unnamed>").to_string()
+}
+
+/// Panics if the calling thread holds any tracked lock. Asserted at
+/// absorb / repair / checkpoint entry points: the runtime form of the
+/// "no lock held across an absorb" invariant.
+pub fn assert_lock_free(context: &str) {
+    HELD.with(|h| {
+        let held = h.borrow();
+        if !held.is_empty() {
+            let names: Vec<&str> =
+                held.iter().map(|&(_, _, n)| n).collect();
+            panic!(
+                "lock-audit: {context} entered on thread '{}' while \
+                 holding tracked lock(s): {}",
+                thread_label(),
+                names.join(", ")
+            );
+        }
+    });
+}
+
+// --------------------------------------------------------------- Mutex
+
+/// A named, order-tracked mutex with poison recovery.
+pub struct Mutex<T> {
+    inner: StdMutex<T>,
+    name: &'static str,
+    class: usize,
+    instance: u64,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(name: &'static str, value: T) -> Mutex<T> {
+        Mutex {
+            inner: StdMutex::new(value),
+            name,
+            class: intern(name),
+            instance: next_instance(),
+        }
+    }
+
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        on_acquire(self.class, self.instance, self.name);
+        let inner =
+            self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        MutexGuard {
+            inner: Some(inner),
+            class: self.class,
+            instance: self.instance,
+            name: self.name,
+        }
+    }
+}
+
+pub struct MutexGuard<'a, T> {
+    /// `None` only transiently inside a condvar wait (the lock is
+    /// released there; drop then does no release bookkeeping).
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    class: usize,
+    instance: u64,
+    name: &'static str,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_deref().expect("guard taken by condvar wait")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_deref_mut().expect("guard taken by condvar wait")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.inner.is_some() {
+            on_release(self.instance);
+        }
+    }
+}
+
+// ------------------------------------------------------------- Condvar
+
+/// Condvar over tracked [`MutexGuard`]s: the wait releases the lock in
+/// the hold stack and the reacquire is re-checked like a fresh lock.
+#[derive(Default)]
+pub struct Condvar {
+    inner: std::sync::Condvar,
+}
+
+impl Condvar {
+    pub fn new() -> Condvar {
+        Condvar { inner: std::sync::Condvar::new() }
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        let (class, instance, name) =
+            (guard.class, guard.instance, guard.name);
+        let inner = guard.inner.take().expect("guard taken by condvar wait");
+        on_release(instance);
+        drop(guard);
+        let inner =
+            self.inner.wait(inner).unwrap_or_else(PoisonError::into_inner);
+        on_acquire(class, instance, name);
+        MutexGuard { inner: Some(inner), class, instance, name }
+    }
+
+    /// Returns the reacquired guard and whether the wait timed out.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, bool) {
+        let (class, instance, name) =
+            (guard.class, guard.instance, guard.name);
+        let inner = guard.inner.take().expect("guard taken by condvar wait");
+        on_release(instance);
+        drop(guard);
+        let (inner, timed_out) = match self.inner.wait_timeout(inner, dur) {
+            Ok((g, t)) => (g, t.timed_out()),
+            Err(poisoned) => {
+                let (g, t) = poisoned.into_inner();
+                (g, t.timed_out())
+            }
+        };
+        on_acquire(class, instance, name);
+        (MutexGuard { inner: Some(inner), class, instance, name }, timed_out)
+    }
+}
+
+// -------------------------------------------------------------- RwLock
+
+/// A named, order-tracked reader-writer lock with poison recovery.
+/// Read and write acquisitions both participate in the order graph
+/// (a read held across a write attempt deadlocks just as hard).
+pub struct RwLock<T> {
+    inner: std::sync::RwLock<T>,
+    name: &'static str,
+    class: usize,
+    instance: u64,
+}
+
+impl<T> RwLock<T> {
+    pub fn new(name: &'static str, value: T) -> RwLock<T> {
+        RwLock {
+            inner: std::sync::RwLock::new(value),
+            name,
+            class: intern(name),
+            instance: next_instance(),
+        }
+    }
+
+    pub fn read(&self) -> RwLockReadGuard<'_, T> {
+        on_acquire(self.class, self.instance, self.name);
+        let inner =
+            self.inner.read().unwrap_or_else(PoisonError::into_inner);
+        RwLockReadGuard { inner, instance: self.instance }
+    }
+
+    pub fn write(&self) -> RwLockWriteGuard<'_, T> {
+        on_acquire(self.class, self.instance, self.name);
+        let inner =
+            self.inner.write().unwrap_or_else(PoisonError::into_inner);
+        RwLockWriteGuard { inner, instance: self.instance }
+    }
+}
+
+pub struct RwLockReadGuard<'a, T> {
+    inner: std::sync::RwLockReadGuard<'a, T>,
+    instance: u64,
+}
+
+impl<T> Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        on_release(self.instance);
+    }
+}
+
+pub struct RwLockWriteGuard<'a, T> {
+    inner: std::sync::RwLockWriteGuard<'a, T>,
+    instance: u64,
+}
+
+impl<T> Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+impl<T> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        on_release(self.instance);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::Arc;
+
+    fn panics_with(f: impl FnOnce(), needle: &str) {
+        let err = catch_unwind(AssertUnwindSafe(f))
+            .expect_err("expected a lock-audit panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains(needle), "panic message {msg:?} lacks {needle:?}");
+    }
+
+    #[test]
+    fn plain_lock_roundtrip_and_release() {
+        let m = Mutex::new("t.roundtrip", 0i32);
+        *m.lock() += 5;
+        assert_eq!(*m.lock(), 5);
+        // guard dropped each statement: nothing held now
+        assert_lock_free("test");
+    }
+
+    #[test]
+    fn relock_of_same_instance_panics() {
+        let m = Mutex::new("t.relock", ());
+        let _g = m.lock();
+        panics_with(
+            || {
+                let _g2 = m.lock();
+            },
+            "re-locking",
+        );
+    }
+
+    #[test]
+    fn assert_lock_free_names_the_held_lock() {
+        let m = Mutex::new("t.assert-free", ());
+        let _g = m.lock();
+        panics_with(|| assert_lock_free("absorb"), "t.assert-free");
+    }
+
+    #[test]
+    fn abba_order_inversion_panics_with_chain() {
+        let a = Arc::new(Mutex::new("t.abba-a", ()));
+        let b = Arc::new(Mutex::new("t.abba-b", ()));
+        // record a -> b on another thread (clean acquisition order)
+        {
+            let (a, b) = (Arc::clone(&a), Arc::clone(&b));
+            std::thread::spawn(move || {
+                let _ga = a.lock();
+                let _gb = b.lock();
+            })
+            .join()
+            .expect("ordered thread");
+        }
+        // the inverted order on this thread must be caught BEFORE it
+        // can block, since a->b is already in the graph
+        let _gb = b.lock();
+        panics_with(
+            || {
+                let _ga = a.lock();
+            },
+            "lock-order cycle",
+        );
+    }
+
+    #[test]
+    fn nested_same_class_instances_count_as_a_cycle() {
+        // two mailboxes have no consistent order between them
+        let a = Mutex::new("t.same-class", ());
+        let b = Mutex::new("t.same-class", ());
+        let _ga = a.lock();
+        panics_with(
+            || {
+                let _gb = b.lock();
+            },
+            "lock-order cycle",
+        );
+    }
+
+    #[test]
+    fn condvar_wait_timeout_releases_and_reacquires() {
+        let m = Mutex::new("t.cv", 0i32);
+        let cv = Condvar::new();
+        let g = m.lock();
+        let (mut g, timed_out) =
+            cv.wait_timeout(g, Duration::from_millis(1));
+        assert!(timed_out);
+        *g += 1; // reacquired guard still works
+        drop(g);
+        assert_lock_free("after wait");
+    }
+
+    #[test]
+    fn rwlock_read_then_distinct_write_orders_cleanly() {
+        let r = RwLock::new("t.rw-a", 1);
+        let w = RwLock::new("t.rw-b", 2);
+        let g = r.read();
+        let mut h = w.write(); // a->b edge, no cycle
+        *h += *g;
+        drop(h);
+        drop(g);
+        assert_lock_free("after rw");
+    }
+}

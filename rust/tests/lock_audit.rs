@@ -1,0 +1,130 @@
+//! Tracked-lock audit, end-to-end (`--features lock-audit`).
+//!
+//! With the feature on, every `crate::sync` lock in the serving stack
+//! records per-thread acquisition stacks and a global lock-order
+//! graph, panicking *before blocking* on any cycle. Driving the real
+//! sharded manager under producer concurrency therefore turns a lock
+//! ordering regression into a deterministic test failure here — no
+//! hung CI job, no flaky timeout. The direct-API tests below also pin
+//! the panic surfaces (ABBA cycle, self-relock, absorb-under-lock) so
+//! a refactor cannot silently neuter the auditor.
+
+#![cfg(feature = "lock-audit")]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use slabsvm::coordinator::{BatcherConfig, Coordinator};
+use slabsvm::data::synthetic::{SlabConfig, SlabStream};
+use slabsvm::runtime::Engine;
+use slabsvm::stream::{DriftConfig, StreamConfig, StreamPoolConfig, StreamSpec};
+use slabsvm::sync::{assert_lock_free, Mutex};
+
+fn panic_text(e: Box<dyn std::any::Any + Send>) -> String {
+    e.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default()
+}
+
+#[test]
+fn abba_inversion_panics_before_blocking() {
+    let a = Mutex::new("audit-itest.a", ());
+    let b = Mutex::new("audit-itest.b", ());
+    {
+        let _ga = a.lock();
+        let _gb = b.lock(); // records a -> b
+    }
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        let _gb = b.lock();
+        let _ga = a.lock(); // would close b -> a: cycle
+    }))
+    .expect_err("inverted order must panic");
+    let msg = panic_text(err);
+    assert!(msg.contains("lock-order cycle"), "{msg}");
+}
+
+#[test]
+fn same_instance_relock_panics() {
+    let m = Mutex::new("audit-itest.relock", 0u32);
+    let _g = m.lock();
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        let _g2 = m.lock();
+    }))
+    .expect_err("self-relock must panic");
+    let msg = panic_text(err);
+    assert!(msg.contains("re-locking"), "{msg}");
+}
+
+#[test]
+fn assert_lock_free_fires_under_a_held_guard() {
+    let m = Mutex::new("audit-itest.holdcheck", ());
+    let g = m.lock();
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        assert_lock_free("audit-itest absorb");
+    }))
+    .expect_err("assert_lock_free must panic while a guard is held");
+    let msg = panic_text(err);
+    assert!(msg.contains("while"), "{msg}");
+    drop(g);
+    // and stays quiet once the guard is gone
+    assert_lock_free("audit-itest absorb");
+}
+
+/// The real serving stack under tracked locks: concurrent producers
+/// into a sharded manager, streams closed while others keep pushing,
+/// full shutdown. Any lock held across an absorb or any cross-shard
+/// ordering cycle panics deterministically inside this test run; the
+/// absorb counts prove the workers survived the whole session.
+#[test]
+fn serving_stack_runs_clean_under_tracked_locks() {
+    let coordinator = Coordinator::start_with_streams(
+        Engine::Native,
+        BatcherConfig { max_batch: 32, max_wait_us: 200, queue_cap: 1024 },
+        2,
+        StreamPoolConfig { shards: 2, mailbox_cap: 16, checkpoint: None },
+    );
+    let m = coordinator.stream_manager();
+    let cfg = StreamConfig {
+        window: 40,
+        min_train: 20,
+        drift: DriftConfig {
+            recent: 32,
+            min_observations: 16,
+            outside_frac: 0.99,
+            rho_rel: 50.0,
+        },
+        ..Default::default()
+    };
+    let n_streams = 6usize;
+    let points = 40usize;
+    m.open_streams(
+        (0..n_streams)
+            .map(|i| StreamSpec::new(format!("audit-{i}"), cfg))
+            .collect(),
+    )
+    .unwrap();
+
+    std::thread::scope(|scope| {
+        for i in 0..n_streams {
+            let manager = m;
+            scope.spawn(move || {
+                let mut stream =
+                    SlabStream::new(SlabConfig::default(), 9100 + i as u64);
+                for _ in 0..points {
+                    manager
+                        .push(&format!("audit-{i}"), &stream.next_point())
+                        .unwrap();
+                }
+            });
+        }
+    });
+
+    for i in 0..n_streams {
+        let s = m.close_stream(&format!("audit-{i}")).unwrap();
+        assert_eq!(
+            s.updates, points as u64,
+            "audit-{i} lost absorbs under tracked locks"
+        );
+    }
+    coordinator.shutdown();
+}

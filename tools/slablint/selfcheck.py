@@ -1,0 +1,795 @@
+#!/usr/bin/env python3
+"""Reference mirror of slablint for toolchain-less environments.
+
+This script re-implements the lexer and the five rules of the Rust
+binary (tools/slablint/src/) line for line, so the scan can be run —
+and the committed allowlist validated — on a machine without cargo.
+CI runs the Rust binary; this mirror exists so a contributor (or a
+container without the toolchain) can still answer "would slablint
+pass?" with `python3 tools/slablint/selfcheck.py`.
+
+Keep the two in sync: any rule change lands in src/rules.rs AND here.
+"""
+
+import os
+import re
+import sys
+
+# ------------------------------------------------------------- lexer
+
+IDENT = re.compile(r"[A-Za-z0-9_]")
+
+
+def is_ident(c):
+    return bool(IDENT.match(c))
+
+
+def strip(source):
+    """Blank comments and literal contents, preserving line structure."""
+    b = source
+    n = len(b)
+    out = []
+    state = "code"
+    depth = 0  # block-comment nesting / raw-string hashes
+    i = 0
+    while i < n:
+        c = b[i]
+        nxt = b[i + 1] if i + 1 < n else ""
+        if state == "code":
+            if c == "/" and nxt == "/":
+                state = "line"
+                out.append("  ")
+                i += 2
+            elif c == "/" and nxt == "*":
+                state = "block"
+                depth = 1
+                out.append("  ")
+                i += 2
+            elif c == '"':
+                state = "str"
+                out.append('"')
+                i += 1
+            elif c in "rb" and _is_raw_start(b, i):
+                j = i + 1
+                if c == "b" and j < n and b[j] == "r":
+                    j += 1
+                hashes = 0
+                while j < n and b[j] == "#":
+                    hashes += 1
+                    j += 1
+                if j < n and b[j] == '"':
+                    out.append(" " * (j - i) + '"')
+                    if c == "b" and b[i + 1] != "r" and hashes == 0:
+                        state = "str"
+                    else:
+                        state = "raw"
+                        depth = hashes
+                    i = j + 1
+                else:
+                    out.append(c)
+                    i += 1
+            elif c == "'" and _is_char_literal(b, i):
+                state = "char"
+                out.append("'")
+                i += 1
+            else:
+                out.append(c)
+                i += 1
+        elif state == "line":
+            if c == "\n":
+                state = "code"
+                out.append("\n")
+            else:
+                out.append(" ")
+            i += 1
+        elif state == "block":
+            if c == "/" and nxt == "*":
+                depth += 1
+                out.append("  ")
+                i += 2
+            elif c == "*" and nxt == "/":
+                depth -= 1
+                state = "code" if depth == 0 else "block"
+                out.append("  ")
+                i += 2
+            else:
+                out.append("\n" if c == "\n" else " ")
+                i += 1
+        elif state == "str":
+            if c == "\\":
+                out.append(" " + ("\n" if nxt == "\n" else " "))
+                i += 2
+            elif c == '"':
+                state = "code"
+                out.append('"')
+                i += 1
+            else:
+                out.append("\n" if c == "\n" else " ")
+                i += 1
+        elif state == "raw":
+            if c == '"' and b[i + 1 : i + 1 + depth] == "#" * depth:
+                out.append('"' + " " * depth)
+                state = "code"
+                i += 1 + depth
+            else:
+                out.append("\n" if c == "\n" else " ")
+                i += 1
+        elif state == "char":
+            if c == "\\":
+                out.append("  ")
+                i += 2
+            elif c == "'":
+                state = "code"
+                out.append("'")
+                i += 1
+            else:
+                out.append(" ")
+                i += 1
+    return "".join(out).split("\n")
+
+
+def _is_raw_start(b, i):
+    if i > 0 and is_ident(b[i - 1]):
+        return False
+    j = i + 1
+    n = len(b)
+    if b[i] == "b":
+        if j < n and b[j] == "'":
+            return False
+        if j < n and b[j] == "r":
+            j += 1
+        elif j >= n or b[j] not in '"#':
+            return False
+    while j < n and b[j] == "#":
+        j += 1
+    return j < n and b[j] == '"'
+
+
+def _is_char_literal(b, i):
+    if i + 1 >= len(b):
+        return False
+    c1 = b[i + 1]
+    if c1 == "\\":
+        return True
+    if is_ident(c1):
+        return i + 2 < len(b) and b[i + 2] == "'"
+    return True
+
+
+def test_mod_lines(lines):
+    n = len(lines)
+    in_test = [False] * n
+    i = 0
+    while i < n:
+        if lines[i].lstrip().startswith("#[cfg(test)]"):
+            j = i + 1
+            while j < n and (
+                not lines[j].strip() or lines[j].lstrip().startswith("#[")
+            ):
+                j += 1
+            if j < n and lines[j].lstrip().startswith("mod "):
+                depth = 0
+                started = False
+                k = j
+                while k < n:
+                    for c in lines[k]:
+                        if c == "{":
+                            depth += 1
+                            started = True
+                        elif c == "}":
+                            depth -= 1
+                    in_test[k] = True
+                    if started and depth <= 0:
+                        break
+                    k += 1
+                in_test[i] = True
+                i = k + 1
+                continue
+        i += 1
+    return in_test
+
+
+class Stripped:
+    def __init__(self, source):
+        self.lines = strip(source)
+        self.in_test = test_mod_lines(self.lines)
+        # raw lines: findings report these, and the allowlist matches
+        # against them (patterns may cite string contents)
+        self.raw = source.split("\n")
+
+
+# ------------------------------------------------------------- rules
+
+R1_SCOPE = [
+    "stream/shard.rs",
+    "stream/manager.rs",
+    "stream/persist.rs",
+    "coordinator/jobs.rs",
+]
+R1_TOKENS = [".unwrap()", ".expect(", "panic!(", "unreachable!(", ".unwrap_unchecked("]
+SUBSCRIPT_KEYWORDS = {
+    "mut", "ref", "dyn", "in", "as", "return", "else",
+    "match", "if", "move", "impl", "where",
+}
+
+
+def finding(rule, file, idx, msg, s):
+    return {
+        "rule": rule,
+        "file": file,
+        "line": idx + 1,
+        "message": msg,
+        "text": s.raw[idx].strip() if idx < len(s.raw) else "",
+    }
+
+
+def variable_subscripts(line):
+    out = []
+    i = 0
+    n = len(line)
+    while i < n:
+        if line[i] == "[":
+            k = i
+            while k > 0 and line[k - 1].isspace():
+                k -= 1
+            prev = line[k - 1] if k > 0 else ""
+            w = k
+            while w > 0 and is_ident(line[w - 1]):
+                w -= 1
+            word = line[w:k]
+            keyword = word in SUBSCRIPT_KEYWORDS
+            lifetime = w > 0 and line[w - 1] == "'"
+            is_index = (not keyword) and (not lifetime) and (
+                bool(prev) and (is_ident(prev) or prev in ")]")
+            )
+            if is_index:
+                depth = 1
+                j = i + 1
+                while j < n and depth > 0:
+                    if line[j] == "[":
+                        depth += 1
+                    elif line[j] == "]":
+                        depth -= 1
+                    j += 1
+                if depth == 0:
+                    idx = line[i + 1 : j - 1]
+                    literal = bool(idx) and all(
+                        c.isdigit() or c in "._" or c.isspace() for c in idx
+                    )
+                    if not literal and idx.strip():
+                        out.append(idx.strip())
+                    i = j
+                    continue
+        i += 1
+    return out
+
+
+def r1(file, s):
+    out = []
+    if not any(file.endswith(sc) for sc in R1_SCOPE):
+        return out
+    for i, line in enumerate(s.lines):
+        if s.in_test[i]:
+            continue
+        for tok in R1_TOKENS:
+            if tok in line:
+                out.append(finding(
+                    "R1", file, i,
+                    f"panic path `{tok}` in availability-critical file",
+                    s))
+        for idx in variable_subscripts(line):
+            out.append(finding(
+                "R1", file, i,
+                f"variable-index subscript `[{idx}]` can panic; use .get()",
+                s))
+    return out
+
+
+R2_SCOPE = ["src/stream/", "src/coordinator/"]
+R2_BARRIERS = [
+    ".absorb(", "absorb_one(", ".repair(", "repair_in_place(",
+    ".send(", ".recv()", ".submit(", ".fit(", ".join()",
+    "write_atomic(", ".adopt(", "snapshot_all(",
+]
+
+
+def guard_binding(stmt):
+    ends = [".lock();", ".read();", ".write();"]
+    acquire = any(
+        stmt.endswith(t) or stmt.endswith(t[:-1] + ".unwrap();") for t in ends
+    )
+    if not acquire:
+        return None
+    if not stmt.startswith("let "):
+        return None
+    rest = stmt[4:]
+    if rest.startswith("mut "):
+        rest = rest[4:]
+    name = ""
+    for c in rest:
+        if is_ident(c):
+            name += c
+        else:
+            break
+    if not name or name == "_":
+        return None
+    return name
+
+
+def r2(file, s):
+    out = []
+    if not any(d in file for d in R2_SCOPE) or "src/sync/" in file:
+        return out
+    depth = 0
+    guards = []  # (name, depth at binding)
+    pending = ""
+    for i, line in enumerate(s.lines):
+        if s.in_test[i]:
+            continue
+        if guards:
+            for tok in R2_BARRIERS:
+                if tok in line:
+                    held = ", ".join(n for n, _ in guards)
+                    out.append(finding(
+                        "R2", file, i,
+                        f"barrier `{tok}` while lock guard(s) [{held}] are live",
+                        s))
+        for c in line:
+            if c == "{":
+                depth += 1
+            elif c == "}":
+                depth -= 1
+                guards = [(n, d) for n, d in guards if d <= depth]
+        guards = [
+            (n, d) for n, d in guards
+            if f"drop({n})" not in line
+        ]
+        t = line.strip()
+        if not pending and t.startswith("let "):
+            pending = t
+        elif pending:
+            pending += " " + t
+        if pending:
+            if pending.endswith(";"):
+                name = guard_binding(pending)
+                if name:
+                    guards.append((name, depth))
+                pending = ""
+            elif "{" in pending:
+                pending = ""
+    return out
+
+
+R3_ALLOC = [
+    "Vec::new(", "Vec::with_capacity(", "vec![", ".to_vec(", ".clone(",
+    ".collect()", ".collect::<", "String::new(", "format!(", ".to_string(", "Box::new(",
+]
+R3_CONFIGS = [
+    {
+        "suffix": "stream/incremental.rs",
+        "hot": ["bump_alpha", "bump_abar", "distribute", "collect", "seed",
+                "replace_slot", "grow_add", "margin_of_slot",
+                "recompute_margins", "repair", "score"],
+        "warm": ["push", "forget"],
+    },
+    {
+        "suffix": "solver/smo.rs",
+        "hot": ["select_partner_second_order", "select_partner"],
+        "warm": ["solve_from"],
+    },
+]
+
+
+def fn_body(s, name):
+    pat = f"fn {name}"
+    for i, line in enumerate(s.lines):
+        if s.in_test[i]:
+            continue
+        p = line.find(pat)
+        if p < 0:
+            continue
+        after = line[p + len(pat): p + len(pat) + 1]
+        if after not in ("(", "<"):
+            continue
+        depth = 0
+        started = False
+        j = i
+        while j < len(s.lines):
+            for c in s.lines[j]:
+                if c == "{":
+                    depth += 1
+                    started = True
+                elif c == "}":
+                    depth -= 1
+            if started and depth <= 0:
+                return (i, j)
+            j += 1
+        return None
+    return None
+
+
+def allocs_in_loops(body):
+    out = []
+    stack = []
+    pending_loop = False
+    for i, line in enumerate(body):
+        header_ok = "impl " not in line
+        word = ""
+        for c in line + "\n":
+            if is_ident(c):
+                word += c
+                continue
+            if header_ok and word in ("for", "while", "loop"):
+                pending_loop = True
+            word = ""
+            if c == "{":
+                stack.append(pending_loop)
+                pending_loop = False
+            elif c == "}":
+                if stack:
+                    stack.pop()
+            elif c == ";":
+                pending_loop = False
+        if any(stack):
+            for tok in R3_ALLOC:
+                if tok in line:
+                    out.append((i, tok))
+    return out
+
+
+def r3(file, s):
+    out = []
+    cfg = next((c for c in R3_CONFIGS if file.endswith(c["suffix"])), None)
+    if cfg is None:
+        return out
+
+    def missing(name):
+        return {
+            "rule": "R3", "file": file, "line": 1,
+            "message": (f"configured fn `{name}` not found — update "
+                        "R3_CONFIGS (silently skipping it would disable "
+                        "the rule)"),
+            "text": "",
+        }
+
+    for name in cfg["hot"]:
+        span = fn_body(s, name)
+        if span is None:
+            out.append(missing(name))
+            continue
+        start, end = span
+        for i in range(start, end + 1):
+            for tok in R3_ALLOC:
+                if tok in s.lines[i]:
+                    out.append(finding(
+                        "R3", file, i,
+                        f"allocation `{tok}` in hot fn `{name}`", s))
+    for name in cfg["warm"]:
+        span = fn_body(s, name)
+        if span is None:
+            out.append(missing(name))
+            continue
+        start, end = span
+        for i, tok in allocs_in_loops(s.lines[start:end + 1]):
+            out.append(finding(
+                "R3", file, start + i,
+                f"allocation `{tok}` inside a loop of warm fn `{name}`",
+                s))
+    return out
+
+
+def service_stats_fields(s):
+    out = []
+    start = next((i for i, l in enumerate(s.lines)
+                  if "pub struct ServiceStats" in l), None)
+    if start is None:
+        return out
+    depth = 0
+    started = False
+    for i in range(start, len(s.lines)):
+        line = s.lines[i]
+        if started and depth > 0:
+            t = line.strip()
+            if t.startswith("pub "):
+                rest = t[4:]
+                colon = rest.find(":")
+                if colon > 0:
+                    name = rest[:colon].strip()
+                    if name and all(is_ident(c) for c in name):
+                        out.append((name, i))
+        for c in line:
+            if c == "{":
+                depth += 1
+                started = True
+            elif c == "}":
+                depth -= 1
+        if started and depth <= 0:
+            break
+    return out
+
+
+def r4(stats_file, stats, sources, surface_extra):
+    out = []
+    fields = service_stats_fields(stats)
+    surface = ""
+    for name in ("summary", "stream_summary"):
+        span = fn_body(stats, name)
+        if span:
+            surface += "\n".join(stats.lines[span[0]:span[1] + 1]) + "\n"
+    surface += surface_extra
+    for field, line_idx in fields:
+        inc_pats = [f".{field}.inc(", f".{field}.add(", f".{field}.record"]
+        incremented = any(
+            any(p in l for p in inc_pats)
+            for _, s in sources
+            for i, l in enumerate(s.lines)
+            if not s.in_test[i]
+        )
+        if not incremented:
+            out.append(finding(
+                "R4", stats_file, line_idx,
+                f"ServiceStats field `{field}` is never incremented",
+                stats))
+        shown = f"self.{field}" in surface or f".{field}." in surface
+        if not shown:
+            out.append(finding(
+                "R4", stats_file, line_idx,
+                f"ServiceStats field `{field}` is not surfaced by "
+                "summary()/stream_summary()/CLI",
+                stats))
+    return out
+
+
+BRACKET = re.compile(r"\[\[([A-Za-z0-9_-]+)\]\]")
+SECTION = re.compile(r"§([A-Za-z0-9.]+)")
+
+
+def design_headings(design):
+    out = []
+    for line in design.split("\n"):
+        t = line.lstrip()
+        if t.startswith("### "):
+            rest = t[4:]
+        elif t.startswith("## "):
+            rest = t[3:]
+        else:
+            continue
+        first = rest.split()[0] if rest.split() else ""
+        out.append(first.rstrip("."))
+    return out
+
+
+def design_definitions(design):
+    out = []
+    for line in design.split("\n"):
+        t = line.lstrip().lstrip("*- ")
+        m = BRACKET.match(t)
+        if m:
+            out.append(m.group(1))
+    return out
+
+
+def heading_matches(heading, ref):
+    return heading == ref or heading.startswith(ref + ".")
+
+
+def r5(design, rs_sources):
+    out = []
+    headings = design_headings(design)
+    defs = design_definitions(design)
+
+    def check_line(file, idx, line, comment_only):
+        scan = line
+        if comment_only:
+            p = line.find("//")
+            if p < 0:
+                return
+            scan = line[p:]
+        if "DESIGN" in scan:
+            for m in SECTION.finditer(scan):
+                ref = m.group(1).rstrip(".")
+                if ref and not any(heading_matches(h, ref) for h in headings):
+                    out.append({
+                        "rule": "R5", "file": file, "line": idx + 1,
+                        "message": f"§{ref} does not match any DESIGN.md heading",
+                        "text": line.strip(),
+                    })
+        for m in BRACKET.finditer(scan):
+            sym = m.group(1)
+            is_def = (not comment_only) and scan.lstrip().startswith(f"[[{sym}]]")
+            if not is_def and sym not in defs:
+                out.append({
+                    "rule": "R5", "file": file, "line": idx + 1,
+                    "message": f"[[{sym}]] has no definition line in DESIGN.md",
+                    "text": line.strip(),
+                })
+
+    for i, line in enumerate(design.split("\n")):
+        check_line("DESIGN.md", i, line, False)
+    for path, src in rs_sources:
+        for i, line in enumerate(src.split("\n")):
+            check_line(path, i, line, True)
+    return out
+
+
+# --------------------------------------------------------- allowlist
+
+def parse_allow(text):
+    out = []
+    for i, raw in enumerate(text.split("\n")):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = [p.strip() for p in line.split("|", 3)]
+        if len(parts) != 4 or any(not p for p in parts):
+            raise SystemExit(
+                f"slablint.allow:{i + 1}: want "
+                f"`RULE | file | pattern | justification`, got `{line}`")
+        out.append({
+            "rule": parts[0], "file": parts[1], "pattern": parts[2],
+            "justification": parts[3], "line": i + 1,
+        })
+    return out
+
+
+def apply_allow(findings, entries):
+    used = [False] * len(entries)
+    open_findings = []
+    for f in findings:
+        hit = next(
+            (k for k, e in enumerate(entries)
+             if e["rule"] == f["rule"] and f["file"].endswith(e["file"])
+             and e["pattern"] in f["text"]),
+            None)
+        if hit is None:
+            open_findings.append(f)
+        else:
+            used[hit] = True
+    stale = [k for k, u in enumerate(used) if not u]
+    return open_findings, stale
+
+
+
+# ------------------------------------------------ fixture assertions
+
+DESIGN_FIXTURE = """\
+## 1. System inventory
+
+### 1.1 Errata
+
+[[R1]] Panic-freedom on availability-critical paths.
+"""
+
+
+def run_fixtures():
+    """Mirror of tools/slablint/tests/rules.rs — same fixtures, same
+    expected counts, runnable without cargo."""
+    fdir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "tests", "fixtures")
+
+    def load(name):
+        with open(os.path.join(fdir, name), encoding="utf-8") as fh:
+            return fh.read()
+
+    failures = []
+
+    def check(label, got, want):
+        if got != want:
+            failures.append(f"{label}: want {want} finding(s), got {got}")
+
+    f = r1("rust/src/stream/shard.rs", Stripped(load("r1_bad.rs")))
+    check("r1_bad", len(f), 4)
+    f = r1("rust/src/stream/shard.rs", Stripped(load("r1_ok.rs")))
+    check("r1_ok", len(f), 0)
+    f = r1("rust/src/solver/smo.rs", Stripped(load("r1_bad.rs")))
+    check("r1 out-of-scope", len(f), 0)
+
+    f = r2("rust/src/stream/fixture.rs", Stripped(load("r2_bad.rs")))
+    check("r2_bad", len(f), 3)
+    f = r2("rust/src/stream/fixture.rs", Stripped(load("r2_ok.rs")))
+    check("r2_ok", len(f), 0)
+
+    f = r3("rust/src/stream/incremental.rs", Stripped(load("r3_bad.rs")))
+    check("r3_bad", len(f), 3)
+    f = r3("rust/src/stream/incremental.rs", Stripped(load("r3_ok.rs")))
+    check("r3_ok", len(f), 0)
+    f = r3("rust/src/stream/incremental.rs", Stripped("fn unrelated() {}\n"))
+    if not any("not found" in x["message"] for x in f):
+        failures.append("r3 config drift not reported")
+
+    src4 = load("r4_bad.rs")
+    f = r4("r4_bad.rs", Stripped(src4), [("r4_bad.rs", Stripped(src4))], "")
+    check("r4_bad", len(f), 3)
+    src4 = load("r4_ok.rs")
+    f = r4("r4_ok.rs", Stripped(src4), [("r4_ok.rs", Stripped(src4))], "")
+    check("r4_ok", len(f), 0)
+
+    f = r5(DESIGN_FIXTURE, [("r5_bad.rs", load("r5_bad.rs"))])
+    check("r5_bad", len(f), 2)
+    f = r5(DESIGN_FIXTURE, [("r5_ok.rs", load("r5_ok.rs"))])
+    check("r5_ok", len(f), 0)
+
+    for msg in failures:
+        print(f"FIXTURE {msg}")
+    print(f"slablint(selfcheck): {len(failures)} fixture failure(s)")
+    return 0 if not failures else 1
+
+# -------------------------------------------------------------- main
+
+def main():
+    if "--fixtures" in sys.argv:
+        return run_fixtures()
+    root = sys.argv[sys.argv.index("--root") + 1] if "--root" in sys.argv else None
+    if root is None:
+        d = os.path.abspath(os.path.dirname(__file__))
+        while d != "/":
+            if (os.path.isfile(os.path.join(d, "DESIGN.md"))
+                    and os.path.isdir(os.path.join(d, "rust/src"))):
+                root = d
+                break
+            d = os.path.dirname(d)
+    if root is None:
+        print("selfcheck: cannot locate repo root", file=sys.stderr)
+        return 2
+
+    files = []
+    for dirpath, _, names in os.walk(os.path.join(root, "rust/src")):
+        for n in names:
+            if n.endswith(".rs"):
+                files.append(os.path.join(dirpath, n))
+    files.sort()
+
+    sources = []
+    for path in files:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as fh:
+            raw = fh.read()
+        sources.append((rel, raw, Stripped(raw)))
+    with open(os.path.join(root, "DESIGN.md"), encoding="utf-8") as fh:
+        design = fh.read()
+
+    findings = []
+    for rel, _, s in sources:
+        findings += r1(rel, s)
+        findings += r2(rel, s)
+        findings += r3(rel, s)
+    stats_entry = next(
+        ((rel, s) for rel, _, s in sources
+         if rel.endswith("coordinator/stats.rs")), None)
+    if stats_entry:
+        surface_extra = next(
+            ("\n".join(s.lines) for rel, _, s in sources
+             if rel.endswith("src/main.rs")), "")
+        pairs = [(rel, s) for rel, _, s in sources]
+        findings += r4(stats_entry[0], stats_entry[1], pairs, surface_extra)
+    else:
+        findings.append({"rule": "R4", "file": "rust/src/coordinator/stats.rs",
+                         "line": 1, "message": "stats.rs not found", "text": ""})
+    findings += r5(design, [(rel, raw) for rel, raw, _ in sources])
+
+    allow_path = os.path.join(root, "tools/slablint/slablint.allow")
+    allow_text = ""
+    if os.path.isfile(allow_path):
+        with open(allow_path, encoding="utf-8") as fh:
+            allow_text = fh.read()
+    entries = parse_allow(allow_text)
+    open_findings, stale = apply_allow(findings, entries)
+
+    for f in open_findings:
+        print(f"{f['rule']} {f['file']}:{f['line']} {f['message']}")
+        if f["text"]:
+            print(f"    {f['text']}")
+    for k in stale:
+        e = entries[k]
+        print(f"STALE slablint.allow:{e['line']} "
+              f"`{e['rule']} | {e['file']} | {e['pattern']}` matched nothing "
+              "— delete it")
+    print(f"slablint(selfcheck): {len(sources)} file(s), "
+          f"{len(open_findings)} finding(s) open, "
+          f"{len(findings) - len(open_findings)} suppressed, "
+          f"{len(stale)} stale allowlist entr(ies)")
+    return 0 if not open_findings and not stale else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,109 @@
+//! The committed allowlist: `slablint.allow`, one entry per line,
+//!
+//! ```text
+//! RULE | path-suffix | line-substring | justification
+//! ```
+//!
+//! `#`-comments and blank lines are skipped. An entry suppresses every
+//! finding of `RULE` in a file ending with `path-suffix` whose source
+//! line contains `line-substring`. Two failure modes are both errors:
+//! a finding with no entry (new violation) and an entry that matched
+//! nothing (stale — the violation was fixed, delete the entry). The
+//! stale check is what keeps the allowlist a burn-down list instead of
+//! a landfill.
+
+use crate::rules::Finding;
+
+#[derive(Debug)]
+pub struct Entry {
+    pub rule: String,
+    pub file: String,
+    pub pattern: String,
+    pub justification: String,
+    pub line: usize, // line in slablint.allow, for stale reporting
+}
+
+pub fn parse(text: &str) -> Result<Vec<Entry>, String> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.splitn(4, '|').map(str::trim).collect();
+        if parts.len() != 4 || parts.iter().any(|p| p.is_empty()) {
+            return Err(format!(
+                "slablint.allow:{}: want `RULE | file | pattern | justification`, \
+                 got `{line}`",
+                i + 1
+            ));
+        }
+        out.push(Entry {
+            rule: parts[0].to_string(),
+            file: parts[1].to_string(),
+            pattern: parts[2].to_string(),
+            justification: parts[3].to_string(),
+            line: i + 1,
+        });
+    }
+    Ok(out)
+}
+
+/// Split findings into (unsuppressed, stale entry indices).
+pub fn apply<'a>(
+    findings: &'a [Finding],
+    entries: &[Entry],
+) -> (Vec<&'a Finding>, Vec<usize>) {
+    let mut used = vec![false; entries.len()];
+    let mut open = Vec::new();
+    for f in findings {
+        let hit = entries.iter().position(|e| {
+            e.rule == f.rule && f.file.ends_with(&e.file) && f.text.contains(&e.pattern)
+        });
+        match hit {
+            Some(idx) => used[idx] = true,
+            None => open.push(f),
+        }
+    }
+    let stale = (0..entries.len()).filter(|&i| !used[i]).collect();
+    (open, stale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::Finding;
+
+    fn f(rule: &'static str, file: &str, text: &str) -> Finding {
+        Finding {
+            rule,
+            file: file.into(),
+            line: 1,
+            message: String::new(),
+            text: text.into(),
+        }
+    }
+
+    #[test]
+    fn parse_match_and_stale() {
+        let entries = parse(
+            "# comment\n\
+             R1 | stream/manager.rs | spawn shard worker | startup-only\n\
+             R3 | solver/smo.rs | gone.pattern | stale entry\n",
+        )
+        .unwrap();
+        assert_eq!(entries.len(), 2);
+        let findings = vec![
+            f("R1", "rust/src/stream/manager.rs", ".expect(\"spawn shard worker\")"),
+            f("R1", "rust/src/stream/manager.rs", "x[i]"),
+        ];
+        let (open, stale) = apply(&findings, &entries);
+        assert_eq!(open.len(), 1, "unmatched finding must stay open");
+        assert_eq!(stale, vec![1], "unused entry must be reported stale");
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(parse("R1 | only | three").is_err());
+    }
+}

@@ -1,0 +1,300 @@
+//! Comment- and string-aware stripping of Rust source.
+//!
+//! The rule engine works on *stripped* lines: comments are blanked and
+//! string/char literal contents are replaced by spaces, while every
+//! newline is preserved so findings report real line numbers. This is
+//! a lexer, not a parser — it only needs to know what is code and what
+//! is not, which is exactly the fidelity the lexical rules require.
+
+/// A stripped source file: `lines[i]` is line `i+1` with comments and
+/// literal contents blanked; `in_test[i]` marks lines inside a
+/// `#[cfg(test)] mod … { … }` region.
+pub struct Stripped {
+    pub lines: Vec<String>,
+    pub in_test: Vec<bool>,
+    /// original lines — findings report these (and the allowlist
+    /// matches against them, so patterns can cite string contents)
+    pub raw: Vec<String>,
+}
+
+impl Stripped {
+    pub fn new(source: &str) -> Stripped {
+        let lines = strip(source);
+        let in_test = test_mod_lines(&lines);
+        let raw = source.lines().map(str::to_string).collect();
+        Stripped { lines, in_test, raw }
+    }
+}
+
+#[derive(PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    Char,
+}
+
+/// Blank comments and literal contents, preserving line structure and
+/// the quote characters themselves (so `"` still delimits a literal in
+/// the output, but its contents can never trip a token match).
+pub fn strip(source: &str) -> Vec<String> {
+    let b: Vec<char> = source.chars().collect();
+    let mut out = String::with_capacity(source.len());
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        let next = b.get(i + 1).copied();
+        match state {
+            State::Code => {
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    out.push('"');
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && is_raw_start(&b, i) {
+                    // r"…", r#"…"#, br"…", b"…" — count hashes
+                    let mut j = i + 1;
+                    if c == 'b' && b.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while b.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if b.get(j) == Some(&'"') {
+                        for _ in i..=j {
+                            out.push(' ');
+                        }
+                        out.pop();
+                        out.push('"');
+                        state = if c == 'b' && b[i + 1] != 'r' && hashes == 0 {
+                            State::Str // b"…" plain byte string
+                        } else {
+                            State::RawStr(hashes)
+                        };
+                        i = j + 1;
+                    } else {
+                        out.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' && is_char_literal(&b, i) {
+                    state = State::Char;
+                    out.push('\'');
+                    i += 1;
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                if c == '\n' {
+                    state = State::Code;
+                    out.push('\n');
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(if c == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // keep line structure across "…\<newline>…" continuations
+                    out.push(' ');
+                    out.push(if next == Some('\n') { '\n' } else { ' ' });
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Code;
+                    out.push('"');
+                    i += 1;
+                } else {
+                    out.push(if c == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && raw_terminates(&b, i, hashes) {
+                    out.push('"');
+                    for _ in 0..hashes {
+                        out.push(' ');
+                    }
+                    state = State::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    out.push(if c == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            State::Char => {
+                if c == '\\' {
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '\'' {
+                    state = State::Code;
+                    out.push('\'');
+                    i += 1;
+                } else {
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.lines().map(str::to_string).collect()
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// `r` / `b` starts a raw/byte string only when it is not the tail of
+/// an identifier (`for r in …` vs `writer`).
+fn is_raw_start(b: &[char], i: usize) -> bool {
+    if i > 0 && is_ident(b[i - 1]) {
+        return false;
+    }
+    let mut j = i + 1;
+    if b[i] == 'b' {
+        if b.get(j) == Some(&'\'') {
+            return false; // byte char b'…' — handled as Char? keep simple
+        }
+        if b.get(j) == Some(&'r') {
+            j += 1;
+        } else if b.get(j) != Some(&'"') && b.get(j) != Some(&'#') {
+            return false;
+        }
+    }
+    while b.get(j) == Some(&'#') {
+        j += 1;
+    }
+    b.get(j) == Some(&'"')
+}
+
+fn raw_terminates(b: &[char], i: usize, hashes: u32) -> bool {
+    for k in 0..hashes as usize {
+        if b.get(i + 1 + k) != Some(&'#') {
+            return false;
+        }
+    }
+    true
+}
+
+/// `'` starts a char literal (vs a lifetime like `'a` or `'static`).
+/// A lifetime is `'` + ident with no closing quote right after.
+fn is_char_literal(b: &[char], i: usize) -> bool {
+    match b.get(i + 1) {
+        Some('\\') => true,
+        Some(&c) if is_ident(c) => b.get(i + 2) == Some(&'\''),
+        Some(_) => true, // '(' etc — punctuation char literal
+        None => false,
+    }
+}
+
+/// Mark lines belonging to `#[cfg(test)] mod … { … }` regions so the
+/// per-path rules skip test code (tests may unwrap freely).
+pub fn test_mod_lines(lines: &[String]) -> Vec<bool> {
+    let n = lines.len();
+    let mut in_test = vec![false; n];
+    let mut i = 0;
+    while i < n {
+        if lines[i].trim_start().starts_with("#[cfg(test)]") {
+            let mut j = i + 1;
+            while j < n
+                && (lines[j].trim().is_empty()
+                    || lines[j].trim_start().starts_with("#["))
+            {
+                j += 1;
+            }
+            if j < n && lines[j].trim_start().starts_with("mod ") {
+                let mut depth = 0i32;
+                let mut started = false;
+                let mut k = j;
+                while k < n {
+                    for c in lines[k].chars() {
+                        if c == '{' {
+                            depth += 1;
+                            started = true;
+                        } else if c == '}' {
+                            depth -= 1;
+                        }
+                    }
+                    in_test[k] = true;
+                    if started && depth <= 0 {
+                        break;
+                    }
+                    k += 1;
+                }
+                in_test[i] = true;
+                i = k + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    in_test
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_blank() {
+        let src = "let a = \"x.unwrap()\"; // .unwrap()\nlet b = 1;";
+        let lines = strip(src);
+        assert!(!lines[0].contains("unwrap"), "{}", lines[0]);
+        assert_eq!(lines[1], "let b = 1;");
+    }
+
+    #[test]
+    fn raw_strings_blank() {
+        let src = "let a = r#\"panic!(\"x\")\"#; let c = 2;";
+        let lines = strip(src);
+        assert!(!lines[0].contains("panic"), "{}", lines[0]);
+        assert!(lines[0].contains("let c = 2;"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x } // 'a\nlet y = 'c';";
+        let lines = strip(src);
+        assert!(lines[0].contains("fn f<'a>"));
+        assert!(!lines[1].contains('c'), "{}", lines[1]);
+    }
+
+    #[test]
+    fn test_mod_marked() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n  fn b() {}\n}\nfn c() {}";
+        let s = Stripped::new(src);
+        assert_eq!(s.in_test, vec![false, true, true, true, true, false]);
+    }
+}

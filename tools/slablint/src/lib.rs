@@ -1,0 +1,8 @@
+//! Library surface of slablint so the integration-test suite (and the
+//! fixture runner in `tests/rules.rs`) can drive the lexer and rule
+//! engine directly. The binary in `main.rs` is a thin walker over
+//! these modules.
+
+pub mod allowlist;
+pub mod lexer;
+pub mod rules;

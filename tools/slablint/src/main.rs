@@ -1,0 +1,171 @@
+//! slablint — repo-native static analysis for the slabsvm serving
+//! stack.
+//!
+//! Walks `rust/src`, runs the five lexical rules from [`rules`]
+//! (panic-freedom, lock-across-barrier, hot-loop allocation, counter
+//! completeness, doc cross-references), filters through the committed
+//! `tools/slablint/slablint.allow`, and exits non-zero on any
+//! unsuppressed finding or stale allowlist entry. The dynamic
+//! counterpart of R2 lives in `slabsvm::sync` behind the `lock-audit`
+//! feature; rule text and policy live in DESIGN.md §7.
+//!
+//! Usage: `cargo run -p slablint [-- --root <repo-root>]`
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use slablint::allowlist;
+use slablint::lexer::Stripped;
+use slablint::rules::{self, Finding};
+
+fn main() -> ExitCode {
+    let root = match repo_root() {
+        Some(r) => r,
+        None => {
+            eprintln!(
+                "slablint: cannot locate repo root (want DESIGN.md + rust/src); \
+                 pass --root <path>"
+            );
+            return ExitCode::from(2);
+        }
+    };
+    match run(&root) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("slablint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn repo_root() -> Option<PathBuf> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--root" {
+            return args.next().map(PathBuf::from);
+        }
+    }
+    // walk up from the cwd, then from the crate dir (cargo run sets
+    // cwd to the workspace root already, but be robust to both)
+    let starts = [
+        std::env::current_dir().ok(),
+        Some(PathBuf::from(env!("CARGO_MANIFEST_DIR"))),
+    ];
+    for start in starts.into_iter().flatten() {
+        let mut dir = start.as_path();
+        loop {
+            if dir.join("DESIGN.md").is_file() && dir.join("rust/src").is_dir() {
+                return Some(dir.to_path_buf());
+            }
+            match dir.parent() {
+                Some(p) => dir = p,
+                None => break,
+            }
+        }
+    }
+    None
+}
+
+fn run(root: &Path) -> Result<bool, String> {
+    let src_root = root.join("rust/src");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+    files.sort();
+
+    // (repo-relative path with /, raw source, stripped)
+    let mut sources: Vec<(String, String, Stripped)> = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let raw = fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let stripped = Stripped::new(&raw);
+        sources.push((rel, raw, stripped));
+    }
+    let design = fs::read_to_string(root.join("DESIGN.md"))
+        .map_err(|e| format!("read DESIGN.md: {e}"))?;
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for (rel, _, s) in &sources {
+        findings.extend(rules::r1(rel, s));
+        findings.extend(rules::r2(rel, s));
+        findings.extend(rules::r3(rel, s));
+    }
+    if let Some((rel, _, stats)) =
+        sources.iter().find(|(r, _, _)| r.ends_with("coordinator/stats.rs"))
+    {
+        // stripped, so a counter named only in a CLI comment does not
+        // count as "surfaced"
+        let surface_extra = sources
+            .iter()
+            .find(|(r, _, _)| r.ends_with("src/main.rs"))
+            .map(|(_, _, s)| s.lines.join("\n"))
+            .unwrap_or_default();
+        let pairs: Vec<(String, Stripped)> = sources
+            .iter()
+            .map(|(r, raw, _)| (r.clone(), Stripped::new(raw)))
+            .collect();
+        findings.extend(rules::r4(rel, stats, &pairs, &surface_extra));
+    } else {
+        findings.push(Finding {
+            rule: "R4",
+            file: "rust/src/coordinator/stats.rs".into(),
+            line: 1,
+            message: "stats.rs not found — R4 cannot run".into(),
+            text: String::new(),
+        });
+    }
+    let raw_pairs: Vec<(String, String)> = sources
+        .iter()
+        .map(|(r, raw, _)| (r.clone(), raw.clone()))
+        .collect();
+    findings.extend(rules::r5(&design, &raw_pairs));
+
+    let allow_path = root.join("tools/slablint/slablint.allow");
+    let allow_text = fs::read_to_string(&allow_path).unwrap_or_default();
+    let entries = allowlist::parse(&allow_text)?;
+
+    let (open, stale) = allowlist::apply(&findings, &entries);
+    for f in &open {
+        println!("{} {}:{} {}", f.rule, f.file, f.line, f.message);
+        if !f.text.is_empty() {
+            println!("    {}", f.text);
+        }
+    }
+    for &i in &stale {
+        let e = &entries[i];
+        println!(
+            "STALE slablint.allow:{} `{} | {} | {}` matched nothing — delete it",
+            e.line, e.rule, e.file, e.pattern
+        );
+    }
+    let suppressed = findings.len() - open.len();
+    println!(
+        "slablint: {} file(s), {} finding(s) open, {} suppressed, {} stale \
+         allowlist entr(ies)",
+        sources.len(),
+        open.len(),
+        suppressed,
+        stale.len()
+    );
+    Ok(open.is_empty() && stale.is_empty())
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in rd {
+        let entry = entry.map_err(|e| e.to_string())?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,749 @@
+//! The five slablint rules.
+//!
+//! Every rule is lexical: it works on [`crate::lexer::Stripped`] lines
+//! (comments and literal contents blanked) so tokens inside strings or
+//! docs never fire. Rules R1–R3 skip `#[cfg(test)] mod` regions —
+//! tests may unwrap and allocate freely.
+//!
+//! The rules are specified, with rationale and the allowlist policy,
+//! in DESIGN.md §7 ("Static & dynamic analysis").
+
+use crate::lexer::Stripped;
+
+/// One lint finding. `text` is the offending source line (raw), used
+/// for allowlist substring matching.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize, // 1-based
+    pub message: String,
+    pub text: String,
+}
+
+fn finding(
+    rule: &'static str,
+    file: &str,
+    idx: usize,
+    msg: String,
+    s: &Stripped,
+) -> Finding {
+    Finding {
+        rule,
+        file: file.to_string(),
+        line: idx + 1,
+        message: msg,
+        text: s.raw.get(idx).map(|l| l.trim().to_string()).unwrap_or_default(),
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+// ---------------------------------------------------------------- R1
+
+/// Files where a panic is an availability bug: shard workers, the
+/// mailbox/manager plane and snapshot decoding. See DESIGN.md §7.
+pub const R1_SCOPE: &[&str] = &[
+    "stream/shard.rs",
+    "stream/manager.rs",
+    "stream/persist.rs",
+    "coordinator/jobs.rs",
+];
+
+const R1_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    ".unwrap_unchecked(",
+];
+
+pub fn in_scope(file: &str, scope: &[&str]) -> bool {
+    scope.iter().any(|s| file.ends_with(s))
+}
+
+/// R1: no `unwrap`/`expect`/`panic!` and no variable-index `[]`
+/// subscripts in the availability-critical paths. Literal subscripts
+/// (`b[0]`, `&x[..8]`) are fine — they cannot depend on untrusted
+/// lengths the way a computed index can.
+pub fn r1(file: &str, s: &Stripped) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !in_scope(file, R1_SCOPE) {
+        return out;
+    }
+    for (i, line) in s.lines.iter().enumerate() {
+        if s.in_test[i] {
+            continue;
+        }
+        for tok in R1_TOKENS {
+            if line.contains(tok) {
+                out.push(finding(
+                    "R1",
+                    file,
+                    i,
+                    format!("panic path `{tok}` in availability-critical file"),
+                    s,
+                ));
+            }
+        }
+        for f in variable_subscripts(line) {
+            out.push(finding(
+                "R1",
+                file,
+                i,
+                format!("variable-index subscript `[{f}]` can panic; use .get()"),
+                s,
+            ));
+        }
+    }
+    out
+}
+
+/// Find `expr[idx]` subscripts on one line whose index is not a pure
+/// numeric/range literal. Returns the index texts. Only same-line
+/// subscripts are detected — rustfmt keeps these on one line.
+fn variable_subscripts(line: &str) -> Vec<String> {
+    let b: Vec<char> = line.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == '[' {
+            // a subscript's `[` follows an identifier char, `)` or `]`;
+            // `&[…]` slices, `vec![…]`, attributes `#[…]` do not, and
+            // neither does a keyword (`&mut [f64]` is a type, not an
+            // index)
+            let mut k = i;
+            while k > 0 && b[k - 1].is_whitespace() {
+                k -= 1;
+            }
+            let prev = if k > 0 { Some(b[k - 1]) } else { None };
+            let mut w = k;
+            while w > 0 && is_ident(b[w - 1]) {
+                w -= 1;
+            }
+            let word: String = b[w..k].iter().collect();
+            let keyword = matches!(
+                word.as_str(),
+                "mut" | "ref" | "dyn" | "in" | "as" | "return" | "else"
+                    | "match" | "if" | "move" | "impl" | "where"
+            );
+            // a lifetime before the bracket (`&'a [u8]`) is a slice
+            // type, not an index expression
+            let lifetime = w > 0 && b[w - 1] == '\'';
+            let is_index = !keyword
+                && !lifetime
+                && matches!(prev, Some(p) if is_ident(p) || p == ')' || p == ']');
+            if is_index {
+                let mut depth = 1;
+                let mut j = i + 1;
+                while j < b.len() && depth > 0 {
+                    match b[j] {
+                        '[' => depth += 1,
+                        ']' => depth -= 1,
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if depth == 0 {
+                    let idx: String = b[i + 1..j - 1].iter().collect();
+                    let literal = !idx.is_empty()
+                        && idx.chars().all(|c| {
+                            c.is_ascii_digit() || c == '.' || c == '_' || c.is_whitespace()
+                        });
+                    let rangeish = idx.trim().is_empty(); // `[..]`? caught by literal dots
+                    if !literal && !rangeish {
+                        out.push(idx.trim().to_string());
+                    }
+                    i = j;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------- R2
+
+/// Directories whose lock guards must never be held across a blocking
+/// barrier (absorb/repair/send/join/…). `src/sync/` is the enforcement
+/// layer itself and is exempt.
+pub const R2_SCOPE: &[&str] = &["src/stream/", "src/coordinator/"];
+
+/// Calls that block, hand work to another thread, or re-enter the
+/// solver. Holding a mutex across any of these is the deadlock /
+/// tail-latency shape the tracked-lock runtime also polices.
+/// `.join()` is exact (thread join takes no args; `Path::join("x")`
+/// does) and `.recv()` is exact (`recv_timeout` is the sanctioned
+/// bounded wait in the batcher).
+const R2_BARRIERS: &[&str] = &[
+    ".absorb(",
+    "absorb_one(",
+    ".repair(",
+    "repair_in_place(",
+    ".send(",
+    ".recv()",
+    ".submit(",
+    ".fit(",
+    ".join()",
+    "write_atomic(",
+    ".adopt(",
+    "snapshot_all(",
+];
+
+/// R2: a `let`-bound lock guard must not be live at a line containing
+/// a barrier call. A guard dies when its enclosing block closes or at
+/// an explicit `drop(guard)`.
+pub fn r2(file: &str, s: &Stripped) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !R2_SCOPE.iter().any(|d| file.contains(d)) || file.contains("src/sync/") {
+        return out;
+    }
+    let mut depth = 0i32;
+    // (name, depth at binding): dies when depth < binding depth
+    let mut guards: Vec<(String, i32)> = Vec::new();
+    let mut pending = String::new(); // multi-line let statement
+    for (i, line) in s.lines.iter().enumerate() {
+        if s.in_test[i] {
+            continue;
+        }
+        // barrier check first: a guard bound on an earlier line is
+        // live here regardless of what this line opens or closes
+        if !guards.is_empty() {
+            for tok in R2_BARRIERS {
+                if line.contains(tok) {
+                    let held: Vec<&str> =
+                        guards.iter().map(|(n, _)| n.as_str()).collect();
+                    out.push(finding(
+                        "R2",
+                        file,
+                        i,
+                        format!(
+                            "barrier `{tok}` while lock guard(s) [{}] are live",
+                            held.join(", ")
+                        ),
+                        s,
+                    ));
+                }
+            }
+        }
+        for c in line.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    guards.retain(|(_, d)| *d <= depth);
+                }
+                _ => {}
+            }
+        }
+        // explicit drop releases a guard early
+        for g in std::mem::take(&mut guards) {
+            let dropped = line.contains(&format!("drop({})", g.0))
+                || line.contains(&format!("drop({});", g.0));
+            if !dropped {
+                guards.push(g);
+            }
+        }
+        // statement accumulation for `let` bindings
+        let t = line.trim();
+        if pending.is_empty() && t.starts_with("let ") {
+            pending = t.to_string();
+        } else if !pending.is_empty() {
+            pending.push(' ');
+            pending.push_str(t);
+        }
+        if !pending.is_empty() {
+            if pending.ends_with(';') {
+                if let Some(name) = guard_binding(&pending) {
+                    guards.push((name, depth));
+                }
+                pending.clear();
+            } else if pending.contains('{') {
+                // `let x = { … }` block initializer — not a guard chain
+                pending.clear();
+            }
+        }
+    }
+    out
+}
+
+/// Does this single `let` statement bind a lock guard? The acquiring
+/// call must be the statement's final call so temporaries
+/// (`x.lock().take();`) do not count.
+fn guard_binding(stmt: &str) -> Option<String> {
+    let acquire = [".lock();", ".read();", ".write();"].iter().any(|t| {
+        stmt.ends_with(t) || stmt.ends_with(&t.replace(';', ".unwrap();"))
+    });
+    if !acquire {
+        return None;
+    }
+    let rest = stmt.strip_prefix("let ")?;
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let name: String = rest.chars().take_while(|c| is_ident(*c)).collect();
+    if name.is_empty() || name == "_" {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+// ---------------------------------------------------------------- R3
+
+/// Allocation-shaped tokens. `.push(` is deliberately absent: pushes
+/// into pre-grown vectors are amortized O(1) and the window buffers
+/// rely on them.
+const R3_ALLOC: &[&str] = &[
+    "Vec::new(",
+    "Vec::with_capacity(",
+    "vec![",
+    ".to_vec(",
+    ".clone(",
+    // Iterator::collect is nullary (or turbofished); `.collect(` alone
+    // would also hit the solver's own `collect(…)` redistribution
+    // helper, which moves mass without allocating
+    ".collect()",
+    ".collect::<",
+    "String::new(",
+    "format!(",
+    ".to_string(",
+    "Box::new(",
+];
+
+/// Per-file R3 configuration: `hot` functions may not contain an
+/// allocation token anywhere; `warm` functions may allocate only
+/// outside loop bodies (set-up allocs are fine, per-iteration are
+/// not).
+pub struct R3Config {
+    pub suffix: &'static str,
+    pub hot: &'static [&'static str],
+    pub warm: &'static [&'static str],
+}
+
+pub const R3_CONFIGS: &[R3Config] = &[
+    R3Config {
+        suffix: "stream/incremental.rs",
+        hot: &[
+            "bump_alpha",
+            "bump_abar",
+            "distribute",
+            "collect",
+            "seed",
+            "replace_slot",
+            "grow_add",
+            "margin_of_slot",
+            "recompute_margins",
+            "repair",
+            "score",
+        ],
+        warm: &["push", "forget"],
+    },
+    R3Config {
+        suffix: "solver/smo.rs",
+        hot: &["select_partner_second_order", "select_partner"],
+        warm: &["solve_from"],
+    },
+];
+
+/// R3: no allocation in per-absorb hot loops. See [`R3_CONFIGS`].
+pub fn r3(file: &str, s: &Stripped) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(cfg) = R3_CONFIGS.iter().find(|c| file.ends_with(c.suffix)) else {
+        return out;
+    };
+    let missing = |name: &str| Finding {
+        rule: "R3",
+        file: file.to_string(),
+        line: 1,
+        message: format!(
+            "configured fn `{name}` not found — update R3_CONFIGS \
+             (silently skipping it would disable the rule)"
+        ),
+        text: String::new(),
+    };
+    for &name in cfg.hot {
+        let Some((start, end)) = fn_body(s, name) else {
+            out.push(missing(name));
+            continue;
+        };
+        for (i, line) in s.lines.iter().enumerate().take(end + 1).skip(start) {
+            for tok in R3_ALLOC {
+                if line.contains(tok) {
+                    out.push(finding(
+                        "R3",
+                        file,
+                        i,
+                        format!("allocation `{tok}` in hot fn `{name}`"),
+                        s,
+                    ));
+                }
+            }
+        }
+    }
+    for &name in cfg.warm {
+        let Some((start, end)) = fn_body(s, name) else {
+            out.push(missing(name));
+            continue;
+        };
+        for (i, tok) in allocs_in_loops(&s.lines[start..=end]) {
+            out.push(finding(
+                "R3",
+                file,
+                start + i,
+                format!("allocation `{tok}` inside a loop of warm fn `{name}`"),
+                s,
+            ));
+        }
+    }
+    out
+}
+
+/// Locate `fn name(…) { … }`: returns (first body line, last body
+/// line) inclusive, 0-based. Skips `#[cfg(test)]` regions.
+fn fn_body(s: &Stripped, name: &str) -> Option<(usize, usize)> {
+    let pat = format!("fn {name}");
+    let mut i = 0;
+    while i < s.lines.len() {
+        let line = &s.lines[i];
+        if !s.in_test[i] {
+            if let Some(p) = line.find(&pat) {
+                let after = line[p + pat.len()..].chars().next();
+                if matches!(after, Some('(') | Some('<')) {
+                    // find opening brace, then match to close
+                    let mut depth = 0i32;
+                    let mut started = false;
+                    let start = i;
+                    let mut j = i;
+                    while j < s.lines.len() {
+                        for c in s.lines[j].chars() {
+                            match c {
+                                '{' => {
+                                    depth += 1;
+                                    started = true;
+                                }
+                                '}' => depth -= 1,
+                                _ => {}
+                            }
+                        }
+                        if started && depth <= 0 {
+                            return Some((start, j));
+                        }
+                        j += 1;
+                    }
+                    return None;
+                }
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Scan a fn body for alloc tokens that sit inside a `for`/`while`/
+/// `loop` body. Returns (relative line, token). `impl X for Y` lines
+/// are not loop headers.
+fn allocs_in_loops(body: &[String]) -> Vec<(usize, &'static str)> {
+    let mut out = Vec::new();
+    let mut stack: Vec<bool> = Vec::new(); // true = loop frame
+    let mut pending_loop = false;
+    for (i, line) in body.iter().enumerate() {
+        let header_ok = !line.contains("impl ");
+        let mut word = String::new();
+        for c in line.chars().chain(std::iter::once('\n')) {
+            if is_ident(c) {
+                word.push(c);
+                continue;
+            }
+            if header_ok
+                && matches!(word.as_str(), "for" | "while" | "loop")
+            {
+                pending_loop = true;
+            }
+            word.clear();
+            match c {
+                '{' => {
+                    stack.push(pending_loop);
+                    pending_loop = false;
+                }
+                '}' => {
+                    stack.pop();
+                }
+                ';' => pending_loop = false,
+                _ => {}
+            }
+        }
+        if stack.iter().any(|&l| l) {
+            for tok in R3_ALLOC {
+                if line.contains(tok) {
+                    out.push((i, tok));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- R4
+
+/// R4: counter completeness. Every `pub` field of `ServiceStats` must
+/// (a) be incremented/recorded somewhere in non-test code and (b) be
+/// surfaced by `summary()`, `stream_summary()` or the CLI.
+///
+/// `stats_raw` is stats.rs; `sources` is every (path, Stripped) in the
+/// tree (stats.rs included); `surface_extra` is main.rs (CLI) text.
+pub fn r4(
+    stats_file: &str,
+    stats: &Stripped,
+    sources: &[(String, Stripped)],
+    surface_extra: &str,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let fields = service_stats_fields(stats);
+    let surface = {
+        let mut s = String::new();
+        for name in ["summary", "stream_summary"] {
+            if let Some((a, b)) = fn_body(stats, name) {
+                for l in &stats.lines[a..=b] {
+                    s.push_str(l);
+                    s.push('\n');
+                }
+            }
+        }
+        s.push_str(surface_extra);
+        s
+    };
+    for (field, line_idx) in fields {
+        let inc_pats = [
+            format!(".{field}.inc("),
+            format!(".{field}.add("),
+            format!(".{field}.record"),
+        ];
+        let incremented = sources.iter().any(|(_, s)| {
+            s.lines.iter().enumerate().any(|(i, l)| {
+                !s.in_test[i] && inc_pats.iter().any(|p| l.contains(p))
+            })
+        });
+        if !incremented {
+            out.push(finding(
+                "R4",
+                stats_file,
+                line_idx,
+                format!("ServiceStats field `{field}` is never incremented"),
+                stats,
+            ));
+        }
+        let shown = surface.contains(&format!("self.{field}"))
+            || surface.contains(&format!(".{field}."));
+        if !shown {
+            out.push(finding(
+                "R4",
+                stats_file,
+                line_idx,
+                format!(
+                    "ServiceStats field `{field}` is not surfaced by \
+                     summary()/stream_summary()/CLI"
+                ),
+                stats,
+            ));
+        }
+    }
+    out
+}
+
+/// `(field name, 0-based line)` for each pub field of ServiceStats.
+fn service_stats_fields(s: &Stripped) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let Some(start) = s
+        .lines
+        .iter()
+        .position(|l| l.contains("pub struct ServiceStats"))
+    else {
+        return out;
+    };
+    let mut depth = 0i32;
+    let mut started = false;
+    for (i, line) in s.lines.iter().enumerate().skip(start) {
+        if started && depth > 0 {
+            let t = line.trim();
+            if let Some(rest) = t.strip_prefix("pub ") {
+                if let Some(colon) = rest.find(':') {
+                    let name = rest[..colon].trim();
+                    if !name.is_empty() && name.chars().all(is_ident) {
+                        out.push((name.to_string(), i));
+                    }
+                }
+            }
+        }
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    started = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if started && depth <= 0 {
+            break;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- R5
+
+/// R5: doc cross-references resolve. Checks two reference kinds:
+///
+/// * `§X` on any line that also mentions "DESIGN" (so paper-section
+///   citations like "§3.2 of the paper" are exempt) must name a real
+///   DESIGN.md heading;
+/// * `[[sym]]` in DESIGN.md or in Rust comments must have a matching
+///   definition line in DESIGN.md (a line starting with `[[sym]]`).
+pub fn r5(
+    design: &str,
+    rs_sources: &[(String, String)], // (path, RAW source)
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let headings = design_headings(design);
+    let defs = design_definitions(design);
+
+    let mut check_line = |file: &str, idx: usize, line: &str, comment_only: bool| {
+        let scan: &str = if comment_only {
+            match line.find("//") {
+                Some(p) => &line[p..],
+                None => return,
+            }
+        } else {
+            line
+        };
+        if scan.contains("DESIGN") {
+            for r in section_refs(scan) {
+                if !headings.iter().any(|h| heading_matches(h, &r)) {
+                    out.push(Finding {
+                        rule: "R5",
+                        file: file.to_string(),
+                        line: idx + 1,
+                        message: format!("§{r} does not match any DESIGN.md heading"),
+                        text: line.trim().to_string(),
+                    });
+                }
+            }
+        }
+        for sym in bracket_refs(scan) {
+            let is_def = !comment_only && scan.trim_start().starts_with(&format!("[[{sym}]]"));
+            if !is_def && !defs.contains(&sym) {
+                out.push(Finding {
+                    rule: "R5",
+                    file: file.to_string(),
+                    line: idx + 1,
+                    message: format!("[[{sym}]] has no definition line in DESIGN.md"),
+                    text: line.trim().to_string(),
+                });
+            }
+        }
+    };
+
+    for (i, line) in design.lines().enumerate() {
+        check_line("DESIGN.md", i, line, false);
+    }
+    for (path, src) in rs_sources {
+        for (i, line) in src.lines().enumerate() {
+            check_line(path, i, line, true);
+        }
+    }
+    out
+}
+
+/// Heading keys: `## 7. Title` → "7", `### 1.1 Title` → "1.1",
+/// `### Findings` → "Findings", `### Targeted unlearning …` →
+/// "Targeted".
+fn design_headings(design: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in design.lines() {
+        let t = line.trim_start();
+        let rest = if let Some(r) = t.strip_prefix("### ") {
+            r
+        } else if let Some(r) = t.strip_prefix("## ") {
+            r
+        } else {
+            continue;
+        };
+        let first: String = rest
+            .chars()
+            .take_while(|c| !c.is_whitespace())
+            .collect();
+        out.push(first.trim_end_matches('.').to_string());
+    }
+    out
+}
+
+fn heading_matches(heading: &str, reference: &str) -> bool {
+    heading == reference
+        || heading.starts_with(&format!("{reference}."))
+}
+
+/// Definition lines: DESIGN.md lines starting with `[[sym]]`.
+fn design_definitions(design: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in design.lines() {
+        let t = line.trim_start().trim_start_matches(['*', '-', ' ']);
+        if let Some(rest) = t.strip_prefix("[[") {
+            if let Some(end) = rest.find("]]") {
+                let sym = &rest[..end];
+                if !sym.is_empty() && sym.chars().all(|c| is_ident(c) || c == '-') {
+                    out.push(sym.to_string());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Extract `§<ref>` tokens: digits with optional dots, or a capitalised
+/// word (`§Findings`).
+fn section_refs(text: &str) -> Vec<String> {
+    let b: Vec<char> = text.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == '§' {
+            let mut j = i + 1;
+            let mut r = String::new();
+            while j < b.len() && (b[j].is_alphanumeric() || b[j] == '.') {
+                r.push(b[j]);
+                j += 1;
+            }
+            let r = r.trim_end_matches('.').to_string();
+            if !r.is_empty() {
+                out.push(r);
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Extract `[[sym]]` references.
+fn bracket_refs(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(p) = rest.find("[[") {
+        rest = &rest[p + 2..];
+        if let Some(end) = rest.find("]]") {
+            let sym = &rest[..end];
+            if !sym.is_empty() && sym.chars().all(|c| is_ident(c) || c == '-') {
+                out.push(sym.to_string());
+            }
+            rest = &rest[end + 2..];
+        } else {
+            break;
+        }
+    }
+    out
+}

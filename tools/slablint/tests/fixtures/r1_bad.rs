@@ -1,0 +1,11 @@
+// R1 fixture: scanned under the pseudo-path "rust/src/stream/shard.rs".
+// Every construct below must be flagged.
+
+fn worker_step(queue: &Queue, idx: usize) -> f64 {
+    let batch = queue.pop().unwrap(); // panic path
+    let head = batch.samples[idx]; // variable-index subscript
+    if batch.is_empty() {
+        panic!("empty batch reached the worker"); // panic path
+    }
+    head.score().expect("score failed") // panic path
+}

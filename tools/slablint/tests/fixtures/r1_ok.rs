@@ -1,0 +1,27 @@
+// R1 boundary fixture: same pseudo-path, zero findings expected.
+// Literal subscripts, slice types, strings/comments mentioning the
+// tokens, and test-module unwraps are all fine.
+
+fn decode_header(bytes: &[u8]) -> Result<u32, Error> {
+    // .unwrap() in a comment is not code
+    let magic = bytes.get(..4).ok_or(Error::Truncated)?;
+    let b0 = magic[0]; // literal subscript
+    let tail: &[u8] = &bytes[..8]; // literal range subscript
+    let msg = "never .unwrap() in a decode path"; // token inside a string
+    let _ = (b0, tail, msg);
+    parse_u32(bytes)
+}
+
+fn parse_slice<'a>(buf: &'a [u8], n: usize) -> Option<&'a [u8]> {
+    buf.get(..n)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        let v = vec![1, 2, 3];
+        let i = 2;
+        assert_eq!(v[i], *v.last().unwrap());
+    }
+}

@@ -1,0 +1,17 @@
+// R2 fixture: pseudo-path "rust/src/stream/fixture.rs". The guard
+// `mail` is still live at the absorb and at the channel send.
+
+fn drain(shard: &Shard) {
+    let mut mail = shard.mail.lock();
+    let batch = mail.pop();
+    shard.session.absorb(&batch); // flagged: guard live across absorb
+    shard.tx.send(batch); // flagged: guard live across send
+    drop(mail);
+}
+
+fn reap(pool: &Pool) {
+    let guard = pool.workers.read();
+    for w in guard.iter() {
+        w.handle.join(); // flagged: guard live across thread join
+    }
+}

@@ -1,0 +1,33 @@
+// R2 boundary fixture: same pseudo-path, zero findings expected.
+// Guards die at block close or explicit drop before any barrier;
+// statement-temporary guards never register; recv_timeout is the
+// sanctioned bounded wait.
+
+fn drain(shard: &Shard) {
+    let batch = {
+        let mut mail = shard.mail.lock();
+        mail.pop()
+    }; // guard dead here
+    shard.session.absorb(&batch);
+}
+
+fn drain_with_drop(shard: &Shard) {
+    let mut mail = shard.mail.lock();
+    let batch = mail.pop();
+    drop(mail);
+    shard.session.absorb(&batch);
+    shard.tx.send(batch);
+}
+
+fn shutdown(pool: &Pool) {
+    let handle = pool.worker.lock().take(); // temporary, not a guard
+    if let Some(h) = handle {
+        h.join();
+    }
+}
+
+fn batch_wait(w: &Waiter) {
+    let guard = w.inner.lock();
+    let _ = w.rx.recv_timeout(DURATION); // bounded wait is allowed
+    drop(guard);
+}

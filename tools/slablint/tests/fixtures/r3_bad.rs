@@ -1,0 +1,55 @@
+// R3 fixture: pseudo-path "rust/src/stream/incremental.rs" (so the
+// incremental config applies). `repair` is a hot fn — the clone and
+// collect are flagged anywhere in its body; `push` is warm — the
+// vec! inside the loop is flagged, the set-up allocation is not.
+// Every other configured fn is present as a clean stub so only the
+// planted violations fire.
+
+fn repair(&mut self) -> Result<()> {
+    let snapshot = self.alpha.clone(); // flagged: alloc in hot fn
+    let idx: Vec<usize> = (0..self.len()).collect(); // flagged
+    self.apply(&snapshot, &idx)
+}
+
+fn push(&mut self, x: &[f64]) -> Result<()> {
+    let staged = Vec::with_capacity(x.len()); // set-up alloc: fine
+    for v in x {
+        let row = vec![*v; self.dim]; // flagged: alloc inside loop
+        self.admit(row);
+    }
+    self.commit(staged)
+}
+
+fn bump_alpha(&mut self, i: usize, d: f64) {
+    self.mass += d;
+}
+fn bump_abar(&mut self, i: usize, d: f64) {
+    self.mass_bar += d;
+}
+fn distribute(&mut self, pool: f64) {
+    self.mass += pool;
+}
+fn collect(&mut self, want: f64) -> f64 {
+    want
+}
+fn seed(&mut self, i: usize) {
+    self.mass = 1.0;
+}
+fn replace_slot(&mut self, i: usize) {
+    self.dirty = true;
+}
+fn grow_add(&mut self) {
+    self.len += 1;
+}
+fn margin_of_slot(&self, i: usize) -> f64 {
+    self.cache_margin
+}
+fn recompute_margins(&mut self) {
+    self.dirty = false;
+}
+fn score(&self, x: &[f64]) -> f64 {
+    self.cache_margin
+}
+fn forget(&mut self, id: u64) -> Result<()> {
+    Ok(())
+}

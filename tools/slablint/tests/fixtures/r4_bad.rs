@@ -1,0 +1,20 @@
+// R4 fixture: a ServiceStats with two broken fields. `ghost` is
+// never incremented anywhere; `silent` is incremented (below) but
+// never surfaced by a summary.
+
+pub struct ServiceStats {
+    pub requests: Counter,
+    pub ghost: Counter,
+    pub silent: Counter,
+}
+
+impl ServiceStats {
+    pub fn summary(&self) -> String {
+        format!("requests={}", self.requests.get())
+    }
+}
+
+fn elsewhere(stats: &ServiceStats) {
+    stats.requests.inc();
+    stats.silent.inc();
+}

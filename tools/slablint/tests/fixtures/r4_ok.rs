@@ -1,0 +1,21 @@
+// R4 boundary fixture: every field is incremented and surfaced.
+
+pub struct ServiceStats {
+    pub requests: Counter,
+    pub absorb_latency: Histogram,
+}
+
+impl ServiceStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} absorb p50={}us",
+            self.requests.get(),
+            self.absorb_latency.quantile_us(0.5),
+        )
+    }
+}
+
+fn elsewhere(stats: &ServiceStats) {
+    stats.requests.inc();
+    stats.absorb_latency.record_us(12);
+}

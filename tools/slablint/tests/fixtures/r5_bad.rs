@@ -1,0 +1,8 @@
+// R5 fixture: both references below are broken against the fixture
+// DESIGN text used by the test harness (which defines only [[R1]]
+// and headings ## 1. and ### 1.1).
+
+//! See DESIGN.md §9 for the missing section.
+//! The bound comes from lint rule [[R9]] which is never defined.
+
+fn noop() {}

@@ -1,0 +1,11 @@
+// R5 boundary fixture: resolvable references plus the exemptions —
+// a paper-section citation (no DESIGN on the line) and bracketed
+// text in code rather than comments.
+
+//! Deviation noted in DESIGN.md §1.1; see also lint rule [[R1]].
+//! The slab construction follows §3.2 of the paper.
+
+fn noop() {
+    let grid = [[1.0, 2.0], [3.0, 4.0]];
+    let _ = grid;
+}

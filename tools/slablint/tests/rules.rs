@@ -1,0 +1,123 @@
+//! Fixture suite: every rule has a known-bad fixture that must flag
+//! and a boundary fixture that must stay silent. The same assertions
+//! run toolchain-free via `python3 tools/slablint/selfcheck.py
+//! --fixtures`, which keeps the Python mirror honest.
+
+use slablint::lexer::Stripped;
+use slablint::rules;
+
+fn fixture(name: &str) -> String {
+    let path = format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+/// Heading + definition context the r5 fixtures resolve against.
+const DESIGN_FIXTURE: &str = "\
+## 1. System inventory
+
+### 1.1 Errata
+
+[[R1]] Panic-freedom on availability-critical paths.
+";
+
+#[test]
+fn r1_flags_known_bad() {
+    let s = Stripped::new(&fixture("r1_bad.rs"));
+    let f = rules::r1("rust/src/stream/shard.rs", &s);
+    assert_eq!(f.len(), 4, "unwrap, subscript, panic!, expect: {f:#?}");
+    assert!(f.iter().all(|x| x.rule == "R1"));
+    assert!(f.iter().any(|x| x.message.contains("subscript")));
+}
+
+#[test]
+fn r1_boundary_is_silent() {
+    let s = Stripped::new(&fixture("r1_ok.rs"));
+    let f = rules::r1("rust/src/stream/shard.rs", &s);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn r1_out_of_scope_is_silent() {
+    let s = Stripped::new(&fixture("r1_bad.rs"));
+    let f = rules::r1("rust/src/solver/smo.rs", &s);
+    assert!(f.is_empty(), "R1 must only fire on its scoped files");
+}
+
+#[test]
+fn r2_flags_known_bad() {
+    let s = Stripped::new(&fixture("r2_bad.rs"));
+    let f = rules::r2("rust/src/stream/fixture.rs", &s);
+    assert_eq!(f.len(), 3, "absorb, send, join under live guards: {f:#?}");
+    assert!(f.iter().all(|x| x.rule == "R2"));
+}
+
+#[test]
+fn r2_boundary_is_silent() {
+    let s = Stripped::new(&fixture("r2_ok.rs"));
+    let f = rules::r2("rust/src/stream/fixture.rs", &s);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn r3_flags_known_bad() {
+    let s = Stripped::new(&fixture("r3_bad.rs"));
+    let f = rules::r3("rust/src/stream/incremental.rs", &s);
+    assert_eq!(f.len(), 3, "clone+collect in hot, vec! in warm loop: {f:#?}");
+    assert!(f.iter().all(|x| x.rule == "R3"));
+    assert!(
+        !f.iter().any(|x| x.text.contains("with_capacity")),
+        "set-up allocation in a warm fn must not flag"
+    );
+}
+
+#[test]
+fn r3_boundary_is_silent() {
+    let s = Stripped::new(&fixture("r3_ok.rs"));
+    let f = rules::r3("rust/src/stream/incremental.rs", &s);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn r3_reports_config_drift() {
+    let s = Stripped::new("fn unrelated() {}\n");
+    let f = rules::r3("rust/src/stream/incremental.rs", &s);
+    assert!(
+        f.iter().any(|x| x.message.contains("not found")),
+        "a configured fn that disappears must be reported, not skipped"
+    );
+}
+
+#[test]
+fn r4_flags_known_bad() {
+    let src = fixture("r4_bad.rs");
+    let stats = Stripped::new(&src);
+    let sources = vec![("r4_bad.rs".to_string(), Stripped::new(&src))];
+    let f = rules::r4("r4_bad.rs", &stats, &sources, "");
+    assert_eq!(f.len(), 3, "ghost x2 + silent unsurfaced: {f:#?}");
+    assert!(f.iter().any(|x| x.message.contains("never incremented")));
+    assert!(f.iter().any(|x| x.message.contains("not surfaced")));
+}
+
+#[test]
+fn r4_boundary_is_silent() {
+    let src = fixture("r4_ok.rs");
+    let stats = Stripped::new(&src);
+    let sources = vec![("r4_ok.rs".to_string(), Stripped::new(&src))];
+    let f = rules::r4("r4_ok.rs", &stats, &sources, "");
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn r5_flags_known_bad() {
+    let src = fixture("r5_bad.rs");
+    let f = rules::r5(DESIGN_FIXTURE, &[("r5_bad.rs".to_string(), src)]);
+    assert_eq!(f.len(), 2, "dangling §9 and [[R9]]: {f:#?}");
+    assert!(f.iter().all(|x| x.rule == "R5"));
+}
+
+#[test]
+fn r5_boundary_is_silent() {
+    let src = fixture("r5_ok.rs");
+    let f = rules::r5(DESIGN_FIXTURE, &[("r5_ok.rs".to_string(), src)]);
+    assert!(f.is_empty(), "{f:#?}");
+}
