@@ -43,6 +43,13 @@ fn main() {
                 let c = Coordinator::start(engine.clone(), cfg, 2);
                 let ds = SlabConfig::default().generate(1000, 42);
                 c.train_blocking("m", &ds, &trainer).expect("train");
+                // trace the scoring path: the batcher records a
+                // ScoreQueue span per request (enqueue → batch start)
+                // and a Score span per executed batch; their means
+                // decompose the latency quantiles below into wait vs
+                // engine time on the BENCHJSON row
+                slabsvm::obs::set_enabled(true);
+                let span_floor = slabsvm::obs::now_us();
                 let t0 = std::time::Instant::now();
                 let rxs: Vec<_> = (0..n_requests)
                     .map(|i| c.score_async("m", vec![eval.x.row(i).to_vec()]))
@@ -54,12 +61,31 @@ fn main() {
                     }
                 }
                 let dt = t0.elapsed().as_secs_f64();
+                let spans = slabsvm::obs::recent_spans(usize::MAX);
+                slabsvm::obs::set_enabled(false);
+                let (mut q_sum, mut q_n, mut s_sum, mut s_n) =
+                    (0u64, 0u64, 0u64, 0u64);
+                for s in spans.iter().filter(|s| s.start_us >= span_floor) {
+                    match s.stage {
+                        slabsvm::obs::Stage::ScoreQueue => {
+                            q_sum += s.dur_us;
+                            q_n += 1;
+                        }
+                        slabsvm::obs::Stage::Score => {
+                            s_sum += s.dur_us;
+                            s_n += 1;
+                        }
+                        _ => {}
+                    }
+                }
                 let stats = c.stats();
                 let out = vec![
                     ("req_per_s".into(), ok as f64 / dt),
                     ("mean_batch".into(), stats.mean_batch_size()),
                     ("p50_us".into(), stats.request_latency.quantile_us(0.5) as f64),
                     ("p99_us".into(), stats.request_latency.quantile_us(0.99) as f64),
+                    ("queue_us".into(), q_sum as f64 / q_n.max(1) as f64),
+                    ("score_us".into(), s_sum as f64 / s_n.max(1) as f64),
                     ("errors".into(), stats.errors.get() as f64),
                 ];
                 c.shutdown();

@@ -71,13 +71,22 @@ fn main() {
                 inc.push(&stream.next_point()).expect("fill");
             }
 
-            // incremental path: absorb one sample, window full
+            // incremental path: absorb one sample, window full. The
+            // solver's own stage split (admit/Gram maintenance vs the
+            // warm-started repair sweep) rides along so the BENCHJSON
+            // trajectory shows WHERE an update regression lives, not
+            // just that one happened.
             let mut update_times = Vec::with_capacity(updates);
+            let (mut gram_us, mut repair_us, mut iters) = (0u64, 0u64, 0u64);
             for _ in 0..updates {
                 let x = stream.next_point();
                 let t0 = std::time::Instant::now();
                 inc.push(&x).expect("incremental update");
                 update_times.push(t0.elapsed().as_secs_f64());
+                let (admit, repair) = inc.last_stage_us();
+                gram_us += admit;
+                repair_us += repair;
+                iters += inc.last_stats().iterations as u64;
             }
             let update_s = median(&update_times);
 
@@ -100,6 +109,12 @@ fn main() {
                 ("updates_per_s".into(), 1.0 / update_s.max(1e-12)),
                 ("retrain_s".into(), retrain_s),
                 ("speedup".into(), retrain_s / update_s.max(1e-12)),
+                ("gram_us".into(), gram_us as f64 / updates as f64),
+                ("repair_us".into(), repair_us as f64 / updates as f64),
+                (
+                    "iters_per_absorb".into(),
+                    iters as f64 / updates as f64,
+                ),
                 (
                     "repair_iters_total".into(),
                     inc.repair_iterations() as f64,
@@ -170,6 +185,13 @@ fn main() {
                     .collect(),
             )
             .expect("open streams");
+            // trace the managed path: every push mints a trace id and
+            // the shard workers record Queue/Gram/Repair/Publish spans;
+            // their per-stage means ride the BENCHJSON row (the span
+            // ring keeps the most recent 8192, i.e. the steady-state
+            // tail of large runs — exactly the regime MS1 is about)
+            slabsvm::obs::set_enabled(true);
+            let span_floor = slabsvm::obs::now_us();
             let t1 = std::time::Instant::now();
             std::thread::scope(|scope| {
                 for (i, seq) in seqs.iter().enumerate() {
@@ -184,6 +206,28 @@ fn main() {
             });
             c.quiesce_streams();
             let mgr_s = t1.elapsed().as_secs_f64();
+            let spans = slabsvm::obs::recent_spans(usize::MAX);
+            slabsvm::obs::set_enabled(false);
+            // stage means: [queue, gram, repair, publish]
+            let (mut sums, mut counts) = ([0u64; 4], [0u64; 4]);
+            let (mut abs_iters, mut absorbs) = (0u64, 0u64);
+            for s in spans.iter().filter(|s| s.start_us >= span_floor) {
+                let slot = match s.stage {
+                    slabsvm::obs::Stage::Queue => 0,
+                    slabsvm::obs::Stage::Gram => 1,
+                    slabsvm::obs::Stage::Repair => 2,
+                    slabsvm::obs::Stage::Publish => 3,
+                    slabsvm::obs::Stage::Absorb => {
+                        abs_iters += s.iters;
+                        absorbs += 1;
+                        continue;
+                    }
+                    _ => continue,
+                };
+                sums[slot] += s.dur_us;
+                counts[slot] += 1;
+            }
+            let mean = |i: usize| sums[i] as f64 / counts[i].max(1) as f64;
 
             // parity gate: a fast wrong manager is worthless
             for (i, &(obj, rho)) in baseline.iter().enumerate() {
@@ -212,6 +256,14 @@ fn main() {
                 ("seq_updates_per_s".into(), total / seq_s.max(1e-12)),
                 ("mgr_updates_per_s".into(), total / mgr_s.max(1e-12)),
                 ("speedup".into(), seq_s / mgr_s.max(1e-12)),
+                ("queue_us".into(), mean(0)),
+                ("gram_us".into(), mean(1)),
+                ("repair_us".into(), mean(2)),
+                ("publish_us".into(), mean(3)),
+                (
+                    "iters_per_absorb".into(),
+                    abs_iters as f64 / absorbs.max(1) as f64,
+                ),
             ]
         });
     }

@@ -323,8 +323,41 @@ fn execute_batch(
         return;
     }
 
+    // Serving-side spans (trace 0 — scoring requests carry no push
+    // trace): one ScoreQueue span per member request, backdated from
+    // its queue wait so the span starts at submission time, and one
+    // Score span for the fused predict. `iters` on the Score span is
+    // the stacked query count the batch amortized.
+    let tracing = crate::obs::enabled();
+    if tracing {
+        let q_end = crate::obs::now_us();
+        for req in &batch {
+            let waited = req.enqueued.elapsed().as_micros() as u64;
+            crate::obs::record_span(crate::obs::Span {
+                trace: 0,
+                stage: crate::obs::Stage::ScoreQueue,
+                start_us: q_end.saturating_sub(waited),
+                dur_us: waited,
+                stream: crate::obs::stream_id(&req.model),
+                shard: u32::MAX,
+                iters: 0,
+            });
+        }
+    }
     let t0 = Instant::now();
+    let s_start = if tracing { crate::obs::now_us() } else { 0 };
     let result = engine.predict(&model, &stacked);
+    if tracing {
+        crate::obs::record_span(crate::obs::Span {
+            trace: 0,
+            stage: crate::obs::Stage::Score,
+            start_us: s_start,
+            dur_us: crate::obs::now_us().saturating_sub(s_start),
+            stream: crate::obs::stream_id(&name),
+            shard: u32::MAX,
+            iters: total as u64,
+        });
+    }
     stats.batch_latency.record(t0.elapsed());
     stats.batches.inc();
 

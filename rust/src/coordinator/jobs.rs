@@ -116,6 +116,14 @@ impl TrainQueue {
                             let n_sv = report.model.n_sv();
                             let version = registry.insert(&req.name, report.model);
                             stats.jobs_done.inc();
+                            // value = the registry version published
+                            crate::obs::record(
+                                crate::obs::EventKind::RetrainPublished,
+                                0,
+                                crate::obs::stream_id(&req.name),
+                                u32::MAX,
+                                version,
+                            );
                             JobStatus::Done {
                                 version,
                                 iterations: report.stats.iterations,
@@ -149,6 +157,15 @@ impl TrainQueue {
             *n += 1;
             id
         };
+        // value = the job id, so Submitted/Published/Cancelled events
+        // for one retrain correlate in a drained flight recording
+        crate::obs::record(
+            crate::obs::EventKind::RetrainSubmitted,
+            0,
+            crate::obs::stream_id(&req.name),
+            u32::MAX,
+            id.0,
+        );
         set_status(&self.state, id, JobStatus::Queued);
         // if the worker is gone the status stays Queued; callers polling
         // wait() would block, so record failure instead
@@ -181,6 +198,13 @@ impl TrainQueue {
             Some(JobStatus::Queued) | Some(JobStatus::Running) => {
                 map.insert(id, JobStatus::Cancelled);
                 cvar.notify_all();
+                crate::obs::record(
+                    crate::obs::EventKind::RetrainCancelled,
+                    0,
+                    0,
+                    u32::MAX,
+                    id.0,
+                );
                 true
             }
             _ => false,

@@ -110,6 +110,7 @@ impl Coordinator {
         workers: usize,
         pool: StreamPoolConfig,
     ) -> Coordinator {
+        crate::obs::init_from_env();
         let registry = Arc::new(ModelRegistry::new());
         let stats = Arc::new(ServiceStats::new());
         let batcher = DynamicBatcher::start(
@@ -321,6 +322,22 @@ impl Coordinator {
 
     pub fn stats(&self) -> &ServiceStats {
         &self.stats
+    }
+
+    /// Every service metric in Prometheus text exposition format
+    /// (version 0.0.4) — counters and cumulative-bucket histograms,
+    /// built from the [`crate::obs::registry`] so the set of exported
+    /// names is pinned by golden tests and lint rule [[R4]]. The
+    /// `slabsvm stats` verb prints exactly this.
+    pub fn metrics_text(&self) -> String {
+        crate::obs::prometheus_text(&crate::obs::registry(&self.stats))
+    }
+
+    /// Every service metric as JSON lines (one canonical-JSON object
+    /// per metric) — same registry as [`Coordinator::metrics_text`],
+    /// machine-friendly shape (`slabsvm stats --format json`).
+    pub fn metrics_json(&self) -> String {
+        crate::obs::json_lines(&crate::obs::registry(&self.stats))
     }
 
     /// Graceful shutdown: drains the stream shards first (they publish

@@ -70,6 +70,45 @@ impl Histogram {
         }
     }
 
+    /// Number of log-spaced buckets (fixed at construction).
+    pub fn n_buckets() -> usize {
+        NBUCKETS
+    }
+
+    /// Inclusive upper bound of bucket `i` in microseconds — the `le`
+    /// label of the Prometheus exposition and the value
+    /// [`Histogram::quantile_us`] reports for samples landing there.
+    pub fn bucket_bound(i: usize) -> u64 {
+        1u64 << (i + 1).min(63)
+    }
+
+    /// Raw per-bucket counts (not cumulative), index-aligned with
+    /// [`Histogram::bucket_bound`]. This is the exporter's read path:
+    /// cumulative Prometheus buckets are summed from it.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Total recorded microseconds (the Prometheus `_sum` series).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Atomically read **and zero** the histogram: returns
+    /// `(bucket counts, count, sum_us)` and leaves the histogram
+    /// empty. Each word is swapped individually, so a concurrent
+    /// `record_us` lands wholly in either the returned snapshot or the
+    /// next one — nothing is lost or double-counted across delta
+    /// scrapes (the count/sum may transiently disagree with the
+    /// buckets by the in-flight sample, as with any lock-free scrape).
+    pub fn reset_snapshot(&self) -> (Vec<u64>, u64, u64) {
+        let buckets: Vec<u64> =
+            self.buckets.iter().map(|b| b.swap(0, Ordering::Relaxed)).collect();
+        let count = self.count.swap(0, Ordering::Relaxed);
+        let sum = self.sum_us.swap(0, Ordering::Relaxed);
+        (buckets, count, sum)
+    }
+
     /// Approximate quantile: upper bound of the bucket containing it.
     pub fn quantile_us(&self, q: f64) -> u64 {
         let total = self.count();
@@ -245,6 +284,30 @@ mod tests {
         let p99 = h.quantile_us(0.99);
         assert!(p99 >= 8192, "p99={p99}");
         assert!((h.mean_us() - 2030.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_bucket_accessors_and_reset() {
+        let h = Histogram::new();
+        h.record_us(3); // bucket 1 (bound 4)
+        h.record_us(3);
+        h.record_us(100); // bucket 6 (bound 128)
+        let counts = h.bucket_counts();
+        assert_eq!(counts.len(), Histogram::n_buckets());
+        assert_eq!(counts[1], 2);
+        assert_eq!(counts[6], 1);
+        assert_eq!(Histogram::bucket_bound(1), 4);
+        assert_eq!(Histogram::bucket_bound(6), 128);
+        assert_eq!(h.sum_us(), 106);
+
+        let (snap, count, sum) = h.reset_snapshot();
+        assert_eq!((snap[1], snap[6], count, sum), (2, 1, 3, 106));
+        assert_eq!(h.count(), 0, "zeroed after snapshot");
+        assert!(h.bucket_counts().iter().all(|&c| c == 0));
+        assert_eq!(h.sum_us(), 0);
+        // delta scrape: new samples land in the next snapshot only
+        h.record_us(3);
+        assert_eq!(h.bucket_counts()[1], 1);
     }
 
     #[test]

@@ -122,6 +122,37 @@
 //! `solver::qp_pg::train`, …) still work but are `#[deprecated]` shims
 //! over this API; see CHANGES.md for the deprecation path.
 //!
+//! ## Metrics & tracing
+//!
+//! The [`obs`] layer (DESIGN.md §8) makes the serving stack's latency
+//! legible without a dependency: every `ServiceStats` counter and
+//! histogram exports through one registry as Prometheus text or JSON
+//! lines, and — with the recorder enabled — each `Coordinator::push`
+//! gets a trace id whose queue/absorb/repair/publish stages are
+//! recorded as contiguous spans (solver iteration counts attached):
+//!
+//! ```no_run
+//! use slabsvm::coordinator::{BatcherConfig, Coordinator};
+//! use slabsvm::runtime::Engine;
+//! use slabsvm::stream::{StreamConfig, StreamSpec};
+//!
+//! slabsvm::obs::set_enabled(true); // or SLABSVM_OBS=1; default off
+//! let c = Coordinator::start(Engine::Native, BatcherConfig::default(), 2);
+//! c.open_streams(vec![StreamSpec::new("t", StreamConfig::default())])
+//!     .unwrap();
+//! c.push("t", &[20.0, 3.0]).unwrap();
+//! c.quiesce_streams();
+//! println!("{}", c.metrics_text()); // Prometheus text exposition
+//! for span in slabsvm::obs::recent_spans(16) {
+//!     println!("{}", span.to_json()); // queue/absorb/publish chain
+//! }
+//! ```
+//!
+//! Disabled (the default), the recorder is a relaxed atomic load per
+//! would-be event — the absorb hot path stays allocation-free. The
+//! `slabsvm stats` and `slabsvm trace` CLI verbs drive the same
+//! surfaces against a short synthetic workload.
+//!
 //! ## Invariant enforcement
 //!
 //! The concurrency and panic-freedom rules the serving stack relies on
@@ -150,6 +181,7 @@ pub mod figures;
 pub mod kernel;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod solver;
 pub mod stream;

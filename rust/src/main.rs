@@ -14,6 +14,10 @@
 //!   snapshot  write durable stream snapshots (or --inspect one)
 //!   forget    targeted unlearning: remove samples by id from a
 //!             stream snapshot, repair, write it back
+//!   stats     drive a short traced workload, print every service
+//!             metric (Prometheus text or JSON lines)
+//!   trace     drive a short traced workload, print the span chains
+//!             and (--events) the flight-recorder events as JSONL
 //!   info      artifact manifest + engine diagnostics
 //!
 //! Run `slabsvm <cmd> --help` for per-command options.
@@ -53,6 +57,8 @@ fn main() -> ExitCode {
         "snapshot" => cmd_snapshot(rest),
         "forget" => cmd_forget(rest),
         "sweep" => cmd_sweep(rest),
+        "stats" => cmd_stats(rest),
+        "trace" => cmd_trace(rest),
         "info" => cmd_info(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
@@ -82,6 +88,8 @@ fn usage() -> String {
      \tsnapshot write durable stream snapshots from a synthetic fleet, or --inspect one\n\
      \tforget   targeted unlearning: remove samples by id from a snapshot, repair, write back\n\
      \tsweep    k-fold cross-validated hyper-parameter grid search\n\
+     \tstats    traced synthetic workload → metrics export (--format prom|json)\n\
+     \ttrace    traced synthetic workload → span chains + flight-recorder events (JSONL)\n\
      \tinfo     artifact manifest + engine diagnostics\n"
         .to_string()
 }
@@ -913,6 +921,136 @@ fn run_multi_stream(
         total / dt
     );
     println!("streams: {}", c.stats().stream_summary());
+    c.shutdown();
+    Ok(())
+}
+
+// --------------------------------------------------------- stats / trace
+
+/// Shared flags of the observability verbs' driven workload.
+fn obs_args() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("points", "300", "samples per stream in the driven workload"),
+        ArgSpec::opt("streams", "2", "tenant streams"),
+        ArgSpec::opt("shards", "2", "shard worker threads"),
+        ArgSpec::opt("window", "128", "sliding-window capacity"),
+        ArgSpec::opt("min-train", "64", "samples before the first publish"),
+        ArgSpec::opt("seed", "42", "stream seed"),
+    ]
+}
+
+/// Drive a short synthetic multi-tenant run with the recorder enabled
+/// and return the still-live coordinator — `slabsvm stats` and `slabsvm
+/// trace` share this workload so their exports describe the same kind
+/// of run (and CI smoke-validates both against it, DESIGN.md §8).
+fn obs_workload(p: &Parsed) -> Result<Coordinator> {
+    use slabsvm::data::synthetic::SlabStream;
+    use slabsvm::stream::{StreamConfig, StreamPoolConfig, StreamSpec};
+
+    slabsvm::obs::set_enabled(true);
+    let n_streams = p.get_usize("streams")?.max(1);
+    let points = p.get_usize("points")?;
+    let seed0 = p.get_usize("seed")? as u64;
+    let cfg = StreamConfig {
+        dim: 2,
+        window: p.get_usize("window")?,
+        min_train: p.get_usize("min-train")?,
+        ..Default::default()
+    };
+    let c = Coordinator::start_with_streams(
+        Engine::Native,
+        BatcherConfig::default(),
+        2,
+        StreamPoolConfig {
+            shards: p.get_usize("shards")?.max(1),
+            mailbox_cap: 2048,
+            checkpoint: None,
+        },
+    );
+    c.open_streams(
+        (0..n_streams)
+            .map(|i| StreamSpec::new(format!("tenant-{i}"), cfg))
+            .collect(),
+    )?;
+    for i in 0..n_streams {
+        let mut stream =
+            SlabStream::new(SlabConfig::default(), seed0 + i as u64);
+        let name = format!("tenant-{i}");
+        for _ in 0..points {
+            let x = stream.next_point();
+            c.push(&name, &x)?;
+        }
+    }
+    c.quiesce_streams();
+    Ok(c)
+}
+
+/// `slabsvm stats`: every service metric after a short traced run, in
+/// Prometheus text exposition (default) or JSON lines.
+fn cmd_stats(args: &[String]) -> Result<()> {
+    let mut spec = obs_args();
+    spec.push(ArgSpec::opt("format", "prom", "export format: prom|json"));
+    if args.iter().any(|a| a == "--help") {
+        println!(
+            "{}",
+            render_help(
+                "stats",
+                "drive a traced synthetic workload, print the metrics export",
+                &spec
+            )
+        );
+        return Ok(());
+    }
+    let p = parse_args(&spec, args)?;
+    let format = p.get_str("format")?.to_string();
+    if format != "prom" && format != "json" {
+        return Err(Error::config(format!(
+            "unknown format {format:?} (expected prom|json)"
+        )));
+    }
+    let c = obs_workload(&p)?;
+    if format == "json" {
+        print!("{}", c.metrics_json());
+    } else {
+        print!("{}", c.metrics_text());
+    }
+    c.shutdown();
+    Ok(())
+}
+
+/// `slabsvm trace`: the most recent spans after a short traced run —
+/// each line one JSON span with trace id, stage, interval, stream/shard
+/// and solver iterations — plus, with --events, the drained
+/// flight-recorder events.
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let mut spec = obs_args();
+    spec.push(ArgSpec::opt("limit", "64", "most recent spans to print"));
+    spec.push(ArgSpec::flag(
+        "events",
+        "also print the drained flight-recorder events",
+    ));
+    if args.iter().any(|a| a == "--help") {
+        println!(
+            "{}",
+            render_help(
+                "trace",
+                "drive a traced synthetic workload, print span chains as JSONL",
+                &spec
+            )
+        );
+        return Ok(());
+    }
+    let p = parse_args(&spec, args)?;
+    let limit = p.get_usize("limit")?.max(1);
+    let c = obs_workload(&p)?;
+    for span in slabsvm::obs::recent_spans(limit) {
+        println!("{}", span.to_json());
+    }
+    if p.flag("events") {
+        for e in slabsvm::obs::drain_events() {
+            println!("{}", e.to_json());
+        }
+    }
     c.shutdown();
     Ok(())
 }

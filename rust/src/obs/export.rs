@@ -1,0 +1,274 @@
+//! Unified metrics registry + exposition.
+//!
+//! [`registry`] folds every [`ServiceStats`] counter and histogram
+//! into one named-metric list; [`prometheus_text`] and [`json_lines`]
+//! render that list generically, so adding a metric to the registry is
+//! the *only* step needed to reach both export formats. Lint rule
+//! [[R4]] enforces the converse: every `pub` field of `ServiceStats`
+//! must appear in the registry builder below (and every registered
+//! name must be a unique `slabsvm_`-prefixed identifier), so a counter
+//! cannot exist without an export path. Formats are pinned by golden
+//! tests in `rust/tests/obs_trace.rs`; front doors are
+//! `Coordinator::metrics_text()` / `metrics_json()` and the `slabsvm
+//! stats` CLI verb (DESIGN.md §8).
+
+use crate::coordinator::stats::{Counter, Histogram, ServiceStats};
+use crate::util::json::Json;
+
+/// A metric's current value.
+pub enum MetricValue {
+    /// monotone counter
+    Counter(u64),
+    /// log-bucketed latency histogram: raw (non-cumulative) per-bucket
+    /// counts as `(upper_bound_us, count)`, plus totals
+    Histogram { buckets: Vec<(u64, u64)>, sum_us: u64, count: u64 },
+}
+
+/// One named metric in the registry.
+pub struct Metric {
+    /// Prometheus-legal name, always `slabsvm_`-prefixed
+    pub name: &'static str,
+    pub help: &'static str,
+    pub value: MetricValue,
+}
+
+fn counter(name: &'static str, help: &'static str, c: &Counter) -> Metric {
+    Metric { name, help, value: MetricValue::Counter(c.get()) }
+}
+
+fn histogram(name: &'static str, help: &'static str, h: &Histogram) -> Metric {
+    let buckets = h
+        .bucket_counts()
+        .into_iter()
+        .enumerate()
+        .map(|(i, c)| (Histogram::bucket_bound(i), c))
+        .collect();
+    Metric {
+        name,
+        help,
+        value: MetricValue::Histogram {
+            buckets,
+            sum_us: h.sum_us(),
+            count: h.count(),
+        },
+    }
+}
+
+/// Build the full metric registry from the live service stats. Every
+/// `ServiceStats` field maps to exactly one named metric here — rule
+/// [[R4]] fails the lint if a field is added without a row below.
+pub fn registry(stats: &ServiceStats) -> Vec<Metric> {
+    vec![
+        counter(
+            "slabsvm_requests_total",
+            "scoring requests accepted",
+            &stats.requests,
+        ),
+        counter(
+            "slabsvm_scored_total",
+            "individual query points scored",
+            &stats.scored,
+        ),
+        counter(
+            "slabsvm_batches_total",
+            "batches executed by the dynamic batcher",
+            &stats.batches,
+        ),
+        counter(
+            "slabsvm_errors_total",
+            "scoring errors (unknown model etc.)",
+            &stats.errors,
+        ),
+        counter(
+            "slabsvm_jobs_done_total",
+            "training jobs finished successfully",
+            &stats.jobs_done,
+        ),
+        counter(
+            "slabsvm_jobs_failed_total",
+            "training jobs failed",
+            &stats.jobs_failed,
+        ),
+        counter(
+            "slabsvm_stream_pushes_total",
+            "streamed samples enqueued through the session manager",
+            &stats.stream_pushes,
+        ),
+        counter(
+            "slabsvm_stream_absorbed_total",
+            "streamed samples absorbed by shard workers",
+            &stats.stream_absorbed,
+        ),
+        counter(
+            "slabsvm_stream_backpressure_total",
+            "producer waits on a full per-stream mailbox (50ms slices)",
+            &stats.stream_backpressure,
+        ),
+        counter(
+            "slabsvm_stream_absorb_errors_total",
+            "streamed samples whose absorb failed after a successful push",
+            &stats.stream_absorb_errors,
+        ),
+        counter(
+            "slabsvm_stream_retrains_total",
+            "background retrains escalated by shard workers",
+            &stats.stream_retrains,
+        ),
+        counter(
+            "slabsvm_stream_forgets_total",
+            "samples removed by targeted unlearning",
+            &stats.stream_forgets,
+        ),
+        counter(
+            "slabsvm_stream_checkpoints_total",
+            "session snapshots durably written",
+            &stats.stream_checkpoints,
+        ),
+        counter(
+            "slabsvm_stream_checkpoint_errors_total",
+            "snapshot writes that failed",
+            &stats.stream_checkpoint_errors,
+        ),
+        counter(
+            "slabsvm_stream_restores_total",
+            "sessions resumed from a snapshot by this process",
+            &stats.stream_restores,
+        ),
+        histogram(
+            "slabsvm_request_latency_us",
+            "end-to-end scoring request latency (microseconds)",
+            &stats.request_latency,
+        ),
+        histogram(
+            "slabsvm_batch_latency_us",
+            "per-batch execution latency (microseconds)",
+            &stats.batch_latency,
+        ),
+        histogram(
+            "slabsvm_absorb_latency_us",
+            "per-sample incremental absorb latency (microseconds)",
+            &stats.absorb_latency,
+        ),
+    ]
+}
+
+/// Prometheus text exposition (format version 0.0.4): `# HELP` /
+/// `# TYPE` headers, counters as single samples, histograms as
+/// cumulative `_bucket{le="…"}` series plus `_sum` / `_count`.
+pub fn prometheus_text(metrics: &[Metric]) -> String {
+    let mut out = String::new();
+    for m in metrics {
+        out.push_str(&format!("# HELP {} {}\n", m.name, m.help));
+        match &m.value {
+            MetricValue::Counter(v) => {
+                out.push_str(&format!("# TYPE {} counter\n", m.name));
+                out.push_str(&format!("{} {v}\n", m.name));
+            }
+            MetricValue::Histogram { buckets, sum_us, count } => {
+                out.push_str(&format!("# TYPE {} histogram\n", m.name));
+                let mut cumulative = 0u64;
+                for (bound, c) in buckets {
+                    cumulative += c;
+                    out.push_str(&format!(
+                        "{}_bucket{{le=\"{bound}\"}} {cumulative}\n",
+                        m.name
+                    ));
+                }
+                out.push_str(&format!(
+                    "{}_bucket{{le=\"+Inf\"}} {count}\n",
+                    m.name
+                ));
+                out.push_str(&format!("{}_sum {sum_us}\n", m.name));
+                out.push_str(&format!("{}_count {count}\n", m.name));
+            }
+        }
+    }
+    out
+}
+
+/// JSON-line exposition: one canonical-JSON object per metric. Counter
+/// lines carry `name`/`type`/`value`; histogram lines carry
+/// `name`/`type`/`count`/`sum_us` plus raw (non-cumulative)
+/// `[upper_bound_us, count]` bucket pairs.
+pub fn json_lines(metrics: &[Metric]) -> String {
+    let mut out = String::new();
+    for m in metrics {
+        let json = match &m.value {
+            MetricValue::Counter(v) => Json::obj(vec![
+                ("name", Json::str(m.name)),
+                ("type", Json::str("counter")),
+                ("value", Json::num(*v as f64)),
+            ]),
+            MetricValue::Histogram { buckets, sum_us, count } => Json::obj(vec![
+                ("name", Json::str(m.name)),
+                ("type", Json::str("histogram")),
+                ("count", Json::num(*count as f64)),
+                ("sum_us", Json::num(*sum_us as f64)),
+                (
+                    "buckets",
+                    Json::arr(
+                        buckets
+                            .iter()
+                            .map(|&(bound, c)| {
+                                Json::arr(vec![
+                                    Json::num(bound as f64),
+                                    Json::num(c as f64),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        };
+        out.push_str(&json.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_stats_field() {
+        let stats = ServiceStats::new();
+        let metrics = registry(&stats);
+        // 15 counters + 3 histograms — a new ServiceStats field must
+        // grow this registry (rule [[R4]] checks the same lexically)
+        assert_eq!(metrics.len(), 18);
+        let mut names: Vec<&str> = metrics.iter().map(|m| m.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 18, "metric names must be unique");
+        assert!(metrics.iter().all(|m| m.name.starts_with("slabsvm_")));
+    }
+
+    #[test]
+    fn prometheus_counter_and_histogram_shape() {
+        let stats = ServiceStats::new();
+        stats.requests.add(3);
+        stats.absorb_latency.record_us(100);
+        let text = prometheus_text(&registry(&stats));
+        assert!(text.contains("# TYPE slabsvm_requests_total counter"));
+        assert!(text.contains("slabsvm_requests_total 3\n"));
+        assert!(text.contains("# TYPE slabsvm_absorb_latency_us histogram"));
+        assert!(text
+            .contains("slabsvm_absorb_latency_us_bucket{le=\"128\"} 1\n"));
+        assert!(text.contains("slabsvm_absorb_latency_us_bucket{le=\"+Inf\"} 1\n"));
+        assert!(text.contains("slabsvm_absorb_latency_us_sum 100\n"));
+        assert!(text.contains("slabsvm_absorb_latency_us_count 1\n"));
+    }
+
+    #[test]
+    fn json_lines_parse_back() {
+        let stats = ServiceStats::new();
+        stats.scored.add(7);
+        let lines = json_lines(&registry(&stats));
+        for line in lines.lines() {
+            let parsed = Json::parse(line).expect("every line parses");
+            assert!(parsed.to_string().contains("slabsvm_"));
+        }
+        assert_eq!(lines.lines().count(), 18);
+    }
+}

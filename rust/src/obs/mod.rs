@@ -1,0 +1,45 @@
+//! Observability for the serving stack (DESIGN.md §8): flight
+//! recorder, span tracing, metrics export — dependency-free, std-only.
+//!
+//! Three layers over one on/off switch:
+//!
+//! * [`recorder`] — per-thread lock-free ring buffers of typed events
+//!   ([`EventKind`]: push/absorb/repair/retrain/checkpoint/evict/
+//!   forget/backpressure), stamped with monotonic microseconds and
+//!   stream/shard ids, drainable on demand ([`drain_events`]) and
+//!   auto-dumped to a JSONL postmortem file when a typed error
+//!   surfaces on the streaming data plane ([`postmortem_dump`]).
+//! * [`trace`] — a trace id minted at `Coordinator::push`
+//!   ([`mint_trace`]) rides the mailbox into the owning shard's
+//!   absorb→repair→hot-swap chain; each stage records a [`Span`]
+//!   whose intervals are contiguous, so `queue + absorb + publish`
+//!   reconstructs the end-to-end push latency exactly, with solver
+//!   iteration counts attached to the repair spans.
+//! * [`export`] — every [`ServiceStats`](crate::coordinator::stats::ServiceStats)
+//!   counter and histogram folded into a named-metric [`registry`]
+//!   with Prometheus text ([`prometheus_text`]) and JSON-line
+//!   ([`json_lines`]) exposition; `Coordinator::metrics_text()` and
+//!   the `slabsvm stats` / `slabsvm trace` CLI verbs are the front
+//!   doors.
+//!
+//! Overhead policy: everything gates on one relaxed atomic bool
+//! ([`enabled`], default **off**, opt in via [`set_enabled`] or
+//! `SLABSVM_OBS=1`). Disabled, [`record`]/[`record_span`] are a load
+//! and a return — the absorb hot path stays allocation-free either
+//! way (rule [[R3]]). Enabled, an event is a clock read plus a few
+//! relaxed stores into a seqlock ring; nothing on the data plane ever
+//! takes a lock or allocates per event.
+
+pub mod export;
+pub mod recorder;
+pub mod trace;
+
+pub use export::{json_lines, prometheus_text, registry, Metric, MetricValue};
+pub use recorder::{
+    drain_events, enabled, init_from_env, intern_stream, now_us,
+    postmortem_dump, record, set_enabled, stream_id, stream_name, EventKind,
+    EventRecord,
+};
+pub use trace::{
+    mint_trace, recent_spans, record_span, spans_for, Span, Stage,
+};

@@ -1,0 +1,473 @@
+//! Flight recorder: per-thread lock-free ring buffers of typed events.
+//!
+//! Every thread that records gets its own fixed-capacity ring of
+//! seqlock slots (single writer — the owning thread; readers validate
+//! a per-slot sequence word and skip torn or overwritten entries), so
+//! the absorb hot path never contends on a shared lock or allocates
+//! after the ring's one-time registration. The global registry of
+//! rings (and the stream-name intern table) is behind a mutex touched
+//! only at registration and drain time, never per event.
+//!
+//! The whole layer is gated on one relaxed [`AtomicBool`]: with the
+//! recorder disabled, [`record`] is a single load-and-return — no
+//! clock read, no TLS access, no allocation (rule [[R3]] keeps the
+//! absorb loops themselves allocation-free either way). Enable via
+//! [`set_enabled`] or the `SLABSVM_OBS=1` environment variable
+//! (checked once at coordinator start, see [`init_from_env`]).
+//!
+//! Sizing: [`RING_CAP`] = 4096 events/thread × 6 u64 words/slot =
+//! 192 KiB per recording thread, overwriting oldest-first — enough to
+//! hold the last few seconds of a busy shard worker, which is the
+//! window a postmortem actually needs. Policy and taxonomy live in
+//! DESIGN.md §8.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use crate::sync::Mutex;
+use crate::util::json::Json;
+
+/// Events per thread ring; oldest entries are overwritten.
+pub const RING_CAP: usize = 4096;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Is the flight recorder (and span tracer) currently recording?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the recorder on or off. Events recorded while off are simply
+/// not captured; nothing buffers or blocks.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Enable the recorder when `SLABSVM_OBS` is set to `1`/`true`.
+/// Called by `Coordinator::start*`; idempotent, never disables.
+pub fn init_from_env() {
+    if matches!(
+        std::env::var("SLABSVM_OBS").as_deref(),
+        Ok("1") | Ok("true")
+    ) {
+        set_enabled(true);
+    }
+}
+
+/// Monotonic microseconds since the process-wide recorder epoch (the
+/// first call). All event and span timestamps share this clock.
+#[inline]
+pub fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// Typed event kinds — the flight-recorder taxonomy (DESIGN.md §8).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum EventKind {
+    /// sample accepted into a shard mailbox (`Coordinator::push`)
+    PushEnqueued,
+    /// shard worker began absorbing a sample into its session
+    AbsorbStart,
+    /// absorb finished and the model was hot-swapped
+    AbsorbEnd,
+    /// warm-started repair sweep finished; `value` = SMO iterations
+    RepairIters,
+    /// background retrain handed to the train queue; `value` = job id
+    RetrainSubmitted,
+    /// retrain result published to the registry; `value` = version
+    RetrainPublished,
+    /// retrain cancelled before publish; `value` = job id
+    RetrainCancelled,
+    /// session checkpoint durably written
+    CheckpointWritten,
+    /// window eviction chose a victim; `value` = evicted sample id
+    Evict,
+    /// targeted unlearning removed a sample; `value` = sample id
+    Forget,
+    /// producer blocked on a full per-stream mailbox (one per 50 ms
+    /// wait slice, mirroring `stream_backpressure`)
+    MailboxBlocked,
+    /// shard worker loop exited (drain/shutdown)
+    WorkerExit,
+    /// a typed error surfaced on the streaming data plane
+    ErrorRaised,
+}
+
+impl EventKind {
+    const ALL: [EventKind; 13] = [
+        EventKind::PushEnqueued,
+        EventKind::AbsorbStart,
+        EventKind::AbsorbEnd,
+        EventKind::RepairIters,
+        EventKind::RetrainSubmitted,
+        EventKind::RetrainPublished,
+        EventKind::RetrainCancelled,
+        EventKind::CheckpointWritten,
+        EventKind::Evict,
+        EventKind::Forget,
+        EventKind::MailboxBlocked,
+        EventKind::WorkerExit,
+        EventKind::ErrorRaised,
+    ];
+
+    fn code(self) -> u64 {
+        Self::ALL.iter().position(|&k| k == self).unwrap_or(0) as u64
+    }
+
+    fn from_code(c: u64) -> EventKind {
+        *Self::ALL.get(c as usize).unwrap_or(&EventKind::ErrorRaised)
+    }
+
+    /// Stable snake_case name used by the JSONL export.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::PushEnqueued => "push_enqueued",
+            EventKind::AbsorbStart => "absorb_start",
+            EventKind::AbsorbEnd => "absorb_end",
+            EventKind::RepairIters => "repair_iters",
+            EventKind::RetrainSubmitted => "retrain_submitted",
+            EventKind::RetrainPublished => "retrain_published",
+            EventKind::RetrainCancelled => "retrain_cancelled",
+            EventKind::CheckpointWritten => "checkpoint_written",
+            EventKind::Evict => "evict",
+            EventKind::Forget => "forget",
+            EventKind::MailboxBlocked => "mailbox_blocked",
+            EventKind::WorkerExit => "worker_exit",
+            EventKind::ErrorRaised => "error_raised",
+        }
+    }
+}
+
+/// One drained event, timestamped on the [`now_us`] clock.
+#[derive(Clone, Debug)]
+pub struct EventRecord {
+    pub t_us: u64,
+    pub kind: EventKind,
+    /// trace id minted at push time (0 = untraced)
+    pub trace: u64,
+    /// FNV-1a hash of the stream name (0 = no stream); resolve with
+    /// [`stream_name`]
+    pub stream: u64,
+    /// shard index the recording worker owns (u32::MAX = not a shard)
+    pub shard: u32,
+    /// kind-specific payload (iterations, version, sample id, …)
+    pub value: u64,
+}
+
+impl EventRecord {
+    /// Compact JSON object (one line of the postmortem / trace dump).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("event", Json::str(self.kind.name())),
+            ("t_us", Json::num(self.t_us as f64)),
+            ("trace", Json::num(self.trace as f64)),
+            ("value", Json::num(self.value as f64)),
+        ];
+        if let Some(name) = stream_name(self.stream) {
+            fields.push(("stream", Json::str(&name)));
+        }
+        if self.shard != u32::MAX {
+            fields.push(("shard", Json::num(self.shard as f64)));
+        }
+        Json::obj(fields)
+    }
+}
+
+// ------------------------------------------------------------- seqlock ring
+
+/// One seqlock slot: `seq` is odd while the writer is mid-update and
+/// `2*i + 2` once entry `i` is stable; readers re-check it around the
+/// field loads and skip anything torn or overwritten.
+struct Slot {
+    seq: AtomicU64,
+    t_us: AtomicU64,
+    /// kind code in the low 32 bits, shard index in the high 32
+    meta: AtomicU64,
+    trace: AtomicU64,
+    stream: AtomicU64,
+    value: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            t_us: AtomicU64::new(0),
+            meta: AtomicU64::new(0),
+            trace: AtomicU64::new(0),
+            stream: AtomicU64::new(0),
+            value: AtomicU64::new(0),
+        }
+    }
+}
+
+struct ThreadRing {
+    slots: Vec<Slot>,
+    /// entries ever written; the owning thread is the only writer
+    head: AtomicU64,
+}
+
+impl ThreadRing {
+    fn new() -> ThreadRing {
+        ThreadRing {
+            slots: (0..RING_CAP).map(|_| Slot::new()).collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    /// Single-writer append (owning thread only).
+    fn write(&self, ev: &EventRecord) {
+        let h = self.head.load(Ordering::Relaxed);
+        let Some(slot) = self.slots.get(h as usize % RING_CAP) else {
+            return;
+        };
+        slot.seq.store(2 * h + 1, Ordering::Release);
+        slot.t_us.store(ev.t_us, Ordering::Relaxed);
+        slot.meta.store(
+            ev.kind.code() | ((ev.shard as u64) << 32),
+            Ordering::Relaxed,
+        );
+        slot.trace.store(ev.trace, Ordering::Relaxed);
+        slot.stream.store(ev.stream, Ordering::Relaxed);
+        slot.value.store(ev.value, Ordering::Relaxed);
+        slot.seq.store(2 * h + 2, Ordering::Release);
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Best-effort snapshot: entries overwritten or mid-write while we
+    /// read are skipped, never torn.
+    fn snapshot(&self, out: &mut Vec<EventRecord>) {
+        let h = self.head.load(Ordering::Acquire);
+        let n = h.min(RING_CAP as u64);
+        for i in (h - n)..h {
+            let Some(slot) = self.slots.get(i as usize % RING_CAP) else {
+                continue;
+            };
+            if slot.seq.load(Ordering::Acquire) != 2 * i + 2 {
+                continue;
+            }
+            let rec = EventRecord {
+                t_us: slot.t_us.load(Ordering::Relaxed),
+                kind: EventKind::from_code(
+                    slot.meta.load(Ordering::Relaxed) & 0xffff_ffff,
+                ),
+                trace: slot.trace.load(Ordering::Relaxed),
+                stream: slot.stream.load(Ordering::Relaxed),
+                shard: (slot.meta.load(Ordering::Relaxed) >> 32) as u32,
+                value: slot.value.load(Ordering::Relaxed),
+            };
+            if slot.seq.load(Ordering::Acquire) == 2 * i + 2 {
+                out.push(rec);
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------- global registry
+
+struct Registry {
+    rings: Mutex<Vec<Arc<ThreadRing>>>,
+    names: Mutex<Vec<(u64, String)>>,
+}
+
+fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| Registry {
+        rings: Mutex::new("obs-rings", Vec::new()),
+        names: Mutex::new("obs-names", Vec::new()),
+    })
+}
+
+thread_local! {
+    static RING: Arc<ThreadRing> = {
+        let ring = Arc::new(ThreadRing::new());
+        registry().rings.lock().push(Arc::clone(&ring));
+        ring
+    };
+}
+
+/// Record one event. A no-op (one relaxed atomic load) while the
+/// recorder is disabled; otherwise a clock read plus six atomic stores
+/// into the calling thread's own ring — no locks, no allocation after
+/// the thread's first event.
+#[inline]
+pub fn record(kind: EventKind, trace: u64, stream: u64, shard: u32, value: u64) {
+    if !enabled() {
+        return;
+    }
+    let rec = EventRecord { t_us: now_us(), kind, trace, stream, shard, value };
+    RING.with(|r| r.write(&rec));
+}
+
+/// FNV-1a hash of a stream name — the `stream` id events carry.
+pub fn stream_id(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Intern a stream name so drained events and spans resolve back to
+/// it. Cold path only (stream open / session creation) — takes the
+/// name-table mutex.
+pub fn intern_stream(name: &str) -> u64 {
+    let id = stream_id(name);
+    let mut names = registry().names.lock();
+    if !names.iter().any(|(i, _)| *i == id) {
+        names.push((id, name.to_string()));
+    }
+    id
+}
+
+/// Resolve an interned stream id back to its name.
+pub fn stream_name(id: u64) -> Option<String> {
+    if id == 0 {
+        return None;
+    }
+    registry()
+        .names
+        .lock()
+        .iter()
+        .find(|(i, _)| *i == id)
+        .map(|(_, n)| n.clone())
+}
+
+/// Snapshot every thread's ring, merged and sorted by timestamp.
+/// Non-destructive: rings keep their contents (they are bounded and
+/// overwrite oldest-first, so there is nothing to reclaim).
+pub fn drain_events() -> Vec<EventRecord> {
+    let mut out = Vec::new();
+    for ring in registry().rings.lock().iter() {
+        ring.snapshot(&mut out);
+    }
+    out.sort_by_key(|e| e.t_us);
+    out
+}
+
+/// Dump the current event buffer as JSONL for postmortem analysis —
+/// called when a shard worker dies or a typed error surfaces on the
+/// data plane. Returns the path written, or `None` when the recorder
+/// is off, the buffer is empty, or the write fails (logged, never a
+/// panic: the dump must not take the failing worker down harder).
+pub fn postmortem_dump(label: &str) -> Option<std::path::PathBuf> {
+    if !enabled() {
+        return None;
+    }
+    let events = drain_events();
+    if events.is_empty() {
+        return None;
+    }
+    let dir = std::env::var("SLABSVM_POSTMORTEM_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::env::temp_dir());
+    let path = dir.join(format!(
+        "slabsvm-postmortem-{}-{label}.jsonl",
+        std::process::id()
+    ));
+    let mut body = String::new();
+    for e in &events {
+        body.push_str(&e.to_json().to_string());
+        body.push('\n');
+    }
+    match std::fs::write(&path, body) {
+        Ok(()) => {
+            crate::log_warn!(
+                "obs",
+                "postmortem: {} events dumped to {}",
+                events.len(),
+                path.display()
+            );
+            Some(path)
+        }
+        Err(e) => {
+            crate::log_warn!(
+                "obs",
+                "postmortem dump to {} failed: {e}",
+                path.display()
+            );
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_drops_events() {
+        set_enabled(false);
+        record(EventKind::Evict, 1, 2, 3, 99);
+        // no assertion on global state (other tests record concurrently);
+        // the contract is simply that this returns without touching TLS
+    }
+
+    #[test]
+    fn record_and_drain_round_trip() {
+        set_enabled(true);
+        let stream = intern_stream("rec-test-stream");
+        record(EventKind::CheckpointWritten, 7, stream, 4, 42);
+        let events = drain_events();
+        let mine: Vec<_> = events
+            .iter()
+            .filter(|e| e.stream == stream && e.trace == 7)
+            .collect();
+        assert_eq!(mine.len(), 1);
+        assert_eq!(mine[0].kind, EventKind::CheckpointWritten);
+        assert_eq!(mine[0].shard, 4);
+        assert_eq!(mine[0].value, 42);
+        assert_eq!(
+            stream_name(stream).as_deref(),
+            Some("rec-test-stream")
+        );
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let ring = ThreadRing::new();
+        for i in 0..(RING_CAP as u64 + 10) {
+            ring.write(&EventRecord {
+                t_us: i,
+                kind: EventKind::Evict,
+                trace: 0,
+                stream: 0,
+                shard: 0,
+                value: i,
+            });
+        }
+        let mut out = Vec::new();
+        ring.snapshot(&mut out);
+        assert_eq!(out.len(), RING_CAP);
+        assert_eq!(out[0].value, 10, "oldest 10 overwritten");
+    }
+
+    #[test]
+    fn kind_codes_round_trip() {
+        for k in EventKind::ALL {
+            assert_eq!(EventKind::from_code(k.code()), k);
+            assert!(!k.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn event_json_shape() {
+        set_enabled(true);
+        let stream = intern_stream("json-shape");
+        let e = EventRecord {
+            t_us: 5,
+            kind: EventKind::RepairIters,
+            trace: 9,
+            stream,
+            shard: 1,
+            value: 17,
+        };
+        let line = e.to_json().to_string();
+        assert!(line.contains("\"event\":\"repair_iters\""), "{line}");
+        assert!(line.contains("\"stream\":\"json-shape\""), "{line}");
+    }
+}

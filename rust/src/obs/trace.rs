@@ -1,0 +1,307 @@
+//! Span tracing: decompose one `Coordinator::push` into named stages.
+//!
+//! A trace id is minted at push time ([`mint_trace`]), rides through
+//! the owning shard's mailbox alongside the sample, and every stage of
+//! the absorb chain records a [`Span`] against it. The stage intervals
+//! are **contiguous by construction** — `Queue` ends on the same
+//! timestamp `Absorb` starts on, and `Absorb` ends where `Publish`
+//! starts — so `queue + absorb + publish` equals the observed
+//! enqueue→published latency exactly (the acceptance bound in
+//! ISSUE 7 / DESIGN.md §8). `Gram` and `Repair` are sub-spans *inside*
+//! `Absorb` (the admit/Gram-maintenance part of `IncrementalSmo::push`
+//! vs the warm-started repair sweep) and carry the solver's
+//! [`SolveStats`](crate::solver::SolveStats) iteration count.
+//!
+//! Storage is one global fixed-capacity ring ([`SPAN_CAP`]) of seqlock
+//! slots: writers claim an index with a fetch-add and publish with a
+//! per-slot sequence word, readers skip torn or overwritten entries —
+//! no locks anywhere, and the whole layer is gated on the same switch
+//! as the flight recorder ([`super::recorder::enabled`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use super::recorder::{enabled, stream_name};
+use crate::util::json::Json;
+
+/// Spans retained; oldest entries are overwritten.
+pub const SPAN_CAP: usize = 8192;
+
+/// Named stages of a push's life (and the serving/train side-channels).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Stage {
+    /// enqueue → popped by the owning shard worker
+    Queue,
+    /// popped → session absorb returned (covers Gram + Repair)
+    Absorb,
+    /// admit/Gram-maintenance part of the absorb (sub-span)
+    Gram,
+    /// warm-started SMO repair sweep (sub-span; `iters` = pair updates)
+    Repair,
+    /// absorb returned → model hot-swapped in the registry
+    Publish,
+    /// scoring request enqueue → batch execution start (serving side)
+    ScoreQueue,
+    /// batch execution on the engine (serving side)
+    Score,
+    /// background full retrain (`Trainer::fit`; `iters` = iterations)
+    Retrain,
+}
+
+impl Stage {
+    const ALL: [Stage; 8] = [
+        Stage::Queue,
+        Stage::Absorb,
+        Stage::Gram,
+        Stage::Repair,
+        Stage::Publish,
+        Stage::ScoreQueue,
+        Stage::Score,
+        Stage::Retrain,
+    ];
+
+    fn code(self) -> u64 {
+        Self::ALL.iter().position(|&s| s == self).unwrap_or(0) as u64
+    }
+
+    fn from_code(c: u64) -> Stage {
+        *Self::ALL.get(c as usize).unwrap_or(&Stage::Queue)
+    }
+
+    /// Stable snake_case name used by the JSONL export.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Absorb => "absorb",
+            Stage::Gram => "gram",
+            Stage::Repair => "repair",
+            Stage::Publish => "publish",
+            Stage::ScoreQueue => "score_queue",
+            Stage::Score => "score",
+            Stage::Retrain => "retrain",
+        }
+    }
+}
+
+/// One timed stage of a trace.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    /// trace id minted at push time (0 = untraced background work)
+    pub trace: u64,
+    pub stage: Stage,
+    /// start on the [`super::recorder::now_us`] clock
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// interned stream id (see [`super::recorder::stream_id`])
+    pub stream: u64,
+    /// owning shard index (u32::MAX = not shard work)
+    pub shard: u32,
+    /// solver iterations attached to Repair/Absorb/Retrain spans
+    pub iters: u64,
+}
+
+impl Span {
+    /// Exclusive end timestamp.
+    pub fn end_us(&self) -> u64 {
+        self.start_us + self.dur_us
+    }
+
+    /// Compact JSON object (one line of `slabsvm trace` output).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("stage", Json::str(self.stage.name())),
+            ("trace", Json::num(self.trace as f64)),
+            ("start_us", Json::num(self.start_us as f64)),
+            ("dur_us", Json::num(self.dur_us as f64)),
+            ("iters", Json::num(self.iters as f64)),
+        ];
+        if let Some(name) = stream_name(self.stream) {
+            fields.push(("stream", Json::str(&name)));
+        }
+        if self.shard != u32::MAX {
+            fields.push(("shard", Json::num(self.shard as f64)));
+        }
+        Json::obj(fields)
+    }
+}
+
+// ------------------------------------------------------------- span ring
+
+/// Seqlock slot, same protocol as the recorder's event rings but
+/// multi-writer: the index claimed from `HEAD` by fetch-add names the
+/// slot generation, so a reader validating `seq == 2*i + 2` can never
+/// accept a half-written entry.
+struct Slot {
+    seq: AtomicU64,
+    trace: AtomicU64,
+    /// stage code low 32 bits, shard high 32
+    meta: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+    stream: AtomicU64,
+    iters: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            trace: AtomicU64::new(0),
+            meta: AtomicU64::new(0),
+            start_us: AtomicU64::new(0),
+            dur_us: AtomicU64::new(0),
+            stream: AtomicU64::new(0),
+            iters: AtomicU64::new(0),
+        }
+    }
+}
+
+struct SpanRing {
+    slots: Vec<Slot>,
+    head: AtomicU64,
+}
+
+fn ring() -> &'static SpanRing {
+    static RING: OnceLock<SpanRing> = OnceLock::new();
+    RING.get_or_init(|| SpanRing {
+        slots: (0..SPAN_CAP).map(|_| Slot::new()).collect(),
+        head: AtomicU64::new(0),
+    })
+}
+
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+/// Mint a fresh nonzero trace id; returns 0 (untraced) while the
+/// recorder is disabled so the whole chain stays dark.
+#[inline]
+pub fn mint_trace() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    NEXT_TRACE.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Record one span. No-op while disabled; otherwise a fetch-add plus
+/// seven atomic stores — lock-free and allocation-free.
+#[inline]
+pub fn record_span(span: Span) {
+    if !enabled() {
+        return;
+    }
+    let r = ring();
+    let h = r.head.fetch_add(1, Ordering::Relaxed);
+    let Some(slot) = r.slots.get(h as usize % SPAN_CAP) else {
+        return;
+    };
+    slot.seq.store(2 * h + 1, Ordering::Release);
+    slot.trace.store(span.trace, Ordering::Relaxed);
+    slot.meta.store(
+        span.stage.code() | ((span.shard as u64) << 32),
+        Ordering::Relaxed,
+    );
+    slot.start_us.store(span.start_us, Ordering::Relaxed);
+    slot.dur_us.store(span.dur_us, Ordering::Relaxed);
+    slot.stream.store(span.stream, Ordering::Relaxed);
+    slot.iters.store(span.iters, Ordering::Relaxed);
+    slot.seq.store(2 * h + 2, Ordering::Release);
+}
+
+fn snapshot() -> Vec<Span> {
+    let r = ring();
+    let h = r.head.load(Ordering::Acquire);
+    let n = h.min(SPAN_CAP as u64);
+    let mut out = Vec::with_capacity(n as usize);
+    for i in (h - n)..h {
+        let Some(slot) = r.slots.get(i as usize % SPAN_CAP) else {
+            continue;
+        };
+        if slot.seq.load(Ordering::Acquire) != 2 * i + 2 {
+            continue;
+        }
+        let meta = slot.meta.load(Ordering::Relaxed);
+        let span = Span {
+            trace: slot.trace.load(Ordering::Relaxed),
+            stage: Stage::from_code(meta & 0xffff_ffff),
+            start_us: slot.start_us.load(Ordering::Relaxed),
+            dur_us: slot.dur_us.load(Ordering::Relaxed),
+            stream: slot.stream.load(Ordering::Relaxed),
+            shard: (meta >> 32) as u32,
+            iters: slot.iters.load(Ordering::Relaxed),
+        };
+        if slot.seq.load(Ordering::Acquire) == 2 * i + 2 {
+            out.push(span);
+        }
+    }
+    out
+}
+
+/// The most recent spans (up to `limit`), oldest first.
+pub fn recent_spans(limit: usize) -> Vec<Span> {
+    let mut spans = snapshot();
+    spans.sort_by_key(|s| s.start_us);
+    if spans.len() > limit {
+        spans.drain(..spans.len() - limit);
+    }
+    spans
+}
+
+/// All retained spans of one trace, ordered by start time.
+pub fn spans_for(trace: u64) -> Vec<Span> {
+    let mut spans: Vec<Span> =
+        snapshot().into_iter().filter(|s| s.trace == trace).collect();
+    spans.sort_by_key(|s| s.start_us);
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::set_enabled;
+
+    #[test]
+    fn mint_is_monotone_and_gated() {
+        set_enabled(false);
+        assert_eq!(mint_trace(), 0);
+        set_enabled(true);
+        let a = mint_trace();
+        let b = mint_trace();
+        assert!(b > a && a > 0);
+    }
+
+    #[test]
+    fn spans_group_by_trace() {
+        set_enabled(true);
+        let t = mint_trace();
+        record_span(Span {
+            trace: t,
+            stage: Stage::Queue,
+            start_us: 100,
+            dur_us: 5,
+            stream: 1,
+            shard: 0,
+            iters: 0,
+        });
+        record_span(Span {
+            trace: t,
+            stage: Stage::Absorb,
+            start_us: 105,
+            dur_us: 40,
+            stream: 1,
+            shard: 0,
+            iters: 12,
+        });
+        let chain = spans_for(t);
+        assert_eq!(chain.len(), 2);
+        assert_eq!(chain[0].stage, Stage::Queue);
+        assert_eq!(chain[0].end_us(), chain[1].start_us, "contiguous");
+        assert_eq!(chain[1].iters, 12);
+    }
+
+    #[test]
+    fn stage_codes_round_trip() {
+        for s in Stage::ALL {
+            assert_eq!(Stage::from_code(s.code()), s);
+            assert!(!s.name().is_empty());
+        }
+    }
+}

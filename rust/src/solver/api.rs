@@ -761,12 +761,35 @@ impl Trainer {
     }
 
     /// Train on `x` with the configured solver and layers.
+    ///
+    /// With the recorder on ([`crate::obs`]) every fit records a
+    /// Retrain span carrying the solve's iteration count — background
+    /// retrains on the train queue show up in `slabsvm trace` output
+    /// alongside the incremental Repair spans they escalate from.
     pub fn fit(&self, x: &Matrix) -> Result<FitReport> {
         self.validate_composition()?;
-        if self.cascade.is_some() {
-            return self.fit_cascade(x);
+        let t_start = if crate::obs::enabled() {
+            Some(crate::obs::now_us())
+        } else {
+            None
+        };
+        let report = if self.cascade.is_some() {
+            self.fit_cascade(x)
+        } else {
+            self.fit_direct(x)
+        }?;
+        if let Some(start_us) = t_start {
+            crate::obs::record_span(crate::obs::Span {
+                trace: 0,
+                stage: crate::obs::Stage::Retrain,
+                start_us,
+                dur_us: crate::obs::now_us().saturating_sub(start_us),
+                stream: 0,
+                shard: u32::MAX,
+                iters: report.stats.iterations as u64,
+            });
         }
-        self.fit_direct(x)
+        Ok(report)
     }
 
     /// One solve, no cascade (warm-start / cache layers still apply).

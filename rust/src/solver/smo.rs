@@ -28,6 +28,14 @@
 //!
 //! Per-iteration cost: O(m) selection + O(m) rank-2 margin update —
 //! the paper's scaling claim against O(m²)-per-step QP solvers.
+//!
+//! Observability: every solve's [`SolveStats`] (iterations, objective,
+//! max violation, kernel evals) surfaces downstream — batch fits as the
+//! Retrain span a [`Trainer::fit`](crate::solver::Trainer::fit)
+//! records, per-sample warm-started repairs as the iteration count on
+//! the streaming layer's Repair spans ([`crate::obs`], DESIGN.md §8) —
+//! so the paper's few-dozen-iterations repair claim is checkable on a
+//! live serving stack, not just in benches.
 
 use std::time::Instant;
 

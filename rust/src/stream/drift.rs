@@ -17,7 +17,10 @@
 //! [`DriftEvent`]; the owning [`crate::stream::StreamSession`] escalates
 //! to a full cascade retrain on the background
 //! [`crate::coordinator::TrainQueue`] and re-baselines once the new
-//! model lands.
+//! model lands. With the flight recorder on, each escalation leaves a
+//! `retrain_submitted` → `retrain_published` event pair (correlated by
+//! job id) in the [`crate::obs`] ring, so drift trips are visible in
+//! `slabsvm trace` output without any drift-specific plumbing.
 
 /// Drift-detection thresholds.
 #[derive(Clone, Copy, Debug)]

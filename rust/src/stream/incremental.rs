@@ -91,6 +91,12 @@ pub struct IncrementalSmo {
     stats: SolveStats,
     /// cumulative repair iterations across the stream
     repair_iterations: u64,
+    /// wall micros the most recent push spent admitting the sample
+    /// (Gram row + mass transfers + margin refresh), then repairing —
+    /// the per-stage split the shard worker turns into Gram/Repair
+    /// sub-spans ([`IncrementalSmo::last_stage_us`])
+    last_admit_us: u64,
+    last_repair_us: u64,
     /// Reusable warm-start buffers for [`IncrementalSmo::repair`]: the
     /// previous repair's state vectors ping-pong back as the next
     /// repair's scratch, so the steady-state absorb path allocates
@@ -118,6 +124,8 @@ impl IncrementalSmo {
             rho2: 0.0,
             stats: SolveStats::default(),
             repair_iterations: 0,
+            last_admit_us: 0,
+            last_repair_us: 0,
             scratch_alpha: Vec::new(),
             scratch_abar: Vec::new(),
             scratch_s: Vec::new(),
@@ -157,6 +165,8 @@ impl IncrementalSmo {
             rho2,
             stats: SolveStats::default(),
             repair_iterations,
+            last_admit_us: 0,
+            last_repair_us: 0,
             scratch_alpha: Vec::new(),
             scratch_abar: Vec::new(),
             scratch_s: Vec::new(),
@@ -218,6 +228,16 @@ impl IncrementalSmo {
         self.repair_iterations
     }
 
+    /// Wall-clock split of the most recent push, `(admit_us,
+    /// repair_us)`: micros spent admitting the sample (Gram row, mass
+    /// transfers, periodic margin refresh) and micros spent in the
+    /// warm-started KKT repair. The shard worker places these as the
+    /// Gram/Repair sub-spans tiling the tail of an Absorb span; the
+    /// streaming benches report their means per BENCHJSON row.
+    pub fn last_stage_us(&self) -> (u64, u64) {
+        (self.last_admit_us, self.last_repair_us)
+    }
+
     fn cap_a(&self) -> f64 {
         1.0 / (self.cfg.smo.nu1 * self.len() as f64)
     }
@@ -258,11 +278,21 @@ impl IncrementalSmo {
     /// sequence number — the handle [`IncrementalSmo::forget`] takes).
     /// Errors leave the pre-repair feasible state in place.
     pub fn push(&mut self, x: &[f64]) -> Result<u64> {
+        let t0 = std::time::Instant::now();
         let slot = if self.window.is_full() {
             let victim = self.cfg.policy.policy().victim(
                 self.window.ids(),
                 &self.alpha,
                 &self.alpha_bar,
+            );
+            // value = the evicted sample's stable id; push order is the
+            // only context here, so trace/stream are left to the shard
+            crate::obs::record(
+                crate::obs::EventKind::Evict,
+                0,
+                0,
+                u32::MAX,
+                self.window.id(victim),
             );
             self.replace_slot(victim, x);
             victim
@@ -273,7 +303,10 @@ impl IncrementalSmo {
         if self.window.admitted() % self.cfg.refresh_every.max(1) == 0 {
             self.recompute_margins();
         }
+        self.last_admit_us = t0.elapsed().as_micros() as u64;
+        let t1 = std::time::Instant::now();
         self.repair()?;
+        self.last_repair_us = t1.elapsed().as_micros() as u64;
         Ok(id)
     }
 

@@ -190,8 +190,9 @@ impl StreamManager {
         stats: Arc<ServiceStats>,
     ) -> StreamManager {
         let n = pool.shards.max(1);
-        let shards: Vec<Arc<Shard>> =
-            (0..n).map(|_| Arc::new(Shard::new(pool.mailbox_cap))).collect();
+        let shards: Vec<Arc<Shard>> = (0..n)
+            .map(|i| Arc::new(Shard::new(i, pool.mailbox_cap)))
+            .collect();
         let (sink, ckpt_writer) = match &pool.checkpoint {
             Some(cfg) => {
                 let (tx, rx) =
@@ -205,9 +206,18 @@ impl StreamManager {
                         // a crash mid-write never leaves a truncated
                         // snapshot visible
                         for (path, bytes) in rx {
+                            let len = bytes.len() as u64;
                             match persist::write_atomic(&path, &bytes) {
                                 Ok(()) => {
-                                    wstats.stream_checkpoints.inc()
+                                    wstats.stream_checkpoints.inc();
+                                    // value = snapshot bytes on disk
+                                    crate::obs::record(
+                                        crate::obs::EventKind::CheckpointWritten,
+                                        0,
+                                        0,
+                                        u32::MAX,
+                                        len,
+                                    );
                                 }
                                 Err(e) => {
                                     wstats.stream_checkpoint_errors.inc();
@@ -324,6 +334,12 @@ impl StreamManager {
 
     /// Enqueue one sample onto the owning shard's mailbox. Blocks while
     /// this stream's queue is at capacity (backpressure; never drops).
+    ///
+    /// This is where a trace is born: with the recorder enabled a trace
+    /// id is minted here and rides the mailbox with the sample, so the
+    /// owning shard's absorb→repair→hot-swap chain records under the
+    /// same id ([`crate::obs`]). Disabled, `mint_trace` returns 0 and
+    /// the whole chain stays dark for one relaxed atomic load.
     pub fn push(&self, name: &str, x: &[f64]) -> Result<()> {
         let idx = {
             let route = self.route.read();
@@ -331,7 +347,20 @@ impl StreamManager {
                 Error::Coordinator(format!("unknown stream '{name}'"))
             })?
         };
-        self.shard_at(idx)?.push(name, x, &self.stats)?;
+        let trace = crate::obs::mint_trace();
+        let t_enq = if trace != 0 {
+            crate::obs::record(
+                crate::obs::EventKind::PushEnqueued,
+                trace,
+                crate::obs::stream_id(name),
+                idx as u32,
+                0,
+            );
+            crate::obs::now_us()
+        } else {
+            0
+        };
+        self.shard_at(idx)?.push(name, x, trace, t_enq, &self.stats)?;
         self.stats.stream_pushes.inc();
         Ok(())
     }

@@ -54,6 +54,15 @@
 //!   `restore_streams` resume a whole multi-tenant fleet after a
 //!   restart without cold window refills (experiment PS1).
 //!
+//! The whole layer is traced end to end by [`crate::obs`] (DESIGN.md
+//! §8): a trace id minted at `Coordinator::push` rides the shard
+//! mailbox with its sample, and the owning shard records contiguous
+//! Queue→Absorb→Publish spans (with Gram/Repair sub-spans from the
+//! solver's own stage split) plus typed flight-recorder events for
+//! evictions, forgets, retrain hand-offs, checkpoints, backpressure
+//! and worker exits. Disabled (the default), the recorder costs one
+//! relaxed atomic load per would-be event.
+//!
 //! Why incremental works here: the slab dual decomposes per-sample (the
 //! same property the SMO pair update exploits), so admitting or evicting
 //! one point perturbs a *feasible* dual by O(1) coordinates. A

@@ -51,7 +51,11 @@
 //! Durability: [`write_atomic`] writes to a temp file in the target
 //! directory, fsyncs, then renames over the destination (and fsyncs the
 //! directory), so a crash mid-write can never leave a truncated
-//! `*.snap` visible to a restorer.
+//! `*.snap` visible to a restorer. Each durable write is mirrored as a
+//! `checkpoint_written` flight-recorder event ([`crate::obs`]) — from
+//! the writer thread for periodic checkpoints (value = bytes written)
+//! and from the owning shard for front-door snapshot sweeps — so
+//! checkpoint cadence is observable next to the absorbs it protects.
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;

@@ -23,6 +23,9 @@
 //! The trait is object-safe and stateless; configs carry the
 //! serializable [`PolicyKind`] tag (snapshot format v2, CLI `--evict`)
 //! and resolve it to a `&'static dyn EvictionPolicy` at use sites.
+//! Every eviction the chosen policy makes is recorded as an `evict`
+//! flight-recorder event carrying the victim's stable id
+//! ([`crate::obs`]), so policy behavior is auditable on a live stream.
 
 use crate::error::Error;
 

@@ -108,8 +108,14 @@ impl StreamSession {
     /// absorbs forever without publishing or arming drift detection.
     pub fn new(name: impl Into<String>, mut cfg: StreamConfig) -> StreamSession {
         cfg.min_train = cfg.min_train.min(cfg.window);
+        let name = name.into();
+        // cold-path intern so spans/events drained later resolve this
+        // stream's id back to its name (no-op while the recorder is off)
+        if crate::obs::enabled() {
+            crate::obs::intern_stream(&name);
+        }
         StreamSession {
-            name: name.into(),
+            name,
             inc: IncrementalSmo::new(
                 cfg.kernel,
                 cfg.window,
@@ -231,6 +237,10 @@ impl StreamSession {
         forgets: u64,
     ) -> StreamSession {
         cfg.min_train = cfg.min_train.min(cfg.window);
+        // restored sessions trace like fresh ones: re-intern the name
+        if crate::obs::enabled() {
+            crate::obs::intern_stream(&name);
+        }
         let mut drift = DriftMonitor::new(cfg.drift);
         if let Some((r1, r2)) = baseline {
             drift.rebaseline(r1, r2);

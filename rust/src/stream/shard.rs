@@ -43,6 +43,7 @@ use crate::coordinator::{
     JobStatus, ModelRegistry, ServiceStats, TrainQueue, TrainRequest,
 };
 use crate::error::Error;
+use crate::obs::{self, EventKind, Stage};
 use crate::Result;
 
 use super::manager::{ForgetOutcome, StreamSummary};
@@ -96,9 +97,19 @@ pub(crate) struct CheckpointSink {
     pub(crate) tx: Sender<(PathBuf, Vec<u8>)>,
 }
 
+/// One mailbox sample plus the tracing context that rides with it: the
+/// trace id minted at `Coordinator::push` and the enqueue timestamp the
+/// Queue span starts on (both 0 while the recorder is disabled, so the
+/// untraced payload costs two extra words and nothing else).
+pub(crate) struct QueuedSample {
+    x: Vec<f64>,
+    trace: u64,
+    t_enq_us: u64,
+}
+
 /// Per-stream FIFO of samples waiting to be absorbed.
 struct StreamQueue {
-    samples: VecDeque<Vec<f64>>,
+    samples: VecDeque<QueuedSample>,
     /// weighted-fair service weight: samples per scheduler visit (≥ 1)
     weight: u32,
     /// expected sample dimension — validated at push time so a
@@ -140,7 +151,7 @@ impl Mailbox {
     /// first non-empty queue yields up to `weight` samples and the
     /// cursor moves just past it, so every non-empty shard-mate is
     /// visited before this stream is served again.
-    fn pop_fair(&mut self) -> Option<(String, Vec<Vec<f64>>)> {
+    fn pop_fair(&mut self) -> Option<(String, Vec<QueuedSample>)> {
         let n = self.order.len();
         if n == 0 {
             return None;
@@ -159,7 +170,7 @@ impl Mailbox {
             let name = candidate.clone();
             let Some(q) = self.queues.get_mut(&name) else { continue };
             let take = (q.weight.max(1) as usize).min(q.samples.len());
-            let batch: Vec<Vec<f64>> = q.samples.drain(..take).collect();
+            let batch: Vec<QueuedSample> = q.samples.drain(..take).collect();
             self.queued -= take;
             self.in_flight += take;
             self.cursor = (idx + 1) % n;
@@ -196,15 +207,19 @@ pub(crate) struct Shard {
     /// producer + quiescer wakeups: space freed / work retired
     space: Condvar,
     cap: usize,
+    /// position in the manager's shard array — stamped on every event
+    /// and span this shard records
+    idx: u32,
 }
 
 impl Shard {
-    pub(crate) fn new(mailbox_cap: usize) -> Shard {
+    pub(crate) fn new(idx: usize, mailbox_cap: usize) -> Shard {
         Shard {
             mail: Mutex::new("shard.mail", Mailbox::new()),
             not_empty: Condvar::new(),
             space: Condvar::new(),
             cap: mailbox_cap.max(1),
+            idx: idx as u32,
         }
     }
 
@@ -303,6 +318,8 @@ impl Shard {
         &self,
         name: &str,
         x: &[f64],
+        trace: u64,
+        t_enq_us: u64,
         stats: &ServiceStats,
     ) -> Result<()> {
         let mut mail = self.mail.lock();
@@ -332,6 +349,16 @@ impl Shard {
                 break;
             }
             stats.stream_backpressure.inc();
+            if trace != 0 {
+                // one event per 50ms wait slice: value = queue depth
+                obs::record(
+                    EventKind::MailboxBlocked,
+                    trace,
+                    obs::stream_id(name),
+                    self.idx,
+                    depth as u64,
+                );
+            }
             let (guard, _) =
                 self.space.wait_timeout(mail, Duration::from_millis(50));
             mail = guard;
@@ -341,7 +368,7 @@ impl Shard {
         let Some(q) = mail.queues.get_mut(name) else {
             return Err(Error::Coordinator(format!("unknown stream '{name}'")));
         };
-        q.samples.push_back(x.to_vec());
+        q.samples.push_back(QueuedSample { x: x.to_vec(), trace, t_enq_us });
         mail.queued += 1;
         drop(mail);
         self.not_empty.notify_one();
@@ -498,9 +525,17 @@ pub(crate) fn reconcile_retrain(
 
 /// Absorb one sample into a slot: hot-swap the refreshed model into the
 /// registry and escalate a background retrain when drift tripped.
+///
+/// Tracing shape (only when the sample carries a trace id): `t_pop`
+/// closes the Queue span and opens Absorb on the same timestamp, and
+/// `t_done` closes Absorb and opens Publish — so the three stages tile
+/// the enqueue→publish interval exactly and their durations sum to the
+/// end-to-end push latency. The Gram/Repair sub-spans tile the tail of
+/// Absorb from the solver's own per-push stage split.
 fn absorb_one(
     slot: &mut Slot,
-    x: &[f64],
+    sample: &QueuedSample,
+    shard_idx: u32,
     registry: &ModelRegistry,
     jobs: &TrainQueue,
     stats: &ServiceStats,
@@ -508,12 +543,84 @@ fn absorb_one(
     // runtime form of the R2 invariant: the caller released the mail
     // lock before handing the batch here
     crate::sync::assert_lock_free("absorb");
+    let trace = sample.trace;
+    let sid =
+        if trace != 0 { obs::stream_id(slot.session.name()) } else { 0 };
+    let t_pop = if trace != 0 {
+        let t = obs::now_us();
+        obs::record(EventKind::AbsorbStart, trace, sid, shard_idx, 0);
+        obs::record_span(obs::Span {
+            trace,
+            stage: Stage::Queue,
+            start_us: sample.t_enq_us,
+            dur_us: t.saturating_sub(sample.t_enq_us),
+            stream: sid,
+            shard: shard_idx,
+            iters: 0,
+        });
+        t
+    } else {
+        0
+    };
     let t0 = Instant::now();
-    match slot.session.absorb(x) {
+    match slot.session.absorb(&sample.x) {
         Ok(absorbed) => {
+            let t_done = if trace != 0 { obs::now_us() } else { 0 };
+            if trace != 0 {
+                let iters =
+                    slot.session.solver().last_stats().iterations as u64;
+                let (admit_us, repair_us) =
+                    slot.session.solver().last_stage_us();
+                obs::record_span(obs::Span {
+                    trace,
+                    stage: Stage::Absorb,
+                    start_us: t_pop,
+                    dur_us: t_done.saturating_sub(t_pop),
+                    stream: sid,
+                    shard: shard_idx,
+                    iters,
+                });
+                obs::record_span(obs::Span {
+                    trace,
+                    stage: Stage::Gram,
+                    start_us: t_done.saturating_sub(admit_us + repair_us),
+                    dur_us: admit_us,
+                    stream: sid,
+                    shard: shard_idx,
+                    iters: 0,
+                });
+                obs::record_span(obs::Span {
+                    trace,
+                    stage: Stage::Repair,
+                    start_us: t_done.saturating_sub(repair_us),
+                    dur_us: repair_us,
+                    stream: sid,
+                    shard: shard_idx,
+                    iters,
+                });
+                obs::record(EventKind::AbsorbEnd, trace, sid, shard_idx, 0);
+                obs::record(
+                    EventKind::RepairIters,
+                    trace,
+                    sid,
+                    shard_idx,
+                    iters,
+                );
+            }
             if let Some(model) = absorbed.model {
                 slot.last_version =
                     Some(registry.insert(slot.session.name(), model));
+                if trace != 0 {
+                    obs::record_span(obs::Span {
+                        trace,
+                        stage: Stage::Publish,
+                        start_us: t_done,
+                        dur_us: obs::now_us().saturating_sub(t_done),
+                        stream: sid,
+                        shard: shard_idx,
+                        iters: 0,
+                    });
+                }
             }
             if absorbed.retrain_wanted {
                 let id = jobs.submit(TrainRequest {
@@ -537,6 +644,8 @@ fn absorb_one(
                 slot.session.name()
             );
             stats.stream_absorb_errors.inc();
+            obs::record(EventKind::ErrorRaised, trace, sid, shard_idx, 0);
+            let _ = obs::postmortem_dump("absorb-error");
         }
     }
     stats.absorb_latency.record(t0.elapsed());
@@ -577,6 +686,20 @@ pub(crate) fn run_worker(
     stats: Arc<ServiceStats>,
     ckpt: Option<CheckpointSink>,
 ) {
+    /// Records WorkerExit on every way out of the loop; when the exit
+    /// is an unwind (an invariant assertion fired somewhere below), the
+    /// flight recorder is dumped to a postmortem file so the events
+    /// leading up to the death survive the thread.
+    struct ExitGuard(u32);
+    impl Drop for ExitGuard {
+        fn drop(&mut self) {
+            obs::record(EventKind::WorkerExit, 0, 0, self.0, 0);
+            if std::thread::panicking() {
+                let _ = obs::postmortem_dump("shard-worker");
+            }
+        }
+    }
+    let _exit = ExitGuard(shard.idx);
     let mut slots: HashMap<String, Slot> = HashMap::new();
     let mut closing: HashMap<String, Sender<Result<StreamSummary>>> =
         HashMap::new();
@@ -653,6 +776,13 @@ pub(crate) fn run_worker(
                                         jobs.cancel(old);
                                     }
                                 }
+                                obs::record(
+                                    EventKind::Forget,
+                                    0,
+                                    obs::stream_id(&name),
+                                    shard.idx,
+                                    id,
+                                );
                                 // hot-swap the post-removal model so the
                                 // served slab stops reflecting the
                                 // forgotten sample immediately
@@ -725,6 +855,13 @@ pub(crate) fn run_worker(
                             slot.dirty = false;
                             slot.last_ckpt = Instant::now();
                             stats.stream_checkpoints.inc();
+                            obs::record(
+                                EventKind::CheckpointWritten,
+                                0,
+                                obs::stream_id(slot.session.name()),
+                                shard.idx,
+                                0,
+                            );
                         } else {
                             stats.stream_checkpoint_errors.inc();
                         }
@@ -739,8 +876,8 @@ pub(crate) fn run_worker(
         let had_batch = batch.is_some();
         if let Some((name, samples)) = batch {
             if let Some(slot) = slots.get_mut(&name) {
-                for x in &samples {
-                    absorb_one(slot, x, &registry, &jobs, &stats);
+                for s in &samples {
+                    absorb_one(slot, s, shard.idx, &registry, &jobs, &stats);
                 }
             }
             let mut mail = shard.mail.lock();
@@ -885,7 +1022,11 @@ mod tests {
         for &(name, weight, n) in streams {
             let mut q = VecDeque::new();
             for i in 0..n {
-                q.push_back(vec![i as f64]);
+                q.push_back(QueuedSample {
+                    x: vec![i as f64],
+                    trace: 0,
+                    t_enq_us: 0,
+                });
             }
             m.queued += n;
             m.queues.insert(
@@ -974,27 +1115,27 @@ mod tests {
 
     #[test]
     fn shard_push_rejects_unknown_stream() {
-        let shard = Shard::new(8);
+        let shard = Shard::new(0, 8);
         let stats = ServiceStats::new();
-        assert!(shard.push("ghost", &[0.0, 0.0], &stats).is_err());
+        assert!(shard.push("ghost", &[0.0, 0.0], 0, 0, &stats).is_err());
     }
 
     #[test]
     fn shard_push_rejects_dimension_mismatch() {
-        let shard = Shard::new(8);
+        let shard = Shard::new(0, 8);
         let stats = ServiceStats::new();
         assert!(shard.open("s", StreamConfig::default(), 1)); // dim = 2
-        assert!(shard.push("s", &[1.0, 2.0, 3.0], &stats).is_err());
-        assert!(shard.push("s", &[1.0], &stats).is_err());
+        assert!(shard.push("s", &[1.0, 2.0, 3.0], 0, 0, &stats).is_err());
+        assert!(shard.push("s", &[1.0], 0, 0, &stats).is_err());
         assert_eq!(shard.queue_depth(), 0, "bad samples must not queue");
     }
 
     #[test]
     fn shard_open_rejected_while_draining() {
-        let shard = Shard::new(8);
+        let shard = Shard::new(0, 8);
         shard.begin_drain();
         assert!(!shard.open("late", StreamConfig::default(), 1));
         let stats = ServiceStats::new();
-        assert!(shard.push("late", &[0.0, 0.0], &stats).is_err());
+        assert!(shard.push("late", &[0.0, 0.0], 0, 0, &stats).is_err());
     }
 }

@@ -28,9 +28,22 @@ pub fn init() {
         set_level(match v.to_ascii_lowercase().as_str() {
             "error" => Level::Error,
             "warn" => Level::Warn,
+            "info" => Level::Info,
             "debug" => Level::Debug,
             "trace" => Level::Trace,
-            _ => Level::Info,
+            other => {
+                // fall back loudly: a typo'd filter that silently
+                // reverts to info reads as "debug logging is broken"
+                log(
+                    Level::Warn,
+                    "logging",
+                    format_args!(
+                        "unknown SLABSVM_LOG value {other:?}; using info \
+                         (expected error|warn|info|debug|trace)"
+                    ),
+                );
+                Level::Info
+            }
         });
     }
 }
@@ -45,6 +58,18 @@ pub fn enabled(l: Level) -> bool {
 
 /// Core log call; use the macros below instead.
 pub fn log(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    log_with_trace(l, target, 0, msg);
+}
+
+/// [`log`] with a span-trace correlation id (`trace=<id>` suffix; 0 =
+/// untraced, printed identically to [`log`]). The `trace: <id>,` macro
+/// arms route here so log lines and `obs::trace` spans join on the id.
+pub fn log_with_trace(
+    l: Level,
+    target: &str,
+    trace_id: u64,
+    msg: std::fmt::Arguments<'_>,
+) {
     if !enabled(l) {
         return;
     }
@@ -56,11 +81,20 @@ pub fn log(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
         Level::Debug => "DEBUG",
         Level::Trace => "TRACE",
     };
-    eprintln!("[{t:9.3}s {tag} {target}] {msg}");
+    if trace_id == 0 {
+        eprintln!("[{t:9.3}s {tag} {target}] {msg}");
+    } else {
+        eprintln!("[{t:9.3}s {tag} {target}] {msg} trace={trace_id}");
+    }
 }
 
 #[macro_export]
 macro_rules! log_error {
+    (trace: $tid:expr, $target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log_with_trace(
+            $crate::util::logging::Level::Error, $target, $tid,
+            format_args!($($arg)*))
+    };
     ($target:expr, $($arg:tt)*) => {
         $crate::util::logging::log($crate::util::logging::Level::Error, $target,
                                    format_args!($($arg)*))
@@ -68,6 +102,11 @@ macro_rules! log_error {
 }
 #[macro_export]
 macro_rules! log_warn {
+    (trace: $tid:expr, $target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log_with_trace(
+            $crate::util::logging::Level::Warn, $target, $tid,
+            format_args!($($arg)*))
+    };
     ($target:expr, $($arg:tt)*) => {
         $crate::util::logging::log($crate::util::logging::Level::Warn, $target,
                                    format_args!($($arg)*))
@@ -75,6 +114,11 @@ macro_rules! log_warn {
 }
 #[macro_export]
 macro_rules! log_info {
+    (trace: $tid:expr, $target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log_with_trace(
+            $crate::util::logging::Level::Info, $target, $tid,
+            format_args!($($arg)*))
+    };
     ($target:expr, $($arg:tt)*) => {
         $crate::util::logging::log($crate::util::logging::Level::Info, $target,
                                    format_args!($($arg)*))
@@ -82,6 +126,11 @@ macro_rules! log_info {
 }
 #[macro_export]
 macro_rules! log_debug {
+    (trace: $tid:expr, $target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log_with_trace(
+            $crate::util::logging::Level::Debug, $target, $tid,
+            format_args!($($arg)*))
+    };
     ($target:expr, $($arg:tt)*) => {
         $crate::util::logging::log($crate::util::logging::Level::Debug, $target,
                                    format_args!($($arg)*))
@@ -91,6 +140,16 @@ macro_rules! log_debug {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn trace_macros_compile_and_gate() {
+        init();
+        set_level(Level::Info);
+        // the trace: arms must accept both traced and untraced calls
+        crate::log_info!(trace: 42, "test", "traced line {}", 1);
+        crate::log_info!("test", "untraced line {}", 2);
+        log_with_trace(Level::Debug, "test", 7, format_args!("gated out"));
+    }
 
     #[test]
     fn level_gating() {

@@ -1,0 +1,269 @@
+//! Observability integration tests (DESIGN.md §8).
+//!
+//! The end-to-end trace test drives a real push through the 2-shard
+//! session manager and asserts the acceptance bound of ISSUE 7: the
+//! recorded span chain is connected (one trace id from enqueue to
+//! publish), its stages are contiguous and monotone, their durations
+//! sum to the end-to-end latency, and the Repair span carries the
+//! solver's own iteration count. The golden tests pin the exposition
+//! formats: `prometheus_text` must stay parseable Prometheus text
+//! (format 0.0.4) with stable metric names, and `json_lines` must
+//! stay one canonical-JSON object per metric.
+
+use slabsvm::coordinator::{BatcherConfig, Coordinator, ServiceStats};
+use slabsvm::data::synthetic::{SlabConfig, SlabStream};
+use slabsvm::kernel::Kernel;
+use slabsvm::obs::{self, Stage};
+use slabsvm::runtime::Engine;
+use slabsvm::stream::{StreamConfig, StreamPoolConfig, StreamSpec};
+use slabsvm::util::json::Json;
+
+fn stream_cfg(window: usize) -> StreamConfig {
+    StreamConfig {
+        kernel: Kernel::Linear,
+        dim: 2,
+        window,
+        min_train: window / 2,
+        ..Default::default()
+    }
+}
+
+/// One push's reconstructed stage chain.
+struct Chain {
+    queue: obs::Span,
+    absorb: obs::Span,
+    publish: obs::Span,
+    gram: obs::Span,
+    repair: obs::Span,
+}
+
+fn chain_for(trace: u64) -> Option<Chain> {
+    let spans = obs::spans_for(trace);
+    let find = |stage: Stage| spans.iter().copied().find(|s| s.stage == stage);
+    Some(Chain {
+        queue: find(Stage::Queue)?,
+        absorb: find(Stage::Absorb)?,
+        publish: find(Stage::Publish)?,
+        gram: find(Stage::Gram)?,
+        repair: find(Stage::Repair)?,
+    })
+}
+
+#[test]
+fn push_yields_connected_contiguous_span_chain() {
+    obs::set_enabled(true);
+    let window = 32;
+    let c = Coordinator::start_with_streams(
+        Engine::Native,
+        BatcherConfig::default(),
+        1,
+        StreamPoolConfig { shards: 2, mailbox_cap: 64, checkpoint: None },
+    );
+    c.open_streams(vec![
+        StreamSpec::new("trace-left", stream_cfg(window)),
+        StreamSpec::new("trace-right", stream_cfg(window)),
+    ])
+    .expect("open streams");
+    let mut left = SlabStream::new(SlabConfig::default(), 99);
+    let mut right = SlabStream::new(SlabConfig::default(), 100);
+    for _ in 0..(window + window / 2) {
+        c.push("trace-left", &left.next_point()).expect("push left");
+        c.push("trace-right", &right.next_point()).expect("push right");
+    }
+    c.quiesce_streams();
+
+    // group retained spans by trace; keep fully published chains
+    let mut traces: Vec<u64> = obs::recent_spans(usize::MAX)
+        .into_iter()
+        .filter(|s| s.trace != 0)
+        .map(|s| s.trace)
+        .collect();
+    traces.sort_unstable();
+    traces.dedup();
+    let chains: Vec<Chain> =
+        traces.iter().filter_map(|&t| chain_for(t)).collect();
+    assert!(
+        !chains.is_empty(),
+        "no push produced a full queue/absorb/publish/gram/repair chain"
+    );
+
+    for ch in &chains {
+        // one trace, one stream, one owning shard across the chain
+        let shard = ch.queue.shard;
+        assert!(shard < 2, "shard index {shard} out of range");
+        for s in [&ch.absorb, &ch.publish, &ch.gram, &ch.repair] {
+            assert_eq!(s.shard, shard, "chain crossed shards");
+            assert_eq!(s.stream, ch.queue.stream, "chain crossed streams");
+        }
+        let name = obs::stream_name(ch.queue.stream)
+            .expect("traced stream name must be interned");
+        assert!(name.starts_with("trace-"), "unexpected stream {name}");
+
+        // contiguous by construction: queue ends where absorb starts,
+        // absorb ends where publish starts
+        assert_eq!(ch.queue.end_us(), ch.absorb.start_us, "queue→absorb");
+        assert_eq!(ch.absorb.end_us(), ch.publish.start_us, "absorb→publish");
+
+        // stage durations decompose the end-to-end latency: exact by
+        // construction, and comfortably inside the 10% acceptance bound
+        let end_to_end = ch.publish.end_us() - ch.queue.start_us;
+        let sum = ch.queue.dur_us + ch.absorb.dur_us + ch.publish.dur_us;
+        assert_eq!(sum, end_to_end, "stage sum != end-to-end latency");
+        assert!(
+            10 * sum.abs_diff(end_to_end) <= end_to_end.max(1),
+            "stage sum {sum}us outside 10% of end-to-end {end_to_end}us"
+        );
+
+        // Gram/Repair nest inside Absorb (2us slack: the sub-stages are
+        // clocked separately, so truncation can disagree by a tick)
+        assert!(
+            ch.gram.start_us + 2 >= ch.absorb.start_us,
+            "gram sub-span starts before its absorb"
+        );
+        assert!(
+            ch.repair.end_us() <= ch.absorb.end_us() + 2,
+            "repair sub-span outlives its absorb"
+        );
+        assert!(
+            ch.gram.end_us() <= ch.repair.start_us + 2,
+            "gram and repair sub-spans overlap"
+        );
+        // the solver's SolveStats ride both the repair span and its
+        // parent absorb span
+        assert_eq!(ch.repair.iters, ch.absorb.iters, "iters mismatch");
+    }
+    assert!(
+        chains.iter().any(|c| c.repair.iters > 0),
+        "no repair span carried solver iterations"
+    );
+
+    // the flight recorder saw the same lifecycle, in order
+    let events = obs::drain_events();
+    let t = chains[0].queue.trace;
+    let at = |kind: obs::EventKind| {
+        events
+            .iter()
+            .find(|e| e.trace == t && e.kind == kind)
+            .map(|e| e.t_us)
+    };
+    let enq = at(obs::EventKind::PushEnqueued).expect("push_enqueued");
+    let start = at(obs::EventKind::AbsorbStart).expect("absorb_start");
+    let done = at(obs::EventKind::AbsorbEnd).expect("absorb_end");
+    assert!(enq <= start && start <= done, "event timestamps not monotone");
+
+    c.shutdown();
+}
+
+// ------------------------------------------------------------- golden
+
+/// Minimal Prometheus text-format (0.0.4) line validator.
+fn assert_prometheus_line(line: &str) {
+    if line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
+        return;
+    }
+    let (metric, value) =
+        line.rsplit_once(' ').unwrap_or_else(|| panic!("no value: {line}"));
+    assert!(
+        value.parse::<f64>().is_ok(),
+        "unparseable sample value in {line:?}"
+    );
+    let name = metric.split('{').next().unwrap_or("");
+    assert!(
+        !name.is_empty()
+            && name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+        "illegal metric name in {line:?}"
+    );
+    if let Some(rest) = metric.strip_prefix(name) {
+        if !rest.is_empty() {
+            assert!(
+                rest.starts_with("{le=\"") && rest.ends_with("\"}"),
+                "unexpected label block in {line:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prometheus_text_golden() {
+    let stats = ServiceStats::new();
+    stats.requests.add(2);
+    stats.absorb_latency.record_us(100);
+    let text = slabsvm::obs::prometheus_text(&slabsvm::obs::registry(&stats));
+
+    // pinned counter block: HELP, TYPE, then the bare sample
+    assert!(
+        text.starts_with(
+            "# HELP slabsvm_requests_total scoring requests accepted\n\
+             # TYPE slabsvm_requests_total counter\n\
+             slabsvm_requests_total 2\n"
+        ),
+        "counter exposition changed:\n{text}"
+    );
+    // pinned histogram tail: cumulative buckets end at +Inf == count
+    assert!(text.contains("# TYPE slabsvm_absorb_latency_us histogram\n"));
+    assert!(text.contains("slabsvm_absorb_latency_us_bucket{le=\"+Inf\"} 1\n"));
+    assert!(text.contains("slabsvm_absorb_latency_us_sum 100\n"));
+    assert!(text.contains("slabsvm_absorb_latency_us_count 1\n"));
+
+    for line in text.lines() {
+        assert_prometheus_line(line);
+    }
+}
+
+#[test]
+fn coordinator_metrics_text_is_valid_prometheus() {
+    let c = Coordinator::start(Engine::Native, BatcherConfig::default(), 1);
+    let text = c.metrics_text();
+    c.shutdown();
+    assert_eq!(
+        text.lines().filter(|l| l.starts_with("# TYPE ")).count(),
+        18,
+        "registry size drifted — update the golden tests deliberately"
+    );
+    for line in text.lines() {
+        assert_prometheus_line(line);
+    }
+}
+
+#[test]
+fn json_lines_golden() {
+    let stats = ServiceStats::new();
+    stats.scored.add(7);
+    let lines = slabsvm::obs::json_lines(&slabsvm::obs::registry(&stats));
+    assert_eq!(lines.lines().count(), 18);
+
+    // pinned first line: canonical JSON, alphabetical keys
+    assert_eq!(
+        lines.lines().next().unwrap(),
+        "{\"name\":\"slabsvm_requests_total\",\"type\":\"counter\",\"value\":0}",
+        "counter JSON shape changed"
+    );
+
+    let mut saw_scored = false;
+    for line in lines.lines() {
+        let v = Json::parse(line).expect("every line parses");
+        let name = v.get("name").and_then(Json::as_str).expect("name");
+        assert!(name.starts_with("slabsvm_"), "unprefixed {name}");
+        match v.get("type").and_then(Json::as_str) {
+            Some("counter") => {
+                let val = v.get("value").and_then(Json::as_f64).expect("value");
+                if name == "slabsvm_scored_total" {
+                    assert_eq!(val, 7.0);
+                    saw_scored = true;
+                }
+            }
+            Some("histogram") => {
+                assert!(v.get("count").is_some(), "{name} lacks count");
+                assert!(v.get("sum_us").is_some(), "{name} lacks sum_us");
+                assert!(
+                    v.get("buckets").and_then(Json::as_arr).is_some(),
+                    "{name} lacks bucket pairs"
+                );
+            }
+            other => panic!("unknown metric type {other:?} on {name}"),
+        }
+    }
+    assert!(saw_scored, "slabsvm_scored_total missing from JSON export");
+}

@@ -540,6 +540,79 @@ def r4(stats_file, stats, sources, surface_extra):
     return out
 
 
+def r4_export(export_file, export, stats):
+    out = []
+    span = fn_body(export, "registry")
+    if span is None:
+        out.append({"rule": "R4", "file": export_file, "line": 1,
+                    "message": ("fn registry(…) not found — metric export "
+                                "check cannot run"),
+                    "text": ""})
+        return out
+    start, end = span
+    body = export.lines[start:end + 1]
+    # (a) every stats field reaches the registry builder
+    for field, _ in service_stats_fields(stats):
+        pat = "." + field
+        exported = False
+        for l in body:
+            p = l.find(pat)
+            while p >= 0:
+                nxt = l[p + len(pat): p + len(pat) + 1]
+                if not nxt or not is_ident(nxt):
+                    exported = True
+                    break
+                p = l.find(pat, p + 1)
+            if exported:
+                break
+        if not exported:
+            out.append(finding(
+                "R4", export_file, start,
+                f"ServiceStats field `{field}` is not exported by the obs "
+                "metric registry",
+                export))
+    # (b) registered names: unique, slabsvm_-prefixed identifiers.
+    # Stripped blanks literal contents in place, so a `"` pair in a
+    # stripped line brackets the same columns of the raw line; a
+    # bare-identifier string in the builder is a metric name (help
+    # strings always contain spaces).
+    names = []
+    for i in range(start, end + 1):
+        sl = export.lines[i]
+        rl = export.raw[i] if i < len(export.raw) else ""
+        j = 0
+        while j < len(sl):
+            if sl[j] != '"':
+                j += 1
+                continue
+            k = sl.find('"', j + 1)
+            if k < 0:
+                break
+            lit = rl[j + 1:k]
+            if lit and all(is_ident(c) for c in lit):
+                names.append((lit, i))
+            j = k + 1
+    seen = set()
+    for name, i in names:
+        if not name.startswith("slabsvm_"):
+            out.append(finding(
+                "R4", export_file, i,
+                f"metric name `{name}` is not `slabsvm_`-prefixed", export))
+        if name in seen:
+            out.append(finding(
+                "R4", export_file, i,
+                f"metric name `{name}` registered more than once", export))
+        seen.add(name)
+    # (c) both exposition formats exist to render the registry
+    for fname in ("prometheus_text", "json_lines"):
+        if fn_body(export, fname) is None:
+            out.append({"rule": "R4", "file": export_file, "line": 1,
+                        "message": (f"exporter fn `{fname}` missing from "
+                                    "the export layer"),
+                        "text": ""})
+    return out
+
+
 BRACKET = re.compile(r"\[\[([A-Za-z0-9_-]+)\]\]")
 SECTION = re.compile(r"§([A-Za-z0-9.]+)")
 
@@ -704,6 +777,13 @@ def run_fixtures():
     f = r4("r4_ok.rs", Stripped(src4), [("r4_ok.rs", Stripped(src4))], "")
     check("r4_ok", len(f), 0)
 
+    f = r4_export("r4_export_bad.rs", Stripped(load("r4_export_bad.rs")),
+                  Stripped(load("r4_bad.rs")))
+    check("r4_export_bad", len(f), 4)
+    f = r4_export("r4_export_ok.rs", Stripped(load("r4_export_ok.rs")),
+                  Stripped(load("r4_ok.rs")))
+    check("r4_export_ok", len(f), 0)
+
     f = r5(DESIGN_FIXTURE, [("r5_bad.rs", load("r5_bad.rs"))])
     check("r5_bad", len(f), 2)
     f = r5(DESIGN_FIXTURE, [("r5_ok.rs", load("r5_ok.rs"))])
@@ -762,6 +842,18 @@ def main():
              if rel.endswith("src/main.rs")), "")
         pairs = [(rel, s) for rel, _, s in sources]
         findings += r4(stats_entry[0], stats_entry[1], pairs, surface_extra)
+        export_entry = next(
+            ((rel, s) for rel, _, s in sources
+             if rel.endswith("obs/export.rs")), None)
+        if export_entry:
+            findings += r4_export(export_entry[0], export_entry[1],
+                                  stats_entry[1])
+        else:
+            findings.append({"rule": "R4", "file": "rust/src/obs/export.rs",
+                             "line": 1,
+                             "message": ("obs/export.rs not found — metric "
+                                         "export check cannot run"),
+                             "text": ""})
     else:
         findings.append({"rule": "R4", "file": "rust/src/coordinator/stats.rs",
                          "line": 1, "message": "stats.rs not found", "text": ""})

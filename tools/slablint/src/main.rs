@@ -111,6 +111,21 @@ fn run(root: &Path) -> Result<bool, String> {
             .map(|(r, raw, _)| (r.clone(), Stripped::new(raw)))
             .collect();
         findings.extend(rules::r4(rel, stats, &pairs, &surface_extra));
+        // export half: every field must also reach the obs registry
+        match sources.iter().find(|(r, _, _)| r.ends_with("obs/export.rs")) {
+            Some((erel, _, export)) => {
+                findings.extend(rules::r4_export(erel, export, stats));
+            }
+            None => findings.push(Finding {
+                rule: "R4",
+                file: "rust/src/obs/export.rs".into(),
+                line: 1,
+                message: "obs/export.rs not found — metric export check \
+                          cannot run"
+                    .into(),
+                text: String::new(),
+            }),
+        }
     } else {
         findings.push(Finding {
             rule: "R4",

@@ -553,6 +553,125 @@ pub fn r4(
     out
 }
 
+/// R4 (export half): every `pub` field of `ServiceStats` must be
+/// folded into the obs metric registry (`rust/src/obs/export.rs`),
+/// every registered metric name must be a unique `slabsvm_`-prefixed
+/// identifier, and both exposition formats must exist. Complements
+/// [`r4`]: that half guarantees a counter is fed and humanly visible,
+/// this half guarantees it reaches the machine-readable exports.
+///
+/// Metric names are recovered positionally: [`crate::lexer::Stripped`]
+/// blanks literal contents in place, so a `"` pair in a stripped line
+/// brackets the same columns in the raw line. A quoted string inside
+/// the registry builder whose content is one bare identifier is a
+/// metric name; help strings always contain spaces.
+pub fn r4_export(
+    export_file: &str,
+    export: &Stripped,
+    stats: &Stripped,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some((start, end)) = fn_body(export, "registry") else {
+        out.push(Finding {
+            rule: "R4",
+            file: export_file.to_string(),
+            line: 1,
+            message: "fn registry(…) not found — metric export check \
+                      cannot run"
+                .into(),
+            text: String::new(),
+        });
+        return out;
+    };
+    // (a) every stats field reaches the registry builder
+    for (field, _) in service_stats_fields(stats) {
+        let pat = format!(".{field}");
+        let exported = export.lines[start..=end].iter().any(|l| {
+            l.match_indices(&pat).any(|(p, m)| {
+                !l[p + m.len()..].chars().next().is_some_and(is_ident)
+            })
+        });
+        if !exported {
+            out.push(finding(
+                "R4",
+                export_file,
+                start,
+                format!(
+                    "ServiceStats field `{field}` is not exported by the \
+                     obs metric registry"
+                ),
+                export,
+            ));
+        }
+    }
+    // (b) registered names: unique, slabsvm_-prefixed identifiers
+    let mut names: Vec<(String, usize)> = Vec::new();
+    for i in start..=end {
+        let s_chars: Vec<char> = export.lines[i].chars().collect();
+        let r_chars: Vec<char> = export
+            .raw
+            .get(i)
+            .map(|l| l.chars().collect())
+            .unwrap_or_default();
+        let mut j = 0;
+        while j < s_chars.len() {
+            if s_chars[j] != '"' {
+                j += 1;
+                continue;
+            }
+            let mut k = j + 1;
+            while k < s_chars.len() && s_chars[k] != '"' {
+                k += 1;
+            }
+            if k < s_chars.len() && k <= r_chars.len() {
+                let lit: String = r_chars[j + 1..k].iter().collect();
+                if !lit.is_empty() && lit.chars().all(is_ident) {
+                    names.push((lit, i));
+                }
+            }
+            j = k + 1;
+        }
+    }
+    let mut seen: Vec<&str> = Vec::new();
+    for (name, i) in &names {
+        if !name.starts_with("slabsvm_") {
+            out.push(finding(
+                "R4",
+                export_file,
+                *i,
+                format!("metric name `{name}` is not `slabsvm_`-prefixed"),
+                export,
+            ));
+        }
+        if seen.contains(&name.as_str()) {
+            out.push(finding(
+                "R4",
+                export_file,
+                *i,
+                format!("metric name `{name}` registered more than once"),
+                export,
+            ));
+        } else {
+            seen.push(name);
+        }
+    }
+    // (c) both exposition formats exist to render the registry
+    for f in ["prometheus_text", "json_lines"] {
+        if fn_body(export, f).is_none() {
+            out.push(Finding {
+                rule: "R4",
+                file: export_file.to_string(),
+                line: 1,
+                message: format!(
+                    "exporter fn `{f}` missing from the export layer"
+                ),
+                text: String::new(),
+            });
+        }
+    }
+    out
+}
+
 /// `(field name, 0-based line)` for each pub field of ServiceStats.
 fn service_stats_fields(s: &Stripped) -> Vec<(String, usize)> {
     let mut out = Vec::new();

@@ -1,0 +1,24 @@
+// R4 export fixture (bad), paired with the r4_bad.rs stats struct
+// (fields: requests, ghost, silent). Four defects: `ghost` never
+// reaches the registry, one metric name is unprefixed, one name is
+// registered twice, and the JSON exporter is missing.
+
+pub fn registry(stats: &ServiceStats) -> Vec<Metric> {
+    vec![
+        counter(
+            "slabsvm_requests_total",
+            "scoring requests accepted",
+            &stats.requests,
+        ),
+        counter(
+            "slabsvm_requests_total",
+            "oops, registered under the same name",
+            &stats.silent,
+        ),
+        counter("bad_name", "missing the mandatory prefix", &stats.silent),
+    ]
+}
+
+pub fn prometheus_text(metrics: &[Metric]) -> String {
+    String::new()
+}

@@ -1,0 +1,26 @@
+// R4 export fixture (ok), paired with the r4_ok.rs stats struct
+// (fields: requests, absorb_latency): every field is registered under
+// a unique slabsvm_-prefixed name and both exposition formats exist.
+
+pub fn registry(stats: &ServiceStats) -> Vec<Metric> {
+    vec![
+        counter(
+            "slabsvm_requests_total",
+            "scoring requests accepted",
+            &stats.requests,
+        ),
+        histogram(
+            "slabsvm_absorb_latency_us",
+            "per-sample absorb latency (microseconds)",
+            &stats.absorb_latency,
+        ),
+    ]
+}
+
+pub fn prometheus_text(metrics: &[Metric]) -> String {
+    String::new()
+}
+
+pub fn json_lines(metrics: &[Metric]) -> String {
+    String::new()
+}

@@ -108,6 +108,31 @@ fn r4_boundary_is_silent() {
 }
 
 #[test]
+fn r4_export_flags_known_bad() {
+    let stats = Stripped::new(&fixture("r4_bad.rs"));
+    let export = Stripped::new(&fixture("r4_export_bad.rs"));
+    let f = rules::r4_export("r4_export_bad.rs", &export, &stats);
+    assert_eq!(
+        f.len(),
+        4,
+        "unexported field, bad prefix, duplicate name, lost exporter: {f:#?}"
+    );
+    assert!(f.iter().all(|x| x.rule == "R4"));
+    assert!(f.iter().any(|x| x.message.contains("not exported")));
+    assert!(f.iter().any(|x| x.message.contains("prefixed")));
+    assert!(f.iter().any(|x| x.message.contains("more than once")));
+    assert!(f.iter().any(|x| x.message.contains("json_lines")));
+}
+
+#[test]
+fn r4_export_boundary_is_silent() {
+    let stats = Stripped::new(&fixture("r4_ok.rs"));
+    let export = Stripped::new(&fixture("r4_export_ok.rs"));
+    let f = rules::r4_export("r4_export_ok.rs", &export, &stats);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
 fn r5_flags_known_bad() {
     let src = fixture("r5_bad.rs");
     let f = rules::r5(DESIGN_FIXTURE, &[("r5_bad.rs".to_string(), src)]);
