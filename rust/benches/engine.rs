@@ -8,9 +8,15 @@
 //! (On a real TPU the same artifacts lower to MXU matmuls; see DESIGN.md
 //! §Hardware-Adaptation / §Perf for the VMEM/MXU analysis.)
 //!
-//! Requires `make artifacts`. Run: `cargo bench --bench engine`
+//! Also measures **K1** — the lane-blocked row kernel against a naive
+//! per-element `eval` loop, with a perf floor: the blocked path must not
+//! be materially slower than scalar (asserted; nonzero exit on failure).
+//! K1 needs no artifacts and always runs.
+//!
+//! Requires `make artifacts` for A3. Run: `cargo bench --bench engine`
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use slabsvm::bench::Bench;
 use slabsvm::data::synthetic::SlabConfig;
@@ -18,13 +24,84 @@ use slabsvm::kernel::Kernel;
 use slabsvm::runtime::Engine;
 use slabsvm::solver::{SolverKind, Trainer};
 
+/// K1 — blocked vs scalar RBF row build over an m×d design. Returns
+/// (blocked_median_s, scalar_median_s) for the perf-floor assertion.
+fn row_kernel_bench(bench: &mut Bench) -> (f64, f64) {
+    let m = 1024usize;
+    let ds = SlabConfig::default().generate(m, 4242);
+    let kern = Kernel::Rbf { g: 0.01 };
+    let q: Vec<f64> = ds.x.row(0).to_vec();
+    let reps = 32usize;
+
+    let mut out = vec![0.0; m];
+    let blocked = bench
+        .run("rowkernel-blocked/m=1024", || {
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                kern.row(&ds.x, &q, &mut out);
+                std::hint::black_box(&out);
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            vec![
+                ("kernel_rows_per_s".into(), reps as f64 / dt),
+                ("ns_per_row".into(), dt * 1e9 / reps as f64),
+                ("checksum".into(), out.iter().sum()),
+            ]
+        })
+        .median();
+
+    let mut out2 = vec![0.0; m];
+    let scalar = bench
+        .run("rowkernel-scalar/m=1024", || {
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                for (j, o) in out2.iter_mut().enumerate() {
+                    *o = kern.eval(ds.x.row(j), &q);
+                }
+                std::hint::black_box(&out2);
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            vec![
+                ("kernel_rows_per_s".into(), reps as f64 / dt),
+                ("ns_per_row".into(), dt * 1e9 / reps as f64),
+                ("checksum".into(), out2.iter().sum()),
+            ]
+        })
+        .median();
+
+    assert_eq!(
+        out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        out2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "blocked row must be bitwise-identical to the scalar eval loop"
+    );
+    (blocked, scalar)
+}
+
 fn main() {
+    let mut bench = Bench::from_env();
+
+    // ---- K1: row-kernel microbench + perf floor -----------------------
+    let (blocked_s, scalar_s) = row_kernel_bench(&mut bench);
+    println!(
+        "row kernel: blocked {blocked_s:.6}s vs scalar {scalar_s:.6}s \
+         per sample ({:.2}x)",
+        scalar_s / blocked_s.max(1e-12)
+    );
+    // perf floor: the restructured path exists to be vectorizable; it
+    // must never regress below the naive loop (slack for timer noise in
+    // the 1-sample CI smoke run)
+    assert!(
+        blocked_s <= scalar_s * 1.25,
+        "perf floor violated: blocked row kernel {blocked_s:.6}s > \
+         1.25 x scalar {scalar_s:.6}s"
+    );
+
     let Ok(pjrt) = Engine::pjrt("artifacts") else {
         eprintln!("artifacts missing — run `make artifacts` first; skipping");
+        bench.report("K1 — blocked row kernel (A3 skipped: no artifacts)");
         return;
     };
     let native = Engine::Native;
-    let mut bench = Bench::from_env();
 
     // ---- numerical agreement gate ------------------------------------
     {

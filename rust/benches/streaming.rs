@@ -104,8 +104,25 @@ fn main() {
             }
             let retrain_s = median(&retrain_times);
 
+            // blocked row-kernel throughput on the resident window: the
+            // per-absorb Gram maintenance is one such row build, so this
+            // is the hot-path kernel rate the absorb cost sits on
+            let xmat = inc.window().matrix();
+            let probe = stream.next_point();
+            let mut krow = vec![0.0; xmat.rows()];
+            let krows = 16;
+            let tk = std::time::Instant::now();
+            for _ in 0..krows {
+                Kernel::Linear.row(&xmat, &probe, &mut krow);
+                std::hint::black_box(&krow);
+            }
+            let kernel_rows_per_s =
+                krows as f64 / tk.elapsed().as_secs_f64().max(1e-12);
+
             vec![
                 ("update_s".into(), update_s),
+                ("ns_per_absorb".into(), update_s * 1e9),
+                ("kernel_rows_per_s".into(), kernel_rows_per_s),
                 ("updates_per_s".into(), 1.0 / update_s.max(1e-12)),
                 ("retrain_s".into(), retrain_s),
                 ("speedup".into(), retrain_s / update_s.max(1e-12)),
@@ -255,6 +272,7 @@ fn main() {
                 ("mgr_s".into(), mgr_s),
                 ("seq_updates_per_s".into(), total / seq_s.max(1e-12)),
                 ("mgr_updates_per_s".into(), total / mgr_s.max(1e-12)),
+                ("ns_per_absorb".into(), mgr_s * 1e9 / total),
                 ("speedup".into(), seq_s / mgr_s.max(1e-12)),
                 ("queue_us".into(), mean(0)),
                 ("gram_us".into(), mean(1)),
@@ -339,6 +357,10 @@ fn main() {
                 recovered.unwrap_or(cap) as f64,
             ),
             ("cold_refill_s".into(), cold_s),
+            (
+                "ns_per_absorb".into(),
+                cold_s * 1e9 / (cold_samples as f64).max(1.0),
+            ),
             ("refill_speedup".into(), cold_s / restore_s.max(1e-12)),
         ]
     });

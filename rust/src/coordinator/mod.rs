@@ -273,6 +273,20 @@ impl Coordinator {
         self.streams.forget(name, id)
     }
 
+    /// Batch unlearning: withdraw several resident samples in one shard
+    /// tick — one repair sweep, one hot-swap, one replacement retrain —
+    /// instead of `k` sequential [`Coordinator::forget`] calls each
+    /// paying a full repair and publishing an intermediate model. The
+    /// batch is all-or-nothing: any non-resident or duplicated id
+    /// rejects the whole request before any mass is withdrawn.
+    pub fn forget_many(
+        &self,
+        name: &str,
+        ids: &[u64],
+    ) -> Result<ForgetOutcome> {
+        self.streams.forget_many(name, ids)
+    }
+
     /// Close a managed stream: drains its queued samples, then returns
     /// its final accounting.
     pub fn close_stream(&self, name: &str) -> Result<StreamSummary> {

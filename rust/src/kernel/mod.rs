@@ -5,8 +5,28 @@
 //! PJRT engines are interchangeable (engine-equivalence is asserted in
 //! `rust/tests/runtime_roundtrip.rs`).
 
-use crate::linalg::{dot, Matrix};
+use crate::linalg::{dot, dot_f32, sq_dist, sq_dist_f32, Matrix};
 use crate::util::threadpool;
+
+/// Floating-point width for kernel/Gram compute.
+///
+/// `F64` is the reference mode: every result is bitwise pinned by the
+/// parity and persistence suites. `F32` runs the Gram contraction at
+/// single precision (roughly 2x the lane width on the same vector
+/// units) and widens each entry back to f64 for the solver; any fit
+/// made in `F32` mode must pass the f64 KKT certificate or the trainer
+/// visibly falls back to a full f64 fit (`FitReport::fell_back`).
+/// The streaming window Gram and snapshot checksums always stay f64 —
+/// `F32` accelerates batch fits and background retrains only.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Reference double-precision compute (bitwise-pinned paths).
+    #[default]
+    F64,
+    /// Single-precision Gram build, certified against the f64 KKT
+    /// checker with automatic fallback.
+    F32,
+}
 
 /// Kernel family + hyper-parameters.
 ///
@@ -36,6 +56,16 @@ impl Kernel {
     }
 
     /// (g, c, degree) params vector fed to the PJRT artifacts.
+    ///
+    /// The PJRT wire format is f32 end to end (artifact inputs, device
+    /// buffers), so hyper-parameters are **deliberately truncated**
+    /// here: two kernels whose `g` differs only below f32 resolution
+    /// produce identical params vectors and identical device results.
+    /// That collapse is confined to the PJRT plane — the native engine
+    /// evaluates in f64, `Kernel` equality compares full f64 bits, and
+    /// snapshot config fingerprints hash the f64 encoding, so two such
+    /// models never silently alias outside the accelerator path
+    /// (pinned by `params3_truncation_cannot_alias_models`).
     pub fn params3(&self) -> [f32; 3] {
         match *self {
             Kernel::Linear => [0.0, 0.0, 0.0],
@@ -50,32 +80,154 @@ impl Kernel {
     pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
         match *self {
             Kernel::Linear => dot(a, b),
-            Kernel::Rbf { g } => (-g * crate::linalg::sq_dist(a, b)).exp(),
+            Kernel::Rbf { g } => (-g * sq_dist(a, b)).exp(),
             Kernel::Poly { g, c, degree } => (g * dot(a, b) + c).powf(degree),
             Kernel::Sigmoid { g, c } => (g * dot(a, b) + c).tanh(),
         }
     }
 
-    /// Fill `out[j] = k(x_row, x[j])` for all rows j of `x`.
+    /// Evaluate k(a, b) at single precision (f32 contraction + f32
+    /// transcendental), widened to f64. See [`Precision::F32`].
+    #[inline]
+    pub fn eval_f32(&self, a: &[f64], b: &[f64]) -> f64 {
+        f64::from(match *self {
+            Kernel::Linear => dot_f32(a, b),
+            Kernel::Rbf { g } => (-(g as f32) * sq_dist_f32(a, b)).exp(),
+            Kernel::Poly { g, c, degree } => {
+                (g as f32 * dot_f32(a, b) + c as f32).powf(degree as f32)
+            }
+            Kernel::Sigmoid { g, c } => (g as f32 * dot_f32(a, b) + c as f32).tanh(),
+        })
+    }
+
+    /// Evaluate k(a, b) in the given compute mode.
+    #[inline]
+    pub fn eval_in(&self, prec: Precision, a: &[f64], b: &[f64]) -> f64 {
+        match prec {
+            Precision::F64 => self.eval(a, b),
+            Precision::F32 => self.eval_f32(a, b),
+        }
+    }
+
+    /// Blocked row fill: `out[k] = k(row, x[j0 + k])`.
+    ///
+    /// Two passes so each inner loop is a single tight shape the
+    /// compiler can vectorize: pass 1 runs the lane-blocked
+    /// contraction (`sq_dist`/`dot`) per element, pass 2 applies the
+    /// scalar transform (fused exp/powf/tanh batch over the row).
+    /// Per element this performs the exact operations of [`eval`] in
+    /// the same order, so the result is bitwise identical to the
+    /// scalar path — the property the persistence checksums and the
+    /// blocked-vs-scalar parity suite rely on.
+    fn row_block(&self, x: &Matrix, row: &[f64], out: &mut [f64], j0: usize) {
+        debug_assert!(j0 + out.len() <= x.rows());
+        match *self {
+            Kernel::Linear => {
+                for (k, o) in out.iter_mut().enumerate() {
+                    *o = dot(row, x.row(j0 + k));
+                }
+            }
+            Kernel::Rbf { g } => {
+                for (k, o) in out.iter_mut().enumerate() {
+                    *o = sq_dist(row, x.row(j0 + k));
+                }
+                for o in out.iter_mut() {
+                    *o = (-g * *o).exp();
+                }
+            }
+            Kernel::Poly { g, c, degree } => {
+                for (k, o) in out.iter_mut().enumerate() {
+                    *o = dot(row, x.row(j0 + k));
+                }
+                for o in out.iter_mut() {
+                    *o = (g * *o + c).powf(degree);
+                }
+            }
+            Kernel::Sigmoid { g, c } => {
+                for (k, o) in out.iter_mut().enumerate() {
+                    *o = dot(row, x.row(j0 + k));
+                }
+                for o in out.iter_mut() {
+                    *o = (g * *o + c).tanh();
+                }
+            }
+        }
+    }
+
+    /// f32 analogue of [`Self::row_block`]: f32 contraction, fused f32
+    /// transform batch, widened into the f64 output row.
+    fn row_block_f32(&self, x: &Matrix, row: &[f64], out: &mut [f64], j0: usize) {
+        debug_assert!(j0 + out.len() <= x.rows());
+        match *self {
+            Kernel::Linear => {
+                for (k, o) in out.iter_mut().enumerate() {
+                    *o = f64::from(dot_f32(row, x.row(j0 + k)));
+                }
+            }
+            Kernel::Rbf { g } => {
+                let g32 = g as f32;
+                for (k, o) in out.iter_mut().enumerate() {
+                    *o = f64::from(sq_dist_f32(row, x.row(j0 + k)));
+                }
+                for o in out.iter_mut() {
+                    *o = f64::from((-g32 * *o as f32).exp());
+                }
+            }
+            Kernel::Poly { g, c, degree } => {
+                let (g32, c32, d32) = (g as f32, c as f32, degree as f32);
+                for (k, o) in out.iter_mut().enumerate() {
+                    *o = f64::from(dot_f32(row, x.row(j0 + k)));
+                }
+                for o in out.iter_mut() {
+                    *o = f64::from((g32 * *o as f32 + c32).powf(d32));
+                }
+            }
+            Kernel::Sigmoid { g, c } => {
+                let (g32, c32) = (g as f32, c as f32);
+                for (k, o) in out.iter_mut().enumerate() {
+                    *o = f64::from(dot_f32(row, x.row(j0 + k)));
+                }
+                for o in out.iter_mut() {
+                    *o = f64::from((g32 * *o as f32 + c32).tanh());
+                }
+            }
+        }
+    }
+
+    /// Fill `out[j] = k(x_row, x[j])` for all rows j of `x` (blocked).
     pub fn row(&self, x: &Matrix, row: &[f64], out: &mut [f64]) {
         debug_assert_eq!(out.len(), x.rows());
-        for (j, o) in out.iter_mut().enumerate() {
-            *o = self.eval(row, x.row(j));
+        self.row_block(x, row, out, 0);
+    }
+
+    /// [`Self::row`] in the given compute mode.
+    pub fn row_in(&self, prec: Precision, x: &Matrix, row: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), x.rows());
+        match prec {
+            Precision::F64 => self.row_block(x, row, out, 0),
+            Precision::F32 => self.row_block_f32(x, row, out, 0),
         }
     }
 
     /// Full Gram matrix, parallel over row blocks, exploiting symmetry.
     pub fn gram(&self, x: &Matrix, threads: usize) -> Matrix {
+        self.gram_in(Precision::F64, x, threads)
+    }
+
+    /// [`Self::gram`] in the given compute mode. Each worker fills the
+    /// upper triangle of its rows through the blocked row path (j >= i);
+    /// the mirror pass completes the matrix, so symmetry is exact by
+    /// construction in both modes.
+    pub fn gram_in(&self, prec: Precision, x: &Matrix, threads: usize) -> Matrix {
         let n = x.rows();
         let mut k = Matrix::zeros(n, n);
-        // Parallel over rows; each worker fills the upper triangle of its
-        // rows (j >= i) — the mirror pass below completes the matrix.
         threadpool::parallel_rows(k.data_mut(), n, threads, |start, rows| {
             for (r, out) in rows.chunks_mut(n).enumerate() {
                 let i = start + r;
                 let xi = x.row(i);
-                for j in i..n {
-                    out[j] = self.eval(xi, x.row(j));
+                match prec {
+                    Precision::F64 => self.row_block(x, xi, &mut out[i..], i),
+                    Precision::F32 => self.row_block_f32(x, xi, &mut out[i..], i),
                 }
             }
         });
@@ -89,7 +241,7 @@ impl Kernel {
         k
     }
 
-    /// Cross-kernel matrix K[i][j] = k(x_i, q_j).
+    /// Cross-kernel matrix K[i][j] = k(x_i, q_j), blocked per row.
     pub fn cross(&self, x: &Matrix, q: &Matrix, threads: usize) -> Matrix {
         assert_eq!(x.cols(), q.cols());
         let (n, m) = (x.rows(), q.rows());
@@ -97,9 +249,7 @@ impl Kernel {
         threadpool::parallel_rows(k.data_mut(), m, threads, |start, rows| {
             for (r, out) in rows.chunks_mut(m).enumerate() {
                 let xi = x.row(start + r);
-                for (j, o) in out.iter_mut().enumerate() {
-                    *o = self.eval(xi, q.row(j));
-                }
+                self.row_block(q, xi, out, 0);
             }
         });
         k
@@ -210,5 +360,70 @@ mod tests {
             Kernel::Poly { g: 1.0, c: 2.0, degree: 3.0 }.params3(),
             [1.0, 2.0, 3.0]
         );
+    }
+
+    #[test]
+    fn params3_truncation_cannot_alias_models() {
+        // γ split below f32 resolution: the PJRT params vector collapses
+        // (documented truncation) but the native-side identities stay
+        // distinct, so no silent model aliasing outside the device path.
+        let g = 0.5f64;
+        let g_eps = f64::from(0.5f32) + 1e-12;
+        assert_ne!(g.to_bits(), g_eps.to_bits());
+        let (ka, kb) = (Kernel::Rbf { g }, Kernel::Rbf { g: g_eps });
+        assert_eq!(ka.params3(), kb.params3(), "f32 wire collapse is expected");
+        assert_ne!(ka, kb, "native identity must keep full f64 bits");
+        // and the native engine actually computes different values
+        let a = [1.0, 2.0, 3.0];
+        let b = [0.0, 1.0, -1.0];
+        assert_ne!(ka.eval(&a, &b).to_bits(), kb.eval(&a, &b).to_bits());
+    }
+
+    #[test]
+    fn blocked_row_bitwise_matches_scalar_eval() {
+        let x = rand_matrix(41, 7, 9); // odd sizes exercise lane tails
+        for k in [
+            Kernel::Linear,
+            Kernel::Rbf { g: 0.7 },
+            Kernel::Poly { g: 0.5, c: 1.0, degree: 2.0 },
+            Kernel::Sigmoid { g: 0.2, c: 0.1 },
+        ] {
+            let mut row = vec![0.0; 41];
+            k.row(&x, x.row(13), &mut row);
+            for j in 0..41 {
+                assert_eq!(
+                    row[j].to_bits(),
+                    k.eval(x.row(13), x.row(j)).to_bits(),
+                    "blocked row diverged from scalar eval at j={j} for {k:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_mode_tracks_f64_and_is_symmetric() {
+        let x = rand_matrix(32, 5, 11);
+        let k = Kernel::Rbf { g: 0.4 };
+        let g64 = k.gram_in(Precision::F64, &x, 3);
+        let g32 = k.gram_in(Precision::F32, &x, 3);
+        for i in 0..32 {
+            for j in 0..32 {
+                assert!((g64.get(i, j) - g32.get(i, j)).abs() < 1e-4);
+                assert_eq!(g32.get(i, j), g32.get(j, i));
+            }
+        }
+        assert_eq!(
+            k.eval_in(Precision::F32, x.row(0), x.row(1)),
+            k.eval_f32(x.row(0), x.row(1))
+        );
+    }
+
+    #[test]
+    fn gram_in_f32_thread_invariance() {
+        let x = rand_matrix(48, 4, 12);
+        let k = Kernel::Poly { g: 0.3, c: 0.5, degree: 2.0 };
+        let g1 = k.gram_in(Precision::F32, &x, 1);
+        let g8 = k.gram_in(Precision::F32, &x, 8);
+        assert_eq!(g1.data(), g8.data());
     }
 }

@@ -51,7 +51,12 @@
 //! per-module `train` functions. Warm starts, cascade sharding and
 //! bounded kernel-row caches are [`solver::Trainer`] layers
 //! (`.warm_start(n)`, `.cascade(shards, rounds)`,
-//! `.cache_rows(cap, policy)`) that compose on top.
+//! `.cache_rows(cap, policy)`) that compose on top. So is the compute
+//! mode: `.precision(kernel::Precision::F32)` solves on a
+//! single-precision Gram and then **re-certifies in f64** — if the
+//! KKT certificate misses, the trainer redoes the fit at full
+//! precision and says so (`FitReport::fell_back`); an f32 fit is
+//! never returned uncertified (DESIGN.md §5).
 //!
 //! For unbounded sample streams the [`stream`] layer keeps a model
 //! current without batch retrains — incremental/decremental SMO over a
@@ -99,8 +104,10 @@
 //! session.absorb(&[21.0, 2.0]).unwrap();
 //! let f = session.forget(first.sample_id).unwrap(); // "forget user X"
 //! assert_eq!(f.resident, 1); // dual mass withdrawn, KKT repaired
-//! // on a managed fleet: Coordinator::forget("tenant", id); at rest:
-//! // `slabsvm forget --snapshot f.snap --id 7`
+//! // "delete ALL of user X": forget_many(&[id, …]) withdraws the
+//! // whole batch with a single repair sweep (all-or-nothing)
+//! // on a managed fleet: Coordinator::forget_many("tenant", &ids);
+//! // at rest: `slabsvm forget --snapshot f.snap --id 7,8`
 //! ```
 //!
 //! Sessions are durable ([`stream::persist`]): snapshot a session (or

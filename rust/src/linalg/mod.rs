@@ -130,13 +130,84 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
-/// Squared euclidean distance.
+/// Squared euclidean distance with 4 independent accumulator lanes
+/// (same blocking as [`dot`]: short dependency chains autovectorize at
+/// opt-level 3 with no per-element bounds checks).
+///
+/// Summation order is fixed — lanes then a left-to-right tail — so the
+/// result is bitwise reproducible across call sites; every kernel path
+/// (scalar eval, blocked row, Gram, parallel restore) funnels through
+/// this one function.
 #[inline]
 pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0;
-    for (x, y) in a.iter().zip(b) {
-        let d = x - y;
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// f32 dot product, lane-blocked like [`dot`]. Inputs are truncated
+/// element-wise from f64; accumulation stays in f32 so the whole
+/// contraction runs at single precision (the `Precision::F32` compute
+/// mode — results are certified against the f64 path downstream).
+#[inline]
+pub fn dot_f32(a: &[f64], b: &[f64]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] as f32 * b[i] as f32;
+        s1 += a[i + 1] as f32 * b[i + 1] as f32;
+        s2 += a[i + 2] as f32 * b[i + 2] as f32;
+        s3 += a[i + 3] as f32 * b[i + 3] as f32;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] as f32 * b[i] as f32;
+    }
+    s
+}
+
+/// f32 squared euclidean distance, lane-blocked like [`sq_dist`].
+#[inline]
+pub fn sq_dist_f32(a: &[f64], b: &[f64]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        let d0 = a[i] as f32 - b[i] as f32;
+        let d1 = a[i + 1] as f32 - b[i + 1] as f32;
+        let d2 = a[i + 2] as f32 - b[i + 2] as f32;
+        let d3 = a[i + 3] as f32 - b[i + 3] as f32;
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        let d = a[i] as f32 - b[i] as f32;
         s += d * d;
     }
     s
@@ -286,6 +357,26 @@ mod tests {
     #[test]
     fn sq_dist_works() {
         assert_eq!(sq_dist(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn sq_dist_matches_naive_over_odd_lengths() {
+        // lane-blocked rewrite must agree with the naive sum for lengths
+        // that exercise both full lanes and every tail size
+        for n in [1usize, 2, 3, 4, 5, 7, 8, 15, 16, 33] {
+            let a: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin()).collect();
+            let b: Vec<f64> = (0..n).map(|i| (i as f64 * 1.3).cos()).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            assert!((sq_dist(&a, &b) - naive).abs() < 1e-12, "n={n}");
+        }
+    }
+
+    #[test]
+    fn f32_primitives_track_f64() {
+        let a: Vec<f64> = (0..21).map(|i| (i as f64 * 0.3).sin()).collect();
+        let b: Vec<f64> = (0..21).map(|i| (i as f64 * 0.9).cos()).collect();
+        assert!((f64::from(dot_f32(&a, &b)) - dot(&a, &b)).abs() < 1e-4);
+        assert!((f64::from(sq_dist_f32(&a, &b)) - sq_dist(&a, &b)).abs() < 1e-4);
     }
 
     #[test]

@@ -1212,13 +1212,11 @@ fn cmd_forget(args: &[String]) -> Result<()> {
     if info.repaired {
         println!("note: snapshot state needed a repair sweep on load");
     }
+    // one batch withdrawal: a single repair sweep for the whole id list
+    // instead of k sequential forget/repair rounds
+    session.forget_many(&ids)?;
     for &id in &ids {
-        session.forget(id)?;
-        println!(
-            "forgot sample {id} from '{}' ({} resident remain)",
-            session.name(),
-            session.solver().len()
-        );
+        println!("forgot sample {id} from '{}'", session.name());
     }
     let (r1, r2) = session.solver().rho();
     println!(

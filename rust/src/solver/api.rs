@@ -62,7 +62,7 @@ use super::warmstart::{self, WarmStartParams};
 use super::{Heuristic, SolveStats};
 use crate::cache::{CacheStats, CachedRows, KernelProvider, Policy, PrecomputedGram};
 use crate::error::Error;
-use crate::kernel::Kernel;
+use crate::kernel::{Kernel, Precision};
 use crate::linalg::{matvec, Matrix};
 use crate::Result;
 
@@ -76,6 +76,14 @@ pub const NO_UPPER_PLANE: f64 = 1e300;
 /// Margin tolerance the cascade layer uses to flag out-of-candidate KKT
 /// violators when no explicit tolerance is configured.
 const CASCADE_DEFAULT_TOL: f64 = 1e-5;
+
+/// Relative KKT bound an F32-mode fit must meet on the **f64**
+/// certificate to be accepted without fallback. Single-precision Gram
+/// entries carry ~1e-7 relative error; after the solve that error
+/// shows up in the f64-recomputed margins scaled by ‖γ‖₁ and the
+/// solver's own exit tolerance, so the certification bound is set well
+/// above machine-f32 noise but far below any real KKT violation.
+const F32_CERT_TOL: f64 = 1e-3;
 
 // ---------------------------------------------------------------------------
 // SolverKind
@@ -194,6 +202,13 @@ pub struct FitReport {
     pub certificate: Certificate,
     /// cascade accounting when the [`Trainer`] cascade layer ran
     pub cascade: Option<CascadeTrace>,
+    /// floating-point mode the returned model was actually computed in
+    /// (`F64` after a certification fallback, even if `F32` was asked)
+    pub precision: Precision,
+    /// true when an F32-mode fit failed the f64 KKT certificate and the
+    /// trainer redid the fit at full precision — the fallback is always
+    /// visible, never silent
+    pub fell_back: bool,
 }
 
 // ---------------------------------------------------------------------------
@@ -314,6 +329,8 @@ fn assemble_slab(
         stats,
         certificate,
         cascade: None,
+        precision: Precision::F64,
+        fell_back: false,
     }
 }
 
@@ -517,6 +534,7 @@ pub struct Trainer {
     warm_epochs: usize,
     cascade: Option<CascadeOpts>,
     cache: Option<CacheOpts>,
+    precision: Precision,
 }
 
 impl Default for Trainer {
@@ -545,6 +563,7 @@ impl Trainer {
             warm_epochs: 0,
             cascade: None,
             cache: None,
+            precision: Precision::F64,
         }
     }
 
@@ -659,6 +678,20 @@ impl Trainer {
         self
     }
 
+    /// Floating-point compute mode (default [`Precision::F64`]).
+    ///
+    /// [`Precision::F32`] builds the Gram at single precision and
+    /// solves on it, then **re-certifies the solution in f64**: every
+    /// row is re-scored through the trained model at full precision
+    /// and the KKT certificate is rebuilt on those margins. If the
+    /// certificate exceeds the certification bound the trainer redoes
+    /// the whole fit in f64 and marks [`FitReport::fell_back`] — an
+    /// f32 fit is never returned uncertified.
+    pub fn precision(mut self, precision: Precision) -> Trainer {
+        self.precision = precision;
+        self
+    }
+
     // ---------------------------------------------------- param lowering
 
     /// Lower the shared fields into [`SmoParams`].
@@ -756,6 +789,13 @@ impl Trainer {
                     "cascade + cache_rows is unsupported; pick one layer",
                 ));
             }
+            if self.precision == Precision::F32 {
+                return Err(Error::config(
+                    "cache_rows requires f64 compute: the bounded row cache \
+                     streams rows on demand, so there is no single Gram to \
+                     certify against",
+                ));
+            }
         }
         Ok(())
     }
@@ -794,6 +834,9 @@ impl Trainer {
 
     /// One solve, no cascade (warm-start / cache layers still apply).
     fn fit_direct(&self, x: &Matrix) -> Result<FitReport> {
+        if self.precision == Precision::F32 {
+            return self.fit_f32_certified(x);
+        }
         match self.kind {
             SolverKind::Smo => {
                 if let Some(c) = self.cache {
@@ -809,6 +852,63 @@ impl Trainer {
             }
             _ => self.build_solver().fit(x, self.kernel),
         }
+    }
+
+    /// F32 compute mode: build the Gram at single precision (lane-
+    /// blocked f32 contraction, ~2x the vector width of the f64 path),
+    /// solve on it, then certify the result against **f64** margins.
+    ///
+    /// Certification re-scores every training row through the trained
+    /// model at full precision (O(m·|SV|·d) f64 kernel evals — cheap
+    /// next to the O(m²·d) Gram build) and rebuilds the KKT
+    /// certificate on those margins. A pass returns the f32-computed
+    /// model with the honest f64 certificate; a failure triggers a
+    /// visible full-precision refit ([`FitReport::fell_back`]).
+    fn fit_f32_certified(&self, x: &Matrix) -> Result<FitReport> {
+        let threads = crate::util::threadpool::default_threads();
+        let k32 = self.kernel.gram_in(Precision::F32, x, threads);
+        let mut report = match self.kind {
+            SolverKind::Smo => {
+                let mut provider = BorrowedGram { k: &k32 };
+                self.fit_smo_with(x, &mut provider)
+            }
+            _ => self.build_solver().fit_gram(x, self.kernel, &k32),
+        }?;
+        let m = x.rows();
+        let s64: Vec<f64> =
+            (0..m).map(|i| report.model.score(x.row(i))).collect();
+        let eps = self.effective_eps();
+        let mf = m as f64;
+        let cap_a = 1.0 / (self.nu1 * mf);
+        let cap_b =
+            if eps > 0.0 { eps / (self.nu2 * mf) } else { f64::INFINITY };
+        let cert64 = validate::report_with_margins(
+            &report.dual.alpha,
+            &report.dual.alpha_bar,
+            &s64,
+            report.dual.rho1,
+            report.dual.rho2,
+            self.nu1,
+            self.nu2,
+            eps,
+            cap_a.min(cap_b) * 1e-6,
+        );
+        let margin_scale =
+            1.0 + s64.iter().map(|v| v.abs()).sum::<f64>() / mf.max(1.0);
+        if cert64.max_kkt_violation <= F32_CERT_TOL * margin_scale {
+            report.dual.s = s64;
+            report.certificate = cert64;
+            report.precision = Precision::F32;
+            report.fell_back = false;
+            return Ok(report);
+        }
+        // The f32 Gram lost too much structure (ill-conditioned data:
+        // near-duplicate rows, huge offsets) — redo at full precision.
+        let mut exact = self.clone();
+        exact.precision = Precision::F64;
+        let mut report = exact.fit_direct(x)?;
+        report.fell_back = true;
+        Ok(report)
     }
 
     /// SMO path over any provider, with the optional warm-start layer.
@@ -989,6 +1089,9 @@ impl Trainer {
                 );
                 final_report.cascade =
                     Some(CascadeTrace { candidate_sizes, rounds });
+                // compute-mode provenance of the deciding union solve
+                final_report.precision = report.precision;
+                final_report.fell_back = report.fell_back;
                 return Ok(final_report);
             }
             // grow the candidate set with the violators and retrain

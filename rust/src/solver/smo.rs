@@ -271,6 +271,16 @@ pub fn solve_from<P: KernelProvider>(
     let mut sat_streak = vec![0u16; m];
     let mut n_active = m;
 
+    // Diagonal snapshot for second-order partner selection, hoisted out
+    // of the per-iteration scan: K_ii never changes during the solve,
+    // and paying O(m) provider hits once here keeps the hot selection
+    // loop allocation-free (slablint R3).
+    let diag: Vec<f64> = if p.heuristic == Heuristic::SecondOrder {
+        (0..m).map(|i| provider.diag(i)).collect()
+    } else {
+        Vec::new()
+    };
+
     let mut rho_stale = 0u32;
     while iterations < p.max_iter {
         // ρ re-estimation is an O(m) pass; the estimates drift slowly
@@ -360,7 +370,7 @@ pub fn solve_from<P: KernelProvider>(
         let fb = fbar(s[b], rho1, rho2);
         let a = if p.heuristic == Heuristic::SecondOrder {
             select_partner_second_order(
-                provider, block, b, &alpha, &alpha_bar, &s, cap_a, cap_b,
+                provider, &diag, block, b, &alpha, &alpha_bar, &s, cap_a, cap_b,
             )
         } else {
             select_partner(
@@ -487,10 +497,13 @@ pub fn solve_from<P: KernelProvider>(
 /// objective decrease (s_a − s_b)²/(2κ) with κ = k_aa + k_bb − 2k_ab,
 /// restricted to strict-descent-feasible partners. Needs kernel row b
 /// (one provider access per iteration — same cost class as the update
-/// itself, which also fetches row b).
+/// itself, which also fetches row b). `diag` is the caller's hoisted
+/// K_ii snapshot — constant for the whole solve, so this fn stays
+/// allocation-free per iteration.
 #[allow(clippy::too_many_arguments)]
 fn select_partner_second_order<P: KernelProvider>(
     provider: &mut P,
+    diag: &[f64],
     block: Block,
     b: usize,
     alpha: &[f64],
@@ -500,8 +513,8 @@ fn select_partner_second_order<P: KernelProvider>(
     cap_b: f64,
 ) -> Option<usize> {
     let m = s.len();
-    let kbb = provider.diag(b);
-    let diag: Vec<f64> = (0..m).map(|i| provider.diag(i)).collect();
+    debug_assert_eq!(diag.len(), m);
+    let kbb = diag[b];
     provider.with_row(b, &mut |row_b| {
         let mut best = None;
         let mut best_gain = 0.0;

@@ -36,7 +36,7 @@
 //! unchanged on a streamed model.
 
 use crate::error::Error;
-use crate::kernel::Kernel;
+use crate::kernel::{Kernel, Precision};
 use crate::solver::api::{DualSolution, FitReport};
 use crate::solver::ocssvm::SlabModel;
 use crate::solver::smo::{solve_from, SmoParams, WarmState};
@@ -64,6 +64,14 @@ pub struct IncrementalConfig {
     pub refresh_every: u64,
     /// which resident sample a full-window absorb evicts
     pub policy: PolicyKind,
+    /// compute mode for **background retrains** spawned off this
+    /// stream ([`Precision::F32`] = certified single-precision batch
+    /// fits). The live absorb path — window Gram, margins, repairs —
+    /// always runs f64 so snapshot checksums and restores stay
+    /// bitwise reproducible; this knob is a compute hint, not
+    /// semantic config, and is deliberately excluded from snapshot
+    /// config fingerprints.
+    pub precision: Precision,
 }
 
 impl Default for IncrementalConfig {
@@ -73,6 +81,7 @@ impl Default for IncrementalConfig {
             repair_max_iter: 100_000,
             refresh_every: 1024,
             policy: PolicyKind::Fifo,
+            precision: Precision::F64,
         }
     }
 }
@@ -114,21 +123,25 @@ impl IncrementalSmo {
         dim: usize,
         cfg: IncrementalConfig,
     ) -> IncrementalSmo {
+        // Grow-once: every per-slot buffer is sized to the window
+        // capacity up front, so the absorb path never reallocates —
+        // growth-phase pushes land in reserved space and the repair
+        // ping-pong stays within retained capacity (lint rule [[R3]]).
         IncrementalSmo {
             window: SlidingWindow::new(kernel, capacity, dim),
             cfg,
-            alpha: Vec::new(),
-            alpha_bar: Vec::new(),
-            s: Vec::new(),
+            alpha: Vec::with_capacity(capacity),
+            alpha_bar: Vec::with_capacity(capacity),
+            s: Vec::with_capacity(capacity),
             rho1: 0.0,
             rho2: 0.0,
             stats: SolveStats::default(),
             repair_iterations: 0,
             last_admit_us: 0,
             last_repair_us: 0,
-            scratch_alpha: Vec::new(),
-            scratch_abar: Vec::new(),
-            scratch_s: Vec::new(),
+            scratch_alpha: Vec::with_capacity(capacity),
+            scratch_abar: Vec::with_capacity(capacity),
+            scratch_s: Vec::with_capacity(capacity),
         }
     }
 
@@ -155,6 +168,9 @@ impl IncrementalSmo {
         debug_assert_eq!(alpha.len(), window.len());
         debug_assert_eq!(alpha_bar.len(), window.len());
         debug_assert_eq!(s.len(), window.len());
+        // same grow-once contract as `new`: scratch reserved to window
+        // capacity so post-restore absorbs never reallocate
+        let capacity = window.capacity();
         IncrementalSmo {
             window,
             cfg,
@@ -167,9 +183,9 @@ impl IncrementalSmo {
             repair_iterations,
             last_admit_us: 0,
             last_repair_us: 0,
-            scratch_alpha: Vec::new(),
-            scratch_abar: Vec::new(),
-            scratch_s: Vec::new(),
+            scratch_alpha: Vec::with_capacity(capacity),
+            scratch_abar: Vec::with_capacity(capacity),
+            scratch_s: Vec::with_capacity(capacity),
         }
     }
 
@@ -323,40 +339,87 @@ impl IncrementalSmo {
     /// state is untouched; so is forgetting the only resident sample
     /// (an empty window has no feasible dual).
     pub fn forget(&mut self, id: u64) -> Result<()> {
-        let Some(slot) = self.window.slot_of_id(id) else {
-            return Err(Error::unlearning(format!(
-                "sample id {id} is not resident (never admitted, already \
-                 evicted, or already forgotten)"
-            )));
-        };
-        if self.len() < 2 {
-            return Err(Error::unlearning(
-                "cannot forget the only resident sample: an empty window \
-                 has no feasible dual (close the stream instead)",
-            ));
+        self.forget_many(std::slice::from_ref(&id))
+    }
+
+    /// Batch unlearning: remove every resident sample in `ids` with a
+    /// **single** repair sweep at the end, instead of the k sequential
+    /// repairs (and k intermediate hot-swapped models) that k
+    /// [`IncrementalSmo::forget`] calls would cost. Each withdrawal is
+    /// the same exact mass accounting as the single-sample path —
+    /// withdraw while the kernel row exists, swap-remove compact,
+    /// redistribute under the grown boxes — so feasibility (Σα = 1,
+    /// Σᾱ = ε, box bounds) holds after every step, not just at the end.
+    ///
+    /// All-or-nothing validation: if any id is non-resident, duplicated
+    /// in the batch, or the batch would empty the window, a typed
+    /// [`Error::Unlearning`] is returned and the state is untouched.
+    /// An empty batch is a no-op.
+    pub fn forget_many(&mut self, ids: &[u64]) -> Result<()> {
+        if ids.is_empty() {
+            return Ok(());
         }
-        // Withdraw the sample's dual mass while its kernel row still
-        // exists (the bumps apply the exact rank-1 margin updates).
-        let freed_a = self.alpha[slot];
-        let freed_b = self.alpha_bar[slot];
-        self.bump_alpha(slot, -freed_a);
-        self.bump_abar(slot, -freed_b);
-        // Compact: the window swap-removes the slot; the dual vectors
-        // mirror the identical index mapping. The remaining margins are
-        // already exact — the removed coordinate's γ is zero.
-        self.window.remove(slot);
-        self.alpha.swap_remove(slot);
-        self.alpha_bar.swap_remove(slot);
-        self.s.swap_remove(slot);
-        // Redistribute under the grown boxes: (m−1)·1/(ν(m−1)) = 1/ν ≥ 1,
-        // so the freed mass always fits (ν ≤ 1).
-        let rem_a = self.distribute(true, freed_a, usize::MAX);
-        let rem_b = self.distribute(false, freed_b, usize::MAX);
-        debug_assert!(
-            rem_a <= MASS_EPS * self.len() as f64
-                && rem_b <= MASS_EPS * self.len() as f64,
-            "freed mass must fit the grown boxes: {rem_a} / {rem_b} left"
-        );
+        // Validate the whole batch before touching any state. The error
+        // is built outside the scan (lint rule [[R3]]: `forget_many` is
+        // a warm fn — no allocation inside loops).
+        let mut bad: Option<(u64, bool)> = None;
+        for (k, &id) in ids.iter().enumerate() {
+            if self.window.slot_of_id(id).is_none() {
+                bad = Some((id, false));
+                break;
+            }
+            if ids[..k].contains(&id) {
+                bad = Some((id, true));
+                break;
+            }
+        }
+        if let Some((id, duplicate)) = bad {
+            return Err(Error::unlearning(if duplicate {
+                format!("sample id {id} appears twice in the forget batch")
+            } else {
+                format!(
+                    "sample id {id} is not resident (never admitted, already \
+                     evicted, or already forgotten)"
+                )
+            }));
+        }
+        if self.len() <= ids.len() {
+            return Err(Error::unlearning(format!(
+                "cannot forget all {} resident samples: an empty window has \
+                 no feasible dual (close the stream instead)",
+                self.len()
+            )));
+        }
+        for &id in ids {
+            // Re-resolve per iteration: earlier swap-removes remap slots.
+            let slot = self
+                .window
+                .slot_of_id(id)
+                .expect("validated resident above; batch has no duplicates");
+            // Withdraw the sample's dual mass while its kernel row still
+            // exists (the bumps apply the exact rank-1 margin updates).
+            let freed_a = self.alpha[slot];
+            let freed_b = self.alpha_bar[slot];
+            self.bump_alpha(slot, -freed_a);
+            self.bump_abar(slot, -freed_b);
+            // Compact: the window swap-removes the slot; the dual
+            // vectors mirror the identical index mapping. The remaining
+            // margins are already exact — the removed γ is zero.
+            self.window.remove(slot);
+            self.alpha.swap_remove(slot);
+            self.alpha_bar.swap_remove(slot);
+            self.s.swap_remove(slot);
+            // Redistribute under the grown boxes:
+            // (m−1)·1/(ν(m−1)) = 1/ν ≥ 1, so the freed mass always fits
+            // (ν ≤ 1).
+            let rem_a = self.distribute(true, freed_a, usize::MAX);
+            let rem_b = self.distribute(false, freed_b, usize::MAX);
+            debug_assert!(
+                rem_a <= MASS_EPS * self.len() as f64
+                    && rem_b <= MASS_EPS * self.len() as f64,
+                "freed mass must fit the grown boxes: {rem_a} / {rem_b} left"
+            );
+        }
         self.repair()
     }
 
@@ -658,6 +721,10 @@ impl IncrementalSmo {
             stats,
             certificate,
             cascade: None,
+            // the live streaming dual is always maintained in f64
+            // (cfg.precision only accelerates background retrains)
+            precision: Precision::F64,
+            fell_back: false,
         }
     }
 }
@@ -848,6 +915,80 @@ mod tests {
             );
             assert_eq!(inc.alpha(), &alpha_before[..]);
         }
+    }
+
+    #[test]
+    fn forget_many_matches_sequential_forgets_with_one_repair() {
+        let mk = || {
+            let mut inc = IncrementalSmo::new(
+                Kernel::Rbf { g: 0.05 },
+                40,
+                2,
+                IncrementalConfig::default(),
+            );
+            for p in stream_points(55, 41) {
+                inc.push(&p).unwrap();
+            }
+            inc
+        };
+        let victims: Vec<u64> = {
+            let inc = mk();
+            [3usize, 11, 26].iter().map(|&s| inc.window().id(s)).collect()
+        };
+        // batch path: one repair for the whole batch
+        let mut batch = mk();
+        let repairs_before = batch.repair_iterations();
+        batch.forget_many(&victims).unwrap();
+        assert_eq!(batch.len(), 37);
+        for &id in &victims {
+            assert_eq!(batch.window().slot_of_id(id), None);
+        }
+        assert_invariants(&batch);
+        assert!(batch.repair_iterations() >= repairs_before);
+        // sequential path lands on the same resident id set and a
+        // feasible dual of the same problem
+        let mut seq = mk();
+        for &id in &victims {
+            seq.forget(id).unwrap();
+        }
+        assert_invariants(&seq);
+        let mut batch_ids = batch.window().ids().to_vec();
+        let mut seq_ids = seq.window().ids().to_vec();
+        batch_ids.sort_unstable();
+        seq_ids.sort_unstable();
+        assert_eq!(batch_ids, seq_ids);
+    }
+
+    #[test]
+    fn forget_many_validates_all_before_mutating() {
+        let mut inc = IncrementalSmo::new(
+            Kernel::Linear,
+            20,
+            2,
+            IncrementalConfig::default(),
+        );
+        for p in stream_points(20, 42) {
+            inc.push(&p).unwrap();
+        }
+        let good = inc.window().id(4);
+        let alpha_before = inc.alpha().to_vec();
+        // one bad id poisons the whole batch, state untouched
+        let err = inc.forget_many(&[good, 9999]).unwrap_err();
+        assert!(matches!(err, crate::Error::Unlearning(_)), "{err:?}");
+        assert_eq!(inc.alpha(), &alpha_before[..]);
+        assert_eq!(inc.len(), 20);
+        // duplicates are rejected up front too
+        let err = inc.forget_many(&[good, good]).unwrap_err();
+        assert!(matches!(err, crate::Error::Unlearning(_)), "{err:?}");
+        assert_eq!(inc.len(), 20);
+        // forgetting everything is rejected
+        let all: Vec<u64> = inc.window().ids().to_vec();
+        let err = inc.forget_many(&all).unwrap_err();
+        assert!(matches!(err, crate::Error::Unlearning(_)), "{err:?}");
+        assert_eq!(inc.len(), 20);
+        // empty batch is a no-op
+        inc.forget_many(&[]).unwrap();
+        assert_eq!(inc.len(), 20);
     }
 
     #[test]

@@ -105,12 +105,15 @@ pub struct RestoreOutcome {
     pub result: Result<RestoredStream>,
 }
 
-/// What a targeted [`StreamManager::forget`] did.
+/// What a targeted [`StreamManager::forget`] /
+/// [`StreamManager::forget_many`] did.
 #[derive(Clone, Debug)]
 pub struct ForgetOutcome {
     pub name: String,
-    /// the forgotten sample's stable id (its 0-based arrival index)
-    pub id: u64,
+    /// the forgotten samples' stable ids (their 0-based arrival
+    /// indices) — one entry for a single forget, the whole batch for
+    /// [`StreamManager::forget_many`]
+    pub ids: Vec<u64>,
     /// registry version of the re-published post-removal model (None
     /// when the shrunk session is below its warmup bar — the last
     /// published model keeps serving until the next absorb)
@@ -382,13 +385,25 @@ impl StreamManager {
     /// evicted, or already forgotten) is a typed
     /// [`crate::Error::Unlearning`]; the stream keeps running.
     pub fn forget(&self, name: &str, id: u64) -> Result<ForgetOutcome> {
+        self.forget_many(name, std::slice::from_ref(&id))
+    }
+
+    /// Batch unlearning: remove every id in `ids` from `name` with a
+    /// **single** repair sweep, one re-published model and at most one
+    /// cancelled/replaced background retrain — not the k repairs and k
+    /// intermediate hot-swapped models k [`StreamManager::forget`]
+    /// calls would publish ("delete all of user X" in one shard tick).
+    /// Validation is all-or-nothing: any non-resident or duplicated id
+    /// rejects the whole batch with a typed
+    /// [`crate::Error::Unlearning`] and the stream is untouched.
+    pub fn forget_many(&self, name: &str, ids: &[u64]) -> Result<ForgetOutcome> {
         let idx = {
             let route = self.route.read();
             *route.get(name).ok_or_else(|| {
                 Error::Coordinator(format!("unknown stream '{name}'"))
             })?
         };
-        self.shard_at(idx)?.forget(name, id)
+        self.shard_at(idx)?.forget_many(name, ids)
     }
 
     /// Close a stream: everything already queued for it is absorbed
@@ -679,9 +694,22 @@ mod tests {
         // window 32, 40 pushed: ids 8..=39 are resident
         let out = m.forget("s", 20).unwrap();
         assert_eq!(out.name, "s");
-        assert_eq!(out.id, 20);
+        assert_eq!(out.ids, vec![20]);
         assert_eq!(out.resident, 31);
         assert!(out.version.unwrap() > v_before, "forget must re-publish");
+        // batch forget: one call, one repair, one re-publish
+        let v_single = out.version.unwrap();
+        let out = m.forget_many("s", &[22, 25, 30]).unwrap();
+        assert_eq!(out.ids, vec![22, 25, 30]);
+        assert_eq!(out.resident, 28);
+        assert!(out.version.unwrap() > v_single, "batch must re-publish");
+        // a batch with one bad id is rejected whole, stream untouched
+        let err = m.forget_many("s", &[23, 20]).unwrap_err();
+        assert!(
+            matches!(err, crate::Error::Unlearning(_)),
+            "want Error::Unlearning, got {err:?}"
+        );
+        assert!(m.forget("s", 23).is_ok(), "id 23 must still be resident");
         // id 0 was FIFO-evicted long ago: typed error, stream survives
         let err = m.forget("s", 0).unwrap_err();
         assert!(

@@ -61,7 +61,7 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use crate::error::Error;
-use crate::kernel::Kernel;
+use crate::kernel::{Kernel, Precision};
 use crate::solver::smo::SmoParams;
 use crate::solver::{validate, Heuristic};
 use crate::Result;
@@ -338,6 +338,11 @@ fn decode_config(d: &mut Dec<'_>, version: u32) -> Result<StreamConfig> {
         repair_max_iter: d.usize()?,
         refresh_every: d.u64()?,
         policy: PolicyKind::Fifo,
+        // compute hint, not semantic config: deliberately absent from
+        // the wire format (and therefore from config fingerprints) so
+        // flipping the retrain precision can't orphan old snapshots.
+        // `restore_expecting` grafts the caller's precision on.
+        precision: Precision::F64,
     };
     let drift = DriftConfig {
         recent: d.usize()?,
@@ -692,7 +697,7 @@ impl Snapshot {
         bytes: &[u8],
         expected: &StreamConfig,
     ) -> Result<(StreamSession, RestoreInfo)> {
-        let snap = Snapshot::decode(bytes)?;
+        let mut snap = Snapshot::decode(bytes)?;
         let got = Snapshot::config_fingerprint(&snap.cfg);
         let want = Snapshot::config_fingerprint(expected);
         if got != want {
@@ -703,6 +708,9 @@ impl Snapshot {
                 snap.name
             )));
         }
+        // Precision is a compute hint excluded from the wire format and
+        // the fingerprint; the restored session adopts the caller's.
+        snap.cfg.incremental.precision = expected.incremental.precision;
         snap.into_session()
     }
 

@@ -259,11 +259,15 @@ impl StreamSession {
     }
 
     /// The trainer an escalated retrain runs with: same hyper-parameters
-    /// as the incremental solver, cascade-sharded for throughput.
+    /// as the incremental solver, cascade-sharded for throughput, and
+    /// the stream's configured compute mode (an `F32` stream runs its
+    /// background retrains at certified single precision; the live
+    /// absorb path stays f64 regardless).
     pub fn retrain_trainer(&self) -> Trainer {
         Trainer::from_smo_params(self.inc.config().smo)
             .kernel(self.cfg.kernel)
             .cascade(self.cfg.retrain_shards, self.cfg.retrain_rounds)
+            .precision(self.inc.config().precision)
     }
 
     /// Absorb one sample: score it against the current slab (drift
@@ -303,10 +307,21 @@ impl StreamSession {
     /// re-publishes). Non-resident ids are a typed
     /// [`crate::Error::Unlearning`]; the session is untouched.
     pub fn forget(&mut self, id: u64) -> crate::Result<Forgotten> {
+        self.forget_many(std::slice::from_ref(&id))
+    }
+
+    /// Batch unlearning: remove every id in `ids` with a **single**
+    /// repair sweep and a single refreshed model, instead of the k
+    /// repairs and k intermediate hot-swaps sequential
+    /// [`StreamSession::forget`] calls would publish. Validation is
+    /// all-or-nothing (any non-resident or duplicated id rejects the
+    /// whole batch, session untouched); each removed id still counts
+    /// individually toward the stream's forget counter.
+    pub fn forget_many(&mut self, ids: &[u64]) -> crate::Result<Forgotten> {
         // same repair-scale work as an absorb: no lock may be held here
         crate::sync::assert_lock_free("session forget");
-        self.inc.forget(id)?;
-        self.forgets += 1;
+        self.inc.forget_many(ids)?;
+        self.forgets += ids.len() as u64;
         let model = if self.is_warm() { Some(self.inc.model()) } else { None };
         Ok(Forgotten {
             model,

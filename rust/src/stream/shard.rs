@@ -78,7 +78,7 @@ pub(crate) enum Control {
     /// A bad id is a typed error in the ack, never a worker panic.
     Forget {
         name: String,
-        id: u64,
+        ids: Vec<u64>,
         ack: Sender<Result<ForgetOutcome>>,
     },
     /// Front-door snapshot sweep: serialize every session this shard
@@ -375,9 +375,14 @@ impl Shard {
         Ok(())
     }
 
-    /// Ask the worker to forget one resident sample of `name`. Blocks
+    /// Ask the worker to forget a batch of resident samples of `name`
+    /// in one shard tick (single repair, single re-publish). Blocks
     /// until the owning shard has applied (or rejected) the removal.
-    pub(crate) fn forget(&self, name: &str, id: u64) -> Result<ForgetOutcome> {
+    pub(crate) fn forget_many(
+        &self,
+        name: &str,
+        ids: &[u64],
+    ) -> Result<ForgetOutcome> {
         let (tx, rx) = std::sync::mpsc::channel();
         {
             let mut mail = self.mail.lock();
@@ -388,7 +393,7 @@ impl Shard {
             }
             mail.control.push_back(Control::Forget {
                 name: name.to_string(),
-                id,
+                ids: ids.to_vec(),
                 ack: tx,
             });
         }
@@ -748,12 +753,12 @@ pub(crate) fn run_worker(
                 Control::Close { name, ack } => {
                     closing.insert(name, ack);
                 }
-                Control::Forget { name, id, ack } => {
+                Control::Forget { name, ids, ack } => {
                     let res = match slots.get_mut(&name) {
                         None => Err(Error::Coordinator(format!(
                             "unknown stream '{name}'"
                         ))),
-                        Some(slot) => match slot.session.forget(id) {
+                        Some(slot) => match slot.session.forget_many(&ids) {
                             Ok(f) => {
                                 // an in-flight background retrain was
                                 // trained on a window that still held
@@ -776,13 +781,15 @@ pub(crate) fn run_worker(
                                         jobs.cancel(old);
                                     }
                                 }
-                                obs::record(
-                                    EventKind::Forget,
-                                    0,
-                                    obs::stream_id(&name),
-                                    shard.idx,
-                                    id,
-                                );
+                                for &id in &ids {
+                                    obs::record(
+                                        EventKind::Forget,
+                                        0,
+                                        obs::stream_id(&name),
+                                        shard.idx,
+                                        id,
+                                    );
+                                }
                                 // hot-swap the post-removal model so the
                                 // served slab stops reflecting the
                                 // forgotten sample immediately
@@ -811,10 +818,10 @@ pub(crate) fn run_worker(
                                     stats.stream_retrains.inc();
                                 }
                                 slot.dirty = true;
-                                stats.stream_forgets.inc();
+                                stats.stream_forgets.add(ids.len() as u64);
                                 Ok(ForgetOutcome {
                                     name: name.clone(),
-                                    id,
+                                    ids,
                                     version,
                                     resident: f.resident,
                                 })

@@ -31,6 +31,7 @@
 use crate::cache::{CacheStats, KernelProvider};
 use crate::kernel::Kernel;
 use crate::linalg::Matrix;
+use crate::util::threadpool;
 
 /// Bounded sample buffer + live Gram matrix + stable per-sample ids.
 pub struct SlidingWindow {
@@ -233,13 +234,16 @@ impl SlidingWindow {
 
     /// Rebuild a window from persisted samples (snapshot restore): the
     /// Gram matrix is **re-derived** from the points — it is never
-    /// serialized — with the same `kernel.eval` the live path uses, so
-    /// the rebuild is bitwise identical to the matrix the snapshot was
-    /// taken over (kernel evaluation is symmetric in its arguments at
-    /// the bit level). `ids` restore the per-slot sample identities
-    /// (hence the FIFO age order) and `admitted` the id counter, so the
-    /// next admit evicts the same victim and assigns the same id it
-    /// would have pre-restart. The caller (`stream::persist`) validates
+    /// serialized — through the blocked kernel-row path, which is
+    /// bitwise identical per element to the live path's `kernel.eval`
+    /// (same lane-blocked contraction, same transform order), so the
+    /// rebuild reproduces the matrix the snapshot was taken over
+    /// exactly. The O(m²·d) rebuild is parallelized across the process
+    /// threadpool — full rows per worker, so the result is thread-count
+    /// invariant. `ids` restore the per-slot sample identities (hence
+    /// the FIFO age order) and `admitted` the id counter, so the next
+    /// admit evicts the same victim and assigns the same id it would
+    /// have pre-restart. The caller (`stream::persist`) validates
     /// shapes and id uniqueness; this asserts.
     pub(crate) fn restore(
         kernel: Kernel,
@@ -264,12 +268,21 @@ impl SlidingWindow {
             ids,
             admitted,
         };
-        for i in 0..m {
-            let mut row = Vec::with_capacity(m);
-            for j in 0..m {
-                row.push(kernel.eval(w.point(i), w.point(j)));
+        if m == 0 {
+            return w;
+        }
+        let x = Matrix::from_vec(m, dim, w.points.clone());
+        let mut flat = vec![0.0; m * m];
+        let threads = threadpool::default_threads();
+        threadpool::parallel_rows(&mut flat, m, threads, |start, rows| {
+            for (r, out) in rows.chunks_mut(m).enumerate() {
+                kernel.row(&x, x.row(start + r), out);
             }
-            w.gram.push(row);
+        });
+        for row in flat.chunks(m) {
+            let mut grow = Vec::with_capacity(capacity);
+            grow.extend_from_slice(row);
+            w.gram.push(grow);
         }
         w
     }

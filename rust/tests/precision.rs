@@ -1,0 +1,210 @@
+//! Tier-1: f32 compute mode vs the f64 reference.
+//!
+//! The contract under test (DESIGN.md §5): [`Precision::F32`] is an
+//! accelerator, never a semantics change —
+//!
+//! * **parity** — on well-conditioned data an f32-mode fit certifies
+//!   against the f64 KKT certificate and agrees with the f64 fit on
+//!   objective, (ρ1, ρ2) and ranking quality (AUC) within loose,
+//!   stated bounds, across every kernel family and solver kind;
+//! * **visible fallback** — on data whose structure f32 cannot hold
+//!   (distinct points that alias under `as f32` truncation) the
+//!   trainer redoes the fit at f64 and says so: `fell_back = true`,
+//!   `precision = F64`, and the result is bit-identical to a plain
+//!   f64 fit — an f32 fit is never returned uncertified;
+//! * **determinism of the blocked path** — the lane-blocked row/Gram
+//!   builds are bitwise identical to the scalar `eval` loop in f64
+//!   mode and invariant to the thread count in both modes.
+
+use slabsvm::data::synthetic::SlabConfig;
+use slabsvm::kernel::{Kernel, Precision};
+use slabsvm::linalg::Matrix;
+use slabsvm::metrics::roc_auc;
+use slabsvm::solver::{SolverKind, Trainer};
+
+const KERNELS: [Kernel; 4] = [
+    Kernel::Linear,
+    Kernel::Rbf { g: 0.5 },
+    Kernel::Poly { g: 0.1, c: 1.0, degree: 2.0 },
+    Kernel::Sigmoid { g: 0.05, c: 0.25 },
+];
+
+/// Parity bounds on well-conditioned synthetic data: every kernel x
+/// every solver kind, f32-certified vs f64 reference. The bounds are
+/// deliberately loose — f32 changes the arithmetic — but AUC is tight:
+/// single precision must not change what the model *ranks*.
+#[test]
+fn f32_mode_tracks_f64_across_kernels_and_solvers() {
+    let ds = SlabConfig::default().generate(160, 7);
+    let eval = SlabConfig::default().generate_eval(150, 150, 8);
+    // every kernel under the paper's solver, every solver under RBF
+    let cases = KERNELS
+        .iter()
+        .map(|&k| (SolverKind::Smo, k))
+        .chain(SolverKind::ALL.iter().map(|&s| (s, KERNELS[1])));
+    for (kind, kernel) in cases {
+        let base = Trainer::new(kind).kernel(kernel).nu1(0.2).nu2(0.2);
+        let r64 = base.clone().fit(&ds.x).unwrap();
+        let r32 = base.clone().precision(Precision::F32).fit(&ds.x).unwrap();
+        let tag = format!("{kind:?}/{kernel:?}");
+        assert!(!r64.fell_back, "{tag}: f64 mode cannot fall back");
+        assert_eq!(r64.precision, Precision::F64, "{tag}");
+        if r32.fell_back {
+            // allowed, but then it must BE the f64 result
+            assert_eq!(r32.precision, Precision::F64, "{tag}");
+            assert_eq!(
+                r32.model.rho1.to_bits(),
+                r64.model.rho1.to_bits(),
+                "{tag}: fallback must equal the plain f64 fit"
+            );
+            continue;
+        }
+        assert_eq!(r32.precision, Precision::F32, "{tag}");
+        let scale = r64.stats.objective.abs().max(1.0);
+        assert!(
+            (r32.stats.objective - r64.stats.objective).abs() <= 1e-3 * scale,
+            "{tag}: objective diverged {} vs {}",
+            r32.stats.objective,
+            r64.stats.objective
+        );
+        // per-component tolerance: the OCSVM kind pins rho2 to the
+        // finite NO_UPPER_PLANE sentinel, which its own scale absorbs
+        let tol_of = |r: f64| 1e-2 * r.abs().max(1e-3);
+        assert!(
+            (r32.model.rho1 - r64.model.rho1).abs() <= tol_of(r64.model.rho1)
+                && (r32.model.rho2 - r64.model.rho2).abs()
+                    <= tol_of(r64.model.rho2),
+            "{tag}: rho diverged ({}, {}) vs ({}, {})",
+            r32.model.rho1,
+            r32.model.rho2,
+            r64.model.rho1,
+            r64.model.rho2
+        );
+        let auc_of = |m: &slabsvm::solver::ocssvm::SlabModel| {
+            let margins: Vec<f64> = (0..eval.len())
+                .map(|i| m.margin(eval.x.row(i)))
+                .collect();
+            roc_auc(&eval.y, &margins)
+        };
+        let (a64, a32) = (auc_of(&r64.model), auc_of(&r32.model));
+        assert!(
+            (a32 - a64).abs() <= 0.02,
+            "{tag}: AUC diverged {a32} vs {a64}"
+        );
+    }
+}
+
+/// Every accepted f32 fit carries a *fresh f64* certificate: the
+/// report's KKT violation was measured on re-scored f64 margins, so a
+/// certified fit is certified in the reference arithmetic, not in its
+/// own. (The bound mirrors the trainer's internal acceptance test.)
+#[test]
+fn accepted_f32_fits_carry_an_f64_certificate() {
+    let ds = SlabConfig::default().generate(200, 21);
+    for kernel in KERNELS {
+        let r = Trainer::new(SolverKind::Smo)
+            .kernel(kernel)
+            .precision(Precision::F32)
+            .fit(&ds.x)
+            .unwrap();
+        if r.fell_back {
+            assert_eq!(r.precision, Precision::F64, "{kernel:?}");
+            continue;
+        }
+        let mean_s = r.dual.s.iter().map(|v| v.abs()).sum::<f64>()
+            / ds.x.rows() as f64;
+        assert!(
+            r.certificate.max_kkt_violation <= 1e-3 * (1.0 + mean_s),
+            "{kernel:?}: accepted f32 fit exceeds the certification \
+             bound: {} (margin scale {mean_s})",
+            r.certificate.max_kkt_violation
+        );
+    }
+}
+
+/// Ill-conditioned by construction: 64 distinct 1-D points riding a
+/// 1e8 offset, spaced 1.0 apart. `as f32` has a 8.0 ulp at that
+/// magnitude, so blocks of ~8 *distinct* points alias to the same f32
+/// value — the f32 Gram sees duplicated rows (blocks of exact 1s under
+/// RBF) where the f64 Gram is near-diagonal. No mass distribution over
+/// aliased clones can reproduce the f64 margins, the f64 re-score
+/// catches it, and the trainer must visibly fall back.
+#[test]
+fn aliasing_data_triggers_certified_fallback_to_f64() {
+    let m = 64usize;
+    let pts: Vec<f64> = (0..m).map(|i| 1.0e8 + i as f64).collect();
+    // pin the premise: the points really do alias under truncation
+    let aliased = pts
+        .windows(2)
+        .filter(|w| (w[0] as f32) == (w[1] as f32))
+        .count();
+    assert!(aliased > m / 4, "premise lost: only {aliased} aliased pairs");
+    let x = Matrix::from_vec(m, 1, pts);
+    let base = Trainer::new(SolverKind::Smo)
+        .kernel(Kernel::Rbf { g: 2.0 })
+        .nu1(0.1);
+
+    let r32 = base.clone().precision(Precision::F32).fit(&x).unwrap();
+    assert!(
+        r32.fell_back,
+        "f32 fit on aliasing data must fail f64 certification \
+         (violation path not taken; precision = {:?})",
+        r32.precision
+    );
+    assert_eq!(r32.precision, Precision::F64, "fallback recomputes in f64");
+
+    // and the fallback IS the reference fit, to the bit
+    let r64 = base.fit(&x).unwrap();
+    assert_eq!(r32.model.rho1.to_bits(), r64.model.rho1.to_bits());
+    assert_eq!(r32.model.rho2.to_bits(), r64.model.rho2.to_bits());
+    assert_eq!(
+        r32.stats.objective.to_bits(),
+        r64.stats.objective.to_bits()
+    );
+    assert!(!r64.fell_back && r64.precision == Precision::F64);
+}
+
+/// The blocked row builder is the scalar `eval` loop, restructured —
+/// bitwise, per element, for every kernel family (the property the
+/// snapshot Gram checksums and the parallel restore rebuild rely on).
+#[test]
+fn blocked_row_is_bitwise_scalar_eval() {
+    let ds = SlabConfig::default().generate(97, 33);
+    let q = ds.x.row(13);
+    for kernel in KERNELS {
+        let mut out = vec![0.0; ds.x.rows()];
+        kernel.row(&ds.x, q, &mut out);
+        for (j, &o) in out.iter().enumerate() {
+            assert_eq!(
+                o.to_bits(),
+                kernel.eval(ds.x.row(j), q).to_bits(),
+                "{kernel:?} row[{j}]"
+            );
+        }
+    }
+}
+
+/// Gram builds are thread-count invariant in BOTH compute modes:
+/// `parallel_rows` hands whole rows to workers and each row is the
+/// same blocked build regardless of which worker runs it.
+#[test]
+fn gram_builds_are_thread_count_invariant() {
+    let ds = SlabConfig::default().generate(73, 55);
+    for kernel in KERNELS {
+        for prec in [Precision::F64, Precision::F32] {
+            let k1 = kernel.gram_in(prec, &ds.x, 1);
+            for threads in [2usize, 3, 8] {
+                let kt = kernel.gram_in(prec, &ds.x, threads);
+                for i in 0..ds.x.rows() {
+                    for j in 0..ds.x.rows() {
+                        assert_eq!(
+                            k1.get(i, j).to_bits(),
+                            kt.get(i, j).to_bits(),
+                            "{kernel:?}/{prec:?} t={threads} ({i},{j})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -230,7 +230,10 @@ fn coordinator_forget_republishes_and_survives_bad_ids() {
 
     // FIFO stream "a" holds ids 8..=39
     let out = c.forget("a", 15).unwrap();
-    assert_eq!((out.name.as_str(), out.id, out.resident), ("a", 15, 31));
+    assert_eq!(
+        (out.name.as_str(), out.ids.as_slice(), out.resident),
+        ("a", &[15u64][..], 31)
+    );
     let v_forget = out.version.expect("warm stream must re-publish");
     assert!(v_forget > v_before, "forget must bump the registry version");
     // the hot-swapped model no longer carries the forgotten point: the
@@ -266,6 +269,21 @@ fn coordinator_forget_republishes_and_survives_bad_ids() {
     }
     assert!(c.forget("ghost", 1).is_err(), "unknown stream is an error");
 
+    // batch unlearning: one mailbox round-trip withdraws both ids with
+    // a single repair sweep and a single re-publish
+    let out = c.forget_many("a", &[20, 30]).unwrap();
+    assert_eq!(
+        (out.ids.as_slice(), out.resident),
+        (&[20u64, 30][..], 29)
+    );
+    let v_batch = out.version.expect("warm stream must re-publish");
+    assert!(v_batch > v_forget, "batch forget must bump the version");
+    // a poisoned batch (one already-forgotten id) is all-or-nothing:
+    // the resident id listed alongside it must survive untouched
+    let err = c.forget_many("a", &[25, 15]).unwrap_err();
+    assert!(matches!(err, Error::Unlearning(_)), "got {err:?}");
+    assert!(c.forget("a", 25).is_ok(), "id 25 must survive the bad batch");
+
     // both streams keep absorbing after the (rejected) forgets
     for i in 0..5 {
         c.push("a", ds.x.row(i)).unwrap();
@@ -274,7 +292,7 @@ fn coordinator_forget_republishes_and_survives_bad_ids() {
     c.quiesce_streams();
     assert_eq!(c.close_stream("a").unwrap().updates, 45);
     assert_eq!(c.close_stream("b").unwrap().updates, 45);
-    assert_eq!(c.stats().stream_forgets.get(), 1);
+    assert_eq!(c.stats().stream_forgets.get(), 4);
     c.shutdown();
 }
 

@@ -370,7 +370,7 @@ R3_CONFIGS = [
         "hot": ["bump_alpha", "bump_abar", "distribute", "collect", "seed",
                 "replace_slot", "grow_add", "margin_of_slot",
                 "recompute_margins", "repair", "score"],
-        "warm": ["push", "forget"],
+        "warm": ["push", "forget", "forget_many"],
     },
     {
         "suffix": "solver/smo.rs",
@@ -613,6 +613,85 @@ def r4_export(export_file, export, stats):
     return out
 
 
+# ------------------------------------------------------ clippy sweep
+#
+# C1: a pattern-level stand-in for the three clippy lints the project
+# cares most about on the numeric hot paths, runnable where `cargo
+# clippy` cannot be (this container has no Rust toolchain). Selfcheck-
+# only by design — CI runs real clippy; this sweep exists so a
+# toolchain-less environment still catches the common regressions.
+# Non-test code only, like the rest of the rules.
+
+RANGE_LOOP = re.compile(
+    r"\bfor\s+([A-Za-z_][A-Za-z0-9_]*)\s+in\s+0\s*\.\.\s*"
+    r"([A-Za-z_][A-Za-z0-9_\.]*)\s*\.len\(\)")
+# like clippy's float_cmp, exact comparison against literal ZERO is
+# allowed (checking for an exact sentinel/untouched value is idiomatic)
+FLOAT_CMP = re.compile(
+    r"(\d+\.\d*(?:[eE][+-]?\d+)?)\s*(?:==|!=)"
+    r"|(?:==|!=)\s*-?(\d+\.\d*(?:[eE][+-]?\d+)?)")
+
+
+def float_cmp_hits(line):
+    return [m for m in FLOAT_CMP.finditer(line)
+            if float(m.group(1) or m.group(2)) != 0.0]
+
+
+def loop_body_span(lines, start):
+    depth = 0
+    started = False
+    for j in range(start, len(lines)):
+        for c in lines[j]:
+            if c == "{":
+                depth += 1
+                started = True
+            elif c == "}":
+                depth -= 1
+        if started and depth <= 0:
+            return (start, j)
+    return None
+
+
+def clippy_sweep(file, s):
+    out = []
+    for i, line in enumerate(s.lines):
+        if s.in_test[i]:
+            continue
+        m = RANGE_LOOP.search(line)
+        if m:
+            var, coll = m.group(1), m.group(2)
+            span = loop_body_span(s.lines, i)
+            if span:
+                # drop the loop header itself so its `var` binding does
+                # not count as a non-indexing use
+                body = "\n".join(s.lines[span[0]:span[1] + 1])
+                body = body.replace(m.group(0), "", 1)
+                indexed = re.compile(
+                    rf"{re.escape(coll)}\s*\[\s*{var}\s*\]")
+                memcpy = re.compile(
+                    rf"[\w\.\(\)]+\s*\[\s*{var}\s*\]\s*=\s*"
+                    rf"[\w\.\(\)]+\s*\[\s*{var}\s*\]\s*;")
+                if memcpy.search(body):
+                    out.append(finding(
+                        "C1", file, i,
+                        "manual_memcpy: element-by-element copy loop — "
+                        "use copy_from_slice/clone_from_slice", s))
+                elif not re.search(
+                        rf"\b{var}\b", indexed.sub("", body)):
+                    out.append(finding(
+                        "C1", file, i,
+                        f"needless_range_loop: `{var}` only indexes "
+                        f"`{coll}` — iterate it (or use .iter().enumerate())",
+                        s))
+        if float_cmp_hits(line):
+            out.append(finding(
+                "C1", file, i,
+                "float_cmp: `==`/`!=` against a nonzero float literal in "
+                "non-test code — compare with a tolerance or use to_bits()",
+                s))
+    return out
+
+
 BRACKET = re.compile(r"\[\[([A-Za-z0-9_-]+)\]\]")
 SECTION = re.compile(r"§([A-Za-z0-9.]+)")
 
@@ -789,6 +868,33 @@ def run_fixtures():
     f = r5(DESIGN_FIXTURE, [("r5_ok.rs", load("r5_ok.rs"))])
     check("r5_ok", len(f), 0)
 
+    # C1 clippy sweep (selfcheck-only — no .rs fixture file on purpose:
+    # the Rust binary does not mirror this rule, real clippy does)
+    c1src = (
+        "fn f(dst: &mut [f64], src: &[f64], xs: &[f64]) -> f64 {\n"
+        "    for i in 0..dst.len() { dst[i] = src[i]; }\n"
+        "    let mut t = 0.0;\n"
+        "    for i in 0..xs.len() { t += xs[i]; }\n"
+        "    if t != 0.5 { t = 0.0; }\n"
+        "    if t == 0.0 { t = 1.0; }\n"
+        "    t\n"
+        "}\n"
+    )
+    f = clippy_sweep("c1.rs", Stripped(c1src))
+    check("c1 sweep (memcpy + range loop + nonzero float, zero allowed)",
+          len(f), 3)
+    c1ok = (
+        "fn f(dst: &mut [f64], src: &[f64], xs: &[f64]) -> f64 {\n"
+        "    dst.copy_from_slice(src);\n"
+        "    let mut t: f64 = xs.iter().sum();\n"
+        "    for i in 0..xs.len() { t += xs[i] * dst[i]; }\n"
+        "    if (t - 0.5).abs() < 1e-9 { t = 0.0; }\n"
+        "    t\n"
+        "}\n"
+    )
+    f = clippy_sweep("c1.rs", Stripped(c1ok))
+    check("c1 sweep clean (two-collection index loop allowed)", len(f), 0)
+
     for msg in failures:
         print(f"FIXTURE {msg}")
     print(f"slablint(selfcheck): {len(failures)} fixture failure(s)")
@@ -833,6 +939,7 @@ def main():
         findings += r1(rel, s)
         findings += r2(rel, s)
         findings += r3(rel, s)
+        findings += clippy_sweep(rel, s)
     stats_entry = next(
         ((rel, s) for rel, _, s in sources
          if rel.endswith("coordinator/stats.rs")), None)

@@ -339,7 +339,7 @@ pub const R3_CONFIGS: &[R3Config] = &[
             "repair",
             "score",
         ],
-        warm: &["push", "forget"],
+        warm: &["push", "forget", "forget_many"],
     },
     R3Config {
         suffix: "solver/smo.rs",

@@ -53,3 +53,9 @@ fn score(&self, x: &[f64]) -> f64 {
 fn forget(&mut self, id: u64) -> Result<()> {
     Ok(())
 }
+fn forget_many(&mut self, ids: &[u64]) -> Result<()> {
+    for id in ids {
+        self.drop_id(*id);
+    }
+    Ok(())
+}
