@@ -1,0 +1,179 @@
+//! Bench: **SV1** — the HTTP front door under concurrent tenant
+//! connections.
+//!
+//! Spins up the full serving stack in-process (coordinator + router +
+//! `std::net` listener on loopback), then drives it with K concurrent
+//! keep-alive TCP connections — K = 10³ in the full run, scaled down
+//! under `SLABSVM_BENCH_FAST=1` — each alternating scoring requests
+//! and stream pushes for its tenant. Reports wall-clock RPS plus the
+//! server-side request-latency quantiles (`slabsvm_serve_latency_us`,
+//! parse → response written) and the shed/stale admission counters, so
+//! the perf floor in CI tracks the whole parse→route→respond path.
+//!
+//! Run: `cargo bench --bench serve`
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use slabsvm::bench::Bench;
+use slabsvm::coordinator::{BatcherConfig, Coordinator};
+use slabsvm::data::synthetic::SlabConfig;
+use slabsvm::kernel::Kernel;
+use slabsvm::runtime::Engine;
+use slabsvm::serve::{Router, RouterConfig, ServerConfig};
+use slabsvm::solver::{SolverKind, Trainer};
+use slabsvm::stream::{StreamConfig, StreamPoolConfig, StreamSpec};
+
+/// Read one HTTP response (head + content-length body); returns status.
+fn read_response(conn: &mut TcpStream, scratch: &mut Vec<u8>) -> u16 {
+    scratch.clear();
+    let mut tmp = [0u8; 4096];
+    loop {
+        if let Some(head_end) =
+            scratch.windows(4).position(|w| w == b"\r\n\r\n")
+        {
+            let head = String::from_utf8_lossy(&scratch[..head_end]);
+            let clen: usize = head
+                .lines()
+                .find_map(|l| {
+                    l.to_ascii_lowercase()
+                        .strip_prefix("content-length:")
+                        .map(|v| v.trim().parse().expect("content-length"))
+                })
+                .unwrap_or(0);
+            if scratch.len() >= head_end + 4 + clen {
+                return head
+                    .split(' ')
+                    .nth(1)
+                    .and_then(|s| s.parse().ok())
+                    .expect("status line");
+            }
+        }
+        let n = conn.read(&mut tmp).expect("read response");
+        assert!(n > 0, "server closed mid-response");
+        scratch.extend_from_slice(&tmp[..n]);
+    }
+}
+
+/// One client connection's workload: alternate score and push.
+fn client(
+    addr: SocketAddr,
+    stream_name: String,
+    requests: usize,
+) -> (usize, usize) {
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    conn.set_nodelay(true).expect("nodelay");
+    let mut scratch = Vec::new();
+    let (mut ok, mut shed) = (0usize, 0usize);
+    for i in 0..requests {
+        let (path, body) = if i % 2 == 0 {
+            (
+                "/v1/score/demo".to_string(),
+                "{\"queries\": [[0.5, 0.5]]}".to_string(),
+            )
+        } else {
+            (
+                format!("/v1/streams/{stream_name}/push"),
+                "{\"x\": [0.1, 0.2]}".to_string(),
+            )
+        };
+        let req = format!(
+            "POST {path} HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        conn.write_all(req.as_bytes()).expect("write request");
+        match read_response(&mut conn, &mut scratch) {
+            s if s < 300 => ok += 1,
+            429 | 503 => shed += 1,
+            _ => {}
+        }
+    }
+    (ok, shed)
+}
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let fast = std::env::var("SLABSVM_BENCH_FAST").as_deref() == Ok("1");
+    // SV1's headline point: 10³ concurrent tenant connections
+    let conns = if fast { 64 } else { 1000 };
+    let reqs_per_conn = if fast { 6 } else { 20 };
+    let n_streams = if fast { 4 } else { 16 };
+
+    bench.run(&format!("serve-tcp/conns={conns}"), || {
+        let coord = Arc::new(Coordinator::start_with_streams(
+            Engine::Native,
+            BatcherConfig {
+                max_batch: 256,
+                max_wait_us: 500,
+                queue_cap: 65536,
+            },
+            2,
+            StreamPoolConfig {
+                shards: 4,
+                mailbox_cap: 4096,
+                checkpoint: None,
+            },
+        ));
+        let ds = SlabConfig::default().generate(512, 42);
+        let trainer = Trainer::new(SolverKind::Smo).kernel(Kernel::Linear);
+        coord.train_blocking("demo", &ds, &trainer).expect("train demo");
+        let specs: Vec<StreamSpec> = (0..n_streams)
+            .map(|i| {
+                StreamSpec::new(
+                    format!("t{i}"),
+                    StreamConfig {
+                        kernel: Kernel::Linear,
+                        dim: 2,
+                        window: 256,
+                        min_train: 64,
+                        ..Default::default()
+                    },
+                )
+            })
+            .collect();
+        coord.open_streams(specs).expect("open streams");
+
+        let router =
+            Arc::new(Router::new(Arc::clone(&coord), RouterConfig::default()));
+        let server = slabsvm::serve::start(
+            Arc::clone(&router),
+            ServerConfig {
+                max_conns: conns + 16,
+                ..ServerConfig::default()
+            },
+        )
+        .expect("bind loopback");
+        let addr = server.addr();
+
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..conns)
+            .map(|i| {
+                let name = format!("t{}", i % n_streams);
+                std::thread::spawn(move || client(addr, name, reqs_per_conn))
+            })
+            .collect();
+        let (mut ok, mut shed_client) = (0usize, 0usize);
+        for h in handles {
+            let (o, s) = h.join().expect("client thread");
+            ok += o;
+            shed_client += s;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+
+        let stats = coord.stats();
+        let out = vec![
+            ("rps".into(), (conns * reqs_per_conn) as f64 / dt),
+            ("ok".into(), ok as f64),
+            ("p50_us".into(), stats.serve_latency.quantile_us(0.5) as f64),
+            ("p99_us".into(), stats.serve_latency.quantile_us(0.99) as f64),
+            ("shed".into(), (stats.serve_shed.get().max(shed_client as u64)) as f64),
+            ("stale".into(), stats.serve_stale_served.get() as f64),
+        ];
+        drop(server);
+        coord.quiesce_streams();
+        out
+    });
+
+    bench.report("SV1 — HTTP front door under concurrent tenant connections");
+}

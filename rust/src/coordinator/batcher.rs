@@ -100,10 +100,11 @@ impl DynamicBatcher {
         queries: Vec<Vec<f64>>,
     ) -> Receiver<Result<ScoreResponse>> {
         let (rtx, rrx) = mpsc::channel();
-        if self.inflight.load(Ordering::Relaxed) >= self.cfg.queue_cap {
-            let _ = rtx.send(Err(Error::Coordinator(
-                "scoring queue full (backpressure)".into(),
-            )));
+        let depth = self.inflight.load(Ordering::Relaxed);
+        if depth >= self.cfg.queue_cap {
+            // typed shed (same shape as the mailbox push path) so the
+            // serving layer can route it to stale-model fallback
+            let _ = rtx.send(Err(Error::Saturated { depth }));
             return rrx;
         }
         self.inflight.fetch_add(1, Ordering::Relaxed);
@@ -507,11 +508,12 @@ mod tests {
         for _ in 0..20 {
             rxs.push(b.submit("m", vec![vec![0.0, 0.0]]));
         }
-        // beyond queue_cap submissions must fail fast
+        // beyond queue_cap submissions must fail fast with the typed
+        // saturation error the serving layer's stale fallback keys on
         let failed = rxs
             .iter()
             .filter(|rx| {
-                matches!(rx.try_recv(), Ok(Err(Error::Coordinator(_))))
+                matches!(rx.try_recv(), Ok(Err(Error::Saturated { .. })))
             })
             .count();
         assert!(failed >= 16 - 4, "failed={failed}");

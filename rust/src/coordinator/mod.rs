@@ -37,9 +37,10 @@
 //!
 //! Everything is std-thread based (no async runtime in the vendored
 //! crate set); channels are `std::sync::mpsc`, shared state is behind
-//! `RwLock`/`Mutex`. The binary's `serve` subcommand drives this with a
-//! synthetic open-loop workload, and `rust/benches/serving.rs` measures
-//! batcher throughput/latency (experiment S1).
+//! `RwLock`/`Mutex`. The binary's `serve` subcommand exposes this over
+//! a dependency-free HTTP/1.1 front door ([`crate::serve`], DESIGN.md
+//! §9), and `rust/benches/serving.rs` measures batcher
+//! throughput/latency (experiment S1).
 //!
 //! [`SlabModel`]: crate::solver::ocssvm::SlabModel
 
@@ -253,6 +254,17 @@ impl Coordinator {
     /// [`Coordinator::stream_push`] does.
     pub fn push(&self, name: &str, x: &[f64]) -> Result<()> {
         self.streams.push(name, x)
+    }
+
+    /// Non-blocking [`Coordinator::push`]: a stream mailbox already at
+    /// capacity is a typed [`crate::Error::Saturated`] (carrying the
+    /// observed queue depth) instead of a blocked producer. The HTTP
+    /// front door ([`crate::serve`]) turns it into `429 Too Many
+    /// Requests` + `Retry-After`; both variants share one mailbox
+    /// implementation, so admission control can never drop a sample
+    /// the blocking path would have kept.
+    pub fn try_push(&self, name: &str, x: &[f64]) -> Result<()> {
+        self.streams.try_push(name, x)
     }
 
     /// Targeted unlearning on a managed stream: remove the resident

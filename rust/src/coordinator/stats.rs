@@ -169,6 +169,20 @@ pub struct ServiceStats {
     pub stream_restores: Counter,
     /// per-sample incremental absorb latency on the shard workers
     pub absorb_latency: Histogram,
+    /// HTTP requests admitted by the serving front door (authenticated,
+    /// rate-admitted, routed — whether or not the operation succeeded)
+    pub serve_accepted: Counter,
+    /// HTTP requests shed with 429 (token-bucket rate limit or a
+    /// saturated stream mailbox — never a blocked acceptor)
+    pub serve_shed: Counter,
+    /// HTTP requests rejected 401 (missing/unknown bearer token or a
+    /// token presented for another tenant's resource)
+    pub serve_auth_failed: Counter,
+    /// scoring requests answered from the last published model after
+    /// the batcher shed (stale path; response carries `X-Slab-Stale`)
+    pub serve_stale_served: Counter,
+    /// HTTP request latency, parse → response written
+    pub serve_latency: Histogram,
 }
 
 impl Default for ServiceStats {
@@ -198,6 +212,11 @@ impl ServiceStats {
             stream_checkpoint_errors: Counter::default(),
             stream_restores: Counter::default(),
             absorb_latency: Histogram::new(),
+            serve_accepted: Counter::default(),
+            serve_shed: Counter::default(),
+            serve_auth_failed: Counter::default(),
+            serve_stale_served: Counter::default(),
+            serve_latency: Histogram::new(),
         }
     }
 
@@ -220,7 +239,9 @@ impl ServiceStats {
             "requests={} scored={} batches={} (mean batch {:.1}) errors={} \
              jobs_done={} jobs_failed={} \
              p50={}us p99={}us mean={:.0}us \
-             batch p50={}us mean={:.0}us",
+             batch p50={}us mean={:.0}us \
+             serve_accepted={} serve_shed={} serve_auth_failed={} \
+             serve_stale_served={} serve p50={}us p99={}us",
             self.requests.get(),
             self.scored.get(),
             self.batches.get(),
@@ -233,6 +254,12 @@ impl ServiceStats {
             self.request_latency.mean_us(),
             self.batch_latency.quantile_us(0.5),
             self.batch_latency.mean_us(),
+            self.serve_accepted.get(),
+            self.serve_shed.get(),
+            self.serve_auth_failed.get(),
+            self.serve_stale_served.get(),
+            self.serve_latency.quantile_us(0.5),
+            self.serve_latency.quantile_us(0.99),
         )
     }
 

@@ -44,6 +44,14 @@ pub enum Error {
     /// removal would empty the window.
     Unlearning(String),
 
+    /// A non-blocking push found the stream's mailbox at capacity.
+    /// Carries the observed queue depth so admission-control callers
+    /// (the HTTP 429 path) can surface it in a Retry-After decision.
+    Saturated {
+        /// samples queued for the stream at rejection time
+        depth: usize,
+    },
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -62,6 +70,9 @@ impl fmt::Display for Error {
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Snapshot(m) => write!(f, "snapshot error: {m}"),
             Error::Unlearning(m) => write!(f, "unlearning error: {m}"),
+            Error::Saturated { depth } => {
+                write!(f, "mailbox saturated (queue depth {depth})")
+            }
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -125,6 +136,10 @@ mod tests {
         assert_eq!(
             Error::unlearning("id 7 not resident").to_string(),
             "unlearning error: id 7 not resident"
+        );
+        assert_eq!(
+            Error::Saturated { depth: 3 }.to_string(),
+            "mailbox saturated (queue depth 3)"
         );
         assert!(Error::NoConvergence("x".into())
             .to_string()

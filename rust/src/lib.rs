@@ -160,6 +160,36 @@
 //! `slabsvm stats` and `slabsvm trace` CLI verbs drive the same
 //! surfaces against a short synthetic workload.
 //!
+//! ## Network serving
+//!
+//! The [`serve`] layer (DESIGN.md §9) puts the whole coordinator
+//! surface behind a dependency-free HTTP/1.1 front door — per-tenant
+//! bearer-token auth, a connection cap, token-bucket rate limiting,
+//! and graceful degradation: a saturated stream mailbox is `429` +
+//! `Retry-After` (via the non-blocking `Coordinator::try_push`), and
+//! scoring under batcher saturation answers from the last published
+//! model with `X-Slab-Stale: 1` instead of failing:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use slabsvm::coordinator::{BatcherConfig, Coordinator};
+//! use slabsvm::runtime::Engine;
+//! use slabsvm::serve::{self, Router, RouterConfig, ServerConfig};
+//!
+//! let coord = Arc::new(Coordinator::start(
+//!     Engine::Native,
+//!     BatcherConfig::default(),
+//!     2,
+//! ));
+//! let router = Arc::new(Router::new(coord, RouterConfig::default()));
+//! let server = serve::start(router, ServerConfig::default()).unwrap();
+//! println!("listening on {}", server.addr());
+//! // POST /v1/score/{model}, /v1/streams/{name}/push, GET /metrics …
+//! ```
+//!
+//! `slabsvm serve` is the CLI face of the same stack, and the
+//! `serve-smoke` CI lane exercises it end to end with a Python client.
+//!
 //! ## Invariant enforcement
 //!
 //! The concurrency and panic-freedom rules the serving stack relies on
@@ -190,6 +220,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod obs;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod stream;
 pub mod sync;

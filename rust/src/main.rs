@@ -6,7 +6,10 @@
 //!   eval      evaluate a saved model on a labeled dataset (MCC etc.)
 //!   figures   regenerate the paper's Fig. 1 / Fig. 2 (CSV + SVG)
 //!   bench     print paper tables: table1 | qp | heuristics
-//!   serve     run the coordinator on a synthetic open-loop workload
+//!   serve     HTTP/1.1 front door: score / stream-push / forget /
+//!             snapshot / metrics / trace as endpoints, with
+//!             bearer-token auth, rate limiting and 429/stale-model
+//!             admission control (DESIGN.md §9)
 //!   stream    online learning on drifting streams; --restore-dir
 //!             resumes a snapshotted fleet, --snapshot-dir /
 //!             --checkpoint-dir persist it, --evict picks the
@@ -25,7 +28,7 @@
 use std::process::ExitCode;
 
 use slabsvm::config::{parse_heuristic, parse_kernel};
-use slabsvm::coordinator::{BatcherConfig, Coordinator, TrainRequest};
+use slabsvm::coordinator::{BatcherConfig, Coordinator};
 use slabsvm::data::loaders::{load_csv, load_libsvm, CsvOptions};
 use slabsvm::data::synthetic::SlabConfig;
 use slabsvm::data::Dataset;
@@ -83,7 +86,7 @@ fn usage() -> String {
      \teval     evaluate a saved model on labeled data (MCC, F1, AUC)\n\
      \tfigures  regenerate paper Fig. 1 / Fig. 2 (CSV + SVG)\n\
      \tbench    print paper tables: --which table1|qp|heuristics\n\
-     \tserve    run the serving coordinator on a synthetic workload\n\
+     \tserve    HTTP/1.1 front door for scoring + tenant streams (--addr, --auth, --rate)\n\
      \tstream   online learning over synthetic drifting streams (--streams M = sharded multi-tenant)\n\
      \tsnapshot write durable stream snapshots from a synthetic fleet, or --inspect one\n\
      \tforget   targeted unlearning: remove samples by id from a snapshot, repair, write back\n\
@@ -479,70 +482,217 @@ fn bench_heuristics(seeds: usize) -> Result<()> {
 // ------------------------------------------------------------------- serve
 
 fn cmd_serve(args: &[String]) -> Result<()> {
+    use slabsvm::serve::{
+        Auth, RateConfig, Router, RouterConfig, ServerConfig,
+    };
+    use slabsvm::stream::{StreamConfig, StreamPoolConfig, StreamSpec};
+    use std::sync::Arc;
+
     let spec = vec![
+        ArgSpec::opt("addr", "127.0.0.1:8080", "bind address (port 0 = pick a free port)"),
         ArgSpec::opt("engine", "native", "compute engine: native|pjrt"),
         ArgSpec::opt("artifacts", "artifacts", "artifacts dir for pjrt"),
-        ArgSpec::opt("requests", "2000", "synthetic requests to serve"),
+        ArgSpec::opt(
+            "tenants",
+            "demo",
+            "comma-separated tenant streams to open (demo model each)",
+        ),
+        ArgSpec::opt(
+            "auth",
+            "",
+            "bearer tokens: tenant=token,... (empty = open mode)",
+        ),
+        ArgSpec::opt("rate", "0", "per-tenant admission rate, req/s (0 = unlimited)"),
+        ArgSpec::opt("burst", "32", "token-bucket burst for --rate"),
+        ArgSpec::opt("max-conns", "1024", "connection cap (503 above it)"),
+        ArgSpec::opt("shards", "2", "stream shard worker threads"),
+        ArgSpec::opt("mailbox", "1024", "per-stream queue bound (429 when full)"),
+        ArgSpec::opt("window", "256", "sliding-window capacity"),
+        ArgSpec::opt("min-train", "64", "samples before the first publish"),
         ArgSpec::opt("batch", "256", "batcher max batch"),
         ArgSpec::opt("wait-us", "500", "batcher max wait (us)"),
         ArgSpec::opt("workers", "2", "scoring worker threads"),
-        ArgSpec::opt("train-size", "1000", "training points for the demo model"),
+        ArgSpec::opt(
+            "score-queue-cap",
+            "8192",
+            "batcher queue bound (stale-model fallback above it)",
+        ),
+        ArgSpec::opt(
+            "train-size",
+            "256",
+            "demo-model training points per tenant (0 = no demo models)",
+        ),
+        ArgSpec::opt(
+            "checkpoint-dir",
+            "",
+            "checkpoint live sessions here (also the /v1/snapshot target)",
+        ),
+        ArgSpec::opt("checkpoint-ms", "500", "checkpoint cadence (ms)"),
+        ArgSpec::opt(
+            "restore-dir",
+            "",
+            "resume sessions from this snapshot dir at startup",
+        ),
+        ArgSpec::opt("duration-s", "0", "serve this long then exit (0 = forever)"),
     ];
     if args.iter().any(|a| a == "--help") {
-        println!("{}", render_help("serve", "serve a synthetic workload", &spec));
+        println!(
+            "{}",
+            render_help(
+                "serve",
+                "HTTP/1.1 front door for scoring + tenant streams (DESIGN.md §9)",
+                &spec
+            )
+        );
         return Ok(());
     }
     let p = parse_args(&spec, args)?;
     let engine = make_engine(&p)?;
-    let n_req = p.get_usize("requests")?;
     let cfg = BatcherConfig {
         max_batch: p.get_usize("batch")?,
         max_wait_us: p.get_usize("wait-us")? as u64,
-        queue_cap: 16384,
+        queue_cap: p.get_usize("score-queue-cap")?,
+    };
+    let ckpt_dir = p.get_str("checkpoint-dir")?.to_string();
+    let checkpoint = if ckpt_dir.is_empty() {
+        None
+    } else {
+        std::fs::create_dir_all(&ckpt_dir)?;
+        Some(slabsvm::stream::CheckpointConfig::new(
+            ckpt_dir.as_str(),
+            std::time::Duration::from_millis(
+                p.get_usize("checkpoint-ms")? as u64
+            ),
+        ))
     };
     println!("starting coordinator (engine={}, {:?})", engine.name(), cfg);
-    let c = Coordinator::start(engine, cfg, p.get_usize("workers")?);
+    let c = Arc::new(Coordinator::start_with_streams(
+        engine,
+        cfg,
+        p.get_usize("workers")?,
+        StreamPoolConfig {
+            shards: p.get_usize("shards")?,
+            mailbox_cap: p.get_usize("mailbox")?,
+            checkpoint,
+        },
+    ));
 
-    // train the demo model through the async job queue
-    let ds = SlabConfig::default().generate(p.get_usize("train-size")?, 42);
-    let job = c.submit_train(TrainRequest {
-        name: "demo".into(),
-        dataset: ds,
-        trainer: Trainer::new(SolverKind::Smo).kernel(Kernel::Linear),
-    });
-    match c.wait_job(job) {
-        Some(slabsvm::coordinator::JobStatus::Done {
-            iterations,
-            seconds,
-            n_sv,
-            ..
-        }) => {
-            println!("model trained: {iterations} iters, {seconds:.3}s, {n_sv} SVs");
-        }
-        other => {
-            return Err(Error::Coordinator(format!("training failed: {other:?}")))
+    // resume a snapshotted fleet before opening anything new
+    let mut restored = Vec::new();
+    let restore_dir = p.get_str("restore-dir")?;
+    if !restore_dir.is_empty() {
+        for o in c.restore_streams(std::path::Path::new(restore_dir))? {
+            match o.result {
+                Ok(r) => {
+                    println!(
+                        "restored '{}': {} updates, v{}, repaired={}",
+                        r.name,
+                        r.updates,
+                        r.version.unwrap_or(0),
+                        r.repaired
+                    );
+                    restored.push(r);
+                }
+                Err(e) => {
+                    eprintln!("restore {} failed: {e}", o.file.display())
+                }
+            }
         }
     }
 
-    // open-loop synthetic workload
-    let eval = SlabConfig::default().generate_eval(n_req, n_req, 77);
-    let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..n_req)
-        .map(|i| c.score_async("demo", vec![eval.x.row(i).to_vec()]))
+    // one managed stream per tenant (restored ones are already open),
+    // plus an immediately scoreable demo model under the same name
+    let tenants: Vec<String> = p
+        .get_str("tenants")?
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(str::to_string)
         .collect();
-    let mut ok = 0usize;
-    for rx in rxs {
-        if rx.recv().map_or(false, |r| r.is_ok()) {
-            ok += 1;
+    let stream_cfg = StreamConfig {
+        kernel: Kernel::Linear,
+        dim: 2,
+        window: p.get_usize("window")?,
+        min_train: p.get_usize("min-train")?,
+        ..Default::default()
+    };
+    let to_open: Vec<StreamSpec> = tenants
+        .iter()
+        .filter(|t| !c.stream_manager().is_open(t))
+        .map(|t| StreamSpec::new(t.clone(), stream_cfg.clone()))
+        .collect();
+    if !to_open.is_empty() {
+        c.open_streams(to_open)?;
+    }
+    let train_size = p.get_usize("train-size")?;
+    if train_size > 0 {
+        for (i, t) in tenants.iter().enumerate() {
+            if c.model(t).is_none() {
+                let ds =
+                    SlabConfig::default().generate(train_size, 42 + i as u64);
+                c.train_blocking(
+                    t,
+                    &ds,
+                    &Trainer::new(SolverKind::Smo).kernel(Kernel::Linear),
+                )?;
+            }
         }
     }
-    let dt = t0.elapsed().as_secs_f64();
     println!(
-        "served {ok}/{n_req} requests in {dt:.3}s ({:.0} req/s)",
-        ok as f64 / dt
+        "tenants: {} (streams open: {})",
+        tenants.join(","),
+        c.stream_manager().open_count()
     );
+
+    let auth = Auth::from_spec(p.get_str("auth")?)?;
+    if !auth.is_open() {
+        println!("auth: bearer tokens for {}", auth.tenants().join(","));
+    }
+    let rate = p.get_f64("rate")?;
+    let router = Arc::new(Router::new(
+        Arc::clone(&c),
+        RouterConfig {
+            auth,
+            rate: (rate > 0.0).then_some(RateConfig {
+                per_second: rate,
+                burst: p.get_f64("burst")?,
+            }),
+            snapshot_dir: (!ckpt_dir.is_empty())
+                .then(|| std::path::PathBuf::from(&ckpt_dir)),
+        },
+    ));
+    router.note_restored(&restored);
+
+    let mut server = slabsvm::serve::start(
+        Arc::clone(&router),
+        ServerConfig {
+            addr: p.get_str("addr")?.to_string(),
+            max_conns: p.get_usize("max-conns")?,
+            ..ServerConfig::default()
+        },
+    )?;
+    // the E2E tests and the serve-smoke CI lane parse this line to
+    // discover the bound port — keep its shape stable
+    println!("listening on {}", server.addr());
+
+    let duration = p.get_usize("duration-s")?;
+    if duration == 0 {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(duration as u64));
+    server.shutdown();
+    c.quiesce_streams();
+    if !ckpt_dir.is_empty() {
+        for o in c.snapshot_streams(std::path::Path::new(&ckpt_dir))? {
+            if let Err(e) = o.result {
+                eprintln!("final snapshot of '{}' failed: {e}", o.name);
+            }
+        }
+    }
     println!("stats: {}", c.stats().summary());
-    c.shutdown();
+    println!("stream stats: {}", c.stats().stream_summary());
     Ok(())
 }
 

@@ -134,6 +134,26 @@ pub fn registry(stats: &ServiceStats) -> Vec<Metric> {
             "sessions resumed from a snapshot by this process",
             &stats.stream_restores,
         ),
+        counter(
+            "slabsvm_serve_accepted_total",
+            "HTTP requests admitted by the serving front door",
+            &stats.serve_accepted,
+        ),
+        counter(
+            "slabsvm_serve_shed_total",
+            "HTTP requests shed with 429 (rate limit or saturated mailbox)",
+            &stats.serve_shed,
+        ),
+        counter(
+            "slabsvm_serve_auth_failed_total",
+            "HTTP requests rejected 401 (bad or missing bearer token)",
+            &stats.serve_auth_failed,
+        ),
+        counter(
+            "slabsvm_serve_stale_served_total",
+            "scoring requests answered from the last published model",
+            &stats.serve_stale_served,
+        ),
         histogram(
             "slabsvm_request_latency_us",
             "end-to-end scoring request latency (microseconds)",
@@ -148,6 +168,11 @@ pub fn registry(stats: &ServiceStats) -> Vec<Metric> {
             "slabsvm_absorb_latency_us",
             "per-sample incremental absorb latency (microseconds)",
             &stats.absorb_latency,
+        ),
+        histogram(
+            "slabsvm_serve_latency_us",
+            "HTTP request latency, parse to response written (microseconds)",
+            &stats.serve_latency,
         ),
     ]
 }
@@ -234,13 +259,13 @@ mod tests {
     fn registry_covers_every_stats_field() {
         let stats = ServiceStats::new();
         let metrics = registry(&stats);
-        // 15 counters + 3 histograms — a new ServiceStats field must
+        // 19 counters + 4 histograms — a new ServiceStats field must
         // grow this registry (rule [[R4]] checks the same lexically)
-        assert_eq!(metrics.len(), 18);
+        assert_eq!(metrics.len(), 23);
         let mut names: Vec<&str> = metrics.iter().map(|m| m.name).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 18, "metric names must be unique");
+        assert_eq!(names.len(), 23, "metric names must be unique");
         assert!(metrics.iter().all(|m| m.name.starts_with("slabsvm_")));
     }
 
@@ -269,6 +294,6 @@ mod tests {
             let parsed = Json::parse(line).expect("every line parses");
             assert!(parsed.to_string().contains("slabsvm_"));
         }
-        assert_eq!(lines.lines().count(), 18);
+        assert_eq!(lines.lines().count(), 23);
     }
 }

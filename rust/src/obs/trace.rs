@@ -46,10 +46,14 @@ pub enum Stage {
     Score,
     /// background full retrain (`Trainer::fit`; `iters` = iterations)
     Retrain,
+    /// one HTTP request, parse → response written (serving front door);
+    /// a push request's Queue/Absorb spans share its trace id, so the
+    /// request→queue→absorb chain groups under one trace
+    Request,
 }
 
 impl Stage {
-    const ALL: [Stage; 8] = [
+    const ALL: [Stage; 9] = [
         Stage::Queue,
         Stage::Absorb,
         Stage::Gram,
@@ -58,6 +62,7 @@ impl Stage {
         Stage::ScoreQueue,
         Stage::Score,
         Stage::Retrain,
+        Stage::Request,
     ];
 
     fn code(self) -> u64 {
@@ -79,6 +84,7 @@ impl Stage {
             Stage::ScoreQueue => "score_queue",
             Stage::Score => "score",
             Stage::Retrain => "retrain",
+            Stage::Request => "request",
         }
     }
 }

@@ -1,0 +1,228 @@
+//! Per-tenant bearer-token authentication for the HTTP front door.
+//!
+//! The model is deliberately small: a static token → tenant map loaded
+//! at startup (`--auth "alice=tok-a,bob=tok-b"` on the CLI). A request
+//! proves it is tenant T by presenting T's token in
+//! `Authorization: Bearer <token>`; T may then touch only resources it
+//! owns — the stream/model named exactly `T` or namespaced under
+//! `T/` / `T-`. An **empty** map is *open mode* (no `--auth` flag):
+//! every request is the anonymous [`Tenant::Open`] with access to
+//! everything, which keeps single-user benchmarking friction-free.
+//! `GET /healthz` and `GET /metrics` never consult this layer — a
+//! scraper needs no tenant identity.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::serve::http::Request;
+
+/// The authenticated principal of one request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tenant {
+    /// open mode (no tokens configured): full access
+    Open,
+    /// named tenant; access limited by [`Tenant::allows`]
+    Named(String),
+}
+
+impl Tenant {
+    /// May this principal touch the stream/model named `resource`?
+    /// Named tenants own their exact name plus the `name/`- and
+    /// `name-`-prefixed namespaces.
+    pub fn allows(&self, resource: &str) -> bool {
+        match self {
+            Tenant::Open => true,
+            Tenant::Named(t) => {
+                resource == t
+                    || resource
+                        .strip_prefix(t.as_str())
+                        .is_some_and(|rest| {
+                            rest.starts_with('/') || rest.starts_with('-')
+                        })
+            }
+        }
+    }
+
+    /// Display name (`"open"` for the anonymous principal).
+    pub fn name(&self) -> &str {
+        match self {
+            Tenant::Open => "open",
+            Tenant::Named(t) => t,
+        }
+    }
+}
+
+/// Why a request failed authentication (all answer 401).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AuthFailure {
+    /// auth is configured but the request carried no Authorization
+    MissingToken,
+    /// Authorization present but not `Bearer <one-token>`
+    MalformedToken,
+    /// well-formed token that maps to no tenant
+    UnknownToken,
+}
+
+impl AuthFailure {
+    pub fn message(&self) -> &'static str {
+        match self {
+            AuthFailure::MissingToken => "missing bearer token",
+            AuthFailure::MalformedToken => "malformed authorization header",
+            AuthFailure::UnknownToken => "unknown bearer token",
+        }
+    }
+}
+
+/// The startup-loaded token table.
+#[derive(Debug, Default)]
+pub struct Auth {
+    /// token → tenant name; empty = open mode
+    tokens: HashMap<String, String>,
+}
+
+impl Auth {
+    /// Open mode: no tokens, every request is [`Tenant::Open`].
+    pub fn open() -> Auth {
+        Auth { tokens: HashMap::new() }
+    }
+
+    /// Parse a `tenant=token,tenant=token` spec (the `--auth` flag).
+    /// Rejects empty names/tokens and duplicate tokens outright —
+    /// a half-loaded auth table must never reach the listener.
+    pub fn from_spec(spec: &str) -> Result<Auth> {
+        let mut tokens = HashMap::new();
+        for pair in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let Some((tenant, token)) = pair.split_once('=') else {
+                return Err(Error::config(format!(
+                    "auth spec entry {pair:?} is not tenant=token"
+                )));
+            };
+            let (tenant, token) = (tenant.trim(), token.trim());
+            if tenant.is_empty() || token.is_empty() {
+                return Err(Error::config(format!(
+                    "auth spec entry {pair:?} has an empty side"
+                )));
+            }
+            if tokens.insert(token.to_string(), tenant.to_string()).is_some()
+            {
+                return Err(Error::config(format!(
+                    "auth spec reuses token {token:?}"
+                )));
+            }
+        }
+        Ok(Auth { tokens })
+    }
+
+    /// Open mode = no tokens configured.
+    pub fn is_open(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Configured tenant names (sorted; CLI startup banner).
+    pub fn tenants(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.tokens.values().cloned().collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// Resolve the request's principal. Open mode accepts everything
+    /// (even a bogus Authorization header — there is nothing to check
+    /// it against); otherwise the bearer token must be present,
+    /// well-formed and known.
+    pub fn authenticate(
+        &self,
+        req: &Request,
+    ) -> std::result::Result<Tenant, AuthFailure> {
+        if self.is_open() {
+            return Ok(Tenant::Open);
+        }
+        match req.bearer_token() {
+            None => Err(AuthFailure::MissingToken),
+            Some(Err(_)) => Err(AuthFailure::MalformedToken),
+            Some(Ok(token)) => match self.tokens.get(token) {
+                Some(tenant) => Ok(Tenant::Named(tenant.clone())),
+                None => Err(AuthFailure::UnknownToken),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(auth: Option<&str>) -> Request {
+        Request {
+            method: "GET".into(),
+            path: "/".into(),
+            headers: auth
+                .map(|a| vec![("authorization".into(), a.to_string())])
+                .unwrap_or_default(),
+            body: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn open_mode_accepts_everything() {
+        let auth = Auth::open();
+        assert!(auth.is_open());
+        assert_eq!(auth.authenticate(&req(None)), Ok(Tenant::Open));
+        assert_eq!(
+            auth.authenticate(&req(Some("Bearer whatever"))),
+            Ok(Tenant::Open)
+        );
+        assert!(Tenant::Open.allows("anything"));
+    }
+
+    #[test]
+    fn spec_parses_and_authenticates() {
+        let auth = Auth::from_spec("alice=tok-a, bob=tok-b").unwrap();
+        assert!(!auth.is_open());
+        assert_eq!(auth.tenants(), vec!["alice", "bob"]);
+        assert_eq!(
+            auth.authenticate(&req(Some("Bearer tok-a"))),
+            Ok(Tenant::Named("alice".into()))
+        );
+        assert_eq!(
+            auth.authenticate(&req(Some("Bearer nope"))),
+            Err(AuthFailure::UnknownToken)
+        );
+        assert_eq!(
+            auth.authenticate(&req(None)),
+            Err(AuthFailure::MissingToken)
+        );
+        // malformed header forms are a distinct, typed failure
+        for bad in ["Basic xyz", "Bearer", "Bearer a b"] {
+            assert_eq!(
+                auth.authenticate(&req(Some(bad))),
+                Err(AuthFailure::MalformedToken),
+                "{bad:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(Auth::from_spec("no-equals-here").is_err());
+        assert!(Auth::from_spec("=tok").is_err());
+        assert!(Auth::from_spec("alice=").is_err());
+        assert!(Auth::from_spec("a=t,b=t").is_err(), "duplicate token");
+        // empty / whitespace specs are open mode
+        assert!(Auth::from_spec("").unwrap().is_open());
+        assert!(Auth::from_spec(" , ").unwrap().is_open());
+    }
+
+    #[test]
+    fn tenant_ownership_rules() {
+        let t = Tenant::Named("alice".into());
+        assert!(t.allows("alice"));
+        assert!(t.allows("alice/stream-1"));
+        assert!(t.allows("alice-model"));
+        assert!(!t.allows("bob"));
+        assert!(!t.allows("alicetail"), "prefix alone is not ownership");
+        assert!(!t.allows("malice"));
+        assert_eq!(t.name(), "alice");
+        assert_eq!(Tenant::Open.name(), "open");
+    }
+}

@@ -1,0 +1,574 @@
+//! Hand-rolled HTTP/1.1 request parser + response builder.
+//!
+//! Pure functions over byte buffers — no I/O, no allocation beyond the
+//! parsed request itself — so the whole wire grammar is unit-testable
+//! without a socket. The parser is incremental: [`parse_request`]
+//! either yields a complete [`Request`] plus the number of bytes it
+//! consumed (pipelined requests parse by calling it again on the
+//! remainder), asks for more bytes ([`Parsed::Partial`]), or rejects
+//! with a typed [`HttpError`] that maps onto a 4xx/5xx status — never
+//! a panic (the file is in slablint rule [[R1]]'s scope: malformed
+//! bytes from the network must not be able to kill a worker thread).
+//!
+//! Supported surface, deliberately small: methods the router uses,
+//! `HTTP/1.0`/`HTTP/1.1`, `Content-Length` bodies (no chunked
+//! transfer-encoding — responses are always sized), keep-alive with
+//! pipelining. Every limit ([`HttpLimits`]) rejects with a typed error
+//! before buffering unboundedly.
+
+use std::fmt;
+
+use crate::util::json::Json;
+
+/// Default cap on the request line (method + path + version).
+pub const DEFAULT_MAX_REQUEST_LINE: usize = 8 * 1024;
+/// Default cap on the full header block.
+pub const DEFAULT_MAX_HEAD_BYTES: usize = 32 * 1024;
+/// Default cap on a request body.
+pub const DEFAULT_MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// Parser limits; every violation is a typed [`HttpError`].
+#[derive(Clone, Copy, Debug)]
+pub struct HttpLimits {
+    pub max_request_line: usize,
+    pub max_head_bytes: usize,
+    pub max_body_bytes: usize,
+}
+
+impl Default for HttpLimits {
+    fn default() -> Self {
+        HttpLimits {
+            max_request_line: DEFAULT_MAX_REQUEST_LINE,
+            max_head_bytes: DEFAULT_MAX_HEAD_BYTES,
+            max_body_bytes: DEFAULT_MAX_BODY_BYTES,
+        }
+    }
+}
+
+/// Typed request-rejection reasons, each mapping to one status code.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HttpError {
+    /// malformed request line (missing parts, bad path, too long)
+    BadRequestLine(String),
+    /// method token outside the supported set
+    UnsupportedMethod(String),
+    /// protocol version other than HTTP/1.0 / HTTP/1.1
+    UnsupportedVersion(String),
+    /// header line without `:`, empty/spaced name, or non-UTF-8 head
+    BadHeader(String),
+    /// header block exceeded [`HttpLimits::max_head_bytes`]
+    HeadersTooLarge(usize),
+    /// `Content-Length` not a base-10 integer
+    BadContentLength(String),
+    /// declared body exceeds [`HttpLimits::max_body_bytes`]
+    PayloadTooLarge(usize),
+}
+
+impl HttpError {
+    /// The status code this rejection answers with.
+    pub fn status(&self) -> u16 {
+        match self {
+            HttpError::BadRequestLine(_)
+            | HttpError::BadHeader(_)
+            | HttpError::BadContentLength(_) => 400,
+            HttpError::UnsupportedMethod(_) => 405,
+            HttpError::UnsupportedVersion(_) => 505,
+            HttpError::HeadersTooLarge(_) => 431,
+            HttpError::PayloadTooLarge(_) => 413,
+        }
+    }
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HttpError::BadRequestLine(l) => {
+                write!(f, "malformed request line: {l}")
+            }
+            HttpError::UnsupportedMethod(m) => {
+                write!(f, "unsupported method: {m}")
+            }
+            HttpError::UnsupportedVersion(v) => {
+                write!(f, "unsupported protocol version: {v}")
+            }
+            HttpError::BadHeader(h) => write!(f, "malformed header: {h}"),
+            HttpError::HeadersTooLarge(n) => {
+                write!(f, "header block too large ({n} bytes)")
+            }
+            HttpError::BadContentLength(v) => {
+                write!(f, "bad content-length: {v}")
+            }
+            HttpError::PayloadTooLarge(n) => {
+                write!(f, "request body too large ({n} bytes)")
+            }
+        }
+    }
+}
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// `(name, value)` pairs in arrival order; names lowercased,
+    /// values whitespace-trimmed
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header with this (lowercase) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The bearer token of the `Authorization` header, if the header is
+    /// present AND well-formed (`Bearer <token>`, non-empty token).
+    /// `Some(Err(..))` distinguishes a malformed header (401 with a
+    /// reason) from an absent one.
+    pub fn bearer_token(&self) -> Option<Result<&str, HttpError>> {
+        let raw = self.header("authorization")?;
+        let Some(token) = raw.strip_prefix("Bearer ") else {
+            return Some(Err(HttpError::BadHeader(format!(
+                "authorization: {raw}"
+            ))));
+        };
+        let token = token.trim();
+        if token.is_empty() || token.contains(' ') {
+            return Some(Err(HttpError::BadHeader(format!(
+                "authorization: {raw}"
+            ))));
+        }
+        Some(Ok(token))
+    }
+
+    /// Client asked to drop the connection after this response.
+    pub fn wants_close(&self) -> bool {
+        self.header("connection")
+            .is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Outcome of one incremental parse attempt.
+#[derive(Debug)]
+pub enum Parsed {
+    /// complete request + bytes consumed from the front of the buffer
+    /// (pipelining: re-run the parser on `buf[consumed..]`)
+    Complete(Box<Request>, usize),
+    /// not enough bytes yet — read more and retry
+    Partial,
+}
+
+const SEP: &[u8] = b"\r\n\r\n";
+const METHODS: &[&str] = &["GET", "POST", "PUT", "DELETE", "HEAD", "OPTIONS"];
+
+/// Parse one request from the front of `buf`. See [`Parsed`].
+pub fn parse_request(
+    buf: &[u8],
+    limits: &HttpLimits,
+) -> Result<Parsed, HttpError> {
+    let Some(head_len) = buf.windows(SEP.len()).position(|w| w == SEP) else {
+        // no terminator yet: reject early once a limit is provably
+        // blown, otherwise ask for more bytes
+        if buf.len() > limits.max_head_bytes {
+            return Err(HttpError::HeadersTooLarge(buf.len()));
+        }
+        if !buf.iter().any(|&b| b == b'\n')
+            && buf.len() > limits.max_request_line
+        {
+            return Err(HttpError::BadRequestLine(format!(
+                "request line exceeds {} bytes",
+                limits.max_request_line
+            )));
+        }
+        return Ok(Parsed::Partial);
+    };
+    if head_len > limits.max_head_bytes {
+        return Err(HttpError::HeadersTooLarge(head_len));
+    }
+    let head_bytes = buf.get(..head_len).unwrap_or_default();
+    let head = std::str::from_utf8(head_bytes)
+        .map_err(|_| HttpError::BadHeader("non-UTF-8 header bytes".into()))?;
+
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    if request_line.len() > limits.max_request_line {
+        return Err(HttpError::BadRequestLine(format!(
+            "request line exceeds {} bytes",
+            limits.max_request_line
+        )));
+    }
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or_default();
+    let path = parts.next().unwrap_or_default();
+    let version = parts.next().unwrap_or_default();
+    if parts.next().is_some() || method.is_empty() || path.is_empty() {
+        return Err(HttpError::BadRequestLine(request_line.to_string()));
+    }
+    if !METHODS.contains(&method) {
+        return Err(HttpError::UnsupportedMethod(method.to_string()));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(HttpError::UnsupportedVersion(version.to_string()));
+    }
+    if !path.starts_with('/') {
+        return Err(HttpError::BadRequestLine(request_line.to_string()));
+    }
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::BadHeader(line.to_string()));
+        };
+        // a name with embedded whitespace is request smuggling bait
+        if name.is_empty() || name.chars().any(|c| c.is_ascii_whitespace()) {
+            return Err(HttpError::BadHeader(line.to_string()));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let body_len = match headers.iter().find(|(n, _)| n == "content-length") {
+        None => 0,
+        Some((_, v)) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::BadContentLength(v.clone()))?,
+    };
+    if body_len > limits.max_body_bytes {
+        return Err(HttpError::PayloadTooLarge(body_len));
+    }
+    let body_start = head_len + SEP.len();
+    let total = body_start + body_len;
+    if buf.len() < total {
+        return Ok(Parsed::Partial);
+    }
+    let body = buf.get(body_start..total).unwrap_or_default().to_vec();
+    Ok(Parsed::Complete(
+        Box::new(Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            headers,
+            body,
+        }),
+        total,
+    ))
+}
+
+/// Reason phrase for the status codes this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        204 => "No Content",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        403 => "Forbidden",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Response builder: status + headers + sized body, encoded in one
+/// buffer so a response is a single `write_all`.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Response {
+        Response { status, headers: Vec::new(), body: Vec::new() }
+    }
+
+    /// JSON body (canonical encoding; `Content-Type: application/json`).
+    pub fn json(status: u16, body: &Json) -> Response {
+        Response::new(status)
+            .header("content-type", "application/json")
+            .body(body.to_string().into_bytes())
+    }
+
+    /// Plain/typed text body.
+    pub fn text(
+        status: u16,
+        content_type: &str,
+        body: impl Into<Vec<u8>>,
+    ) -> Response {
+        Response::new(status)
+            .header("content-type", content_type)
+            .body(body.into())
+    }
+
+    /// The 4xx/5xx a typed parse rejection answers with.
+    pub fn from_http_error(e: &HttpError) -> Response {
+        Response::json(
+            e.status(),
+            &Json::obj(vec![("error", Json::str(&e.to_string()))]),
+        )
+    }
+
+    pub fn header(
+        mut self,
+        name: impl Into<String>,
+        value: impl Into<String>,
+    ) -> Response {
+        self.headers.push((name.into(), value.into()));
+        self
+    }
+
+    pub fn body(mut self, body: Vec<u8>) -> Response {
+        self.body = body;
+        self
+    }
+
+    /// Header lookup (router tests read back `Retry-After` etc.).
+    pub fn header_value(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_bytes(&self) -> &[u8] {
+        &self.body
+    }
+
+    /// Encode status line + headers + body into one write buffer.
+    pub fn encode(&self, keep_alive: bool) -> Vec<u8> {
+        let mut out = format!(
+            "HTTP/1.1 {} {}\r\n",
+            self.status,
+            reason(self.status)
+        )
+        .into_bytes();
+        for (name, value) in &self.headers {
+            out.extend_from_slice(format!("{name}: {value}\r\n").as_bytes());
+        }
+        out.extend_from_slice(
+            format!("content-length: {}\r\n", self.body.len()).as_bytes(),
+        );
+        let conn = if keep_alive { "keep-alive" } else { "close" };
+        out.extend_from_slice(format!("connection: {conn}\r\n\r\n").as_bytes());
+        out.extend_from_slice(&self.body);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(bytes: &[u8]) -> Result<Parsed, HttpError> {
+        parse_request(bytes, &HttpLimits::default())
+    }
+
+    fn complete(bytes: &[u8]) -> (Request, usize) {
+        match parse(bytes) {
+            Ok(Parsed::Complete(req, n)) => (*req, n),
+            other => panic!("expected complete parse, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_simple_get() {
+        let (req, n) =
+            complete(b"GET /healthz HTTP/1.1\r\nhost: x\r\n\r\n");
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(n, b"GET /healthz HTTP/1.1\r\nhost: x\r\n\r\n".len());
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw =
+            b"POST /v1/streams/t/push HTTP/1.1\r\ncontent-length: 9\r\n\r\n{\"x\":[1]}";
+        let (req, n) = complete(raw);
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"{\"x\":[1]}");
+        assert_eq!(n, raw.len());
+    }
+
+    #[test]
+    fn truncated_request_line_is_partial_not_error() {
+        assert!(matches!(parse(b"GET /heal"), Ok(Parsed::Partial)));
+        assert!(matches!(parse(b""), Ok(Parsed::Partial)));
+        assert!(matches!(
+            parse(b"GET / HTTP/1.1\r\nhost: x\r\n"),
+            Ok(Parsed::Partial)
+        ));
+    }
+
+    #[test]
+    fn truncated_body_is_partial() {
+        let raw = b"POST /p HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc";
+        assert!(matches!(parse(raw), Ok(Parsed::Partial)));
+    }
+
+    #[test]
+    fn malformed_request_lines_are_typed_400() {
+        for raw in [
+            &b"GET\r\n\r\n"[..],
+            b"GET  /two  spaces HTTP/1.1\r\n\r\n",
+            b"GET nopath HTTP/1.1\r\n\r\n",
+        ] {
+            let err = parse(raw).expect_err("must reject");
+            assert_eq!(err.status(), 400, "{err}");
+        }
+    }
+
+    #[test]
+    fn unsupported_method_and_version_are_typed() {
+        let err = parse(b"BREW /pot HTTP/1.1\r\n\r\n").expect_err("reject");
+        assert_eq!(err, HttpError::UnsupportedMethod("BREW".into()));
+        assert_eq!(err.status(), 405);
+        let err = parse(b"GET / HTTP/2.0\r\n\r\n").expect_err("reject");
+        assert_eq!(err.status(), 505);
+    }
+
+    #[test]
+    fn oversized_request_line_rejected_before_terminator() {
+        let limits = HttpLimits {
+            max_request_line: 64,
+            ..HttpLimits::default()
+        };
+        let long = vec![b'A'; 100];
+        let err = parse_request(&long, &limits).expect_err("reject");
+        assert_eq!(err.status(), 400);
+    }
+
+    #[test]
+    fn oversized_headers_rejected_431() {
+        let limits = HttpLimits {
+            max_head_bytes: 128,
+            ..HttpLimits::default()
+        };
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..32 {
+            raw.extend_from_slice(format!("h{i}: {}\r\n", "v".repeat(16)).as_bytes());
+        }
+        raw.extend_from_slice(b"\r\n");
+        let err = parse_request(&raw, &limits).expect_err("reject");
+        assert!(matches!(err, HttpError::HeadersTooLarge(_)));
+        assert_eq!(err.status(), 431);
+        // also without a terminator in sight
+        let endless = vec![b'x'; 256];
+        let err = parse_request(&endless, &limits).expect_err("reject");
+        assert_eq!(err.status(), 431);
+    }
+
+    #[test]
+    fn bad_content_length_is_typed_400() {
+        let raw = b"POST /p HTTP/1.1\r\ncontent-length: banana\r\n\r\n";
+        let err = parse(raw).expect_err("reject");
+        assert_eq!(err, HttpError::BadContentLength("banana".into()));
+        assert_eq!(err.status(), 400);
+        let raw = b"POST /p HTTP/1.1\r\ncontent-length: -5\r\n\r\n";
+        assert_eq!(parse(raw).expect_err("reject").status(), 400);
+    }
+
+    #[test]
+    fn oversized_body_rejected_413_from_declared_length() {
+        let limits = HttpLimits {
+            max_body_bytes: 16,
+            ..HttpLimits::default()
+        };
+        // rejected on the DECLARED length — no body bytes needed
+        let raw = b"POST /p HTTP/1.1\r\ncontent-length: 1000000\r\n\r\n";
+        let err = parse_request(raw, &limits).expect_err("reject");
+        assert_eq!(err, HttpError::PayloadTooLarge(1_000_000));
+        assert_eq!(err.status(), 413);
+    }
+
+    #[test]
+    fn malformed_headers_are_typed_400() {
+        for raw in [
+            &b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n"[..],
+            b"GET / HTTP/1.1\r\nbad name: v\r\n\r\n",
+            b"GET / HTTP/1.1\r\n: empty\r\n\r\n",
+        ] {
+            assert_eq!(parse(raw).expect_err("reject").status(), 400);
+        }
+        // non-UTF-8 header bytes
+        let raw = b"GET / HTTP/1.1\r\nh: \xff\xfe\r\n\r\n";
+        assert_eq!(parse(raw).expect_err("reject").status(), 400);
+    }
+
+    #[test]
+    fn pipelined_requests_parse_sequentially() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\nPOST /b HTTP/1.1\r\ncontent-length: 2\r\n\r\nhiGET /c HTTP/1.1\r\n\r\n";
+        let (r1, n1) = complete(raw);
+        assert_eq!(r1.path, "/a");
+        let (r2, n2) = complete(raw.get(n1..).unwrap());
+        assert_eq!((r2.path.as_str(), r2.body.as_slice()), ("/b", &b"hi"[..]));
+        let (r3, _) = complete(raw.get(n1 + n2..).unwrap());
+        assert_eq!(r3.path, "/c");
+    }
+
+    #[test]
+    fn bearer_token_extraction_and_malformed_forms() {
+        let mk = |auth: &str| Request {
+            method: "GET".into(),
+            path: "/".into(),
+            headers: vec![("authorization".into(), auth.to_string())],
+            body: Vec::new(),
+        };
+        assert_eq!(mk("Bearer tok-1").bearer_token(), Some(Ok("tok-1")));
+        // malformed forms are Some(Err(..)) — typed 4xx, not a panic
+        for bad in ["Basic dXNlcg==", "Bearer", "Bearer  ", "Bearer a b"] {
+            let t = mk(bad).bearer_token();
+            assert!(
+                matches!(t, Some(Err(ref e)) if e.status() == 400),
+                "{bad:?} -> {t:?}"
+            );
+        }
+        let none = Request {
+            method: "GET".into(),
+            path: "/".into(),
+            headers: Vec::new(),
+            body: Vec::new(),
+        };
+        assert!(none.bearer_token().is_none());
+    }
+
+    #[test]
+    fn response_encode_shape() {
+        let r = Response::json(
+            429,
+            &Json::obj(vec![("error", Json::str("slow down"))]),
+        )
+        .header("retry-after", "1");
+        let bytes = r.encode(true);
+        let text = String::from_utf8(bytes).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("retry-after: 1\r\n"));
+        assert!(text.contains("connection: keep-alive\r\n"));
+        assert!(text.ends_with("{\"error\":\"slow down\"}"));
+        let closed = Response::new(204).encode(false);
+        assert!(String::from_utf8(closed)
+            .unwrap()
+            .contains("connection: close\r\n"));
+    }
+
+    #[test]
+    fn http_error_statuses_have_reasons() {
+        for status in [200, 400, 401, 404, 405, 408, 413, 429, 431, 500, 503, 505]
+        {
+            assert_ne!(reason(status), "Unknown", "{status}");
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Admission control primitives: connection gauge + per-tenant token
+//! buckets.
+//!
+//! Both shed instead of queueing — the acceptor thread must never
+//! block behind a slow or abusive client (DESIGN.md §9's first rule of
+//! the shed-vs-stale ladder). [`ConnGauge`] bounds concurrent
+//! connections with an RAII permit (over the cap → immediate 503 +
+//! close); [`RateLimiter`] is a classic token bucket per tenant
+//! (over the rate → 429 + `Retry-After`), refilled lazily from a
+//! monotonic clock so there is no background thread to schedule.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::sync::Mutex;
+
+// ---------------------------------------------------------- connections
+
+/// Bounded concurrent-connection count.
+#[derive(Debug)]
+pub struct ConnGauge {
+    cur: AtomicUsize,
+    max: usize,
+}
+
+impl ConnGauge {
+    pub fn new(max: usize) -> Arc<ConnGauge> {
+        Arc::new(ConnGauge { cur: AtomicUsize::new(0), max: max.max(1) })
+    }
+
+    /// Claim a connection slot; `None` means the listener is full and
+    /// the caller sheds the connection (it must not wait).
+    pub fn try_acquire(self: &Arc<ConnGauge>) -> Option<ConnPermit> {
+        let mut cur = self.cur.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max {
+                return None;
+            }
+            match self.cur.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(ConnPermit { gauge: Arc::clone(self) }),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Live connection count (tests / stats banner).
+    pub fn active(&self) -> usize {
+        self.cur.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII connection slot — dropping it frees the slot.
+#[derive(Debug)]
+pub struct ConnPermit {
+    gauge: Arc<ConnGauge>,
+}
+
+impl Drop for ConnPermit {
+    fn drop(&mut self) {
+        self.gauge.cur.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+// ---------------------------------------------------------- rate limit
+
+/// Token-bucket parameters (requests/second + burst capacity).
+#[derive(Clone, Copy, Debug)]
+pub struct RateConfig {
+    /// sustained admission rate, tokens (requests) per second
+    pub per_second: f64,
+    /// bucket capacity: how far a tenant may burst above the rate
+    pub burst: f64,
+}
+
+struct Bucket {
+    tokens: f64,
+    last_us: u64,
+}
+
+/// Per-tenant token buckets. `None` config = unlimited (no `--rate`
+/// flag), which costs one branch per request.
+pub struct RateLimiter {
+    cfg: Option<RateConfig>,
+    epoch: Instant,
+    buckets: Mutex<HashMap<String, Bucket>>,
+}
+
+impl RateLimiter {
+    pub fn new(cfg: Option<RateConfig>) -> RateLimiter {
+        let cfg = cfg.filter(|c| c.per_second > 0.0);
+        RateLimiter {
+            cfg,
+            epoch: Instant::now(),
+            buckets: Mutex::new("serve_rate_buckets", HashMap::new()),
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Admit one request for `tenant`, or return the suggested
+    /// `Retry-After` in **seconds** (ceiling of the time until one
+    /// token refills, ≥ 1 — the header's granularity is whole seconds).
+    pub fn admit(&self, tenant: &str) -> Result<(), u64> {
+        let Some(cfg) = self.cfg else {
+            return Ok(());
+        };
+        let burst = cfg.burst.max(1.0);
+        let now = self.now_us();
+        let mut buckets = self.buckets.lock();
+        let b = buckets.entry(tenant.to_string()).or_insert(Bucket {
+            tokens: burst,
+            last_us: now,
+        });
+        let dt_s = now.saturating_sub(b.last_us) as f64 / 1e6;
+        b.tokens = (b.tokens + dt_s * cfg.per_second).min(burst);
+        b.last_us = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            Ok(())
+        } else {
+            let wait_s = (1.0 - b.tokens) / cfg.per_second;
+            Err((wait_s.ceil() as u64).max(1))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauge_bounds_and_releases() {
+        let g = ConnGauge::new(2);
+        let a = g.try_acquire().expect("slot 1");
+        let _b = g.try_acquire().expect("slot 2");
+        assert!(g.try_acquire().is_none(), "third conn must shed");
+        assert_eq!(g.active(), 2);
+        drop(a);
+        assert_eq!(g.active(), 1);
+        assert!(g.try_acquire().is_some(), "freed slot reusable");
+    }
+
+    #[test]
+    fn unlimited_rate_admits_everything() {
+        let rl = RateLimiter::new(None);
+        for _ in 0..10_000 {
+            assert!(rl.admit("t").is_ok());
+        }
+    }
+
+    #[test]
+    fn bucket_sheds_after_burst_with_retry_after() {
+        let rl = RateLimiter::new(Some(RateConfig {
+            per_second: 0.5,
+            burst: 3.0,
+        }));
+        // the burst admits instantly, then the bucket is dry
+        for i in 0..3 {
+            assert!(rl.admit("alice").is_ok(), "burst req {i}");
+        }
+        let retry = rl.admit("alice").expect_err("must shed");
+        // one token at 0.5/s takes 2s; header rounds up to whole seconds
+        assert!(retry >= 2, "retry-after {retry}");
+        // independent bucket per tenant
+        assert!(rl.admit("bob").is_ok());
+    }
+
+    #[test]
+    fn zero_rate_config_is_unlimited() {
+        let rl = RateLimiter::new(Some(RateConfig {
+            per_second: 0.0,
+            burst: 1.0,
+        }));
+        for _ in 0..100 {
+            assert!(rl.admit("t").is_ok());
+        }
+    }
+}

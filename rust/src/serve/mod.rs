@@ -1,0 +1,46 @@
+//! L5 — the network front door (DESIGN.md §9).
+//!
+//! A dependency-free HTTP/1.1 server over `std::net` that exposes the
+//! [`Coordinator`](crate::coordinator::Coordinator)'s score /
+//! stream-push / forget / snapshot / metrics / trace surface as
+//! endpoints, with per-tenant bearer-token auth ([`auth`]), a
+//! connection cap + per-tenant token-bucket rate limiting ([`limits`]),
+//! and graceful-degradation admission control ([`router`]): a
+//! saturated shard mailbox answers `429` + `Retry-After` (the acceptor
+//! never blocks), and scoring under batcher saturation falls back to
+//! the last *published* model, marked `X-Slab-Stale` /
+//! `X-Slab-Model-Version`.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use slabsvm::coordinator::{BatcherConfig, Coordinator};
+//! use slabsvm::runtime::Engine;
+//! use slabsvm::serve::{self, Router, RouterConfig, ServerConfig};
+//!
+//! let coord = Arc::new(Coordinator::start(
+//!     Engine::Native,
+//!     BatcherConfig::default(),
+//!     2,
+//! ));
+//! let router = Arc::new(Router::new(coord, RouterConfig::default()));
+//! let server = serve::start(router, ServerConfig::default()).unwrap();
+//! println!("listening on {}", server.addr());
+//! ```
+//!
+//! Endpoint table, the auth model and the shed-vs-stale decision
+//! ladder are documented in DESIGN.md §9; `rust/benches/serve.rs`
+//! measures the front door under 10³ concurrent tenant connections
+//! (experiment SV1), and `rust/tests/serve_e2e.rs` drives the binary
+//! over real TCP through a kill-mid-traffic + restore cycle.
+
+pub mod auth;
+pub mod http;
+pub mod limits;
+pub mod router;
+pub mod server;
+
+pub use auth::{Auth, AuthFailure, Tenant};
+pub use http::{parse_request, HttpError, HttpLimits, Parsed, Request, Response};
+pub use limits::{ConnGauge, RateConfig, RateLimiter};
+pub use router::{Router, RouterConfig};
+pub use server::{start, Server, ServerConfig};

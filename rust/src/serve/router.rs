@@ -1,0 +1,847 @@
+//! Request routing + the graceful-degradation admission ladder.
+//!
+//! [`Router::handle`] is a pure `Request -> Response` function over an
+//! `Arc<Coordinator>` — no sockets in sight, so every admission
+//! decision is unit-testable in-process. The ladder (DESIGN.md §9):
+//!
+//! 1. `/healthz` and `/metrics` answer unconditionally (a scraper must
+//!    see the saturation it is diagnosing);
+//! 2. authentication — unknown/missing/malformed bearer tokens are 401,
+//!    a valid tenant touching another tenant's resource is 403;
+//! 3. the per-tenant token bucket — over the rate is `429` +
+//!    `Retry-After` (shed, never queued);
+//! 4. stream pushes go through the **non-blocking**
+//!    [`Coordinator::try_push`]: a saturated mailbox is `429` +
+//!    `Retry-After` carrying the queue depth — the worker thread never
+//!    blocks on shard backpressure;
+//! 5. scoring falls back to the last *published* model when the
+//!    batcher sheds ([`Error::Saturated`]): the response is computed
+//!    directly from the registry snapshot and marked `X-Slab-Stale: 1`
+//!    (plus `X-Slab-Model-Version`, which every scoring response
+//!    carries) — degraded freshness, never an outage.
+//!
+//! Every request mints a trace id and records a [`Stage::Request`]
+//! span; a push hands the same id to the shard mailbox, so the
+//! request→queue→absorb chain groups under one trace in `/v1/trace`.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::coordinator::Coordinator;
+use crate::error::Error;
+use crate::obs::{self, Span, Stage};
+use crate::serve::auth::{Auth, Tenant};
+use crate::serve::http::{Request, Response};
+use crate::serve::limits::{RateConfig, RateLimiter};
+use crate::stream::RestoredStream;
+use crate::sync::RwLock;
+use crate::util::json::Json;
+
+/// Router policy knobs (everything the CLI flags feed in).
+#[derive(Default)]
+pub struct RouterConfig {
+    pub auth: Auth,
+    /// per-tenant token bucket; `None` = unlimited
+    pub rate: Option<RateConfig>,
+    /// where `POST /v1/snapshot` writes (`None` disables the endpoint)
+    pub snapshot_dir: Option<PathBuf>,
+}
+
+/// The serving front door's brain: authn/authz, admission control, and
+/// the endpoint table (DESIGN.md §9).
+pub struct Router {
+    coord: Arc<Coordinator>,
+    auth: Auth,
+    rate: RateLimiter,
+    snapshot_dir: Option<PathBuf>,
+    /// pre-restart accounting of streams this process restored, served
+    /// by `GET /v1/streams/{name}` so clients can resume after a crash
+    restored: RwLock<HashMap<String, RestoredStream>>,
+}
+
+fn err_json(status: u16, msg: &str) -> Response {
+    Response::json(status, &Json::obj(vec![("error", Json::str(msg))]))
+}
+
+/// Map a coordinator-layer failure onto a status code.
+fn error_response(e: &Error) -> Response {
+    let status = match e {
+        Error::Saturated { .. } => 429,
+        Error::Unlearning(_) => 404,
+        Error::Coordinator(msg) if msg.contains("unknown") => 404,
+        Error::Config(_) | Error::Data(_) => 400,
+        _ => 500,
+    };
+    let resp = err_json(status, &e.to_string());
+    if status == 429 {
+        resp.header("retry-after", "1")
+    } else {
+        resp
+    }
+}
+
+fn parse_vec_f64(j: &Json) -> Option<Vec<f64>> {
+    j.as_arr()?.iter().map(Json::as_f64).collect()
+}
+
+fn parse_matrix(j: &Json) -> Option<Vec<Vec<f64>>> {
+    j.as_arr()?.iter().map(parse_vec_f64).collect()
+}
+
+fn body_json(req: &Request) -> Result<Json, Response> {
+    let text = std::str::from_utf8(&req.body)
+        .map_err(|_| err_json(400, "request body is not UTF-8"))?;
+    Json::parse(text).map_err(|e| err_json(400, &e.to_string()))
+}
+
+impl Router {
+    pub fn new(coord: Arc<Coordinator>, cfg: RouterConfig) -> Router {
+        Router {
+            coord,
+            auth: cfg.auth,
+            rate: RateLimiter::new(cfg.rate),
+            snapshot_dir: cfg.snapshot_dir,
+            restored: RwLock::new("serve_restored", HashMap::new()),
+        }
+    }
+
+    /// Record restore outcomes so `GET /v1/streams/{name}` can tell a
+    /// reconnecting client where its stream resumed from.
+    pub fn note_restored(&self, streams: &[RestoredStream]) {
+        let mut map = self.restored.write();
+        for rs in streams {
+            map.insert(rs.name.clone(), rs.clone());
+        }
+    }
+
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.coord
+    }
+
+    /// Serve one request: admission ladder + endpoint dispatch, with
+    /// the serve counters/histogram and a [`Stage::Request`] span
+    /// recorded around the whole thing.
+    pub fn handle(&self, req: &Request) -> Response {
+        let trace = obs::mint_trace();
+        let start_us = obs::now_us();
+        let resp = self.dispatch(req, trace);
+        let stats = self.coord.stats();
+        match resp.status {
+            401 | 403 => stats.serve_auth_failed.inc(),
+            429 | 503 => stats.serve_shed.inc(),
+            _ => stats.serve_accepted.inc(),
+        }
+        let dur_us = obs::now_us().saturating_sub(start_us);
+        stats.serve_latency.record_us(dur_us);
+        obs::record_span(Span {
+            trace,
+            stage: Stage::Request,
+            start_us,
+            dur_us,
+            stream: 0,
+            shard: u32::MAX,
+            iters: 0,
+        });
+        resp
+    }
+
+    fn dispatch(&self, req: &Request, trace: u64) -> Response {
+        let segs: Vec<&str> =
+            req.path.split('/').filter(|s| !s.is_empty()).collect();
+
+        // rung 1: liveness + scrape endpoints bypass auth and rate
+        match (req.method.as_str(), segs.as_slice()) {
+            ("GET", ["healthz"]) => return self.healthz(),
+            ("GET", ["metrics"]) => {
+                return Response::text(
+                    200,
+                    "text/plain; version=0.0.4",
+                    self.coord.metrics_text(),
+                );
+            }
+            _ => {}
+        }
+
+        // rung 2: authentication
+        let tenant = match self.auth.authenticate(req) {
+            Ok(t) => t,
+            Err(f) => {
+                return err_json(401, f.message())
+                    .header("www-authenticate", "Bearer");
+            }
+        };
+
+        // rung 3: per-tenant token bucket
+        if let Err(retry_s) = self.rate.admit(tenant.name()) {
+            return err_json(429, "rate limit exceeded")
+                .header("retry-after", retry_s.to_string());
+        }
+
+        match (req.method.as_str(), segs.as_slice()) {
+            ("GET", ["v1", "trace"]) => self.trace_dump(),
+            ("POST", ["v1", "score", model]) => {
+                self.guarded(&tenant, model, |r| r.score(model, req))
+            }
+            ("POST", ["v1", "streams", name, "push"]) => self
+                .guarded(&tenant, name, |r| r.push(name, req, trace)),
+            ("POST", ["v1", "streams", name, "forget"]) => {
+                self.guarded(&tenant, name, |r| r.forget(name, req))
+            }
+            ("GET", ["v1", "streams", name]) => {
+                self.guarded(&tenant, name, |r| r.stream_info(name))
+            }
+            ("POST", ["v1", "streams", name, "close"]) => {
+                self.guarded(&tenant, name, |r| r.close(name))
+            }
+            ("POST", ["v1", "snapshot"]) => self.snapshot(),
+            ("POST", ["v1", "quiesce"]) => {
+                self.coord.quiesce_streams();
+                Response::json(
+                    200,
+                    &Json::obj(vec![("quiesced", Json::Bool(true))]),
+                )
+            }
+            (_, segs) if known_path(segs) => {
+                err_json(405, "method not allowed for this path")
+            }
+            _ => err_json(404, "no such endpoint"),
+        }
+    }
+
+    /// Rung 2b: tenant/resource ownership (403, counted as auth).
+    fn guarded(
+        &self,
+        tenant: &Tenant,
+        resource: &str,
+        f: impl FnOnce(&Router) -> Response,
+    ) -> Response {
+        if !tenant.allows(resource) {
+            return err_json(
+                403,
+                &format!(
+                    "tenant '{}' may not access '{resource}'",
+                    tenant.name()
+                ),
+            );
+        }
+        f(self)
+    }
+
+    fn healthz(&self) -> Response {
+        Response::json(
+            200,
+            &Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "open_streams",
+                    Json::num(
+                        self.coord.stream_manager().open_count() as f64,
+                    ),
+                ),
+                (
+                    "backlog",
+                    Json::num(self.coord.stream_manager().backlog() as f64),
+                ),
+            ]),
+        )
+    }
+
+    fn trace_dump(&self) -> Response {
+        let spans: Vec<Json> = obs::recent_spans(256)
+            .iter()
+            .map(|s| s.to_json())
+            .collect();
+        Response::json(200, &Json::obj(vec![("spans", Json::arr(spans))]))
+    }
+
+    // ------------------------------------------------------- scoring
+
+    fn score(&self, model: &str, req: &Request) -> Response {
+        let body = match body_json(req) {
+            Ok(j) => j,
+            Err(resp) => return resp,
+        };
+        let Some(queries) = body.get("queries").and_then(parse_matrix)
+        else {
+            return err_json(
+                400,
+                "body must be {\"queries\": [[f64, ...], ...]}",
+            );
+        };
+        if queries.is_empty() {
+            return err_json(400, "queries must be non-empty");
+        }
+        match self.coord.score(model, queries.clone()) {
+            Ok(resp) => {
+                let version =
+                    self.coord.registry().version(model).unwrap_or(0);
+                let scores =
+                    resp.scores.iter().map(|&s| Json::num(s)).collect();
+                let labels = resp
+                    .labels
+                    .iter()
+                    .map(|&l| Json::num(l as f64))
+                    .collect();
+                Response::json(
+                    200,
+                    &Json::obj(vec![
+                        ("scores", Json::arr(scores)),
+                        ("labels", Json::arr(labels)),
+                        (
+                            "latency_us",
+                            Json::num(resp.latency.as_micros() as f64),
+                        ),
+                    ]),
+                )
+                .header("x-slab-model-version", version.to_string())
+            }
+            // rung 5: batcher shed — serve the last published model
+            Err(Error::Saturated { .. }) => self.score_stale(model, &queries),
+            Err(e) => error_response(&e),
+        }
+    }
+
+    /// Degraded scoring path: the batcher queue is saturated, so score
+    /// directly against the registry's last published snapshot. The
+    /// response is still correct for that version — it is *stale*, not
+    /// wrong — and says so in `X-Slab-Stale`.
+    fn score_stale(&self, model: &str, queries: &[Vec<f64>]) -> Response {
+        let Some((m, version)) = self.coord.registry().get_versioned(model)
+        else {
+            return err_json(
+                503,
+                "scoring queue saturated and no model published yet",
+            )
+            .header("retry-after", "1");
+        };
+        let dim = m.x_sv.cols();
+        if queries.iter().any(|q| q.len() != dim) {
+            return err_json(
+                400,
+                &format!("query dimension mismatch (model dim {dim})"),
+            );
+        }
+        let scores =
+            queries.iter().map(|q| Json::num(m.margin(q))).collect();
+        let labels = queries
+            .iter()
+            .map(|q| Json::num(m.classify(q) as f64))
+            .collect();
+        self.coord.stats().serve_stale_served.inc();
+        Response::json(
+            200,
+            &Json::obj(vec![
+                ("scores", Json::arr(scores)),
+                ("labels", Json::arr(labels)),
+            ]),
+        )
+        .header("x-slab-model-version", version.to_string())
+        .header("x-slab-stale", "1")
+    }
+
+    // ------------------------------------------------------- streams
+
+    fn push(&self, name: &str, req: &Request, trace: u64) -> Response {
+        let body = match body_json(req) {
+            Ok(j) => j,
+            Err(resp) => return resp,
+        };
+        let Some(x) = body.get("x").and_then(parse_vec_f64) else {
+            return err_json(400, "body must be {\"x\": [f64, ...]}");
+        };
+        // rung 4: non-blocking — a saturated mailbox is the client's
+        // problem (retry), never this worker thread's (blocked)
+        match self.coord.stream_manager().push_opts(
+            name,
+            &x,
+            false,
+            Some(trace),
+        ) {
+            Ok(()) => Response::json(
+                202,
+                &Json::obj(vec![("queued", Json::Bool(true))]),
+            ),
+            Err(Error::Saturated { depth }) => err_json(
+                429,
+                &format!("stream mailbox saturated (depth {depth})"),
+            )
+            .header("retry-after", "1")
+            .header("x-slab-queue-depth", depth.to_string()),
+            Err(e) => error_response(&e),
+        }
+    }
+
+    fn forget(&self, name: &str, req: &Request) -> Response {
+        let body = match body_json(req) {
+            Ok(j) => j,
+            Err(resp) => return resp,
+        };
+        let Some(ids) = body.get("ids").and_then(|j| {
+            j.as_arr()?
+                .iter()
+                .map(|v| v.as_f64().map(|n| n as u64))
+                .collect::<Option<Vec<u64>>>()
+        }) else {
+            return err_json(400, "body must be {\"ids\": [u64, ...]}");
+        };
+        match self.coord.forget_many(name, &ids) {
+            Ok(out) => Response::json(
+                200,
+                &Json::obj(vec![
+                    ("name", Json::str(&out.name)),
+                    (
+                        "ids",
+                        Json::arr(
+                            out.ids
+                                .iter()
+                                .map(|&i| Json::num(i as f64))
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "version",
+                        out.version
+                            .map(|v| Json::num(v as f64))
+                            .unwrap_or(Json::Null),
+                    ),
+                    ("resident", Json::num(out.resident as f64)),
+                ]),
+            ),
+            Err(e) => error_response(&e),
+        }
+    }
+
+    fn stream_info(&self, name: &str) -> Response {
+        let open = self.coord.stream_manager().is_open(name);
+        let restored = self.restored.read().get(name).cloned();
+        if !open && restored.is_none() {
+            return err_json(404, &format!("unknown stream '{name}'"));
+        }
+        let mut fields = vec![
+            ("name", Json::str(name)),
+            ("open", Json::Bool(open)),
+            (
+                "version",
+                self.coord
+                    .registry()
+                    .version(name)
+                    .map(|v| Json::num(v as f64))
+                    .unwrap_or(Json::Null),
+            ),
+        ];
+        if let Some(rs) = restored {
+            fields.push((
+                "restored",
+                Json::obj(vec![
+                    ("updates", Json::num(rs.updates as f64)),
+                    (
+                        "version",
+                        rs.version
+                            .map(|v| Json::num(v as f64))
+                            .unwrap_or(Json::Null),
+                    ),
+                    ("repaired", Json::Bool(rs.repaired)),
+                ]),
+            ));
+        }
+        Response::json(200, &Json::obj(fields))
+    }
+
+    fn close(&self, name: &str) -> Response {
+        match self.coord.close_stream(name) {
+            Ok(s) => Response::json(
+                200,
+                &Json::obj(vec![
+                    ("name", Json::str(&s.name)),
+                    ("updates", Json::num(s.updates as f64)),
+                    ("retrains", Json::num(s.retrains as f64)),
+                    (
+                        "version",
+                        s.version
+                            .map(|v| Json::num(v as f64))
+                            .unwrap_or(Json::Null),
+                    ),
+                    ("rho1", Json::num(s.rho.0)),
+                    ("rho2", Json::num(s.rho.1)),
+                    ("objective", Json::num(s.objective)),
+                ]),
+            ),
+            Err(e) => error_response(&e),
+        }
+    }
+
+    fn snapshot(&self) -> Response {
+        let Some(dir) = self.snapshot_dir.clone() else {
+            return err_json(400, "no snapshot directory configured");
+        };
+        self.coord.quiesce_streams();
+        match self.coord.snapshot_streams(&dir) {
+            Ok(outcomes) => {
+                let rows = outcomes
+                    .iter()
+                    .map(|o| {
+                        Json::obj(vec![
+                            ("name", Json::str(&o.name)),
+                            ("ok", Json::Bool(o.result.is_ok())),
+                        ])
+                    })
+                    .collect();
+                Response::json(
+                    200,
+                    &Json::obj(vec![("streams", Json::arr(rows))]),
+                )
+            }
+            Err(e) => error_response(&e),
+        }
+    }
+}
+
+/// Paths the router knows (for 405-vs-404 on a method mismatch).
+fn known_path(segs: &[&str]) -> bool {
+    matches!(
+        segs,
+        ["healthz"]
+            | ["metrics"]
+            | ["v1", "trace"]
+            | ["v1", "score", _]
+            | ["v1", "streams", _]
+            | ["v1", "streams", _, "push" | "forget" | "close"]
+            | ["v1", "snapshot"]
+            | ["v1", "quiesce"]
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::BatcherConfig;
+    use crate::data::synthetic::SlabConfig;
+    use crate::kernel::Kernel;
+    use crate::runtime::Engine;
+    use crate::solver::api::Trainer;
+    use crate::stream::{StreamConfig, StreamPoolConfig, StreamSpec};
+
+    fn coordinator(queue_cap: usize, mailbox_cap: usize) -> Arc<Coordinator> {
+        Arc::new(Coordinator::start_with_streams(
+            Engine::Native,
+            BatcherConfig { max_batch: 64, max_wait_us: 200, queue_cap },
+            1,
+            StreamPoolConfig { shards: 1, mailbox_cap, checkpoint: None },
+        ))
+    }
+
+    fn open_router(coord: &Arc<Coordinator>) -> Router {
+        Router::new(Arc::clone(coord), RouterConfig::default())
+    }
+
+    fn request(method: &str, path: &str, body: &str) -> Request {
+        request_auth(method, path, body, None)
+    }
+
+    fn request_auth(
+        method: &str,
+        path: &str,
+        body: &str,
+        token: Option<&str>,
+    ) -> Request {
+        let mut headers = Vec::new();
+        if let Some(t) = token {
+            headers.push(("authorization".into(), format!("Bearer {t}")));
+        }
+        Request {
+            method: method.into(),
+            path: path.into(),
+            headers,
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn body_of(resp: &Response) -> Json {
+        Json::parse(std::str::from_utf8(resp.body_bytes()).unwrap()).unwrap()
+    }
+
+    fn train_demo(coord: &Arc<Coordinator>, name: &str) {
+        let ds = SlabConfig::default().generate(80, 7);
+        coord
+            .train_blocking(name, &ds, &Trainer::default().kernel(Kernel::Linear))
+            .unwrap();
+    }
+
+    #[test]
+    fn healthz_and_unknown_paths() {
+        let c = coordinator(1024, 64);
+        let r = open_router(&c);
+        let ok = r.handle(&request("GET", "/healthz", ""));
+        assert_eq!(ok.status, 200);
+        assert_eq!(body_of(&ok).get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.handle(&request("GET", "/nope", "")).status, 404);
+        // method mismatch on a known path is 405, not 404
+        assert_eq!(r.handle(&request("GET", "/v1/quiesce", "")).status, 405);
+        assert_eq!(c.stats().serve_accepted.get(), 3);
+    }
+
+    #[test]
+    fn score_fresh_carries_version_header() {
+        let c = coordinator(1024, 64);
+        train_demo(&c, "m");
+        let r = open_router(&c);
+        let resp = r.handle(&request(
+            "POST",
+            "/v1/score/m",
+            "{\"queries\": [[0.5, 0.5], [3.0, 3.0]]}",
+        ));
+        assert_eq!(resp.status, 200, "{:?}", body_of(&resp));
+        assert_eq!(resp.header_value("x-slab-model-version"), Some("1"));
+        assert!(resp.header_value("x-slab-stale").is_none());
+        let body = body_of(&resp);
+        assert_eq!(body.get("labels").and_then(Json::as_arr).unwrap().len(), 2);
+        assert_eq!(c.stats().serve_stale_served.get(), 0);
+    }
+
+    #[test]
+    fn score_falls_back_stale_when_batcher_sheds() {
+        // queue_cap 0: every batcher submit sheds with Saturated, so
+        // the stale path is taken deterministically
+        let c = coordinator(0, 64);
+        train_demo(&c, "m");
+        let r = open_router(&c);
+        let resp = r.handle(&request(
+            "POST",
+            "/v1/score/m",
+            "{\"queries\": [[0.5, 0.5]]}",
+        ));
+        assert_eq!(resp.status, 200, "{:?}", body_of(&resp));
+        assert_eq!(resp.header_value("x-slab-stale"), Some("1"));
+        assert_eq!(resp.header_value("x-slab-model-version"), Some("1"));
+        assert_eq!(c.stats().serve_stale_served.get(), 1);
+        // stale labels must agree with direct model predictions
+        let m = c.model("m").unwrap();
+        let label = body_of(&resp)
+            .get("labels")
+            .and_then(Json::as_arr)
+            .and_then(|a| a.first())
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert_eq!(label as i8, m.classify(&[0.5, 0.5]));
+        // no published model at all → 503, still never a hang
+        let gone = r.handle(&request(
+            "POST",
+            "/v1/score/other",
+            "{\"queries\": [[0.0, 0.0]]}",
+        ));
+        assert_eq!(gone.status, 503);
+        assert_eq!(gone.header_value("retry-after"), Some("1"));
+    }
+
+    #[test]
+    fn auth_gates_and_tenant_isolation() {
+        let c = coordinator(1024, 64);
+        train_demo(&c, "alice");
+        let r = Router::new(
+            Arc::clone(&c),
+            RouterConfig {
+                auth: Auth::from_spec("alice=tok-a,bob=tok-b").unwrap(),
+                ..RouterConfig::default()
+            },
+        );
+        let q = "{\"queries\": [[0.0, 0.0]]}";
+        // no token / bad token → 401 with a challenge
+        let missing = r.handle(&request("POST", "/v1/score/alice", q));
+        assert_eq!(missing.status, 401);
+        assert_eq!(missing.header_value("www-authenticate"), Some("Bearer"));
+        let bad =
+            r.handle(&request_auth("POST", "/v1/score/alice", q, Some("zz")));
+        assert_eq!(bad.status, 401);
+        // bob's valid token on alice's model → 403
+        let cross = r.handle(&request_auth(
+            "POST",
+            "/v1/score/alice",
+            q,
+            Some("tok-b"),
+        ));
+        assert_eq!(cross.status, 403);
+        // alice on her own model → 200
+        let own = r.handle(&request_auth(
+            "POST",
+            "/v1/score/alice",
+            q,
+            Some("tok-a"),
+        ));
+        assert_eq!(own.status, 200);
+        assert_eq!(c.stats().serve_auth_failed.get(), 3);
+        // metrics stays scrapeable without a token
+        let m = r.handle(&request("GET", "/metrics", ""));
+        assert_eq!(m.status, 200);
+        let text = String::from_utf8(m.body_bytes().to_vec()).unwrap();
+        assert!(text.contains("slabsvm_serve_auth_failed_total 3"));
+    }
+
+    #[test]
+    fn rate_limit_sheds_with_retry_after() {
+        let c = coordinator(1024, 64);
+        let r = Router::new(
+            Arc::clone(&c),
+            RouterConfig {
+                rate: Some(RateConfig { per_second: 0.1, burst: 2.0 }),
+                ..RouterConfig::default()
+            },
+        );
+        assert_eq!(r.handle(&request("GET", "/v1/trace", "")).status, 200);
+        assert_eq!(r.handle(&request("GET", "/v1/trace", "")).status, 200);
+        let shed = r.handle(&request("GET", "/v1/trace", ""));
+        assert_eq!(shed.status, 429);
+        let retry: u64 =
+            shed.header_value("retry-after").unwrap().parse().unwrap();
+        assert!(retry >= 1);
+        assert_eq!(c.stats().serve_shed.get(), 1);
+        // healthz is exempt from the bucket
+        assert_eq!(r.handle(&request("GET", "/healthz", "")).status, 200);
+    }
+
+    #[test]
+    fn push_roundtrip_and_mailbox_429() {
+        let c = coordinator(1024, 1);
+        c.open_streams(vec![StreamSpec::new(
+            "s",
+            StreamConfig {
+                kernel: Kernel::Linear,
+                dim: 2,
+                window: 32,
+                min_train: 16,
+                ..Default::default()
+            },
+        )])
+        .unwrap();
+        let r = open_router(&c);
+        let push = request("POST", "/v1/streams/s/push", "{\"x\": [0.1, 0.2]}");
+        assert_eq!(r.handle(&push).status, 202);
+        // unknown stream is 404
+        let unknown =
+            request("POST", "/v1/streams/zzz/push", "{\"x\": [0.1, 0.2]}");
+        assert_eq!(r.handle(&unknown).status, 404);
+        // flood the cap-1 mailbox until admission control sheds; the
+        // worker drains concurrently, so spin — a 429 must show up
+        // without ever blocking this thread
+        let mut shed = None;
+        for _ in 0..10_000 {
+            let resp = r.handle(&push);
+            if resp.status == 429 {
+                shed = Some(resp);
+                break;
+            }
+            assert_eq!(resp.status, 202);
+        }
+        let shed = shed.expect("cap-1 mailbox never saturated");
+        assert_eq!(shed.header_value("retry-after"), Some("1"));
+        assert!(shed.header_value("x-slab-queue-depth").is_some());
+        assert!(c.stats().serve_shed.get() >= 1);
+        c.quiesce_streams();
+    }
+
+    #[test]
+    fn stream_info_close_and_forget() {
+        let c = coordinator(1024, 256);
+        c.open_streams(vec![StreamSpec::new(
+            "s",
+            StreamConfig {
+                kernel: Kernel::Linear,
+                dim: 2,
+                window: 32,
+                min_train: 8,
+                ..Default::default()
+            },
+        )])
+        .unwrap();
+        let r = open_router(&c);
+        let mut gen = crate::data::synthetic::SlabStream::new(
+            SlabConfig::default(),
+            11,
+        );
+        for _ in 0..16 {
+            let x = gen.next_point();
+            let body = format!("{{\"x\": [{}, {}]}}", x[0], x[1]);
+            assert_eq!(
+                r.handle(&request("POST", "/v1/streams/s/push", &body)).status,
+                202
+            );
+        }
+        c.quiesce_streams();
+        // info: open, with a published version after warmup
+        let info = r.handle(&request("GET", "/v1/streams/s", ""));
+        assert_eq!(info.status, 200);
+        let j = body_of(&info);
+        assert_eq!(j.get("open"), Some(&Json::Bool(true)));
+        assert!(j.get("version").and_then(Json::as_f64).unwrap() >= 1.0);
+        assert_eq!(r.handle(&request("GET", "/v1/streams/none", "")).status, 404);
+        // forget sample 0, then forgetting it again is a typed 404
+        let forget =
+            r.handle(&request("POST", "/v1/streams/s/forget", "{\"ids\": [0]}"));
+        assert_eq!(forget.status, 200, "{:?}", body_of(&forget));
+        assert_eq!(
+            body_of(&forget).get("resident").and_then(Json::as_usize),
+            Some(15)
+        );
+        let again =
+            r.handle(&request("POST", "/v1/streams/s/forget", "{\"ids\": [0]}"));
+        assert_eq!(again.status, 404);
+        // close returns the final accounting including the objective
+        let close = r.handle(&request("POST", "/v1/streams/s/close", ""));
+        assert_eq!(close.status, 200);
+        let j = body_of(&close);
+        assert_eq!(j.get("updates").and_then(Json::as_usize), Some(16));
+        assert!(j.get("objective").and_then(Json::as_f64).is_some());
+    }
+
+    #[test]
+    fn malformed_bodies_are_400() {
+        let c = coordinator(1024, 64);
+        train_demo(&c, "m");
+        let r = open_router(&c);
+        for (path, body) in [
+            ("/v1/score/m", "not json"),
+            ("/v1/score/m", "{\"queries\": \"nope\"}"),
+            ("/v1/score/m", "{\"queries\": []}"),
+            ("/v1/streams/s/push", "{\"y\": [1]}"),
+            ("/v1/streams/s/forget", "{\"ids\": [\"a\"]}"),
+        ] {
+            let resp = r.handle(&request("POST", path, body));
+            assert_eq!(resp.status, 400, "{path} {body}");
+        }
+    }
+
+    #[test]
+    fn restored_info_and_snapshot_endpoint() {
+        let c = coordinator(1024, 64);
+        let dir = std::env::temp_dir().join(format!(
+            "slabsvm-serve-router-{}",
+            std::process::id()
+        ));
+        let r = Router::new(
+            Arc::clone(&c),
+            RouterConfig {
+                snapshot_dir: Some(dir.clone()),
+                ..RouterConfig::default()
+            },
+        );
+        r.note_restored(&[RestoredStream {
+            name: "s".into(),
+            updates: 42,
+            version: Some(7),
+            repaired: false,
+        }]);
+        let info = r.handle(&request("GET", "/v1/streams/s", ""));
+        assert_eq!(info.status, 200);
+        let j = body_of(&info);
+        assert_eq!(j.get("open"), Some(&Json::Bool(false)));
+        let restored = j.get("restored").unwrap();
+        assert_eq!(restored.get("updates").and_then(Json::as_usize), Some(42));
+        // snapshot endpoint sweeps (no open streams → empty outcome list)
+        let snap = r.handle(&request("POST", "/v1/snapshot", ""));
+        assert_eq!(snap.status, 200);
+        let _ = std::fs::remove_dir_all(&dir);
+        // without a configured dir the endpoint is disabled
+        let r2 = open_router(&c);
+        assert_eq!(r2.handle(&request("POST", "/v1/snapshot", "")).status, 400);
+    }
+}

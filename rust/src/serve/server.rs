@@ -1,0 +1,333 @@
+//! The TCP front door: listener, connection threads, admission at
+//! accept time.
+//!
+//! Dependency-free `std::net` serving — one acceptor thread plus one
+//! thread per live connection, bounded by a [`ConnGauge`]. The
+//! acceptor **never blocks on a client**: a connection over the cap is
+//! answered `503` and closed immediately (counted as shed), and all
+//! per-connection I/O (slow reads, keep-alive idling) happens on the
+//! connection's own thread under a read timeout. Requests are parsed
+//! incrementally ([`parse_request`]) so pipelined requests on one
+//! keep-alive connection are served back-to-back; a framing error
+//! answers with its typed 4xx/5xx and closes, because the byte stream
+//! past a bad frame cannot be trusted.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::serve::http::{parse_request, HttpLimits, Parsed, Response};
+use crate::serve::limits::{ConnGauge, ConnPermit};
+use crate::serve::router::Router;
+
+/// Listener-level knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// bind address; port 0 picks a free port (see [`Server::addr`])
+    pub addr: String,
+    /// max live connections; the acceptor sheds (503) above this
+    pub max_conns: usize,
+    pub limits: HttpLimits,
+    /// per-connection read timeout — an idle keep-alive connection is
+    /// dropped after this long, freeing its [`ConnGauge`] slot
+    pub read_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_conns: 1024,
+            limits: HttpLimits::default(),
+            read_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// A running listener. Dropping it (or calling [`Server::shutdown`])
+/// stops the acceptor; live connection threads exit on their next read
+/// timeout or client close.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Bind and start serving `router` on its own threads; returns once
+/// the socket is listening (so `addr` is immediately connectable).
+pub fn start(router: Arc<Router>, cfg: ServerConfig) -> Result<Server> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let gauge = ConnGauge::new(cfg.max_conns);
+    let stop_in = Arc::clone(&stop);
+    let acceptor = std::thread::Builder::new()
+        .name("serve-accept".to_string())
+        .spawn(move || {
+            accept_loop(&listener, &router, &cfg, &gauge, &stop_in);
+        })?;
+    Ok(Server { addr, stop, acceptor: Some(acceptor) })
+}
+
+impl Server {
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the acceptor thread.
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        // unblock the acceptor's accept() with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    router: &Arc<Router>,
+    cfg: &ServerConfig,
+    gauge: &Arc<ConnGauge>,
+    stop: &Arc<AtomicBool>,
+) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        let Ok(stream) = conn else {
+            continue;
+        };
+        match gauge.try_acquire() {
+            Some(permit) => {
+                let router = Arc::clone(router);
+                let limits = cfg.limits;
+                let timeout = cfg.read_timeout;
+                let stop = Arc::clone(stop);
+                let spawned = std::thread::Builder::new()
+                    .name("serve-conn".to_string())
+                    .spawn(move || {
+                        handle_conn(
+                            stream, &router, &limits, timeout, permit, &stop,
+                        );
+                    });
+                if spawned.is_err() {
+                    // thread exhaustion: shed like an over-cap conn
+                    router.coordinator().stats().serve_shed.inc();
+                }
+            }
+            None => {
+                // over the connection cap: shed immediately — the
+                // acceptor must stay free to answer the next client
+                router.coordinator().stats().serve_shed.inc();
+                let resp = Response::json(
+                    503,
+                    &crate::util::json::Json::obj(vec![(
+                        "error",
+                        crate::util::json::Json::str(
+                            "connection limit reached",
+                        ),
+                    )]),
+                )
+                .header("retry-after", "1");
+                let mut stream = stream;
+                let _ = stream.write_all(&resp.encode(false));
+            }
+        }
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    router: &Arc<Router>,
+    limits: &HttpLimits,
+    timeout: Duration,
+    _permit: ConnPermit,
+    stop: &Arc<AtomicBool>,
+) {
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_nodelay(true);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 8192];
+    loop {
+        // serve every complete pipelined request already buffered
+        loop {
+            match parse_request(&buf, limits) {
+                Ok(Parsed::Complete(req, consumed)) => {
+                    buf.drain(..consumed);
+                    let keep_alive = !req.wants_close();
+                    let resp = router.handle(&req);
+                    if stream.write_all(&resp.encode(keep_alive)).is_err()
+                        || !keep_alive
+                    {
+                        return;
+                    }
+                }
+                Ok(Parsed::Partial) => break,
+                Err(e) => {
+                    // typed rejection, then close: bytes after a bad
+                    // frame have no trustworthy boundary
+                    let resp = Response::from_http_error(&e);
+                    let _ = stream.write_all(&resp.encode(false));
+                    return;
+                }
+            }
+        }
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => return,
+            Ok(n) => {
+                buf.extend_from_slice(tmp.get(..n).unwrap_or_default());
+            }
+            Err(_) => return, // timeout or reset: drop the connection
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatcherConfig, Coordinator};
+    use crate::runtime::Engine;
+    use crate::serve::router::RouterConfig;
+    use crate::stream::StreamPoolConfig;
+
+    fn start_test_server(max_conns: usize) -> (Server, Arc<Router>) {
+        let coord = Arc::new(Coordinator::start_with_streams(
+            Engine::Native,
+            BatcherConfig::default(),
+            1,
+            StreamPoolConfig { shards: 1, mailbox_cap: 64, checkpoint: None },
+        ));
+        let router = Arc::new(Router::new(coord, RouterConfig::default()));
+        let server = start(
+            Arc::clone(&router),
+            ServerConfig {
+                max_conns,
+                read_timeout: Duration::from_secs(5),
+                ..ServerConfig::default()
+            },
+        )
+        .expect("bind loopback");
+        (server, router)
+    }
+
+    /// Read exactly one HTTP response (head + content-length body).
+    fn read_response(stream: &mut TcpStream) -> String {
+        let mut buf = Vec::new();
+        let mut tmp = [0u8; 4096];
+        loop {
+            if let Some(head_end) =
+                buf.windows(4).position(|w| w == b"\r\n\r\n")
+            {
+                let head = String::from_utf8_lossy(&buf[..head_end]);
+                let clen: usize = head
+                    .lines()
+                    .find_map(|l| {
+                        l.to_ascii_lowercase()
+                            .strip_prefix("content-length:")
+                            .map(|v| v.trim().parse().unwrap())
+                    })
+                    .unwrap_or(0);
+                if buf.len() >= head_end + 4 + clen {
+                    return String::from_utf8_lossy(&buf[..head_end + 4 + clen])
+                        .to_string();
+                }
+            }
+            let n = stream.read(&mut tmp).expect("read response");
+            assert!(n > 0, "connection closed mid-response");
+            buf.extend_from_slice(&tmp[..n]);
+        }
+    }
+
+    #[test]
+    fn serves_healthz_over_real_tcp() {
+        let (mut server, _router) = start_test_server(16);
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        conn.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        let resp = read_response(&mut conn);
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn keep_alive_pipelining_two_requests_one_write() {
+        let (mut server, _router) = start_test_server(16);
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        conn.write_all(
+            b"GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\n\r\n",
+        )
+        .unwrap();
+        let first = read_response(&mut conn);
+        assert!(first.starts_with("HTTP/1.1 200"), "{first}");
+        assert!(first.contains("connection: keep-alive"), "{first}");
+        let second = read_response(&mut conn);
+        assert!(second.contains("slabsvm_serve_accepted_total"), "{second}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn over_cap_connection_is_shed_503_not_queued() {
+        let (mut server, router) = start_test_server(1);
+        // conn A occupies the single slot (prove it by round-tripping)
+        let mut a = TcpStream::connect(server.addr()).unwrap();
+        a.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        assert!(read_response(&mut a).starts_with("HTTP/1.1 200"));
+        // conn B must be answered 503 immediately
+        let mut b = TcpStream::connect(server.addr()).unwrap();
+        let resp = read_response(&mut b);
+        assert!(resp.starts_with("HTTP/1.1 503"), "{resp}");
+        assert!(resp.contains("retry-after: 1"), "{resp}");
+        assert!(
+            router.coordinator().stats().serve_shed.get() >= 1,
+            "shed counter"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_frame_gets_typed_status_then_close() {
+        let (mut server, _router) = start_test_server(16);
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        conn.write_all(b"BREW /pot HTTP/1.1\r\n\r\n").unwrap();
+        let resp = read_response(&mut conn);
+        assert!(resp.starts_with("HTTP/1.1 405"), "{resp}");
+        assert!(resp.contains("connection: close"), "{resp}");
+        // server closes after the typed rejection
+        let mut rest = Vec::new();
+        let n = conn.read_to_end(&mut rest).unwrap_or(0);
+        assert_eq!(n, 0, "no bytes after close");
+        server.shutdown();
+    }
+
+    #[test]
+    fn connection_close_header_is_honored() {
+        let (mut server, _router) = start_test_server(16);
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        conn.write_all(
+            b"GET /healthz HTTP/1.1\r\nconnection: close\r\n\r\n",
+        )
+        .unwrap();
+        let resp = read_response(&mut conn);
+        assert!(resp.contains("connection: close"), "{resp}");
+        let mut rest = Vec::new();
+        assert_eq!(conn.read_to_end(&mut rest).unwrap_or(0), 0);
+        server.shutdown();
+    }
+}

@@ -100,6 +100,10 @@ pub struct IncrementalSmo {
     stats: SolveStats,
     /// cumulative repair iterations across the stream
     repair_iterations: u64,
+    /// adaptive scale on `repair_max_iter` (1.0 = configured budget);
+    /// set from mailbox pressure by the shard worker — transient, never
+    /// persisted, and floored so repairs always make progress
+    budget_frac: f64,
     /// wall micros the most recent push spent admitting the sample
     /// (Gram row + mass transfers + margin refresh), then repairing —
     /// the per-stage split the shard worker turns into Gram/Repair
@@ -137,6 +141,7 @@ impl IncrementalSmo {
             rho2: 0.0,
             stats: SolveStats::default(),
             repair_iterations: 0,
+            budget_frac: 1.0,
             last_admit_us: 0,
             last_repair_us: 0,
             scratch_alpha: Vec::with_capacity(capacity),
@@ -181,6 +186,7 @@ impl IncrementalSmo {
             rho2,
             stats: SolveStats::default(),
             repair_iterations,
+            budget_frac: 1.0,
             last_admit_us: 0,
             last_repair_us: 0,
             scratch_alpha: Vec::with_capacity(capacity),
@@ -613,10 +619,30 @@ impl IncrementalSmo {
         }
     }
 
+    /// `repair_max_iter` scaled by the adaptive budget fraction. The
+    /// floor (1024 iterations, but never above the configured budget)
+    /// keeps a saturated stream's repairs convergent — pressure slows
+    /// freshness, it must not turn repairs into `NoConvergence` drops.
+    fn effective_repair_budget(&self) -> usize {
+        let scaled =
+            (self.cfg.repair_max_iter as f64 * self.budget_frac) as usize;
+        scaled.max(1024).min(self.cfg.repair_max_iter.max(1))
+    }
+
+    /// Scale the per-repair iteration budget (see
+    /// [`IncrementalSmo::effective_repair_budget`]). Transient — not
+    /// persisted and not part of the snapshot config fingerprint.
+    /// Clamped to `[0.25, 1.0]`; `1.0` restores `repair_max_iter`
+    /// exactly, so the unloaded path is bitwise unchanged.
+    pub fn set_repair_budget_frac(&mut self, frac: f64) {
+        self.budget_frac =
+            if frac.is_finite() { frac.clamp(0.25, 1.0) } else { 1.0 };
+    }
+
     /// Bounded warm-started SMO sweeps restoring KKT within `tol`.
     fn repair(&mut self) -> Result<()> {
         let p = SmoParams {
-            max_iter: self.cfg.repair_max_iter,
+            max_iter: self.effective_repair_budget(),
             ..self.cfg.smo
         };
         // Warm-start from a copy staged in the reusable scratch buffers

@@ -344,13 +344,35 @@ impl StreamManager {
     /// same id ([`crate::obs`]). Disabled, `mint_trace` returns 0 and
     /// the whole chain stays dark for one relaxed atomic load.
     pub fn push(&self, name: &str, x: &[f64]) -> Result<()> {
+        self.push_opts(name, x, true, None)
+    }
+
+    /// Non-blocking [`StreamManager::push`]: a stream queue at capacity
+    /// is a typed [`Error::Saturated`] (carrying the observed depth)
+    /// instead of a producer stall — the serving layer turns it into
+    /// 429 + Retry-After. Same route lookup, trace minting and mailbox
+    /// implementation as the blocking path.
+    pub fn try_push(&self, name: &str, x: &[f64]) -> Result<()> {
+        self.push_opts(name, x, false, None)
+    }
+
+    /// Push with an externally minted trace id (the HTTP front door
+    /// mints one per request so the request→queue→absorb chain records
+    /// under a single trace); `None` mints here as usual.
+    pub(crate) fn push_opts(
+        &self,
+        name: &str,
+        x: &[f64],
+        block: bool,
+        trace: Option<u64>,
+    ) -> Result<()> {
         let idx = {
             let route = self.route.read();
             *route.get(name).ok_or_else(|| {
                 Error::Coordinator(format!("unknown stream '{name}'"))
             })?
         };
-        let trace = crate::obs::mint_trace();
+        let trace = trace.unwrap_or_else(crate::obs::mint_trace);
         let t_enq = if trace != 0 {
             crate::obs::record(
                 crate::obs::EventKind::PushEnqueued,
@@ -363,7 +385,12 @@ impl StreamManager {
         } else {
             0
         };
-        self.shard_at(idx)?.push(name, x, trace, t_enq, &self.stats)?;
+        let shard = self.shard_at(idx)?;
+        if block {
+            shard.push(name, x, trace, t_enq, &self.stats)?;
+        } else {
+            shard.try_push(name, x, trace, t_enq, &self.stats)?;
+        }
         self.stats.stream_pushes.inc();
         Ok(())
     }

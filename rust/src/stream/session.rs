@@ -100,6 +100,10 @@ pub struct StreamSession {
     updates: u64,
     retrains: u64,
     forgets: u64,
+    /// adaptive publish cadence (1 = publish every absorb): stretched
+    /// under mailbox pressure by [`StreamSession::set_pressure`];
+    /// transient — never persisted, restored sessions start at 1
+    publish_stride: u64,
 }
 
 impl StreamSession {
@@ -129,6 +133,7 @@ impl StreamSession {
             updates: 0,
             retrains: 0,
             forgets: 0,
+            publish_stride: 1,
         }
     }
 
@@ -255,6 +260,7 @@ impl StreamSession {
             updates,
             retrains,
             forgets,
+            publish_stride: 1,
         }
     }
 
@@ -270,14 +276,42 @@ impl StreamSession {
             .precision(self.inc.config().precision)
     }
 
+    /// Adaptive load response (transient; never persisted or part of
+    /// the snapshot fingerprint): `pressure` in `[0, 1]` is this
+    /// stream's own mailbox backlog relative to the bound. It scales
+    /// the incremental solver's repair iteration budget down (to 25%
+    /// at saturation — see
+    /// [`IncrementalSmo::set_repair_budget_frac`]) and stretches the
+    /// publish cadence to every `1 + ⌈7·pressure⌉`-th absorb, so a hot
+    /// drifting tenant trades its *own* model freshness for drain rate
+    /// instead of stalling its shard-mates. Pressure `0.0` restores
+    /// the configured budget and per-absorb publishing exactly, so an
+    /// unloaded stream is bitwise unaffected.
+    pub fn set_pressure(&mut self, pressure: f64) {
+        let p = if pressure.is_finite() {
+            pressure.clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        self.inc.set_repair_budget_frac(1.0 - 0.75 * p);
+        self.publish_stride = 1 + (p * 7.0).ceil() as u64;
+    }
+
+    /// Current publish cadence (1 = every absorb; see
+    /// [`StreamSession::set_pressure`]).
+    pub fn publish_stride(&self) -> u64 {
+        self.publish_stride
+    }
+
     /// Absorb one sample: score it against the current slab (drift
     /// evidence), update the dual incrementally, and report.
     pub fn absorb(&mut self, x: &[f64]) -> crate::Result<Absorbed> {
         // an absorb runs a bounded SMO repair — milliseconds of work
         // that must never execute with a serving-stack lock held
         crate::sync::assert_lock_free("session absorb");
+        let was_warm = self.is_warm();
         let mut drift_event = None;
-        if self.is_warm() {
+        if was_warm {
             let (r1, r2) = self.inc.rho();
             if !self.baselined {
                 self.drift.rebaseline(r1, r2);
@@ -288,7 +322,15 @@ impl StreamSession {
         }
         let sample_id = self.inc.push(x)?;
         self.updates += 1;
-        let model = if self.is_warm() { Some(self.inc.model()) } else { None };
+        // publish-cadence gate: the warm transition always publishes
+        // (the first model must land), and pressure only *skips*
+        // intermediate hot-swaps — the solver state is identical either
+        // way, a skipped publish just keeps serving the last version
+        let publish = self.is_warm()
+            && (!was_warm
+                || self.publish_stride <= 1
+                || self.updates % self.publish_stride == 0);
+        let model = if publish { Some(self.inc.model()) } else { None };
         Ok(Absorbed {
             model,
             sample_id,

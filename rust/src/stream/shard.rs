@@ -150,8 +150,10 @@ impl Mailbox {
     /// Weighted-fair pop: scan streams round-robin from the cursor; the
     /// first non-empty queue yields up to `weight` samples and the
     /// cursor moves just past it, so every non-empty shard-mate is
-    /// visited before this stream is served again.
-    fn pop_fair(&mut self) -> Option<(String, Vec<QueuedSample>)> {
+    /// visited before this stream is served again. The third element is
+    /// the stream's *remaining* backlog after the drain — the pressure
+    /// signal the worker turns into an adaptive repair budget.
+    fn pop_fair(&mut self) -> Option<(String, Vec<QueuedSample>, usize)> {
         let n = self.order.len();
         if n == 0 {
             return None;
@@ -171,10 +173,11 @@ impl Mailbox {
             let Some(q) = self.queues.get_mut(&name) else { continue };
             let take = (q.weight.max(1) as usize).min(q.samples.len());
             let batch: Vec<QueuedSample> = q.samples.drain(..take).collect();
+            let backlog = q.samples.len();
             self.queued -= take;
             self.in_flight += take;
             self.cursor = (idx + 1) % n;
-            return Some((name, batch));
+            return Some((name, batch, backlog));
         }
         None
     }
@@ -322,6 +325,34 @@ impl Shard {
         t_enq_us: u64,
         stats: &ServiceStats,
     ) -> Result<()> {
+        self.push_with(name, x, trace, t_enq_us, stats, true)
+    }
+
+    /// Non-blocking enqueue: a stream queue already at capacity is a
+    /// typed [`Error::Saturated`] (carrying the observed depth) instead
+    /// of a condvar wait — the serving layer's 429 admission path. Same
+    /// mailbox implementation as the blocking [`Shard::push`]; only the
+    /// at-capacity branch differs.
+    pub(crate) fn try_push(
+        &self,
+        name: &str,
+        x: &[f64],
+        trace: u64,
+        t_enq_us: u64,
+        stats: &ServiceStats,
+    ) -> Result<()> {
+        self.push_with(name, x, trace, t_enq_us, stats, false)
+    }
+
+    fn push_with(
+        &self,
+        name: &str,
+        x: &[f64],
+        trace: u64,
+        t_enq_us: u64,
+        stats: &ServiceStats,
+        block: bool,
+    ) -> Result<()> {
         let mut mail = self.mail.lock();
         loop {
             if mail.draining {
@@ -347,6 +378,18 @@ impl Shard {
             };
             if depth < self.cap {
                 break;
+            }
+            if !block {
+                if trace != 0 {
+                    obs::record(
+                        EventKind::MailboxBlocked,
+                        trace,
+                        obs::stream_id(name),
+                        self.idx,
+                        depth as u64,
+                    );
+                }
+                return Err(Error::Saturated { depth });
             }
             stats.stream_backpressure.inc();
             if trace != 0 {
@@ -881,8 +924,17 @@ pub(crate) fn run_worker(
         }
 
         let had_batch = batch.is_some();
-        if let Some((name, samples)) = batch {
+        if let Some((name, samples, backlog)) = batch {
             if let Some(slot) = slots.get_mut(&name) {
+                // Adaptive repair budget: this stream's own remaining
+                // backlog (relative to the mailbox bound) scales down
+                // its repair iteration budget and publish cadence — a
+                // hot drifting tenant degrades its own freshness, not
+                // its shard-mates' latency. Pressure 0 restores the
+                // configured budget exactly.
+                let pressure =
+                    (backlog as f64 / shard.cap.max(1) as f64).clamp(0.0, 1.0);
+                slot.session.set_pressure(pressure);
                 for s in &samples {
                     absorb_one(slot, s, shard.idx, &registry, &jobs, &stats);
                 }
@@ -1050,7 +1102,7 @@ mod tests {
         // hot stream with a deep queue cannot starve its shard-mates
         let mut m = mailbox_with(&[("hot", 1, 100), ("cold", 1, 3)]);
         let mut service = Vec::new();
-        while let Some((name, batch)) = m.pop_fair() {
+        while let Some((name, batch, _)) = m.pop_fair() {
             assert_eq!(batch.len(), 1);
             service.push(name);
         }
@@ -1075,7 +1127,7 @@ mod tests {
     fn pop_fair_respects_weights() {
         let mut m = mailbox_with(&[("a", 3, 9), ("b", 1, 3)]);
         let mut sizes = Vec::new();
-        while let Some((name, batch)) = m.pop_fair() {
+        while let Some((name, batch, _)) = m.pop_fair() {
             sizes.push((name, batch.len()));
         }
         // a gets 3 per visit, b gets 1 per visit, alternating
@@ -1097,21 +1149,21 @@ mod tests {
         let mut m = Mailbox::new();
         assert!(m.pop_fair().is_none());
         let mut m = mailbox_with(&[("only", 2, 5)]);
-        let (n, b) = m.pop_fair().unwrap();
-        assert_eq!((n.as_str(), b.len()), ("only", 2));
+        let (n, b, backlog) = m.pop_fair().unwrap();
+        assert_eq!((n.as_str(), b.len(), backlog), ("only", 2, 3));
     }
 
     #[test]
     fn remove_stream_fixes_cursor_and_counts() {
         let mut m = mailbox_with(&[("a", 1, 2), ("b", 1, 2), ("c", 1, 2)]);
-        let (first, _) = m.pop_fair().unwrap();
+        let (first, _, _) = m.pop_fair().unwrap();
         assert_eq!(first, "a");
         assert_eq!(m.cursor, 1);
         m.remove_stream("a"); // removed index 0 < cursor -> cursor shifts
         assert_eq!(m.cursor, 0);
         // 6 queued - 1 popped - a's 1 remaining (dropped with the queue)
         assert_eq!(m.queued, 4);
-        let (next, _) = m.pop_fair().unwrap();
+        let (next, _, _) = m.pop_fair().unwrap();
         assert_eq!(next, "b");
         m.remove_stream("b");
         m.remove_stream("c");
@@ -1135,6 +1187,22 @@ mod tests {
         assert!(shard.push("s", &[1.0, 2.0, 3.0], 0, 0, &stats).is_err());
         assert!(shard.push("s", &[1.0], 0, 0, &stats).is_err());
         assert_eq!(shard.queue_depth(), 0, "bad samples must not queue");
+    }
+
+    #[test]
+    fn shard_try_push_sheds_at_capacity() {
+        let shard = Shard::new(0, 1);
+        let stats = ServiceStats::new();
+        assert!(shard.open("s", StreamConfig::default(), 1)); // dim = 2
+        shard.try_push("s", &[1.0, 2.0], 0, 0, &stats).unwrap();
+        match shard.try_push("s", &[3.0, 4.0], 0, 0, &stats) {
+            Err(Error::Saturated { depth }) => assert_eq!(depth, 1),
+            other => panic!("expected Saturated, got {other:?}"),
+        }
+        // shedding is not blocking: the backpressure counter (blocked
+        // wait slices) must stay untouched
+        assert_eq!(stats.stream_backpressure.get(), 0);
+        assert_eq!(shard.queue_depth(), 1);
     }
 
     #[test]

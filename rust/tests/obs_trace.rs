@@ -219,7 +219,7 @@ fn coordinator_metrics_text_is_valid_prometheus() {
     c.shutdown();
     assert_eq!(
         text.lines().filter(|l| l.starts_with("# TYPE ")).count(),
-        18,
+        23,
         "registry size drifted — update the golden tests deliberately"
     );
     for line in text.lines() {
@@ -232,7 +232,7 @@ fn json_lines_golden() {
     let stats = ServiceStats::new();
     stats.scored.add(7);
     let lines = slabsvm::obs::json_lines(&slabsvm::obs::registry(&stats));
-    assert_eq!(lines.lines().count(), 18);
+    assert_eq!(lines.lines().count(), 23);
 
     // pinned first line: canonical JSON, alphabetical keys
     assert_eq!(

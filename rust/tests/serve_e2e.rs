@@ -1,0 +1,508 @@
+//! End-to-end tests for the network front door (DESIGN.md §9): drive
+//! the real `slabsvm serve` binary over real TCP.
+//!
+//! The headline scenario: three tenants push over HTTP, the process is
+//! killed with SIGKILL mid-traffic, a new process restores from the
+//! snapshot directory, and the resumed streams (a) keep registry
+//! versions monotone across the crash and (b) end at the **same
+//! objective** (≤ 1e-9) as an uninterrupted in-process run over the
+//! identical sample sequence — the crash is invisible to the math.
+//! Plus: a flood against a tiny mailbox observes `429` (never a hang),
+//! and scoring under a saturated batcher answers stale with
+//! `X-Slab-Stale: 1`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use slabsvm::coordinator::{BatcherConfig, Coordinator};
+use slabsvm::data::synthetic::{SlabConfig, SlabStream};
+use slabsvm::kernel::Kernel;
+use slabsvm::runtime::Engine;
+use slabsvm::stream::{StreamConfig, StreamPoolConfig, StreamSpec};
+use slabsvm::util::json::Json;
+
+// ---------------------------------------------------------------- plumbing
+
+/// A spawned `slabsvm serve` process; killed on drop so a failed
+/// assertion never leaks a listener.
+struct ServerProc {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for ServerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn the binary with `serve --addr 127.0.0.1:0 <extra>` and parse
+/// the bound port from its stable "listening on {addr}" stdout line.
+fn spawn_serve(extra: &[&str]) -> ServerProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_slabsvm"))
+        .args(["serve", "--addr", "127.0.0.1:0"])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn slabsvm serve");
+    let stdout = child.stdout.take().expect("child stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut addr = None;
+    for _ in 0..500 {
+        let mut line = String::new();
+        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+            break;
+        }
+        if let Some(rest) = line.trim().strip_prefix("listening on ") {
+            addr = Some(rest.to_string());
+            break;
+        }
+    }
+    // keep draining stdout so the child never blocks on a full pipe
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+            sink.clear();
+        }
+    });
+    ServerProc { child, addr: addr.expect("server printed no listening line") }
+}
+
+struct Resp {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Resp {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn json(&self) -> Json {
+        Json::parse(&self.body).expect("response body is JSON")
+    }
+}
+
+/// Read exactly one HTTP response (content-length framed) off a
+/// keep-alive connection.
+fn read_response(conn: &mut TcpStream) -> Resp {
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    loop {
+        if let Some(head_end) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+            let clen: usize = head
+                .lines()
+                .find_map(|l| {
+                    l.to_ascii_lowercase()
+                        .strip_prefix("content-length:")
+                        .map(|v| v.trim().parse().expect("content-length"))
+                })
+                .unwrap_or(0);
+            if buf.len() >= head_end + 4 + clen {
+                let status = head
+                    .split(' ')
+                    .nth(1)
+                    .and_then(|s| s.parse().ok())
+                    .expect("status line");
+                let headers = head
+                    .lines()
+                    .skip(1)
+                    .filter_map(|l| l.split_once(':'))
+                    .map(|(k, v)| {
+                        (k.trim().to_ascii_lowercase(), v.trim().to_string())
+                    })
+                    .collect();
+                let body =
+                    String::from_utf8_lossy(&buf[head_end + 4..head_end + 4 + clen])
+                        .to_string();
+                return Resp { status, headers, body };
+            }
+        }
+        let n = conn.read(&mut tmp).expect("read response");
+        assert!(n > 0, "server closed mid-response");
+        buf.extend_from_slice(&tmp[..n]);
+    }
+}
+
+/// One request on an existing keep-alive connection.
+fn request(
+    conn: &mut TcpStream,
+    method: &str,
+    path: &str,
+    token: Option<&str>,
+    body: Option<&str>,
+) -> Resp {
+    let mut req = format!("{method} {path} HTTP/1.1\r\n");
+    if let Some(t) = token {
+        req.push_str(&format!("authorization: Bearer {t}\r\n"));
+    }
+    let body = body.unwrap_or("");
+    req.push_str(&format!("content-length: {}\r\n\r\n{body}", body.len()));
+    conn.write_all(req.as_bytes()).expect("write request");
+    read_response(conn)
+}
+
+fn connect(addr: &str) -> TcpStream {
+    let conn = TcpStream::connect(addr).expect("connect");
+    conn.set_read_timeout(Some(Duration::from_secs(20))).expect("timeout");
+    conn.set_nodelay(true).expect("nodelay");
+    conn
+}
+
+/// One-shot request on a fresh connection.
+fn oneshot(
+    addr: &str,
+    method: &str,
+    path: &str,
+    token: Option<&str>,
+    body: Option<&str>,
+) -> Resp {
+    request(&mut connect(addr), method, path, token, body)
+}
+
+fn push_body(x: &[f64]) -> String {
+    let vals: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    format!("{{\"x\": [{}]}}", vals.join(", "))
+}
+
+/// Push one sample, retrying briefly on mailbox 429s (the E2E pushes
+/// must all land; admission shedding is exercised by its own test).
+fn push_sample(conn: &mut TcpStream, name: &str, token: &str, x: &[f64]) {
+    let path = format!("/v1/streams/{name}/push");
+    for _ in 0..200 {
+        let r = request(conn, "POST", &path, Some(token), Some(&push_body(x)));
+        match r.status {
+            202 => return,
+            429 => std::thread::sleep(Duration::from_millis(5)),
+            s => panic!("push to {name} failed with {s}: {}", r.body),
+        }
+    }
+    panic!("push to {name} kept shedding");
+}
+
+/// Block until every queued sample is absorbed (the quiesce endpoint
+/// drains all shard mailboxes before answering).
+fn quiesce(addr: &str, token: &str) {
+    let r = oneshot(addr, "POST", "/v1/quiesce", Some(token), Some(""));
+    assert_eq!(r.status, 200, "quiesce: {}", r.body);
+}
+
+fn stream_version(addr: &str, name: &str, token: &str) -> Option<u64> {
+    let r =
+        oneshot(addr, "GET", &format!("/v1/streams/{name}"), Some(token), None);
+    assert_eq!(r.status, 200, "stream info: {}", r.body);
+    r.json().get("version").and_then(Json::as_f64).map(|v| v as u64)
+}
+
+// ------------------------------------------------------------------- tests
+
+const TENANTS: [(&str, &str); 3] = [("t0", "tok0"), ("t1", "tok1"), ("t2", "tok2")];
+const AUTH_SPEC: &str = "t0=tok0,t1=tok1,t2=tok2";
+const N1: usize = 80; // samples before the crash
+const N2: usize = 24; // samples after restore
+const WINDOW: usize = 64;
+const MIN_TRAIN: usize = 32;
+
+fn tenant_samples(i: usize, n: usize) -> Vec<Vec<f64>> {
+    let mut gen = SlabStream::new(SlabConfig::default(), 100 + i as u64);
+    (0..n).map(|_| gen.next_point().to_vec()).collect()
+}
+
+fn serve_args<'a>(dir_flag: &'a str, dir: &'a str) -> Vec<&'a str> {
+    vec![
+        "--tenants", "t0,t1,t2",
+        "--auth", AUTH_SPEC,
+        "--train-size", "0",
+        "--window", "64",
+        "--min-train", "32",
+        "--shards", "2",
+        "--mailbox", "1024",
+        // cadence far past the test horizon: the only snapshot that
+        // exists is the explicit POST /v1/snapshot, so the restored
+        // state is exactly the N1-sample prefix (SIGKILL discards the
+        // doomed traffic after it)
+        "--checkpoint-ms", "60000",
+        dir_flag, dir,
+    ]
+}
+
+#[test]
+fn kill_mid_traffic_restore_is_invisible_to_versions_and_objective() {
+    let dir = std::env::temp_dir()
+        .join(format!("slabsvm_serve_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let dir_s = dir.to_str().unwrap().to_string();
+
+    let samples: Vec<Vec<Vec<f64>>> =
+        (0..TENANTS.len()).map(|i| tenant_samples(i, N1 + N2)).collect();
+
+    // ---- phase A: serve, push N1 per tenant, snapshot, kill -9
+    let mut versions_a = Vec::new();
+    {
+        let mut server =
+            spawn_serve(&serve_args("--checkpoint-dir", &dir_s));
+        let addr = server.addr.clone();
+
+        // auth is enforced on the way in
+        let denied = oneshot(&addr, "POST", "/v1/streams/t0/push",
+            Some("wrong"), Some("{\"x\": [0.0, 0.0]}"));
+        assert_eq!(denied.status, 401, "{}", denied.body);
+        let crossed = oneshot(&addr, "POST", "/v1/streams/t0/push",
+            Some("tok1"), Some("{\"x\": [0.0, 0.0]}"));
+        assert_eq!(crossed.status, 403, "{}", crossed.body);
+
+        for (i, (name, token)) in TENANTS.iter().enumerate() {
+            let mut conn = connect(&addr);
+            for x in &samples[i][..N1] {
+                push_sample(&mut conn, name, token, x);
+            }
+        }
+        quiesce(&addr, "tok0");
+        for (name, token) in &TENANTS {
+            let v = stream_version(&addr, name, token)
+                .expect("published after N1 > min_train");
+            assert!(v >= 1);
+            versions_a.push(v);
+        }
+
+        // freeze exactly the N1-sample state on disk
+        let snap = oneshot(&addr, "POST", "/v1/snapshot", Some("tok0"), Some(""));
+        assert_eq!(snap.status, 200, "{}", snap.body);
+
+        // doomed traffic: keep pushing while the process dies
+        let flood_addr = addr.clone();
+        let flood = std::thread::spawn(move || {
+            let Ok(mut conn) = TcpStream::connect(&flood_addr) else {
+                return;
+            };
+            let _ = conn.set_read_timeout(Some(Duration::from_secs(2)));
+            let mut doomed = SlabStream::new(SlabConfig::default(), 999);
+            for _ in 0..100_000 {
+                let x = doomed.next_point();
+                let req = format!(
+                    "POST /v1/streams/t1/push HTTP/1.1\r\n\
+                     authorization: Bearer tok1\r\n\
+                     content-length: {}\r\n\r\n{}",
+                    push_body(&x).len(),
+                    push_body(&x)
+                );
+                if conn.write_all(req.as_bytes()).is_err() {
+                    return; // server died mid-traffic: expected
+                }
+                let mut tmp = [0u8; 4096];
+                match conn.read(&mut tmp) {
+                    Ok(n) if n > 0 => {}
+                    _ => return,
+                }
+            }
+        });
+        std::thread::sleep(Duration::from_millis(150));
+        server.child.kill().expect("SIGKILL"); // no graceful anything
+        server.child.wait().expect("reap");
+        flood.join().expect("flood thread");
+    }
+
+    // ---- phase B: restore, check resume info + monotone versions,
+    //      push N2 more, close, compare objectives
+    let mut objectives_http = Vec::new();
+    {
+        let server = spawn_serve(&serve_args("--restore-dir", &dir_s));
+        let addr = server.addr.clone();
+
+        for (i, (name, token)) in TENANTS.iter().enumerate() {
+            let info = oneshot(&addr, "GET", &format!("/v1/streams/{name}"),
+                Some(token), None);
+            assert_eq!(info.status, 200, "{}", info.body);
+            let j = info.json();
+            let restored = j.get("restored").expect("restore accounting");
+            assert_eq!(
+                restored.get("updates").and_then(Json::as_usize),
+                Some(N1),
+                "restored from the explicit snapshot, tenant {name}"
+            );
+            let v_b = j.get("version").and_then(Json::as_f64).map(|v| v as u64)
+                .expect("restored stream re-published");
+            assert!(
+                v_b >= versions_a[i],
+                "version regressed across restart: {v_b} < {}",
+                versions_a[i]
+            );
+
+            let mut conn = connect(&addr);
+            for x in &samples[i][N1..] {
+                push_sample(&mut conn, name, token, x);
+            }
+        }
+        quiesce(&addr, "tok0");
+        for (i, (name, token)) in TENANTS.iter().enumerate() {
+            let v_after = stream_version(&addr, name, token).unwrap();
+            assert!(v_after >= versions_a[i], "monotone after resume pushes");
+            let close = oneshot(&addr, "POST",
+                &format!("/v1/streams/{name}/close"), Some(token), Some(""));
+            assert_eq!(close.status, 200, "{}", close.body);
+            let j = close.json();
+            assert_eq!(
+                j.get("updates").and_then(Json::as_usize),
+                Some(N1 + N2),
+                "crash+restore lost updates for {name}"
+            );
+            objectives_http.push(
+                j.get("objective").and_then(Json::as_f64).expect("objective"),
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    // ---- reference: the same samples through an uninterrupted
+    //      in-process coordinator with the identical stream config
+    let cfg = StreamConfig {
+        kernel: Kernel::Linear,
+        dim: 2,
+        window: WINDOW,
+        min_train: MIN_TRAIN,
+        ..Default::default()
+    };
+    let c = Coordinator::start_with_streams(
+        Engine::Native,
+        BatcherConfig::default(),
+        1,
+        StreamPoolConfig { shards: 2, mailbox_cap: 1024, checkpoint: None },
+    );
+    c.open_streams(
+        TENANTS
+            .iter()
+            .map(|(n, _)| StreamSpec::new(n.to_string(), cfg.clone()))
+            .collect(),
+    )
+    .unwrap();
+    for (i, (name, _)) in TENANTS.iter().enumerate() {
+        for x in &samples[i] {
+            c.push(name, x).unwrap();
+        }
+    }
+    for (i, (name, _)) in TENANTS.iter().enumerate() {
+        let s = c.close_stream(name).unwrap();
+        assert_eq!(s.updates as usize, N1 + N2);
+        let diff = (s.objective - objectives_http[i]).abs();
+        assert!(
+            diff <= 1e-9,
+            "objective parity broken for {name}: uninterrupted {} vs \
+             kill+restore {} (|diff| = {diff:e})",
+            s.objective,
+            objectives_http[i]
+        );
+    }
+}
+
+#[test]
+fn flood_on_tiny_mailbox_observes_429_and_never_hangs() {
+    let server = spawn_serve(&[
+        "--tenants", "t0",
+        "--train-size", "0",
+        "--shards", "1",
+        "--mailbox", "1",
+        // small min_train: absorbs run real SMO, so the worker cannot
+        // keep up with a pipelined flood and the cap-1 mailbox fills
+        "--window", "512",
+        "--min-train", "16",
+    ]);
+    let addr = server.addr.clone();
+
+    let mut gen = SlabStream::new(SlabConfig::default(), 7);
+    let mut conn = connect(&addr);
+    const BURST: usize = 256;
+    // pipeline the whole burst in one write: the router keeps parsing
+    // back-to-back while the shard worker is mid-absorb
+    let mut wire = String::new();
+    for _ in 0..BURST {
+        let body = push_body(&gen.next_point());
+        wire.push_str(&format!(
+            "POST /v1/streams/t0/push HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}",
+            body.len()
+        ));
+    }
+    conn.write_all(wire.as_bytes()).expect("write burst");
+
+    let (mut queued, mut shed) = (0usize, 0usize);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    for _ in 0..BURST {
+        assert!(Instant::now() < deadline, "flood hung instead of shedding");
+        let r = read_response(&mut conn);
+        match r.status {
+            202 => queued += 1,
+            429 => {
+                shed += 1;
+                assert_eq!(r.header("retry-after"), Some("1"), "{}", r.body);
+                let depth: usize = r
+                    .header("x-slab-queue-depth")
+                    .expect("depth header on mailbox 429")
+                    .parse()
+                    .expect("depth is a number");
+                assert!(depth >= 1);
+            }
+            s => panic!("unexpected status {s}: {}", r.body),
+        }
+    }
+    assert!(shed > 0, "cap-1 mailbox never shed over {BURST} pipelined pushes");
+    assert!(queued > 0, "some pushes must land");
+
+    // the shed counter is visible to a tokenless scraper
+    let metrics = oneshot(&addr, "GET", "/metrics", None, None);
+    assert_eq!(metrics.status, 200);
+    let shed_line = metrics
+        .body
+        .lines()
+        .find(|l| l.starts_with("slabsvm_serve_shed_total"))
+        .expect("shed counter exported");
+    let exported: u64 = shed_line
+        .rsplit(' ')
+        .next()
+        .and_then(|v| v.parse().ok())
+        .expect("counter value");
+    assert!(exported >= shed as u64, "{shed_line} vs observed {shed}");
+}
+
+#[test]
+fn saturated_batcher_serves_stale_with_version_headers() {
+    let server = spawn_serve(&[
+        "--tenants", "t0",
+        "--train-size", "128",
+        // queue_cap 0: every score submission sheds, so the router's
+        // stale fallback is the only 200 path
+        "--score-queue-cap", "0",
+    ]);
+    let addr = server.addr.clone();
+
+    let r = oneshot(&addr, "POST", "/v1/score/t0", None,
+        Some("{\"queries\": [[0.5, 0.5], [20.0, 3.0]]}"));
+    assert_eq!(r.status, 200, "stale fallback must still answer: {}", r.body);
+    assert_eq!(r.header("x-slab-stale"), Some("1"), "staleness is declared");
+    let version: u64 = r
+        .header("x-slab-model-version")
+        .expect("version header on every scoring response")
+        .parse()
+        .expect("version is a number");
+    assert!(version >= 1, "stale answers come from a published model");
+    let j = r.json();
+    assert_eq!(j.get("scores").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+    assert_eq!(j.get("labels").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+
+    // and the stale counter ticks
+    let metrics = oneshot(&addr, "GET", "/metrics", None, None);
+    assert!(
+        metrics.body.lines().any(|l| {
+            l.starts_with("slabsvm_serve_stale_served_total")
+                && !l.ends_with(" 0")
+        }),
+        "stale counter must be nonzero"
+    );
+}

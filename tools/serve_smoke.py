@@ -1,0 +1,247 @@
+#!/usr/bin/env python3
+"""Smoke the slabsvm HTTP front door end to end (CI `serve-smoke` lane).
+
+Spawns the release binary (`slabsvm serve`) on a loopback port, then
+drives it with nothing but the Python standard library: liveness,
+authenticated scoring (fresh-model version header), auth rejection
+(401 missing/unknown token, 403 cross-tenant), stream push, a
+pipelined flood against a cap-1 mailbox that must observe 429 +
+Retry-After (shed, never a hang), and a tokenless /metrics scrape
+whose output must be grammatically valid Prometheus text exposition
+carrying every `slabsvm_serve_*` counter with values consistent with
+the traffic just sent.
+
+Usage: python3 tools/serve_smoke.py path/to/slabsvm
+"""
+
+import json
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+CHECKS = []
+
+
+def check(name, cond, detail=""):
+    status = "ok" if cond else "FAIL"
+    print(f"serve-smoke: {status}: {name}" + (f" ({detail})" if detail else ""))
+    CHECKS.append((name, cond))
+    if not cond:
+        raise SystemExit(f"serve-smoke: FAIL: {name}: {detail}")
+
+
+def recv_response(sock, buf):
+    """Read one content-length-framed response; returns
+    (status, headers, body, leftover)."""
+    while True:
+        idx = buf.find(b"\r\n\r\n")
+        if idx >= 0:
+            head = buf[:idx].decode()
+            lines = head.split("\r\n")
+            status = int(lines[0].split(" ")[1])
+            headers = {}
+            for line in lines[1:]:
+                k, _, v = line.partition(":")
+                headers[k.strip().lower()] = v.strip()
+            clen = int(headers.get("content-length", "0"))
+            if len(buf) >= idx + 4 + clen:
+                body = buf[idx + 4 : idx + 4 + clen].decode()
+                return status, headers, body, buf[idx + 4 + clen :]
+        chunk = sock.recv(65536)
+        if not chunk:
+            raise SystemExit("serve-smoke: FAIL: server closed mid-response")
+        buf += chunk
+
+
+def request(addr, method, path, token=None, body=None):
+    """One-shot request on a fresh connection."""
+    with socket.create_connection(addr, timeout=30) as s:
+        payload = body or ""
+        req = f"{method} {path} HTTP/1.1\r\n"
+        if token is not None:
+            req += f"authorization: Bearer {token}\r\n"
+        req += f"content-length: {len(payload)}\r\n"
+        req += f"connection: close\r\n\r\n{payload}"
+        s.sendall(req.encode())
+        status, headers, resp_body, _ = recv_response(s, b"")
+        return status, headers, resp_body
+
+
+def main():
+    if len(sys.argv) != 2:
+        raise SystemExit(f"usage: {sys.argv[0]} path/to/slabsvm")
+    binary = sys.argv[1]
+
+    proc = subprocess.Popen(
+        [
+            binary, "serve",
+            "--addr", "127.0.0.1:0",
+            "--auth", "demo=smoketok,other=othertok",
+            "--tenants", "demo,other",
+            # cap-1 mailbox + warm incremental solver: a pipelined push
+            # flood outruns the shard worker, so 429s are observable
+            "--shards", "1",
+            "--mailbox", "1",
+            "--window", "512",
+            "--min-train", "16",
+            "--train-size", "128",
+        ],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+        text=True,
+    )
+    try:
+        addr = None
+        deadline = time.monotonic() + 120
+        while time.monotonic() < deadline:
+            line = proc.stdout.readline()
+            if not line:
+                break
+            line = line.strip()
+            print(f"server: {line}")
+            if line.startswith("listening on "):
+                host, _, port = line.removeprefix("listening on ").rpartition(":")
+                addr = (host, int(port))
+                break
+        check("server prints its bound address", addr is not None)
+        # keep draining stdout so the server never blocks on the pipe
+        threading.Thread(
+            target=lambda: [None for _ in proc.stdout], daemon=True
+        ).start()
+
+        # ---- liveness (no auth, rung 1)
+        status, _, body = request(addr, "GET", "/healthz")
+        check("healthz answers tokenless", status == 200, body)
+        check("healthz reports ok", json.loads(body)["ok"] is True, body)
+
+        # ---- authenticated scoring against the startup demo model
+        status, headers, body = request(
+            addr, "POST", "/v1/score/demo", token="smoketok",
+            body='{"queries": [[0.5, 0.5], [20.0, 3.0]]}',
+        )
+        check("score with valid token", status == 200, body)
+        scores = json.loads(body)["scores"]
+        check("score returns one score per query", len(scores) == 2, body)
+        version = int(headers.get("x-slab-model-version", "0"))
+        check("score carries X-Slab-Model-Version >= 1", version >= 1,
+              str(headers))
+
+        # ---- auth rejection ladder
+        status, headers, body = request(addr, "POST", "/v1/score/demo",
+                                        body='{"queries": [[0.0, 0.0]]}')
+        check("missing token is 401", status == 401, body)
+        check("401 carries WWW-Authenticate",
+              "bearer" in headers.get("www-authenticate", "").lower(),
+              str(headers))
+        status, _, body = request(addr, "POST", "/v1/score/demo",
+                                  token="bogus",
+                                  body='{"queries": [[0.0, 0.0]]}')
+        check("unknown token is 401", status == 401, body)
+        status, _, body = request(addr, "POST", "/v1/score/demo",
+                                  token="othertok",
+                                  body='{"queries": [[0.0, 0.0]]}')
+        check("cross-tenant access is 403", status == 403, body)
+        auth_failures_sent = 3
+
+        # ---- stream push
+        status, _, body = request(addr, "POST", "/v1/streams/demo/push",
+                                  token="smoketok",
+                                  body='{"x": [20.0, 3.0]}')
+        check("push is accepted (202)", status == 202, body)
+
+        # ---- pipelined flood: the cap-1 mailbox must shed with 429,
+        #      and every response must arrive (shed, never hang)
+        burst = 256
+        wire = b""
+        for i in range(burst):
+            push = f'{{"x": [{20.0 + i * 0.01}, {3.0 - i * 0.01}]}}'
+            wire += (
+                f"POST /v1/streams/demo/push HTTP/1.1\r\n"
+                f"authorization: Bearer smoketok\r\n"
+                f"content-length: {len(push)}\r\n\r\n{push}"
+            ).encode()
+        queued = shed = 0
+        with socket.create_connection(addr, timeout=60) as s:
+            s.sendall(wire)
+            buf = b""
+            for _ in range(burst):
+                status, headers, body, buf = recv_response(s, buf)
+                if status == 202:
+                    queued += 1
+                elif status == 429:
+                    shed += 1
+                    check("429 carries Retry-After",
+                          "retry-after" in headers, str(headers))
+                    check("429 carries X-Slab-Queue-Depth",
+                          "x-slab-queue-depth" in headers, str(headers))
+                else:
+                    check("flood status is 202 or 429", False,
+                          f"{status}: {body}")
+        check("flood observes 429 shedding", shed > 0,
+              f"{queued} queued / {shed} shed over {burst}")
+        check("flood still lands samples", queued > 0,
+              f"{queued} queued / {shed} shed over {burst}")
+
+        # ---- metrics scrape: tokenless, valid Prometheus grammar,
+        #      every serve counter present and consistent
+        status, headers, body = request(addr, "GET", "/metrics")
+        check("metrics answers tokenless", status == 200)
+        check("metrics content type is text exposition",
+              headers.get("content-type", "").startswith("text/plain"),
+              str(headers))
+        values = {}
+        bad_lines = []
+        for line in body.splitlines():
+            if not line:
+                continue
+            if line.startswith("#"):
+                if not (line.startswith("# HELP ") or line.startswith("# TYPE ")):
+                    bad_lines.append(line)
+                continue
+            name, _, value = line.rpartition(" ")
+            if not _parses_float(value) or not name.split("{")[0].startswith("slabsvm_"):
+                bad_lines.append(line)
+                continue
+            values[name] = float(value)
+        check("metrics body is valid Prometheus text exposition",
+              not bad_lines and values, "; ".join(bad_lines[:3]))
+        for counter in [
+            "slabsvm_serve_accepted_total",
+            "slabsvm_serve_shed_total",
+            "slabsvm_serve_auth_failed_total",
+            "slabsvm_serve_stale_served_total",
+            "slabsvm_serve_latency_us_count",
+            "slabsvm_serve_latency_us_sum",
+        ]:
+            check(f"metrics export {counter}", counter in values, counter)
+        check("serve_latency histogram has buckets",
+              any(k.startswith("slabsvm_serve_latency_us_bucket") for k in values))
+        check("accepted counter saw the traffic",
+              values["slabsvm_serve_accepted_total"] >= queued + 3,
+              str(values["slabsvm_serve_accepted_total"]))
+        check("shed counter matches the flood",
+              values["slabsvm_serve_shed_total"] >= shed,
+              str(values["slabsvm_serve_shed_total"]))
+        check("auth-failed counter saw the rejections",
+              values["slabsvm_serve_auth_failed_total"] >= auth_failures_sent,
+              str(values["slabsvm_serve_auth_failed_total"]))
+
+        passed = sum(1 for _, ok in CHECKS if ok)
+        print(f"serve-smoke: PASS ({passed} checks)")
+    finally:
+        proc.kill()
+        proc.wait()
+
+
+def _parses_float(text):
+    try:
+        float(text)
+        return True
+    except ValueError:
+        return False
+
+
+if __name__ == "__main__":
+    main()

@@ -205,6 +205,11 @@ R1_SCOPE = [
     "stream/manager.rs",
     "stream/persist.rs",
     "coordinator/jobs.rs",
+    "serve/http.rs",
+    "serve/auth.rs",
+    "serve/limits.rs",
+    "serve/router.rs",
+    "serve/server.rs",
 ]
 R1_TOKENS = [".unwrap()", ".expect(", "panic!(", "unreachable!(", ".unwrap_unchecked("]
 SUBSCRIPT_KEYWORDS = {

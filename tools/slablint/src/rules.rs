@@ -44,12 +44,19 @@ fn is_ident(c: char) -> bool {
 // ---------------------------------------------------------------- R1
 
 /// Files where a panic is an availability bug: shard workers, the
-/// mailbox/manager plane and snapshot decoding. See DESIGN.md §7.
+/// mailbox/manager plane, snapshot decoding, and the whole HTTP front
+/// door (a request must never take down a connection thread, let alone
+/// the acceptor). See DESIGN.md §7.
 pub const R1_SCOPE: &[&str] = &[
     "stream/shard.rs",
     "stream/manager.rs",
     "stream/persist.rs",
     "coordinator/jobs.rs",
+    "serve/http.rs",
+    "serve/auth.rs",
+    "serve/limits.rs",
+    "serve/router.rs",
+    "serve/server.rs",
 ];
 
 const R1_TOKENS: &[&str] = &[
