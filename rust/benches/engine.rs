@@ -13,6 +13,13 @@
 //! be materially slower than scalar (asserted; nonzero exit on failure).
 //! K1 needs no artifacts and always runs.
 //!
+//! And **KA1** — the approximate feature-map engines (DESIGN.md §10):
+//! batch fit time + AUC gap vs the exact SMO across a lifted-dimension
+//! sweep, streaming absorb cost at a window the exact engine's O(m²)
+//! Gram could never hold, and a scoring m-independence floor (the
+//! lifted score is O(d·D); doubling the resident count must not move
+//! it — asserted in-binary). KA1 needs no artifacts and always runs.
+//!
 //! Requires `make artifacts` for A3. Run: `cargo bench --bench engine`
 
 use std::sync::Arc;
@@ -20,9 +27,139 @@ use std::time::Instant;
 
 use slabsvm::bench::Bench;
 use slabsvm::data::synthetic::SlabConfig;
+use slabsvm::kernel::featmap::EngineKind;
 use slabsvm::kernel::Kernel;
+use slabsvm::metrics::roc_auc;
 use slabsvm::runtime::Engine;
 use slabsvm::solver::{SolverKind, Trainer};
+use slabsvm::stream::{ApproxIncremental, IncrementalConfig};
+
+/// KA1 — approximate-engine sweep: fit/AUC across lifted dimensions,
+/// absorb cost at exact-infeasible window sizes, scoring m-independence.
+fn approx_engine_bench(bench: &mut Bench, fast: bool) {
+    let kernel = Kernel::Rbf { g: 0.5 };
+    let n_train = if fast { 400 } else { 4000 };
+    let dims: &[usize] = if fast { &[32, 64] } else { &[64, 256, 1024] };
+
+    // exact baseline at Table-1 scale (the AUC yardstick)
+    let train = SlabConfig::default().generate(n_train, 71);
+    let eval = SlabConfig::default().generate_eval(500, 500, 72);
+    let exact = Trainer::new(SolverKind::Smo)
+        .kernel(kernel)
+        .fit(&train.x)
+        .expect("exact fit")
+        .model;
+    let exact_scores: Vec<f64> =
+        (0..eval.x.rows()).map(|i| exact.score(eval.x.row(i))).collect();
+    let exact_auc = roc_auc(&eval.y, &exact_scores);
+
+    for engine in [EngineKind::Nystroem, EngineKind::Rff] {
+        for &d in dims {
+            bench.run(&format!("approx-fit/{engine}/D={d}"), || {
+                let t0 = Instant::now();
+                let model = Trainer::new(SolverKind::Approx)
+                    .kernel(kernel)
+                    .engine(engine)
+                    .features(d)
+                    .fit(&train.x)
+                    .expect("approx fit")
+                    .model;
+                let fit_s = t0.elapsed().as_secs_f64();
+                let scores: Vec<f64> = (0..eval.x.rows())
+                    .map(|i| model.score(eval.x.row(i)))
+                    .collect();
+                let auc = roc_auc(&eval.y, &scores);
+                vec![
+                    ("fit_s".into(), fit_s),
+                    ("features_d".into(), d as f64),
+                    ("auc".into(), auc),
+                    ("auc_gap".into(), (exact_auc - auc).abs()),
+                ]
+            });
+        }
+    }
+
+    // ---- streaming absorb at a window exact cannot hold ---------------
+    // window 10^5: the exact engine's Gram alone would be 8·10^10 bytes;
+    // the lifted engine absorbs in O(D) regardless
+    let window = if fast { 2_000 } else { 100_000 };
+    let d_stream = 64usize;
+    let stream_cfg = |engine| IncrementalConfig {
+        engine,
+        features: d_stream,
+        ..Default::default()
+    };
+    let feed = SlabConfig::default().generate(window, 73);
+    for engine in [EngineKind::Nystroem, EngineKind::Rff] {
+        bench.run(&format!("approx-absorb/{engine}/window={window}"), || {
+            let mut inc = ApproxIncremental::new(
+                kernel,
+                window,
+                feed.x.cols(),
+                stream_cfg(engine),
+            );
+            let t0 = Instant::now();
+            for i in 0..feed.x.rows() {
+                inc.push(feed.x.row(i)).expect("absorb");
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            vec![
+                ("ns_per_absorb".into(), dt * 1e9 / feed.x.rows() as f64),
+                ("features_d".into(), d_stream as f64),
+                ("resident".into(), inc.len() as f64),
+            ]
+        });
+    }
+
+    // ---- scoring m-independence floor ----------------------------------
+    // the lifted score is one D-dim dot product; a 10-100x bigger
+    // resident set must not change its cost (generous slack for CI
+    // timer noise on the 1-sample smoke run)
+    let (m_small, m_big) = if fast { (256, 2_000) } else { (2_000, 20_000) };
+    let queries = SlabConfig::default().generate(512, 74);
+    let mut per_score = [0.0f64; 2];
+    for (slot, &m) in [m_small, m_big].iter().enumerate() {
+        let data = SlabConfig::default().generate(m, 75);
+        let mut inc = ApproxIncremental::new(
+            kernel,
+            m,
+            data.x.cols(),
+            stream_cfg(EngineKind::Rff),
+        );
+        for i in 0..m {
+            inc.push(data.x.row(i)).expect("absorb");
+        }
+        let s = bench
+            .run(&format!("approx-score/rff/m={m}"), || {
+                let reps = 8usize;
+                let t0 = Instant::now();
+                let mut acc = 0.0;
+                for _ in 0..reps {
+                    for qi in 0..queries.x.rows() {
+                        acc += inc.score(queries.x.row(qi));
+                    }
+                }
+                std::hint::black_box(acc);
+                let dt = t0.elapsed().as_secs_f64();
+                let per = dt * 1e9 / (reps * queries.x.rows()) as f64;
+                vec![
+                    ("ns_per_score".into(), per),
+                    ("features_d".into(), d_stream as f64),
+                ]
+            })
+            .median();
+        per_score[slot] = s;
+    }
+    let ratio = per_score[1] / per_score[0].max(1e-12);
+    println!(
+        "approx scoring: {m_small} residents {:.6}s vs {m_big} residents          {:.6}s per batch ({ratio:.2}x)",
+        per_score[0], per_score[1]
+    );
+    assert!(
+        ratio <= 3.0,
+        "m-independence floor violated: scoring at m={m_big} is          {ratio:.2}x scoring at m={m_small} (lifted scores must not          scale with the resident count)"
+    );
+}
 
 /// K1 — blocked vs scalar RBF row build over an m×d design. Returns
 /// (blocked_median_s, scalar_median_s) for the perf-floor assertion.
@@ -79,6 +216,7 @@ fn row_kernel_bench(bench: &mut Bench) -> (f64, f64) {
 
 fn main() {
     let mut bench = Bench::from_env();
+    let fast = std::env::var("SLABSVM_BENCH_FAST").as_deref() == Ok("1");
 
     // ---- K1: row-kernel microbench + perf floor -----------------------
     let (blocked_s, scalar_s) = row_kernel_bench(&mut bench);
@@ -96,9 +234,14 @@ fn main() {
          1.25 x scalar {scalar_s:.6}s"
     );
 
+    // ---- KA1: approx engines (no artifacts needed) --------------------
+    approx_engine_bench(&mut bench, fast);
+
     let Ok(pjrt) = Engine::pjrt("artifacts") else {
         eprintln!("artifacts missing — run `make artifacts` first; skipping");
-        bench.report("K1 — blocked row kernel (A3 skipped: no artifacts)");
+        bench.report(
+            "K1 row kernel + KA1 approx engines (A3 skipped: no artifacts)",
+        );
         return;
     };
     let native = Engine::Native;
@@ -146,7 +289,9 @@ fn main() {
             });
         }
     }
-    bench.report("A3 — native vs PJRT engine (Gram build + batch scoring)");
+    bench.report(
+        "A3 native vs PJRT + K1 row kernel + KA1 approx engines",
+    );
     println!("\nnote: pjrt runs interpret-mode Pallas (sequential grid) on the CPU client;");
     println!("the same artifacts target MXU matmuls on real TPUs (DESIGN.md §Perf).");
 }

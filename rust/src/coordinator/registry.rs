@@ -105,6 +105,7 @@ mod tests {
             rho1: 0.0,
             rho2: 1.0,
             kernel: Kernel::Linear,
+            featmap: None,
         }
     }
 
@@ -138,6 +139,7 @@ mod tests {
             rho1: v as f64,
             rho2: v as f64 + 1.0,
             kernel: Kernel::Linear,
+            featmap: None,
         }
     }
 

@@ -1,0 +1,587 @@
+//! Explicit feature maps for approximate kernel training (DESIGN.md
+//! §10 "Approximate engines").
+//!
+//! Both maps lift a point `x ∈ R^d` to `φ(x) ∈ R^D` such that the
+//! lifted inner product approximates the kernel:
+//! `⟨φ(x), φ(y)⟩ ≈ k(x, y)`. Training the slab with a *linear* kernel
+//! on lifted features then approximates the exact kernel slab, scoring
+//! becomes one D-dimensional dot product independent of the number of
+//! support vectors, and incremental absorbs become O(d·D) primal
+//! updates instead of O(m) Gram rows.
+//!
+//! - [`NystroemMap`]: `φ(x) = W^{-1/2} · [k(x, l_1) … k(x, l_L)]ᵀ`
+//!   over L landmark points, with `W^{-1/2}` the symmetric pseudo
+//!   inverse square root of the landmark Gram via
+//!   [`crate::linalg::sym_eig`]. Exact (rank-limited) when landmarks
+//!   cover the data; works for every kernel family.
+//! - [`RffMap`]: random Fourier features for [`Kernel::Rbf`] only —
+//!   an unbiased Monte-Carlo estimator of the RBF kernel with
+//!   O(1/√D) error, deterministic by seed (Bochner's theorem: the
+//!   Fourier transform of `exp(-g‖δ‖²)` is Gaussian with variance
+//!   `2g` per coordinate).
+//!
+//! Everything here is availability-critical (slablint R1 scope: no
+//! panics, no unchecked indexing) and the per-point mapping paths are
+//! allocation-free (R3 hot scope): callers own the grow-once scratch.
+
+use crate::error::{Error, Result};
+use crate::kernel::Kernel;
+use crate::linalg::{dot, sym_eig, Matrix};
+use crate::util::rng::Rng;
+use std::fmt;
+use std::str::FromStr;
+
+/// Which solving engine a trainer / stream uses (DESIGN.md §10).
+///
+/// `Exact` is the reference path (full Gram, SMO family). The other
+/// two select the approximate feature-map engine with the named map.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// Exact kernel solve (full Gram; the paper's algorithm).
+    #[default]
+    Exact,
+    /// Nyström landmark feature map + linear slab in lifted space.
+    Nystroem,
+    /// Random Fourier features (RBF only) + linear slab in lifted
+    /// space.
+    Rff,
+}
+
+impl EngineKind {
+    /// Every engine, for parameterized tests and CLI listings.
+    pub const ALL: [EngineKind; 3] =
+        [EngineKind::Exact, EngineKind::Nystroem, EngineKind::Rff];
+
+    /// Stable CLI / snapshot name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Exact => "exact",
+            EngineKind::Nystroem => "nystroem",
+            EngineKind::Rff => "rff",
+        }
+    }
+
+    /// Stable one-byte tag for the snapshot format (v3+).
+    pub fn tag(&self) -> u8 {
+        match self {
+            EngineKind::Exact => 0,
+            EngineKind::Nystroem => 1,
+            EngineKind::Rff => 2,
+        }
+    }
+
+    /// Inverse of [`EngineKind::tag`] for snapshot decode.
+    pub fn from_tag(t: u8) -> Result<EngineKind> {
+        match t {
+            0 => Ok(EngineKind::Exact),
+            1 => Ok(EngineKind::Nystroem),
+            2 => Ok(EngineKind::Rff),
+            other => Err(Error::snapshot(format!("unknown engine tag {other}"))),
+        }
+    }
+}
+
+impl fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for EngineKind {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<EngineKind> {
+        match s {
+            "exact" => Ok(EngineKind::Exact),
+            "nystroem" | "nystrom" => Ok(EngineKind::Nystroem),
+            "rff" | "fourier" => Ok(EngineKind::Rff),
+            other => Err(Error::config(format!(
+                "unknown engine {other:?} (expected exact|nystroem|rff)"
+            ))),
+        }
+    }
+}
+
+/// An explicit feature map `φ: R^{d_in} → R^{d_out}` with
+/// `⟨φ(x), φ(y)⟩ ≈ k(x, y)`.
+///
+/// Contract (pinned by `rust/tests/featmap.rs`):
+/// - **Deterministic**: the same map applied to the same bytes
+///   produces the same bytes, independent of thread count (no
+///   internal state, no parallelism, no ambient randomness).
+/// - **Allocation-free mapping**: [`map_into`](Self::map_into) and
+///   [`dot_lifted`](Self::dot_lifted) never allocate; callers pass a
+///   scratch slice of [`scratch_len`](Self::scratch_len) elements.
+/// - `dot_lifted(x, v)` equals `⟨v, φ(x)⟩` up to floating-point
+///   reassociation — it exists so scoring never materializes `φ(x)`.
+pub trait FeatureMap {
+    /// Input dimension d.
+    fn d_in(&self) -> usize;
+
+    /// Lifted dimension D.
+    fn d_out(&self) -> usize;
+
+    /// Required scratch length for [`map_into`](Self::map_into)
+    /// (0 when the map needs none).
+    fn scratch_len(&self) -> usize;
+
+    /// Write `φ(x)` into `out` (`out.len() == d_out()`), using
+    /// caller-owned `scratch` (`scratch.len() >= scratch_len()`).
+    fn map_into(&self, x: &[f64], scratch: &mut [f64], out: &mut [f64]);
+
+    /// `⟨v, φ(x)⟩` without materializing `φ(x)` — the O(SV-free)
+    /// scoring primitive. `v.len() == d_out()`.
+    fn dot_lifted(&self, x: &[f64], v: &[f64]) -> f64;
+
+    /// Map every row of `x` (allocating; batch-fit setup path).
+    fn map_rows(&self, x: &Matrix) -> Matrix {
+        let mut scratch = vec![0.0; self.scratch_len()];
+        let mut out = Matrix::zeros(x.rows(), self.d_out());
+        for i in 0..x.rows() {
+            self.map_into(x.row(i), &mut scratch, out.row_mut(i));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------- RFF
+
+/// Random Fourier features for the RBF kernel
+/// `k(x,y) = exp(-g‖x-y‖²)`.
+///
+/// Draws `P = d_out/2` frequency rows `ω_p ~ N(0, 2g·I)` from a
+/// seeded [`Rng`] and maps
+/// `φ(x) = √(1/P) · [cos(ω_1ᵀx), sin(ω_1ᵀx), …, cos(ω_Pᵀx), sin(ω_Pᵀx)]`,
+/// so `E[⟨φ(x), φ(y)⟩] = exp(-g‖x-y‖²)` exactly (unbiased), with
+/// Monte-Carlo error O(1/√P). Fully reconstructible from
+/// `(d_in, d_out, g, seed)` — snapshots persist only those four
+/// numbers.
+#[derive(Clone, Debug)]
+pub struct RffMap {
+    freqs: Matrix,
+    g: f64,
+    seed: u64,
+    scale: f64,
+}
+
+impl RffMap {
+    /// Build a map with `d_out` features (must be even and ≥ 2) for
+    /// RBF bandwidth `g > 0`.
+    pub fn new(d_in: usize, d_out: usize, g: f64, seed: u64) -> Result<RffMap> {
+        if d_in == 0 {
+            return Err(Error::config("rff: input dimension must be >= 1"));
+        }
+        if d_out < 2 || d_out % 2 != 0 {
+            return Err(Error::config(format!(
+                "rff: feature count must be even and >= 2, got {d_out}"
+            )));
+        }
+        if !(g > 0.0) || !g.is_finite() {
+            return Err(Error::config(format!(
+                "rff: rbf bandwidth g must be finite and > 0, got {g}"
+            )));
+        }
+        let pairs = d_out / 2;
+        let sd = (2.0 * g).sqrt();
+        let mut rng = Rng::new(seed);
+        let data = (0..pairs * d_in)
+            .map(|_| rng.normal_ms(0.0, sd))
+            .collect();
+        Ok(RffMap {
+            freqs: Matrix::from_vec(pairs, d_in, data),
+            g,
+            seed,
+            scale: (1.0 / pairs as f64).sqrt(),
+        })
+    }
+
+    /// RBF bandwidth this map approximates.
+    pub fn g(&self) -> f64 {
+        self.g
+    }
+
+    /// Seed the frequency matrix was drawn from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Hot mapping body (slablint R3: allocation-free).
+    fn fourier_into(&self, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), 2 * self.freqs.rows());
+        for (p, pair) in out.chunks_exact_mut(2).enumerate() {
+            let t = dot(self.freqs.row(p), x);
+            if let [oc, os] = pair {
+                *oc = self.scale * t.cos();
+                *os = self.scale * t.sin();
+            }
+        }
+    }
+
+    /// Hot scoring body: `⟨v, φ(x)⟩` accumulated per frequency pair
+    /// (slablint R3: allocation-free, scratch-free).
+    fn fourier_dot(&self, x: &[f64], v: &[f64]) -> f64 {
+        debug_assert_eq!(v.len(), 2 * self.freqs.rows());
+        let mut acc = 0.0;
+        for (p, pair) in v.chunks_exact(2).enumerate() {
+            let t = dot(self.freqs.row(p), x);
+            if let [vc, vs] = pair {
+                acc += vc * t.cos() + vs * t.sin();
+            }
+        }
+        acc * self.scale
+    }
+}
+
+impl FeatureMap for RffMap {
+    fn d_in(&self) -> usize {
+        self.freqs.cols()
+    }
+
+    fn d_out(&self) -> usize {
+        2 * self.freqs.rows()
+    }
+
+    fn scratch_len(&self) -> usize {
+        0
+    }
+
+    fn map_into(&self, x: &[f64], _scratch: &mut [f64], out: &mut [f64]) {
+        self.fourier_into(x, out);
+    }
+
+    fn dot_lifted(&self, x: &[f64], v: &[f64]) -> f64 {
+        self.fourier_dot(x, v)
+    }
+}
+
+// ------------------------------------------------------ Nyström
+
+/// Nyström landmark feature map
+/// `φ(x) = W^{-1/2} · [k(x, l_1) … k(x, l_L)]ᵀ`.
+///
+/// `W` is the L×L landmark Gram and `W^{-1/2}` its symmetric pseudo
+/// inverse square root: eigenvalues at or below `1e-12·λ_max` are
+/// treated as exactly zero (pseudo-inverse semantics), so a rank
+/// deficient landmark set degrades to its numerical rank instead of
+/// exploding. When the landmarks are the full dataset the lifted
+/// Gram `ΦΦᵀ = K W⁺ K` reproduces `K` exactly on its range — the
+/// ≤1e-9 parity pinned by `rust/tests/featmap.rs`. Works for every
+/// kernel family (the map evaluates `k` directly).
+#[derive(Clone, Debug)]
+pub struct NystroemMap {
+    kernel: Kernel,
+    landmarks: Matrix,
+    wihalf: Matrix,
+}
+
+impl NystroemMap {
+    /// Build the map from an explicit landmark matrix (L×d, L ≥ 1).
+    ///
+    /// Deterministic and single-threaded: the landmark Gram, the
+    /// Jacobi eigendecomposition and the `W^{-1/2}` assembly are all
+    /// fixed-order f64 loops, so the same landmark bytes always
+    /// produce the same map bytes (snapshot restore relies on this).
+    pub fn new(kernel: Kernel, landmarks: Matrix) -> Result<NystroemMap> {
+        let l = landmarks.rows();
+        if l == 0 {
+            return Err(Error::config("nystroem: need at least one landmark"));
+        }
+        let w = kernel.gram(&landmarks, 1);
+        let (evals, v) = sym_eig(&w);
+        let lmax = evals.iter().fold(0.0_f64, |m, &e| m.max(e));
+        let floor = 1e-12 * lmax.max(f64::MIN_POSITIVE);
+        let inv_sqrt: Vec<f64> = evals
+            .iter()
+            .map(|&e| if e > floor { 1.0 / e.sqrt() } else { 0.0 })
+            .collect();
+        let mut wihalf = Matrix::zeros(l, l);
+        for i in 0..l {
+            for j in 0..=i {
+                let mut acc = 0.0;
+                for (k, s) in inv_sqrt.iter().enumerate() {
+                    acc += v.get(i, k) * s * v.get(j, k);
+                }
+                wihalf.set(i, j, acc);
+                wihalf.set(j, i, acc);
+            }
+        }
+        Ok(NystroemMap { kernel, landmarks, wihalf })
+    }
+
+    /// The kernel this map approximates.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// Landmark matrix (L×d).
+    pub fn landmarks(&self) -> &Matrix {
+        &self.landmarks
+    }
+
+    /// `W^{-1/2}` (symmetric, L×L) — the fold-back operator that turns
+    /// a lifted weight vector into plain kernel coefficients on the
+    /// landmarks: `s(x) = ⟨w, φ(x)⟩ = ⟨W^{-1/2}w, k_L(x)⟩`.
+    pub fn wihalf(&self) -> &Matrix {
+        &self.wihalf
+    }
+
+    /// Hot mapping body: landmark kernel row into `scratch`, then
+    /// `out = W^{-1/2}·scratch` (slablint R3: allocation-free).
+    fn landmark_into(&self, x: &[f64], scratch: &mut [f64], out: &mut [f64]) {
+        debug_assert_eq!(scratch.len(), self.landmarks.rows());
+        debug_assert_eq!(out.len(), self.landmarks.rows());
+        self.kernel.row(&self.landmarks, x, scratch);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = dot(self.wihalf.row(i), scratch);
+        }
+    }
+
+    /// Hot scoring body: `⟨v, φ(x)⟩ = Σ_j k(l_j, x) · ⟨v, W^{-1/2}_{·j}⟩`
+    /// using the symmetry of `W^{-1/2}` (column j = row j) — O(L·d + L²)
+    /// with no scratch (slablint R3: allocation-free).
+    fn landmark_dot(&self, x: &[f64], v: &[f64]) -> f64 {
+        debug_assert_eq!(v.len(), self.landmarks.rows());
+        let mut acc = 0.0;
+        for j in 0..self.landmarks.rows() {
+            let klj = self.kernel.eval(self.landmarks.row(j), x);
+            acc += klj * dot(v, self.wihalf.row(j));
+        }
+        acc
+    }
+}
+
+impl FeatureMap for NystroemMap {
+    fn d_in(&self) -> usize {
+        self.landmarks.cols()
+    }
+
+    fn d_out(&self) -> usize {
+        self.landmarks.rows()
+    }
+
+    fn scratch_len(&self) -> usize {
+        self.landmarks.rows()
+    }
+
+    fn map_into(&self, x: &[f64], scratch: &mut [f64], out: &mut [f64]) {
+        self.landmark_into(x, scratch, out);
+    }
+
+    fn dot_lifted(&self, x: &[f64], v: &[f64]) -> f64 {
+        self.landmark_dot(x, v)
+    }
+}
+
+// ------------------------------------------------------ enum sum
+
+/// Runtime-selected feature map (the concrete type behind an
+/// [`EngineKind`] choice), so stream/solver state can hold either map
+/// without generics bleeding through the session layer.
+#[derive(Clone, Debug)]
+pub enum FeatMap {
+    /// Nyström landmark map.
+    Nystroem(NystroemMap),
+    /// Random Fourier feature map.
+    Rff(RffMap),
+}
+
+impl FeatMap {
+    /// Which engine family this map belongs to.
+    pub fn engine_kind(&self) -> EngineKind {
+        match self {
+            FeatMap::Nystroem(_) => EngineKind::Nystroem,
+            FeatMap::Rff(_) => EngineKind::Rff,
+        }
+    }
+
+    /// Downcast to the Nyström map (snapshot encode path).
+    pub fn as_nystroem(&self) -> Option<&NystroemMap> {
+        match self {
+            FeatMap::Nystroem(m) => Some(m),
+            FeatMap::Rff(_) => None,
+        }
+    }
+
+    /// Downcast to the RFF map (snapshot encode / model JSON path).
+    pub fn as_rff(&self) -> Option<&RffMap> {
+        match self {
+            FeatMap::Nystroem(_) => None,
+            FeatMap::Rff(m) => Some(m),
+        }
+    }
+}
+
+impl FeatureMap for FeatMap {
+    fn d_in(&self) -> usize {
+        match self {
+            FeatMap::Nystroem(m) => m.d_in(),
+            FeatMap::Rff(m) => m.d_in(),
+        }
+    }
+
+    fn d_out(&self) -> usize {
+        match self {
+            FeatMap::Nystroem(m) => m.d_out(),
+            FeatMap::Rff(m) => m.d_out(),
+        }
+    }
+
+    fn scratch_len(&self) -> usize {
+        match self {
+            FeatMap::Nystroem(m) => m.scratch_len(),
+            FeatMap::Rff(m) => m.scratch_len(),
+        }
+    }
+
+    fn map_into(&self, x: &[f64], scratch: &mut [f64], out: &mut [f64]) {
+        match self {
+            FeatMap::Nystroem(m) => m.map_into(x, scratch, out),
+            FeatMap::Rff(m) => m.map_into(x, scratch, out),
+        }
+    }
+
+    fn dot_lifted(&self, x: &[f64], v: &[f64]) -> f64 {
+        match self {
+            FeatMap::Nystroem(m) => m.dot_lifted(x, v),
+            FeatMap::Rff(m) => m.dot_lifted(x, v),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_matrix(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let data = (0..n * d).map(|_| rng.normal()).collect();
+        Matrix::from_vec(n, d, data)
+    }
+
+    #[test]
+    fn engine_kind_roundtrips() {
+        for k in EngineKind::ALL {
+            assert_eq!(k.name().parse::<EngineKind>().unwrap(), k);
+            assert_eq!(EngineKind::from_tag(k.tag()).unwrap(), k);
+            assert_eq!(format!("{k}"), k.name());
+        }
+        assert_eq!("nystrom".parse::<EngineKind>().unwrap(), EngineKind::Nystroem);
+        assert!("bogus".parse::<EngineKind>().is_err());
+        assert!(EngineKind::from_tag(9).is_err());
+        assert_eq!(EngineKind::default(), EngineKind::Exact);
+    }
+
+    #[test]
+    fn rff_new_validates() {
+        assert!(RffMap::new(0, 4, 0.5, 1).is_err());
+        assert!(RffMap::new(3, 3, 0.5, 1).is_err()); // odd
+        assert!(RffMap::new(3, 0, 0.5, 1).is_err());
+        assert!(RffMap::new(3, 4, 0.0, 1).is_err());
+        assert!(RffMap::new(3, 4, f64::NAN, 1).is_err());
+        let m = RffMap::new(3, 8, 0.5, 1).unwrap();
+        assert_eq!(m.d_in(), 3);
+        assert_eq!(m.d_out(), 8);
+        assert_eq!(m.scratch_len(), 0);
+    }
+
+    #[test]
+    fn rff_dot_lifted_matches_materialized() {
+        let m = RffMap::new(4, 16, 0.3, 7).unwrap();
+        let x = rand_matrix(5, 4, 11);
+        let mut rng = Rng::new(13);
+        let v: Vec<f64> = (0..16).map(|_| rng.normal()).collect();
+        let phi = m.map_rows(&x);
+        for i in 0..5 {
+            let want = dot(phi.row(i), &v);
+            let got = m.dot_lifted(x.row(i), &v);
+            assert!((want - got).abs() < 1e-12, "row {i}: {want} vs {got}");
+        }
+    }
+
+    #[test]
+    fn rff_bitwise_deterministic_by_seed() {
+        let a = RffMap::new(3, 32, 0.7, 42).unwrap();
+        let b = RffMap::new(3, 32, 0.7, 42).unwrap();
+        let c = RffMap::new(3, 32, 0.7, 43).unwrap();
+        let x = rand_matrix(4, 3, 5);
+        let (pa, pb, pc) = (a.map_rows(&x), b.map_rows(&x), c.map_rows(&x));
+        assert_eq!(pa.data(), pb.data(), "same seed must be bitwise equal");
+        assert_ne!(pa.data(), pc.data(), "different seed must differ");
+    }
+
+    #[test]
+    fn rff_unit_norm_in_expectation() {
+        // ⟨φ(x), φ(x)⟩ = (1/P)·Σ (cos² + sin²) = 1 exactly, per point.
+        let m = RffMap::new(2, 64, 1.1, 3).unwrap();
+        let x = rand_matrix(3, 2, 9);
+        let phi = m.map_rows(&x);
+        for i in 0..3 {
+            assert!((dot(phi.row(i), phi.row(i)) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn nystroem_exact_at_full_landmarks() {
+        let x = rand_matrix(20, 3, 17);
+        for kernel in [Kernel::Linear, Kernel::Rbf { g: 0.4 }] {
+            let m = NystroemMap::new(kernel, x.clone()).unwrap();
+            let phi = m.map_rows(&x);
+            for i in 0..20 {
+                for j in 0..20 {
+                    let approx = dot(phi.row(i), phi.row(j));
+                    let exact = kernel.eval(x.row(i), x.row(j));
+                    assert!(
+                        (approx - exact).abs() < 1e-9,
+                        "({i},{j}) {kernel:?}: {approx} vs {exact}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nystroem_dot_lifted_matches_materialized() {
+        let x = rand_matrix(12, 3, 19);
+        let landmarks = x.select_rows(&[0, 2, 4, 6, 8]);
+        let m = NystroemMap::new(Kernel::Rbf { g: 0.6 }, landmarks).unwrap();
+        let mut rng = Rng::new(23);
+        let v: Vec<f64> = (0..m.d_out()).map(|_| rng.normal()).collect();
+        let phi = m.map_rows(&x);
+        for i in 0..12 {
+            let want = dot(phi.row(i), &v);
+            let got = m.dot_lifted(x.row(i), &v);
+            assert!((want - got).abs() < 1e-10, "row {i}: {want} vs {got}");
+        }
+    }
+
+    #[test]
+    fn nystroem_rank_deficient_landmarks_stay_finite() {
+        // duplicated landmarks -> singular W; the eigenvalue floor must
+        // keep the map finite (pseudo-inverse, not a blow-up)
+        let base = rand_matrix(4, 2, 29);
+        let landmarks = base.select_rows(&[0, 0, 1, 1, 2, 3]);
+        let m = NystroemMap::new(Kernel::Linear, landmarks).unwrap();
+        let phi = m.map_rows(&base);
+        assert!(phi.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn featmap_enum_delegates() {
+        let x = rand_matrix(6, 3, 31);
+        let nys = FeatMap::Nystroem(
+            NystroemMap::new(Kernel::Rbf { g: 0.5 }, x.select_rows(&[0, 1, 2])).unwrap(),
+        );
+        let rff = FeatMap::Rff(RffMap::new(3, 8, 0.5, 7).unwrap());
+        assert_eq!(nys.engine_kind(), EngineKind::Nystroem);
+        assert_eq!(rff.engine_kind(), EngineKind::Rff);
+        assert!(nys.as_nystroem().is_some() && nys.as_rff().is_none());
+        assert!(rff.as_rff().is_some() && rff.as_nystroem().is_none());
+        for map in [&nys, &rff] {
+            let mut scratch = vec![0.0; map.scratch_len()];
+            let mut out = vec![0.0; map.d_out()];
+            map.map_into(x.row(4), &mut scratch, &mut out);
+            let got = map.dot_lifted(x.row(4), &out);
+            assert!((got - dot(&out, &out)).abs() < 1e-10);
+        }
+    }
+}

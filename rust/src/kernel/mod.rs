@@ -8,6 +8,8 @@
 use crate::linalg::{dot, dot_f32, sq_dist, sq_dist_f32, Matrix};
 use crate::util::threadpool;
 
+pub mod featmap;
+
 /// Floating-point width for kernel/Gram compute.
 ///
 /// `F64` is the reference mode: every result is bitwise pinned by the

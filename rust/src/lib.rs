@@ -58,6 +58,30 @@
 //! precision and says so (`FitReport::fell_back`); an f32 fit is
 //! never returned uncertified (DESIGN.md §5).
 //!
+//! When the exact O(m²) Gram no longer fits the problem, switch the
+//! **engine** instead of the solver: `.engine(..)` trains the same
+//! slab on an explicit feature map — random Fourier features for the
+//! RBF kernel or a Nyström landmark map for any kernel — so memory is
+//! O(m·D) and scoring is one D-dimensional dot product, independent
+//! of the training size (DESIGN.md §10):
+//!
+//! ```no_run
+//! use slabsvm::data::synthetic::SlabConfig;
+//! use slabsvm::kernel::featmap::EngineKind;
+//! use slabsvm::kernel::Kernel;
+//! use slabsvm::solver::{SolverKind, Trainer};
+//!
+//! let ds = SlabConfig::default().generate(100_000, 42);
+//! let report = Trainer::new(SolverKind::Approx)
+//!     .kernel(Kernel::Rbf { g: 0.5 })
+//!     .engine(EngineKind::Rff) // or EngineKind::Nystroem
+//!     .features(256)           // lifted dimension D
+//!     .seed(7)                 // bitwise-reproducible map
+//!     .fit(&ds.x)
+//!     .unwrap();
+//! assert!(report.certificate.max_kkt_violation.is_finite());
+//! ```
+//!
 //! For unbounded sample streams the [`stream`] layer keeps a model
 //! current without batch retrains — incremental/decremental SMO over a
 //! sliding window, with drift-triggered background retrains:

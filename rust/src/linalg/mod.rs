@@ -306,6 +306,97 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
+/// Eigendecomposition of a symmetric matrix by the cyclic Jacobi
+/// method: returns `(eigenvalues, v)` with `a = v · diag(λ) · vᵀ`
+/// (eigenvector `k` is **column** `k` of `v`). Only the lower triangle
+/// of `a` is read, so a numerically slightly-asymmetric input is
+/// symmetrized implicitly.
+///
+/// Deterministic: fixed sweep order, fixed (non-adaptive) convergence
+/// threshold, no randomness and no threading — two calls on the same
+/// bytes produce the same bytes, which the Nyström feature map's
+/// snapshot-restore path relies on. Cost is O(n³) per sweep with a
+/// bounded sweep count; intended for the small (≤ ~2·10³ landmark)
+/// matrices of the approximate-engine layer, not general dense
+/// eigenproblems.
+pub fn sym_eig(a: &Matrix) -> (Vec<f64>, Matrix) {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "sym_eig needs a square matrix");
+    // working copy (lower triangle mirrored) + accumulated rotations
+    let mut w = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            w.set(i, j, a.get(i, j));
+            w.set(j, i, a.get(i, j));
+        }
+    }
+    let mut v = Matrix::zeros(n, n);
+    for i in 0..n {
+        v.set(i, i, 1.0);
+    }
+    if n < 2 {
+        let evals = (0..n).map(|i| w.get(i, i)).collect();
+        return (evals, v);
+    }
+    let scale: f64 = (0..n)
+        .map(|i| (0..n).map(|j| w.get(i, j).abs()).fold(0.0, f64::max))
+        .fold(0.0, f64::max)
+        .max(1.0);
+    const MAX_SWEEPS: usize = 64;
+    for _ in 0..MAX_SWEEPS {
+        // Frobenius norm of the strict upper triangle
+        let mut off = 0.0;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += w.get(p, q) * w.get(p, q);
+            }
+        }
+        if off.sqrt() <= 1e-14 * scale {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = w.get(p, q);
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = w.get(p, p);
+                let aqq = w.get(q, q);
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    1.0 / (tau - (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // rotate rows/columns p and q of w
+                for k in 0..n {
+                    let wkp = w.get(k, p);
+                    let wkq = w.get(k, q);
+                    w.set(k, p, c * wkp - s * wkq);
+                    w.set(k, q, s * wkp + c * wkq);
+                }
+                for k in 0..n {
+                    let wpk = w.get(p, k);
+                    let wqk = w.get(q, k);
+                    w.set(p, k, c * wpk - s * wqk);
+                    w.set(q, k, s * wpk + c * wqk);
+                }
+                // accumulate the rotation into the eigenvector columns
+                for k in 0..n {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    let evals = (0..n).map(|i| w.get(i, i)).collect();
+    (evals, v)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -436,5 +527,82 @@ mod tests {
         assert!(cholesky(&a, 0.0).is_err());
         // jitter can rescue near-PSD cases
         assert!(cholesky(&a, 1.1).is_ok());
+    }
+
+    /// Random symmetric matrix A = B + Bᵀ of size n.
+    fn random_symmetric(n: usize, seed: u64) -> Matrix {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.normal();
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn sym_eig_reconstructs_the_matrix() {
+        for (n, seed) in [(1usize, 1u64), (2, 2), (5, 3), (9, 4)] {
+            let a = random_symmetric(n, seed);
+            let (lam, v) = sym_eig(&a);
+            assert_eq!(lam.len(), n);
+            // A == V diag(lam) Vᵀ
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..n {
+                        s += v.get(i, k) * lam[k] * v.get(j, k);
+                    }
+                    assert!(
+                        (s - a.get(i, j)).abs() < 1e-10,
+                        "n={n}: A[{i}][{j}] {} vs {}",
+                        a.get(i, j),
+                        s
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sym_eig_vectors_are_orthonormal() {
+        let a = random_symmetric(7, 11);
+        let (_, v) = sym_eig(&a);
+        for i in 0..7 {
+            for j in 0..7 {
+                let mut s = 0.0;
+                for k in 0..7 {
+                    s += v.get(k, i) * v.get(k, j);
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-10, "VᵀV[{i}][{j}] = {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn sym_eig_matches_known_spectrum() {
+        // [[1,2],[2,1]] has eigenvalues {-1, 3}
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]);
+        let (mut lam, _) = sym_eig(&a);
+        lam.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((lam[0] + 1.0).abs() < 1e-12);
+        assert!((lam[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sym_eig_is_bitwise_deterministic() {
+        let a = random_symmetric(6, 21);
+        let (l1, v1) = sym_eig(&a);
+        let (l2, v2) = sym_eig(&a);
+        for (x, y) in l1.iter().zip(&l2) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in v1.data().iter().zip(v2.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 }

@@ -110,7 +110,17 @@ fn kernel_args() -> Vec<ArgSpec> {
 
 fn solver_args() -> Vec<ArgSpec> {
     vec![
-        ArgSpec::opt("solver", "smo", "solver: smo|pg|ipm|ocsvm-smo"),
+        ArgSpec::opt("solver", "smo", "solver: smo|pg|ipm|ocsvm-smo|approx"),
+        ArgSpec::opt(
+            "engine",
+            "exact",
+            "training engine: exact|nystroem|rff (approx feature-map solve)",
+        ),
+        ArgSpec::opt(
+            "features",
+            "64",
+            "lifted feature budget for --engine nystroem|rff",
+        ),
         ArgSpec::opt("nu1", "0.5", "nu1 (lower-plane outlier bound; OCSVM nu)"),
         ArgSpec::opt("nu2", "0.01", "nu2 (upper-plane violator bound)"),
         ArgSpec::opt("eps", "0.6666666666666666", "eps (upper-plane mass)"),
@@ -163,6 +173,14 @@ fn parse_trainer_from(p: &Parsed, kernel: Kernel) -> Result<Trainer> {
             Error::config(format!("--max-iter: not an integer: {max_iter}"))
         })?);
     }
+    let engine: slabsvm::kernel::featmap::EngineKind =
+        p.get_str("engine")?.parse()?;
+    // `--solver approx` alone keeps its default map; an explicit
+    // non-exact engine switches any solver onto the approx path
+    if engine != slabsvm::kernel::featmap::EngineKind::Exact {
+        t = t.engine(engine);
+    }
+    t = t.features(p.get_usize("features")?);
     Ok(t)
 }
 
@@ -751,6 +769,16 @@ fn cmd_stream(args: &[String]) -> Result<()> {
             "fifo",
             "window-eviction policy: fifo|interior-first",
         ),
+        ArgSpec::opt(
+            "engine",
+            "exact",
+            "streaming engine: exact|nystroem|rff (lifted approx absorbs)",
+        ),
+        ArgSpec::opt(
+            "features",
+            "64",
+            "lifted feature budget for --engine nystroem|rff",
+        ),
     ];
     spec.extend(kernel_args());
     if args.iter().any(|a| a == "--help") {
@@ -780,6 +808,8 @@ fn cmd_stream(args: &[String]) -> Result<()> {
     cfg.incremental.smo.nu2 = p.get_f64("nu2")?;
     cfg.incremental.smo.eps = p.get_f64("eps")?;
     cfg.incremental.policy = p.get_str("evict")?.parse()?;
+    cfg.incremental.engine = p.get_str("engine")?.parse()?;
+    cfg.incremental.features = p.get_usize("features")?;
 
     let amount = p.get_f64("drift-amount")?;
     let drift = match p.get_str("drift")? {
@@ -1261,6 +1291,8 @@ fn cmd_snapshot(args: &[String]) -> Result<()> {
         ..Default::default()
     };
     cfg.incremental.policy = p.get_str("evict")?.parse()?;
+    cfg.incremental.engine = p.get_str("engine")?.parse()?;
+    cfg.incremental.features = p.get_usize("features")?;
     let c = Coordinator::start_with_streams(
         Engine::Native,
         BatcherConfig::default(),

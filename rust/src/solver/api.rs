@@ -52,6 +52,7 @@
 use std::fmt;
 use std::str::FromStr;
 
+use super::approx::{ApproxParams, ApproxSolver};
 use super::ocssvm::SlabModel;
 use super::ocsvm_smo::{self, OcsvmParams};
 use super::qp_ipm::{self, IpmParams};
@@ -62,6 +63,7 @@ use super::warmstart::{self, WarmStartParams};
 use super::{Heuristic, SolveStats};
 use crate::cache::{CacheStats, CachedRows, KernelProvider, Policy, PrecomputedGram};
 use crate::error::Error;
+use crate::kernel::featmap::EngineKind;
 use crate::kernel::{Kernel, Precision};
 use crate::linalg::{matvec, Matrix};
 use crate::Result;
@@ -89,7 +91,7 @@ const F32_CERT_TOL: f64 = 1e-3;
 // SolverKind
 // ---------------------------------------------------------------------------
 
-/// The four trainable solvers, nameable for CLI and config files.
+/// The five trainable solvers, nameable for CLI and config files.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SolverKind {
     /// The paper's SMO on the faithful (α, ᾱ) slab dual.
@@ -100,15 +102,20 @@ pub enum SolverKind {
     Ipm,
     /// Schölkopf ν-one-class SVM via SMO (non-slab baseline).
     OcsvmSmo,
+    /// Feature-map approximation (Nyström / RFF): trains the slab on
+    /// explicitly lifted features, never forming the m×m Gram
+    /// ([`super::approx`]).
+    Approx,
 }
 
 impl SolverKind {
     /// Every kind, in paper-comparison order.
-    pub const ALL: [SolverKind; 4] = [
+    pub const ALL: [SolverKind; 5] = [
         SolverKind::Smo,
         SolverKind::Pg,
         SolverKind::Ipm,
         SolverKind::OcsvmSmo,
+        SolverKind::Approx,
     ];
 
     /// Canonical name (what [`fmt::Display`] prints and
@@ -119,6 +126,7 @@ impl SolverKind {
             SolverKind::Pg => "pg",
             SolverKind::Ipm => "ipm",
             SolverKind::OcsvmSmo => "ocsvm-smo",
+            SolverKind::Approx => "approx",
         }
     }
 
@@ -129,6 +137,7 @@ impl SolverKind {
             SolverKind::Pg => Box::new(PgSolver::default()),
             SolverKind::Ipm => Box::new(IpmSolver::default()),
             SolverKind::OcsvmSmo => Box::new(OcsvmSolver::default()),
+            SolverKind::Approx => Box::new(ApproxSolver::default()),
         }
     }
 }
@@ -148,8 +157,9 @@ impl FromStr for SolverKind {
             "pg" | "proj-grad" | "projected-gradient" => Ok(SolverKind::Pg),
             "ipm" | "interior-point" => Ok(SolverKind::Ipm),
             "ocsvm-smo" | "ocsvm" => Ok(SolverKind::OcsvmSmo),
+            "approx" => Ok(SolverKind::Approx),
             other => Err(Error::config(format!(
-                "unknown solver {other:?} (expected smo|pg|ipm|ocsvm-smo)"
+                "unknown solver {other:?} (expected smo|pg|ipm|ocsvm-smo|approx)"
             ))),
         }
     }
@@ -535,6 +545,8 @@ pub struct Trainer {
     cascade: Option<CascadeOpts>,
     cache: Option<CacheOpts>,
     precision: Precision,
+    engine: EngineKind,
+    features: usize,
 }
 
 impl Default for Trainer {
@@ -564,6 +576,8 @@ impl Trainer {
             cascade: None,
             cache: None,
             precision: Precision::F64,
+            engine: EngineKind::Exact,
+            features: 64,
         }
     }
 
@@ -692,6 +706,31 @@ impl Trainer {
         self
     }
 
+    /// Select the training engine. `nystroem` / `rff` switch the kind
+    /// to [`SolverKind::Approx`] (lifted-feature training, no m×m
+    /// Gram); `exact` reverts an approx trainer to the paper's SMO.
+    /// Lifted dimension comes from [`features`](Trainer::features).
+    pub fn engine(mut self, engine: EngineKind) -> Trainer {
+        self.engine = engine;
+        match engine {
+            EngineKind::Exact => {
+                if self.kind == SolverKind::Approx {
+                    self.kind = SolverKind::Smo;
+                }
+            }
+            _ => self.kind = SolverKind::Approx,
+        }
+        self
+    }
+
+    /// Lifted dimension D for the approximate engine: landmark count
+    /// for Nyström (clamped to m at fit), feature count for RFF
+    /// (rounded up to even). Ignored by the exact kinds.
+    pub fn features(mut self, features: usize) -> Trainer {
+        self.features = features;
+        self
+    }
+
     // ---------------------------------------------------- param lowering
 
     /// Lower the shared fields into [`SmoParams`].
@@ -750,6 +789,17 @@ impl Trainer {
         }
     }
 
+    /// Lower the shared fields into [`ApproxParams`]. A trainer put
+    /// into approx mode without an explicit map choice defaults to
+    /// Nyström (the map that works for every kernel family).
+    pub fn approx_params(&self) -> ApproxParams {
+        let engine = match self.engine {
+            EngineKind::Exact => EngineKind::Nystroem,
+            e => e,
+        };
+        ApproxParams { smo: self.smo_params(), engine, features: self.features }
+    }
+
     /// Instantiate the configured base solver (no layers).
     pub fn build_solver(&self) -> Box<dyn Solver + Send + Sync> {
         match self.kind {
@@ -759,12 +809,29 @@ impl Trainer {
             SolverKind::OcsvmSmo => {
                 Box::new(OcsvmSolver { params: self.ocsvm_params() })
             }
+            SolverKind::Approx => {
+                Box::new(ApproxSolver { params: self.approx_params() })
+            }
         }
     }
 
     // ------------------------------------------------------------- fitting
 
     fn validate_composition(&self) -> Result<()> {
+        if self.kind == SolverKind::Approx {
+            if self.precision == Precision::F32 {
+                return Err(Error::config(
+                    "approx engine has no f32 mode: there is no Gram to \
+                     build at reduced precision; lifted training is f64",
+                ));
+            }
+            if self.cascade.is_some() {
+                return Err(Error::config(
+                    "cascade + approx is unsupported: the lifted engine \
+                     already scales past the sizes cascade shards for",
+                ));
+            }
+        }
         if self.warm_epochs > 0 && self.kind != SolverKind::Smo {
             return Err(Error::config(format!(
                 "warm_start requires the smo solver (got {})",

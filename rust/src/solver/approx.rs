@@ -1,0 +1,1213 @@
+//! Approximate feature-map slab engine (DESIGN.md §10).
+//!
+//! Trains the one-class slab on **explicitly lifted** features
+//! `φ(x) ∈ R^D` (Nyström landmarks or random Fourier features, see
+//! [`crate::kernel::featmap`]) with a *linear* kernel in the lifted
+//! space, so the lifted Gram `⟨φᵢ, φⱼ⟩` never has to be materialized:
+//! the solver maintains the primal weight `w = Σᵢ γᵢ φᵢ` directly and
+//! every margin is one D-dimensional dot product. That turns
+//!
+//! - batch training into O(iter · D) pair updates over an O(m·D)
+//!   state (10⁵ samples × D=64 ≈ 51 MB where the exact window Gram
+//!   would need 80 GB),
+//! - incremental absorbs into O(D) primal pushes plus a budgeted
+//!   repair sweep, and
+//! - scoring into a single `dot_lifted` — O(d·D), independent of how
+//!   many samples are resident.
+//!
+//! The dual is the paper's slab QP verbatim — box `0 ≤ α ≤ 1/(ν₁m)`,
+//! `0 ≤ ᾱ ≤ ε/(ν₂m)`, sums `Σα = 1`, `Σᾱ = ε` — just with
+//! `K ≈ ΦΦᵀ`, so the exact engine's KKT certificate applies unchanged
+//! in the lifted space (`rust/tests/stream_invariants.rs` re-checks it
+//! after every streaming op).
+//!
+//! Optimizer: pairwise coordinate descent on ½‖w‖². An **α-step**
+//! moves mass from the highest-margin reducible coordinate to the
+//! lowest-margin increasable one (both sums preserved by
+//! construction); an **ᾱ-step** mirrors it on the upper plane. Below
+//! [`SCAN_LIMIT`] residents selection is a deterministic greedy scan
+//! over refreshed margins (no RNG — snapshot continue-parity is
+//! bitwise); above it selection samples a candidate set per step and
+//! computes fresh margins only for the sample, keeping per-absorb
+//! cost independent of m.
+
+use std::time::Instant;
+
+use super::smo::SmoParams;
+use super::validate::{self, Certificate};
+use super::SolveStats;
+use crate::cache::CacheStats;
+use crate::error::Error;
+use crate::kernel::featmap::{EngineKind, FeatMap, FeatureMap, NystroemMap, RffMap};
+use crate::kernel::{Kernel, Precision};
+use crate::linalg::{axpy, dot, Matrix};
+use crate::solver::api::{DualSolution, FitReport, Solver, SolverKind};
+use crate::solver::ocssvm::SlabModel;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Resident count above which the repair loop switches from the
+/// deterministic full greedy scan to sampled selection (per-step cost
+/// O(sample·D) instead of O(m + D)). Compile-time so the two regimes
+/// are pinned by tests on either side.
+pub const SCAN_LIMIT: usize = 4096;
+
+/// Candidate-set size per sampled selection step (large-m mode).
+const SAMPLE: usize = 48;
+
+/// Seed mix for the RFF frequency draw, so the map's stream is
+/// decorrelated from the solver's own selection RNG at equal seeds.
+pub const RFF_SEED_MIX: u64 = 0x52FF_52FF_52FF_52FF;
+
+/// Seed mix for Nyström landmark sampling.
+pub const LANDMARK_SEED_MIX: u64 = 0x4C41_4E44_4C41_4E44;
+
+// ---------------------------------------------------------- helpers
+//
+// The whole file is slablint R1 scope: every row/element access goes
+// through checked `.get(..)` forms, never `expr[idx]`.
+
+/// Row `i` of a flat row-major buffer (empty slice on out-of-range —
+/// callers guard lengths, the empty slice keeps the path panic-free).
+fn row_of(phi: &[f64], d: usize, i: usize) -> &[f64] {
+    let start = i * d;
+    phi.get(start..start + d).unwrap_or(&[])
+}
+
+/// Checked scalar read (0.0 out of range).
+fn at(xs: &[f64], i: usize) -> f64 {
+    xs.get(i).copied().unwrap_or(0.0)
+}
+
+/// Checked scalar write (no-op out of range).
+fn set_at(xs: &mut [f64], i: usize, v: f64) {
+    if let Some(x) = xs.get_mut(i) {
+        *x = v;
+    }
+}
+
+/// Checked scalar add (no-op out of range).
+fn add_at(xs: &mut [f64], i: usize, v: f64) {
+    if let Some(x) = xs.get_mut(i) {
+        *x += v;
+    }
+}
+
+/// Restore `Σxs = target` after floating-point drift (or after a
+/// removal), spreading the correction greedily under `cap` and keeping
+/// `w` consistent (`sign` is +1 for α mass, −1 for ᾱ mass).
+fn renorm_mass(
+    xs: &mut [f64],
+    target: f64,
+    cap: f64,
+    phi: &[f64],
+    d: usize,
+    w: &mut [f64],
+    sign: f64,
+) {
+    let sum: f64 = xs.iter().sum();
+    let mut diff = target - sum;
+    if diff == 0.0 {
+        return;
+    }
+    for i in 0..xs.len() {
+        if diff == 0.0 {
+            break;
+        }
+        let Some(x) = xs.get_mut(i) else { break };
+        let take = if diff > 0.0 {
+            diff.min((cap - *x).max(0.0))
+        } else {
+            diff.max(-x.max(0.0))
+        };
+        if take != 0.0 {
+            *x += take;
+            axpy(sign * take, row_of(phi, d, i), w);
+            diff -= take;
+        }
+    }
+}
+
+/// Recover a slab plane from margins + bound pattern: mean margin over
+/// the interior set when one exists, else the midpoint of the bracket
+/// the two bound sets imply. `at_cap_is_lo` is true for ρ1 (α at cap →
+/// s ≤ ρ1) and false for ρ2 (ᾱ at cap → s ≥ ρ2).
+fn recover_plane(s: &[f64], mass: &[f64], cap: f64, at_cap_is_lo: bool) -> f64 {
+    let thr = cap * 1e-6;
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (&si, &mi) in s.iter().zip(mass) {
+        if mi > thr && mi < cap - thr {
+            acc += si;
+            n += 1;
+        }
+    }
+    if n > 0 {
+        return acc / n as f64;
+    }
+    let mut lo = f64::NEG_INFINITY;
+    let mut hi = f64::INFINITY;
+    for (&si, &mi) in s.iter().zip(mass) {
+        let is_cap = mi >= cap - thr;
+        let is_zero = mi <= thr;
+        if (is_cap && at_cap_is_lo) || (is_zero && !at_cap_is_lo) {
+            lo = lo.max(si);
+        } else if (is_zero && at_cap_is_lo) || (is_cap && !at_cap_is_lo) {
+            hi = hi.min(si);
+        }
+    }
+    match (lo.is_finite(), hi.is_finite()) {
+        (true, true) => 0.5 * (lo + hi),
+        (true, false) => lo,
+        (false, true) => hi,
+        (false, false) => 0.0,
+    }
+}
+
+// ------------------------------------------------------ LiftedSlab
+
+/// The slab dual maintained in an explicit feature space: lifted rows
+/// `φᵢ`, multipliers (α, ᾱ), the primal weight `w = Σγᵢφᵢ`, cached
+/// margins `sᵢ = ⟨w, φᵢ⟩` and recovered slab offsets.
+///
+/// Shared by the batch [`ApproxSolver`] and the streaming
+/// [`crate::stream::approx::ApproxIncremental`] engine; every
+/// structural op (grow / replace / remove) preserves `Σα = 1`,
+/// `Σᾱ = ε` and the boxes **exactly** (by rescale or direct transfer,
+/// not by post-hoc projection), which is what lets the invariant suite
+/// assert feasibility after every single op.
+#[derive(Clone, Debug)]
+pub struct LiftedSlab {
+    d: usize,
+    nu1: f64,
+    nu2: f64,
+    eps: f64,
+    tol: f64,
+    phi: Vec<f64>,
+    diag: Vec<f64>,
+    alpha: Vec<f64>,
+    alpha_bar: Vec<f64>,
+    s: Vec<f64>,
+    w: Vec<f64>,
+    rho1: f64,
+    rho2: f64,
+    banned: Vec<u64>,
+    epoch: u64,
+    rng: Rng,
+}
+
+impl LiftedSlab {
+    /// Empty state for lifted dimension `d` with the slab
+    /// hyper-parameters taken from `p`.
+    pub fn new(d: usize, p: &SmoParams) -> LiftedSlab {
+        LiftedSlab {
+            d,
+            nu1: p.nu1,
+            nu2: p.nu2,
+            eps: p.eps,
+            tol: p.tol,
+            phi: Vec::new(),
+            diag: Vec::new(),
+            alpha: Vec::new(),
+            alpha_bar: Vec::new(),
+            s: Vec::new(),
+            w: vec![0.0; d],
+            rho1: 0.0,
+            rho2: 0.0,
+            banned: Vec::new(),
+            epoch: 0,
+            rng: Rng::new(p.seed ^ 0xA11D_0711),
+        }
+    }
+
+    /// Resident count m.
+    pub fn len(&self) -> usize {
+        self.alpha.len()
+    }
+
+    /// True when no samples are resident.
+    pub fn is_empty(&self) -> bool {
+        self.alpha.is_empty()
+    }
+
+    /// Lifted dimension D.
+    pub fn dim_lifted(&self) -> usize {
+        self.d
+    }
+
+    /// Lower-plane multipliers α.
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    /// Upper-plane multipliers ᾱ.
+    pub fn alpha_bar(&self) -> &[f64] {
+        &self.alpha_bar
+    }
+
+    /// Cached margins (fresh immediately after
+    /// [`refresh_margins`](Self::refresh_margins) / a repair exit;
+    /// stale mid-sweep by design).
+    pub fn margins(&self) -> &[f64] {
+        &self.s
+    }
+
+    /// Primal weight vector `w = Σ γᵢ φᵢ` (the whole model, for
+    /// scoring via [`FeatureMap::dot_lifted`]).
+    pub fn weights(&self) -> &[f64] {
+        &self.w
+    }
+
+    /// Flat row-major lifted rows (persistence checksums).
+    pub fn phi_flat(&self) -> &[f64] {
+        &self.phi
+    }
+
+    /// Slab offsets (ρ1, ρ2).
+    pub fn rho(&self) -> (f64, f64) {
+        (self.rho1, self.rho2)
+    }
+
+    /// Box caps (1/(ν₁m), ε/(ν₂m)) at the current m.
+    pub fn caps(&self) -> (f64, f64) {
+        let m = self.len().max(1) as f64;
+        (1.0 / (self.nu1 * m), self.eps / (self.nu2 * m))
+    }
+
+    /// ε (the upper-plane mass target Σᾱ).
+    pub fn eps(&self) -> f64 {
+        self.eps
+    }
+
+    /// Dual objective ½‖w‖² = ½ γᵀ(ΦΦᵀ)γ.
+    pub fn objective(&self) -> f64 {
+        0.5 * dot(&self.w, &self.w)
+    }
+
+    /// Fresh margin of resident `i`: `⟨w, φᵢ⟩`, O(D).
+    pub fn margin_of(&self, i: usize) -> f64 {
+        dot(&self.w, row_of(&self.phi, self.d, i))
+    }
+
+    /// Seed the state from a batch of lifted rows: uniform feasible
+    /// start α = 1/m, ᾱ = ε/m (inside both boxes for any ν ∈ (0,1]),
+    /// `w` accumulated in fixed row order, margins refreshed, planes
+    /// recovered.
+    pub fn batch_init(&mut self, phi: &Matrix) {
+        debug_assert_eq!(phi.cols(), self.d);
+        let m = phi.rows();
+        self.phi.clear();
+        self.phi.extend_from_slice(phi.data());
+        let mf = m as f64;
+        self.alpha.clear();
+        self.alpha.resize(m, 1.0 / mf);
+        self.alpha_bar.clear();
+        self.alpha_bar.resize(m, self.eps / mf);
+        self.banned.clear();
+        self.banned.resize(m, 0);
+        self.diag.clear();
+        self.s.clear();
+        self.s.resize(m, 0.0);
+        self.w.iter_mut().for_each(|v| *v = 0.0);
+        let g = (1.0 - self.eps) / mf;
+        for i in 0..m {
+            let row = row_of(&self.phi, self.d, i);
+            self.diag.push(dot(row, row));
+            axpy(g, row, &mut self.w);
+        }
+        self.refresh_margins();
+        self.recover_rho();
+    }
+
+    /// Rebuild from restored dual state + lifted rows (snapshot
+    /// restore): `w` is re-accumulated in fixed row order and margins
+    /// recomputed from it, so two restores of the same bytes agree
+    /// bitwise.
+    #[allow(clippy::too_many_arguments)]
+    pub fn restore(
+        d: usize,
+        p: &SmoParams,
+        phi: Vec<f64>,
+        alpha: Vec<f64>,
+        alpha_bar: Vec<f64>,
+        rho1: f64,
+        rho2: f64,
+    ) -> LiftedSlab {
+        let m = alpha.len();
+        debug_assert_eq!(phi.len(), m * d);
+        debug_assert_eq!(alpha_bar.len(), m);
+        let mut out = LiftedSlab::new(d, p);
+        out.phi = phi;
+        out.alpha = alpha;
+        out.alpha_bar = alpha_bar;
+        out.rho1 = rho1;
+        out.rho2 = rho2;
+        out.banned.resize(m, 0);
+        out.s.resize(m, 0.0);
+        for i in 0..m {
+            let row = row_of(&out.phi, d, i);
+            out.diag.push(dot(row, row));
+        }
+        for i in 0..m {
+            let g = at(&out.alpha, i) - at(&out.alpha_bar, i);
+            axpy(g, row_of(&out.phi, d, i), &mut out.w);
+        }
+        out.refresh_margins();
+        out
+    }
+
+    /// Absorb a new lifted row while the window is still growing:
+    /// every multiplier rescales by m/(m+1) (the caps rescale by the
+    /// same factor, so the boxes hold **exactly**) and the newcomer
+    /// takes α = 1/(m+1), ᾱ = ε/(m+1) — both sums land exactly on
+    /// their targets. O(D).
+    pub fn push_grown(&mut self, phi_new: &[f64]) {
+        debug_assert_eq!(phi_new.len(), self.d);
+        let m = self.len();
+        let mf1 = (m + 1) as f64;
+        let f = m as f64 / mf1;
+        if m > 0 {
+            self.alpha.iter_mut().for_each(|a| *a *= f);
+            self.alpha_bar.iter_mut().for_each(|b| *b *= f);
+            self.w.iter_mut().for_each(|v| *v *= f);
+        } else {
+            self.w.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let g_new = (1.0 - self.eps) / mf1;
+        axpy(g_new, phi_new, &mut self.w);
+        self.phi.extend_from_slice(phi_new);
+        self.diag.push(dot(phi_new, phi_new));
+        self.alpha.push(1.0 / mf1);
+        self.alpha_bar.push(self.eps / mf1);
+        self.banned.push(0);
+        self.s.push(dot(&self.w, phi_new));
+    }
+
+    /// Steady-state absorb: the newcomer takes over slot `v` AND the
+    /// victim's multipliers (same m, same caps — feasibility is
+    /// transferred, not re-derived). O(D); the following repair sweep
+    /// moves the inherited mass where KKT wants it.
+    pub fn replace_row(&mut self, v: usize, phi_new: &[f64]) {
+        debug_assert_eq!(phi_new.len(), self.d);
+        debug_assert!(v < self.len());
+        let g = at(&self.alpha, v) - at(&self.alpha_bar, v);
+        axpy(-g, row_of(&self.phi, self.d, v), &mut self.w);
+        axpy(g, phi_new, &mut self.w);
+        let start = v * self.d;
+        if let Some(slot) = self.phi.get_mut(start..start + self.d) {
+            slot.copy_from_slice(phi_new);
+        }
+        set_at(&mut self.diag, v, dot(phi_new, phi_new));
+        set_at(&mut self.s, v, dot(&self.w, phi_new));
+    }
+
+    /// Remove resident `v` (unlearning): withdraw its γ from `w`,
+    /// swap-remove its row, then redistribute the withdrawn α/ᾱ mass
+    /// greedily under the **grown** caps of the smaller m (total
+    /// headroom 1/ν − 1 + removed ≥ removed for ν ≤ 1, so this always
+    /// lands the sums exactly back on target). A uniform inflate would
+    /// violate the boxes for ν < 1 — this path never does.
+    pub fn remove_row(&mut self, v: usize) {
+        let m = self.len();
+        debug_assert!(v < m);
+        let a_rm = at(&self.alpha, v);
+        let b_rm = at(&self.alpha_bar, v);
+        let g = a_rm - b_rm;
+        axpy(-g, row_of(&self.phi, self.d, v), &mut self.w);
+        let last = m - 1;
+        if v != last {
+            let src = last * self.d;
+            self.phi.copy_within(src..src + self.d, v * self.d);
+        }
+        self.phi.truncate(last * self.d);
+        self.alpha.swap_remove(v);
+        self.alpha_bar.swap_remove(v);
+        self.diag.swap_remove(v);
+        self.s.swap_remove(v);
+        self.banned.swap_remove(v);
+        if last == 0 {
+            self.w.iter_mut().for_each(|x| *x = 0.0);
+            self.rho1 = 0.0;
+            self.rho2 = 0.0;
+            return;
+        }
+        let (cap_a, cap_b) = self.caps();
+        renorm_mass(&mut self.alpha, 1.0, cap_a, &self.phi, self.d, &mut self.w, 1.0);
+        renorm_mass(
+            &mut self.alpha_bar,
+            self.eps,
+            cap_b,
+            &self.phi,
+            self.d,
+            &mut self.w,
+            -1.0,
+        );
+    }
+
+    /// Recompute every cached margin from `w` (O(m·D)).
+    pub fn refresh_margins(&mut self) {
+        for i in 0..self.s.len() {
+            let v = dot(&self.w, row_of(&self.phi, self.d, i));
+            set_at(&mut self.s, i, v);
+        }
+    }
+
+    /// Recover (ρ1, ρ2) from the current margins + bound pattern.
+    pub fn recover_rho(&mut self) {
+        let (cap_a, cap_b) = self.caps();
+        self.rho1 = recover_plane(&self.s, &self.alpha, cap_a, true);
+        self.rho2 = recover_plane(&self.s, &self.alpha_bar, cap_b, false);
+        if self.rho2 < self.rho1 {
+            let mid = 0.5 * (self.rho1 + self.rho2);
+            self.rho1 = mid;
+            self.rho2 = mid;
+        }
+    }
+
+    /// KKT certificate over **fresh** lifted margins (refreshes the
+    /// cache first): the exact engine's checker applied to the lifted
+    /// Gram's margins, with the same bound-classification tolerance
+    /// convention as [`super::api`].
+    pub fn certify(&mut self) -> Certificate {
+        self.refresh_margins();
+        self.recover_rho();
+        let (cap_a, cap_b) = self.caps();
+        let cls_tol = cap_a.min(cap_b) * 1e-6;
+        validate::report_with_margins(
+            &self.alpha,
+            &self.alpha_bar,
+            &self.s,
+            self.rho1,
+            self.rho2,
+            self.nu1,
+            self.nu2,
+            self.eps,
+            cls_tol,
+        )
+    }
+
+    /// Margin magnitude scale for relative tolerances.
+    fn margin_scale(&self) -> f64 {
+        let m = self.s.len();
+        if m == 0 {
+            return 1.0;
+        }
+        1.0 + self.s.iter().map(|v| v.abs()).sum::<f64>() / m as f64
+    }
+
+    /// Steepest remaining α-transfer gain over the cached margins
+    /// (max s over reducible − min s over increasable; ≤ 0 ⇒ the α
+    /// block satisfies KKT at the current margins).
+    fn gap_alpha(&self) -> f64 {
+        let (cap_a, _) = self.caps();
+        let thr = cap_a * 1e-9;
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for (&si, &ai) in self.s.iter().zip(&self.alpha) {
+            if ai < cap_a - thr {
+                lo = lo.min(si);
+            }
+            if ai > thr {
+                hi = hi.max(si);
+            }
+        }
+        if lo.is_finite() && hi.is_finite() {
+            hi - lo
+        } else {
+            0.0
+        }
+    }
+
+    /// Mirror of [`gap_alpha`](Self::gap_alpha) for the ᾱ block
+    /// (ᾱ mass wants to sit on the highest margins).
+    fn gap_abar(&self) -> f64 {
+        let (_, cap_b) = self.caps();
+        let thr = cap_b * 1e-9;
+        let mut best_up = f64::NEG_INFINITY;
+        let mut worst_held = f64::INFINITY;
+        for (&si, &bi) in self.s.iter().zip(&self.alpha_bar) {
+            if bi < cap_b - thr {
+                best_up = best_up.max(si);
+            }
+            if bi > thr {
+                worst_held = worst_held.min(si);
+            }
+        }
+        if best_up.is_finite() && worst_held.is_finite() {
+            best_up - worst_held
+        } else {
+            0.0
+        }
+    }
+
+    /// Execute one α pair transfer `b → a` given fresh margins.
+    /// Returns false when no descent is possible on this pair.
+    fn do_alpha_pair(&mut self, a: usize, b: usize, sa: f64, sb: f64) -> bool {
+        let (cap_a, _) = self.caps();
+        let gain = sb - sa;
+        if a == b || gain <= 0.0 {
+            return false;
+        }
+        let da = at(&self.diag, a);
+        let db = at(&self.diag, b);
+        let eta = da + db
+            - 2.0 * dot(row_of(&self.phi, self.d, a), row_of(&self.phi, self.d, b));
+        if eta <= 1e-12 * (da + db).max(f64::MIN_POSITIVE) {
+            set_at_u64(&mut self.banned, b, self.epoch);
+            return false;
+        }
+        let room = (cap_a - at(&self.alpha, a)).min(at(&self.alpha, b));
+        let delta = (gain / eta).min(room);
+        if delta <= 0.0 {
+            return false;
+        }
+        add_at(&mut self.alpha, a, delta);
+        add_at(&mut self.alpha, b, -delta);
+        axpy(delta, row_of(&self.phi, self.d, a), &mut self.w);
+        axpy(-delta, row_of(&self.phi, self.d, b), &mut self.w);
+        let fa = dot(&self.w, row_of(&self.phi, self.d, a));
+        let fb = dot(&self.w, row_of(&self.phi, self.d, b));
+        set_at(&mut self.s, a, fa);
+        set_at(&mut self.s, b, fb);
+        true
+    }
+
+    /// Execute one ᾱ pair transfer `b → a` given fresh margins
+    /// (ᾱ carries −1 into γ, so `w` moves the other way).
+    fn do_abar_pair(&mut self, a: usize, b: usize, sa: f64, sb: f64) -> bool {
+        let (_, cap_b) = self.caps();
+        let gain = sa - sb;
+        if a == b || gain <= 0.0 {
+            return false;
+        }
+        let da = at(&self.diag, a);
+        let db = at(&self.diag, b);
+        let eta = da + db
+            - 2.0 * dot(row_of(&self.phi, self.d, a), row_of(&self.phi, self.d, b));
+        if eta <= 1e-12 * (da + db).max(f64::MIN_POSITIVE) {
+            set_at_u64(&mut self.banned, b, self.epoch);
+            return false;
+        }
+        let room = (cap_b - at(&self.alpha_bar, a)).min(at(&self.alpha_bar, b));
+        let delta = (gain / eta).min(room);
+        if delta <= 0.0 {
+            return false;
+        }
+        add_at(&mut self.alpha_bar, a, delta);
+        add_at(&mut self.alpha_bar, b, -delta);
+        axpy(-delta, row_of(&self.phi, self.d, a), &mut self.w);
+        axpy(delta, row_of(&self.phi, self.d, b), &mut self.w);
+        let fa = dot(&self.w, row_of(&self.phi, self.d, a));
+        let fb = dot(&self.w, row_of(&self.phi, self.d, b));
+        set_at(&mut self.s, a, fa);
+        set_at(&mut self.s, b, fb);
+        true
+    }
+
+    /// Greedy α step over the (possibly slightly stale) cached
+    /// margins; the chosen pair is re-margined fresh before the
+    /// update, so staleness only affects selection quality, never
+    /// correctness.
+    fn pair_step_alpha(&mut self) -> bool {
+        let (cap_a, _) = self.caps();
+        let thr = cap_a * 1e-9;
+        let mut a = usize::MAX;
+        let mut b = usize::MAX;
+        let mut s_lo = f64::INFINITY;
+        let mut s_hi = f64::NEG_INFINITY;
+        for (i, ((&si, &ai), &ban)) in
+            self.s.iter().zip(&self.alpha).zip(&self.banned).enumerate()
+        {
+            if ban == self.epoch {
+                continue;
+            }
+            if ai < cap_a - thr && si < s_lo {
+                s_lo = si;
+                a = i;
+            }
+            if ai > thr && si > s_hi {
+                s_hi = si;
+                b = i;
+            }
+        }
+        if a == usize::MAX || b == usize::MAX {
+            return false;
+        }
+        let sa = self.margin_of(a);
+        let sb = self.margin_of(b);
+        self.do_alpha_pair(a, b, sa, sb)
+    }
+
+    /// Greedy ᾱ step (mirror of [`pair_step_alpha`](Self::pair_step_alpha)).
+    fn pair_step_abar(&mut self) -> bool {
+        let (_, cap_b) = self.caps();
+        let thr = cap_b * 1e-9;
+        let mut a = usize::MAX;
+        let mut b = usize::MAX;
+        let mut s_hi = f64::NEG_INFINITY;
+        let mut s_lo = f64::INFINITY;
+        for (i, ((&si, &bi), &ban)) in
+            self.s.iter().zip(&self.alpha_bar).zip(&self.banned).enumerate()
+        {
+            if ban == self.epoch {
+                continue;
+            }
+            if bi < cap_b - thr && si > s_hi {
+                s_hi = si;
+                a = i;
+            }
+            if bi > thr && si < s_lo {
+                s_lo = si;
+                b = i;
+            }
+        }
+        if a == usize::MAX || b == usize::MAX {
+            return false;
+        }
+        let sa = self.margin_of(a);
+        let sb = self.margin_of(b);
+        self.do_abar_pair(a, b, sa, sb)
+    }
+
+    /// One sampled α step (large-m mode): draw a candidate set, fresh
+    /// margins for candidates only, transfer between the sampled
+    /// extremes.
+    fn sampled_step_alpha(&mut self) -> bool {
+        let m = self.len();
+        let (cap_a, _) = self.caps();
+        let thr = cap_a * 1e-9;
+        let mut a = usize::MAX;
+        let mut b = usize::MAX;
+        let mut s_lo = f64::INFINITY;
+        let mut s_hi = f64::NEG_INFINITY;
+        for _ in 0..SAMPLE {
+            let i = self.rng.below(m);
+            let si = self.margin_of(i);
+            set_at(&mut self.s, i, si);
+            let ai = at(&self.alpha, i);
+            if ai < cap_a - thr && si < s_lo {
+                s_lo = si;
+                a = i;
+            }
+            if ai > thr && si > s_hi {
+                s_hi = si;
+                b = i;
+            }
+        }
+        if a == usize::MAX || b == usize::MAX {
+            return false;
+        }
+        self.do_alpha_pair(a, b, s_lo, s_hi)
+    }
+
+    /// One sampled ᾱ step (large-m mode).
+    fn sampled_step_abar(&mut self) -> bool {
+        let m = self.len();
+        let (_, cap_b) = self.caps();
+        let thr = cap_b * 1e-9;
+        let mut a = usize::MAX;
+        let mut b = usize::MAX;
+        let mut s_hi = f64::NEG_INFINITY;
+        let mut s_lo = f64::INFINITY;
+        for _ in 0..SAMPLE {
+            let i = self.rng.below(m);
+            let si = self.margin_of(i);
+            set_at(&mut self.s, i, si);
+            let bi = at(&self.alpha_bar, i);
+            if bi < cap_b - thr && si > s_hi {
+                s_hi = si;
+                a = i;
+            }
+            if bi > thr && si < s_lo {
+                s_lo = si;
+                b = i;
+            }
+        }
+        if a == usize::MAX || b == usize::MAX {
+            return false;
+        }
+        self.do_abar_pair(a, b, s_hi, s_lo)
+    }
+
+    /// Warm-started repair: descend on ½‖w‖² until the transfer gaps
+    /// fall under the relative tolerance or the iteration budget is
+    /// spent. Returns iterations used (≥ 1: the refresh/renormalize
+    /// pass counts as effort).
+    ///
+    /// `m ≤ SCAN_LIMIT`: outer rounds of full margin refresh +
+    /// fp-drift renormalization + deterministic greedy inner sweeps —
+    /// no RNG, ties broken by index, so two identical states repair
+    /// bitwise identically (snapshot continue-parity). Above the
+    /// limit: sampled selection, no full refresh (per-absorb cost
+    /// stays independent of m); full refreshes happen only in
+    /// [`certify`](Self::certify) / report paths.
+    pub fn repair(&mut self, budget: usize) -> usize {
+        let m = self.len();
+        let mut used = 1usize;
+        if m == 0 {
+            return used;
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        let budget = budget.max(1);
+        if m <= SCAN_LIMIT {
+            let mut rounds = 0usize;
+            loop {
+                self.refresh_margins();
+                self.renormalize();
+                let lim = self.tol * self.margin_scale();
+                if (self.gap_alpha() <= lim && self.gap_abar() <= lim)
+                    || used >= budget
+                    || rounds >= 64
+                {
+                    break;
+                }
+                rounds += 1;
+                let inner = m.max(16).min(budget - used);
+                let mut progressed = false;
+                for _ in 0..inner {
+                    let pa = self.pair_step_alpha();
+                    let pb = self.pair_step_abar();
+                    used += 1;
+                    if pa || pb {
+                        progressed = true;
+                    } else {
+                        break;
+                    }
+                    if used >= budget {
+                        break;
+                    }
+                }
+                if !progressed {
+                    break;
+                }
+            }
+            self.refresh_margins();
+            self.renormalize();
+            self.recover_rho();
+        } else {
+            let mut dry = 0usize;
+            while used < budget && dry < 8 {
+                let pa = self.sampled_step_alpha();
+                let pb = self.sampled_step_abar();
+                used += 1;
+                if pa || pb {
+                    dry = 0;
+                } else {
+                    dry += 1;
+                }
+            }
+            self.renormalize();
+            self.recover_rho();
+        }
+        used
+    }
+
+    /// Correct floating-point drift on both sum constraints (the
+    /// structural ops keep the sums exact in exact arithmetic; repeated
+    /// rescales accumulate ~1e-16 per op, folded back here).
+    fn renormalize(&mut self) {
+        let (cap_a, cap_b) = self.caps();
+        renorm_mass(&mut self.alpha, 1.0, cap_a, &self.phi, self.d, &mut self.w, 1.0);
+        renorm_mass(
+            &mut self.alpha_bar,
+            self.eps,
+            cap_b,
+            &self.phi,
+            self.d,
+            &mut self.w,
+            -1.0,
+        );
+    }
+}
+
+/// Checked u64 write (banned-epoch array).
+fn set_at_u64(xs: &mut [u64], i: usize, v: u64) {
+    if let Some(x) = xs.get_mut(i) {
+        *x = v;
+    }
+}
+
+// ---------------------------------------------------- ApproxSolver
+
+/// Hyper-parameters of the approximate engine: the slab parameters
+/// (reusing [`SmoParams`] — ν's, ε, tolerance, budget, seed, sv_tol)
+/// plus the map choice and lifted dimension.
+#[derive(Clone, Copy, Debug)]
+pub struct ApproxParams {
+    /// Slab hyper-parameters + iteration budget + seed.
+    pub smo: SmoParams,
+    /// Which feature map ([`EngineKind::Exact`] is rejected at fit).
+    pub engine: EngineKind,
+    /// Lifted dimension D: landmark count for Nyström (clamped to m),
+    /// feature count for RFF (rounded up to even).
+    pub features: usize,
+}
+
+impl Default for ApproxParams {
+    fn default() -> Self {
+        ApproxParams {
+            smo: SmoParams::default(),
+            engine: EngineKind::Nystroem,
+            features: 64,
+        }
+    }
+}
+
+/// Build the feature map an [`ApproxParams`] choice implies for data
+/// of shape (`m` rows × `d_in` cols). Nyström samples its landmarks
+/// from `x` with a seeded draw (sorted for determinism); RFF needs no
+/// data, only the RBF bandwidth — other kernels are a config error.
+pub fn build_map(
+    params: &ApproxParams,
+    kernel: Kernel,
+    x: &Matrix,
+) -> Result<FeatMap> {
+    match params.engine {
+        EngineKind::Exact => Err(Error::config(
+            "approx engine requires nystroem or rff (exact has its own solvers)",
+        )),
+        EngineKind::Nystroem => {
+            let m = x.rows();
+            if m == 0 {
+                return Err(Error::config("nystroem: empty training set"));
+            }
+            let l = params.features.max(1).min(m);
+            let mut rng = Rng::new(params.smo.seed ^ LANDMARK_SEED_MIX);
+            let mut idx = rng.sample_indices(m, l);
+            idx.sort_unstable();
+            let map = NystroemMap::new(kernel, x.select_rows(&idx))?;
+            Ok(FeatMap::Nystroem(map))
+        }
+        EngineKind::Rff => rff_map(params, kernel, x.cols()),
+    }
+}
+
+/// RFF map for a given input dimension (shared with the streaming
+/// engine, which has no batch matrix at construction time).
+pub fn rff_map(params: &ApproxParams, kernel: Kernel, d_in: usize) -> Result<FeatMap> {
+    let Kernel::Rbf { g } = kernel else {
+        return Err(Error::config(format!(
+            "rff engine requires the rbf kernel, got {}",
+            kernel.family()
+        )));
+    };
+    let p = params.features.max(2);
+    let d_out = p + (p % 2);
+    let map = RffMap::new(d_in, d_out, g, params.smo.seed ^ RFF_SEED_MIX)?;
+    Ok(FeatMap::Rff(map))
+}
+
+/// Export a [`SlabModel`] from a trained lifted state. Nyström folds
+/// back to a **plain kernel model** over its landmarks
+/// (`s(x) = ⟨W^{-1/2}w, k_L(x)⟩` — n_sv ≤ L regardless of m, no
+/// featmap carried); RFF keeps the map and stores `w` as the single
+/// lifted-space support row.
+pub fn export_model(core: &LiftedSlab, map: &FeatMap, sv_tol: f64) -> SlabModel {
+    let (rho1, rho2) = core.rho();
+    match map {
+        FeatMap::Nystroem(m) => {
+            let l = m.landmarks().rows();
+            let folded: Vec<f64> = (0..l)
+                .map(|j| dot(m.wihalf().row(j), core.weights()))
+                .collect();
+            SlabModel::from_dual(
+                m.landmarks(),
+                &folded,
+                rho1,
+                rho2,
+                m.kernel(),
+                sv_tol,
+            )
+        }
+        FeatMap::Rff(r) => SlabModel {
+            x_sv: Matrix::from_vec(1, core.dim_lifted(), core.weights().to_vec()),
+            gamma: vec![1.0],
+            rho1,
+            rho2,
+            kernel: Kernel::Rbf { g: r.g() },
+            featmap: Some(map.clone()),
+        },
+    }
+}
+
+/// The approximate feature-map engine behind the [`Solver`] trait:
+/// lift, train the lifted slab, certify in the lifted space, export.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ApproxSolver {
+    pub params: ApproxParams,
+}
+
+impl ApproxSolver {
+    fn fit_impl(&self, x: &Matrix, kernel: Kernel) -> Result<FitReport> {
+        let t0 = Instant::now();
+        let p = &self.params.smo;
+        super::check_params(x.rows(), p.nu1, p.nu2, p.eps)?;
+        let map = build_map(&self.params, kernel, x)?;
+        let phi = map.map_rows(x);
+        let mut core = LiftedSlab::new(map.d_out(), p);
+        core.batch_init(&phi);
+        let iterations = core.repair(p.max_iter.max(1));
+        let certificate = core.certify();
+        let model = export_model(&core, &map, p.sv_tol);
+        let (rho1, rho2) = core.rho();
+        let alpha = core.alpha().to_vec();
+        let alpha_bar = core.alpha_bar().to_vec();
+        let gamma: Vec<f64> =
+            alpha.iter().zip(&alpha_bar).map(|(a, b)| a - b).collect();
+        let s = core.margins().to_vec();
+        let stats = SolveStats {
+            iterations,
+            objective: core.objective(),
+            max_violation: certificate.max_kkt_violation,
+            seconds: t0.elapsed().as_secs_f64(),
+            cache: CacheStats::default(),
+            kernel_evals: 0,
+        };
+        Ok(FitReport {
+            model,
+            dual: DualSolution { alpha, alpha_bar, gamma, s, rho1, rho2 },
+            stats,
+            certificate,
+            cascade: None,
+            precision: Precision::F64,
+            fell_back: false,
+        })
+    }
+}
+
+impl Solver for ApproxSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Approx
+    }
+
+    /// The approximate engine never consumes a precomputed Gram — the
+    /// whole point is to avoid forming K. The argument is accepted
+    /// (trait uniformity) and deliberately ignored.
+    fn fit_gram(&self, x: &Matrix, kernel: Kernel, _k: &Matrix) -> Result<FitReport> {
+        self.fit_impl(x, kernel)
+    }
+
+    /// Overridden so end-to-end training skips the O(m²) Gram build
+    /// the default implementation would perform.
+    fn fit(&self, x: &Matrix, kernel: Kernel) -> Result<FitReport> {
+        self.fit_impl(x, kernel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+    use crate::metrics::roc_auc;
+
+    fn fit_approx(
+        engine: EngineKind,
+        features: usize,
+        kernel: Kernel,
+        n: usize,
+        seed: u64,
+    ) -> FitReport {
+        let ds = SlabConfig::default().generate(n, seed);
+        let solver = ApproxSolver {
+            params: ApproxParams {
+                engine,
+                features,
+                ..ApproxParams::default()
+            },
+        };
+        solver.fit(&ds.x, kernel).unwrap()
+    }
+
+    #[test]
+    fn batch_fit_is_feasible_and_certified() {
+        for (engine, kernel) in [
+            (EngineKind::Nystroem, Kernel::Linear),
+            (EngineKind::Nystroem, Kernel::Rbf { g: 0.5 }),
+            (EngineKind::Rff, Kernel::Rbf { g: 0.5 }),
+        ] {
+            let r = fit_approx(engine, 32, kernel, 120, 7);
+            assert!(r.stats.iterations > 0);
+            assert!(r.certificate.sum_alpha_violation < 1e-9, "{engine:?}");
+            assert!(r.certificate.sum_alpha_bar_violation < 1e-9, "{engine:?}");
+            assert!(r.certificate.max_box_violation < 1e-12, "{engine:?}");
+            assert!(r.dual.rho2 >= r.dual.rho1, "{engine:?}");
+        }
+    }
+
+    #[test]
+    fn rff_requires_rbf() {
+        let ds = SlabConfig::default().generate(40, 3);
+        let solver = ApproxSolver {
+            params: ApproxParams {
+                engine: EngineKind::Rff,
+                features: 16,
+                ..ApproxParams::default()
+            },
+        };
+        assert!(solver.fit(&ds.x, Kernel::Linear).is_err());
+    }
+
+    #[test]
+    fn exact_engine_kind_is_rejected() {
+        let ds = SlabConfig::default().generate(20, 3);
+        let solver = ApproxSolver {
+            params: ApproxParams {
+                engine: EngineKind::Exact,
+                ..ApproxParams::default()
+            },
+        };
+        assert!(solver.fit(&ds.x, Kernel::Linear).is_err());
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = fit_approx(EngineKind::Rff, 32, Kernel::Rbf { g: 0.5 }, 80, 11);
+        let b = fit_approx(EngineKind::Rff, 32, Kernel::Rbf { g: 0.5 }, 80, 11);
+        assert_eq!(a.dual.rho1.to_bits(), b.dual.rho1.to_bits());
+        assert_eq!(a.dual.rho2.to_bits(), b.dual.rho2.to_bits());
+        for (x, y) in a.dual.alpha.iter().zip(&b.dual.alpha) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn nystroem_model_is_sv_bounded_by_landmarks() {
+        let r = fit_approx(EngineKind::Nystroem, 24, Kernel::Rbf { g: 0.5 }, 200, 5);
+        assert!(r.model.n_sv() <= 24, "n_sv={} > L", r.model.n_sv());
+        assert!(r.model.featmap.is_none(), "nystroem must fold to plain kernel");
+    }
+
+    #[test]
+    fn rff_model_is_single_lifted_row() {
+        let r = fit_approx(EngineKind::Rff, 32, Kernel::Rbf { g: 0.5 }, 200, 5);
+        assert_eq!(r.model.n_sv(), 1);
+        assert_eq!(r.model.x_sv.cols(), 32);
+        assert!(r.model.featmap.is_some());
+    }
+
+    #[test]
+    fn approx_auc_tracks_exact() {
+        // AUC parity at small scale; full Table-1 parity lives in
+        // rust/tests/featmap.rs
+        let cfg = SlabConfig::default();
+        let ds = cfg.generate(160, 13);
+        let eval = cfg.generate_eval(120, 120, 14);
+        let (ev, truth) = (&eval.x, &eval.y);
+        let kernel = Kernel::Rbf { g: 0.5 };
+        let exact = crate::solver::api::Trainer::new(SolverKind::Smo)
+            .kernel(kernel)
+            .fit(&ds.x)
+            .unwrap();
+        let approx = ApproxSolver {
+            params: ApproxParams {
+                engine: EngineKind::Nystroem,
+                features: 48,
+                ..ApproxParams::default()
+            },
+        }
+        .fit(&ds.x, kernel)
+        .unwrap();
+        let s_exact: Vec<f64> =
+            (0..ev.rows()).map(|i| exact.model.margin(ev.row(i))).collect();
+        let s_approx: Vec<f64> =
+            (0..ev.rows()).map(|i| approx.model.margin(ev.row(i))).collect();
+        let auc_exact = roc_auc(truth, &s_exact);
+        let auc_approx = roc_auc(truth, &s_approx);
+        assert!(
+            (auc_exact - auc_approx).abs() < 0.05,
+            "auc exact {auc_exact} vs approx {auc_approx}"
+        );
+    }
+
+    #[test]
+    fn lifted_ops_preserve_invariants() {
+        let p = SmoParams { nu1: 0.5, nu2: 0.1, ..SmoParams::default() };
+        let mut core = LiftedSlab::new(4, &p);
+        let mut rng = Rng::new(3);
+        let mk = |rng: &mut Rng| -> Vec<f64> {
+            (0..4).map(|_| rng.normal()).collect()
+        };
+        let check = |core: &LiftedSlab, ctx: &str| {
+            let m = core.len();
+            if m == 0 {
+                return;
+            }
+            let (cap_a, cap_b) = core.caps();
+            let sa: f64 = core.alpha().iter().sum();
+            let sb: f64 = core.alpha_bar().iter().sum();
+            assert!((sa - 1.0).abs() < 1e-9, "{ctx}: sum alpha {sa}");
+            assert!((sb - core.eps()).abs() < 1e-9, "{ctx}: sum abar {sb}");
+            for (&a, &b) in core.alpha().iter().zip(core.alpha_bar()) {
+                assert!((-1e-12..=cap_a + 1e-12).contains(&a), "{ctx}: alpha {a}");
+                assert!((-1e-12..=cap_b + 1e-12).contains(&b), "{ctx}: abar {b}");
+            }
+        };
+        for i in 0..12 {
+            let x = mk(&mut rng);
+            core.push_grown(&x);
+            check(&core, &format!("push {i}"));
+        }
+        core.repair(4096);
+        check(&core, "after repair");
+        let y = mk(&mut rng);
+        core.replace_row(3, &y);
+        check(&core, "replace");
+        core.remove_row(5);
+        check(&core, "remove");
+        core.remove_row(0);
+        check(&core, "remove head");
+        core.repair(4096);
+        check(&core, "repair after removes");
+        let cert = core.certify();
+        assert!(cert.sum_alpha_violation < 1e-9);
+        assert!(cert.max_box_violation < 1e-12);
+    }
+
+    #[test]
+    fn repair_is_deterministic_below_scan_limit() {
+        let p = SmoParams::default();
+        let ds = SlabConfig::default().generate(60, 21);
+        let map = build_map(
+            &ApproxParams { features: 16, ..ApproxParams::default() },
+            Kernel::Rbf { g: 0.5 },
+            &ds.x,
+        )
+        .unwrap();
+        let phi = map.map_rows(&ds.x);
+        let mut a = LiftedSlab::new(map.d_out(), &p);
+        let mut b = LiftedSlab::new(map.d_out(), &p);
+        a.batch_init(&phi);
+        b.batch_init(&phi);
+        a.repair(2000);
+        b.repair(2000);
+        for (x, y) in a.alpha().iter().zip(b.alpha()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.weights().iter().zip(b.weights()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.rho().0.to_bits(), b.rho().0.to_bits());
+    }
+
+    #[test]
+    fn remove_row_matches_counterexample_regime() {
+        // nu=0.5 with a cap-saturated coordinate: the uniform-inflate
+        // shortcut would overflow the box here — the greedy
+        // redistribution must not
+        let p = SmoParams { nu1: 0.5, nu2: 0.5, ..SmoParams::default() };
+        let mut core = LiftedSlab::new(2, &p);
+        let mut rng = Rng::new(9);
+        for _ in 0..4 {
+            let x: Vec<f64> = (0..2).map(|_| rng.normal()).collect();
+            core.push_grown(&x);
+        }
+        core.repair(512);
+        core.remove_row(1);
+        let (cap_a, _) = core.caps();
+        for &a in core.alpha() {
+            assert!(a <= cap_a + 1e-12, "alpha {a} above cap {cap_a}");
+        }
+        let sa: f64 = core.alpha().iter().sum();
+        assert!((sa - 1.0).abs() < 1e-9);
+    }
+}

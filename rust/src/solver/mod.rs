@@ -32,6 +32,7 @@
 //! signal (three independent algorithms, one optimum).
 
 pub mod api;
+pub mod approx;
 pub mod cascade;
 pub mod ocssvm;
 pub mod ocsvm_smo;

@@ -11,6 +11,7 @@
 //! on a plane (product 0) count as inside.
 
 use crate::data::Dataset;
+use crate::kernel::featmap::{FeatMap, FeatureMap, NystroemMap, RffMap};
 use crate::kernel::Kernel;
 use crate::linalg::Matrix;
 use crate::metrics::Confusion;
@@ -19,7 +20,9 @@ use crate::util::json::Json;
 /// A trained one-class slab SVM.
 #[derive(Clone, Debug)]
 pub struct SlabModel {
-    /// support samples (rows with γ ≠ 0 — non-SVs are dropped at build)
+    /// support samples (rows with γ ≠ 0 — non-SVs are dropped at build).
+    /// When `featmap` is set, each row is a **lifted-space** weight
+    /// vector instead of an input sample (see [`SlabModel::score`]).
     pub x_sv: Matrix,
     /// dual coefficients of the support samples (γ = α − ᾱ)
     pub gamma: Vec<f64>,
@@ -29,6 +32,13 @@ pub struct SlabModel {
     pub rho2: f64,
     /// kernel the model was trained with
     pub kernel: Kernel,
+    /// Feature map for approximate-engine models (DESIGN.md §10).
+    /// `None` for every exact model and for Nyström models, which fold
+    /// back to plain kernel form at export (`s(x) = ⟨W^{-1/2}w, k_L(x)⟩`
+    /// is an ordinary kernel expansion over the landmarks). Only RFF
+    /// models carry a map: `x_sv` is then a single row holding the
+    /// lifted weight vector `w` and `score` evaluates `⟨w, φ(x)⟩`.
+    pub featmap: Option<FeatMap>,
 }
 
 impl SlabModel {
@@ -48,7 +58,7 @@ impl SlabModel {
             .collect();
         let x_sv = x.select_rows(&idx);
         let gamma = idx.iter().map(|&i| gamma_full[i]).collect();
-        SlabModel { x_sv, gamma, rho1, rho2, kernel }
+        SlabModel { x_sv, gamma, rho1, rho2, kernel, featmap: None }
     }
 
     /// Number of support vectors.
@@ -61,8 +71,17 @@ impl SlabModel {
         self.rho2 - self.rho1
     }
 
-    /// Margin s(x) = Σ γᵢ k(xᵢ, x).
+    /// Margin s(x) = Σ γᵢ k(xᵢ, x), or Σ γᵢ ⟨vᵢ, φ(x)⟩ for
+    /// feature-map models (one D-dimensional dot product per row,
+    /// independent of how many samples trained the model).
     pub fn score(&self, x: &[f64]) -> f64 {
+        if let Some(map) = &self.featmap {
+            let mut s = 0.0;
+            for (i, &g) in self.gamma.iter().enumerate() {
+                s += g * map.dot_lifted(x, self.x_sv.row(i));
+            }
+            return s;
+        }
         let mut s = 0.0;
         for (i, &g) in self.gamma.iter().enumerate() {
             s += g * self.kernel.eval(self.x_sv.row(i), x);
@@ -108,30 +127,16 @@ impl SlabModel {
 
     // ------------------------------------------------------------ persistence
 
-    /// Serialize to JSON (gamma, rho's, kernel, support matrix).
+    /// Serialize to JSON (gamma, rho's, kernel, support matrix, and —
+    /// for approximate-engine models — the feature map: RFF persists
+    /// only `(g, seed, d_in, d_out)` and redraws the frequencies
+    /// deterministically on load; Nyström persists its landmarks and
+    /// rebuilds `W^{-1/2}` with the same fixed-order eigensolve).
     pub fn to_json(&self) -> Json {
-        let k = match self.kernel {
-            Kernel::Linear => Json::obj(vec![("family", Json::str("linear"))]),
-            Kernel::Rbf { g } => Json::obj(vec![
-                ("family", Json::str("rbf")),
-                ("g", Json::num(g)),
-            ]),
-            Kernel::Poly { g, c, degree } => Json::obj(vec![
-                ("family", Json::str("poly")),
-                ("g", Json::num(g)),
-                ("c", Json::num(c)),
-                ("degree", Json::num(degree)),
-            ]),
-            Kernel::Sigmoid { g, c } => Json::obj(vec![
-                ("family", Json::str("sigmoid")),
-                ("g", Json::num(g)),
-                ("c", Json::num(c)),
-            ]),
-        };
-        Json::obj(vec![
+        let mut fields = vec![
             ("rho1", Json::num(self.rho1)),
             ("rho2", Json::num(self.rho2)),
-            ("kernel", k),
+            ("kernel", kernel_json(&self.kernel)),
             ("d", Json::num(self.x_sv.cols() as f64)),
             (
                 "gamma",
@@ -143,7 +148,40 @@ impl SlabModel {
                     self.x_sv.data().iter().map(|&v| Json::num(v)).collect(),
                 ),
             ),
-        ])
+        ];
+        match &self.featmap {
+            None => {}
+            Some(FeatMap::Rff(m)) => fields.push((
+                "featmap",
+                Json::obj(vec![
+                    ("family", Json::str("rff")),
+                    ("g", Json::num(m.g())),
+                    ("seed", Json::num(m.seed() as f64)),
+                    ("d_in", Json::num(m.d_in() as f64)),
+                    ("d_out", Json::num(m.d_out() as f64)),
+                ]),
+            )),
+            Some(FeatMap::Nystroem(m)) => fields.push((
+                "featmap",
+                Json::obj(vec![
+                    ("family", Json::str("nystroem")),
+                    ("kernel", kernel_json(&m.kernel())),
+                    ("l", Json::num(m.landmarks().rows() as f64)),
+                    ("d_in", Json::num(m.landmarks().cols() as f64)),
+                    (
+                        "landmarks",
+                        Json::arr(
+                            m.landmarks()
+                                .data()
+                                .iter()
+                                .map(|&v| Json::num(v))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            )),
+        }
+        Json::obj(fields)
     }
 
     /// Deserialize from [`SlabModel::to_json`] output.
@@ -175,17 +213,10 @@ impl SlabModel {
             return Err(Error::data("model json: x_sv shape mismatch"));
         }
         let kj = j.get("kernel").ok_or_else(|| Error::data("missing kernel"))?;
-        let fam = kj
-            .get("family")
-            .and_then(Json::as_str)
-            .ok_or_else(|| Error::data("missing kernel family"))?;
-        let gk = |k: &str| kj.get(k).and_then(Json::as_f64).unwrap_or(0.0);
-        let kernel = match fam {
-            "linear" => Kernel::Linear,
-            "rbf" => Kernel::Rbf { g: gk("g") },
-            "poly" => Kernel::Poly { g: gk("g"), c: gk("c"), degree: gk("degree") },
-            "sigmoid" => Kernel::Sigmoid { g: gk("g"), c: gk("c") },
-            other => return Err(Error::data(format!("unknown kernel {other}"))),
+        let kernel = kernel_from_json(kj)?;
+        let featmap = match j.get("featmap") {
+            None => None,
+            Some(fj) => Some(featmap_from_json(fj)?),
         };
         Ok(SlabModel {
             x_sv: Matrix::from_vec(gamma.len(), d, flat),
@@ -193,6 +224,7 @@ impl SlabModel {
             rho1,
             rho2,
             kernel,
+            featmap,
         })
     }
 
@@ -209,6 +241,94 @@ impl SlabModel {
     }
 }
 
+/// Kernel → JSON object (shared by the model body and featmap blocks).
+fn kernel_json(k: &Kernel) -> Json {
+    match *k {
+        Kernel::Linear => Json::obj(vec![("family", Json::str("linear"))]),
+        Kernel::Rbf { g } => Json::obj(vec![
+            ("family", Json::str("rbf")),
+            ("g", Json::num(g)),
+        ]),
+        Kernel::Poly { g, c, degree } => Json::obj(vec![
+            ("family", Json::str("poly")),
+            ("g", Json::num(g)),
+            ("c", Json::num(c)),
+            ("degree", Json::num(degree)),
+        ]),
+        Kernel::Sigmoid { g, c } => Json::obj(vec![
+            ("family", Json::str("sigmoid")),
+            ("g", Json::num(g)),
+            ("c", Json::num(c)),
+        ]),
+    }
+}
+
+/// Inverse of [`kernel_json`].
+fn kernel_from_json(kj: &Json) -> crate::Result<Kernel> {
+    use crate::error::Error;
+    let fam = kj
+        .get("family")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::data("missing kernel family"))?;
+    let gk = |k: &str| kj.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    match fam {
+        "linear" => Ok(Kernel::Linear),
+        "rbf" => Ok(Kernel::Rbf { g: gk("g") }),
+        "poly" => Ok(Kernel::Poly { g: gk("g"), c: gk("c"), degree: gk("degree") }),
+        "sigmoid" => Ok(Kernel::Sigmoid { g: gk("g"), c: gk("c") }),
+        other => Err(Error::data(format!("unknown kernel {other}"))),
+    }
+}
+
+/// Rebuild a [`FeatMap`] from its model-JSON block. Both maps are
+/// reconstructed deterministically (seeded redraw / fixed-order
+/// eigensolve), so a saved approximate model scores bitwise the same
+/// after load.
+fn featmap_from_json(fj: &Json) -> crate::Result<FeatMap> {
+    use crate::error::Error;
+    let fam = fj
+        .get("family")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::data("featmap json: missing family"))?;
+    let num = |k: &str| -> crate::Result<f64> {
+        fj.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| Error::data(format!("featmap json: missing {k}")))
+    };
+    match fam {
+        "rff" => {
+            let map = RffMap::new(
+                num("d_in")? as usize,
+                num("d_out")? as usize,
+                num("g")?,
+                num("seed")? as u64,
+            )?;
+            Ok(FeatMap::Rff(map))
+        }
+        "nystroem" => {
+            let l = num("l")? as usize;
+            let d = num("d_in")? as usize;
+            let flat: Vec<f64> = fj
+                .get("landmarks")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::data("featmap json: missing landmarks"))?
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect();
+            if l == 0 || d == 0 || flat.len() != l * d {
+                return Err(Error::data("featmap json: landmark shape mismatch"));
+            }
+            let kernel = kernel_from_json(
+                fj.get("kernel")
+                    .ok_or_else(|| Error::data("featmap json: missing kernel"))?,
+            )?;
+            let map = NystroemMap::new(kernel, Matrix::from_vec(l, d, flat))?;
+            Ok(FeatMap::Nystroem(map))
+        }
+        other => Err(Error::data(format!("unknown featmap family {other}"))),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -222,6 +342,7 @@ mod tests {
             rho1: 0.2,
             rho2: 0.8,
             kernel: Kernel::Linear,
+            featmap: None,
         }
     }
 
@@ -280,6 +401,7 @@ mod tests {
             rho1: -0.1,
             rho2: 0.35,
             kernel: Kernel::Rbf { g: 0.8 },
+            featmap: None,
         };
         let j = m.to_json();
         let m2 = SlabModel::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
@@ -287,9 +409,53 @@ mod tests {
         assert_eq!(m2.rho1, m.rho1);
         assert_eq!(m2.kernel, m.kernel);
         assert_eq!(m2.x_sv.data(), m.x_sv.data());
+        assert!(m2.featmap.is_none());
         // identical predictions
         let p = [0.3, 0.4];
         assert!((m.score(&p) - m2.score(&p)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rff_model_json_roundtrip_scores_bitwise() {
+        // an approximate-engine model: x_sv holds the lifted weight
+        // vector, the map is redrawn from (g, seed) on load
+        let map = RffMap::new(2, 8, 0.5, 99).unwrap();
+        let mut rng = crate::util::rng::Rng::new(7);
+        let w: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let m = SlabModel {
+            x_sv: Matrix::from_vec(1, 8, w),
+            gamma: vec![1.0],
+            rho1: -0.2,
+            rho2: 0.4,
+            kernel: Kernel::Linear,
+            featmap: Some(FeatMap::Rff(map)),
+        };
+        let j = m.to_json();
+        let m2 = SlabModel::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert!(matches!(m2.featmap, Some(FeatMap::Rff(_))));
+        for p in [[0.3, 0.4], [-1.0, 2.0], [0.0, 0.0]] {
+            assert_eq!(m.score(&p).to_bits(), m2.score(&p).to_bits());
+            assert_eq!(m.classify(&p), m2.classify(&p));
+        }
+    }
+
+    #[test]
+    fn nystroem_model_json_roundtrip_scores_bitwise() {
+        let x = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 1.0], &[0.5, 0.5]]);
+        let map = NystroemMap::new(Kernel::Rbf { g: 0.7 }, x.clone()).unwrap();
+        let m = SlabModel {
+            x_sv: Matrix::from_rows(&[&[0.4, -0.1, 0.2]]),
+            gamma: vec![1.0],
+            rho1: 0.0,
+            rho2: 0.5,
+            kernel: Kernel::Linear,
+            featmap: Some(FeatMap::Nystroem(map)),
+        };
+        let j = m.to_json();
+        let m2 = SlabModel::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        for p in [[0.3, 0.4], [-1.0, 2.0]] {
+            assert_eq!(m.score(&p).to_bits(), m2.score(&p).to_bits());
+        }
     }
 
     #[test]

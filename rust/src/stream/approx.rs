@@ -1,0 +1,983 @@
+//! Streaming feature-map engine + the exact/approx stream dispatch.
+//!
+//! [`ApproxIncremental`] is the lifted-space counterpart of
+//! [`IncrementalSmo`]: it keeps the slab dual feasible over the
+//! resident set per sample, but on explicit features
+//! `φ(x) ∈ R^D` ([`crate::kernel::featmap`]) with the primal weight
+//! `w = Σγᵢφᵢ` maintained directly ([`LiftedSlab`]). The costs that
+//! matter on an unbounded stream change class:
+//!
+//! * **absorb** — O(D) structural update + a budgeted repair whose
+//!   per-step cost is O(D) (sampled selection above
+//!   [`SCAN_LIMIT`] residents), vs the exact engine's O(m·d) Gram row
+//!   + O(m) mass transfers;
+//! * **score** — one `dot_lifted`, O(d·D), **independent of m** — the
+//!   exact engine's O(|SV|·d) grows with the window;
+//! * **memory** — O(m·D) lifted rows (a 10⁵×64 window ≈ 51 MB) where
+//!   the exact window's Gram is O(m²) (80 GB at m = 10⁵). That is the
+//!   scale unlock: window sizes the exact engine cannot hold
+//!   (`benches/engine.rs`, experiment KA1).
+//!
+//! Map lifecycle: RFF is armed at construction (frequencies depend
+//! only on (d, D, g, seed)). Nyström warms up with a **growing
+//! landmark set** — while m ≤ L every resident is a landmark and each
+//! push rebuilds the map (cheap: m ≤ L ≪ stream length), then the
+//! landmark set freezes at the first push past L and never changes, so
+//! the lifted space is stable from then on. Either way there is no
+//! unarmed state: the KKT certificate (in the lifted space) is
+//! checkable after **every** op, which `rust/tests/stream_invariants.rs`
+//! does.
+//!
+//! [`StreamEngine`] is the small dispatch enum [`super::session`]
+//! holds: exact and approx streams share the session state machine,
+//! drift detection, eviction policies, unlearning, and the persist
+//! layer (format v3 snapshots carry the engine tag + lifted state).
+
+use std::time::Instant;
+
+use crate::error::Error;
+use crate::kernel::featmap::{EngineKind, FeatMap, FeatureMap, NystroemMap};
+use crate::kernel::Kernel;
+use crate::linalg::Matrix;
+use crate::solver::api::FitReport;
+use crate::solver::approx::{rff_map, ApproxParams, LiftedSlab};
+use crate::solver::ocssvm::SlabModel;
+use crate::solver::{validate, SolveStats};
+use crate::Result;
+
+use super::incremental::{IncrementalConfig, IncrementalSmo};
+
+/// Abort on a construction-time config bug (`assert!` is the
+/// invariant-check form the hot-path lint permits). Streams are opened
+/// by operators, not samples — failing at open is the contract.
+fn config_abort(msg: &str) -> ! {
+    assert!(msg.is_empty(), "{msg}");
+    loop {
+        std::hint::spin_loop();
+    }
+}
+
+/// Lifted-space streaming slab: the approx counterpart of
+/// [`IncrementalSmo`], same public surface, O(D) absorbs and
+/// m-independent scoring.
+pub struct ApproxIncremental {
+    cfg: IncrementalConfig,
+    kernel: Kernel,
+    dim: usize,
+    capacity: usize,
+    map: FeatMap,
+    /// Nyström landmark set is final (m grew past L); RFF is always
+    /// frozen (its map never depends on the data)
+    frozen: bool,
+    /// raw resident samples, flat row-major m×dim (landmark warmup
+    /// rebuilds, model retrain datasets, snapshots)
+    points: Vec<f64>,
+    /// stable admit-sequence ids, slot order (same contract as
+    /// [`crate::stream::window::SlidingWindow`])
+    ids: Vec<u64>,
+    admitted: u64,
+    core: LiftedSlab,
+    stats: SolveStats,
+    repair_iterations: u64,
+    budget_frac: f64,
+    last_admit_us: u64,
+    last_repair_us: u64,
+    /// reusable φ(x) buffer — the absorb path allocates nothing once
+    /// warm (lint rule [[R3]])
+    phi_buf: Vec<f64>,
+    /// reusable kernel-row scratch for the Nyström map
+    scratch: Vec<f64>,
+}
+
+impl ApproxIncremental {
+    /// Empty lifted streaming solver. `cfg.engine` must be `nystroem`
+    /// or `rff`; RFF additionally needs the RBF kernel (its frequency
+    /// distribution is the RBF spectral measure) — both are
+    /// construction-time config bugs, asserted here so a misconfigured
+    /// stream fails at open, not mid-stream.
+    pub fn new(
+        kernel: Kernel,
+        capacity: usize,
+        dim: usize,
+        cfg: IncrementalConfig,
+    ) -> ApproxIncremental {
+        assert!(
+            cfg.engine != EngineKind::Exact,
+            "ApproxIncremental requires a nystroem or rff engine \
+             (exact streams use IncrementalSmo)"
+        );
+        let params = ApproxParams {
+            smo: cfg.smo,
+            engine: cfg.engine,
+            features: cfg.features,
+        };
+        // RFF: the full map exists before the first sample. Nyström:
+        // start from a 1-landmark placeholder at the origin — replaced
+        // by the first real push (growing-landmark warmup), never used
+        // to lift anything while empty.
+        let (map, frozen) = match cfg.engine {
+            EngineKind::Rff => match rff_map(&params, kernel, dim) {
+                Ok(m) => (m, true),
+                Err(e) => config_abort(&format!("rff stream: {e}")),
+            },
+            _ => match NystroemMap::new(kernel, Matrix::zeros(1, dim)) {
+                Ok(m) => (FeatMap::Nystroem(m), false),
+                Err(e) => config_abort(&format!("nystroem warmup map: {e}")),
+            },
+        };
+        let d_out = map.d_out();
+        let scratch = vec![0.0; map.scratch_len().max(1)];
+        ApproxIncremental {
+            core: LiftedSlab::new(d_out, &cfg.smo),
+            cfg,
+            kernel,
+            dim,
+            capacity,
+            map,
+            frozen,
+            points: Vec::with_capacity(capacity * dim),
+            ids: Vec::with_capacity(capacity),
+            admitted: 0,
+            stats: SolveStats::default(),
+            repair_iterations: 0,
+            budget_frac: 1.0,
+            last_admit_us: 0,
+            last_repair_us: 0,
+            phi_buf: vec![0.0; d_out],
+            scratch,
+        }
+    }
+
+    /// Reassemble from persisted state (snapshot restore, format v3).
+    /// `map` must already be rebuilt/decoded; `core` is the restored
+    /// lifted dual. The caller (`stream::persist`) validates shapes.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn restore(
+        kernel: Kernel,
+        capacity: usize,
+        dim: usize,
+        cfg: IncrementalConfig,
+        map: FeatMap,
+        frozen: bool,
+        points: Vec<f64>,
+        ids: Vec<u64>,
+        admitted: u64,
+        core: LiftedSlab,
+        repair_iterations: u64,
+    ) -> ApproxIncremental {
+        let d_out = map.d_out();
+        let scratch = vec![0.0; map.scratch_len().max(1)];
+        ApproxIncremental {
+            core,
+            cfg,
+            kernel,
+            dim,
+            capacity,
+            map,
+            frozen,
+            points,
+            ids,
+            admitted,
+            stats: SolveStats::default(),
+            repair_iterations,
+            budget_frac: 1.0,
+            last_admit_us: 0,
+            last_repair_us: 0,
+            phi_buf: vec![0.0; d_out],
+            scratch,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn config(&self) -> &IncrementalConfig {
+        &self.cfg
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The live feature map (landmarks may still be growing while
+    /// `!is_frozen`).
+    pub fn featmap(&self) -> &FeatMap {
+        &self.map
+    }
+
+    /// Nyström landmark set is final (always true for RFF).
+    pub fn is_frozen(&self) -> bool {
+        self.frozen
+    }
+
+    /// The lifted dual core (weights, multipliers, margins).
+    pub fn core(&self) -> &LiftedSlab {
+        &self.core
+    }
+
+    pub fn rho(&self) -> (f64, f64) {
+        self.core.rho()
+    }
+
+    pub fn alpha(&self) -> &[f64] {
+        self.core.alpha()
+    }
+
+    pub fn alpha_bar(&self) -> &[f64] {
+        self.core.alpha_bar()
+    }
+
+    /// Cached lifted margins (slot order).
+    pub fn margins(&self) -> &[f64] {
+        self.core.margins()
+    }
+
+    /// Margins recomputed exactly from `w` (what certificates and
+    /// snapshots use).
+    pub fn fresh_margins(&self) -> Vec<f64> {
+        (0..self.len()).map(|i| self.core.margin_of(i)).collect()
+    }
+
+    pub fn last_stats(&self) -> &SolveStats {
+        &self.stats
+    }
+
+    pub fn repair_iterations(&self) -> u64 {
+        self.repair_iterations
+    }
+
+    /// Wall-clock split of the most recent push, `(admit_us,
+    /// repair_us)` — same contract as
+    /// [`IncrementalSmo::last_stage_us`].
+    pub fn last_stage_us(&self) -> (u64, u64) {
+        (self.last_admit_us, self.last_repair_us)
+    }
+
+    /// Scale the per-repair iteration budget; same clamp contract as
+    /// [`IncrementalSmo::set_repair_budget_frac`].
+    pub fn set_repair_budget_frac(&mut self, frac: f64) {
+        self.budget_frac =
+            if frac.is_finite() { frac.clamp(0.25, 1.0) } else { 1.0 };
+    }
+
+    /// Stable ids in slot order.
+    pub fn ids(&self) -> &[u64] {
+        &self.ids
+    }
+
+    /// Stable id of slot `i`.
+    pub fn id(&self, i: usize) -> u64 {
+        self.ids.get(i).copied().unwrap_or(u64::MAX)
+    }
+
+    /// Slot currently holding stable id `id`.
+    pub fn slot_of_id(&self, id: u64) -> Option<usize> {
+        self.ids.iter().position(|&v| v == id)
+    }
+
+    /// Samples admitted over the stream's lifetime.
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    /// Raw resident sample in slot `i`.
+    pub fn point(&self, i: usize) -> &[f64] {
+        let start = i * self.dim;
+        self.points.get(start..start + self.dim).unwrap_or(&[])
+    }
+
+    /// Copy of the resident samples as a matrix (retrain datasets,
+    /// snapshots).
+    pub fn matrix(&self) -> Matrix {
+        Matrix::from_vec(self.len(), self.dim, self.points.clone())
+    }
+
+    /// Score an arbitrary point under the current lifted dual:
+    /// `⟨w, φ(x)⟩` — O(d·D), **independent of the resident count** (the
+    /// property experiment KA1 pins).
+    pub fn score(&self, x: &[f64]) -> f64 {
+        self.map.dot_lifted(x, self.core.weights())
+    }
+
+    fn effective_repair_budget(&self) -> usize {
+        let scaled =
+            (self.cfg.repair_max_iter as f64 * self.budget_frac) as usize;
+        scaled.max(1024).min(self.cfg.repair_max_iter.max(1))
+    }
+
+    /// Absorb one sample: lift, admit (evicting the configured
+    /// policy's victim once full), repair, all in lifted space.
+    /// Returns the absorbed sample's stable id — the same contract as
+    /// [`IncrementalSmo::push`].
+    pub fn push(&mut self, x: &[f64]) -> Result<u64> {
+        if x.len() != self.dim {
+            return Err(Error::data(format!(
+                "sample dim {} != stream dim {}",
+                x.len(),
+                self.dim
+            )));
+        }
+        let t0 = Instant::now();
+        let id = self.admitted;
+        if self.len() >= self.capacity.max(1) {
+            // steady state: policy picks the victim, the newcomer takes
+            // its slot AND its multipliers (exact transfer, O(D))
+            let victim = self.cfg.policy.policy().victim(
+                &self.ids,
+                self.core.alpha(),
+                self.core.alpha_bar(),
+            );
+            crate::obs::record(
+                crate::obs::EventKind::Evict,
+                0,
+                0,
+                u32::MAX,
+                self.id(victim),
+            );
+            self.lift_into_buf(x);
+            let row = std::mem::take(&mut self.phi_buf);
+            self.core.replace_row(victim, &row);
+            self.phi_buf = row;
+            let start = victim * self.dim;
+            if let Some(slot) = self.points.get_mut(start..start + self.dim) {
+                slot.copy_from_slice(x);
+            }
+            if let Some(slot) = self.ids.get_mut(victim) {
+                *slot = id;
+            }
+        } else if self.frozen {
+            // growth phase, stable map: O(D) rescale-push
+            self.lift_into_buf(x);
+            let row = std::mem::take(&mut self.phi_buf);
+            self.core.push_grown(&row);
+            self.phi_buf = row;
+            self.points.extend_from_slice(x);
+            self.ids.push(id);
+        } else {
+            // Nyström warmup: the newcomer joins the landmark set and
+            // the whole lifted state rebuilds in the grown space
+            self.points.extend_from_slice(x);
+            self.ids.push(id);
+            self.grow_landmarks()?;
+        }
+        self.admitted += 1;
+        if self.admitted % self.cfg.refresh_every.max(1) == 0 {
+            self.core.refresh_margins();
+        }
+        self.last_admit_us = t0.elapsed().as_micros() as u64;
+        let t1 = Instant::now();
+        let used = self.core.repair(self.effective_repair_budget());
+        self.last_repair_us = t1.elapsed().as_micros() as u64;
+        self.repair_iterations += used as u64;
+        self.stats = SolveStats {
+            iterations: used,
+            objective: self.core.objective(),
+            max_violation: 0.0,
+            seconds: t1.elapsed().as_secs_f64(),
+            ..SolveStats::default()
+        };
+        Ok(id)
+    }
+
+    /// φ(x) into the reusable buffer (no allocation).
+    fn lift_into_buf(&mut self, x: &[f64]) {
+        self.map.map_into(x, &mut self.scratch, &mut self.phi_buf);
+    }
+
+    /// Growing-landmark warmup step: rebuild the map with landmarks =
+    /// **all** residents (the newest included), re-lift every resident
+    /// into the grown space, and transfer the dual by the same
+    /// m/(m+1) rescale the frozen push uses — feasibility is exact,
+    /// optimality is restored by the caller's repair. Freezes the
+    /// landmark set once m reaches the configured budget.
+    fn grow_landmarks(&mut self) -> Result<()> {
+        let m = self.len();
+        let x = Matrix::from_vec(m, self.dim, self.points.clone());
+        let map = NystroemMap::new(self.kernel, x.clone())?;
+        let d_out = map.d_out();
+        self.map = FeatMap::Nystroem(map);
+        self.scratch.resize(self.map.scratch_len().max(1), 0.0);
+        self.phi_buf.resize(d_out, 0.0);
+        let phi = self.map.map_rows(&x);
+        // rescale the previous dual to the grown m and seed the
+        // newcomer exactly as push_grown does — in the NEW space
+        let mf = m as f64;
+        let f = (m - 1) as f64 / mf;
+        let mut alpha: Vec<f64> =
+            self.core.alpha().iter().map(|a| a * f).collect();
+        let mut alpha_bar: Vec<f64> =
+            self.core.alpha_bar().iter().map(|b| b * f).collect();
+        if m == 1 {
+            alpha.push(1.0);
+            alpha_bar.push(self.core.eps());
+        } else {
+            alpha.push(1.0 / mf);
+            alpha_bar.push(self.core.eps() / mf);
+        }
+        let (rho1, rho2) = self.core.rho();
+        self.core = LiftedSlab::restore(
+            d_out,
+            &self.cfg.smo,
+            phi.data().to_vec(),
+            alpha,
+            alpha_bar,
+            rho1,
+            rho2,
+        );
+        if m >= self.cfg.features.max(1) {
+            self.frozen = true;
+        }
+        Ok(())
+    }
+
+    /// Targeted unlearning by stable id — same contract and error
+    /// taxonomy as [`IncrementalSmo::forget`].
+    pub fn forget(&mut self, id: u64) -> Result<()> {
+        self.forget_many(std::slice::from_ref(&id))
+    }
+
+    /// Batch unlearning with a single repair sweep — same
+    /// all-or-nothing validation as [`IncrementalSmo::forget_many`].
+    /// In the lifted space a removal is O(D): withdraw the victim's γ
+    /// from `w`, swap-remove its row, redistribute its mass under the
+    /// grown caps.
+    pub fn forget_many(&mut self, ids: &[u64]) -> Result<()> {
+        if ids.is_empty() {
+            return Ok(());
+        }
+        let mut bad: Option<(u64, bool)> = None;
+        for (k, &id) in ids.iter().enumerate() {
+            if self.slot_of_id(id).is_none() {
+                bad = Some((id, false));
+                break;
+            }
+            if ids.get(..k).is_some_and(|seen| seen.contains(&id)) {
+                bad = Some((id, true));
+                break;
+            }
+        }
+        if let Some((id, duplicate)) = bad {
+            return Err(Error::unlearning(if duplicate {
+                format!("sample id {id} appears twice in the forget batch")
+            } else {
+                format!(
+                    "sample id {id} is not resident (never admitted, already \
+                     evicted, or already forgotten)"
+                )
+            }));
+        }
+        if self.len() <= ids.len() {
+            return Err(Error::unlearning(format!(
+                "cannot forget all {} resident samples: an empty window has \
+                 no feasible dual (close the stream instead)",
+                self.len()
+            )));
+        }
+        for &id in ids {
+            // re-resolve per iteration: earlier swap-removes remap slots
+            let Some(slot) = self.slot_of_id(id) else { continue };
+            self.core.remove_row(slot);
+            let m = self.len();
+            let last = m - 1;
+            if slot != last {
+                let src = last * self.dim;
+                self.points.copy_within(src..src + self.dim, slot * self.dim);
+            }
+            self.points.truncate(last * self.dim);
+            self.ids.swap_remove(slot);
+        }
+        let used = self.core.repair(self.effective_repair_budget());
+        self.repair_iterations += used as u64;
+        Ok(())
+    }
+
+    /// The current model — Nyström folds to a plain kernel model over
+    /// its ≤ L landmarks, RFF carries its map; either way model size
+    /// and scoring cost are independent of the resident count.
+    pub fn model(&self) -> SlabModel {
+        crate::solver::approx::export_model(
+            &self.core,
+            &self.map,
+            self.cfg.smo.sv_tol,
+        )
+    }
+
+    /// The uniform [`FitReport`] with the KKT certificate evaluated on
+    /// **fresh lifted margins** — the exact engine's checker applied in
+    /// the space the slab was actually trained in.
+    pub fn report(&self) -> FitReport {
+        let p = &self.cfg.smo;
+        let m = self.len().max(1) as f64;
+        let cap_a = 1.0 / (p.nu1 * m);
+        let cap_b = p.eps / (p.nu2 * m);
+        let s = self.fresh_margins();
+        let (rho1, rho2) = self.core.rho();
+        let cls_tol = cap_a.min(cap_b) * 1e-6;
+        let certificate = validate::report_with_margins(
+            self.core.alpha(),
+            self.core.alpha_bar(),
+            &s,
+            rho1,
+            rho2,
+            p.nu1,
+            p.nu2,
+            p.eps,
+            cls_tol,
+        );
+        let alpha = self.core.alpha().to_vec();
+        let alpha_bar = self.core.alpha_bar().to_vec();
+        let gamma: Vec<f64> =
+            alpha.iter().zip(&alpha_bar).map(|(a, b)| a - b).collect();
+        let mut stats = self.stats;
+        stats.objective = self.core.objective();
+        stats.max_violation = certificate.max_kkt_violation;
+        FitReport {
+            model: self.model(),
+            dual: crate::solver::api::DualSolution {
+                alpha,
+                alpha_bar,
+                gamma,
+                s,
+                rho1,
+                rho2,
+            },
+            stats,
+            certificate,
+            cascade: None,
+            precision: crate::kernel::Precision::F64,
+            fell_back: false,
+        }
+    }
+}
+
+// ------------------------------------------------------ StreamEngine
+
+/// The per-stream training engine: exact windowed SMO or the lifted
+/// feature-map solver, behind one dispatch so
+/// [`super::session::StreamSession`] and the persist layer are
+/// engine-agnostic.
+pub enum StreamEngine {
+    /// Exact Gram-windowed incremental SMO.
+    Exact(IncrementalSmo),
+    /// Lifted feature-map engine (Nyström / RFF).
+    Approx(ApproxIncremental),
+}
+
+impl StreamEngine {
+    /// Construct the engine `cfg.engine` names.
+    pub fn new(
+        kernel: Kernel,
+        capacity: usize,
+        dim: usize,
+        cfg: IncrementalConfig,
+    ) -> StreamEngine {
+        match cfg.engine {
+            EngineKind::Exact => StreamEngine::Exact(IncrementalSmo::new(
+                kernel, capacity, dim, cfg,
+            )),
+            _ => StreamEngine::Approx(ApproxIncremental::new(
+                kernel, capacity, dim, cfg,
+            )),
+        }
+    }
+
+    /// Which engine is running.
+    pub fn engine_kind(&self) -> EngineKind {
+        match self {
+            StreamEngine::Exact(_) => EngineKind::Exact,
+            StreamEngine::Approx(a) => a.config().engine,
+        }
+    }
+
+    /// The exact engine, when that is what is running.
+    pub fn as_exact(&self) -> Option<&IncrementalSmo> {
+        match self {
+            StreamEngine::Exact(e) => Some(e),
+            StreamEngine::Approx(_) => None,
+        }
+    }
+
+    /// The approx engine, when that is what is running.
+    pub fn as_approx(&self) -> Option<&ApproxIncremental> {
+        match self {
+            StreamEngine::Exact(_) => None,
+            StreamEngine::Approx(a) => Some(a),
+        }
+    }
+
+    /// Whether drift-escalated cascade retrains make sense for this
+    /// engine: the exact stream's retrain re-solves the window batch;
+    /// the approx engine has no batch retrain path yet (its repair IS
+    /// the optimizer), so sessions suppress retrain escalation.
+    pub fn supports_retrain(&self) -> bool {
+        matches!(self, StreamEngine::Exact(_))
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            StreamEngine::Exact(e) => e.len(),
+            StreamEngine::Approx(a) => a.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn config(&self) -> &IncrementalConfig {
+        match self {
+            StreamEngine::Exact(e) => e.config(),
+            StreamEngine::Approx(a) => a.config(),
+        }
+    }
+
+    pub fn rho(&self) -> (f64, f64) {
+        match self {
+            StreamEngine::Exact(e) => e.rho(),
+            StreamEngine::Approx(a) => a.rho(),
+        }
+    }
+
+    pub fn alpha(&self) -> &[f64] {
+        match self {
+            StreamEngine::Exact(e) => e.alpha(),
+            StreamEngine::Approx(a) => a.alpha(),
+        }
+    }
+
+    pub fn alpha_bar(&self) -> &[f64] {
+        match self {
+            StreamEngine::Exact(e) => e.alpha_bar(),
+            StreamEngine::Approx(a) => a.alpha_bar(),
+        }
+    }
+
+    pub fn margins(&self) -> &[f64] {
+        match self {
+            StreamEngine::Exact(e) => e.margins(),
+            StreamEngine::Approx(a) => a.margins(),
+        }
+    }
+
+    pub fn fresh_margins(&self) -> Vec<f64> {
+        match self {
+            StreamEngine::Exact(e) => e.fresh_margins(),
+            StreamEngine::Approx(a) => a.fresh_margins(),
+        }
+    }
+
+    pub fn last_stats(&self) -> &SolveStats {
+        match self {
+            StreamEngine::Exact(e) => e.last_stats(),
+            StreamEngine::Approx(a) => a.last_stats(),
+        }
+    }
+
+    pub fn repair_iterations(&self) -> u64 {
+        match self {
+            StreamEngine::Exact(e) => e.repair_iterations(),
+            StreamEngine::Approx(a) => a.repair_iterations(),
+        }
+    }
+
+    pub fn last_stage_us(&self) -> (u64, u64) {
+        match self {
+            StreamEngine::Exact(e) => e.last_stage_us(),
+            StreamEngine::Approx(a) => a.last_stage_us(),
+        }
+    }
+
+    pub fn set_repair_budget_frac(&mut self, frac: f64) {
+        match self {
+            StreamEngine::Exact(e) => e.set_repair_budget_frac(frac),
+            StreamEngine::Approx(a) => a.set_repair_budget_frac(frac),
+        }
+    }
+
+    pub fn score(&self, x: &[f64]) -> f64 {
+        match self {
+            StreamEngine::Exact(e) => e.score(x),
+            StreamEngine::Approx(a) => a.score(x),
+        }
+    }
+
+    pub fn push(&mut self, x: &[f64]) -> Result<u64> {
+        match self {
+            StreamEngine::Exact(e) => e.push(x),
+            StreamEngine::Approx(a) => a.push(x),
+        }
+    }
+
+    pub fn forget(&mut self, id: u64) -> Result<()> {
+        match self {
+            StreamEngine::Exact(e) => e.forget(id),
+            StreamEngine::Approx(a) => a.forget(id),
+        }
+    }
+
+    pub fn forget_many(&mut self, ids: &[u64]) -> Result<()> {
+        match self {
+            StreamEngine::Exact(e) => e.forget_many(ids),
+            StreamEngine::Approx(a) => a.forget_many(ids),
+        }
+    }
+
+    pub fn model(&self) -> SlabModel {
+        match self {
+            StreamEngine::Exact(e) => e.model(),
+            StreamEngine::Approx(a) => a.model(),
+        }
+    }
+
+    pub fn report(&self) -> FitReport {
+        match self {
+            StreamEngine::Exact(e) => e.report(),
+            StreamEngine::Approx(a) => a.report(),
+        }
+    }
+
+    /// Copy of the resident samples (retrain datasets, snapshots).
+    pub fn matrix(&self) -> Matrix {
+        match self {
+            StreamEngine::Exact(e) => e.window().matrix(),
+            StreamEngine::Approx(a) => a.matrix(),
+        }
+    }
+
+    /// Stable ids in slot order.
+    pub fn ids(&self) -> Vec<u64> {
+        match self {
+            StreamEngine::Exact(e) => e.window().ids().to_vec(),
+            StreamEngine::Approx(a) => a.ids().to_vec(),
+        }
+    }
+
+    /// Stable id of slot `i`.
+    pub fn id(&self, i: usize) -> u64 {
+        match self {
+            StreamEngine::Exact(e) => e.window().id(i),
+            StreamEngine::Approx(a) => a.id(i),
+        }
+    }
+
+    /// Slot currently holding stable id `id`.
+    pub fn slot_of_id(&self, id: u64) -> Option<usize> {
+        match self {
+            StreamEngine::Exact(e) => e.window().slot_of_id(id),
+            StreamEngine::Approx(a) => a.slot_of_id(id),
+        }
+    }
+
+    /// Samples admitted over the stream's lifetime.
+    pub fn admitted(&self) -> u64 {
+        match self {
+            StreamEngine::Exact(e) => e.window().admitted(),
+            StreamEngine::Approx(a) => a.admitted(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SlabConfig;
+    use crate::stream::policy::PolicyKind;
+
+    fn cfg(engine: EngineKind, features: usize) -> IncrementalConfig {
+        IncrementalConfig { engine, features, ..IncrementalConfig::default() }
+    }
+
+    fn feasible(a: &ApproxIncremental, ctx: &str) {
+        let m = a.len();
+        if m == 0 {
+            return;
+        }
+        let p = &a.config().smo;
+        let cap_a = 1.0 / (p.nu1 * m as f64);
+        let cap_b = p.eps / (p.nu2 * m as f64);
+        let sa: f64 = a.alpha().iter().sum();
+        let sb: f64 = a.alpha_bar().iter().sum();
+        assert!((sa - 1.0).abs() < 1e-9, "{ctx}: sum alpha {sa}");
+        assert!((sb - p.eps).abs() < 1e-9, "{ctx}: sum abar {sb}");
+        for (&x, &y) in a.alpha().iter().zip(a.alpha_bar()) {
+            assert!(x >= -1e-12 && x <= cap_a + 1e-12, "{ctx}: alpha {x}");
+            assert!(y >= -1e-12 && y <= cap_b + 1e-12, "{ctx}: abar {y}");
+        }
+    }
+
+    #[test]
+    fn lifecycle_grow_steady_forget_both_engines() {
+        let ds = SlabConfig::default().generate(60, 3);
+        for engine in [EngineKind::Nystroem, EngineKind::Rff] {
+            let mut a = ApproxIncremental::new(
+                Kernel::Rbf { g: 0.5 },
+                24,
+                2,
+                cfg(engine, 8),
+            );
+            let mut kept = Vec::new();
+            for i in 0..40 {
+                let id = a.push(ds.x.row(i)).unwrap();
+                if i % 7 == 0 {
+                    kept.push(id);
+                }
+                feasible(&a, &format!("{engine:?} push {i}"));
+            }
+            assert_eq!(a.len(), 24);
+            assert_eq!(a.admitted(), 40);
+            // forget still-resident ids only
+            let resident: Vec<u64> = kept
+                .into_iter()
+                .filter(|&id| a.slot_of_id(id).is_some())
+                .take(2)
+                .collect();
+            if !resident.is_empty() {
+                a.forget_many(&resident).unwrap();
+                feasible(&a, &format!("{engine:?} after forget"));
+            }
+            let r = a.report();
+            assert!(r.certificate.sum_alpha_violation < 1e-9, "{engine:?}");
+            assert!(r.certificate.max_box_violation < 1e-12, "{engine:?}");
+        }
+    }
+
+    #[test]
+    fn nystroem_landmarks_freeze_at_budget() {
+        let ds = SlabConfig::default().generate(30, 5);
+        let mut a = ApproxIncremental::new(
+            Kernel::Linear,
+            20,
+            2,
+            cfg(EngineKind::Nystroem, 6),
+        );
+        for i in 0..4 {
+            a.push(ds.x.row(i)).unwrap();
+        }
+        assert!(!a.is_frozen(), "still warming: m < L");
+        for i in 4..10 {
+            a.push(ds.x.row(i)).unwrap();
+        }
+        assert!(a.is_frozen(), "past the landmark budget");
+        let l = match a.featmap() {
+            FeatMap::Nystroem(n) => n.landmarks().rows(),
+            FeatMap::Rff(_) => unreachable!("nystroem stream"),
+        };
+        assert_eq!(l, 6);
+        // frozen landmarks never change afterwards
+        for i in 10..20 {
+            a.push(ds.x.row(i)).unwrap();
+        }
+        let l2 = match a.featmap() {
+            FeatMap::Nystroem(n) => n.landmarks().rows(),
+            FeatMap::Rff(_) => unreachable!("nystroem stream"),
+        };
+        assert_eq!(l2, 6);
+    }
+
+    #[test]
+    fn scoring_is_resident_count_independent_in_shape() {
+        // the model exported at m=8 and m=64 has identical scoring
+        // structure (same n_sv bound) — the structural half of KA1
+        let ds = SlabConfig::default().generate(80, 9);
+        let mut a = ApproxIncremental::new(
+            Kernel::Rbf { g: 0.5 },
+            64,
+            2,
+            cfg(EngineKind::Rff, 16),
+        );
+        for i in 0..8 {
+            a.push(ds.x.row(i)).unwrap();
+        }
+        let small = a.model();
+        for i in 8..80 {
+            a.push(ds.x.row(i)).unwrap();
+        }
+        let large = a.model();
+        assert_eq!(small.n_sv(), 1);
+        assert_eq!(large.n_sv(), 1);
+        assert_eq!(small.x_sv.cols(), large.x_sv.cols());
+    }
+
+    #[test]
+    fn forget_rejects_bad_ids_untouched() {
+        let ds = SlabConfig::default().generate(10, 7);
+        let mut a = ApproxIncremental::new(
+            Kernel::Rbf { g: 0.5 },
+            8,
+            2,
+            cfg(EngineKind::Rff, 8),
+        );
+        for i in 0..6 {
+            a.push(ds.x.row(i)).unwrap();
+        }
+        let before: Vec<f64> = a.alpha().to_vec();
+        assert!(a.forget(999).is_err());
+        assert!(a.forget_many(&[0, 0]).is_err());
+        assert!(a.forget_many(&[0, 1, 2, 3, 4, 5]).is_err());
+        assert_eq!(a.alpha(), &before[..], "rejected ops must not mutate");
+    }
+
+    #[test]
+    fn stream_engine_dispatch_round_trip() {
+        let ds = SlabConfig::default().generate(20, 11);
+        let mut exact = StreamEngine::new(
+            Kernel::Linear,
+            16,
+            2,
+            IncrementalConfig::default(),
+        );
+        let mut approx = StreamEngine::new(
+            Kernel::Rbf { g: 0.5 },
+            16,
+            2,
+            cfg(EngineKind::Rff, 8),
+        );
+        assert!(exact.as_exact().is_some() && exact.as_approx().is_none());
+        assert!(approx.as_approx().is_some() && approx.as_exact().is_none());
+        assert!(exact.supports_retrain());
+        assert!(!approx.supports_retrain());
+        for i in 0..10 {
+            exact.push(ds.x.row(i)).unwrap();
+            approx.push(ds.x.row(i)).unwrap();
+        }
+        assert_eq!(exact.len(), 10);
+        assert_eq!(approx.len(), 10);
+        assert_eq!(exact.ids().len(), 10);
+        assert_eq!(approx.admitted(), 10);
+        assert_eq!(approx.matrix().rows(), 10);
+        let _ = exact.model();
+        let _ = approx.model();
+    }
+
+    #[test]
+    fn interior_first_policy_composes_with_approx() {
+        let ds = SlabConfig::default().generate(40, 13);
+        let mut a = ApproxIncremental::new(
+            Kernel::Rbf { g: 0.5 },
+            12,
+            2,
+            IncrementalConfig {
+                policy: PolicyKind::InteriorFirst,
+                ..cfg(EngineKind::Nystroem, 8)
+            },
+        );
+        for i in 0..40 {
+            a.push(ds.x.row(i)).unwrap();
+            feasible(&a, &format!("interior-first push {i}"));
+        }
+        assert_eq!(a.len(), 12);
+    }
+}

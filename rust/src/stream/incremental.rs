@@ -36,6 +36,7 @@
 //! unchanged on a streamed model.
 
 use crate::error::Error;
+use crate::kernel::featmap::EngineKind;
 use crate::kernel::{Kernel, Precision};
 use crate::solver::api::{DualSolution, FitReport};
 use crate::solver::ocssvm::SlabModel;
@@ -72,6 +73,16 @@ pub struct IncrementalConfig {
     /// semantic config, and is deliberately excluded from snapshot
     /// config fingerprints.
     pub precision: Precision,
+    /// training engine for the stream: [`EngineKind::Exact`] runs this
+    /// module's windowed SMO; `nystroem` / `rff` run the lifted
+    /// feature-map engine ([`super::approx::ApproxIncremental`]) whose
+    /// per-absorb and scoring cost are independent of the resident
+    /// count. Part of the snapshot config fingerprint (format v3;
+    /// v2 snapshots decode as `exact`).
+    pub engine: EngineKind,
+    /// lifted dimension D for the approx engines (landmark count for
+    /// Nyström, feature count for RFF); ignored when `engine` is exact
+    pub features: usize,
 }
 
 impl Default for IncrementalConfig {
@@ -82,6 +93,8 @@ impl Default for IncrementalConfig {
             refresh_every: 1024,
             policy: PolicyKind::Fifo,
             precision: Precision::F64,
+            engine: EngineKind::Exact,
+            features: 64,
         }
     }
 }
@@ -704,6 +717,7 @@ impl IncrementalSmo {
             rho1: self.rho1,
             rho2: self.rho2,
             kernel: self.window.kernel(),
+            featmap: None,
         }
     }
 

@@ -81,6 +81,7 @@
 //! }
 //! ```
 
+pub mod approx;
 pub mod drift;
 pub mod incremental;
 pub mod manager;
@@ -90,6 +91,7 @@ pub mod session;
 pub(crate) mod shard;
 pub mod window;
 
+pub use approx::{ApproxIncremental, StreamEngine};
 pub use drift::{DriftConfig, DriftEvent, DriftMonitor};
 pub use incremental::{IncrementalConfig, IncrementalSmo};
 pub use manager::{

@@ -17,19 +17,32 @@
 //! [ magic "SLABSNAP" | format version u32 | config fingerprint u64 ]
 //! [ name | weight | last registry version ]
 //! [ config section: kernel, dims, SMO/incremental/drift parameters,
-//!   eviction policy (v2) ]
+//!   eviction policy (v2), engine + lifted feature budget (v3) ]
 //! [ state: sample ids (v2), samples, α, ᾱ, s, ρ1, ρ2, drift baseline,
-//!   counters (v2 adds forgets), gram checksum ]
+//!   counters (v2 adds forgets), gram checksum, approx resume block
+//!   (v3, approx engines only: freeze flag + frozen Nyström landmarks) ]
 //! [ payload checksum u64 over every preceding byte ]
 //! ```
 //!
-//! This build writes **format v2** (eviction-policy tag in the config
-//! section; stable per-sample ids and the forget counter in the state)
-//! and still reads v1: a v1 snapshot decodes as the [`PolicyKind::Fifo`]
-//! policy with ids synthesized from the ring cursor — exactly the
-//! identities the v1 writer's FIFO window held, so a restored v1
-//! session evicts and forgets identically to one that never restarted.
-//! Re-encoding a decoded v1 snapshot produces its canonical v2 form.
+//! This build writes **format v3** (solver-engine tag + lifted feature
+//! budget in the config section, and — for `nystroem`/`rff` streams —
+//! an approx resume block in the state). It still reads v2 (which
+//! predates the approximate engines, so every v2 stream decodes as the
+//! exact engine) and v1: a v1 snapshot decodes as the
+//! [`PolicyKind::Fifo`] policy with ids synthesized from the ring
+//! cursor — exactly the identities the v1 writer's FIFO window held,
+//! so a restored v1 session evicts and forgets identically to one that
+//! never restarted. Re-encoding a decoded v1/v2 snapshot produces its
+//! canonical v3 form.
+//!
+//! Approx streams persist no lifted state beyond the dual: the RFF map
+//! is fully reconstructible from the config (seed, bandwidth, feature
+//! budget), a frozen Nyström map from its stored landmark rows, and a
+//! still-warming Nyström map from the resident samples themselves (its
+//! landmark set *is* the resident set until the budget is reached).
+//! The `gram_checksum` slot doubles as a checksum over the re-lifted
+//! feature rows, so the rebuilt map is verified exactly like the
+//! rebuilt Gram.
 //!
 //! All integers are little-endian; floats are IEEE-754 bit patterns, so
 //! a snapshot round-trips **bitwise**. The trailing payload checksum
@@ -61,11 +74,17 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use crate::error::Error;
+use crate::kernel::featmap::{
+    EngineKind, FeatMap, FeatureMap, NystroemMap,
+};
 use crate::kernel::{Kernel, Precision};
+use crate::linalg::Matrix;
+use crate::solver::approx::{rff_map, ApproxParams, LiftedSlab};
 use crate::solver::smo::SmoParams;
 use crate::solver::{validate, Heuristic};
 use crate::Result;
 
+use super::approx::{ApproxIncremental, StreamEngine};
 use super::drift::DriftConfig;
 use super::incremental::{IncrementalConfig, IncrementalSmo};
 use super::policy::PolicyKind;
@@ -76,8 +95,9 @@ use super::window::SlidingWindow;
 pub const MAGIC: [u8; 8] = *b"SLABSNAP";
 
 /// Format version this build writes. Reads this and every earlier one
-/// (v1 decodes as the Fifo policy with synthesized sample ids).
-pub const FORMAT_VERSION: u32 = 2;
+/// (v1 decodes as the Fifo policy with synthesized sample ids; v2
+/// predates the approximate engines and decodes as the exact one).
+pub const FORMAT_VERSION: u32 = 3;
 
 /// Periodic per-shard checkpointing of live sessions.
 #[derive(Clone, Debug)]
@@ -121,6 +141,22 @@ fn gram_checksum(window: &SlidingWindow) -> u64 {
                 h ^= b as u64;
                 h = h.wrapping_mul(0x0000_0100_0000_01b3);
             }
+        }
+    }
+    h
+}
+
+/// Checksum of an approx engine's lifted feature rows (row-major,
+/// slot order) — the approximate engines' analogue of
+/// [`gram_checksum`]: computed over the live lifted state at snapshot
+/// time and over the re-lifted rows at restore time, so equality
+/// proves the feature map was rebuilt exactly.
+fn flat_checksum(vals: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in vals {
+        for &b in &v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
         }
     }
     h
@@ -282,7 +318,8 @@ fn heuristic_from_tag(tag: u8) -> Result<Heuristic> {
 /// Canonical (current-version) byte encoding of a [`StreamConfig`] —
 /// the fingerprint is FNV-1a over exactly these bytes, so two configs
 /// fingerprint equal iff every field matches bitwise. v2 appends the
-/// eviction-policy tag.
+/// eviction-policy tag; v3 appends the solver-engine tag and the
+/// lifted feature budget.
 fn config_section(cfg: &StreamConfig) -> Vec<u8> {
     let mut e = Enc::new();
     let (tag, g, c, degree) = kernel_tag(&cfg.kernel);
@@ -312,6 +349,8 @@ fn config_section(cfg: &StreamConfig) -> Vec<u8> {
     e.u64(cfg.retrain_shards as u64);
     e.u64(cfg.retrain_rounds as u64);
     e.u8(cfg.incremental.policy.tag());
+    e.u8(cfg.incremental.engine.tag());
+    e.u64(cfg.incremental.features as u64);
     e.buf
 }
 
@@ -343,6 +382,9 @@ fn decode_config(d: &mut Dec<'_>, version: u32) -> Result<StreamConfig> {
         // flipping the retrain precision can't orphan old snapshots.
         // `restore_expecting` grafts the caller's precision on.
         precision: Precision::F64,
+        // v2 predates the approx engines; overwritten below for v3+
+        engine: EngineKind::Exact,
+        features: 64,
     };
     let drift = DriftConfig {
         recent: d.usize()?,
@@ -355,6 +397,11 @@ fn decode_config(d: &mut Dec<'_>, version: u32) -> Result<StreamConfig> {
     // v1 predates eviction policies; every v1 window was FIFO
     if version >= 2 {
         incremental.policy = PolicyKind::from_tag(d.u8()?)?;
+    }
+    // v2 predates the approximate engines; every v2 stream was exact
+    if version >= 3 {
+        incremental.engine = EngineKind::from_tag(d.u8()?)?;
+        incremental.features = d.usize()?;
     }
     Ok(StreamConfig {
         kernel,
@@ -442,8 +489,18 @@ pub struct Snapshot {
     /// samples removed by targeted unlearning (0 for v1 files)
     pub forgets: u64,
     pub repair_iterations: u64,
-    /// FNV-1a over the live Gram matrix at capture time
+    /// FNV-1a over the live Gram matrix at capture time (exact
+    /// engine), or over the live lifted feature rows (approx engines)
     pub gram_checksum: u64,
+    /// approx engines only: the feature map had frozen (RFF is frozen
+    /// from construction; Nyström freezes once the landmark budget is
+    /// reached). Always false for exact streams.
+    pub approx_frozen: bool,
+    /// frozen-Nyström landmark rows `(rows, row-major rows·dim data)`;
+    /// `None` for exact streams, RFF streams (reconstructible from the
+    /// config seed) and still-warming Nyström streams (the landmark
+    /// set is the resident set)
+    pub landmarks: Option<(usize, Vec<f64>)>,
 }
 
 impl Snapshot {
@@ -455,35 +512,98 @@ impl Snapshot {
         weight: u32,
         last_version: Option<u64>,
     ) -> Snapshot {
-        let inc = session.solver();
-        let w = inc.window();
-        let mut points = Vec::with_capacity(w.len() * w.dim());
-        for i in 0..w.len() {
-            points.extend_from_slice(w.point(i));
+        struct State {
+            len: usize,
+            admitted: u64,
+            ids: Vec<u64>,
+            points: Vec<f64>,
+            alpha: Vec<f64>,
+            alpha_bar: Vec<f64>,
+            s: Vec<f64>,
+            rho: (f64, f64),
+            repair_iterations: u64,
+            checksum: u64,
+            frozen: bool,
+            landmarks: Option<(usize, Vec<f64>)>,
         }
-        let (rho1, rho2) = inc.rho();
+        let st = match session.solver() {
+            StreamEngine::Exact(inc) => {
+                let w = inc.window();
+                let mut points = Vec::with_capacity(w.len() * w.dim());
+                for i in 0..w.len() {
+                    points.extend_from_slice(w.point(i));
+                }
+                State {
+                    len: w.len(),
+                    admitted: w.admitted(),
+                    ids: w.ids().to_vec(),
+                    points,
+                    alpha: inc.alpha().to_vec(),
+                    alpha_bar: inc.alpha_bar().to_vec(),
+                    s: inc.fresh_margins(),
+                    rho: inc.rho(),
+                    repair_iterations: inc.repair_iterations(),
+                    checksum: gram_checksum(w),
+                    frozen: false,
+                    landmarks: None,
+                }
+            }
+            StreamEngine::Approx(a) => {
+                let m = a.len();
+                let mut points = Vec::with_capacity(m * a.dim());
+                for i in 0..m {
+                    points.extend_from_slice(a.point(i));
+                }
+                // only a *frozen* Nyström map carries state that the
+                // residents + config can't reproduce — its landmarks
+                // are a snapshot of the residents at freeze time
+                let landmarks = match a.featmap() {
+                    FeatMap::Nystroem(n) if a.is_frozen() => {
+                        let lm = n.landmarks();
+                        Some((lm.rows(), lm.data().to_vec()))
+                    }
+                    _ => None,
+                };
+                State {
+                    len: m,
+                    admitted: a.admitted(),
+                    ids: a.ids().to_vec(),
+                    points,
+                    alpha: a.alpha().to_vec(),
+                    alpha_bar: a.alpha_bar().to_vec(),
+                    s: a.fresh_margins(),
+                    rho: a.rho(),
+                    repair_iterations: a.repair_iterations(),
+                    checksum: flat_checksum(a.core().phi_flat()),
+                    frozen: a.is_frozen(),
+                    landmarks,
+                }
+            }
+        };
         Snapshot {
             format_version: FORMAT_VERSION,
             name: session.name().to_string(),
             weight: weight.max(1),
             last_version: last_version.unwrap_or(0),
             cfg: *session.config(),
-            len: w.len(),
-            admitted: w.admitted(),
-            ids: w.ids().to_vec(),
-            points,
-            alpha: inc.alpha().to_vec(),
-            alpha_bar: inc.alpha_bar().to_vec(),
-            s: inc.fresh_margins(),
-            rho1,
-            rho2,
+            len: st.len,
+            admitted: st.admitted,
+            ids: st.ids,
+            points: st.points,
+            alpha: st.alpha,
+            alpha_bar: st.alpha_bar,
+            s: st.s,
+            rho1: st.rho.0,
+            rho2: st.rho.1,
             baselined: session.is_baselined(),
             baseline: session.drift_monitor().baseline(),
             updates: session.updates(),
             retrains: session.retrains(),
             forgets: session.forgets(),
-            repair_iterations: inc.repair_iterations(),
-            gram_checksum: gram_checksum(w),
+            repair_iterations: st.repair_iterations,
+            gram_checksum: st.checksum,
+            approx_frozen: st.frozen,
+            landmarks: st.landmarks,
         }
     }
 
@@ -530,6 +650,18 @@ impl Snapshot {
         e.u64(self.forgets);
         e.u64(self.repair_iterations);
         e.u64(self.gram_checksum);
+        // v3: approx resume block, only for approx-engine streams
+        if self.cfg.incremental.engine != EngineKind::Exact {
+            e.u8(self.approx_frozen as u8);
+            match &self.landmarks {
+                Some((rows, data)) => {
+                    e.u8(1);
+                    e.u64(*rows as u64);
+                    e.f64s(data);
+                }
+                None => e.u8(0),
+            }
+        }
         let check = fnv1a(&e.buf);
         e.u64(check);
         e.buf
@@ -660,6 +792,26 @@ impl Snapshot {
         let forgets = if version >= 2 { d.u64()? } else { 0 };
         let repair_iterations = d.u64()?;
         let gram_checksum = d.u64()?;
+        let (approx_frozen, landmarks) = if version >= 3
+            && cfg.incremental.engine != EngineKind::Exact
+        {
+            let frozen = d.u8()? != 0;
+            let lm = if d.u8()? != 0 {
+                let rows = d.usize()?;
+                let data =
+                    d.f64s(rows.checked_mul(cfg.dim).ok_or_else(|| {
+                        Error::snapshot(
+                            "landmark block size overflows".to_string(),
+                        )
+                    })?)?;
+                Some((rows, data))
+            } else {
+                None
+            };
+            (frozen, lm)
+        } else {
+            (false, None)
+        };
         if d.pos != body_end {
             return Err(Error::snapshot(format!(
                 "{} trailing bytes after snapshot state",
@@ -688,6 +840,8 @@ impl Snapshot {
             forgets,
             repair_iterations,
             gram_checksum,
+            approx_frozen,
+            landmarks,
         })
     }
 
@@ -721,7 +875,7 @@ impl Snapshot {
         format!(
             "stream '{}' format v{} fingerprint {:#018x}\n\
              kernel={} dim={} window={} resident={} admitted={} \
-             policy={}\n\
+             policy={} engine={} features={}\n\
              nu1={} nu2={} eps={} updates={} retrains={} forgets={} \
              last_version={}\n\
              rho=[{:.6}, {:.6}] baseline={:?} repair_iterations={}",
@@ -734,6 +888,8 @@ impl Snapshot {
             self.len,
             self.admitted,
             self.cfg.incremental.policy,
+            self.cfg.incremental.engine,
+            self.cfg.incremental.features,
             self.cfg.incremental.smo.nu1,
             self.cfg.incremental.smo.nu2,
             self.cfg.incremental.smo.eps,
@@ -808,6 +964,10 @@ impl Snapshot {
             }
         }
 
+        if self.cfg.incremental.engine != EngineKind::Exact {
+            return self.into_approx_session();
+        }
+
         // Re-derive the Gram matrix from the samples; the checksum over
         // the rebuilt matrix must match the one taken over the live
         // matrix at snapshot time.
@@ -871,7 +1031,159 @@ impl Snapshot {
         let session = StreamSession::from_parts(
             self.name,
             self.cfg,
-            inc,
+            StreamEngine::Exact(inc),
+            self.baselined,
+            self.baseline,
+            self.updates,
+            self.retrains,
+            self.forgets,
+        );
+        Ok((session, info))
+    }
+
+    /// Approx-engine restore: rebuild the feature map (RFF from the
+    /// config seed, frozen Nyström from its stored landmark rows,
+    /// warming Nyström from the residents), re-lift every resident and
+    /// verify the lifted rows against the stored checksum, then resume
+    /// the lifted dual — certify-or-repair, exactly like the exact
+    /// path certifies against its rebuilt Gram.
+    fn into_approx_session(self) -> Result<(StreamSession, RestoreInfo)> {
+        let m = self.len;
+        let cfg = self.cfg;
+        let inc_cfg = cfg.incremental;
+        let p = inc_cfg.smo;
+        if let Some((rows, data)) = &self.landmarks {
+            if *rows == 0
+                || data.len()
+                    != rows.checked_mul(cfg.dim).unwrap_or(usize::MAX)
+            {
+                return Err(Error::snapshot(format!(
+                    "landmark block holds {} values, want {}·{}",
+                    data.len(),
+                    rows,
+                    cfg.dim
+                )));
+            }
+            if data.iter().any(|v| !v.is_finite()) {
+                return Err(Error::snapshot(
+                    "non-finite value in landmark block",
+                ));
+            }
+        }
+        let params = ApproxParams {
+            smo: p,
+            engine: inc_cfg.engine,
+            features: inc_cfg.features,
+        };
+        let map = match inc_cfg.engine {
+            EngineKind::Rff => rff_map(&params, cfg.kernel, cfg.dim)
+                .map_err(|e| {
+                    Error::snapshot(format!("rff map rebuild failed: {e}"))
+                })?,
+            EngineKind::Nystroem => {
+                if self.approx_frozen && self.landmarks.is_none() {
+                    return Err(Error::snapshot(
+                        "frozen nystroem snapshot is missing its \
+                         landmark block",
+                    ));
+                }
+                let lm = match &self.landmarks {
+                    Some((rows, data)) => {
+                        Matrix::from_vec(*rows, cfg.dim, data.clone())
+                    }
+                    // still warming: the landmark set IS the resident
+                    // set (grow_landmarks rebuilds over all residents
+                    // every admit), so it needs no separate storage
+                    None if m > 0 => {
+                        Matrix::from_vec(m, cfg.dim, self.points.clone())
+                    }
+                    // empty stream: the same placeholder the fresh
+                    // constructor starts from
+                    None => Matrix::zeros(1, cfg.dim),
+                };
+                FeatMap::Nystroem(
+                    NystroemMap::new(cfg.kernel, lm).map_err(|e| {
+                        Error::snapshot(format!(
+                            "nystroem map rebuild failed: {e}"
+                        ))
+                    })?,
+                )
+            }
+            EngineKind::Exact => {
+                return Err(Error::snapshot(
+                    "exact engine reached the approx restore path",
+                ))
+            }
+        };
+
+        // Re-lift the residents through the rebuilt map; the checksum
+        // over the lifted rows must match the one taken over the live
+        // lifted state at snapshot time.
+        let d_out = map.d_out();
+        let mut scratch = vec![0.0; map.scratch_len().max(1)];
+        let mut phi = vec![0.0; m * d_out];
+        for i in 0..m {
+            let x = self
+                .points
+                .get(i * cfg.dim..(i + 1) * cfg.dim)
+                .ok_or_else(|| {
+                    Error::snapshot("sample block out of bounds".to_string())
+                })?;
+            let out = phi
+                .get_mut(i * d_out..(i + 1) * d_out)
+                .ok_or_else(|| {
+                    Error::snapshot("lifted block out of bounds".to_string())
+                })?;
+            map.map_into(x, &mut scratch, out);
+        }
+        let rebuilt = flat_checksum(&phi);
+        if rebuilt != self.gram_checksum {
+            return Err(Error::snapshot(format!(
+                "lifted-feature checksum mismatch after map rebuild: \
+                 stored {:#018x}, recomputed {rebuilt:#018x}",
+                self.gram_checksum
+            )));
+        }
+
+        let mut core = LiftedSlab::restore(
+            d_out,
+            &p,
+            phi,
+            self.alpha,
+            self.alpha_bar,
+            self.rho1,
+            self.rho2,
+        );
+        let mut info = RestoreInfo { kkt_violation: 0.0, repaired: false };
+        if m >= 2 {
+            let cert = core.certify();
+            info.kkt_violation = cert.max_kkt_violation;
+            let margin_scale = 1.0
+                + core.margins().iter().map(|v| v.abs()).sum::<f64>()
+                    / m as f64;
+            if cert.max_kkt_violation > p.tol * margin_scale {
+                core.repair(inc_cfg.repair_max_iter.max(1));
+                info.repaired = true;
+            }
+        }
+
+        let inc = ApproxIncremental::restore(
+            cfg.kernel,
+            cfg.window,
+            cfg.dim,
+            inc_cfg,
+            map,
+            self.approx_frozen,
+            self.points,
+            self.ids,
+            self.admitted,
+            core,
+            self.repair_iterations,
+        );
+        let session = StreamSession::from_parts(
+            self.name,
+            cfg,
+            StreamEngine::Approx(inc),
             self.baselined,
             self.baseline,
             self.updates,
@@ -1014,6 +1326,12 @@ mod tests {
         let mut p = base;
         p.incremental.policy = PolicyKind::InteriorFirst;
         assert_ne!(f0, Snapshot::config_fingerprint(&p));
+        let mut e = base;
+        e.incremental.engine = EngineKind::Rff;
+        assert_ne!(f0, Snapshot::config_fingerprint(&e));
+        let mut d = base;
+        d.incremental.features = 128;
+        assert_ne!(f0, Snapshot::config_fingerprint(&d));
         assert_eq!(f0, Snapshot::config_fingerprint(&base));
     }
 
@@ -1058,15 +1376,122 @@ mod tests {
         let snap = Snapshot::capture(&session, 1, None);
         let text = snap.describe();
         assert!(text.contains("stream 't'"), "{text}");
-        assert!(text.contains("format v2"), "{text}");
+        assert!(text.contains("format v3"), "{text}");
         assert!(text.contains("window=32"), "{text}");
         assert!(text.contains("policy=fifo"), "{text}");
+        assert!(text.contains("engine=exact"), "{text}");
+    }
+
+    fn approx_cfg(engine: EngineKind, features: usize) -> StreamConfig {
+        let mut cfg = StreamConfig {
+            kernel: Kernel::Rbf { g: 0.5 },
+            window: 24,
+            min_train: 8,
+            ..Default::default()
+        };
+        cfg.incremental.engine = engine;
+        cfg.incremental.features = features;
+        cfg
+    }
+
+    #[test]
+    fn approx_sessions_snapshot_restore_and_continue_bitwise() {
+        for engine in [EngineKind::Nystroem, EngineKind::Rff] {
+            let cfg = approx_cfg(engine, 8);
+            let mut live = StreamSession::new("ap", cfg);
+            let ds = SlabConfig::default().generate(48, 907);
+            for i in 0..40 {
+                live.absorb(ds.x.row(i)).unwrap();
+            }
+            let snap = Snapshot::capture(&live, 1, None);
+            let bytes = snap.encode();
+            let back = Snapshot::decode(&bytes).unwrap();
+            assert_eq!(back.encode(), bytes, "canonical re-encode");
+            let (mut restored, info) = back.into_session().unwrap();
+            assert!(
+                !info.repaired,
+                "{engine:?}: post-repair approx state must certify as-is"
+            );
+            assert_eq!(restored.solver().alpha(), live.solver().alpha());
+            assert_eq!(restored.solver().ids(), live.solver().ids());
+            let (l1, l2) = live.solver().rho();
+            let (r1, r2) = restored.solver().rho();
+            assert_eq!(l1.to_bits(), r1.to_bits());
+            assert_eq!(l2.to_bits(), r2.to_bits());
+            // continue in lockstep: the restored session must absorb
+            // new samples bitwise-identically to one that never paused
+            for i in 40..48 {
+                live.absorb(ds.x.row(i)).unwrap();
+                restored.absorb(ds.x.row(i)).unwrap();
+            }
+            assert_eq!(
+                restored.solver().alpha(),
+                live.solver().alpha(),
+                "{engine:?}: restored session diverged after resume"
+            );
+            assert_eq!(
+                restored.solver().margins(),
+                live.solver().margins()
+            );
+        }
+    }
+
+    #[test]
+    fn warming_nystroem_snapshots_without_a_landmark_block() {
+        // below the feature budget the map is derived from the
+        // residents themselves: nothing extra on the wire
+        let cfg = approx_cfg(EngineKind::Nystroem, 16);
+        let mut live = StreamSession::new("warm", cfg);
+        let ds = SlabConfig::default().generate(6, 908);
+        for i in 0..6 {
+            live.absorb(ds.x.row(i)).unwrap();
+        }
+        let snap = Snapshot::capture(&live, 1, None);
+        assert!(!snap.approx_frozen);
+        assert!(snap.landmarks.is_none());
+        let (restored, info) =
+            Snapshot::decode(&snap.encode()).unwrap().into_session().unwrap();
+        assert!(!info.repaired);
+        assert_eq!(restored.solver().alpha(), live.solver().alpha());
+        // frozen sessions DO carry landmarks
+        let mut frozen = StreamSession::new("froze", cfg);
+        let ds2 = SlabConfig::default().generate(20, 909);
+        for i in 0..20 {
+            frozen.absorb(ds2.x.row(i)).unwrap();
+        }
+        let fsnap = Snapshot::capture(&frozen, 1, None);
+        assert!(fsnap.approx_frozen);
+        let (rows, _) = fsnap.landmarks.as_ref().unwrap();
+        assert_eq!(*rows, 16);
+    }
+
+    #[test]
+    fn approx_snapshot_rejects_tampered_landmarks() {
+        let cfg = approx_cfg(EngineKind::Nystroem, 4);
+        let mut live = StreamSession::new("tamper", cfg);
+        let ds = SlabConfig::default().generate(12, 910);
+        for i in 0..12 {
+            live.absorb(ds.x.row(i)).unwrap();
+        }
+        let mut snap = Snapshot::capture(&live, 1, None);
+        if let Some((_, data)) = snap.landmarks.as_mut() {
+            data[0] += 1.0;
+        }
+        // decode succeeds (the payload checksum covers the bytes we
+        // re-encode), but the lifted rebuild no longer matches
+        match Snapshot::decode(&snap.encode()).unwrap().into_session() {
+            Ok(_) => panic!("tampered landmarks must not restore"),
+            Err(err) => assert!(
+                err.to_string().contains("checksum"),
+                "want a lifted-checksum failure, got: {err}"
+            ),
+        }
     }
 
     #[test]
     fn forgotten_sessions_snapshot_and_restore_their_state() {
         let mut s = warm_session(40, 403);
-        let id = s.solver().window().id(3);
+        let id = s.solver().id(3);
         s.forget(id).unwrap();
         let snap = Snapshot::capture(&s, 1, None);
         assert_eq!(snap.forgets, 1);
@@ -1076,7 +1501,7 @@ mod tests {
             Snapshot::decode(&snap.encode()).unwrap().into_session().unwrap();
         assert!(!info.repaired, "post-repair forget state must certify");
         assert_eq!(back.forgets(), 1);
-        assert_eq!(back.solver().window().ids(), s.solver().window().ids());
+        assert_eq!(back.solver().ids(), s.solver().ids());
         assert_eq!(back.solver().alpha(), s.solver().alpha());
     }
 }

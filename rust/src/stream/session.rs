@@ -17,8 +17,9 @@ use crate::kernel::Kernel;
 use crate::solver::api::Trainer;
 use crate::solver::ocssvm::SlabModel;
 
+use super::approx::StreamEngine;
 use super::drift::{DriftConfig, DriftEvent, DriftMonitor};
-use super::incremental::{IncrementalConfig, IncrementalSmo};
+use super::incremental::IncrementalConfig;
 
 /// Everything a live stream needs configured up front.
 #[derive(Clone, Copy, Debug)]
@@ -93,7 +94,7 @@ pub struct Forgotten {
 pub struct StreamSession {
     name: String,
     cfg: StreamConfig,
-    inc: IncrementalSmo,
+    inc: StreamEngine,
     drift: DriftMonitor,
     pending_retrain: Option<JobId>,
     baselined: bool,
@@ -120,7 +121,7 @@ impl StreamSession {
         }
         StreamSession {
             name,
-            inc: IncrementalSmo::new(
+            inc: StreamEngine::new(
                 cfg.kernel,
                 cfg.window,
                 cfg.dim,
@@ -146,8 +147,9 @@ impl StreamSession {
         &self.cfg
     }
 
-    /// The streaming solver (window, dual state, stats).
-    pub fn solver(&self) -> &IncrementalSmo {
+    /// The streaming engine (exact windowed SMO or the lifted
+    /// feature-map solver — see [`StreamEngine`]).
+    pub fn solver(&self) -> &StreamEngine {
         &self.inc
     }
 
@@ -197,7 +199,7 @@ impl StreamSession {
 
     /// Copy of the current window contents (background-retrain input).
     pub fn window_dataset(&self) -> Dataset {
-        Dataset::unlabeled(self.inc.window().matrix())
+        Dataset::unlabeled(self.inc.matrix())
     }
 
     /// Serialize the session's full resume state to the versioned
@@ -234,7 +236,7 @@ impl StreamSession {
     pub(crate) fn from_parts(
         name: String,
         mut cfg: StreamConfig,
-        inc: IncrementalSmo,
+        inc: StreamEngine,
         baselined: bool,
         baseline: Option<(f64, f64)>,
         updates: u64,
@@ -335,7 +337,8 @@ impl StreamSession {
             model,
             sample_id,
             retrain_wanted: drift_event.is_some()
-                && self.pending_retrain.is_none(),
+                && self.pending_retrain.is_none()
+                && self.inc.supports_retrain(),
             drift: drift_event,
         })
     }
@@ -459,7 +462,7 @@ mod tests {
         feed(&mut s, &SlabConfig::default(), 70, 54);
         let snap = s.window_dataset();
         assert_eq!(snap.len(), 64); // window capacity
-        assert_eq!(snap.x.data(), s.solver().window().matrix().data());
+        assert_eq!(snap.x.data(), s.solver().matrix().data());
     }
 
     #[test]
@@ -526,13 +529,13 @@ mod tests {
     fn forget_shrinks_window_and_republishes_when_warm() {
         let mut s = StreamSession::new("t", quick_config());
         feed(&mut s, &SlabConfig::default(), 70, 58); // window 64, warm
-        let id = s.solver().window().id(5);
+        let id = s.solver().id(5);
         let f = s.forget(id).unwrap();
         assert_eq!(f.resident, 63);
         assert!(f.model.is_some(), "warm session must republish");
         assert_eq!(s.forgets(), 1);
         assert_eq!(s.updates(), 70, "forget is not an update");
-        assert_eq!(s.solver().window().slot_of_id(id), None);
+        assert_eq!(s.solver().slot_of_id(id), None);
         // non-resident id: typed error, counters untouched
         assert!(matches!(
             s.forget(id).unwrap_err(),
@@ -545,12 +548,12 @@ mod tests {
     fn forget_flags_an_in_flight_retrain_as_stale() {
         let mut s = StreamSession::new("t", quick_config());
         feed(&mut s, &SlabConfig::default(), 70, 60);
-        let id = s.solver().window().id(3);
+        let id = s.solver().id(3);
         let clean = s.forget(id).unwrap();
         assert!(!clean.retrain_stale, "no retrain in flight");
         // a pending retrain was trained WITH the next victim: flag it
         s.retrain_submitted(JobId(9));
-        let id = s.solver().window().id(7);
+        let id = s.solver().id(7);
         let stale = s.forget(id).unwrap();
         assert!(stale.retrain_stale, "in-flight retrain must be flagged");
         assert_eq!(s.pending_retrain(), Some(JobId(9)), "owner supersedes");
@@ -561,7 +564,7 @@ mod tests {
         let cfg = StreamConfig { window: 64, min_train: 6, ..quick_config() };
         let mut s = StreamSession::new("t", cfg);
         feed(&mut s, &SlabConfig::default(), 6, 59); // exactly at the bar
-        let id = s.solver().window().id(0);
+        let id = s.solver().id(0);
         let f = s.forget(id).unwrap();
         assert_eq!(f.resident, 5);
         assert!(f.model.is_none(), "below min_train there is no publish");

@@ -265,7 +265,7 @@ fn every_kind_constructible_from_str_and_fits() {
     // the acceptance criterion, end to end: name -> SolverKind ->
     // Solver::fit, one loop, no per-solver dispatch anywhere
     let ds = SlabConfig::default().generate(90, 19);
-    for name in ["smo", "pg", "ipm", "ocsvm-smo"] {
+    for name in ["smo", "pg", "ipm", "ocsvm-smo", "approx"] {
         let kind: SolverKind = name.parse().unwrap();
         let report = kind
             .default_solver()

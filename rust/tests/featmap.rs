@@ -1,0 +1,357 @@
+//! Feature-map contract suite (DESIGN.md §10, experiment KA1).
+//!
+//! Pins the [`slabsvm::kernel::featmap`] contracts the approximate
+//! engines are built on:
+//!
+//! * RFF is an **unbiased** estimator of the RBF kernel with
+//!   Monte-Carlo error O(1/√P) — checked across ≥50 independent seeds;
+//! * the Nyström lifted Gram is PSD, and **exact** when every training
+//!   point is a landmark;
+//! * both maps are bitwise-deterministic by seed and invariant to
+//!   thread count;
+//! * the approx trainer lands within 0.02 AUC of the exact SMO at
+//!   Table-1 scale, across kernels and a lifted-dimension sweep;
+//! * exported models are structurally m-independent (Nyström folds to
+//!   n_sv ≤ L, RFF to one lifted row), so scoring is O(d·D);
+//! * composition guards: approx + f32 and approx + cascade are typed
+//!   config errors (referenced from `rust/tests/precision.rs`).
+
+use slabsvm::data::synthetic::SlabConfig;
+use slabsvm::kernel::featmap::{
+    EngineKind, FeatMap, FeatureMap, NystroemMap, RffMap,
+};
+use slabsvm::kernel::{Kernel, Precision};
+use slabsvm::linalg::{sym_eig, Matrix};
+use slabsvm::metrics::roc_auc;
+use slabsvm::solver::{SolverKind, Trainer};
+
+fn lift(map: &impl FeatureMap, x: &[f64]) -> Vec<f64> {
+    let mut scratch = vec![0.0; map.scratch_len().max(1)];
+    let mut out = vec![0.0; map.d_out()];
+    map.map_into(x, &mut scratch, &mut out);
+    out
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+// ------------------------------------------------------- RFF estimator
+
+#[test]
+fn rff_is_unbiased_for_rbf_within_the_monte_carlo_bound() {
+    let g = 0.7;
+    let kernel = Kernel::Rbf { g };
+    let d_out = 256usize; // P = 128 cos/sin pairs
+    let p_pairs = (d_out / 2) as f64;
+    let pairs: &[(&[f64], &[f64])] = &[
+        (&[0.3, -1.1], &[0.8, 0.4]),
+        (&[2.0, 0.0], &[2.0, 0.0]),
+        (&[-0.5, 0.25], &[1.5, -0.75]),
+        (&[0.0, 0.0], &[0.9, -0.2]),
+    ];
+    let n_seeds = 64usize;
+    for &(x, y) in pairs {
+        let exact = kernel.eval(x, y);
+        let mut sum = 0.0;
+        for seed in 0..n_seeds as u64 {
+            let map = RffMap::new(2, d_out, g, 1000 + seed).unwrap();
+            let est = dot(&lift(&map, x), &lift(&map, y));
+            // per-seed: Monte-Carlo error O(1/√P), generous constant
+            assert!(
+                (est - exact).abs() < 6.0 / p_pairs.sqrt(),
+                "seed {seed}: |{est} - {exact}| breaches the 1/√P bound"
+            );
+            sum += est;
+        }
+        // across seeds the estimator must *converge* on the kernel —
+        // biased maps pass per-seed bounds but fail this
+        let mean = sum / n_seeds as f64;
+        let tol = 4.0 / (p_pairs * n_seeds as f64).sqrt();
+        assert!(
+            (mean - exact).abs() < tol,
+            "mean over {n_seeds} seeds {mean} vs exact {exact} \
+             (tol {tol}): estimator is biased"
+        );
+    }
+}
+
+#[test]
+fn rff_lifted_norm_is_one_at_zero_distance() {
+    // k(x,x) = 1 for RBF; ⟨φ(x), φ(x)⟩ = (1/P)·Σ(cos²+sin²) = 1 exactly
+    let map = RffMap::new(3, 64, 0.2, 9).unwrap();
+    let x = [0.4, -2.0, 1.0];
+    let phi = lift(&map, &x);
+    assert!((dot(&phi, &phi) - 1.0).abs() < 1e-12);
+}
+
+// ---------------------------------------------------- Nyström exactness
+
+#[test]
+fn nystroem_is_exact_when_every_point_is_a_landmark() {
+    let ds = SlabConfig::default().generate(40, 11);
+    for kernel in [Kernel::Linear, Kernel::Rbf { g: 0.5 }] {
+        let map = NystroemMap::new(kernel, ds.x.clone()).unwrap();
+        for i in 0..ds.x.rows() {
+            let pi = lift(&map, ds.x.row(i));
+            for j in i..ds.x.rows() {
+                let pj = lift(&map, ds.x.row(j));
+                let approx = dot(&pi, &pj);
+                let exact = kernel.eval(ds.x.row(i), ds.x.row(j));
+                assert!(
+                    (approx - exact).abs() <= 1e-9,
+                    "{}: lifted Gram[{i},{j}] = {approx}, exact {exact}",
+                    kernel.family()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn nystroem_lifted_gram_is_psd() {
+    let ds = SlabConfig::default().generate(60, 12);
+    let landmarks = ds.x.select_rows(&(0..12).collect::<Vec<_>>());
+    for kernel in [Kernel::Linear, Kernel::Rbf { g: 0.8 }] {
+        let map = NystroemMap::new(kernel, landmarks.clone()).unwrap();
+        let m = ds.x.rows();
+        let mut gram = Matrix::zeros(m, m);
+        let rows: Vec<Vec<f64>> =
+            (0..m).map(|i| lift(&map, ds.x.row(i))).collect();
+        for i in 0..m {
+            for j in 0..m {
+                gram.set(i, j, dot(&rows[i], &rows[j]));
+            }
+        }
+        let (eigvals, _) = sym_eig(&gram);
+        let min = eigvals.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(
+            min >= -1e-10,
+            "{}: lifted Gram has eigenvalue {min} < 0",
+            kernel.family()
+        );
+    }
+}
+
+// --------------------------------------------------------- determinism
+
+#[test]
+fn maps_are_bitwise_deterministic_by_seed() {
+    let x = [1.25, -0.5];
+    let a = RffMap::new(2, 128, 0.3, 42).unwrap();
+    let b = RffMap::new(2, 128, 0.3, 42).unwrap();
+    let c = RffMap::new(2, 128, 0.3, 43).unwrap();
+    let (pa, pb, pc) = (lift(&a, &x), lift(&b, &x), lift(&c, &x));
+    assert_eq!(
+        pa.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        pb.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "same seed must map bitwise-identically"
+    );
+    assert_ne!(
+        pa.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        pc.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "different seeds must draw different frequencies"
+    );
+
+    let ds = SlabConfig::default().generate(16, 13);
+    let n1 = NystroemMap::new(Kernel::Rbf { g: 0.5 }, ds.x.clone()).unwrap();
+    let n2 = NystroemMap::new(Kernel::Rbf { g: 0.5 }, ds.x.clone()).unwrap();
+    assert_eq!(
+        lift(&n1, &x).iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        lift(&n2, &x).iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "same landmarks must build the same map"
+    );
+}
+
+#[test]
+fn mapping_is_invariant_to_thread_count() {
+    // the maps hold no mutable state: 1 thread and 8 threads mapping
+    // the same rows must agree bitwise, in any interleaving
+    let ds = SlabConfig::default().generate(64, 14);
+    let map = std::sync::Arc::new(
+        FeatMap::Rff(RffMap::new(2, 96, 0.4, 77).unwrap()),
+    );
+    let serial: Vec<Vec<u64>> = (0..ds.x.rows())
+        .map(|i| {
+            lift(map.as_ref(), ds.x.row(i))
+                .iter()
+                .map(|v| v.to_bits())
+                .collect()
+        })
+        .collect();
+    let rows: Vec<Vec<f64>> =
+        (0..ds.x.rows()).map(|i| ds.x.row(i).to_vec()).collect();
+    let rows = std::sync::Arc::new(rows);
+    let mut handles = Vec::new();
+    for t in 0..8usize {
+        let map = map.clone();
+        let rows = rows.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut out = Vec::new();
+            let mut i = t;
+            while i < rows.len() {
+                let bits: Vec<u64> = lift(map.as_ref(), &rows[i])
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                out.push((i, bits));
+                i += 8;
+            }
+            out
+        }));
+    }
+    for h in handles {
+        for (i, bits) in h.join().unwrap() {
+            assert_eq!(bits, serial[i], "row {i} differs across threads");
+        }
+    }
+}
+
+#[test]
+fn approx_training_is_bitwise_deterministic_by_seed() {
+    let ds = SlabConfig::default().generate(200, 15);
+    for engine in [EngineKind::Nystroem, EngineKind::Rff] {
+        let fit = || {
+            Trainer::new(SolverKind::Approx)
+                .kernel(Kernel::Rbf { g: 0.5 })
+                .engine(engine)
+                .features(32)
+                .seed(7)
+                .fit(&ds.x)
+                .unwrap()
+        };
+        let (a, b) = (fit(), fit());
+        assert_eq!(
+            a.model.rho1.to_bits(),
+            b.model.rho1.to_bits(),
+            "{engine}: rho1 not reproducible"
+        );
+        let q = [0.7, -0.3];
+        assert_eq!(
+            a.model.score(&q).to_bits(),
+            b.model.score(&q).to_bits(),
+            "{engine}: scores not reproducible"
+        );
+    }
+}
+
+// ------------------------------------------------- accuracy vs exact
+
+#[test]
+fn approx_auc_is_within_two_points_of_exact_at_table1_scale() {
+    let train = SlabConfig::default().generate(300, 21);
+    let eval = SlabConfig::default().generate_eval(250, 250, 22);
+    let truth = &eval.y;
+    let sweep: &[(EngineKind, Kernel, usize)] = &[
+        (EngineKind::Nystroem, Kernel::Linear, 32),
+        (EngineKind::Nystroem, Kernel::Linear, 64),
+        (EngineKind::Nystroem, Kernel::Rbf { g: 0.5 }, 32),
+        (EngineKind::Nystroem, Kernel::Rbf { g: 0.5 }, 64),
+        (EngineKind::Rff, Kernel::Rbf { g: 0.5 }, 64),
+        (EngineKind::Rff, Kernel::Rbf { g: 0.5 }, 128),
+    ];
+    for &(engine, kernel, d) in sweep {
+        let exact = Trainer::new(SolverKind::Smo)
+            .kernel(kernel)
+            .fit(&train.x)
+            .unwrap()
+            .model;
+        let approx = Trainer::new(SolverKind::Approx)
+            .kernel(kernel)
+            .engine(engine)
+            .features(d)
+            .fit(&train.x)
+            .unwrap()
+            .model;
+        let score_all = |m: &slabsvm::solver::ocssvm::SlabModel| -> Vec<f64> {
+            (0..eval.x.rows()).map(|i| m.score(eval.x.row(i))).collect()
+        };
+        let auc_exact = roc_auc(truth, &score_all(&exact));
+        let auc_approx = roc_auc(truth, &score_all(&approx));
+        assert!(
+            (auc_exact - auc_approx).abs() <= 0.02,
+            "{engine}/{}/D={d}: AUC {auc_approx:.4} vs exact \
+             {auc_exact:.4} — gap exceeds 0.02",
+            kernel.family()
+        );
+    }
+}
+
+// ------------------------------------------- structural m-independence
+
+#[test]
+fn exported_models_are_structurally_m_independent() {
+    // scoring cost must be pinned by D, not by how many samples were
+    // resident: Nyström folds to ≤ L support rows, RFF to exactly one
+    for m in [100usize, 400] {
+        let ds = SlabConfig::default().generate(m, 31);
+        let ny = Trainer::new(SolverKind::Approx)
+            .kernel(Kernel::Rbf { g: 0.5 })
+            .engine(EngineKind::Nystroem)
+            .features(24)
+            .fit(&ds.x)
+            .unwrap()
+            .model;
+        assert!(
+            ny.n_sv() <= 24,
+            "m={m}: nystroem model has {} SVs > 24 landmarks",
+            ny.n_sv()
+        );
+        assert!(
+            ny.featmap.is_none(),
+            "nystroem must fold to a plain kernel model"
+        );
+        let rff = Trainer::new(SolverKind::Approx)
+            .kernel(Kernel::Rbf { g: 0.5 })
+            .engine(EngineKind::Rff)
+            .features(24)
+            .fit(&ds.x)
+            .unwrap()
+            .model;
+        assert_eq!(
+            rff.x_sv.rows(),
+            1,
+            "m={m}: rff model must store exactly the lifted weight row"
+        );
+        assert!(rff.featmap.is_some(), "rff scoring needs its map");
+    }
+}
+
+// --------------------------------------------------- composition guards
+
+#[test]
+fn approx_rejects_f32_and_cascade_composition() {
+    let ds = SlabConfig::default().generate(50, 41);
+    let err = Trainer::new(SolverKind::Approx)
+        .kernel(Kernel::Rbf { g: 0.5 })
+        .precision(Precision::F32)
+        .fit(&ds.x)
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("f32"),
+        "want the f32 composition guard, got: {err}"
+    );
+    let err = Trainer::new(SolverKind::Approx)
+        .kernel(Kernel::Rbf { g: 0.5 })
+        .cascade(4, 2)
+        .fit(&ds.x)
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("cascade"),
+        "want the cascade composition guard, got: {err}"
+    );
+}
+
+#[test]
+fn rff_requires_the_rbf_kernel_as_a_typed_error() {
+    let ds = SlabConfig::default().generate(50, 42);
+    let err = Trainer::new(SolverKind::Approx)
+        .kernel(Kernel::Linear)
+        .engine(EngineKind::Rff)
+        .fit(&ds.x)
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("rbf"),
+        "want the rff kernel guard, got: {err}"
+    );
+}

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Generate rust/tests/fixtures/golden-v1.snap and golden-v2.snap.
+"""Generate rust/tests/fixtures/golden-v{1,2,3}.snap.
 
 Writes stream-session snapshots (see rust/src/stream/persist.rs) for a
 hand-constructed session whose dual point is analytically exact: with
@@ -12,10 +12,13 @@ bounds): rho1 = max_i s_i, rho2 = min_i s_i.
 
 golden-v1.snap is the frozen format-v1 file (byte-for-byte what the
 original generator wrote — it pins the v1 **decode** path: Fifo policy,
-ids synthesized from the ring cursor). golden-v2.snap pins the current
-format: the eviction-policy tag in the config section (interior-first,
-to exercise the non-default tag) and explicit per-sample ids + the
-forget counter in the state.
+ids synthesized from the ring cursor). golden-v2.snap pins the v2
+decode path: the eviction-policy tag in the config section
+(interior-first, to exercise the non-default tag) and explicit
+per-sample ids + the forget counter in the state. golden-v3.snap pins
+the current format: v2 plus the training-engine tag and lifted-feature
+budget in the config section (exact engine, so no approx resume block
+follows the gram checksum).
 
 The script re-decodes what it wrote and checks every field, so an
 encoder/decoder skew here fails at generation time, not in CI.
@@ -299,3 +302,83 @@ with open(out_v2, "wb") as fh:
     fh.write(blob_v2)
 print(f"wrote {out_v2}: {len(blob_v2)} bytes")
 print(f"  policy=interior-first ids={IDS_V2} forgets={FORGETS_V2}")
+
+# ===================================================== format v3 golden
+#
+# Same dual state and counters as the v2 golden; the config section
+# gains the training-engine tag and lifted-feature budget (exact = 0,
+# features = 64, the crate defaults — an exact-engine snapshot carries
+# no approx resume block, so the state layout is byte-identical to v2).
+FORMAT_VERSION_V3 = 3
+ENGINE_EXACT = 0
+FEATURES_V3 = 64
+
+cfg_v3 = cfg_v2 + u8(ENGINE_EXACT) + u64(FEATURES_V3)
+
+body_v3 = b"".join(
+    [
+        MAGIC,
+        u32(FORMAT_VERSION_V3),
+        u64(fnv1a(cfg_v3)),
+        s(NAME),
+        u32(WEIGHT),
+        u64(LAST_VERSION),
+        cfg_v3,
+        u64(M),
+        u64(ADMITTED_V2),
+        b"".join(u64(i) for i in IDS_V2),
+        f64s(v for p in POINTS for v in p),
+        f64s(ALPHA),
+        f64s(ALPHA_BAR),
+        f64s(S),
+        f64(RHO1),
+        f64(RHO2),
+        u8(BASELINED),
+        u8(1), f64(BASELINE[0]), f64(BASELINE[1]),
+        u64(UPDATES_V2),
+        u64(RETRAINS),
+        u64(FORGETS_V2),
+        u64(REPAIR_ITERATIONS),
+        u64(GRAM_CHECKSUM),
+    ]
+)
+blob_v3 = body_v3 + u64(fnv1a(body_v3))
+
+
+def verify_v3(buf):
+    assert buf[:8] == MAGIC
+    body, check = buf[:-8], struct.unpack("<Q", buf[-8:])[0]
+    assert fnv1a(body) == check, "payload checksum"
+    d = Dec(body)
+    assert d.take(8) == MAGIC
+    assert d.u32() == FORMAT_VERSION_V3
+    fingerprint = d.u64()
+    assert d.s() == NAME
+    assert d.u32() == WEIGHT
+    assert d.u64() == LAST_VERSION
+    cfg_start = d.pos
+    d.take(len(cfg_v3))
+    assert fnv1a(body[cfg_start:d.pos]) == fingerprint, "fingerprint"
+    assert body[d.pos - 9] == ENGINE_EXACT, "engine tag"
+    assert struct.unpack("<Q", body[d.pos - 8:d.pos])[0] == FEATURES_V3
+    assert d.u64() == M and d.u64() == ADMITTED_V2
+    assert [d.u64() for _ in range(M)] == IDS_V2
+    assert d.f64s(M * DIM) == [v for p in POINTS for v in p]
+    assert d.f64s(M) == ALPHA and d.f64s(M) == ALPHA_BAR
+    assert d.f64s(M) == S
+    assert (d.f64(), d.f64()) == (RHO1, RHO2)
+    assert d.u8() == BASELINED and d.u8() == 1
+    assert (d.f64(), d.f64()) == BASELINE
+    assert (d.u64(), d.u64()) == (UPDATES_V2, RETRAINS)
+    assert (d.u64(), d.u64()) == (FORGETS_V2, REPAIR_ITERATIONS)
+    assert d.u64() == GRAM_CHECKSUM
+    assert d.pos == len(body), "trailing bytes"
+
+
+verify_v3(blob_v3)
+
+out_v3 = __file__.replace("make_golden.py", "golden-v3.snap")
+with open(out_v3, "wb") as fh:
+    fh.write(blob_v3)
+print(f"wrote {out_v3}: {len(blob_v3)} bytes")
+print(f"  engine=exact features={FEATURES_V3} (no approx resume block)")

@@ -9,6 +9,7 @@ use std::time::Duration;
 use slabsvm::coordinator::{BatcherConfig, Coordinator};
 use slabsvm::data::synthetic::{SlabConfig, SlabStream};
 use slabsvm::error::Error;
+use slabsvm::kernel::featmap::EngineKind;
 use slabsvm::kernel::Kernel;
 use slabsvm::runtime::Engine;
 use slabsvm::solver::validate;
@@ -22,16 +23,24 @@ use slabsvm::stream::{
 /// `rust/tests/fixtures/make_golden.py`. It is the frozen v1 **decode**
 /// contract — this build reads it as the Fifo policy with ids
 /// synthesized from the ring cursor, bitwise-exact forever. (Its
-/// canonical re-encoding is format v2; byte-identity of encode() is
-/// pinned by the v2 fixture below.)
+/// canonical re-encoding is the current format; byte-identity of
+/// encode() is pinned by the v3 fixture below.)
 const GOLDEN: &[u8] = include_bytes!("fixtures/golden-v1.snap");
 
 /// The committed v2 golden snapshot (same generator): the same
-/// analytically-exact dual state in the current format — eviction
-/// policy tag (interior-first, the non-default) in the config section,
-/// explicit non-contiguous sample ids and the forget counter in the
-/// state. decode → encode must stay byte-identical forever.
+/// analytically-exact dual state with the eviction policy tag
+/// (interior-first, the non-default) in the config section and
+/// explicit non-contiguous sample ids + the forget counter in the
+/// state. It pins the frozen v2 **decode** contract — this build reads
+/// it as the exact engine with the default feature budget; its
+/// canonical re-encoding is format v3.
 const GOLDEN_V2: &[u8] = include_bytes!("fixtures/golden-v2.snap");
+
+/// The committed v3 golden snapshot (same generator): v2 plus the
+/// training-engine tag and lifted-feature budget in the config section
+/// (exact engine — no approx resume block in the state). This is the
+/// current format: decode → encode must stay byte-identical forever.
+const GOLDEN_V3: &[u8] = include_bytes!("fixtures/golden-v3.snap");
 
 fn golden_config() -> StreamConfig {
     let mut cfg = StreamConfig {
@@ -177,7 +186,7 @@ fn golden_fixture_restores_with_bitwise_model_and_dual_parity() {
     assert_eq!(model.rho1.to_bits(), 0.625f64.to_bits());
     assert_eq!(model.rho2.to_bits(), 0.3125f64.to_bits());
     // fresh-Gram KKT certificate on the restored state
-    let gram = Kernel::Linear.gram(&session.solver().window().matrix(), 1);
+    let gram = Kernel::Linear.gram(&session.solver().matrix(), 1);
     validate::certify(
         &gram,
         session.solver().alpha(),
@@ -193,10 +202,11 @@ fn golden_fixture_restores_with_bitwise_model_and_dual_parity() {
 }
 
 #[test]
-fn golden_v1_reencodes_to_canonical_v2_losslessly() {
+fn golden_v1_reencodes_to_canonical_current_format_losslessly() {
     // v1 files re-encode in the current format (the migration path):
-    // the bytes change — version, policy tag, explicit ids, forgets —
-    // but the state is lossless and the new bytes are canonical
+    // the bytes change — version, policy tag, explicit ids, forgets,
+    // engine tag, feature budget — but the state is lossless and the
+    // new bytes are canonical
     let (session, _) =
         Snapshot::decode(GOLDEN).unwrap().into_session().unwrap();
     let bytes = session.snapshot();
@@ -206,8 +216,9 @@ fn golden_v1_reencodes_to_canonical_v2_losslessly() {
         persist::FORMAT_VERSION
     );
     let back = Snapshot::decode(&bytes).unwrap();
-    assert_eq!(back.format_version, 2);
+    assert_eq!(back.format_version, 3);
     assert_eq!(back.cfg.incremental.policy, PolicyKind::Fifo);
+    assert_eq!(back.cfg.incremental.engine, EngineKind::Exact);
     assert_eq!(back.ids, vec![0, 1, 2, 3]);
     assert_eq!(back.alpha, vec![0.25; 4]);
     assert_eq!(back.s, vec![0.3125, 0.3125, 0.625, 0.3125]);
@@ -226,6 +237,10 @@ fn golden_v2_fixture_decodes_with_expected_contents() {
     assert_eq!(snap.len, 4);
     assert_eq!(snap.admitted, 10);
     assert_eq!(snap.cfg.incremental.policy, PolicyKind::InteriorFirst);
+    // the v2 format predates approx engines: decodes as the exact
+    // engine with the default feature budget
+    assert_eq!(snap.cfg.incremental.engine, EngineKind::Exact);
+    assert_eq!(snap.cfg.incremental.features, 64);
     assert_eq!(snap.ids, vec![3, 5, 8, 9], "non-contiguous ids survive");
     assert_eq!(snap.updates, 10);
     assert_eq!(snap.forgets, 2);
@@ -237,20 +252,23 @@ fn golden_v2_fixture_decodes_with_expected_contents() {
 }
 
 #[test]
-fn golden_v2_fixture_roundtrips_byte_identical() {
-    // decode → restore → re-snapshot must reproduce the committed file
-    // exactly: the v2 encoding is canonical and capture is lossless
-    // (policy tag, sample ids and forget counter included)
+fn golden_v2_reencodes_to_canonical_v3_losslessly() {
+    // v2 files re-encode in the current format (the migration path):
+    // the bytes change — version, engine tag, feature budget — but the
+    // state is lossless (policy tag, sample ids and forget counter
+    // included) and the new bytes are canonical. In fact the migrated
+    // bytes ARE the committed v3 golden: same session, current format.
     let (session, info) =
         Snapshot::decode(GOLDEN_V2).unwrap().into_session().unwrap();
     assert!(!info.repaired, "optimal golden state must not need repair");
     assert_eq!(session.forgets(), 2);
     assert_eq!(session.config().incremental.policy, PolicyKind::InteriorFirst);
-    assert_eq!(session.solver().window().ids(), &[3, 5, 8, 9]);
+    assert_eq!(session.solver().ids(), vec![3, 5, 8, 9]);
+    let bytes = session.snapshot();
+    assert_ne!(bytes, GOLDEN_V2, "re-encode migrates to the current format");
     assert_eq!(
-        session.snapshot(),
-        GOLDEN_V2,
-        "re-snapshot of the restored v2 golden must be byte-identical"
+        bytes, GOLDEN_V3,
+        "v2 golden must migrate to exactly the v3 golden"
     );
 }
 
@@ -276,12 +294,56 @@ fn golden_v2_forgets_resume_and_forget_again() {
     let f = session.forget(5).unwrap();
     assert_eq!(f.resident, 3);
     assert_eq!(session.forgets(), 3);
-    assert_eq!(session.solver().window().slot_of_id(5), None);
+    assert_eq!(session.solver().slot_of_id(5), None);
     // dual mass is still exactly conserved over the 3 survivors
     let sa: f64 = session.solver().alpha().iter().sum();
     let sb: f64 = session.solver().alpha_bar().iter().sum();
     assert!((sa - 1.0).abs() < 1e-9, "sum(alpha)={sa}");
     assert!((sb - 0.5).abs() < 1e-9, "sum(alpha_bar)={sb}");
+}
+
+// --------------------------------------------------- golden fixture v3
+
+#[test]
+fn golden_v3_fixture_decodes_with_expected_contents() {
+    let snap = Snapshot::decode(GOLDEN_V3).expect("golden v3 must decode");
+    assert_eq!(snap.format_version, 3);
+    assert!(snap.describe().contains("format v3"), "{}", snap.describe());
+    assert!(snap.describe().contains("engine=exact"), "{}", snap.describe());
+    assert_eq!(snap.name, "golden");
+    assert_eq!(snap.len, 4);
+    assert_eq!(snap.admitted, 10);
+    assert_eq!(snap.cfg.incremental.policy, PolicyKind::InteriorFirst);
+    assert_eq!(snap.cfg.incremental.engine, EngineKind::Exact);
+    assert_eq!(snap.cfg.incremental.features, 64);
+    assert_eq!(snap.ids, vec![3, 5, 8, 9]);
+    assert_eq!(snap.updates, 10);
+    assert_eq!(snap.forgets, 2);
+    assert_eq!(snap.alpha, vec![0.25; 4]);
+    assert_eq!(snap.alpha_bar, vec![0.125; 4]);
+    assert_eq!(snap.s, vec![0.3125, 0.3125, 0.625, 0.3125]);
+    assert_eq!(snap.rho1.to_bits(), 0.625f64.to_bits());
+    assert_eq!(snap.rho2.to_bits(), 0.3125f64.to_bits());
+    // exact engine: no approx resume state rode along
+    assert!(!snap.approx_frozen);
+    assert!(snap.landmarks.is_none());
+}
+
+#[test]
+fn golden_v3_fixture_roundtrips_byte_identical() {
+    // decode → restore → re-snapshot must reproduce the committed file
+    // exactly: the v3 encoding is canonical and capture is lossless
+    // (policy tag, engine tag, feature budget, sample ids and forget
+    // counter included)
+    let (session, info) =
+        Snapshot::decode(GOLDEN_V3).unwrap().into_session().unwrap();
+    assert!(!info.repaired, "optimal golden state must not need repair");
+    assert_eq!(session.forgets(), 2);
+    assert_eq!(
+        session.snapshot(),
+        GOLDEN_V3,
+        "re-snapshot of the restored v3 golden must be byte-identical"
+    );
 }
 
 #[test]
@@ -333,7 +395,7 @@ fn truncation_anywhere_is_a_checksum_error_not_a_panic() {
     // is the crash-mid-write contract restore() relies on. v2 cuts
     // include the end of the config section (policy byte at 213) and
     // the id block (230..262).
-    for full in [GOLDEN, GOLDEN_V2] {
+    for full in [GOLDEN, GOLDEN_V2, GOLDEN_V3] {
         for cut in [
             1,
             8,
@@ -358,7 +420,7 @@ fn truncation_anywhere_is_a_checksum_error_not_a_panic() {
 
 #[test]
 fn bitflip_in_state_fails_the_payload_checksum() {
-    for full in [GOLDEN, GOLDEN_V2] {
+    for full in [GOLDEN, GOLDEN_V2, GOLDEN_V3] {
         let mut bytes = full.to_vec();
         let mid = bytes.len() / 2;
         bytes[mid] ^= 0x40;
@@ -376,6 +438,22 @@ fn bitflip_in_state_fails_the_payload_checksum() {
     let mut bytes = GOLDEN_V2.to_vec();
     bytes[GOLDEN_V2_CFG_END + 20] ^= 0x08; // inside the id block
     assert!(Snapshot::decode(&bytes).is_err());
+}
+
+#[test]
+fn unknown_engine_tag_is_rejected_after_reseal() {
+    // the v3 config section ends policy tag (1) + engine tag (1) +
+    // feature budget (8): flip the engine tag to an unknown value and
+    // re-seal — the rejection must come from the tag validation itself
+    let cfg_end = GOLDEN_V2_CFG_END + 9;
+    let mut bytes = GOLDEN_V3.to_vec();
+    bytes[cfg_end - 9] = 9;
+    reseal(&mut bytes, GOLDEN_CFG_START, cfg_end);
+    let err = Snapshot::decode(&bytes).unwrap_err();
+    assert!(
+        err.to_string().contains("unknown engine tag"),
+        "unexpected message: {err}"
+    );
 }
 
 #[test]
@@ -479,7 +557,7 @@ fn restored_session_is_bitwise_equal_and_continues_in_parity() {
         let report = restored.solver().report();
         let p = cfg.incremental.smo;
         let gram =
-            kernel.gram(&restored.solver().window().matrix(), 1);
+            kernel.gram(&restored.solver().matrix(), 1);
         validate::certify(
             &gram,
             &report.dual.alpha,
@@ -509,6 +587,62 @@ fn restored_session_is_bitwise_equal_and_continues_in_parity() {
         );
         let ((l1, l2), (r1, r2)) = (live.solver().rho(), restored.solver().rho());
         assert!((l1 - r1).abs() <= 1e-9 && (l2 - r2).abs() <= 1e-9);
+    }
+}
+
+/// Satellite of the approx-engine work (DESIGN.md §10): an approx
+/// session snapshots, restores, and continues in **bitwise** parity —
+/// the RFF map rebuilds from the config seed, frozen Nyström landmarks
+/// ride the wire, and `LiftedSlab::restore` re-accumulates `w` in the
+/// same row order the live engine used.
+#[test]
+fn approx_session_snapshot_restore_continue_in_parity() {
+    for engine in [EngineKind::Nystroem, EngineKind::Rff] {
+        let mut cfg = StreamConfig {
+            kernel: Kernel::Rbf { g: 0.3 },
+            window: 48,
+            min_train: 16,
+            ..Default::default()
+        };
+        cfg.incremental.engine = engine;
+        cfg.incremental.features = 16;
+        let mut live = StreamSession::new("ap", cfg);
+        let ds = SlabConfig::default().generate(120, 3107);
+        for i in 0..80 {
+            live.absorb(ds.x.row(i)).unwrap();
+        }
+        let bytes = live.snapshot();
+        let restored = StreamSession::restore(&bytes).unwrap();
+        assert_eq!(
+            restored.config().incremental.engine, engine,
+            "engine knob must survive the wire"
+        );
+        // dual parity at the snapshot point is bitwise
+        assert_eq!(restored.solver().alpha(), live.solver().alpha());
+        assert_eq!(restored.solver().alpha_bar(), live.solver().alpha_bar());
+        assert_eq!(restored.solver().rho(), live.solver().rho());
+        assert_eq!(restored.solver().ids(), live.solver().ids());
+        // re-snapshot of the restored session is canonical
+        assert_eq!(restored.snapshot(), bytes, "{engine}: not canonical");
+        // and both copies absorb the same future bitwise-identically:
+        // the restored feature map is the live one, coefficient for
+        // coefficient, so every lifted margin matches exactly
+        let mut live = live;
+        let mut restored = restored;
+        for i in 80..120 {
+            live.absorb(ds.x.row(i)).unwrap();
+            restored.absorb(ds.x.row(i)).unwrap();
+        }
+        assert_eq!(
+            restored.solver().alpha(),
+            live.solver().alpha(),
+            "{engine}: alpha diverged after resume"
+        );
+        let ((l1, l2), (r1, r2)) =
+            (live.solver().rho(), restored.solver().rho());
+        assert_eq!(l1.to_bits(), r1.to_bits(), "{engine}: rho1 diverged");
+        assert_eq!(l2.to_bits(), r2.to_bits(), "{engine}: rho2 diverged");
+        assert_eq!(restored.solver().margins(), live.solver().margins());
     }
 }
 

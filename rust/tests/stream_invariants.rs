@@ -17,6 +17,13 @@
 //! Also here: the `SlabStream` determinism contract — identical seeds
 //! must yield bitwise-identical drift streams (all three drift kinds,
 //! composed), because every experiment seed in DESIGN.md depends on it.
+//!
+//! The **approximate engines** (DESIGN.md §10) run the same gauntlet:
+//! ~100 seeded absorb/evict/forget sequences per feature-map engine,
+//! with box / Σα = 1 / Σᾱ = ε and a KKT certificate over margins
+//! rebuilt *from scratch in lifted space* (w re-accumulated from the
+//! feature map, not the engine's incrementally maintained vector)
+//! after every single operation.
 
 use slabsvm::data::synthetic::{
     Drift, DriftSchedule, Noise, SlabConfig, SlabStream,
@@ -24,7 +31,10 @@ use slabsvm::data::synthetic::{
 use slabsvm::kernel::Kernel;
 use slabsvm::solver::smo::SmoParams;
 use slabsvm::solver::validate;
-use slabsvm::stream::{IncrementalConfig, IncrementalSmo, PolicyKind};
+use slabsvm::kernel::featmap::{EngineKind, FeatureMap};
+use slabsvm::stream::{
+    ApproxIncremental, IncrementalConfig, IncrementalSmo, PolicyKind,
+};
 use slabsvm::util::rng::Rng;
 
 /// Certify every invariant of the current dual state, independently of
@@ -402,4 +412,218 @@ fn slab_stream_different_seeds_differ() {
         })
         .count();
     assert!(same < 4, "seeds 1 and 2 nearly coincide: {same}/64");
+}
+
+// ------------------------------------------------ approximate engines
+
+/// Certify every invariant of an approx engine's lifted dual state,
+/// independently of the engine's own bookkeeping: the weight vector is
+/// re-accumulated from scratch through the feature map and the margins
+/// recomputed from it before the KKT check.
+fn assert_approx_invariants(inc: &ApproxIncremental, ctx: &str) {
+    let p = inc.config().smo;
+    let m = inc.len();
+    assert!(m > 0, "{ctx}: empty engine");
+    let alpha = inc.alpha();
+    let alpha_bar = inc.alpha_bar();
+    let cap_a = 1.0 / (p.nu1 * m as f64);
+    let cap_b = p.eps / (p.nu2 * m as f64);
+
+    // 1. box constraints — the lifted transfers keep these exactly
+    for j in 0..m {
+        assert!(
+            alpha[j] >= -1e-12 && alpha[j] <= cap_a + 1e-12,
+            "{ctx}: alpha[{j}]={} outside [0, {cap_a}]",
+            alpha[j]
+        );
+        assert!(
+            alpha_bar[j] >= -1e-12 && alpha_bar[j] <= cap_b + 1e-12,
+            "{ctx}: alpha_bar[{j}]={} outside [0, {cap_b}]",
+            alpha_bar[j]
+        );
+    }
+
+    // 2. dual mass conservation
+    let sum_a: f64 = alpha.iter().sum();
+    let sum_b: f64 = alpha_bar.iter().sum();
+    assert!((sum_a - 1.0).abs() < 1e-9, "{ctx}: sum(alpha)={sum_a}");
+    assert!(
+        (sum_b - p.eps).abs() < 1e-9,
+        "{ctx}: sum(alpha_bar)={sum_b} want {}",
+        p.eps
+    );
+
+    // 3. independent lifted KKT certificate: re-lift every resident
+    // through the map, re-accumulate w = Σγφ(x) from scratch, and
+    // recompute the margins — none of the engine's incremental axpy
+    // bookkeeping is trusted here
+    let map = inc.featmap();
+    let d_out = map.d_out();
+    let mut scratch = vec![0.0; map.scratch_len().max(1)];
+    let mut phi = vec![0.0; m * d_out];
+    for i in 0..m {
+        map.map_into(
+            inc.point(i),
+            &mut scratch,
+            &mut phi[i * d_out..(i + 1) * d_out],
+        );
+    }
+    let mut w = vec![0.0; d_out];
+    for i in 0..m {
+        let g = alpha[i] - alpha_bar[i];
+        for (wk, pk) in w.iter_mut().zip(&phi[i * d_out..(i + 1) * d_out]) {
+            *wk += g * pk;
+        }
+    }
+    let s: Vec<f64> = (0..m)
+        .map(|i| {
+            w.iter().zip(&phi[i * d_out..(i + 1) * d_out]).map(|(a, b)| a * b).sum()
+        })
+        .collect();
+    let (rho1, rho2) = inc.rho();
+    let cls_tol = cap_a.min(cap_b) * 1e-6;
+    let cert = validate::report_with_margins(
+        alpha, alpha_bar, &s, rho1, rho2, p.nu1, p.nu2, p.eps, cls_tol,
+    );
+    assert!(
+        cert.max_box_violation <= 1e-9,
+        "{ctx}: box violation {}",
+        cert.max_box_violation
+    );
+    assert!(
+        cert.sum_alpha_violation <= 1e-9
+            && cert.sum_alpha_bar_violation <= 1e-9,
+        "{ctx}: sum violations {} / {}",
+        cert.sum_alpha_violation,
+        cert.sum_alpha_bar_violation
+    );
+    let margin_scale =
+        1.0 + s.iter().map(|v| v.abs()).sum::<f64>() / m as f64;
+    let kkt_tol = p.tol * margin_scale * 4.0;
+    assert!(
+        cert.max_kkt_violation <= kkt_tol,
+        "{ctx}: lifted KKT violation {} > {kkt_tol} (worst index {})",
+        cert.max_kkt_violation,
+        cert.worst_index
+    );
+}
+
+/// ~100 seeded random absorb/evict/forget sequences per approx engine
+/// (Nyström warmup + frozen regimes, RFF), invariants certified in
+/// lifted space after EVERY operation — the exact suite's gauntlet run
+/// on the feature-map path.
+#[test]
+fn approx_randomized_sequences_preserve_invariants_after_every_op() {
+    for engine in [EngineKind::Nystroem, EngineKind::Rff] {
+        for seq in 0..50u64 {
+            let mut rng = Rng::new(0xA220_0000 + seq);
+            let cap = 8 + rng.below(25); // window capacity in [8, 32]
+            // RFF needs RBF; Nyström alternates kernels
+            let kernel = if engine == EngineKind::Rff || rng.below(2) == 1 {
+                Kernel::Rbf { g: 0.02 + 0.2 * rng.uniform() }
+            } else {
+                Kernel::Linear
+            };
+            let smo = SmoParams {
+                nu1: [0.3, 0.5, 0.8][rng.below(3)],
+                nu2: [0.05, 0.1, 0.2][rng.below(3)],
+                eps: [0.4, 2.0 / 3.0][rng.below(2)],
+                ..SmoParams::default()
+            };
+            let cfg = IncrementalConfig {
+                smo,
+                refresh_every: [4, 64, 1024][rng.below(3)],
+                engine,
+                // 4-16 lifted features: small enough that some
+                // sequences stay in Nyström warmup, others freeze
+                features: 4 + rng.below(13),
+                ..IncrementalConfig::default()
+            };
+
+            let mut inc = ApproxIncremental::new(kernel, cap, 2, cfg);
+            let mut stream =
+                SlabStream::new(SlabConfig::default(), 0x5EED_A000 + seq);
+            if rng.below(2) == 0 {
+                stream = stream.with_drift(DriftSchedule {
+                    drift: Drift::MeanShift {
+                        delta: rng.uniform_range(-6.0, 6.0),
+                    },
+                    start: cap,
+                    duration: rng.below(cap) + 1,
+                });
+            }
+
+            let ops = cap + 1 + rng.below(2 * cap);
+            for op in 0..ops {
+                // ~25% targeted forgets once enough residents exist;
+                // the rest absorbs (growth adds, then policy evicts)
+                if inc.len() >= 3 && rng.below(4) == 0 {
+                    let ids = inc.ids().to_vec();
+                    let victim = ids[rng.below(ids.len())];
+                    inc.forget(victim).unwrap_or_else(|e| {
+                        panic!(
+                            "{engine} seq {seq} op {op}: forget({victim}) \
+                             failed: {e}"
+                        )
+                    });
+                } else {
+                    inc.push(&stream.next_point()).unwrap_or_else(|e| {
+                        panic!("{engine} seq {seq} op {op}: push failed: {e}")
+                    });
+                }
+                assert_approx_invariants(
+                    &inc,
+                    &format!("{engine} seq {seq} op {op}"),
+                );
+            }
+            assert!(
+                inc.len() >= 2 && inc.len() <= cap,
+                "{engine} seq {seq}: bad window fill"
+            );
+
+            // a non-resident id is a typed rejection, bitwise untouched
+            let before: Vec<u64> =
+                inc.alpha().iter().map(|v| v.to_bits()).collect();
+            assert!(
+                matches!(
+                    inc.forget(u64::MAX),
+                    Err(slabsvm::Error::Unlearning(_))
+                ),
+                "{engine} seq {seq}: bogus forget must be typed"
+            );
+            let after: Vec<u64> =
+                inc.alpha().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(before, after, "{engine} seq {seq}");
+        }
+    }
+}
+
+/// Batch forgets under the approx engine: every id leaves in one
+/// repair, all-or-nothing on a bad list, invariants certified after.
+#[test]
+fn approx_forget_many_is_all_or_nothing() {
+    let cfg = IncrementalConfig {
+        engine: EngineKind::Rff,
+        features: 12,
+        ..IncrementalConfig::default()
+    };
+    let kernel = Kernel::Rbf { g: 0.1 };
+    let mut inc = ApproxIncremental::new(kernel, 24, 2, cfg);
+    let mut stream = SlabStream::new(SlabConfig::default(), 0xBA7C4);
+    for _ in 0..24 {
+        inc.push(&stream.next_point()).unwrap();
+    }
+    let ids = inc.ids().to_vec();
+    // bad batch: one bogus id poisons the whole request, state untouched
+    let before: Vec<u64> = inc.alpha().iter().map(|v| v.to_bits()).collect();
+    assert!(inc.forget_many(&[ids[0], u64::MAX]).is_err());
+    let after: Vec<u64> = inc.alpha().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(before, after, "failed batch must not touch the dual");
+    // good batch: all four leave, invariants hold
+    inc.forget_many(&ids[0..4]).unwrap();
+    assert_eq!(inc.len(), 20);
+    for id in &ids[0..4] {
+        assert_eq!(inc.slot_of_id(*id), None);
+    }
+    assert_approx_invariants(&inc, "after forget_many");
 }

@@ -210,11 +210,14 @@ R1_SCOPE = [
     "serve/limits.rs",
     "serve/router.rs",
     "serve/server.rs",
+    "kernel/featmap.rs",
+    "solver/approx.rs",
+    "stream/approx.rs",
 ]
 R1_TOKENS = [".unwrap()", ".expect(", "panic!(", "unreachable!(", ".unwrap_unchecked("]
 SUBSCRIPT_KEYWORDS = {
     "mut", "ref", "dyn", "in", "as", "return", "else",
-    "match", "if", "move", "impl", "where",
+    "match", "if", "move", "impl", "where", "let",
 }
 
 
@@ -381,6 +384,23 @@ R3_CONFIGS = [
         "suffix": "solver/smo.rs",
         "hot": ["select_partner_second_order", "select_partner"],
         "warm": ["solve_from"],
+    },
+    {
+        "suffix": "kernel/featmap.rs",
+        "hot": ["fourier_into", "fourier_dot", "landmark_into",
+                "landmark_dot"],
+        "warm": [],
+    },
+    {
+        "suffix": "solver/approx.rs",
+        "hot": ["push_grown", "replace_row", "margin_of",
+                "pair_step_alpha", "pair_step_abar"],
+        "warm": ["repair", "remove_row", "batch_init"],
+    },
+    {
+        "suffix": "stream/approx.rs",
+        "hot": ["score"],
+        "warm": ["push", "forget", "forget_many"],
     },
 ]
 

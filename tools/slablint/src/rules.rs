@@ -44,9 +44,10 @@ fn is_ident(c: char) -> bool {
 // ---------------------------------------------------------------- R1
 
 /// Files where a panic is an availability bug: shard workers, the
-/// mailbox/manager plane, snapshot decoding, and the whole HTTP front
+/// mailbox/manager plane, snapshot decoding, the whole HTTP front
 /// door (a request must never take down a connection thread, let alone
-/// the acceptor). See DESIGN.md §7.
+/// the acceptor), and the approx-engine absorb/score path that shard
+/// workers call per sample (DESIGN.md §10). See DESIGN.md §7.
 pub const R1_SCOPE: &[&str] = &[
     "stream/shard.rs",
     "stream/manager.rs",
@@ -57,6 +58,9 @@ pub const R1_SCOPE: &[&str] = &[
     "serve/limits.rs",
     "serve/router.rs",
     "serve/server.rs",
+    "kernel/featmap.rs",
+    "solver/approx.rs",
+    "stream/approx.rs",
 ];
 
 const R1_TOKENS: &[&str] = &[
@@ -131,10 +135,12 @@ fn variable_subscripts(line: &str) -> Vec<String> {
                 w -= 1;
             }
             let word: String = b[w..k].iter().collect();
+            // `let [a, b] = …` is a destructuring slice pattern, not
+            // an index expression
             let keyword = matches!(
                 word.as_str(),
                 "mut" | "ref" | "dyn" | "in" | "as" | "return" | "else"
-                    | "match" | "if" | "move" | "impl" | "where"
+                    | "match" | "if" | "move" | "impl" | "where" | "let"
             );
             // a lifetime before the bracket (`&'a [u8]`) is a slice
             // type, not an index expression
@@ -352,6 +358,32 @@ pub const R3_CONFIGS: &[R3Config] = &[
         suffix: "solver/smo.rs",
         hot: &["select_partner_second_order", "select_partner"],
         warm: &["solve_from"],
+    },
+    R3Config {
+        suffix: "kernel/featmap.rs",
+        hot: &[
+            "fourier_into",
+            "fourier_dot",
+            "landmark_into",
+            "landmark_dot",
+        ],
+        warm: &[],
+    },
+    R3Config {
+        suffix: "solver/approx.rs",
+        hot: &[
+            "push_grown",
+            "replace_row",
+            "margin_of",
+            "pair_step_alpha",
+            "pair_step_abar",
+        ],
+        warm: &["repair", "remove_row", "batch_init"],
+    },
+    R3Config {
+        suffix: "stream/approx.rs",
+        hot: &["score"],
+        warm: &["push", "forget", "forget_many"],
     },
 ];
 

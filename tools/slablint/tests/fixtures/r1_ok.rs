@@ -16,6 +16,15 @@ fn parse_slice<'a>(buf: &'a [u8], n: usize) -> Option<&'a [u8]> {
     buf.get(..n)
 }
 
+fn split_pair(pair: &[f64]) -> f64 {
+    // `let [..]` is a destructuring slice pattern, not an index
+    if let [c, s] = pair {
+        c + s
+    } else {
+        0.0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     #[test]
